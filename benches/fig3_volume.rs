@@ -1,0 +1,23 @@
+//! E4 / Figure 3: exact tile-volume comparison. `cargo bench --bench fig3_volume`
+use latticetile::experiments::fig3;
+
+fn main() {
+    let r = fig3::run();
+    println!("=== Figure 3: tile volume (lattice gen (5,61),(7,-17)) ===");
+    println!("lattice fundamental parallelepiped : {}", r.lattice_volume);
+    println!(
+        "best translation-safe rectangle     : {} ({}x{})",
+        r.best_rect_volume, r.best_rect.0, r.best_rect.1
+    );
+    println!(
+        "best practical rectangle (>=8 dims) : {} ({}x{})",
+        r.best_practical_rect_volume, r.best_practical_rect.0, r.best_practical_rect.1
+    );
+    println!("paper-cited best rectangle [GMM99]  : {}", r.paper_best_rect_volume);
+    println!("paper-cited chosen rect [GMM99]     : {}", r.paper_chosen_rect_volume);
+    println!("lattice advantage vs practical rect : {:.2}x", r.advantage_vs_best_rect);
+    let l = fig3::paper_lattice();
+    let (mn, mx) = fig3::rect_point_count_varies(&l, 24, 20, 6);
+    println!("regularity: rect 24x20 tiles hold {mn}..{mx} points; lattice tiles always 1");
+    assert_eq!(r.lattice_volume, 512);
+}

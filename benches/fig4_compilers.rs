@@ -1,0 +1,27 @@
+//! E5 / Figure 4: lattice tiling vs compiler analogs. `cargo bench --bench fig4_compilers`
+//! Env: FIG4_SIZES="96,128" to override sizes; FIG4_REPS=n.
+use latticetile::experiments::{fig4, harness};
+
+fn main() {
+    let sizes: Vec<i64> = std::env::var("FIG4_SIZES")
+        .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+        .unwrap_or_else(|_| vec![96, 128, 192, 256]);
+    let reps: usize = std::env::var("FIG4_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(2);
+    println!("=== Figure 4: lattice tiling vs compiler analogs ===");
+    for &n in &sizes {
+        let rows = fig4::run_size(n, reps);
+        let sp = fig4::speedups_vs(&rows, "gcc-O0(analog)");
+        println!("\nn = {n}:");
+        println!("{:<22} {:>12} {:>10} {:>9} {:>10}", "strategy", "L1 misses", "wall", "GFLOP/s", "vs O0");
+        for (i, r) in rows.iter().enumerate() {
+            println!(
+                "{:<22} {:>12} {:>10} {:>9.2} {:>9.2}x",
+                r.strategy,
+                r.l1_misses,
+                harness::fmt_dur(r.wall),
+                r.gflops,
+                sp[i].1
+            );
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! E6 / §4.0.2: best rectangular vs best lattice tiling.
+use latticetile::experiments::{fig4, harness};
+
+fn main() {
+    println!("=== §4.0.2: best rect vs best lattice ===");
+    println!("{:<6} {:<22} {:>12} {:>10} {:>9}", "n", "strategy", "L1 misses", "wall", "GFLOP/s");
+    for n in [96i64, 128, 192, 256] {
+        for r in fig4::run_rect_vs_lattice(n, 2) {
+            println!(
+                "{:<6} {:<22} {:>12} {:>10} {:>9.2}",
+                r.n, r.strategy, r.l1_misses, harness::fmt_dur(r.wall), r.gflops
+            );
+        }
+    }
+}

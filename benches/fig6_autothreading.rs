@@ -1,0 +1,21 @@
+//! E8 / Figure 6: auto-threading scaling, ours vs graphite-analog.
+use latticetile::experiments::{fig6, harness};
+
+fn main() {
+    let n = 256i64;
+    let threads = [1usize, 2, 4, 8, 12, 16, 20];
+    let (og, gg) = fig6::parallel_grain(n);
+    println!("=== Figure 6: auto-threading (n={n}; bands: ours={og}, graphite={gg}) ===");
+    println!("{:>7} {:>12} {:>9} {:>12} {:>9}", "threads", "ours wall", "speedup*", "graphite", "speedup*");
+    for r in fig6::run(n, &threads, 1) {
+        println!(
+            "{:>7} {:>12} {:>8.2}x {:>12} {:>8.2}x",
+            r.threads,
+            harness::fmt_dur(r.ours),
+            r.ours_modeled,
+            harness::fmt_dur(r.graphite),
+            r.graphite_modeled
+        );
+    }
+    println!("* load-balance speedup (see EXPERIMENTS.md: single-core host)");
+}

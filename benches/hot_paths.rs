@@ -1,0 +1,76 @@
+//! Microbenchmarks of the hot paths (EXPERIMENTS.md §Perf): cache-sim
+//! access rate, tile scanning, prototile replay, miss-model throughput.
+use std::time::Instant;
+
+use latticetile::cache::{CacheSim, CacheSpec, Policy};
+use latticetile::codegen::executor::{prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::conflict::MissModel;
+use latticetile::domain::{ops, IterOrder};
+use latticetile::lattice::IMat;
+use latticetile::tiling::{TileBasis, TiledSchedule};
+
+fn rate(label: &str, ops_done: u64, t: std::time::Duration) {
+    println!(
+        "{label:<42} {:>10.1} Mops/s  ({ops_done} ops in {t:?})",
+        ops_done as f64 / t.as_secs_f64() / 1e6
+    );
+}
+
+fn main() {
+    println!("=== hot-path microbenchmarks ===");
+
+    // cache sim raw access rate
+    let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru).without_classification();
+    let n_acc = 20_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..n_acc {
+        sim.access(((i * 72) % (1 << 20)) as usize);
+    }
+    rate("cache sim access (no classification)", n_acc, t0.elapsed());
+
+    let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
+    let n_acc = 2_000_000u64;
+    let t0 = Instant::now();
+    for i in 0..n_acc {
+        sim.access(((i * 72) % (1 << 20)) as usize);
+    }
+    rate("cache sim access (3-C classification)", n_acc, t0.elapsed());
+
+    // tile scanning: skewed basis, interior replay vs filter scan
+    let basis = TileBasis::from_cols(IMat::from_rows(&[
+        &[32, 0, 8],
+        &[0, 16, 0],
+        &[-8, 0, 16],
+    ]));
+    let sched = TiledSchedule::new(basis.clone());
+    let kernel = ops::matmul(256, 256, 256, 8, 0);
+    use latticetile::domain::order::Scanner;
+    let t0 = Instant::now();
+    let mut cnt = 0u64;
+    sched.scan_points(kernel.extents(), &mut |_: &[i64]| cnt += 1);
+    rate("skewed tile scan_points (filter scan)", cnt, t0.elapsed());
+
+    let proto = prototile_points(&basis);
+    println!("prototile size: {} points", proto.len());
+
+    let exec = TiledExecutor::new(TiledSchedule::new(basis));
+    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    rate(
+        "TiledExecutor (interior replay) matmul pts",
+        (256u64).pow(3),
+        t0.elapsed(),
+    );
+
+    // miss model throughput
+    let small = ops::matmul(32, 32, 32, 8, 0);
+    let model = MissModel::new(&small, &CacheSpec::HASWELL_L1D);
+    let t0 = Instant::now();
+    let c = model.exact(&IterOrder::lex(3));
+    rate("miss model exact (accesses)", c.points * 3, t0.elapsed());
+    let classes: Vec<i64> = (0..64).step_by(8).collect();
+    let t0 = Instant::now();
+    let c = model.sampled(&IterOrder::lex(3), &classes);
+    rate("miss model sampled 8/64 (accesses)", c.points * 3, t0.elapsed());
+}

@@ -1,0 +1,17 @@
+//! E9 / §4.0.4: analysis/model cost — exact vs sampled vs K−1 closed form.
+use latticetile::experiments::{harness, model_cost};
+
+fn main() {
+    println!("=== §4.0.4: model evaluation cost ===");
+    println!("{:>5} {:>14} {:>14} {:>16} {:>16}", "n", "exact Eq.(4)", "paper Δ-rule", "sampled(8)", "K−1 closed form");
+    for r in model_cost::run(&[16, 24, 32, 48, 64], 2) {
+        println!(
+            "{:>5} {:>14} {:>14} {:>16} {:>16}",
+            r.n,
+            harness::fmt_dur(r.exact),
+            harness::fmt_dur(r.exact_paper),
+            harness::fmt_dur(r.sampled),
+            harness::fmt_dur(r.k_minus_one)
+        );
+    }
+}

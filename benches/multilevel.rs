@@ -1,0 +1,13 @@
+//! E12 extension: two-level hierarchy behaviour of the plans.
+use latticetile::experiments::multilevel;
+
+fn main() {
+    println!("=== extension: L1+L2 hierarchy behaviour ===");
+    println!("{:>5} {:<22} {:>12} {:>12} {:>12}", "n", "strategy", "L1 misses", "L2 misses", "est cycles");
+    for r in multilevel::run(&[96, 128]) {
+        println!(
+            "{:>5} {:<22} {:>12} {:>12} {:>12}",
+            r.n, r.strategy, r.l1_misses, r.l2_misses, r.est_cycles
+        );
+    }
+}

@@ -1,0 +1,13 @@
+//! E10 / §1.1.4: LRU vs tree-PLRU miss counts over the same schedules.
+use latticetile::experiments::policy;
+
+fn main() {
+    println!("=== §1.1.4: LRU vs PLRU ===");
+    println!("{:>5} {:<22} {:>12} {:>12} {:>8}", "n", "strategy", "LRU", "PLRU", "Δrel");
+    for r in policy::run(&[96, 128]) {
+        println!(
+            "{:>5} {:<22} {:>12} {:>12} {:>8.3}",
+            r.n, r.strategy, r.lru, r.plru, r.rel_delta
+        );
+    }
+}

@@ -1,0 +1,192 @@
+"""AOT compile path: lower the L2 model to HLO **text** artifacts.
+
+HLO text — not ``lowered.compile()`` and not serialized ``HloModuleProto``
+— is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once by ``make artifacts``:
+
+    python -m compile.aot --out-dir ../artifacts
+
+Emits one ``.hlo.txt`` per kernel variant plus ``manifest.json`` describing
+shapes, block sizes, VMEM footprints and MXU-utilization estimates — the
+registry the Rust runtime loads.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.tiled_matmul import mxu_utilization_estimate, vmem_footprint_bytes
+
+# Kernel variants shipped to the Rust runtime. The L3 planner picks among
+# these by mapping its lattice-model tile choice to the nearest block
+# shape (DESIGN.md §Hardware-Adaptation).
+#
+# (m, k, n, bm, bk, bn)
+VARIANTS = [
+    (256, 256, 256, 64, 64, 64),
+    (256, 256, 256, 128, 128, 128),
+    (256, 256, 256, 32, 32, 32),
+    (512, 512, 512, 128, 128, 128),
+    (128, 128, 128, 64, 64, 64),
+]
+
+# Batched serve-path variants: (batch, m, k, n, bm, bk, bn)
+BATCHED_VARIANTS = [
+    (8, 128, 128, 128, 64, 64, 64),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(m, k, n, bm, bk, bn):
+    fn = functools.partial(model.matmul, bm=bm, bk=bk, bn=bn)
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return jax.jit(fn).lower(x, y)
+
+
+def lower_ref(m, k, n):
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return jax.jit(model.matmul_ref).lower(x, y)
+
+
+def lower_batched(b, m, k, n, bm, bk, bn):
+    fn = functools.partial(model.batched_matmul, bm=bm, bk=bk, bn=bn)
+    xs = jax.ShapeDtypeStruct((b, m, k), jnp.float32)
+    y = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    return jax.jit(fn).lower(xs, y)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file mode")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"artifacts": []}
+
+    for m, k, n, bm, bk, bn in VARIANTS:
+        name = f"matmul_{m}x{k}x{n}_b{bm}x{bk}x{bn}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower_variant(m, k, n, bm, bk, bn))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": os.path.basename(path),
+                "kind": "pallas_tiled_matmul",
+                "m": m,
+                "k": k,
+                "n": n,
+                "bm": bm,
+                "bk": bk,
+                "bn": bn,
+                "batch": 1,
+                "vmem_bytes": vmem_footprint_bytes(bm, bk, bn),
+                "mxu_utilization": mxu_utilization_estimate(bm, bk, bn),
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # one reference graph per distinct problem size, for numeric cross-check
+    for m, k, n in sorted({(m, k, n) for m, k, n, *_ in VARIANTS}):
+        name = f"matmul_ref_{m}x{k}x{n}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower_ref(m, k, n))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": os.path.basename(path),
+                "kind": "jnp_ref_matmul",
+                "m": m,
+                "k": k,
+                "n": n,
+                "bm": 0,
+                "bk": 0,
+                "bn": 0,
+                "batch": 1,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for b, m, k, n, bm, bk, bn in BATCHED_VARIANTS:
+        name = f"matmul_batched{b}_{m}x{k}x{n}_b{bm}x{bk}x{bn}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lower_batched(b, m, k, n, bm, bk, bn))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": os.path.basename(path),
+                "kind": "pallas_tiled_matmul_batched",
+                "m": m,
+                "k": k,
+                "n": n,
+                "bm": bm,
+                "bk": bk,
+                "bn": bn,
+                "batch": b,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+    # TSV twin for the Rust loader (no JSON dependency on the Rust side):
+    # name file kind m k n bm bk bn batch
+    tpath = os.path.join(out_dir, "manifest.tsv")
+    with open(tpath, "w") as f:
+        for a in manifest["artifacts"]:
+            f.write(
+                "\t".join(
+                    str(a[c])
+                    for c in [
+                        "name",
+                        "file",
+                        "kind",
+                        "m",
+                        "k",
+                        "n",
+                        "bm",
+                        "bk",
+                        "bn",
+                        "batch",
+                    ]
+                )
+                + "\n"
+            )
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

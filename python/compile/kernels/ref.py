@@ -1,0 +1,21 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1's ref).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest asserts allclose between the two across shapes/dtypes (including
+hypothesis sweeps). The references are also lowered to HLO by aot.py so the
+Rust side can cross-check numerics end to end.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Dense matmul oracle: (m,k) @ (k,n) -> (m,n), f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_f64_acc(x, y):
+    """Higher-precision accumulation variant used to bound kernel error."""
+    return jnp.matmul(x.astype(jnp.float64), y.astype(jnp.float64)).astype(
+        jnp.float32
+    )

@@ -1,0 +1,95 @@
+"""Layer 1: the tiled-matmul Pallas kernel.
+
+The paper's hot spot is the tiled matrix multiplication; its insight —
+shape tiles by the memory system's native structure, not by round numbers —
+maps to Pallas as the ``BlockSpec`` HBM↔VMEM schedule (DESIGN.md
+§Hardware-Adaptation):
+
+* the paper tiles the operand index space by the cache's associativity
+  lattice so each tile occupies at most ``K−1`` slots of any cache set;
+* here the L3 planner chooses block shapes ``(bm, bk, bn)`` so the three
+  VMEM-resident blocks fit the VMEM budget, aligned to the VPU/MXU native
+  ``(8, 128)`` / ``128×128`` tiling — the TPU's analog of "the hardware's
+  natural lattice".
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that both pytest and
+the Rust runtime can run. Real-TPU performance is *estimated* analytically
+in DESIGN.md §Perf / EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k_steps: int):
+    """Grid-blocked matmul body.
+
+    Grid = (m/bm, n/bn, k/bk) with k innermost; the output block is
+    revisited across the k steps and accumulates in place (zeroed at the
+    first step). This is the canonical Pallas accumulation pattern and the
+    direct analog of the paper's "tile slices" reusing the output block
+    while streaming the reduction dimension.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def tiled_matmul(x, y, *, bm: int = 64, bk: int = 64, bn: int = 64):
+    """``(m,k) @ (k,n) -> (m,n)`` with explicit VMEM block shapes.
+
+    Requires ``m % bm == k % bk == n % bn == 0`` (the L2 model pads).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"shape ({m},{k},{n}) not divisible by blocks ({bm},{bk},{bn})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_matmul_kernel, n_k_steps=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, bytes_per_elem: int = 4) -> int:
+    """Analytic VMEM usage of one grid step: the three resident blocks.
+
+    Used by DESIGN.md §Perf to check each variant against the ~16 MiB/core
+    budget, and by the L3 planner to reject oversized tile requests — the
+    TPU-side analog of the paper's "K−1 lattice points per set" capacity
+    rule.
+    """
+    return bytes_per_elem * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bk: int, bn: int) -> float:
+    """Fraction of MXU 128×128×128 macro-ops that carry real data.
+
+    Blocks aligned to multiples of 128 (and ≥8 in the sublane dim) fill
+    the systolic array; smaller blocks pad. This is the structural
+    utilization estimate recorded in EXPERIMENTS.md §Perf (interpret-mode
+    wallclock is NOT a TPU proxy).
+    """
+    def eff(b, native):
+        pad = -b % native
+        return b / (b + pad)
+
+    return eff(bm, 128) * eff(bk, 128) * eff(bn, 128)

@@ -1,0 +1,45 @@
+"""Layer 2: the JAX compute graph around the Pallas kernel.
+
+The "model" for this paper is the tiled matmul itself plus the padding
+logic that maps arbitrary problem sizes onto the kernel's block grid —
+the same role the paper's generated loop bounds (CLooG) play around its
+tile loops. Lowered once by aot.py; never imported at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.tiled_matmul import tiled_matmul
+
+
+def _round_up(v: int, b: int) -> int:
+    return (v + b - 1) // b * b
+
+
+def matmul(x, y, *, bm: int = 64, bk: int = 64, bn: int = 64):
+    """Dense f32 matmul via the Pallas kernel, padding to block multiples.
+
+    Zero-padding is exact for matmul (padded rows/cols contribute zeros),
+    mirroring the paper's padded-dimension handling (§2.1.1 index maps
+    with padded physical dims).
+    """
+    m, k = x.shape
+    _, n = y.shape
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = tiled_matmul(xp, yp, bm=bm, bk=bk, bn=bn)
+    return out[:m, :n]
+
+
+def matmul_ref(x, y):
+    """The pure-jnp reference graph (lowered alongside for cross-checks)."""
+    return ref.matmul(x, y)
+
+
+def batched_matmul(xs, y, *, bm: int = 64, bk: int = 64, bn: int = 64):
+    """Serve-path variant: a batch of left operands against one right
+    operand, vmapped over the leading axis — what the coordinator's
+    batcher dispatches as a single PJRT execution."""
+    return jax.vmap(lambda x: matmul(x, y, bm=bm, bk=bk, bn=bn))(xs)

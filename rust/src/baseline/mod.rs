@@ -1,0 +1,8 @@
+//! Baselines: the reference GEMM oracle and the compiler-analog
+//! scheduling strategies of Figure 4 (DESIGN.md S10, S14).
+
+pub mod refblas;
+pub mod strategies;
+
+pub use refblas::{gemm_blocked, gemm_naive};
+pub use strategies::{AnalogSchedule, CompilerAnalog};

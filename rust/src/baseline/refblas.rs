@@ -1,0 +1,134 @@
+//! Reference GEMM oracle and an optimized blocked GEMM — the paper checks
+//! its generated code against a BLAS library (§4); these are our
+//! deterministic stand-ins (DESIGN.md S14).
+
+/// Naive column-major `A += B·C` (`A` m×n, `B` m×k, `C` k×n), jki order —
+/// the correctness oracle. Deterministic, no blocking, no vectorization
+/// hints.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_naive(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &[f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        for kk in 0..k {
+            let ckj = c[kk + ldc * j];
+            for i in 0..m {
+                a[i + lda * j] += b[i + ldb * kk] * ckj;
+            }
+        }
+    }
+}
+
+/// Cache-blocked, register-tiled GEMM — the "aggressively optimized
+/// compiler output" analog (icc/gcc −O3 class). Column-major; blocking
+/// BM×BK×BN with a 4-column micro-kernel over unit-stride `i`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &mut [f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &[f64],
+    ldc: usize,
+) {
+    const BM: usize = 64;
+    const BK: usize = 64;
+    const BN: usize = 64;
+    for j0 in (0..n).step_by(BN) {
+        let jn = (j0 + BN).min(n);
+        for k0 in (0..k).step_by(BK) {
+            let kn = (k0 + BK).min(k);
+            for i0 in (0..m).step_by(BM) {
+                let im = (i0 + BM).min(m);
+                // micro-kernel: 4 columns of C at a time
+                let mut j = j0;
+                while j + 4 <= jn {
+                    for kk in k0..kn {
+                        let c0 = c[kk + ldc * j];
+                        let c1 = c[kk + ldc * (j + 1)];
+                        let c2 = c[kk + ldc * (j + 2)];
+                        let c3 = c[kk + ldc * (j + 3)];
+                        let bcol = &b[ldb * kk..];
+                        for i in i0..im {
+                            let bv = bcol[i];
+                            a[i + lda * j] += bv * c0;
+                            a[i + lda * (j + 1)] += bv * c1;
+                            a[i + lda * (j + 2)] += bv * c2;
+                            a[i + lda * (j + 3)] += bv * c3;
+                        }
+                    }
+                    j += 4;
+                }
+                while j < jn {
+                    for kk in k0..kn {
+                        let cj = c[kk + ldc * j];
+                        let bcol = &b[ldb * kk..];
+                        for i in i0..im {
+                            a[i + lda * j] += bcol[i] * cj;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, seed: u64) -> Vec<f64> {
+        let mut s = seed | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for (m, k, n) in [(7usize, 9, 5), (64, 64, 64), (65, 33, 129), (100, 1, 3)] {
+            let b = fill(m * k, 42);
+            let c = fill(k * n, 43);
+            let mut a1 = vec![0f64; m * n];
+            let mut a2 = vec![0f64; m * n];
+            gemm_naive(m, k, n, &mut a1, m, &b, m, &c, k);
+            gemm_blocked(m, k, n, &mut a2, m, &b, m, &c, k);
+            let diff = a1
+                .iter()
+                .zip(&a2)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(diff < 1e-9, "({m},{k},{n}) diff={diff}");
+        }
+    }
+
+    #[test]
+    fn padded_lda_supported() {
+        let (m, k, n) = (5usize, 6, 4);
+        let (lda, ldb, ldc) = (8usize, 7, 9);
+        let b = fill(ldb * k, 1);
+        let c = fill(ldc * n, 2);
+        let mut a1 = vec![0f64; lda * n];
+        let mut a2 = vec![0f64; lda * n];
+        gemm_naive(m, k, n, &mut a1, lda, &b, ldb, &c, ldc);
+        gemm_blocked(m, k, n, &mut a2, lda, &b, ldb, &c, ldc);
+        assert_eq!(a1, a2);
+    }
+}

@@ -1,0 +1,18 @@
+//! K-way set-associative cache simulation (DESIGN.md S1).
+//!
+//! The paper's evaluation ran on Intel Haswell; this module is the
+//! simulated testbed that stands in for it: exact set-indexed caches with
+//! LRU and tree-PLRU replacement (§1.1.4), a fully-associative shadow for
+//! traditional 3-C miss classification (so the paper's "everything is a
+//! conflict miss" thesis is *checkable*, §1.1.2), per-set statistics
+//! (§1.1.3's one-set perspective), and a simple multi-level hierarchy.
+
+pub mod set;
+pub mod sim;
+pub mod spec;
+pub mod stats;
+
+pub use set::{CacheSet, SetAccess};
+pub use sim::{Access, CacheSim, Hierarchy};
+pub use spec::{CacheSpec, Policy};
+pub use stats::{CacheStats, MissKind};

@@ -1,0 +1,240 @@
+//! A single cache set with LRU or tree-PLRU replacement.
+//!
+//! The paper's whole argument (§1.1.3) is that cache protocols "assume the
+//! perspective of a single cache set" — this type *is* that perspective:
+//! `K` ways holding line tags, an eviction policy, hit/miss accounting.
+
+use super::spec::Policy;
+
+/// One K-way cache set. Tags are opaque `u64` line identifiers.
+#[derive(Clone, Debug)]
+pub struct CacheSet {
+    ways: usize,
+    policy: Policy,
+    /// Occupied slots: `slots[i] = Some(tag)`.
+    slots: Vec<Option<u64>>,
+    /// LRU: `order[i]` is the recency rank of slot `i` (0 = most recent).
+    order: Vec<u32>,
+    /// PLRU: tree bits, `ways - 1` internal nodes (heap layout, root = 0).
+    tree: Vec<bool>,
+}
+
+/// Result of one access to a set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SetAccess {
+    Hit { way: usize },
+    /// Miss that filled an empty way.
+    MissFill { way: usize },
+    /// Miss that evicted `victim` from `way`.
+    MissEvict { way: usize, victim: u64 },
+}
+
+impl SetAccess {
+    pub fn is_hit(&self) -> bool {
+        matches!(self, SetAccess::Hit { .. })
+    }
+}
+
+impl CacheSet {
+    pub fn new(ways: usize, policy: Policy) -> CacheSet {
+        assert!(ways > 0);
+        if policy == Policy::PLru {
+            assert!(ways.is_power_of_two(), "tree-PLRU requires power-of-two ways");
+        }
+        CacheSet {
+            ways,
+            policy,
+            slots: vec![None; ways],
+            order: (0..ways as u32).collect(),
+            tree: vec![false; ways.saturating_sub(1)],
+        }
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Is `tag` currently resident?
+    pub fn probe(&self, tag: u64) -> Option<usize> {
+        self.slots.iter().position(|s| *s == Some(tag))
+    }
+
+    /// Access `tag`: update replacement state, fill/evict on miss.
+    pub fn access(&mut self, tag: u64) -> SetAccess {
+        if let Some(way) = self.probe(tag) {
+            self.touch(way);
+            return SetAccess::Hit { way };
+        }
+        // fill an empty way if available
+        if let Some(way) = self.slots.iter().position(|s| s.is_none()) {
+            self.slots[way] = Some(tag);
+            self.touch(way);
+            return SetAccess::MissFill { way };
+        }
+        // evict per policy
+        let way = self.victim();
+        let victim = self.slots[way].expect("victim way must be occupied");
+        self.slots[way] = Some(tag);
+        self.touch(way);
+        SetAccess::MissEvict { way, victim }
+    }
+
+    /// Replacement victim under the current policy state.
+    pub fn victim(&self) -> usize {
+        match self.policy {
+            Policy::Lru => {
+                // highest recency rank = least recently used
+                (0..self.ways)
+                    .max_by_key(|&i| self.order[i])
+                    .expect("nonempty set")
+            }
+            Policy::PLru => {
+                // walk the tree following the bits
+                let mut node = 0usize;
+                let leaves = self.ways;
+                // internal nodes: 0..leaves-1; leaf i corresponds to way i
+                while node < leaves - 1 {
+                    node = 2 * node + 1 + usize::from(self.tree[node]);
+                }
+                node - (leaves - 1)
+            }
+        }
+    }
+
+    /// Update recency state after using `way`.
+    fn touch(&mut self, way: usize) {
+        match self.policy {
+            Policy::Lru => {
+                let old = self.order[way];
+                for r in self.order.iter_mut() {
+                    if *r < old {
+                        *r += 1;
+                    }
+                }
+                self.order[way] = 0;
+            }
+            Policy::PLru => {
+                // flip bits along the path to point *away* from this leaf
+                let leaves = self.ways;
+                let mut node = way + (leaves - 1);
+                while node > 0 {
+                    let parent = (node - 1) / 2;
+                    let is_left = node == 2 * parent + 1;
+                    // point at the sibling: bit=false means "go left", so if
+                    // we used the left child, set bit to true (→right next).
+                    self.tree[parent] = is_left;
+                    node = parent;
+                }
+            }
+        }
+    }
+
+    /// Tags currently resident (for inspection/tests).
+    pub fn resident(&self) -> Vec<u64> {
+        self.slots.iter().flatten().copied().collect()
+    }
+
+    /// Reset to empty.
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+        self.order = (0..self.ways as u32).collect();
+        self.tree.iter_mut().for_each(|b| *b = false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut s = CacheSet::new(2, Policy::Lru);
+        assert!(!s.access(1).is_hit());
+        assert!(!s.access(2).is_hit());
+        assert!(s.access(1).is_hit()); // order now: 1 recent, 2 old
+        let r = s.access(3); // must evict 2
+        assert_eq!(r, SetAccess::MissEvict { way: 1, victim: 2 });
+        assert!(s.access(1).is_hit());
+        assert!(!s.access(2).is_hit());
+    }
+
+    #[test]
+    fn lru_reuse_distance_k_boundary() {
+        // §2.4: a reuse at distance ≤ K hits; at distance > K misses.
+        let k = 4;
+        let mut s = CacheSet::new(k, Policy::Lru);
+        s.access(0);
+        for t in 1..=(k as u64 - 1) {
+            s.access(t);
+        }
+        assert!(s.access(0).is_hit(), "distance K-1 must hit");
+        let mut s = CacheSet::new(k, Policy::Lru);
+        s.access(0);
+        for t in 1..=(k as u64) {
+            s.access(t);
+        }
+        assert!(!s.access(0).is_hit(), "distance K+1 must miss");
+    }
+
+    #[test]
+    fn plru_basic_fill_and_hit() {
+        let mut s = CacheSet::new(4, Policy::PLru);
+        for t in 0..4 {
+            assert!(!s.access(t).is_hit());
+        }
+        for t in 0..4 {
+            assert!(s.access(t).is_hit());
+        }
+    }
+
+    #[test]
+    fn plru_victim_is_not_most_recent() {
+        let mut s = CacheSet::new(4, Policy::PLru);
+        for t in 0..4 {
+            s.access(t);
+        }
+        let last = 3u64;
+        s.access(last);
+        let v = s.victim();
+        assert_ne!(s.slots[v], Some(last), "PLRU must not evict the MRU line");
+    }
+
+    #[test]
+    fn plru_differs_from_lru_on_known_sequence() {
+        // A classic PLRU anomaly sequence on 4 ways: tree state can evict a
+        // line that true LRU would keep. We only assert both policies stay
+        // self-consistent and the hit sets eventually diverge for some
+        // sequence; concrete divergence: 0 1 2 3 0 4 → LRU evicts 1; PLRU
+        // evicts per tree (which after touching 0 points elsewhere).
+        let seq = [0u64, 1, 2, 3, 0, 4];
+        let mut lru = CacheSet::new(4, Policy::Lru);
+        let mut plru = CacheSet::new(4, Policy::PLru);
+        for &t in &seq {
+            lru.access(t);
+            plru.access(t);
+        }
+        let mut l = lru.resident();
+        let mut p = plru.resident();
+        l.sort_unstable();
+        p.sort_unstable();
+        assert_eq!(l, vec![0, 2, 3, 4]); // LRU evicted 1
+        assert_eq!(p, vec![0, 1, 3, 4]); // tree-PLRU evicts 2 here
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn plru_rejects_non_pow2() {
+        CacheSet::new(3, Policy::PLru);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut s = CacheSet::new(2, Policy::Lru);
+        s.access(7);
+        s.clear();
+        assert!(s.resident().is_empty());
+        assert!(!s.access(7).is_hit());
+    }
+}

@@ -1,0 +1,396 @@
+//! The set-associative cache simulator — the testbed substitute for the
+//! paper's Haswell measurements (DESIGN.md §3, "testbed substitution").
+//!
+//! One [`CacheSim`] models one level. It classifies every miss with the
+//! traditional 3-C taxonomy by running a fully-associative LRU *shadow*
+//! cache of the same capacity alongside the real set-indexed array — the
+//! standard simulation technique for separating conflict from capacity
+//! misses — so benchmarks can quantify the paper's claim that conflict
+//! misses dominate whenever tiling is wrong.
+
+use std::collections::HashSet;
+
+use super::set::{CacheSet, SetAccess};
+use super::spec::{CacheSpec, Policy};
+use super::stats::{CacheStats, MissKind};
+
+/// Single-level cache simulator.
+#[derive(Clone, Debug)]
+pub struct CacheSim {
+    spec: CacheSpec,
+    policy: Policy,
+    sets: Vec<CacheSet>,
+    /// Fully-associative LRU shadow (recency list of line tags) used only
+    /// for miss classification. Capacity: `spec.n_lines()` tags.
+    shadow: Vec<u64>,
+    /// Every line tag ever touched (cold-miss detection).
+    touched: HashSet<u64>,
+    stats: CacheStats,
+    /// If false, skip the shadow structures: ~2× faster, misses all count
+    /// as `Conflict` (the paper's unified view).
+    classify: bool,
+}
+
+/// Outcome of a single byte-address access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Access {
+    pub set: usize,
+    pub line: u64,
+    pub hit: bool,
+    pub kind: Option<MissKind>,
+}
+
+impl CacheSim {
+    pub fn new(spec: CacheSpec, policy: Policy) -> CacheSim {
+        spec.validate().expect("invalid cache spec");
+        let n = spec.n_sets();
+        CacheSim {
+            spec,
+            policy,
+            sets: (0..n).map(|_| CacheSet::new(spec.ways, policy)).collect(),
+            shadow: Vec::with_capacity(spec.n_lines()),
+            touched: HashSet::new(),
+            stats: CacheStats::new(n),
+            classify: true,
+        }
+    }
+
+    /// Disable 3-C classification (all misses recorded as `Conflict`) —
+    /// the paper's single-category view, and the fast path for benches.
+    pub fn without_classification(mut self) -> CacheSim {
+        self.classify = false;
+        self
+    }
+
+    pub fn spec(&self) -> &CacheSpec {
+        &self.spec
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Access one byte address (the whole line is loaded on miss).
+    pub fn access(&mut self, addr: usize) -> Access {
+        let line = self.spec.line_of_addr(addr) as u64;
+        self.access_line(line)
+    }
+
+    /// Access by line tag directly (addr / line_size precomputed).
+    pub fn access_line(&mut self, line: u64) -> Access {
+        let set = (line as usize) % self.spec.n_sets();
+        let res = self.sets[set].access(line);
+        let hit = res.is_hit();
+
+        let kind = if hit {
+            if self.classify {
+                self.shadow_touch(line);
+            }
+            None
+        } else if !self.classify {
+            Some(MissKind::Conflict)
+        } else if !self.touched.contains(&line) {
+            self.touched.insert(line);
+            self.shadow_touch(line);
+            Some(MissKind::Cold)
+        } else {
+            // seen before: capacity if the fully-associative shadow also
+            // evicted it, conflict otherwise.
+            let in_shadow = self.shadow.contains(&line);
+            self.shadow_touch(line);
+            if in_shadow {
+                Some(MissKind::Conflict)
+            } else {
+                Some(MissKind::Capacity)
+            }
+        };
+        self.stats.record(set, kind);
+        let _ = match res {
+            SetAccess::MissEvict { victim, .. } => Some(victim),
+            _ => None,
+        };
+        Access {
+            set,
+            line,
+            hit,
+            kind,
+        }
+    }
+
+    fn shadow_touch(&mut self, line: u64) {
+        if let Some(pos) = self.shadow.iter().position(|&l| l == line) {
+            self.shadow.remove(pos);
+        } else if self.shadow.len() == self.spec.n_lines() {
+            self.shadow.pop();
+        }
+        self.shadow.insert(0, line);
+    }
+
+    /// Run a whole address trace; returns total misses.
+    pub fn run_trace<I: IntoIterator<Item = usize>>(&mut self, addrs: I) -> u64 {
+        let before = self.stats.misses();
+        for a in addrs {
+            self.access(a);
+        }
+        self.stats.misses() - before
+    }
+
+    /// Is this line currently resident?
+    pub fn probe(&self, addr: usize) -> bool {
+        let line = self.spec.line_of_addr(addr) as u64;
+        let set = (line as usize) % self.spec.n_sets();
+        self.sets[set].probe(line).is_some()
+    }
+
+    /// Flush contents and statistics.
+    pub fn reset(&mut self) {
+        for s in self.sets.iter_mut() {
+            s.clear();
+        }
+        self.shadow.clear();
+        self.touched.clear();
+        self.stats = CacheStats::new(self.spec.n_sets());
+    }
+}
+
+/// A multi-level inclusive hierarchy: every access walks L1 → L2 → … until
+/// it hits; lower levels are only consulted (and filled) on upper misses.
+#[derive(Clone, Debug)]
+pub struct Hierarchy {
+    levels: Vec<CacheSim>,
+}
+
+impl Hierarchy {
+    pub fn new(levels: Vec<CacheSim>) -> Hierarchy {
+        assert!(!levels.is_empty());
+        for w in levels.windows(2) {
+            assert!(
+                w[0].spec().level < w[1].spec().level,
+                "levels must be ordered by ρ"
+            );
+        }
+        Hierarchy { levels }
+    }
+
+    /// Haswell L1d + L2 with a shared policy.
+    pub fn haswell(policy: Policy) -> Hierarchy {
+        Hierarchy::new(vec![
+            CacheSim::new(CacheSpec::HASWELL_L1D, policy),
+            CacheSim::new(CacheSpec::HASWELL_L2, policy),
+        ])
+    }
+
+    /// Access an address; returns the level that hit (1-based), or
+    /// `levels.len() + 1` meaning DRAM.
+    pub fn access(&mut self, addr: usize) -> usize {
+        for (i, level) in self.levels.iter_mut().enumerate() {
+            if level.access(addr).hit {
+                return i + 1;
+            }
+        }
+        self.levels.len() + 1
+    }
+
+    pub fn level(&self, i: usize) -> &CacheSim {
+        &self.levels[i]
+    }
+
+    pub fn levels(&self) -> &[CacheSim] {
+        &self.levels
+    }
+
+    pub fn reset(&mut self) {
+        for l in self.levels.iter_mut() {
+            l.reset();
+        }
+    }
+
+    /// Total access cost in cycles with a simple per-level latency model
+    /// (L1 hit 4, L2 hit 12, DRAM ~200 — Haswell-like).
+    pub fn cost_model(&self) -> u64 {
+        const LAT: [u64; 4] = [4, 12, 40, 200];
+        let mut cost = 0u64;
+        let mut remaining: u64 = 0;
+        for (i, l) in self.levels.iter().enumerate() {
+            let hits = l.stats().hits;
+            cost += hits * LAT[i.min(3)];
+            remaining = l.stats().misses();
+        }
+        cost + remaining * LAT[3.min(LAT.len() - 1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_then_hit() {
+        let mut c = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        let a = c.access(0);
+        assert_eq!(a.kind, Some(MissKind::Cold));
+        let a = c.access(8); // same 16-byte line
+        assert!(a.hit);
+        assert_eq!(c.stats().accesses, 2);
+        assert_eq!(c.stats().misses(), 1);
+    }
+
+    #[test]
+    fn conflict_vs_capacity_classification() {
+        // FIG1_TOY: 4 sets, 2 ways, 16B lines, 8 lines total.
+        // Thrash one set with 3 lines that all map to set 0:
+        // line stride to same set = n_sets * line = 64 bytes.
+        let mut c = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        let s0 = [0usize, 64, 128];
+        for _ in 0..3 {
+            for &a in &s0 {
+                c.access(a);
+            }
+        }
+        // only 3 distinct lines — far below the 8-line capacity, so every
+        // non-cold miss must be classified Conflict.
+        assert_eq!(c.stats().cold, 3);
+        assert_eq!(c.stats().capacity, 0);
+        assert!(c.stats().conflict > 0);
+    }
+
+    #[test]
+    fn capacity_miss_when_working_set_exceeds_cache() {
+        // Stream 16 distinct lines (2× capacity) twice, touching *all* sets
+        // uniformly: second pass misses are capacity, not conflict.
+        let mut c = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        for pass in 0..2 {
+            for i in 0..16usize {
+                c.access(i * 16);
+            }
+            if pass == 0 {
+                assert_eq!(c.stats().cold, 16);
+            }
+        }
+        assert_eq!(c.stats().capacity, 16);
+        assert_eq!(c.stats().conflict, 0);
+    }
+
+    #[test]
+    fn fig1_subarray_cannot_fit() {
+        // Paper Figure 1: 8×5 column-major f64 array, lines of 2 elements,
+        // 2-way, 4 sets. The upper 2×5 sub-array cannot be resident without
+        // conflict misses even though it is only 10 elements (5 lines) in an
+        // 8-line cache.
+        //
+        // NOTE: the paper's *figure* uses a nonstandard mapping
+        // (set = (line div K) mod N — K consecutive lines share a set),
+        // under which the sub-array has 3 lines in set 0 and 2 in set 2.
+        // The paper's *text* formula ("every (c/(lK))-th cacheline maps to
+        // the same set") is the standard hardware mapping set = line mod N,
+        // which we implement. Under it the effect is even stronger: all 5
+        // sub-array lines map to set 0. The qualitative claim — the
+        // sub-array thrashes a 2-way set despite fitting in capacity —
+        // holds under both; we assert the standard-mapping version.
+        let spec = CacheSpec::FIG1_TOY;
+        let mut c = CacheSim::new(spec, Policy::Lru);
+        let elem = 8usize; // f64
+        let m1 = 8usize; // rows
+        let addr = |i: usize, j: usize| (i + m1 * j) * elem;
+        // standard map, column 0: rows 0..8 → sets 0,0,1,1,2,2,3,3
+        for i in 0..8 {
+            assert_eq!(spec.set_of_addr(addr(i, 0)), i / 2);
+        }
+        // sub-array rows {0,1} × cols {0..5}: count distinct lines per set
+        let mut lines_per_set: [HashSet<usize>; 4] = Default::default();
+        for j in 0..5 {
+            for i in 0..2 {
+                let a = addr(i, j);
+                lines_per_set[spec.set_of_addr(a)].insert(spec.line_of_addr(a));
+            }
+        }
+        // every column's rows {0,1} land in set 0: 5 lines > K=2 ways
+        assert_eq!(lines_per_set[0].len(), 5);
+        assert!(lines_per_set[0].len() > spec.ways);
+        // traverse the sub-array repeatedly: steady-state misses persist
+        for _ in 0..4 {
+            for j in 0..5 {
+                for i in 0..2 {
+                    c.access(addr(i, j));
+                }
+            }
+        }
+        let warm = c.stats().misses();
+        for j in 0..5 {
+            for i in 0..2 {
+                c.access(addr(i, j));
+            }
+        }
+        assert!(
+            c.stats().misses() > warm,
+            "paper's Fig.1 claims steady-state conflict misses"
+        );
+        assert_eq!(c.stats().capacity, 0, "all non-cold misses are conflicts");
+    }
+
+    #[test]
+    fn hierarchy_l2_catches_l1_conflicts() {
+        let mut h = Hierarchy::haswell(Policy::Lru);
+        // two lines conflicting in L1 (stride = 32KiB/8 = 4KiB apart ⇒ same
+        // L1 set) but NOT in L2 (256KiB/8 = 32KiB stride)
+        let (a, b) = (0usize, 4096usize);
+        assert_eq!(
+            CacheSpec::HASWELL_L1D.set_of_addr(a),
+            CacheSpec::HASWELL_L1D.set_of_addr(b)
+        );
+        for _ in 0..20 {
+            h.access(a);
+            h.access(b);
+        }
+        // both fit easily in 8-way L1 — all hits after the 2 colds
+        assert_eq!(h.level(0).stats().misses(), 2);
+        // now thrash the L1 set with 9 conflicting lines
+        h.reset();
+        for _ in 0..10 {
+            for k in 0..9usize {
+                h.access(k * 4096);
+            }
+        }
+        assert!(h.level(0).stats().misses() > 9);
+        // L2 absorbs them: 9 lines map to *different* L2 sets
+        assert_eq!(h.level(1).stats().misses(), 9);
+    }
+
+    #[test]
+    fn policy_changes_miss_counts() {
+        // Deterministic divergence: 4-way cache, 4 sets, all accesses to
+        // set 0 (line-tag stride = n_sets). After 0 1 2 3 0 4, LRU holds
+        // {0,2,3,4} (evicted 1) while tree-PLRU holds {0,1,3,4} (evicted 2);
+        // the subsequent access to 2 hits under LRU, misses under PLRU.
+        let spec = CacheSpec::new(4 * 4 * 16, 16, 4, 1); // 4 sets, 4 ways
+        let mut lru = CacheSim::new(spec, Policy::Lru);
+        let mut plru = CacheSim::new(spec, Policy::PLru);
+        let set_stride = spec.n_sets() * spec.line; // bytes between same-set lines
+        let trace: Vec<usize> = [0usize, 1, 2, 3, 0, 4, 2]
+            .iter()
+            .map(|&t| t * set_stride)
+            .collect();
+        let ml = lru.run_trace(trace.iter().copied());
+        let mp = plru.run_trace(trace.iter().copied());
+        assert_eq!(ml, 5, "LRU: 5 cold/conflict misses");
+        assert_eq!(mp, 6, "PLRU: extra miss on the re-access of 2");
+    }
+
+    #[test]
+    fn unclassified_mode_counts_same_total() {
+        let trace: Vec<usize> = (0..500).map(|i| (i * 97) % 8192).collect();
+        let mut a = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        let mut b =
+            CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru).without_classification();
+        let ma = a.run_trace(trace.iter().copied());
+        let mb = b.run_trace(trace.iter().copied());
+        assert_eq!(ma, mb);
+        assert_eq!(b.stats().cold + b.stats().capacity, 0);
+    }
+
+    use std::collections::HashSet;
+}

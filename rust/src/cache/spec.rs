@@ -1,0 +1,135 @@
+//! Cache specifications `C = (c, l, K, ρ)` — §1.1.1 of the paper.
+
+/// A single cache level's specification.
+///
+/// * `capacity` — total bytes the cache can store (`c`)
+/// * `line` — bytes fetched per load (`l`)
+/// * `ways` — associativity (`K`, lines per set)
+/// * `level` — position `ρ` in a `P`-level hierarchy (1 = closest to core)
+///
+/// Such a cache has `N = c / (l·K)` sets; every `(c/(l·K))`-th cacheline —
+/// i.e. every `(c/K)`-th byte — maps to the same set. That striding is the
+/// entire mathematical basis of the associativity-lattice model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheSpec {
+    pub capacity: usize,
+    pub line: usize,
+    pub ways: usize,
+    pub level: usize,
+}
+
+impl CacheSpec {
+    pub const fn new(capacity: usize, line: usize, ways: usize, level: usize) -> CacheSpec {
+        CacheSpec {
+            capacity,
+            line,
+            ways,
+            level,
+        }
+    }
+
+    /// Number of cache sets `N = c / (l·K)`.
+    pub const fn n_sets(&self) -> usize {
+        self.capacity / (self.line * self.ways)
+    }
+
+    /// Total number of cachelines the cache can hold (`c / l`).
+    pub const fn n_lines(&self) -> usize {
+        self.capacity / self.line
+    }
+
+    /// The set index of a byte address.
+    pub const fn set_of_addr(&self, addr: usize) -> usize {
+        (addr / self.line) % self.n_sets()
+    }
+
+    /// The line index (tag granularity) of a byte address.
+    pub const fn line_of_addr(&self, addr: usize) -> usize {
+        addr / self.line
+    }
+
+    /// Number of *elements* of size `elem` per cacheline.
+    pub const fn elems_per_line(&self, elem: usize) -> usize {
+        self.line / elem
+    }
+
+    /// The set-mapping stride in elements: elements this many apart (in
+    /// linearized element index) map to the same set **offset within the
+    /// line pattern** — `c / (K · elem)` elements.
+    pub const fn set_stride_elems(&self, elem: usize) -> usize {
+        self.capacity / (self.ways * elem)
+    }
+
+    /// Validate internal consistency (powers of two, divisibility).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.line > 0 && self.ways > 0 && self.capacity > 0);
+        anyhow::ensure!(
+            self.capacity % (self.line * self.ways) == 0,
+            "capacity must be a multiple of line*ways"
+        );
+        anyhow::ensure!(self.n_sets() > 0, "cache must have at least one set");
+        Ok(())
+    }
+
+    /// Intel Haswell L1d — the cache the paper tiles for in §4:
+    /// 32 KiB, 64-byte lines, 8-way ⇒ 64 sets.
+    pub const HASWELL_L1D: CacheSpec = CacheSpec::new(32 * 1024, 64, 8, 1);
+
+    /// Intel Haswell L2: 256 KiB, 64-byte lines, 8-way ⇒ 512 sets.
+    pub const HASWELL_L2: CacheSpec = CacheSpec::new(256 * 1024, 64, 8, 2);
+
+    /// Haswell L3 (per-core slice approximation): 2 MiB, 64 B, 16-way.
+    pub const HASWELL_L3_SLICE: CacheSpec = CacheSpec::new(2 * 1024 * 1024, 64, 16, 3);
+
+    /// The toy cache of the paper's Figure 1: 2-way, 4 sets, lines of
+    /// 2 elements. Expressed in bytes with 8-byte (f64) elements:
+    /// line = 16 B, capacity = 4 sets · 2 ways · 16 B = 128 B.
+    pub const FIG1_TOY: CacheSpec = CacheSpec::new(128, 16, 2, 1);
+}
+
+/// Eviction policy selector — §1.1.4. LRU and tree-PLRU are the two
+/// policies modern hardware implements; the paper models both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Policy {
+    Lru,
+    /// Tree-based pseudo-LRU (requires `ways` to be a power of two).
+    PLru,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn haswell_l1_has_64_sets() {
+        assert_eq!(CacheSpec::HASWELL_L1D.n_sets(), 64);
+        assert_eq!(CacheSpec::HASWELL_L1D.n_lines(), 512);
+        CacheSpec::HASWELL_L1D.validate().unwrap();
+    }
+
+    #[test]
+    fn fig1_toy_has_4_sets() {
+        assert_eq!(CacheSpec::FIG1_TOY.n_sets(), 4);
+        assert_eq!(CacheSpec::FIG1_TOY.elems_per_line(8), 2);
+        CacheSpec::FIG1_TOY.validate().unwrap();
+    }
+
+    #[test]
+    fn set_mapping_strides() {
+        let c = CacheSpec::HASWELL_L1D;
+        // every c/K bytes maps to the same set
+        let stride = c.capacity / c.ways;
+        for addr in [0usize, 100, 4096] {
+            assert_eq!(c.set_of_addr(addr), c.set_of_addr(addr + stride));
+        }
+        // consecutive lines map to consecutive sets
+        assert_eq!(c.set_of_addr(0), 0);
+        assert_eq!(c.set_of_addr(64), 1);
+        assert_eq!(c.set_of_addr(64 * 64), 0);
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        assert!(CacheSpec::new(100, 64, 8, 1).validate().is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Access statistics for the simulator, with the traditional 3-C
+//! classification kept *alongside* the paper's unified conflict-only view
+//! so the two can be compared experimentally (§1.1.2–§1.1.3).
+
+/// Miss taxonomy. The paper argues cold and capacity misses are both
+/// special cases of associativity conflicts; we record the traditional
+/// split so benchmarks can demonstrate exactly that claim.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MissKind {
+    /// Line never resided in the cache before (compulsory).
+    Cold,
+    /// A fully-associative LRU cache of the same capacity would also have
+    /// missed — the traditional "capacity" category.
+    Capacity,
+    /// The fully-associative shadow would have hit: the miss exists only
+    /// because of set-mapping conflicts. The paper's protagonist.
+    Conflict,
+}
+
+/// Aggregate counters for one cache level.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub cold: u64,
+    pub capacity: u64,
+    pub conflict: u64,
+    /// Per-set miss counters — the paper's per-set perspective (§1.1.3):
+    /// non-uniform usage across sets is exactly what makes "capacity" a
+    /// misleading aggregate.
+    pub per_set_misses: Vec<u64>,
+    pub per_set_accesses: Vec<u64>,
+}
+
+impl CacheStats {
+    pub fn new(n_sets: usize) -> CacheStats {
+        CacheStats {
+            per_set_misses: vec![0; n_sets],
+            per_set_accesses: vec![0; n_sets],
+            ..Default::default()
+        }
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.cold + self.capacity + self.conflict
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses() as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn record(&mut self, set: usize, kind: Option<MissKind>) {
+        self.accesses += 1;
+        self.per_set_accesses[set] += 1;
+        match kind {
+            None => self.hits += 1,
+            Some(k) => {
+                self.per_set_misses[set] += 1;
+                match k {
+                    MissKind::Cold => self.cold += 1,
+                    MissKind::Capacity => self.capacity += 1,
+                    MissKind::Conflict => self.conflict += 1,
+                }
+            }
+        }
+    }
+
+    /// Coefficient of variation of per-set miss counts — a direct measure
+    /// of the set-usage non-uniformity the paper highlights.
+    pub fn set_imbalance(&self) -> f64 {
+        let n = self.per_set_misses.len() as f64;
+        if n == 0.0 {
+            return 0.0;
+        }
+        let mean = self.per_set_misses.iter().sum::<u64>() as f64 / n;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .per_set_misses
+            .iter()
+            .map(|&m| (m as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n;
+        var.sqrt() / mean
+    }
+
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.cold += other.cold;
+        self.capacity += other.capacity;
+        self.conflict += other.conflict;
+        for (a, b) in self.per_set_misses.iter_mut().zip(&other.per_set_misses) {
+            *a += b;
+        }
+        for (a, b) in self
+            .per_set_accesses
+            .iter_mut()
+            .zip(&other.per_set_accesses)
+        {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_rates() {
+        let mut s = CacheStats::new(4);
+        s.record(0, None);
+        s.record(1, Some(MissKind::Cold));
+        s.record(1, Some(MissKind::Conflict));
+        s.record(2, Some(MissKind::Capacity));
+        assert_eq!(s.accesses, 4);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses(), 3);
+        assert!((s.miss_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.per_set_misses, vec![0, 2, 1, 0]);
+    }
+
+    #[test]
+    fn imbalance_zero_when_uniform() {
+        let mut s = CacheStats::new(2);
+        s.record(0, Some(MissKind::Cold));
+        s.record(1, Some(MissKind::Cold));
+        assert!(s.set_imbalance() < 1e-12);
+        s.record(0, Some(MissKind::Conflict));
+        assert!(s.set_imbalance() > 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CacheStats::new(2);
+        a.record(0, Some(MissKind::Cold));
+        let mut b = CacheStats::new(2);
+        b.record(1, None);
+        a.merge(&b);
+        assert_eq!(a.accesses, 2);
+        assert_eq!(a.hits, 1);
+    }
+}

@@ -1,0 +1,527 @@
+//! Schedule-faithful executors — the stand-in for the paper's
+//! CLooG-generated loop nests (DESIGN.md S9).
+//!
+//! [`MatmulBuffers`] owns the operand storage laid out exactly as the
+//! kernel's [`Table`](crate::index::Table)s describe (padding, base
+//! offsets); executors walk a [`Scanner`] (plain or tiled schedule) and
+//! perform `A[i,j] += B[i,kk] · C[kk,j]` per visited point, optionally
+//! touching a [`CacheSim`] with the three byte addresses — so simulated
+//! miss counts correspond 1:1 to the executed schedule.
+
+use crate::cache::CacheSim;
+use crate::domain::order::Scanner;
+use crate::domain::{Kernel, OpRole};
+use crate::tiling::{TileBasis, TiledSchedule};
+
+/// Operand storage for a matmul kernel built by [`crate::domain::ops`]:
+/// one arena indexed by byte address / 8, so executor addresses equal
+/// simulator addresses.
+#[derive(Clone, Debug)]
+pub struct MatmulBuffers {
+    pub m: i64,
+    pub k: i64,
+    pub n: i64,
+    /// Arena of f64 covering all three tables (indexed in elements).
+    pub arena: Vec<f64>,
+    /// Element offsets and leading dims of A, B, C.
+    pub a_off: usize,
+    pub b_off: usize,
+    pub c_off: usize,
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+}
+
+impl MatmulBuffers {
+    /// Allocate and deterministically initialize from a matmul kernel
+    /// (B, C pseudorandom; A zero).
+    pub fn from_kernel(kernel: &Kernel) -> MatmulBuffers {
+        assert_eq!(kernel.name(), "matmul");
+        let (m, n, k) = (
+            kernel.extents()[0],
+            kernel.extents()[1],
+            kernel.extents()[2],
+        );
+        let ops = kernel.operands();
+        let elem = ops[0].table.elem();
+        assert_eq!(elem, 8, "f64 only");
+        let end = ops
+            .iter()
+            .map(|o| o.table.base() + o.table.bytes())
+            .max()
+            .unwrap();
+        let mut arena = vec![0f64; end / 8];
+        // deterministic xorshift fill for the inputs
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+        };
+        for op in &ops[1..=2] {
+            let t = &op.table;
+            for j in 0..t.dims()[1] {
+                for i in 0..t.dims()[0] {
+                    arena[t.addr(&[i, j]) / 8] = rnd();
+                }
+            }
+        }
+        MatmulBuffers {
+            m,
+            k,
+            n,
+            arena,
+            a_off: ops[0].table.base() / 8,
+            b_off: ops[1].table.base() / 8,
+            c_off: ops[2].table.base() / 8,
+            lda: ops[0].table.map().weights()[1] as usize,
+            ldb: ops[1].table.map().weights()[1] as usize,
+            ldc: ops[2].table.map().weights()[1] as usize,
+        }
+    }
+
+    #[inline(always)]
+    pub fn a_idx(&self, i: i64, j: i64) -> usize {
+        self.a_off + i as usize + self.lda * j as usize
+    }
+
+    #[inline(always)]
+    pub fn b_idx(&self, i: i64, kk: i64) -> usize {
+        self.b_off + i as usize + self.ldb * kk as usize
+    }
+
+    #[inline(always)]
+    pub fn c_idx(&self, kk: i64, j: i64) -> usize {
+        self.c_off + kk as usize + self.ldc * j as usize
+    }
+
+    /// Reset the output to zero (between schedule runs).
+    pub fn reset_output(&mut self) {
+        for j in 0..self.n {
+            for i in 0..self.m {
+                let idx = self.a_idx(i, j);
+                self.arena[idx] = 0.0;
+            }
+        }
+    }
+
+    /// Copy of the output matrix (column-major m×n).
+    pub fn output(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity((self.m * self.n) as usize);
+        for j in 0..self.n {
+            for i in 0..self.m {
+                out.push(self.arena[self.a_idx(i, j)]);
+            }
+        }
+        out
+    }
+
+    /// Reference result computed by the naive oracle (fresh buffers).
+    pub fn reference(&self) -> Vec<f64> {
+        let mut out = vec![0f64; (self.m * self.n) as usize];
+        for j in 0..self.n {
+            for kk in 0..self.k {
+                let ckj = self.arena[self.c_idx(kk, j)];
+                for i in 0..self.m {
+                    out[(i + self.m * j) as usize] += self.arena[self.b_idx(i, kk)] * ckj;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Execute the matmul following `scanner`'s visit order. Returns nothing;
+/// the result accumulates into `bufs.arena`.
+pub fn run_schedule(bufs: &mut MatmulBuffers, kernel: &Kernel, scanner: &dyn Scanner) {
+    let arena = &mut bufs.arena;
+    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
+    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+    scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
+        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        let b = arena[b_off + i + ldb * kk];
+        let c = arena[c_off + kk + ldc * j];
+        arena[a_off + i + lda * j] += b * c;
+    });
+}
+
+/// Execute while feeding every touched byte address through the cache
+/// simulator, in operand order A, B, C per point (write-allocate, i.e. the
+/// output is touched like a read-modify-write).
+pub fn run_instrumented(
+    bufs: &mut MatmulBuffers,
+    kernel: &Kernel,
+    scanner: &dyn Scanner,
+    sim: &mut CacheSim,
+) {
+    let a_base = kernel.operand(0).table.base();
+    let b_base = kernel.operand(1).table.base();
+    let c_base = kernel.operand(2).table.base();
+    let arena = &mut bufs.arena;
+    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
+    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+    scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
+        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        sim.access(a_base + 8 * (i + lda * j));
+        sim.access(b_base + 8 * (i + ldb * kk));
+        sim.access(c_base + 8 * (kk + ldc * j));
+        let b = arena[b_off + i + ldb * kk];
+        let c = arena[c_off + kk + ldc * j];
+        arena[a_off + i + lda * j] += b * c;
+    });
+}
+
+/// Trace-only variant: feed addresses to the simulator without computing
+/// (for pure miss-count sweeps; ~3× faster than instrumented execution).
+pub fn run_trace_only(kernel: &Kernel, scanner: &dyn Scanner, sim: &mut CacheSim) {
+    let bases: Vec<usize> = kernel.operands().iter().map(|o| o.table.base()).collect();
+    let lds: Vec<usize> = kernel
+        .operands()
+        .iter()
+        .map(|o| o.table.map().weights()[1] as usize)
+        .collect();
+    let ranks_ok = kernel.operands().iter().all(|o| o.table.rank() == 2);
+    assert!(ranks_ok, "run_trace_only expects 2-D operands (matmul)");
+    scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
+        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        sim.access(bases[0] + 8 * (i + lds[0] * j));
+        sim.access(bases[1] + 8 * (i + lds[1] * kk));
+        sim.access(bases[2] + 8 * (kk + lds[2] * j));
+    });
+}
+
+/// Fast tiled executor: walks footpoints, replays a precomputed prototile
+/// point list for interior tiles (the lattice tiling's "miss regularity"
+/// made operational — every interior tile is the same point pattern
+/// shifted), and falls back to clipped scanning at the boundary.
+pub struct TiledExecutor {
+    schedule: TiledSchedule,
+    /// Integer points of the prototile (footpoint 0), lexicographic.
+    proto: Vec<Vec<i64>>,
+    /// The prototile decomposed into maximal unit-stride runs along dim 0
+    /// (`i`): `(i0, rest…, len)` — the vectorizable inner loops of the
+    /// "generated code". 3-D only: (i0, j, kk, len).
+    runs: Vec<(i64, i64, i64, i64)>,
+}
+
+impl TiledExecutor {
+    pub fn new(schedule: TiledSchedule) -> TiledExecutor {
+        if schedule.basis().is_rect() {
+            // the rect fast path in run() needs neither the prototile nor
+            // the run list
+            return TiledExecutor {
+                schedule,
+                proto: Vec::new(),
+                runs: Vec::new(),
+            };
+        }
+        let proto = prototile_points(schedule.basis());
+        let runs = if schedule.basis().dim() == 3 {
+            // group by (j, kk), merge consecutive i
+            let mut pts: Vec<(i64, i64, i64)> =
+                proto.iter().map(|p| (p[1], p[2], p[0])).collect();
+            pts.sort_unstable();
+            let mut runs = Vec::new();
+            let mut iter = pts.into_iter();
+            if let Some((mut j, mut kk, mut i0)) = iter.next() {
+                let mut len = 1i64;
+                for (pj, pkk, pi) in iter {
+                    if pj == j && pkk == kk && pi == i0 + len {
+                        len += 1;
+                    } else {
+                        runs.push((i0, j, kk, len));
+                        j = pj;
+                        kk = pkk;
+                        i0 = pi;
+                        len = 1;
+                    }
+                }
+                runs.push((i0, j, kk, len));
+            }
+            runs
+        } else {
+            Vec::new()
+        };
+        TiledExecutor {
+            schedule,
+            proto,
+            runs,
+        }
+    }
+
+    pub fn schedule(&self) -> &TiledSchedule {
+        &self.schedule
+    }
+
+    pub fn prototile(&self) -> &[Vec<i64>] {
+        &self.proto
+    }
+
+    /// The prototile's unit-stride run decomposition (3-D skewed bases).
+    pub fn runs(&self) -> &[(i64, i64, i64, i64)] {
+        &self.runs
+    }
+
+    /// Execute matmul with interior-tile replay: interior tiles run the
+    /// precomputed unit-stride runs (vectorizable inner loops — this is
+    /// the quality of code the paper's CLooG+gcc pipeline emits), boundary
+    /// tiles fall back to clipped point scanning.
+    pub fn run(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
+        let extents = kernel.extents();
+        let basis = self.schedule.basis();
+        let arena = &mut bufs.arena;
+        let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
+        let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+        if basis.is_rect() {
+            // generated-code quality for rectangular tiles: a direct
+            // 6-deep blocked loop nest with unit-stride inner loop
+            let (ti, tj, tk) = (
+                basis.basis()[(0, 0)] as usize,
+                basis.basis()[(1, 1)] as usize,
+                basis.basis()[(2, 2)] as usize,
+            );
+            let (m, n, k) = (
+                extents[0] as usize,
+                extents[1] as usize,
+                extents[2] as usize,
+            );
+            for j0 in (0..n).step_by(tj) {
+                let jn = (j0 + tj).min(n);
+                for k0 in (0..k).step_by(tk) {
+                    let kn = (k0 + tk).min(k);
+                    for i0 in (0..m).step_by(ti) {
+                        let im = (i0 + ti).min(m);
+                        for j in j0..jn {
+                            for kk in k0..kn {
+                                let c = arena[c_off + kk + ldc * j];
+                                let b_base = b_off + ldb * kk;
+                                let a_base = a_off + lda * j;
+                                for i in i0..im {
+                                    let bv = arena[b_base + i];
+                                    arena[a_base + i] += bv * c;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            return;
+        }
+        // Skewed tiles: every tile (interior or boundary) is the translated
+        // prototile clipped to the domain box, so clipped run replay is
+        // exact — no per-point footpoint filtering anywhere.
+        let (m, n, k) = (extents[0], extents[1], extents[2]);
+        self.schedule.scan_feet(extents, |foot| {
+            let origin: Vec<i128> = basis.basis().mul_vec(foot);
+            let (oi, oj, ok) = (origin[0] as i64, origin[1] as i64, origin[2] as i64);
+            for &(i0, j, kk, len) in &self.runs {
+                let jj = oj + j;
+                let kkk = ok + kk;
+                if jj < 0 || jj >= n || kkk < 0 || kkk >= k {
+                    continue;
+                }
+                let lo = (oi + i0).max(0);
+                let hi = (oi + i0 + len).min(m);
+                if lo >= hi {
+                    continue;
+                }
+                let (jj, kkk) = (jj as usize, kkk as usize);
+                let c = arena[c_off + kkk + ldc * jj];
+                let b_base = b_off + ldb * kkk;
+                let a_base = a_off + lda * jj;
+                for i in lo as usize..hi as usize {
+                    let bv = arena[b_base + i];
+                    arena[a_base + i] += bv * c;
+                }
+            }
+        });
+    }
+}
+
+/// Enumerate the integer points of the prototile (footpoint 0) of a tile
+/// basis, lexicographically sorted. Prototile points can have negative
+/// coordinates for skewed bases, so this scans the bounding box of
+/// `P·[0,1]^d` without clipping.
+pub fn prototile_points(basis: &TileBasis) -> Vec<Vec<i64>> {
+    let d = basis.dim();
+    if basis.is_rect() {
+        // the prototile of diag(s) is the box [0,s) — no scan needed
+        let sizes: Vec<i64> = (0..d).map(|i| basis.basis()[(i, i)] as i64).collect();
+        let mut out = Vec::with_capacity(basis.volume() as usize);
+        let mut x = vec![0i64; d];
+        'outer: loop {
+            out.push(x.clone());
+            let mut j = d;
+            loop {
+                if j == 0 {
+                    break 'outer;
+                }
+                j -= 1;
+                x[j] += 1;
+                if x[j] < sizes[j] {
+                    continue 'outer;
+                }
+                x[j] = 0;
+            }
+        }
+        return out;
+    }
+    let mut lo = vec![i128::MAX; d];
+    let mut hi = vec![i128::MIN; d];
+    for mask in 0..(1usize << d) {
+        let corner: Vec<i128> = (0..d).map(|i| ((mask >> i) & 1) as i128).collect();
+        let v = basis.basis().mul_vec(&corner);
+        for j in 0..d {
+            lo[j] = lo[j].min(v[j]);
+            hi[j] = hi[j].max(v[j]);
+        }
+    }
+    let mut proto = Vec::new();
+    let mut cur = lo.clone();
+    let mut x = vec![0i64; d];
+    'outer: loop {
+        for j in 0..d {
+            x[j] = cur[j] as i64;
+        }
+        if basis.in_prototile(&x) {
+            proto.push(x.clone());
+        }
+        let mut j = d;
+        loop {
+            if j == 0 {
+                break 'outer;
+            }
+            j -= 1;
+            cur[j] += 1;
+            if cur[j] <= hi[j] {
+                continue 'outer;
+            }
+            cur[j] = lo[j];
+        }
+    }
+    proto.sort();
+    assert_eq!(proto.len() as i128, basis.volume());
+    proto
+}
+
+/// Convenience: make a `TiledExecutor` from a tile basis.
+pub fn tiled_executor(basis: TileBasis) -> TiledExecutor {
+    TiledExecutor::new(TiledSchedule::new(basis))
+}
+
+/// Max |a−b| over two equal-length slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Did the kernel declare a writable first operand? (sanity helper)
+pub fn writes_first_operand(kernel: &Kernel) -> bool {
+    matches!(
+        kernel.operand(0).role,
+        OpRole::Write | OpRole::ReadWrite
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+    use crate::domain::IterOrder;
+    use crate::lattice::IMat;
+
+    fn check_correct(kernel: &Kernel, scanner: &dyn Scanner) {
+        let mut bufs = MatmulBuffers::from_kernel(kernel);
+        let want = bufs.reference();
+        run_schedule(&mut bufs, kernel, scanner);
+        let got = bufs.output();
+        assert!(
+            max_abs_diff(&want, &got) < 1e-9,
+            "schedule result mismatch"
+        );
+    }
+
+    #[test]
+    fn naive_orders_correct() {
+        let k = ops::matmul(13, 7, 9, 8, 0);
+        for o in IterOrder::all(3) {
+            check_correct(&k, &o);
+        }
+    }
+
+    #[test]
+    fn rect_tiled_correct() {
+        let k = ops::matmul(17, 11, 13, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[4, 5, 3]));
+        check_correct(&k, &s);
+    }
+
+    #[test]
+    fn lattice_tiled_correct() {
+        let k = ops::matmul(16, 16, 16, 8, 0);
+        // skewed tile on (i, kk), rect on j
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 0, 1],
+            &[0, 4, 0],
+            &[1, 0, 4],
+        ]));
+        let s = TiledSchedule::new(basis);
+        check_correct(&k, &s);
+    }
+
+    #[test]
+    fn padded_buffers_correct() {
+        let k = ops::matmul_padded(9, 8, 7, 12, 11, 10, 8, 256);
+        check_correct(&k, &IterOrder::lex(3));
+    }
+
+    #[test]
+    fn tiled_executor_matches_schedule_run() {
+        let k = ops::matmul(20, 18, 22, 8, 0);
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[5, 0, 2],
+            &[0, 6, 0],
+            &[-1, 0, 4],
+        ]));
+        let exec = TiledExecutor::new(TiledSchedule::new(basis));
+        let mut b1 = MatmulBuffers::from_kernel(&k);
+        let want = b1.reference();
+        exec.run(&mut b1, &k);
+        assert!(max_abs_diff(&want, &b1.output()) < 1e-9);
+    }
+
+    #[test]
+    fn prototile_size_is_volume() {
+        let basis = TileBasis::from_cols(IMat::from_rows(&[&[3, 1], &[1, 4]]));
+        let exec = TiledExecutor::new(TiledSchedule::new(basis));
+        assert_eq!(exec.prototile().len(), 11);
+    }
+
+    #[test]
+    fn instrumented_counts_accesses() {
+        use crate::cache::{CacheSim, CacheSpec, Policy};
+        let k = ops::matmul(8, 8, 8, 8, 0);
+        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
+        run_instrumented(&mut bufs, &k, &IterOrder::lex(3), &mut sim);
+        assert_eq!(sim.stats().accesses, 3 * 8 * 8 * 8);
+        // result still correct
+        assert!(max_abs_diff(&bufs.reference(), &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn trace_only_equals_instrumented_misses() {
+        use crate::cache::{CacheSim, CacheSpec, Policy};
+        let k = ops::matmul(10, 10, 10, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[4, 4, 4]));
+        let mut sim1 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        let mut sim2 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
+        let mut bufs = MatmulBuffers::from_kernel(&k);
+        run_instrumented(&mut bufs, &k, &s, &mut sim1);
+        run_trace_only(&k, &s, &mut sim2);
+        assert_eq!(sim1.stats().misses(), sim2.stats().misses());
+    }
+}

@@ -1,0 +1,16 @@
+//! Loop-nest execution ("code generation") — DESIGN.md S9, S11.
+//!
+//! The paper generates C code with CLooG and compiles it; we execute the
+//! same traversals directly: [`executor`] walks a schedule and performs
+//! the matmul (optionally instrumented against the cache simulator),
+//! [`parallel`] adds the OpenMP-analog threaded execution over tile
+//! footpoints.
+
+pub mod executor;
+pub mod parallel;
+
+pub use executor::{
+    max_abs_diff, run_instrumented, run_schedule, run_trace_only, tiled_executor,
+    MatmulBuffers, TiledExecutor,
+};
+pub use parallel::run_parallel;

@@ -1,0 +1,202 @@
+//! Auto-threading — §4.0.3 (DESIGN.md S11; OpenMP substitute).
+//!
+//! Footpoints are partitioned by their `j` (output-column) footprint, so
+//! threads own disjoint column bands of `A` and no write races occur —
+//! the same decomposition the paper's generated `omp parallel for` over
+//! the outer tile loop produces when `j` is the outer tile dimension.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::domain::Kernel;
+use crate::tiling::TiledSchedule;
+
+use super::executor::MatmulBuffers;
+
+/// Execute the tiled matmul with `threads` worker threads. Footpoints are
+/// grouped by their footpoint coordinate along `partition_var` (loop-space
+/// dimension index; use 1 = `j` for matmul plans built by this crate);
+/// groups are handed to workers round-robin. Panics if the tile basis
+/// couples `partition_var` with other dimensions (the column band would
+/// not be disjoint).
+pub fn run_parallel(
+    bufs: &mut MatmulBuffers,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    partition_var: usize,
+) {
+    assert!(threads >= 1);
+    let basis = schedule.basis();
+    let d = basis.dim();
+    // safety: partition_var must be decoupled — its row/col in the basis
+    // touches only the diagonal
+    for t in 0..d {
+        if t != partition_var {
+            assert_eq!(
+                basis.basis()[(partition_var, t)],
+                0,
+                "partition var is coupled by the tile basis"
+            );
+            assert_eq!(
+                basis.basis()[(t, partition_var)],
+                0,
+                "partition var is coupled by the tile basis"
+            );
+        }
+    }
+
+    // collect footpoints, grouped by the partition coordinate
+    let mut groups: std::collections::BTreeMap<i128, Vec<Vec<i128>>> =
+        std::collections::BTreeMap::new();
+    schedule.scan_feet(kernel.extents(), |foot| {
+        groups
+            .entry(foot[partition_var])
+            .or_default()
+            .push(foot.to_vec());
+    });
+    let groups: Vec<Vec<Vec<i128>>> = groups.into_values().collect();
+
+    let extents = kernel.extents().to_vec();
+    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
+    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+
+    // Prototile run list: every tile (interior or boundary) replays the
+    // clipped runs — exact and allocation-free.
+    let exec = super::executor::TiledExecutor::new(schedule.clone());
+    let runs: Vec<(i64, i64, i64, i64)> = exec.runs().to_vec();
+    let is_rect = basis.is_rect();
+
+    // Work queue: group index counter.
+    let next = AtomicUsize::new(0);
+    let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
+    let arena_len = bufs.arena.len();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let groups = &groups;
+            let next = &next;
+            let extents = &extents;
+            let arena_ptr = &arena_ptr;
+            let runs = &runs;
+            scope.spawn(move || {
+                let (m, n, k) = (extents[0], extents[1], extents[2]);
+                loop {
+                    let g = next.fetch_add(1, Ordering::Relaxed);
+                    if g >= groups.len() {
+                        break;
+                    }
+                    // SAFETY: groups are disjoint column bands of A, and
+                    // B/C are read-only here; each element of the arena is
+                    // written by at most one thread.
+                    let arena: &mut [f64] =
+                        unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
+                    for foot in &groups[g] {
+                        let origin = basis.basis().mul_vec(foot);
+                        let (oi, oj, ok) =
+                            (origin[0] as i64, origin[1] as i64, origin[2] as i64);
+                        if is_rect {
+                            // direct blocked nest over the clipped box
+                            let (ti, tj, tk) = (
+                                basis.basis()[(0, 0)] as i64,
+                                basis.basis()[(1, 1)] as i64,
+                                basis.basis()[(2, 2)] as i64,
+                            );
+                            let (ilo, ihi) = ((oi).max(0).min(m), (oi + ti).max(0).min(m));
+                            let (jlo, jhi) = ((oj).max(0).min(n), (oj + tj).max(0).min(n));
+                            let (klo, khi) = ((ok).max(0).min(k), (ok + tk).max(0).min(k));
+                            for j in jlo..jhi {
+                                for kk in klo..khi {
+                                    let c = arena[c_off + kk as usize + ldc * j as usize];
+                                    let b_base = b_off + ldb * kk as usize;
+                                    let a_base = a_off + lda * j as usize;
+                                    for i in ilo as usize..ihi as usize {
+                                        let bv = arena[b_base + i];
+                                        arena[a_base + i] += bv * c;
+                                    }
+                                }
+                            }
+                        } else {
+                            for &(i0, j, kk, len) in runs {
+                                let jj = oj + j;
+                                let kkk = ok + kk;
+                                if jj < 0 || jj >= n || kkk < 0 || kkk >= k {
+                                    continue;
+                                }
+                                let lo = (oi + i0).max(0);
+                                let hi = (oi + i0 + len).min(m);
+                                if lo >= hi {
+                                    continue;
+                                }
+                                let c = arena[c_off + kkk as usize + ldc * jj as usize];
+                                let b_base = b_off + ldb * kkk as usize;
+                                let a_base = a_off + lda * jj as usize;
+                                for i in lo as usize..hi as usize {
+                                    let bv = arena[b_base + i];
+                                    arena[a_base + i] += bv * c;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::executor::{max_abs_diff, MatmulBuffers};
+    use crate::domain::ops;
+    use crate::lattice::IMat;
+    use crate::tiling::TileBasis;
+
+    #[test]
+    fn parallel_matches_reference_rect() {
+        let k = ops::matmul(24, 20, 28, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        for threads in [1, 2, 4] {
+            let mut bufs = MatmulBuffers::from_kernel(&k);
+            let want = bufs.reference();
+            run_parallel(&mut bufs, &k, &s, threads, 1);
+            assert!(
+                max_abs_diff(&want, &bufs.output()) < 1e-9,
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matches_reference_lattice() {
+        let k = ops::matmul(16, 16, 16, 8, 0);
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 0, 1],
+            &[0, 4, 0],
+            &[1, 0, 4],
+        ]));
+        let s = TiledSchedule::new(basis);
+        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let want = bufs.reference();
+        run_parallel(&mut bufs, &k, &s, 4, 1);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "coupled")]
+    fn coupled_partition_var_rejected() {
+        let k = ops::matmul(8, 8, 8, 8, 0);
+        // tile couples j with i
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[2, 1, 0],
+            &[1, 2, 0],
+            &[0, 0, 2],
+        ]));
+        let s = TiledSchedule::new(basis);
+        let mut bufs = MatmulBuffers::from_kernel(&k);
+        run_parallel(&mut bufs, &k, &s, 2, 1);
+    }
+}

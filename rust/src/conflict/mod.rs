@@ -1,0 +1,11 @@
+//! Associativity-conflict analysis — §2.3–§2.4 (DESIGN.md S5, S6).
+//!
+//! [`potential`] builds the conflict lattices `L(C, φ)` / `Λ(A_i)` and the
+//! conflict index-sets `T(x)`; [`miss_model`] evaluates the actual-miss
+//! Equations (1)/(4), exactly or by class-sampling.
+
+pub mod miss_model;
+pub mod potential;
+
+pub use miss_model::{MissModel, ModelCounts};
+pub use potential::{ConflictAnalysis, OperandConflicts};

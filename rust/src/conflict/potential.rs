@@ -1,0 +1,272 @@
+//! Potential conflicts — §2.3.
+//!
+//! For a cache `C` with set period `P` (in elements) and an operand with
+//! affine index map `φ`, two elements are in **potential conflict** iff
+//! their linear indices are congruent mod `P` (Definition 7). The set of
+//! index-space differences realizing this is the lattice
+//! `L(C, φ) = {x : φ(x) ≡ 0 (mod P)}` (Observation 1), which we construct
+//! in closed form — no lattice-point counting — via
+//! [`Lattice::from_congruence`].
+//!
+//! ## Granularity
+//!
+//! Definition 7 works at *element* granularity (`i ≡ j mod N`), i.e. it
+//! implicitly assumes one element per cacheline. For `l > elem` we use the
+//! element-stride period `P = c / (K·elem)`: elements exactly `P` apart
+//! share both set and line offset, which preserves the affine lattice
+//! structure. Sub-line spatial effects are *deliberately* outside the
+//! model (the paper discusses them separately in Figure 5); the cache
+//! simulator measures them for real.
+
+use crate::cache::CacheSpec;
+use crate::domain::Kernel;
+use crate::lattice::Lattice;
+
+/// Conflict-lattice data for one operand of a kernel.
+#[derive(Clone, Debug)]
+pub struct OperandConflicts {
+    /// `L(C, φ)` in the operand's own index space (Definition 7 /
+    /// Observation 1).
+    pub operand_lattice: Lattice,
+    /// `Λ(A_i)` pulled back to the *loop* space through the access
+    /// function (§2.4): `{f : w·f ≡ 0 (mod P)}` for the composed weights
+    /// `w` of `φ ∘ access`. `None` when the composed weights vanish
+    /// entirely mod `P` (constant accesses — every loop point touches the
+    /// same class).
+    pub loop_lattice: Option<Lattice>,
+    /// Composed linear weights of `φ ∘ access` on the loop variables.
+    pub loop_weights: Vec<i64>,
+    /// Affine offset of `φ ∘ access` including the table base address —
+    /// `φ(q_A)` in the paper's notation; the conflict-class residue of the
+    /// operand's element 0 is `offset mod P`.
+    pub offset: i64,
+}
+
+/// Conflict analysis of a whole kernel under one cache spec.
+#[derive(Clone, Debug)]
+pub struct ConflictAnalysis {
+    /// Set period in elements: `P = c / (K·elem)`.
+    pub period: i64,
+    /// Cache associativity `K`.
+    pub ways: usize,
+    /// Elements per cacheline (`l / elem`).
+    pub gran: i64,
+    /// Number of cache sets `N = c/(l·K)` — the line-granular class count
+    /// (`period == gran · n_classes`).
+    pub n_classes: i64,
+    pub operands: Vec<OperandConflicts>,
+}
+
+impl ConflictAnalysis {
+    /// Analyze `kernel` under `spec`. All operands must share one element
+    /// size (the usual case; mixed sizes would need per-operand periods).
+    pub fn new(kernel: &Kernel, spec: &CacheSpec) -> ConflictAnalysis {
+        let elem = kernel.operand(0).table.elem();
+        assert!(
+            kernel.operands().iter().all(|o| o.table.elem() == elem),
+            "mixed element sizes not supported"
+        );
+        assert_eq!(spec.line % elem, 0, "element must divide cacheline");
+        let period = (spec.capacity / (spec.ways * elem)) as i64;
+
+        let operands = kernel
+            .operands()
+            .iter()
+            .map(|op| {
+                let phi = op.table.map();
+                // operand-space lattice from φ's own weights
+                let w128: Vec<i128> = phi.weights_i128();
+                let operand_lattice = Lattice::from_congruence(&w128, period as i128);
+                // loop-space lattice from composed weights (φ ∘ access),
+                // including the byte base address folded into the offset
+                let base_elems = (op.table.base() / elem) as i64;
+                let (w, o) = op
+                    .access
+                    .compose_weights(phi.weights(), phi.offset() + base_elems);
+                let all_zero_mod = w.iter().all(|&wi| (wi as i128).rem_euclid(period as i128) == 0);
+                let loop_lattice = if all_zero_mod {
+                    None
+                } else {
+                    let w128: Vec<i128> = w.iter().map(|&x| x as i128).collect();
+                    Some(Lattice::from_congruence(&w128, period as i128))
+                };
+                OperandConflicts {
+                    operand_lattice,
+                    loop_lattice,
+                    loop_weights: w,
+                    offset: o,
+                }
+            })
+            .collect();
+
+        ConflictAnalysis {
+            period,
+            ways: spec.ways,
+            gran: (spec.line / elem) as i64,
+            n_classes: spec.n_sets() as i64,
+            operands,
+        }
+    }
+
+    /// The conflict class (set-class residue mod `P`) operand `p` touches
+    /// at loop point `f`.
+    pub fn class_at(&self, p: usize, f: &[i64]) -> i64 {
+        let oc = &self.operands[p];
+        let lin: i64 = oc.offset
+            + oc.loop_weights
+                .iter()
+                .zip(f)
+                .map(|(&w, &x)| w * x)
+                .sum::<i64>();
+        lin.rem_euclid(self.period)
+    }
+
+    /// Element (linear index incl. base) operand `p` touches at `f`.
+    pub fn element_at(&self, p: usize, f: &[i64]) -> i64 {
+        let oc = &self.operands[p];
+        oc.offset
+            + oc.loop_weights
+                .iter()
+                .zip(f)
+                .map(|(&w, &x)| w * x)
+                .sum::<i64>()
+    }
+
+    /// Cacheline id operand `p` touches at loop point `f` (element index
+    /// floor-divided by the line granularity — the unit the real cache
+    /// moves; table bases are element-aligned by construction).
+    pub fn line_at(&self, p: usize, f: &[i64]) -> i64 {
+        self.element_at(p, f).div_euclid(self.gran)
+    }
+
+    /// The cache *set* (line-granular conflict class) operand `p` touches
+    /// at loop point `f` — exactly the hardware's set index.
+    pub fn line_class_at(&self, p: usize, f: &[i64]) -> i64 {
+        self.line_at(p, f).rem_euclid(self.n_classes)
+    }
+
+    /// The potential-conflict index-set `T(x)` of Definition 8, relative
+    /// to conflict class `class`: the operands whose access at `f` lands
+    /// in that class.
+    pub fn conflict_index_set(&self, f: &[i64], class: i64) -> Vec<usize> {
+        (0..self.operands.len())
+            .filter(|&p| self.class_at(p, f) == class)
+            .collect()
+    }
+
+    /// Potential conflict level `|T(x)|` (Definition 8).
+    pub fn conflict_level(&self, f: &[i64], class: i64) -> usize {
+        self.conflict_index_set(f, class).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheSpec;
+    use crate::domain::ops;
+    use crate::domain::IterOrder;
+
+    fn toy_spec() -> CacheSpec {
+        // elem = 8B, line = 8B (element granularity), 4 sets, 2 ways:
+        // capacity = 4*2*8 = 64B, period P = 64/(2*8) = 4 elements.
+        CacheSpec::new(64, 8, 2, 1)
+    }
+
+    #[test]
+    fn matmul_operand_lattices() {
+        let k = ops::matmul(8, 8, 8, 8, 0);
+        let ca = ConflictAnalysis::new(&k, &CacheSpec::HASWELL_L1D);
+        // P = 32768/(8*8) = 512 elements
+        assert_eq!(ca.period, 512);
+        // A is 8x8 column-major: weights (1, 8); lattice det = 512
+        assert_eq!(ca.operands[0].operand_lattice.det_abs(), 512);
+        // loop weights for A[i,j] with lda=8: i + 8j → (1, 8, 0)
+        assert_eq!(ca.operands[0].loop_weights, vec![1, 8, 0]);
+    }
+
+    #[test]
+    fn class_matches_congruence_definition() {
+        let k = ops::matmul(6, 5, 4, 8, 0);
+        let ca = ConflictAnalysis::new(&k, &toy_spec());
+        let order = IterOrder::lex(3);
+        order.scan(k.extents(), |f| {
+            for p in 0..3 {
+                let e = ca.element_at(p, f);
+                assert_eq!(ca.class_at(p, f), e.rem_euclid(ca.period));
+                // membership in the loop lattice ⇔ class == class at origin
+                if let Some(l) = &ca.operands[p].loop_lattice {
+                    let f128: Vec<i128> = f.iter().map(|&x| x as i128).collect();
+                    let origin_class = ca.class_at(p, &[0, 0, 0]);
+                    if l.contains(&f128) {
+                        assert_eq!(ca.class_at(p, f), origin_class);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn loop_lattice_matches_class_equality() {
+        // Every loop point in Λ(A_p) touches the base class; points not in
+        // Λ may still touch it only if the class repeats — the lattice
+        // must capture exactly the f with w·f ≡ 0.
+        let k = ops::matmul(8, 8, 8, 8, 0);
+        let ca = ConflictAnalysis::new(&k, &toy_spec());
+        let l = ca.operands[1].loop_lattice.as_ref().unwrap();
+        IterOrder::lex(3).scan(k.extents(), |f| {
+            let f128: Vec<i128> = f.iter().map(|&x| x as i128).collect();
+            let w = &ca.operands[1].loop_weights;
+            let dot: i64 = w.iter().zip(f).map(|(&a, &b)| a * b).sum();
+            assert_eq!(
+                l.contains(&f128),
+                dot.rem_euclid(ca.period) == 0,
+                "f={f:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn constant_access_has_no_loop_lattice() {
+        let k = ops::scalar_product(16, 8, 0);
+        let ca = ConflictAnalysis::new(&k, &toy_spec());
+        // operand 0 is the scalar output A_0: constant access
+        assert!(ca.operands[0].loop_lattice.is_none());
+        // B and C are streamed: weights (1,)
+        assert!(ca.operands[1].loop_lattice.is_some());
+    }
+
+    #[test]
+    fn base_address_translates_classes() {
+        // Same kernel, shifted base: classes shift by the base residue.
+        let k0 = ops::matmul(4, 4, 4, 8, 0);
+        let k1 = ops::matmul(4, 4, 4, 8, 2 * 8); // shift by 2 elements
+        let c0 = ConflictAnalysis::new(&k0, &toy_spec());
+        let c1 = ConflictAnalysis::new(&k1, &toy_spec());
+        let f = [1i64, 2, 3];
+        for p in 0..3 {
+            assert_eq!(
+                (c0.class_at(p, &f) + 2).rem_euclid(c0.period),
+                c1.class_at(p, &f)
+            );
+        }
+    }
+
+    #[test]
+    fn conflict_level_counts_operands() {
+        // craft a point where A and B touch the same class
+        let k = ops::matmul(4, 4, 4, 8, 0);
+        let ca = ConflictAnalysis::new(&k, &toy_spec());
+        let mut found_multi = false;
+        IterOrder::lex(3).scan(k.extents(), |f| {
+            for class in 0..ca.period {
+                let lvl = ca.conflict_level(f, class);
+                if lvl > 1 {
+                    found_multi = true;
+                }
+                assert!(lvl <= 3);
+            }
+        });
+        assert!(found_multi, "expected some cross-operand conflicts");
+    }
+}

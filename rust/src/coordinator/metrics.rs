@@ -1,0 +1,137 @@
+//! Service metrics: latency histogram + throughput counters.
+
+use std::time::Duration;
+
+/// Fixed-boundary latency histogram (µs buckets) plus aggregates.
+#[derive(Clone, Debug)]
+pub struct Metrics {
+    bounds_us: Vec<u64>,
+    counts: Vec<u64>,
+    pub jobs: u64,
+    pub batches: u64,
+    pub total_latency: Duration,
+    pub max_latency: Duration,
+    pub flops: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        let bounds_us = vec![
+            50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
+        ];
+        let counts = vec![0; bounds_us.len() + 1];
+        Metrics {
+            bounds_us,
+            counts,
+            jobs: 0,
+            batches: 0,
+            total_latency: Duration::ZERO,
+            max_latency: Duration::ZERO,
+            flops: 0,
+        }
+    }
+
+    pub fn record_job(&mut self, latency: Duration, flops: u64) {
+        self.jobs += 1;
+        self.flops += flops;
+        self.total_latency += latency;
+        self.max_latency = self.max_latency.max(latency);
+        let us = latency.as_micros() as u64;
+        let idx = self
+            .bounds_us
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(self.bounds_us.len());
+        self.counts[idx] += 1;
+    }
+
+    pub fn record_batch(&mut self) {
+        self.batches += 1;
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.jobs == 0 {
+            Duration::ZERO
+        } else {
+            self.total_latency / self.jobs as u32
+        }
+    }
+
+    /// Approximate percentile from the histogram (returns an upper bucket
+    /// boundary in µs).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self
+                    .bounds_us
+                    .get(i)
+                    .copied()
+                    .unwrap_or(self.max_latency.as_micros() as u64);
+            }
+        }
+        self.max_latency.as_micros() as u64
+    }
+
+    pub fn report(&self, wall: Duration) -> String {
+        let thr = if wall.as_secs_f64() > 0.0 {
+            self.jobs as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        };
+        let gflops = if wall.as_secs_f64() > 0.0 {
+            self.flops as f64 / wall.as_secs_f64() / 1e9
+        } else {
+            0.0
+        };
+        format!(
+            "jobs={} batches={} throughput={:.1} jobs/s {:.2} GFLOP/s \
+             mean={:?} p50≤{}µs p99≤{}µs max={:?}",
+            self.jobs,
+            self.batches,
+            thr,
+            gflops,
+            self.mean_latency(),
+            self.percentile_us(0.50),
+            self.percentile_us(0.99),
+            self.max_latency
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut m = Metrics::new();
+        for us in [10u64, 20, 30, 40, 60, 80, 200, 400, 2_000, 80_000] {
+            m.record_job(Duration::from_micros(us), 1000);
+        }
+        assert_eq!(m.jobs, 10);
+        assert!(m.percentile_us(0.5) <= 100);
+        assert!(m.percentile_us(0.99) >= 50_000);
+        assert_eq!(m.flops, 10_000);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.percentile_us(0.99), 0);
+        assert_eq!(m.mean_latency(), Duration::ZERO);
+        let _ = m.report(Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,15 @@
+//! The L3 coordinator (DESIGN.md S12): planner, batching job service,
+//! metrics.
+//!
+//! This is the request path of the system: clients submit matmul jobs;
+//! the planner (paper's §4.0.4 selector, cached per shape) resolves each
+//! shape to an AOT kernel variant; the service batches jobs and dispatches
+//! them through PJRT. Python never runs here.
+
+pub mod metrics;
+pub mod planner;
+pub mod service;
+
+pub use metrics::Metrics;
+pub use planner::{Plan, Planner};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,155 @@
+//! The planner: lattice-model tile selection mapped onto shipped kernels.
+//!
+//! For each job shape the planner runs the paper's selector (§4.0.4: K−1
+//! lattice rule + model-driven search) against the configured cache spec,
+//! derives a preferred tile shape, and resolves the nearest AOT kernel
+//! variant from the [`Registry`]. Plans are cached per shape — selection
+//! runs once, off the hot path.
+
+use std::collections::HashMap;
+
+use crate::cache::CacheSpec;
+use crate::domain::ops;
+use crate::runtime::Registry;
+use crate::tiling;
+
+/// A resolved execution plan for one matmul shape.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Tile shape the lattice model preferred (loop-space extents).
+    pub model_tile: (usize, usize, usize),
+    /// Name of the AOT artifact chosen to realize it.
+    pub artifact: String,
+    /// Predicted misses (sampled model) for the chosen schedule.
+    pub predicted_misses: u64,
+    /// Human-readable description of the winning plan.
+    pub plan_name: String,
+}
+
+/// Shape-keyed plan cache around the selector.
+pub struct Planner {
+    spec: CacheSpec,
+    cache: HashMap<(usize, usize, usize), Plan>,
+    sample_classes: usize,
+}
+
+impl Planner {
+    pub fn new(spec: CacheSpec) -> Planner {
+        Planner {
+            spec,
+            cache: HashMap::new(),
+            sample_classes: 8,
+        }
+    }
+
+    pub fn with_sample_classes(mut self, s: usize) -> Planner {
+        self.sample_classes = s;
+        self
+    }
+
+    pub fn spec(&self) -> &CacheSpec {
+        &self.spec
+    }
+
+    /// Plan for an `m×k×n` matmul, resolving against `registry`.
+    pub fn plan(&mut self, registry: &Registry, m: usize, k: usize, n: usize) -> Plan {
+        if let Some(p) = self.cache.get(&(m, k, n)) {
+            return p.clone();
+        }
+        // Model selection runs on a proportional small instance when the
+        // real size would make even the sampled model slow; the conflict
+        // lattice depends on the leading dimension, which we preserve.
+        let (sm, sk, sn) = shrink(m, k, n);
+        let kernel = ops::matmul_padded(
+            sm as i64,
+            sk as i64,
+            sn as i64,
+            m as i64, // preserve true leading dims → true conflict lattice
+            m as i64,
+            k as i64,
+            8,
+            0,
+        );
+        let ranked = tiling::select(&kernel, &self.spec, self.sample_classes);
+        let best = ranked.first();
+        let (tile, name, predicted) = match best {
+            Some(p) => {
+                let b = p.schedule.basis();
+                let ext = |i: usize| -> usize {
+                    (0..b.dim())
+                        .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
+                        .sum()
+                };
+                (
+                    (ext(0), ext(2), ext(1)),
+                    p.name.clone(),
+                    p.predicted.as_ref().map(|c| c.misses).unwrap_or(0),
+                )
+            }
+            None => ((64, 64, 64), "fallback rect 64".to_string(), 0),
+        };
+        let artifact = registry
+            .closest_variant(m, k, n, tile)
+            .map(|a| a.name.clone())
+            .unwrap_or_else(|| format!("<no artifact for {m}x{k}x{n}>"));
+        let plan = Plan {
+            m,
+            k,
+            n,
+            model_tile: tile,
+            artifact,
+            predicted_misses: predicted,
+            plan_name: name,
+        };
+        self.cache.insert((m, k, n), plan.clone());
+        plan
+    }
+
+    pub fn cached_plans(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Shrink a problem size for model evaluation (keep ≤ 48³ points),
+/// preserving divisibility structure where possible.
+fn shrink(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
+    let cap = 64usize;
+    (m.min(cap), k.min(cap), n.min(cap))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn planner_caches_and_resolves() {
+        if !artifacts_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let reg = Registry::load(&artifacts_dir()).unwrap();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p1 = planner.plan(&reg, 256, 256, 256);
+        assert!(p1.artifact.starts_with("matmul_256x256x256"));
+        let p2 = planner.plan(&reg, 256, 256, 256);
+        assert_eq!(p1.artifact, p2.artifact);
+        assert_eq!(planner.cached_plans(), 1);
+    }
+
+    #[test]
+    fn planner_works_without_artifacts() {
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p = planner.plan(&reg, 64, 64, 64);
+        assert!(p.artifact.contains("no artifact"));
+        assert!(p.model_tile.0 > 0);
+    }
+}

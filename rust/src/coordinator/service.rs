@@ -1,0 +1,301 @@
+//! The serving coordinator: job queue → dynamic batcher → PJRT dispatch.
+//!
+//! One [`Service`] hosts one weight matrix `y` (k×n) and serves matmul
+//! jobs `x·y` for m×k left operands, the way an inference router serves a
+//! fixed model. Jobs are accumulated for up to a batching window and
+//! dispatched through the vmapped batched artifact when possible (padding
+//! partial batches with zeros), falling back to the single-shape kernel.
+//! Python is never involved: the executables were AOT-compiled by
+//! `make artifacts`.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::CacheSpec;
+use crate::runtime::{ArtifactKind, Engine, Registry};
+
+use super::metrics::Metrics;
+use super::planner::Planner;
+
+struct Job {
+    x: Vec<f32>,
+    resp: Sender<Result<Vec<f32>>>,
+    submitted: Instant,
+}
+
+enum Msg {
+    Job(Job),
+    Stop,
+}
+
+/// Handle to a running coordinator thread.
+pub struct Service {
+    tx: Sender<Msg>,
+    handle: std::thread::JoinHandle<(Metrics, Duration)>,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+impl Service {
+    /// The served output shape (m, n) per job.
+    pub fn output_shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+}
+
+/// Configuration for [`Service::start`].
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Cache spec the planner models (tile selection).
+    pub spec: CacheSpec,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            m: 128,
+            k: 128,
+            n: 128,
+            batch_window: Duration::from_millis(2),
+            spec: CacheSpec::HASWELL_L1D,
+        }
+    }
+}
+
+impl Service {
+    /// Start the coordinator: loads the registry, plans the shape, warms
+    /// the chosen executables, spawns the worker thread that owns the
+    /// PJRT engine.
+    pub fn start(artifact_dir: &Path, y: Vec<f32>, cfg: ServiceConfig) -> Result<Service> {
+        let registry = Registry::load(artifact_dir)?;
+        anyhow::ensure!(
+            y.len() == cfg.k * cfg.n,
+            "y must be k×n = {}",
+            cfg.k * cfg.n
+        );
+        let mut planner = Planner::new(cfg.spec);
+        let plan = planner.plan(&registry, cfg.m, cfg.k, cfg.n);
+        let single = registry
+            .by_name(&plan.artifact)
+            .with_context(|| format!("planned artifact {} missing", plan.artifact))?
+            .name
+            .clone();
+        // batched variant with the same problem shape, if shipped
+        let batched = registry
+            .artifacts()
+            .iter()
+            .find(|a| {
+                a.kind == ArtifactKind::PallasTiledMatmulBatched
+                    && a.m == cfg.m
+                    && a.k == cfg.k
+                    && a.n == cfg.n
+            })
+            .map(|a| (a.name.clone(), a.batch));
+
+        let (tx, rx) = channel::<Msg>();
+        let m = cfg.m;
+        let k = cfg.k;
+        let n = cfg.n;
+        let window = cfg.batch_window;
+        let handle = std::thread::spawn(move || {
+            let mut engine = Engine::new(registry).expect("pjrt engine");
+            engine.prepare(&single).expect("prepare single artifact");
+            if let Some((name, _)) = &batched {
+                engine.prepare(name).expect("prepare batched artifact");
+            }
+            worker_loop(&mut engine, rx, y, m, k, n, single, batched, window)
+        });
+        Ok(Service {
+            tx,
+            handle,
+            m,
+            k,
+            n,
+        })
+    }
+
+    /// Submit a job; returns the receiver for the m×n row-major result.
+    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
+        anyhow::ensure!(x.len() == self.m * self.k, "x must be m×k");
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Job(Job {
+                x,
+                resp: rtx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(rrx)
+    }
+
+    /// Stop and collect metrics (+ total wall time of the worker).
+    pub fn stop(self) -> (Metrics, Duration) {
+        let _ = self.tx.send(Msg::Stop);
+        self.handle.join().expect("worker panicked")
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    engine: &mut Engine,
+    rx: Receiver<Msg>,
+    y: Vec<f32>,
+    m: usize,
+    k: usize,
+    n: usize,
+    single: String,
+    batched: Option<(String, usize)>,
+    window: Duration,
+) -> (Metrics, Duration) {
+    let started = Instant::now();
+    let mut metrics = Metrics::new();
+    let flops_per_job = (2 * m * k * n) as u64;
+    let mut pending: Vec<Job> = Vec::new();
+    let mut stopping = false;
+
+    while !stopping || !pending.is_empty() {
+        // fill the batch within the window
+        let cap = batched.as_ref().map(|(_, b)| *b).unwrap_or(1);
+        let deadline = Instant::now() + window;
+        while !stopping && pending.len() < cap {
+            let timeout = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Job(j)) => pending.push(j),
+                Ok(Msg::Stop) => stopping = true,
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+            if pending.len() == 1 && window.is_zero() {
+                break;
+            }
+        }
+        if pending.is_empty() {
+            if stopping {
+                break;
+            }
+            // idle: block for the next message
+            match rx.recv() {
+                Ok(Msg::Job(j)) => pending.push(j),
+                Ok(Msg::Stop) | Err(_) => stopping = true,
+            }
+            continue;
+        }
+
+        metrics.record_batch();
+        let batch = std::mem::take(&mut pending);
+        match (&batched, batch.len()) {
+            (Some((name, cap)), len) if len > 1 => {
+                // pad to the full batch with zeros
+                let mut xs = vec![0f32; cap * m * k];
+                for (i, j) in batch.iter().enumerate() {
+                    xs[i * m * k..(i + 1) * m * k].copy_from_slice(&j.x);
+                }
+                match engine.run_matmul(name, &xs, &y) {
+                    Ok(out) => {
+                        for (i, j) in batch.into_iter().enumerate() {
+                            let slice = out[i * m * n..(i + 1) * m * n].to_vec();
+                            metrics.record_job(j.submitted.elapsed(), flops_per_job);
+                            let _ = j.resp.send(Ok(slice));
+                        }
+                    }
+                    Err(e) => {
+                        for j in batch {
+                            let _ = j.resp.send(Err(anyhow::anyhow!("{e:#}")));
+                        }
+                    }
+                }
+            }
+            _ => {
+                for j in batch {
+                    let r = engine.run_matmul(&single, &j.x, &y);
+                    metrics.record_job(j.submitted.elapsed(), flops_per_job);
+                    let _ = j.resp.send(r);
+                }
+            }
+        }
+    }
+    (metrics, started.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn rowmajor_matmul(m: usize, k: usize, n: usize, x: &[f32], y: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                for j in 0..n {
+                    out[i * n + j] += xv * y[kk * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn service_serves_correct_results() {
+        if !artifacts_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (m, k, n) = (128usize, 128, 128);
+        let mut s = 7u64;
+        let mut rnd = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s % 1000) as f32 / 1000.0) - 0.5
+        };
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            &artifacts_dir(),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(1),
+                spec: CacheSpec::HASWELL_L1D,
+            },
+        )
+        .unwrap();
+
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = rowmajor_matmul(m, k, n, x, &y);
+            let maxd = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(maxd < 1e-2, "serve result off by {maxd}");
+        }
+        let (metrics, wall) = svc.stop();
+        assert_eq!(metrics.jobs, 5);
+        assert!(metrics.batches >= 1);
+        println!("serve test: {}", metrics.report(wall));
+    }
+}

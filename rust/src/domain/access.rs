@@ -1,0 +1,137 @@
+//! Affine access functions: the projections `π_i` of §2.1.2 expressed on
+//! the free loop variables.
+//!
+//! The paper formulates computations as a joint index set
+//! `Q(A_1)×…×Q(A_k)` intersected with an affine subspace `H`. Operationally
+//! (and equivalently, see `domain::joint`), a computation is a loop nest
+//! over free variables `f ∈ Z^n` plus, per operand, an affine map
+//! `f ↦ access_i(f) ∈ Q(A_i)`. This is the polyhedral "access function" the
+//! paper borrows (§2.3).
+
+/// An affine map `Z^n_free → Z^rank`: `x = M·f + c`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AffineAccess {
+    /// `rank × n_free` coefficient rows.
+    pub coef: Vec<Vec<i64>>,
+    /// Constant term per output dimension.
+    pub cons: Vec<i64>,
+}
+
+impl AffineAccess {
+    pub fn new(coef: Vec<Vec<i64>>, cons: Vec<i64>) -> AffineAccess {
+        assert_eq!(coef.len(), cons.len());
+        AffineAccess { coef, cons }
+    }
+
+    /// Identity on a subset of loop vars: output dim `r` reads loop var
+    /// `vars[r]`.
+    pub fn select(n_free: usize, vars: &[usize]) -> AffineAccess {
+        let coef = vars
+            .iter()
+            .map(|&v| {
+                let mut row = vec![0i64; n_free];
+                row[v] = 1;
+                row
+            })
+            .collect();
+        AffineAccess {
+            coef,
+            cons: vec![0; vars.len()],
+        }
+    }
+
+    /// Constant access (e.g. the scalar output `A_0`).
+    pub fn constant(n_free: usize, point: &[i64]) -> AffineAccess {
+        AffineAccess {
+            coef: vec![vec![0; n_free]; point.len()],
+            cons: point.to_vec(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.cons.len()
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.coef.first().map_or(0, |r| r.len())
+    }
+
+    /// `access(f)`.
+    pub fn apply(&self, f: &[i64]) -> Vec<i64> {
+        self.coef
+            .iter()
+            .zip(&self.cons)
+            .map(|(row, &c)| c + row.iter().zip(f).map(|(&a, &x)| a * x).sum::<i64>())
+            .collect()
+    }
+
+    /// Apply into a preallocated buffer (hot path of the miss model).
+    pub fn apply_into(&self, f: &[i64], out: &mut [i64]) {
+        for (o, (row, &c)) in out.iter_mut().zip(self.coef.iter().zip(&self.cons)) {
+            *o = c + row.iter().zip(f).map(|(&a, &x)| a * x).sum::<i64>();
+        }
+    }
+
+    /// The composed linear weights of `φ ∘ access` on the loop variables:
+    /// if `φ(x) = Σ w_r x_r + o` then
+    /// `φ(access(f)) = Σ_j (Σ_r w_r M_{r,j}) f_j + (o + Σ w_r c_r)`.
+    ///
+    /// These composed weights are what generate the *iteration-space*
+    /// conflict lattice `Λ(A_i)` directly (§2.4).
+    pub fn compose_weights(&self, phi_weights: &[i64], phi_offset: i64) -> (Vec<i64>, i64) {
+        assert_eq!(phi_weights.len(), self.rank());
+        let n = self.n_free();
+        let mut w = vec![0i64; n];
+        for j in 0..n {
+            for r in 0..self.rank() {
+                w[j] += phi_weights[r] * self.coef[r][j];
+            }
+        }
+        let o = phi_offset
+            + phi_weights
+                .iter()
+                .zip(&self.cons)
+                .map(|(&wr, &cr)| wr * cr)
+                .sum::<i64>();
+        (w, o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_and_apply() {
+        // matmul B[i,k]: free = (i, j, k) → select [0, 2]
+        let a = AffineAccess::select(3, &[0, 2]);
+        assert_eq!(a.apply(&[4, 5, 6]), vec![4, 6]);
+    }
+
+    #[test]
+    fn constant_access() {
+        let a = AffineAccess::constant(2, &[0]);
+        assert_eq!(a.apply(&[9, 9]), vec![0]);
+    }
+
+    #[test]
+    fn convolution_access() {
+        // C_{m-1-k}: coef -1 on k, const m-1 (m = 10)
+        let a = AffineAccess::new(vec![vec![-1]], vec![9]);
+        assert_eq!(a.apply(&[0]), vec![9]);
+        assert_eq!(a.apply(&[9]), vec![0]);
+    }
+
+    #[test]
+    fn compose_weights_matches_pointwise() {
+        // φ(x) = x1 + 8 x2 + 3; access f=(i,j,k) → (i, k)
+        let a = AffineAccess::select(3, &[0, 2]);
+        let (w, o) = a.compose_weights(&[1, 8], 3);
+        for f in [[0i64, 0, 0], [1, 2, 3], [5, 0, 7]] {
+            let x = a.apply(&f);
+            let direct = x[0] + 8 * x[1] + 3;
+            let composed = o + w.iter().zip(&f).map(|(&wi, &fi)| wi * fi).sum::<i64>();
+            assert_eq!(direct, composed);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! The paper's product-space view: joint index sets and affine constraint
+//! sets `H` — Definition 2 and Table 1.
+//!
+//! `Q(A_1,…,A_k) = Q(A_1) × ⋯ × Q(A_k)` intersected with an affine
+//! subspace `H` given by integer equality constraints. This module exists
+//! to state the paper's formalism *literally* and to verify (by exhaustive
+//! test) that the loop-space [`Kernel`](super::kernel::Kernel) view
+//! enumerates exactly the same set — so everything downstream can use the
+//! cheaper loop-space form.
+
+use super::kernel::Kernel;
+use super::order::IterOrder;
+
+/// One affine equality over the joint coordinates: `Σ a_i x_i = b`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Constraint {
+    pub coef: Vec<i64>,
+    pub rhs: i64,
+}
+
+impl Constraint {
+    /// `x[i] = x[j]`.
+    pub fn equal(n: usize, i: usize, j: usize) -> Constraint {
+        let mut coef = vec![0; n];
+        coef[i] = 1;
+        coef[j] = -1;
+        Constraint { coef, rhs: 0 }
+    }
+
+    /// `x[i] = c`.
+    pub fn fixed(n: usize, i: usize, c: i64) -> Constraint {
+        let mut coef = vec![0; n];
+        coef[i] = 1;
+        Constraint { coef, rhs: c }
+    }
+
+    pub fn satisfied(&self, x: &[i64]) -> bool {
+        self.coef.iter().zip(x).map(|(&a, &v)| a * v).sum::<i64>() == self.rhs
+    }
+}
+
+/// A joint iteration domain: per-operand index-set extents (concatenated)
+/// plus the constraint set `H`.
+#[derive(Clone, Debug)]
+pub struct JointDomain {
+    /// Extents of the concatenated coordinates, operand by operand.
+    pub extents: Vec<i64>,
+    /// Start offset of each operand's coordinate block.
+    pub block_starts: Vec<usize>,
+    pub constraints: Vec<Constraint>,
+}
+
+impl JointDomain {
+    /// The projection `π_i` — slice out operand `i`'s block.
+    pub fn project<'a>(&self, i: usize, x: &'a [i64]) -> &'a [i64] {
+        let s = self.block_starts[i];
+        let e = self
+            .block_starts
+            .get(i + 1)
+            .copied()
+            .unwrap_or(self.extents.len());
+        &x[s..e]
+    }
+
+    pub fn contains(&self, x: &[i64]) -> bool {
+        x.len() == self.extents.len()
+            && x.iter().zip(&self.extents).all(|(&v, &m)| v >= 0 && v < m)
+            && self.constraints.iter().all(|c| c.satisfied(x))
+    }
+
+    /// Exhaustively enumerate `Q ∩ H` (small domains only — tests).
+    pub fn enumerate(&self) -> Vec<Vec<i64>> {
+        let mut out = Vec::new();
+        IterOrder::lex(self.extents.len()).scan(&self.extents, |p| {
+            if self.constraints.iter().all(|c| c.satisfied(p)) {
+                out.push(p.to_vec());
+            }
+        });
+        out
+    }
+
+    /// Build the joint domain corresponding to a [`Kernel`]: coordinates
+    /// are the concatenated operand indices; `H` is derived from the access
+    /// functions by eliminating the free variables (valid for the Table-1
+    /// ops whose accesses jointly determine `f`).
+    ///
+    /// Construction: for each pair of (operand dim, operand dim) reading
+    /// the same single free variable with coefficient ±1, emit an equality;
+    /// for constant accesses emit fixed constraints; for compound rows
+    /// (Kronecker) emit the linear relation between blocks.
+    pub fn of_kernel(kernel: &Kernel) -> JointDomain {
+        let mut extents = Vec::new();
+        let mut block_starts = Vec::new();
+        for op in kernel.operands() {
+            block_starts.push(extents.len());
+            extents.extend_from_slice(op.table.dims());
+        }
+        let n = extents.len();
+
+        // Collect, per output coordinate, its affine row over free vars.
+        struct Row {
+            joint_idx: usize,
+            coef: Vec<i64>,
+            cons: i64,
+        }
+        let mut rows: Vec<Row> = Vec::new();
+        {
+            let mut ji = 0usize;
+            for op in kernel.operands() {
+                for r in 0..op.access.rank() {
+                    rows.push(Row {
+                        joint_idx: ji,
+                        coef: op.access.coef[r].clone(),
+                        cons: op.access.cons[r],
+                    });
+                    ji += 1;
+                }
+            }
+        }
+
+        let mut constraints = Vec::new();
+        // Constant rows: x = c.
+        for row in &rows {
+            if row.coef.iter().all(|&a| a == 0) {
+                constraints.push(Constraint::fixed(n, row.joint_idx, row.cons));
+            }
+        }
+        // For every free variable, find a "pivot" row that reads exactly
+        // that variable with coefficient 1 and constant 0 (all Table-1 ops
+        // have one); then express every other row mentioning the variable
+        // against the pivot.
+        let n_free = kernel.n_free();
+        for v in 0..n_free {
+            let pivot = rows.iter().find(|r| {
+                r.cons == 0
+                    && r.coef[v] == 1
+                    && r.coef.iter().enumerate().all(|(j, &a)| j == v || a == 0)
+            });
+            let Some(p) = pivot else { continue };
+            for r in &rows {
+                if std::ptr::eq(r, p) || r.coef[v] == 0 {
+                    continue;
+                }
+                // x_r = Σ_w a_w f_w + c. Substitute every f_w by its pivot
+                // coordinate (requires each w to have a pivot — true for
+                // Table-1). Emit only once: when v is the smallest var in r.
+                if (0..v).any(|w| r.coef[w] != 0) {
+                    continue;
+                }
+                let mut coef = vec![0i64; n];
+                coef[r.joint_idx] = 1;
+                let mut ok = true;
+                for (w, &a) in r.coef.iter().enumerate() {
+                    if a == 0 {
+                        continue;
+                    }
+                    let pw = rows.iter().find(|rr| {
+                        rr.cons == 0
+                            && rr.coef[w] == 1
+                            && rr.coef.iter().enumerate().all(|(j, &b)| j == w || b == 0)
+                    });
+                    match pw {
+                        Some(pw) if pw.joint_idx != r.joint_idx => {
+                            coef[pw.joint_idx] -= a;
+                        }
+                        _ => ok = false,
+                    }
+                }
+                if ok {
+                    constraints.push(Constraint {
+                        coef,
+                        rhs: r.cons,
+                    });
+                }
+            }
+        }
+
+        JointDomain {
+            extents,
+            block_starts,
+            constraints,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+
+    /// The loop-space enumeration mapped through the access functions must
+    /// coincide with `Q ∩ H` — the paper's two formulations agree.
+    fn check_equivalence(kernel: &Kernel) {
+        let jd = JointDomain::of_kernel(kernel);
+        let mut from_loops: Vec<Vec<i64>> = Vec::new();
+        IterOrder::lex(kernel.n_free()).scan(kernel.extents(), |f| {
+            let mut joint = Vec::new();
+            for op in kernel.operands() {
+                joint.extend(op.access.apply(f));
+            }
+            from_loops.push(joint);
+        });
+        let mut from_joint = jd.enumerate();
+        from_loops.sort();
+        from_loops.dedup();
+        from_joint.sort();
+        assert_eq!(from_loops, from_joint, "kernel {}", kernel.name());
+    }
+
+    #[test]
+    fn scalar_product_h_matches() {
+        // H = {i_1 = 0, i_2 = i_3} — Table 1 row 1
+        check_equivalence(&ops::scalar_product(6, 8, 0));
+    }
+
+    #[test]
+    fn convolution_h_matches() {
+        // H = {i_1 = 0, i_2 = m−1−i_3} — Table 1 row 2
+        check_equivalence(&ops::convolution(7, 8, 0));
+    }
+
+    #[test]
+    fn matmul_h_matches() {
+        // H = {a_row = b_row, a_col = c_col, b_col = c_row} — Table 1 row 3
+        check_equivalence(&ops::matmul(3, 4, 2, 8, 0));
+    }
+
+    #[test]
+    fn kronecker_h_matches() {
+        // H = {a_1 = m1C·b_1 + c_1, a_2 = m2C·b_2 + c_2} — Table 1 row 4
+        check_equivalence(&ops::kronecker(2, 2, 3, 2, 8, 0));
+    }
+
+    #[test]
+    fn matmul_constraint_count() {
+        let jd = JointDomain::of_kernel(&ops::matmul(3, 4, 2, 8, 0));
+        // joint space: A(2) + B(2) + C(2) = 6 coords; H has rank 3
+        // (i, j, k each linking two coordinate blocks)
+        assert_eq!(jd.extents.len(), 6);
+        assert!(jd.constraints.len() >= 3);
+        // the point (A=(1,0), B=(1,1), C=(1,0)) satisfies H
+        assert!(jd.contains(&[1, 0, 1, 1, 1, 0]));
+        // A row ≠ B row violates H
+        assert!(!jd.contains(&[0, 0, 1, 1, 1, 0]));
+    }
+
+    #[test]
+    fn projections() {
+        let jd = JointDomain::of_kernel(&ops::matmul(3, 4, 2, 8, 0));
+        let x = [1i64, 0, 1, 1, 1, 0];
+        assert_eq!(jd.project(0, &x), &[1, 0]);
+        assert_eq!(jd.project(1, &x), &[1, 1]);
+        assert_eq!(jd.project(2, &x), &[1, 0]);
+    }
+}

@@ -1,0 +1,123 @@
+//! A computation kernel: free loop variables + operands + access functions.
+//!
+//! This is the loop-space view of the paper's joint iteration domain
+//! `Q(A_1,…,A_k) ∩ H` (see [`crate::domain::joint`] for the product-space
+//! view and the proof-by-test that they coincide).
+
+use super::access::AffineAccess;
+use crate::index::Table;
+
+/// Role of an operand in the computation (read/write matters for write
+/// policies; the miss model treats both as cache touches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpRole {
+    Read,
+    Write,
+    ReadWrite,
+}
+
+/// One operand slot of a kernel.
+#[derive(Clone, Debug)]
+pub struct Operand {
+    pub table: Table,
+    pub access: AffineAccess,
+    pub role: OpRole,
+}
+
+/// A kernel = loop extents + operands with affine accesses.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    name: String,
+    /// Extents of the free loop variables (iteration domain is the box
+    /// `[0, extents_i)` — all Table-1 ops have box-shaped free domains).
+    extents: Vec<i64>,
+    operands: Vec<Operand>,
+}
+
+impl Kernel {
+    pub fn new(name: &str, extents: Vec<i64>, operands: Vec<Operand>) -> Kernel {
+        for op in &operands {
+            assert_eq!(op.access.n_free(), extents.len(), "access arity mismatch");
+            assert_eq!(op.access.rank(), op.table.rank(), "access rank mismatch");
+        }
+        Kernel {
+            name: name.to_string(),
+            extents,
+            operands,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn extents(&self) -> &[i64] {
+        &self.extents
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.extents.len()
+    }
+
+    pub fn operands(&self) -> &[Operand] {
+        &self.operands
+    }
+
+    pub fn operand(&self, i: usize) -> &Operand {
+        &self.operands[i]
+    }
+
+    /// Total points in the free iteration domain.
+    pub fn domain_size(&self) -> i64 {
+        self.extents.iter().product()
+    }
+
+    /// Byte addresses touched by one loop point, in operand order.
+    pub fn addrs_at(&self, f: &[i64]) -> Vec<usize> {
+        self.operands
+            .iter()
+            .map(|op| {
+                let x = op.access.apply(f);
+                op.table.addr(&x)
+            })
+            .collect()
+    }
+
+    /// Verify all accesses stay inside their tables over the whole domain
+    /// (exhaustive — test/validation use only).
+    pub fn validate_bounds(&self) -> anyhow::Result<()> {
+        let order = super::order::IterOrder::lex(self.n_free());
+        let mut ok = true;
+        order.scan(&self.extents, |f| {
+            for op in &self.operands {
+                let x = op.access.apply(f);
+                if !op.table.map().in_bounds(&x) {
+                    ok = false;
+                }
+            }
+        });
+        anyhow::ensure!(ok, "kernel {} has out-of-bounds accesses", self.name);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::domain::ops;
+
+    #[test]
+    fn matmul_kernel_shape() {
+        let k = ops::matmul(4, 5, 6, 8, 0);
+        assert_eq!(k.extents(), &[4, 6, 5]); // (i, j, k)
+        assert_eq!(k.operands().len(), 3);
+        k.validate_bounds().unwrap();
+    }
+
+    #[test]
+    fn matmul_addrs() {
+        let k = ops::matmul(2, 3, 2, 8, 0);
+        // f = (i=1, j=0, kk=2): A[1,2], B[2,0], C[1,0]
+        let addrs = k.addrs_at(&[1, 0, 2]);
+        assert_eq!(addrs.len(), 3);
+    }
+}

@@ -1,0 +1,22 @@
+//! Iteration domains, operands, orderings, reuse — §2.1–§2.2 (DESIGN.md S4).
+//!
+//! Two equivalent formulations of a computation:
+//! * the paper's product-space view — [`joint::JointDomain`] = joint index
+//!   set `Q(A_1,…,A_k)` ∩ affine constraint set `H` (Definition 2, Table 1);
+//! * the loop-space view — [`kernel::Kernel`] = free loop variables plus
+//!   per-operand affine access functions (`π_i` restricted to `H`).
+//!
+//! `joint::tests` proves them equivalent on every Table-1 op; everything
+//! downstream (conflict analysis, tiling, codegen) uses the loop-space view.
+
+pub mod access;
+pub mod joint;
+pub mod kernel;
+pub mod ops;
+pub mod order;
+pub mod reuse;
+
+pub use access::AffineAccess;
+pub use joint::{Constraint, JointDomain};
+pub use kernel::{Kernel, OpRole, Operand};
+pub use order::IterOrder;

@@ -1,0 +1,240 @@
+//! The operations of the paper's Table 1: scalar product, convolution,
+//! matrix multiplication, Kronecker product — each as a [`Kernel`] with
+//! affine access functions, and (in [`crate::domain::joint`]) as a joint
+//! iteration domain with the table's constraint set `H`.
+
+use super::access::AffineAccess;
+use super::kernel::{Kernel, OpRole, Operand};
+use crate::index::{IndexMap, Layout, Table};
+
+/// Scalar product `A_0 = Σ_k B_k C_k` (Table 1, row 1).
+///
+/// Free variable: `k ∈ [0, n)`. Constraint set `{i_1 = 0, i_2 = i_3}`.
+pub fn scalar_product(n: i64, elem: usize, base: usize) -> Kernel {
+    let a = Table::new("A", &[1], Layout::ColumnMajor, elem, base);
+    let b = Table::new(
+        "B",
+        &[n],
+        Layout::ColumnMajor,
+        elem,
+        base + elem,
+    );
+    let c = Table::new(
+        "C",
+        &[n],
+        Layout::ColumnMajor,
+        elem,
+        base + elem * (1 + n as usize),
+    );
+    Kernel::new(
+        "scalar_product",
+        vec![n],
+        vec![
+            Operand {
+                table: a,
+                access: AffineAccess::constant(1, &[0]),
+                role: OpRole::ReadWrite,
+            },
+            Operand {
+                table: b,
+                access: AffineAccess::select(1, &[0]),
+                role: OpRole::Read,
+            },
+            Operand {
+                table: c,
+                access: AffineAccess::select(1, &[0]),
+                role: OpRole::Read,
+            },
+        ],
+    )
+}
+
+/// Convolution `A_0 = Σ_k B_k C_{m^C − k − 1}` (Table 1, row 2).
+///
+/// Constraint set `{i_1 = 0, i_2 = m_1^C − i_3}` (with the paper's
+/// off-by-one made explicit: the reversed index is `m^C − 1 − k`).
+pub fn convolution(n: i64, elem: usize, base: usize) -> Kernel {
+    let a = Table::new("A", &[1], Layout::ColumnMajor, elem, base);
+    let b = Table::new("B", &[n], Layout::ColumnMajor, elem, base + elem);
+    let c = Table::new(
+        "C",
+        &[n],
+        Layout::ColumnMajor,
+        elem,
+        base + elem * (1 + n as usize),
+    );
+    Kernel::new(
+        "convolution",
+        vec![n],
+        vec![
+            Operand {
+                table: a,
+                access: AffineAccess::constant(1, &[0]),
+                role: OpRole::ReadWrite,
+            },
+            Operand {
+                table: b,
+                access: AffineAccess::select(1, &[0]),
+                role: OpRole::Read,
+            },
+            Operand {
+                table: c,
+                // C_{n-1-k}
+                access: AffineAccess::new(vec![vec![-1]], vec![n - 1]),
+                role: OpRole::Read,
+            },
+        ],
+    )
+}
+
+/// Matrix multiplication `A_{i,j} = Σ_k B_{i,k} C_{k,j}` (Table 1, row 3):
+/// `B` is `m×k`, `C` is `k×n`, `A` is `m×n`. Column-major, packed
+/// `A | B | C` starting at `base`. Free variables `(i, j, kk)`.
+pub fn matmul(m: i64, k: i64, n: i64, elem: usize, base: usize) -> Kernel {
+    matmul_padded(m, k, n, m, m, k, elem, base)
+}
+
+/// Matmul with padded leading dimensions (`lda`, `ldb`, `ldc` in BLAS
+/// terms, all column-major): padding the leading dimension is the paper's
+/// classic lever for detuning/retuning the conflict lattice.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_padded(
+    m: i64,
+    k: i64,
+    n: i64,
+    lda: i64, // physical rows of A (≥ m)
+    ldb: i64, // physical rows of B (≥ m)
+    ldc: i64, // physical rows of C (≥ k)
+    elem: usize,
+    base: usize,
+) -> Kernel {
+    assert!(lda >= m && ldb >= m && ldc >= k);
+    let a_map = IndexMap::padded(&[m, n], &[lda, n], Layout::ColumnMajor);
+    let b_map = IndexMap::padded(&[m, k], &[ldb, k], Layout::ColumnMajor);
+    let c_map = IndexMap::padded(&[k, n], &[ldc, n], Layout::ColumnMajor);
+    let a_bytes = (lda * n) as usize * elem;
+    let b_bytes = (ldb * k) as usize * elem;
+    let a = Table::with_map("A", a_map, elem, base);
+    let b = Table::with_map("B", b_map, elem, base + a_bytes);
+    let c = Table::with_map("C", c_map, elem, base + a_bytes + b_bytes);
+    Kernel::new(
+        "matmul",
+        vec![m, n, k],
+        vec![
+            Operand {
+                table: a,
+                access: AffineAccess::select(3, &[0, 1]), // A[i,j]
+                role: OpRole::ReadWrite,
+            },
+            Operand {
+                table: b,
+                access: AffineAccess::select(3, &[0, 2]), // B[i,kk]
+                role: OpRole::Read,
+            },
+            Operand {
+                table: c,
+                access: AffineAccess::select(3, &[2, 1]), // C[kk,j]
+                role: OpRole::Read,
+            },
+        ],
+    )
+}
+
+/// Kronecker product
+/// `A_{m_1^C·i + k, m_2^C·j + l} = B_{i,j} · C_{k,l}` (Table 1, row 4).
+/// Free variables `(i, j, k, l)`; `B` is `m1B×m2B`, `C` is `m1C×m2C`,
+/// `A` is `(m1B·m1C)×(m2B·m2C)`.
+pub fn kronecker(m1b: i64, m2b: i64, m1c: i64, m2c: i64, elem: usize, base: usize) -> Kernel {
+    let a_dims = [m1b * m1c, m2b * m2c];
+    let a = Table::new("A", &a_dims, Layout::ColumnMajor, elem, base);
+    let a_bytes = (a_dims[0] * a_dims[1]) as usize * elem;
+    let b = Table::new("B", &[m1b, m2b], Layout::ColumnMajor, elem, base + a_bytes);
+    let b_bytes = (m1b * m2b) as usize * elem;
+    let c = Table::new(
+        "C",
+        &[m1c, m2c],
+        Layout::ColumnMajor,
+        elem,
+        base + a_bytes + b_bytes,
+    );
+    Kernel::new(
+        "kronecker",
+        vec![m1b, m2b, m1c, m2c],
+        vec![
+            Operand {
+                table: a,
+                // A[m1c*i + k, m2c*j + l]
+                access: AffineAccess::new(
+                    vec![vec![m1c, 0, 1, 0], vec![0, m2c, 0, 1]],
+                    vec![0, 0],
+                ),
+                role: OpRole::Write,
+            },
+            Operand {
+                table: b,
+                access: AffineAccess::select(4, &[0, 1]),
+                role: OpRole::Read,
+            },
+            Operand {
+                table: c,
+                access: AffineAccess::select(4, &[2, 3]),
+                role: OpRole::Read,
+            },
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::order::IterOrder;
+
+    #[test]
+    fn all_table1_ops_in_bounds() {
+        scalar_product(17, 8, 0).validate_bounds().unwrap();
+        convolution(17, 8, 64).validate_bounds().unwrap();
+        matmul(5, 6, 7, 8, 0).validate_bounds().unwrap();
+        matmul_padded(5, 6, 7, 9, 8, 11, 8, 128)
+            .validate_bounds()
+            .unwrap();
+        kronecker(3, 4, 5, 2, 8, 0).validate_bounds().unwrap();
+    }
+
+    #[test]
+    fn kronecker_covers_output_exactly_once() {
+        let k = kronecker(2, 3, 4, 5, 8, 0);
+        let out = &k.operands()[0];
+        let mut seen = std::collections::HashSet::new();
+        IterOrder::lex(4).scan(k.extents(), |f| {
+            let x = out.access.apply(f);
+            assert!(seen.insert(x), "output index written twice");
+        });
+        assert_eq!(seen.len() as i64, 2 * 3 * 4 * 5);
+    }
+
+    #[test]
+    fn convolution_reverses() {
+        let k = convolution(10, 8, 0);
+        let c = &k.operands()[2];
+        assert_eq!(c.access.apply(&[0]), vec![9]);
+        assert_eq!(c.access.apply(&[9]), vec![0]);
+    }
+
+    #[test]
+    fn matmul_operands_disjoint_in_memory() {
+        let k = matmul(8, 8, 8, 8, 0);
+        let spans: Vec<(usize, usize)> = k
+            .operands()
+            .iter()
+            .map(|o| (o.table.base(), o.table.base() + o.table.bytes()))
+            .collect();
+        for i in 0..spans.len() {
+            for j in i + 1..spans.len() {
+                assert!(
+                    spans[i].1 <= spans[j].0 || spans[j].1 <= spans[i].0,
+                    "operands {i} and {j} overlap"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Iteration orderings `≺` — Definitions 4–6.
+//!
+//! A total order on the loop space. We implement the permuted-lexicographic
+//! family (all `d!` loop interchanges) which, combined with tiling
+//! (`tiling::schedule`), spans the schedules the paper's framework emits.
+
+/// Anything that can traverse the integer box `[0, extents_i)` in a
+/// well-defined total order: plain loop nests ([`IterOrder`]) and tiled
+/// schedules ([`crate::tiling::TiledSchedule`]). The miss model and the
+/// executors are generic over this, so the same Eq.(1)/(4) machinery
+/// scores untiled and tiled codes (§3.3).
+pub trait Scanner {
+    fn scan_points(&self, extents: &[i64], f: &mut dyn FnMut(&[i64]));
+}
+
+impl Scanner for IterOrder {
+    fn scan_points(&self, extents: &[i64], f: &mut dyn FnMut(&[i64])) {
+        self.scan(extents, f);
+    }
+}
+
+/// Permuted lexicographic order: compare loop points by the variables in
+/// `perm[0]` (outermost / most significant) first.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IterOrder {
+    perm: Vec<usize>,
+}
+
+impl IterOrder {
+    pub fn lex(n: usize) -> IterOrder {
+        IterOrder {
+            perm: (0..n).collect(),
+        }
+    }
+
+    /// `perm[0]` is the outermost loop.
+    pub fn permuted(perm: &[usize]) -> IterOrder {
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(p < perm.len() && !seen[p], "invalid permutation");
+            seen[p] = true;
+        }
+        IterOrder {
+            perm: perm.to_vec(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn perm(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// Strict comparison `a ≺ b`.
+    pub fn before(&self, a: &[i64], b: &[i64]) -> bool {
+        for &v in &self.perm {
+            match a[v].cmp(&b[v]) {
+                std::cmp::Ordering::Less => return true,
+                std::cmp::Ordering::Greater => return false,
+                std::cmp::Ordering::Equal => {}
+            }
+        }
+        false
+    }
+
+    /// Enumerate the box `[0, extents_i)` in this order, calling `f` on
+    /// each point. The workhorse of the exact miss model — a hand-rolled
+    /// odometer to avoid per-point allocation.
+    pub fn scan<F: FnMut(&[i64])>(&self, extents: &[i64], mut f: F) {
+        assert_eq!(extents.len(), self.perm.len());
+        if extents.iter().any(|&e| e <= 0) {
+            return;
+        }
+        let n = extents.len();
+        let mut p = vec![0i64; n];
+        loop {
+            f(&p);
+            // increment innermost-first (reverse of perm)
+            let mut lvl = n;
+            loop {
+                if lvl == 0 {
+                    return;
+                }
+                lvl -= 1;
+                let v = self.perm[lvl];
+                p[v] += 1;
+                if p[v] < extents[v] {
+                    break;
+                }
+                p[v] = 0;
+            }
+        }
+    }
+
+    /// All `n!` permutations of `n` loops (the paper's small search space
+    /// of orderings).
+    pub fn all(n: usize) -> Vec<IterOrder> {
+        let mut out = Vec::new();
+        let mut perm: Vec<usize> = (0..n).collect();
+        permute(&mut perm, 0, &mut out);
+        out
+    }
+}
+
+fn permute(perm: &mut Vec<usize>, k: usize, out: &mut Vec<IterOrder>) {
+    if k == perm.len() {
+        out.push(IterOrder::permuted(perm));
+        return;
+    }
+    for i in k..perm.len() {
+        perm.swap(k, i);
+        permute(perm, k + 1, out);
+        perm.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lex_scan_order() {
+        let o = IterOrder::lex(2);
+        let mut pts = Vec::new();
+        o.scan(&[2, 3], |p| pts.push(p.to_vec()));
+        assert_eq!(
+            pts,
+            vec![
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 0],
+                vec![1, 1],
+                vec![1, 2]
+            ]
+        );
+        // consistency with before()
+        for w in pts.windows(2) {
+            assert!(o.before(&w[0], &w[1]));
+            assert!(!o.before(&w[1], &w[0]));
+        }
+    }
+
+    #[test]
+    fn permuted_scan_order() {
+        // j outermost
+        let o = IterOrder::permuted(&[1, 0]);
+        let mut pts = Vec::new();
+        o.scan(&[2, 2], |p| pts.push(p.to_vec()));
+        assert_eq!(
+            pts,
+            vec![vec![0, 0], vec![1, 0], vec![0, 1], vec![1, 1]]
+        );
+    }
+
+    #[test]
+    fn all_permutations_count() {
+        assert_eq!(IterOrder::all(3).len(), 6);
+        assert_eq!(IterOrder::all(4).len(), 24);
+        // all distinct
+        let set: std::collections::HashSet<Vec<usize>> =
+            IterOrder::all(3).iter().map(|o| o.perm.clone()).collect();
+        assert_eq!(set.len(), 6);
+    }
+
+    #[test]
+    fn empty_extent_scans_nothing() {
+        let o = IterOrder::lex(2);
+        let mut n = 0;
+        o.scan(&[0, 5], |_| n += 1);
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn before_is_total_order() {
+        let o = IterOrder::permuted(&[2, 0, 1]);
+        let a = [1i64, 2, 3];
+        let b = [2i64, 1, 3];
+        // compare by var2 (eq), then var0: a < b
+        assert!(o.before(&a, &b));
+        assert!(!o.before(&b, &a));
+        assert!(!o.before(&a, &a));
+    }
+}

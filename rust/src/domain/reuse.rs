@@ -1,0 +1,100 @@
+//! Reuse domains — Definition 3.
+//!
+//! `R_i(q) = {x ∈ D : π_i(x) = q}`: every iteration touching a fixed data
+//! element `q` of operand `A_i`. The paper replaces the classical 1-D
+//! "reuse vector" with this set because high-dimensional domains reuse a
+//! datum along a whole affine subspace (e.g. matmul reuses `B[i,k]` for
+//! every `j`).
+
+use super::kernel::Kernel;
+use super::order::IterOrder;
+
+/// Enumerate the reuse domain of element `q` of operand `op_idx`
+/// (exhaustive scan — test/model use; the production miss model tracks
+/// reuse incrementally instead).
+pub fn reuse_domain(kernel: &Kernel, op_idx: usize, q: &[i64]) -> Vec<Vec<i64>> {
+    let op = kernel.operand(op_idx);
+    let mut out = Vec::new();
+    IterOrder::lex(kernel.n_free()).scan(kernel.extents(), |f| {
+        if op.access.apply(f) == q {
+            out.push(f.to_vec());
+        }
+    });
+    out
+}
+
+/// The *subsequent reuse* of a point (Definition 5): the ≺-least point of
+/// the same reuse domain strictly after `x`, if any.
+pub fn subsequent_reuse(
+    kernel: &Kernel,
+    op_idx: usize,
+    order: &IterOrder,
+    x: &[i64],
+) -> Option<Vec<i64>> {
+    let q = kernel.operand(op_idx).access.apply(x);
+    reuse_domain(kernel, op_idx, &q)
+        .into_iter()
+        .filter(|y| order.before(x, y))
+        .min_by(|a, b| {
+            if order.before(a, b) {
+                std::cmp::Ordering::Less
+            } else if order.before(b, a) {
+                std::cmp::Ordering::Greater
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+
+    #[test]
+    fn matmul_b_reuse_is_j_fiber() {
+        // B[i,kk] is reused for every j: |R| = n
+        let k = ops::matmul(3, 4, 5, 8, 0);
+        let r = reuse_domain(&k, 1, &[1, 2]);
+        assert_eq!(r.len(), 5);
+        for f in &r {
+            assert_eq!(f[0], 1); // i fixed
+            assert_eq!(f[2], 2); // kk fixed
+        }
+    }
+
+    #[test]
+    fn matmul_a_reuse_is_k_fiber() {
+        let k = ops::matmul(3, 4, 5, 8, 0);
+        let r = reuse_domain(&k, 0, &[0, 0]);
+        assert_eq!(r.len(), 4); // one per kk
+    }
+
+    #[test]
+    fn scalar_output_reused_everywhere() {
+        let k = ops::scalar_product(9, 8, 0);
+        let r = reuse_domain(&k, 0, &[0]);
+        assert_eq!(r.len(), 9);
+    }
+
+    #[test]
+    fn subsequent_reuse_lex() {
+        let k = ops::matmul(2, 3, 2, 8, 0);
+        let order = IterOrder::lex(3);
+        // A[0,0] touched at (0,0,kk) for kk in 0..3; from (0,0,0) next is
+        // (0,0,1)
+        let next = subsequent_reuse(&k, 0, &order, &[0, 0, 0]).unwrap();
+        assert_eq!(next, vec![0, 0, 1]);
+        // from the last one, none
+        assert!(subsequent_reuse(&k, 0, &order, &[0, 0, 2]).is_none());
+    }
+
+    #[test]
+    fn subsequent_reuse_respects_order() {
+        let k = ops::matmul(2, 2, 2, 8, 0);
+        // with j outermost, B[i,kk]'s reuses are adjacent in j
+        let order = IterOrder::permuted(&[1, 0, 2]);
+        let next = subsequent_reuse(&k, 1, &order, &[0, 0, 0]).unwrap();
+        assert_eq!(next, vec![0, 1, 0]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Figure 6 / E8: automatic threading — our tiled parallel execution vs
+//! the graphite-analog.
+//!
+//! The paper's generated OpenMP code scaled to 20 threads while
+//! gcc-graphite saturated around 4. The mechanism we reproduce: scaling is
+//! bounded by the number of independent outer-tile work units. Graphite's
+//! fixed 64³ tiles give only `n/64` parallel column bands; the
+//! model-driven plan uses finer `j` bands (the lattice tile constrains
+//! `(i,k)`, leaving `j` free to split), so it keeps scaling.
+
+use std::time::Duration;
+
+use crate::codegen::executor::MatmulBuffers;
+use crate::codegen::run_parallel;
+use crate::domain::ops;
+use crate::lattice::IMat;
+use crate::tiling::{TileBasis, TiledSchedule};
+
+use super::harness::time_reps;
+
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub threads: usize,
+    pub ours: Duration,
+    pub graphite: Duration,
+    /// Measured wallclock speedups (≈1 on a single-core host — see
+    /// DESIGN.md §3: this testbed has 1 core; the mechanism is captured
+    /// by the modeled speedups below).
+    pub ours_speedup: f64,
+    pub graphite_speedup: f64,
+    /// Load-balance speedup bound: total points / max per-thread points
+    /// under round-robin band assignment. Exact structural parallelism of
+    /// each plan — what a multicore host realizes (up to memory limits).
+    pub ours_modeled: f64,
+    pub graphite_modeled: f64,
+}
+
+/// Our parallel plan: lattice-shaped (i,k) tile + fine j bands (16).
+fn ours_schedule(n: i64) -> TiledSchedule {
+    // modest skewed (i,k) tile, j decoupled for clean bands
+    let basis = TileBasis::from_cols(IMat::from_rows(&[
+        &[32, 0, 8],
+        &[0, 16, 0],
+        &[-8, 0, 16],
+    ]));
+    let _ = n;
+    TiledSchedule::new(basis)
+}
+
+/// Graphite-analog: fixed 64³ rectangular tiles → only n/64 j-bands.
+fn graphite_schedule(n: i64) -> TiledSchedule {
+    let t = 64i64.min(n);
+    TiledSchedule::new(TileBasis::rect(&[t, t, t]))
+}
+
+/// Points of work per j-band of a schedule.
+fn band_loads(n: i64, s: &TiledSchedule) -> Vec<u64> {
+    let kernel = ops::matmul(n, n, n, 8, 0);
+    let mut loads: std::collections::BTreeMap<i128, u64> = std::collections::BTreeMap::new();
+    let basis = s.basis();
+    s.scan_feet(kernel.extents(), |foot| {
+        let c = basis.tile_point_count(foot, kernel.extents());
+        *loads.entry(foot[1]).or_default() += c as u64;
+    });
+    loads.into_values().collect()
+}
+
+/// Load-balance speedup bound for `threads` workers over the given bands
+/// (round-robin assignment, matching `run_parallel`).
+fn modeled_speedup(bands: &[u64], threads: usize) -> f64 {
+    let total: u64 = bands.iter().sum();
+    let mut per = vec![0u64; threads];
+    // round-robin over bands in order (the work queue hands them out
+    // dynamically; for equal bands this matches)
+    let mut sorted: Vec<u64> = bands.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    for w in sorted {
+        let idx = per
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap();
+        per[idx] += w;
+    }
+    total as f64 / *per.iter().max().unwrap() as f64
+}
+
+pub fn run(n: i64, threads_list: &[usize], reps: usize) -> Vec<Fig6Row> {
+    let kernel = ops::matmul(n, n, n, 8, 0);
+    let ours = ours_schedule(n);
+    let graphite = graphite_schedule(n);
+    let ours_bands = band_loads(n, &ours);
+    let graphite_bands = band_loads(n, &graphite);
+
+    let mut base_ours = Duration::ZERO;
+    let mut base_graphite = Duration::ZERO;
+    let mut rows = Vec::new();
+    for &t in threads_list {
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let (w_ours, _) = time_reps(reps, || {
+            bufs.reset_output();
+            run_parallel(&mut bufs, &kernel, &ours, t, 1);
+        });
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let (w_graphite, _) = time_reps(reps, || {
+            bufs.reset_output();
+            run_parallel(&mut bufs, &kernel, &graphite, t, 1);
+        });
+        if t == threads_list[0] {
+            base_ours = w_ours;
+            base_graphite = w_graphite;
+        }
+        rows.push(Fig6Row {
+            threads: t,
+            ours: w_ours,
+            graphite: w_graphite,
+            ours_speedup: base_ours.as_secs_f64() / w_ours.as_secs_f64(),
+            graphite_speedup: base_graphite.as_secs_f64() / w_graphite.as_secs_f64(),
+            ours_modeled: modeled_speedup(&ours_bands, t),
+            graphite_modeled: modeled_speedup(&graphite_bands, t),
+        });
+    }
+    rows
+}
+
+/// Structural scaling bound: number of independent j-bands each plan has.
+pub fn parallel_grain(n: i64) -> (usize, usize) {
+    let kernel = ops::matmul(n, n, n, 8, 0);
+    let count_bands = |s: &TiledSchedule| {
+        let mut set = std::collections::HashSet::new();
+        s.scan_feet(kernel.extents(), |foot| {
+            set.insert(foot[1]);
+        });
+        set.len()
+    };
+    (count_bands(&ours_schedule(n)), count_bands(&graphite_schedule(n)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::max_abs_diff;
+
+    #[test]
+    fn parallel_results_correct_both_plans() {
+        let n = 64i64;
+        let kernel = ops::matmul(n, n, n, 8, 0);
+        for sched in [ours_schedule(n), graphite_schedule(n)] {
+            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let want = bufs.reference();
+            run_parallel(&mut bufs, &kernel, &sched, 4, 1);
+            assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn modeled_speedup_shows_fig6_divergence() {
+        // the Figure 6 mechanism as numbers: at 16 threads the
+        // graphite-analog is capped by its 4 bands; ours keeps scaling.
+        let ours = band_loads(256, &ours_schedule(256));
+        let graphite = band_loads(256, &graphite_schedule(256));
+        assert!(modeled_speedup(&graphite, 16) <= 4.01);
+        assert!(modeled_speedup(&ours, 16) > 10.0);
+        // monotone in threads
+        assert!(modeled_speedup(&ours, 8) >= modeled_speedup(&ours, 4));
+    }
+
+    #[test]
+    fn ours_has_finer_parallel_grain() {
+        // n=256: graphite gets 4 bands (256/64); ours gets 16 (256/16) —
+        // the structural reason Figure 6's curves diverge.
+        let (ours, graphite) = parallel_grain(256);
+        assert_eq!(graphite, 4);
+        assert!(ours >= 16);
+    }
+}

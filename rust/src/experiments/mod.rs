@@ -1,0 +1,12 @@
+//! Experiment reproductions — one module per paper table/figure
+//! (DESIGN.md §2 per-experiment index). Shared by the `benches/` harness
+//! binaries and the `latticetile bench` CLI.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod harness;
+pub mod model_cost;
+pub mod multilevel;
+pub mod policy;

@@ -1,0 +1,85 @@
+//! §4.0.4 / E9: analysis-cost comparison.
+//!
+//! Full evaluation of Eq. (4) is as expensive as running the code; the
+//! paper's remedies are (a) class sampling and (b) the `K−1` closed-form
+//! constructor whose cost is dominated by lattice basis reduction and is
+//! independent of the problem size. We measure all three.
+
+use std::time::Duration;
+
+use crate::cache::CacheSpec;
+use crate::conflict::MissModel;
+use crate::domain::{ops, IterOrder};
+use crate::tiling;
+
+use super::harness::time_reps;
+
+#[derive(Clone, Debug)]
+pub struct ModelCostRow {
+    pub n: i64,
+    /// Exact Eq.(4) evaluation (stack-distance semantics).
+    pub exact: Duration,
+    /// Paper-literal Δ-rule evaluation.
+    pub exact_paper: Duration,
+    /// Sampled evaluation (8 classes).
+    pub sampled: Duration,
+    /// `K−1` closed-form construction (LLL + embed), no evaluation.
+    pub k_minus_one: Duration,
+}
+
+pub fn run(sizes: &[i64], reps: usize) -> Vec<ModelCostRow> {
+    let spec = CacheSpec::HASWELL_L1D;
+    sizes
+        .iter()
+        .map(|&n| {
+            let kernel = ops::matmul(n, n, n, 8, 0);
+            let model = MissModel::new(&kernel, &spec);
+            let order = IterOrder::lex(3);
+            let classes: Vec<i64> = (0..model.analysis().n_classes)
+                .step_by((model.analysis().n_classes as usize / 8).max(1))
+                .collect();
+            let (exact, _) = time_reps(reps, || {
+                std::hint::black_box(model.exact(&order));
+            });
+            let (exact_paper, _) = time_reps(reps, || {
+                std::hint::black_box(model.exact_paper(&order));
+            });
+            let (sampled, _) = time_reps(reps, || {
+                std::hint::black_box(model.sampled(&order, &classes));
+            });
+            let (k_minus_one, _) = time_reps(reps, || {
+                std::hint::black_box(tiling::k_minus_one_plan(&kernel, &spec, 1));
+            });
+            ModelCostRow {
+                n,
+                exact,
+                exact_paper,
+                sampled,
+                k_minus_one,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_minus_one_cost_is_size_independent() {
+        let rows = run(&[16, 32], 1);
+        // closed-form constructor should not blow up with n while exact
+        // evaluation grows ~n³; allow generous slack for timing noise.
+        let grow_exact = rows[1].exact.as_secs_f64() / rows[0].exact.as_secs_f64().max(1e-9);
+        let grow_k1 =
+            rows[1].k_minus_one.as_secs_f64() / rows[0].k_minus_one.as_secs_f64().max(1e-9);
+        assert!(
+            grow_exact > 2.0,
+            "exact cost should grow with n (got {grow_exact:.1}x)"
+        );
+        assert!(
+            grow_k1 < grow_exact,
+            "K−1 constructor should scale better than exact evaluation"
+        );
+    }
+}

@@ -1,0 +1,245 @@
+//! Affine index maps `φ : Q(A) → a(A)` — Definition 1.
+//!
+//! A bijection from the `d`-dimensional table index set onto the linear
+//! array. We support the affine family `φ(x) = Σ w_r x_r + offset`, which
+//! covers column-major, row-major, and padded layouts; the weights also
+//! feed directly into the conflict-lattice construction
+//! (`Lattice::from_congruence`).
+
+/// Memory layout convention for constructing standard maps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// `φ_c(i_1,…,i_d) = i_1 + m_1(i_2 + m_2(…))` — first index fastest.
+    ColumnMajor,
+    /// `φ_r(i_1,…,i_d) = i_d + m_d(i_{d−1} + …)` — last index fastest.
+    RowMajor,
+}
+
+/// An affine index map with explicit per-dimension weights (strides, in
+/// elements) and an affine offset (the linearized base address of the
+/// table, `φ(q_A)` in the paper's terms).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct IndexMap {
+    /// Logical dims `(m_1, …, m_d)` of the table.
+    dims: Vec<i64>,
+    /// Strides `w_r` in elements: `φ(x) = Σ w_r x_r + offset`.
+    weights: Vec<i64>,
+    /// Affine offset in elements.
+    offset: i64,
+}
+
+impl IndexMap {
+    /// Standard dense layout (no padding).
+    pub fn dense(dims: &[i64], layout: Layout) -> IndexMap {
+        Self::padded(dims, dims, layout)
+    }
+
+    /// Layout with padded physical dims (`padded[r] ≥ dims[r]`): pad rows /
+    /// leading dimensions the way `lda` does in BLAS. Padding is one of the
+    /// paper's levers for reshaping the conflict lattice.
+    pub fn padded(dims: &[i64], padded: &[i64], layout: Layout) -> IndexMap {
+        assert_eq!(dims.len(), padded.len());
+        assert!(!dims.is_empty());
+        assert!(
+            dims.iter().zip(padded).all(|(&m, &p)| m >= 1 && p >= m),
+            "padded dims must dominate logical dims"
+        );
+        let d = dims.len();
+        let mut weights = vec![0i64; d];
+        match layout {
+            Layout::ColumnMajor => {
+                let mut w = 1i64;
+                for r in 0..d {
+                    weights[r] = w;
+                    w = w.checked_mul(padded[r]).expect("table too large");
+                }
+            }
+            Layout::RowMajor => {
+                let mut w = 1i64;
+                for r in (0..d).rev() {
+                    weights[r] = w;
+                    w = w.checked_mul(padded[r]).expect("table too large");
+                }
+            }
+        }
+        IndexMap {
+            dims: dims.to_vec(),
+            weights,
+            offset: 0,
+        }
+    }
+
+    /// Arbitrary affine map (caller asserts bijectivity on the index set).
+    pub fn from_weights(dims: &[i64], weights: &[i64], offset: i64) -> IndexMap {
+        assert_eq!(dims.len(), weights.len());
+        IndexMap {
+            dims: dims.to_vec(),
+            weights: weights.to_vec(),
+            offset,
+        }
+    }
+
+    /// Shift the affine offset (elements): models the table's base address,
+    /// i.e. the paper's translate `q_A` of the conflict lattice.
+    pub fn with_offset(mut self, offset: i64) -> IndexMap {
+        self.offset = offset;
+        self
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn weights(&self) -> &[i64] {
+        &self.weights
+    }
+
+    pub fn offset(&self) -> i64 {
+        self.offset
+    }
+
+    /// Apply: `φ(x)` in elements. Panics (debug) if out of the index set.
+    pub fn apply(&self, x: &[i64]) -> i64 {
+        debug_assert_eq!(x.len(), self.dims.len());
+        debug_assert!(
+            self.in_bounds(x),
+            "index {x:?} out of table bounds {:?}",
+            self.dims
+        );
+        self.offset
+            + x.iter()
+                .zip(&self.weights)
+                .map(|(&xi, &wi)| xi * wi)
+                .sum::<i64>()
+    }
+
+    /// Apply without the bounds debug-check (tile-boundary math may
+    /// legitimately evaluate φ outside Q(A)).
+    pub fn apply_unchecked(&self, x: &[i64]) -> i64 {
+        self.offset
+            + x.iter()
+                .zip(&self.weights)
+                .map(|(&xi, &wi)| xi * wi)
+                .sum::<i64>()
+    }
+
+    pub fn in_bounds(&self, x: &[i64]) -> bool {
+        x.iter().zip(&self.dims).all(|(&xi, &m)| xi >= 0 && xi < m)
+    }
+
+    /// Inverse `φ⁻¹(e)` via successive div/mod — valid for maps built by
+    /// [`IndexMap::dense`]/[`IndexMap::padded`]. Returns `None` if `e` does
+    /// not correspond to a point of the (unpadded) index set.
+    pub fn invert(&self, e: i64) -> Option<Vec<i64>> {
+        let mut rem = e - self.offset;
+        if rem < 0 {
+            return None;
+        }
+        // sort dims by descending weight, peel off with div/mod
+        let d = self.dims.len();
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by_key(|&r| std::cmp::Reverse(self.weights[r]));
+        let mut x = vec![0i64; d];
+        for &r in &order {
+            let w = self.weights[r];
+            assert!(w > 0, "invert requires positive weights");
+            x[r] = rem / w;
+            rem -= x[r] * w;
+        }
+        if rem == 0 && self.in_bounds(&x) {
+            Some(x)
+        } else {
+            None
+        }
+    }
+
+    /// Number of elements in the (logical) index set.
+    pub fn size(&self) -> i64 {
+        self.dims.iter().product()
+    }
+
+    /// The weights as `i128` for lattice construction.
+    pub fn weights_i128(&self) -> Vec<i128> {
+        self.weights.iter().map(|&w| w as i128).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_major_matches_paper_formula() {
+        // φ_c(i1,i2,i3) = i1 + m1*(i2 + m2*i3)
+        let m = IndexMap::dense(&[3, 4, 5], Layout::ColumnMajor);
+        for i1 in 0..3 {
+            for i2 in 0..4 {
+                for i3 in 0..5 {
+                    assert_eq!(m.apply(&[i1, i2, i3]), i1 + 3 * (i2 + 4 * i3));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_major_matches_paper_formula() {
+        let m = IndexMap::dense(&[3, 4, 5], Layout::RowMajor);
+        for i1 in 0..3 {
+            for i2 in 0..4 {
+                for i3 in 0..5 {
+                    assert_eq!(m.apply(&[i1, i2, i3]), i3 + 5 * (i2 + 4 * i1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bijective_on_index_set() {
+        for layout in [Layout::ColumnMajor, Layout::RowMajor] {
+            let m = IndexMap::dense(&[4, 6], layout);
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..4 {
+                for j in 0..6 {
+                    assert!(seen.insert(m.apply(&[i, j])));
+                }
+            }
+            assert_eq!(seen.len(), 24);
+            assert_eq!(*seen.iter().min().unwrap(), 0);
+            assert_eq!(*seen.iter().max().unwrap(), 23);
+        }
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let m = IndexMap::dense(&[7, 5, 3], Layout::ColumnMajor);
+        for e in 0..m.size() {
+            let x = m.invert(e).expect("in range");
+            assert_eq!(m.apply(&x), e);
+        }
+        assert_eq!(m.invert(m.size()), None);
+        assert_eq!(m.invert(-1), None);
+    }
+
+    #[test]
+    fn padded_layout_gaps() {
+        // logical 3x3 inside physical 5x3 (column-major, lda=5)
+        let m = IndexMap::padded(&[3, 3], &[5, 3], Layout::ColumnMajor);
+        assert_eq!(m.apply(&[0, 1]), 5);
+        assert_eq!(m.apply(&[2, 2]), 12);
+        // linear index 3 (padding row) is not the image of any point
+        assert_eq!(m.invert(3), None);
+        assert_eq!(m.invert(5), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn offset_translates() {
+        let m = IndexMap::dense(&[4, 4], Layout::ColumnMajor).with_offset(100);
+        assert_eq!(m.apply(&[0, 0]), 100);
+        assert_eq!(m.invert(100), Some(vec![0, 0]));
+        assert_eq!(m.invert(99), None);
+    }
+}

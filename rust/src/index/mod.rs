@@ -1,0 +1,7 @@
+//! Tables and affine index maps `φ` — §2.1.1 of the paper (DESIGN.md S3).
+
+pub mod map;
+pub mod table;
+
+pub use map::{IndexMap, Layout};
+pub use table::Table;

@@ -1,0 +1,121 @@
+//! Tables (`(m_1,…,m_d)`-tables in the paper's vocabulary): a named,
+//! shaped operand bound to an index map and a byte base address.
+
+use super::map::{IndexMap, Layout};
+
+/// One operand array: logical shape + layout + element size + base address.
+///
+/// The byte base address matters: the paper's conflict lattices are
+/// *translated* by the base point `q_A` (§2.1.1), which is determined by
+/// where the array starts relative to the cache's set period.
+#[derive(Clone, Debug)]
+pub struct Table {
+    name: String,
+    map: IndexMap,
+    /// Element size in bytes (e.g. 8 for f64).
+    elem: usize,
+    /// Base address in bytes of element `(0,…,0)`.
+    base: usize,
+}
+
+impl Table {
+    pub fn new(name: &str, dims: &[i64], layout: Layout, elem: usize, base: usize) -> Table {
+        Table {
+            name: name.to_string(),
+            map: IndexMap::dense(dims, layout),
+            elem,
+            base,
+        }
+    }
+
+    pub fn with_map(name: &str, map: IndexMap, elem: usize, base: usize) -> Table {
+        Table {
+            name: name.to_string(),
+            map,
+            elem,
+            base,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn map(&self) -> &IndexMap {
+        &self.map
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        self.map.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.map.rank()
+    }
+
+    pub fn elem(&self) -> usize {
+        self.elem
+    }
+
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Byte address of the element at table index `x`.
+    pub fn addr(&self, x: &[i64]) -> usize {
+        let e = self.map.apply(x);
+        debug_assert!(e >= 0);
+        self.base + (e as usize) * self.elem
+    }
+
+    /// Byte address without bounds checking.
+    pub fn addr_unchecked(&self, x: &[i64]) -> usize {
+        let e = self.map.apply_unchecked(x);
+        (self.base as i64 + e * self.elem as i64) as usize
+    }
+
+    /// Total bytes spanned by the (possibly padded) table: the linear span
+    /// `Σ w_r (m_r − 1) + 1` elements for a monotone affine map.
+    pub fn bytes(&self) -> usize {
+        let span: i64 = self
+            .map
+            .weights()
+            .iter()
+            .zip(self.map.dims())
+            .map(|(&w, &m)| w.abs() * (m - 1))
+            .sum::<i64>()
+            + 1;
+        (span as usize) * self.elem
+    }
+
+    /// The table's *base point* `q_A` relative to a cache with a set period
+    /// of `period_elems` elements: the lattice translate `φ(q_A) mod period`
+    /// (§2.1.1). Returned as the element-offset residue.
+    pub fn base_residue_elems(&self, period_elems: i64) -> i64 {
+        let base_elems = (self.base / self.elem) as i64 + self.map.offset();
+        base_elems.rem_euclid(period_elems)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addresses() {
+        let t = Table::new("A", &[8, 5], Layout::ColumnMajor, 8, 0x1000);
+        assert_eq!(t.addr(&[0, 0]), 0x1000);
+        assert_eq!(t.addr(&[1, 0]), 0x1008);
+        assert_eq!(t.addr(&[0, 1]), 0x1000 + 8 * 8);
+        assert_eq!(t.bytes(), 8 * 5 * 8);
+    }
+
+    #[test]
+    fn base_residue() {
+        // period of 64 elements; base at element 100 → residue 36
+        let t = Table::new("A", &[4, 4], Layout::ColumnMajor, 8, 100 * 8);
+        assert_eq!(t.base_residue_elems(64), 36);
+        let t0 = Table::new("A", &[4, 4], Layout::ColumnMajor, 8, 0);
+        assert_eq!(t0.base_residue_elems(64), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! LLL lattice basis reduction with exact rational arithmetic.
+//!
+//! The paper's tile-selection heuristic (§4.0.4) starts from a *reduced*
+//! basis of the operand's conflict lattice `L(C, φ)` — short, nearly
+//! orthogonal basis vectors make compact, well-shaped parallelepiped tiles.
+//! The paper used NTL's LLL; we implement the classic Lenstra–Lenstra–Lovász
+//! algorithm with δ = 3/4 over exact rationals (`Rat`), which is plenty fast
+//! for the d ≤ 4 lattices arising from array index maps.
+
+use super::mat::IMat;
+use super::rational::Rat;
+
+/// LLL parameter δ; 3/4 is the textbook choice.
+const DELTA: (i128, i128) = (3, 4);
+
+/// Gram–Schmidt orthogonalization over rationals.
+///
+/// Returns `(mu, b_star_norm2)` where `mu[i][j]` (j < i) are the GS
+/// coefficients and `b_star_norm2[i] = ‖b*_i‖²` as exact rationals.
+fn gram_schmidt(basis: &[Vec<i128>]) -> (Vec<Vec<Rat>>, Vec<Rat>) {
+    let n = basis.len();
+    let dim = basis[0].len();
+    // b*_i stored as rational vectors
+    let mut bstar: Vec<Vec<Rat>> = Vec::with_capacity(n);
+    let mut mu = vec![vec![Rat::ZERO; n]; n];
+    let mut norm2 = vec![Rat::ZERO; n];
+    for i in 0..n {
+        let mut v: Vec<Rat> = basis[i].iter().map(|&x| Rat::int(x)).collect();
+        for j in 0..i {
+            // mu_ij = <b_i, b*_j> / ||b*_j||^2
+            let mut dot = Rat::ZERO;
+            for k in 0..dim {
+                dot = dot + Rat::int(basis[i][k]) * bstar[j][k];
+            }
+            let m = if norm2[j].is_zero() { Rat::ZERO } else { dot / norm2[j] };
+            mu[i][j] = m;
+            for k in 0..dim {
+                v[k] = v[k] - m * bstar[j][k];
+            }
+        }
+        let mut n2 = Rat::ZERO;
+        for k in 0..dim {
+            n2 = n2 + v[k] * v[k];
+        }
+        norm2[i] = n2;
+        bstar.push(v);
+    }
+    (mu, norm2)
+}
+
+/// LLL-reduce the columns of `basis_mat` (columns = basis vectors).
+/// Returns a new matrix with the same column lattice, LLL-reduced.
+///
+/// Panics if the columns are linearly dependent.
+pub fn lll_reduce(basis_mat: &IMat) -> IMat {
+    let n = basis_mat.cols();
+    let mut b: Vec<Vec<i128>> = (0..n).map(|j| basis_mat.col(j)).collect();
+    assert!(n > 0);
+
+    let delta = Rat::new(DELTA.0, DELTA.1);
+    let (mut mu, mut norm2) = gram_schmidt(&b);
+    for v in &norm2 {
+        assert!(!v.is_zero(), "LLL input basis is linearly dependent");
+    }
+
+    let mut k = 1usize;
+    let mut guard = 0usize;
+    while k < n {
+        guard += 1;
+        assert!(guard < 100_000, "LLL failed to converge");
+        // size-reduce b_k against b_{k-1} ... b_0
+        for j in (0..k).rev() {
+            let r = mu[k][j].round();
+            if r != 0 {
+                for t in 0..b[k].len() {
+                    b[k][t] -= r * b[j][t];
+                }
+                let (m2, n2) = gram_schmidt(&b);
+                mu = m2;
+                norm2 = n2;
+            }
+        }
+        // Lovász condition
+        let lhs = norm2[k];
+        let rhs = (delta - mu[k][k - 1] * mu[k][k - 1]) * norm2[k - 1];
+        if lhs >= rhs {
+            k += 1;
+        } else {
+            b.swap(k, k - 1);
+            let (m2, n2) = gram_schmidt(&b);
+            mu = m2;
+            norm2 = n2;
+            k = k.max(2) - 1;
+        }
+    }
+    IMat::from_cols(&b)
+}
+
+/// Squared Euclidean norm of an integer vector.
+pub fn norm2(v: &[i128]) -> i128 {
+    v.iter().map(|&x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_same_lattice(a: &IMat, b: &IMat) -> bool {
+        // same det and mutual membership of columns
+        if a.det().abs() != b.det().abs() {
+            return false;
+        }
+        let la = crate::lattice::Lattice::from_basis(a.clone());
+        let lb = crate::lattice::Lattice::from_basis(b.clone());
+        (0..b.cols()).all(|j| la.contains(&b.col(j)))
+            && (0..a.cols()).all(|j| lb.contains(&a.col(j)))
+    }
+
+    #[test]
+    fn lll_identity_fixed() {
+        let i = IMat::identity(3);
+        let r = lll_reduce(&i);
+        assert_eq!(r.det().abs(), 1);
+    }
+
+    #[test]
+    fn lll_classic_example() {
+        // A standard textbook case: the reduced basis of [[1,1,1],[−1,0,2],[3,5,6]]
+        let b = IMat::from_cols(&[vec![1, 1, 1], vec![-1, 0, 2], vec![3, 5, 6]]);
+        let r = lll_reduce(&b);
+        assert!(is_same_lattice(&b, &r));
+        // all reduced vectors should be short
+        for j in 0..3 {
+            assert!(norm2(&r.col(j)) <= 9, "vector {j} too long: {:?}", r.col(j));
+        }
+    }
+
+    #[test]
+    fn lll_paper_fig3_lattice() {
+        // generator (5,61),(7,-17) — det 512. LLL should find short vectors.
+        let b = IMat::from_cols(&[vec![5, 61], vec![7, -17]]);
+        let r = lll_reduce(&b);
+        assert!(is_same_lattice(&b, &r));
+        assert_eq!(r.det().abs(), 512);
+        // shortest vector in this lattice has norm2 well under the original 5^2+61^2
+        assert!(norm2(&r.col(0)) < 5 * 5 + 61 * 61);
+    }
+
+    #[test]
+    fn lll_skewed_2d() {
+        // highly skewed basis of Z^2
+        let b = IMat::from_cols(&[vec![1, 0], vec![1000, 1]]);
+        let r = lll_reduce(&b);
+        assert!(is_same_lattice(&b, &r));
+        assert!(norm2(&r.col(0)) <= 2);
+        assert!(norm2(&r.col(1)) <= 2);
+    }
+
+    #[test]
+    fn lll_preserves_det() {
+        let b = IMat::from_cols(&[vec![12, 2], vec![13, 4]]);
+        let r = lll_reduce(&b);
+        assert_eq!(r.det().abs(), b.det().abs());
+    }
+}

@@ -1,0 +1,370 @@
+//! Dense exact integer matrices over `i128`.
+//!
+//! Column-oriented: lattice bases are stored as matrices whose **columns**
+//! are the basis vectors, matching the paper's `(p_1 ⋯ p_d)` notation in
+//! §3.2. Everything is exact; sizes are tiny (d ≤ 6) so O(d³) algorithms
+//! with arbitrary clarity win over cleverness.
+
+use super::rational::Rat;
+use std::fmt;
+
+/// A dense `rows × cols` integer matrix, row-major storage.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct IMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<i128>,
+}
+
+impl IMat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> IMat {
+        IMat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Identity.
+    pub fn identity(n: usize) -> IMat {
+        let mut m = IMat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    /// From row-major nested slices.
+    pub fn from_rows(rows: &[&[i128]]) -> IMat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut m = IMat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    /// Matrix whose columns are the given vectors.
+    pub fn from_cols(cols: &[Vec<i128>]) -> IMat {
+        let c = cols.len();
+        let r = if c == 0 { 0 } else { cols[0].len() };
+        let mut m = IMat::zeros(r, c);
+        for (j, col) in cols.iter().enumerate() {
+            assert_eq!(col.len(), r, "ragged cols");
+            for (i, &v) in col.iter().enumerate() {
+                m[(i, j)] = v;
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn col(&self, j: usize) -> Vec<i128> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn row(&self, i: usize) -> Vec<i128> {
+        (0..self.cols).map(|j| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[i128]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn swap_cols(&mut self, a: usize, b: usize) {
+        for i in 0..self.rows {
+            self.data.swap(i * self.cols + a, i * self.cols + b);
+        }
+    }
+
+    /// `col[a] += k * col[b]` — an elementary unimodular column operation.
+    pub fn add_col_mul(&mut self, a: usize, b: usize, k: i128) {
+        for i in 0..self.rows {
+            let add = k
+                .checked_mul(self[(i, b)])
+                .expect("add_col_mul overflow");
+            self[(i, a)] = self[(i, a)].checked_add(add).expect("add_col_mul overflow");
+        }
+    }
+
+    pub fn neg_col(&mut self, a: usize) {
+        for i in 0..self.rows {
+            self[(i, a)] = -self[(i, a)];
+        }
+    }
+
+    /// Matrix product.
+    pub fn mul(&self, o: &IMat) -> IMat {
+        assert_eq!(self.cols, o.rows, "dim mismatch in mul");
+        let mut out = IMat::zeros(self.rows, o.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..o.cols {
+                    out[(i, j)] = out[(i, j)]
+                        .checked_add(a.checked_mul(o[(k, j)]).expect("mul overflow"))
+                        .expect("mul overflow");
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn mul_vec(&self, v: &[i128]) -> Vec<i128> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                (0..self.cols)
+                    .map(|j| self[(i, j)] * v[j])
+                    .sum::<i128>()
+            })
+            .collect()
+    }
+
+    /// Exact determinant via Bareiss fraction-free elimination. Square only.
+    pub fn det(&self) -> i128 {
+        assert_eq!(self.rows, self.cols, "det of non-square matrix");
+        let n = self.rows;
+        if n == 0 {
+            return 1;
+        }
+        let mut m = self.data.clone();
+        let idx = |i: usize, j: usize| i * n + j;
+        let mut sign = 1i128;
+        let mut prev = 1i128;
+        for k in 0..n - 1 {
+            // pivot
+            if m[idx(k, k)] == 0 {
+                let Some(p) = (k + 1..n).find(|&i| m[idx(i, k)] != 0) else {
+                    return 0;
+                };
+                for j in 0..n {
+                    m.swap(idx(k, j), idx(p, j));
+                }
+                sign = -sign;
+            }
+            for i in k + 1..n {
+                for j in k + 1..n {
+                    let num = m[idx(i, j)]
+                        .checked_mul(m[idx(k, k)])
+                        .and_then(|a| {
+                            m[idx(i, k)]
+                                .checked_mul(m[idx(k, j)])
+                                .and_then(|b| a.checked_sub(b))
+                        })
+                        .expect("det overflow");
+                    m[idx(i, j)] = num / prev; // exact by Bareiss
+                }
+                m[idx(i, k)] = 0;
+            }
+            prev = m[idx(k, k)];
+        }
+        sign * m[idx(n - 1, n - 1)]
+    }
+
+    /// Exact inverse as a rational matrix. Panics if singular.
+    pub fn inverse(&self) -> RMat {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        // Gauss-Jordan over rationals.
+        let mut a: Vec<Rat> = self.data.iter().map(|&v| Rat::int(v)).collect();
+        let mut inv: Vec<Rat> = IMat::identity(n).data.iter().map(|&v| Rat::int(v)).collect();
+        let idx = |i: usize, j: usize| i * n + j;
+        for col in 0..n {
+            let piv = (col..n)
+                .find(|&i| !a[idx(i, col)].is_zero())
+                .expect("inverse of singular matrix");
+            if piv != col {
+                for j in 0..n {
+                    a.swap(idx(col, j), idx(piv, j));
+                    inv.swap(idx(col, j), idx(piv, j));
+                }
+            }
+            let p = a[idx(col, col)];
+            for j in 0..n {
+                a[idx(col, j)] = a[idx(col, j)] / p;
+                inv[idx(col, j)] = inv[idx(col, j)] / p;
+            }
+            for i in 0..n {
+                if i == col {
+                    continue;
+                }
+                let f = a[idx(i, col)];
+                if f.is_zero() {
+                    continue;
+                }
+                for j in 0..n {
+                    a[idx(i, j)] = a[idx(i, j)] - f * a[idx(col, j)];
+                    inv[idx(i, j)] = inv[idx(i, j)] - f * inv[idx(col, j)];
+                }
+            }
+        }
+        RMat {
+            rows: n,
+            cols: n,
+            data: inv,
+        }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> IMat {
+        let mut out = IMat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for IMat {
+    type Output = i128;
+    fn index(&self, (i, j): (usize, usize)) -> &i128 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for IMat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut i128 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for IMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "IMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            writeln!(f, "  {:?}", self.row(i))?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// A dense rational matrix — the inverse tile matrix `H` of §3.2 lives here.
+#[derive(Clone, PartialEq, Eq)]
+pub struct RMat {
+    rows: usize,
+    cols: usize,
+    data: Vec<Rat>,
+}
+
+impl RMat {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `H·x` for an integer vector `x` — exact.
+    pub fn mul_ivec(&self, v: &[i128]) -> Vec<Rat> {
+        assert_eq!(self.cols, v.len());
+        (0..self.rows)
+            .map(|i| {
+                (0..self.cols).fold(Rat::ZERO, |acc, j| {
+                    acc + self[(i, j)] * Rat::int(v[j])
+                })
+            })
+            .collect()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for RMat {
+    type Output = Rat;
+    fn index(&self, (i, j): (usize, usize)) -> &Rat {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for RMat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "RMat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows {
+            let row: Vec<String> = (0..self.cols).map(|j| format!("{}", self[(i, j)])).collect();
+            writeln!(f, "  [{}]", row.join(", "))?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_mul() {
+        let i3 = IMat::identity(3);
+        let m = IMat::from_rows(&[&[1, 2, 3], &[4, 5, 6], &[7, 8, 10]]);
+        assert_eq!(i3.mul(&m), m);
+        assert_eq!(m.mul(&i3), m);
+    }
+
+    #[test]
+    fn det_small() {
+        assert_eq!(IMat::identity(4).det(), 1);
+        let m = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(m.det(), -2);
+        let s = IMat::from_rows(&[&[1, 2, 3], &[4, 5, 6], &[7, 8, 9]]);
+        assert_eq!(s.det(), 0);
+        // the paper's Figure 3 lattice generator
+        let g = IMat::from_rows(&[&[5, 7], &[61, -17]]);
+        assert_eq!(g.det().abs(), 512);
+    }
+
+    #[test]
+    fn det_pivot_swap() {
+        let m = IMat::from_rows(&[&[0, 1], &[1, 0]]);
+        assert_eq!(m.det(), -1);
+        let m = IMat::from_rows(&[&[0, 2, 1], &[3, 0, 0], &[0, 0, 4]]);
+        assert_eq!(m.det(), -24);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let m = IMat::from_rows(&[&[5, 7], &[61, -17]]);
+        let inv = m.inverse();
+        // inv * m = I
+        for i in 0..2 {
+            for j in 0..2 {
+                let mut acc = Rat::ZERO;
+                for k in 0..2 {
+                    acc = acc + inv[(i, k)] * Rat::int(m[(k, j)]);
+                }
+                assert_eq!(acc, if i == j { Rat::ONE } else { Rat::ZERO });
+            }
+        }
+    }
+
+    #[test]
+    fn mul_vec_works() {
+        let m = IMat::from_rows(&[&[1, 2], &[3, 4]]);
+        assert_eq!(m.mul_vec(&[1, 1]), vec![3, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn inverse_singular_panics() {
+        IMat::from_rows(&[&[1, 2], &[2, 4]]).inverse();
+    }
+}

@@ -1,0 +1,284 @@
+//! Integer-lattice machinery — the paper's NTL substitute (DESIGN.md S2).
+//!
+//! The central object is [`Lattice`], a full-rank sublattice of `Z^d` given
+//! by a column basis. The associativity analysis of §2.3 produces such
+//! lattices as `L(C, φ) = {x ∈ Z^d : φ(x) ≡ 0 (mod N)}` for an affine index
+//! map `φ` and a cache with `N` sets; see [`Lattice::from_congruence`].
+
+pub mod hnf;
+pub mod lll;
+pub mod mat;
+pub mod rational;
+
+pub use hnf::{basis_from_generators, column_hnf, kernel_of_row};
+pub use lll::{lll_reduce, norm2};
+pub use mat::{IMat, RMat};
+pub use rational::{ext_gcd, gcd, lcm, Rat};
+
+/// A full-rank integer lattice `L ⊆ Z^d`, stored as a column basis together
+/// with its exact rational inverse (for membership tests and the tiling
+/// transform of §3.2).
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    basis: IMat,
+    inv: RMat,
+    det: i128,
+}
+
+impl Lattice {
+    /// Build from a (full-rank, square) column basis.
+    pub fn from_basis(basis: IMat) -> Lattice {
+        assert_eq!(basis.rows(), basis.cols(), "lattice basis must be square");
+        let det = basis.det();
+        assert!(det != 0, "lattice basis is singular");
+        let inv = basis.inverse();
+        Lattice { basis, inv, det }
+    }
+
+    /// Build from an arbitrary generating set (columns of `gens`); computes
+    /// the HNF basis. Panics if not full rank.
+    pub fn from_generators(gens: &IMat) -> Lattice {
+        Lattice::from_basis(basis_from_generators(gens, true))
+    }
+
+    /// The conflict lattice `L(C, φ)` of §2.3 for a linear index map
+    /// `φ(x) = Σ w_r x_r` and a cache with `n_sets` sets:
+    ///
+    /// `L = {x ∈ Z^d : w·x ≡ 0 (mod n_sets)}`.
+    ///
+    /// Constructed **without any lattice-point counting** (one of the
+    /// paper's selling points): `L` is the projection onto the `x`
+    /// coordinates of the kernel of the integer row `[w | n_sets]`, which we
+    /// get in closed form from an extended-gcd elimination.
+    pub fn from_congruence(weights: &[i128], n_sets: i128) -> Lattice {
+        assert!(n_sets > 0, "need a positive number of cache sets");
+        let d = weights.len();
+        assert!(d > 0);
+        // kernel of the row [w_1 ... w_d N] in Z^{d+1}
+        let mut row: Vec<i128> = weights.to_vec();
+        row.push(n_sets);
+        let k = kernel_of_row(&row); // (d+1) x d
+        // project to first d coordinates; (x, t) ↦ x is injective on the
+        // kernel because t = −(w·x)/N is determined.
+        let cols: Vec<Vec<i128>> = (0..k.cols()).map(|j| k.col(j)[..d].to_vec()).collect();
+        let gens = IMat::from_cols(&cols);
+        Lattice::from_generators(&gens)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.basis.rows()
+    }
+
+    /// Column basis `(p_1 ⋯ p_d)`.
+    pub fn basis(&self) -> &IMat {
+        &self.basis
+    }
+
+    /// Exact inverse basis — the `H` matrix of §3.2 when this lattice's
+    /// basis is used as the tile parallelepiped.
+    pub fn inverse_basis(&self) -> &RMat {
+        &self.inv
+    }
+
+    /// |det(basis)| — the volume of the fundamental parallelepiped, and the
+    /// index `[Z^d : L]`.
+    pub fn det_abs(&self) -> i128 {
+        self.det.abs()
+    }
+
+    /// Lattice membership: `v ∈ L` iff `B⁻¹ v` is integral.
+    pub fn contains(&self, v: &[i128]) -> bool {
+        self.inv.mul_ivec(v).iter().all(|c| c.is_integer())
+    }
+
+    /// The coordinates of `v` in the basis, if `v ∈ L`.
+    pub fn coordinates(&self, v: &[i128]) -> Option<Vec<i128>> {
+        let c = self.inv.mul_ivec(v);
+        if c.iter().all(|x| x.is_integer()) {
+            Some(c.iter().map(|x| x.floor()).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Reduce `v` into the half-open fundamental parallelepiped
+    /// `{B·t : 0 ≤ t < 1}`: returns `(footpoint, residue)` with
+    /// `v = B·footpoint + residue` — exactly the `r(x)` transform of §3.2.
+    pub fn reduce(&self, v: &[i128]) -> (Vec<i128>, Vec<i128>) {
+        let coords = self.inv.mul_ivec(v);
+        let foot: Vec<i128> = coords.iter().map(|c| c.floor()).collect();
+        let back = self.basis.mul_vec(&foot);
+        let residue: Vec<i128> = v.iter().zip(&back).map(|(a, b)| a - b).collect();
+        (foot, residue)
+    }
+
+    /// Return an LLL-reduced copy (same lattice, short basis).
+    pub fn lll(&self) -> Lattice {
+        Lattice::from_basis(lll_reduce(&self.basis))
+    }
+
+    /// A new lattice whose basis is this basis with column `j` scaled by
+    /// `k ≥ 1` — used to grow tiles to hold a chosen number of lattice
+    /// points (§4.0.4: tiles with `K−1` interior points).
+    pub fn scale_col(&self, j: usize, k: i128) -> Lattice {
+        assert!(k >= 1);
+        let mut b = self.basis.clone();
+        for i in 0..b.rows() {
+            b[(i, j)] *= k;
+        }
+        Lattice::from_basis(b)
+    }
+
+    /// Scale every basis column by `k`.
+    pub fn scale(&self, k: i128) -> Lattice {
+        assert!(k >= 1);
+        let mut b = self.basis.clone();
+        for i in 0..b.rows() {
+            for j in 0..b.cols() {
+                b[(i, j)] *= k;
+            }
+        }
+        Lattice::from_basis(b)
+    }
+
+    /// Enumerate all lattice points inside the axis-aligned half-open box
+    /// `[0, bounds_i)` — used only by tests and validation (the production
+    /// tiling path never counts points; that is the point of the paper).
+    pub fn points_in_box(&self, bounds: &[i128]) -> Vec<Vec<i128>> {
+        assert_eq!(bounds.len(), self.dim());
+        // Enumerate coefficient vectors within a conservative range derived
+        // from the inverse basis: for each basis coordinate t_j, the range of
+        // H·x over the box corners bounds t_j.
+        let d = self.dim();
+        let corners: Vec<Vec<i128>> = (0..(1usize << d))
+            .map(|mask| {
+                (0..d)
+                    .map(|i| if mask >> i & 1 == 1 { bounds[i] } else { 0 })
+                    .collect()
+            })
+            .collect();
+        let mut lo = vec![i128::MAX; d];
+        let mut hi = vec![i128::MIN; d];
+        for c in &corners {
+            let t = self.inv.mul_ivec(c);
+            for j in 0..d {
+                lo[j] = lo[j].min(t[j].floor());
+                hi[j] = hi[j].max(t[j].ceil());
+            }
+        }
+        let mut out = Vec::new();
+        let mut coeff = lo.clone();
+        'outer: loop {
+            let p = self.basis.mul_vec(&coeff);
+            if p.iter().zip(bounds).all(|(&x, &b)| x >= 0 && x < b) {
+                out.push(p);
+            }
+            // odometer increment
+            for j in 0..d {
+                coeff[j] += 1;
+                if coeff[j] <= hi[j] {
+                    continue 'outer;
+                }
+                coeff[j] = lo[j];
+            }
+            break;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn congruence_1d() {
+        // L = {x : 1·x ≡ 0 mod 8} = 8Z
+        let l = Lattice::from_congruence(&[1], 8);
+        assert_eq!(l.det_abs(), 8);
+        assert!(l.contains(&[16]));
+        assert!(!l.contains(&[12]));
+    }
+
+    #[test]
+    fn congruence_2d_column_major() {
+        // column-major m1 x m2 table: φ(i,j) = i + m1*j. m1 = 8, N = 4.
+        // L = {(i,j) : i + 8j ≡ 0 mod 4} = {(i,j) : i ≡ 0 mod 4}
+        let l = Lattice::from_congruence(&[1, 8], 4);
+        assert_eq!(l.det_abs(), 4);
+        assert!(l.contains(&[4, 0]));
+        assert!(l.contains(&[0, 1])); // 8 ≡ 0 mod 4
+        assert!(l.contains(&[4, 3]));
+        assert!(!l.contains(&[2, 0]));
+        assert!(!l.contains(&[1, 1]));
+    }
+
+    #[test]
+    fn congruence_det_is_index() {
+        // det = N / gcd(gcd(w), N)
+        for (w, n, want) in [
+            (vec![1i128, 100], 64i128, 64i128),
+            (vec![2, 100], 64, 32),
+            (vec![4, 8], 16, 4),
+            (vec![3, 5], 7, 7),
+        ] {
+            let l = Lattice::from_congruence(&w, n);
+            assert_eq!(l.det_abs(), want, "w={w:?} N={n}");
+        }
+    }
+
+    #[test]
+    fn congruence_membership_matches_definition() {
+        let w = vec![1i128, 17]; // 17-row column major
+        let n = 8;
+        let l = Lattice::from_congruence(&w, n);
+        for i in -10i128..10 {
+            for j in -10i128..10 {
+                let in_def = (w[0] * i + w[1] * j).rem_euclid(n) == 0;
+                assert_eq!(l.contains(&[i, j]), in_def, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_roundtrip() {
+        let l = Lattice::from_basis(IMat::from_cols(&[vec![5, 61], vec![7, -17]]));
+        for v in [[0i128, 0], [3, 4], [100, -55], [5, 61], [-7, 17]] {
+            let (foot, res) = l.reduce(&v);
+            let back = l.basis().mul_vec(&foot);
+            for k in 0..2 {
+                assert_eq!(back[k] + res[k], v[k]);
+            }
+            // residue is in the half-open fundamental region: 0 ≤ H·res < 1
+            let t = l.inverse_basis().mul_ivec(&res);
+            for c in t {
+                assert!(c >= Rat::ZERO && c < Rat::ONE, "residue outside tile");
+            }
+        }
+    }
+
+    #[test]
+    fn points_in_box_counts_match_volume() {
+        // For a large box, #lattice points ≈ volume / det.
+        let l = Lattice::from_congruence(&[1, 64], 64);
+        let pts = l.points_in_box(&[64, 64]);
+        assert_eq!(pts.len() as i128, 64 * 64 / l.det_abs());
+    }
+
+    #[test]
+    fn fig3_lattice_det_512() {
+        let l = Lattice::from_basis(IMat::from_cols(&[vec![5, 61], vec![7, -17]]));
+        assert_eq!(l.det_abs(), 512);
+        // fundamental region of volume 512 holds exactly one lattice point
+        // per 512 cells on average
+        let pts = l.points_in_box(&[512, 512]);
+        assert_eq!(pts.len() as i128, 512 * 512 / 512);
+    }
+
+    #[test]
+    fn scale_multiplies_det() {
+        let l = Lattice::from_congruence(&[1, 8], 4);
+        assert_eq!(l.scale(3).det_abs(), l.det_abs() * 9);
+        assert_eq!(l.scale_col(0, 3).det_abs(), l.det_abs() * 3);
+    }
+}

@@ -1,0 +1,280 @@
+//! Exact rational arithmetic over `i128`.
+//!
+//! The lattice machinery (Gram–Schmidt inside LLL, the inverse tile matrix
+//! `H = (p_1 ⋯ p_d)^{-1}` of §3.2) needs exact rationals: floating point
+//! would mis-classify boundary points of half-open tiles. Our lattices are
+//! low-dimensional (d ≤ 6) with entries bounded by table sizes, so `i128`
+//! numerators/denominators never overflow in practice; all operations are
+//! checked and panic loudly rather than wrap.
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Greatest common divisor (non-negative result, `gcd(0,0) = 0`).
+pub fn gcd(a: i128, b: i128) -> i128 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Extended Euclid: returns `(g, x, y)` with `a·x + b·y = g = gcd(a, b)`,
+/// `g ≥ 0`.
+pub fn ext_gcd(a: i128, b: i128) -> (i128, i128, i128) {
+    if b == 0 {
+        if a < 0 {
+            (-a, -1, 0)
+        } else {
+            (a, 1, 0)
+        }
+    } else {
+        let (g, x, y) = ext_gcd(b, a % b);
+        (g, y, x - (a / b) * y)
+    }
+}
+
+/// Least common multiple.
+pub fn lcm(a: i128, b: i128) -> i128 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).checked_mul(b).expect("lcm overflow").abs()
+}
+
+/// An exact rational number `num/den` with `den > 0` and `gcd(num,den) = 1`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Rat {
+    num: i128,
+    den: i128,
+}
+
+impl Rat {
+    pub const ZERO: Rat = Rat { num: 0, den: 1 };
+    pub const ONE: Rat = Rat { num: 1, den: 1 };
+
+    /// Construct and normalize. Panics on zero denominator.
+    pub fn new(num: i128, den: i128) -> Rat {
+        assert!(den != 0, "Rat with zero denominator");
+        let g = gcd(num, den);
+        let (mut num, mut den) = if g == 0 { (0, 1) } else { (num / g, den / g) };
+        if den < 0 {
+            num = -num;
+            den = -den;
+        }
+        Rat { num, den }
+    }
+
+    pub fn int(v: i128) -> Rat {
+        Rat { num: v, den: 1 }
+    }
+
+    pub fn num(&self) -> i128 {
+        self.num
+    }
+
+    pub fn den(&self) -> i128 {
+        self.den
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.num == 0
+    }
+
+    pub fn is_integer(&self) -> bool {
+        self.den == 1
+    }
+
+    /// Floor to the nearest integer below or equal (exact; this is the `⌊Hx⌋`
+    /// of the tiling transform `r`).
+    pub fn floor(&self) -> i128 {
+        self.num.div_euclid(self.den)
+    }
+
+    /// Ceiling.
+    pub fn ceil(&self) -> i128 {
+        -((-self.num).div_euclid(self.den))
+    }
+
+    /// Round to the nearest integer (ties toward +∞) — used by LLL
+    /// size-reduction.
+    pub fn round(&self) -> i128 {
+        // floor(x + 1/2)
+        (2 * self.num + self.den).div_euclid(2 * self.den)
+    }
+
+    pub fn abs(&self) -> Rat {
+        Rat {
+            num: self.num.abs(),
+            den: self.den,
+        }
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    fn check(num: i128, den: i128) -> Rat {
+        Rat::new(num, den)
+    }
+}
+
+impl Add for Rat {
+    type Output = Rat;
+    fn add(self, o: Rat) -> Rat {
+        Rat::check(
+            self.num
+                .checked_mul(o.den)
+                .and_then(|a| o.num.checked_mul(self.den).and_then(|b| a.checked_add(b)))
+                .expect("Rat add overflow"),
+            self.den.checked_mul(o.den).expect("Rat add overflow"),
+        )
+    }
+}
+
+impl Sub for Rat {
+    type Output = Rat;
+    fn sub(self, o: Rat) -> Rat {
+        self + (-o)
+    }
+}
+
+impl Mul for Rat {
+    type Output = Rat;
+    fn mul(self, o: Rat) -> Rat {
+        // cross-reduce first to keep magnitudes small
+        let g1 = gcd(self.num, o.den).max(1);
+        let g2 = gcd(o.num, self.den).max(1);
+        Rat::check(
+            (self.num / g1)
+                .checked_mul(o.num / g2)
+                .expect("Rat mul overflow"),
+            (self.den / g2)
+                .checked_mul(o.den / g1)
+                .expect("Rat mul overflow"),
+        )
+    }
+}
+
+impl Div for Rat {
+    type Output = Rat;
+    fn div(self, o: Rat) -> Rat {
+        assert!(!o.is_zero(), "Rat division by zero");
+        self * Rat::check(o.den, o.num)
+    }
+}
+
+impl Neg for Rat {
+    type Output = Rat;
+    fn neg(self) -> Rat {
+        Rat {
+            num: -self.num,
+            den: self.den,
+        }
+    }
+}
+
+impl PartialOrd for Rat {
+    fn partial_cmp(&self, o: &Rat) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Rat {
+    fn cmp(&self, o: &Rat) -> Ordering {
+        (self.num * o.den).cmp(&(o.num * self.den))
+    }
+}
+
+impl fmt::Debug for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.den == 1 {
+            write!(f, "{}", self.num)
+        } else {
+            write!(f, "{}/{}", self.num, self.den)
+        }
+    }
+}
+
+impl fmt::Display for Rat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl From<i128> for Rat {
+    fn from(v: i128) -> Rat {
+        Rat::int(v)
+    }
+}
+
+impl From<i64> for Rat {
+    fn from(v: i64) -> Rat {
+        Rat::int(v as i128)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(-12, 18), 6);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(gcd(0, 0), 0);
+        assert_eq!(gcd(7, 13), 1);
+    }
+
+    #[test]
+    fn ext_gcd_bezout() {
+        for (a, b) in [(12i128, 18), (-5, 3), (7, 0), (0, 7), (240, 46)] {
+            let (g, x, y) = ext_gcd(a, b);
+            assert_eq!(a * x + b * y, g, "bezout for ({a},{b})");
+            assert_eq!(g, gcd(a, b));
+        }
+    }
+
+    #[test]
+    fn rat_normalization() {
+        assert_eq!(Rat::new(2, 4), Rat::new(1, 2));
+        assert_eq!(Rat::new(-2, -4), Rat::new(1, 2));
+        assert_eq!(Rat::new(2, -4), Rat::new(-1, 2));
+        assert_eq!(Rat::new(0, 5), Rat::ZERO);
+    }
+
+    #[test]
+    fn rat_arith() {
+        let a = Rat::new(1, 2);
+        let b = Rat::new(1, 3);
+        assert_eq!(a + b, Rat::new(5, 6));
+        assert_eq!(a - b, Rat::new(1, 6));
+        assert_eq!(a * b, Rat::new(1, 6));
+        assert_eq!(a / b, Rat::new(3, 2));
+        assert_eq!(-a, Rat::new(-1, 2));
+    }
+
+    #[test]
+    fn rat_floor_ceil_round() {
+        assert_eq!(Rat::new(7, 2).floor(), 3);
+        assert_eq!(Rat::new(-7, 2).floor(), -4);
+        assert_eq!(Rat::new(7, 2).ceil(), 4);
+        assert_eq!(Rat::new(-7, 2).ceil(), -3);
+        assert_eq!(Rat::new(7, 2).round(), 4); // tie toward +inf
+        assert_eq!(Rat::new(-7, 2).round(), -3);
+        assert_eq!(Rat::new(5, 3).round(), 2);
+        assert_eq!(Rat::new(4, 3).round(), 1);
+        assert_eq!(Rat::int(5).floor(), 5);
+    }
+
+    #[test]
+    fn rat_order() {
+        assert!(Rat::new(1, 3) < Rat::new(1, 2));
+        assert!(Rat::new(-1, 2) < Rat::new(-1, 3));
+        assert!(Rat::int(2) > Rat::new(3, 2));
+    }
+}

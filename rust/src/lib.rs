@@ -1,0 +1,54 @@
+//! # latticetile
+//!
+//! A reproduction of *"Model-Driven Automatic Tiling with Cache Associativity
+//! Lattices"* (Adjiashvili, Haus, Tate; cs.PF 2015) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper's thesis: conflict misses due to associativity are the only
+//! fundamentally important cache-miss category; the set of potentially
+//! conflicting addresses of an operand under an affine index map forms an
+//! integer **lattice** `L(C, φ)`; and tiles shaped as fundamental
+//! parallelepipeds of that lattice (rather than rectangles) have constant
+//! per-tile miss counts and maximal volume.
+//!
+//! ## Crate layout (bottom-up)
+//!
+//! * [`lattice`] — exact integer-lattice machinery (HNF, LLL, determinants);
+//!   the paper used NTL.
+//! * [`cache`] — K-way set-associative cache simulator with LRU/PLRU
+//!   eviction; the paper measured a Haswell L1d.
+//! * [`index`] — affine index maps `φ` (§2.1.1) for `d`-dimensional tables.
+//! * [`domain`] — iteration domains, the Table-1 operations, reuse domains,
+//!   and iteration orderings (§2.1.2–§2.2).
+//! * [`conflict`] — potential-conflict lattices `L(C,φ)` (§2.3) and the
+//!   actual-cache-miss model, Eq. (1)/(4) (§2.4, §3.3).
+//! * [`tiling`] — tiling mechanics `P_D(H)`, `T_D(H)`, `r(x)` (§3.2) and
+//!   tile selection (the `K−1` lattice-point rule and model-driven search,
+//!   §4.0.4).
+//! * [`codegen`] — loop-nest schedule generation (the paper used CLooG) and
+//!   the instrumented tiled-matmul executor, including the parallel
+//!   (auto-threading) executor (§4.0.3).
+//! * [`baseline`] — compiler-analog scheduling strategies (gcc −O0/−O2/−O3,
+//!   graphite, icc, pgi) and the reference GEMM oracle.
+//! * [`runtime`] — PJRT artifact registry: loads the AOT-compiled JAX/Pallas
+//!   HLO-text artifacts and executes them from the Rust hot path.
+//! * [`coordinator`] — the L3 service: job queue, planner, batcher, metrics.
+//! * [`experiments`] — one module per paper table/figure (DESIGN.md §2),
+//!   shared by `benches/` and the CLI.
+//! * [`testutil`] — deterministic property-testing support.
+
+pub mod baseline;
+pub mod cache;
+pub mod codegen;
+pub mod conflict;
+pub mod coordinator;
+pub mod domain;
+pub mod experiments;
+pub mod index;
+pub mod lattice;
+pub mod runtime;
+pub mod testutil;
+pub mod tiling;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

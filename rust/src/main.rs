@@ -1,0 +1,515 @@
+//! `latticetile` — CLI for the associativity-lattice tiling framework.
+//!
+//! Subcommands:
+//!   analyze  — print conflict-lattice analysis for a matmul shape
+//!   plan     — run the §4.0.4 selector, print ranked tiling plans
+//!   run      — execute a matmul under the chosen plan, report misses+time
+//!   bench    — regenerate a paper figure (fig3|fig4|fig4-rect|fig5|fig6|
+//!              model-cost|policy)
+//!   serve    — start the batching coordinator and run a demo workload
+//!
+//! (clap is unavailable in this offline build; parsing is hand-rolled.)
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use latticetile::baseline::CompilerAnalog;
+use latticetile::cache::{CacheSim, CacheSpec, Policy};
+use latticetile::codegen::executor::{MatmulBuffers, TiledExecutor};
+use latticetile::codegen::run_trace_only;
+use latticetile::conflict::MissModel;
+use latticetile::coordinator::{Service, ServiceConfig};
+use latticetile::domain::ops;
+use latticetile::experiments::{self, harness::Table};
+use latticetile::runtime::Registry;
+use latticetile::tiling;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("analyze") => cmd_analyze(&parse_flags(&args[1..])),
+        Some("plan") => cmd_plan(&parse_flags(&args[1..])),
+        Some("run") => cmd_run(&parse_flags(&args[1..])),
+        Some("bench") => cmd_bench(&args[1..]),
+        Some("serve") => cmd_serve(&parse_flags(&args[1..])),
+        Some("help") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "latticetile — model-driven automatic tiling with cache associativity lattices
+
+USAGE:
+  latticetile analyze [--n N | --m M --k K --nn N] [--lda L]
+  latticetile plan    [--n N] [--samples S]
+  latticetile run     [--n N] [--strategy lattice|rect|O0|O2|O3|graphite|icc|pgi]
+  latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy> [--full]
+  latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
+
+The cache spec defaults to Intel Haswell L1d (32 KiB, 64 B lines, 8-way)."
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            out.insert(format!("arg{}", out.len()), args[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn geti(flags: &HashMap<String, String>, key: &str, default: i64) -> i64 {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> i32 {
+    let n = geti(flags, "n", 128);
+    let m = geti(flags, "m", n);
+    let k = geti(flags, "k", n);
+    let nn = geti(flags, "nn", n);
+    let lda = geti(flags, "lda", m);
+    let spec = CacheSpec::HASWELL_L1D;
+    let kernel = ops::matmul_padded(m, k, nn, lda, lda, k, 8, 0);
+    let model = MissModel::new(&kernel, &spec);
+    let a = model.analysis();
+    println!(
+        "cache: c={} l={} K={} → N={} sets, element period P={}",
+        spec.capacity,
+        spec.line,
+        spec.ways,
+        spec.n_sets(),
+        a.period
+    );
+    for (i, oc) in a.operands.iter().enumerate() {
+        let name = kernel.operand(i).table.name();
+        println!(
+            "\noperand {name} (dims {:?}):",
+            kernel.operand(i).table.dims()
+        );
+        println!(
+            "  φ weights: {:?}  offset: {}",
+            kernel.operand(i).table.map().weights(),
+            oc.offset
+        );
+        println!(
+            "  L(C,φ) det = {} (index in Z^d)",
+            oc.operand_lattice.det_abs()
+        );
+        println!("  basis (HNF cols): {:?}", oc.operand_lattice.basis());
+        println!("  LLL-reduced: {:?}", oc.operand_lattice.lll().basis());
+        println!("  loop-space weights (φ∘access): {:?}", oc.loop_weights);
+    }
+    0
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
+    let n = geti(flags, "n", 128);
+    let samples = geti(flags, "samples", 8) as usize;
+    let spec = CacheSpec::HASWELL_L1D;
+    let cap = 64i64.min(n);
+    let kernel = ops::matmul_padded(cap, cap, cap, n, n, n, 8, 0);
+    let t0 = Instant::now();
+    let ranked = tiling::select(&kernel, &spec, samples);
+    println!(
+        "ranked {} candidate plans in {:?} (model sampled on a {cap}³ instance, true lda={n}):\n",
+        ranked.len(),
+        t0.elapsed()
+    );
+    let mut tab = Table::new(&["rank", "plan", "predicted misses", "volume"]);
+    for (i, p) in ranked.iter().enumerate() {
+        tab.row(vec![
+            (i + 1).to_string(),
+            p.name.clone(),
+            p.predicted
+                .as_ref()
+                .map(|c| c.misses.to_string())
+                .unwrap_or_default(),
+            p.schedule.basis().volume().to_string(),
+        ]);
+    }
+    tab.print();
+    0
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> i32 {
+    let n = geti(flags, "n", 256);
+    let strategy = flags
+        .get("strategy")
+        .map(|s| s.as_str())
+        .unwrap_or("lattice");
+    let kernel = ops::matmul(n, n, n, 8, 0);
+    let spec = CacheSpec::HASWELL_L1D;
+    let flops = 2.0 * (n as f64).powi(3);
+
+    let analog = match strategy {
+        "O0" => Some(CompilerAnalog::GccO0),
+        "O2" => Some(CompilerAnalog::GccO2),
+        "O3" => Some(CompilerAnalog::GccO3),
+        "graphite" => Some(CompilerAnalog::GccGraphite),
+        "icc" => Some(CompilerAnalog::IccO3),
+        "pgi" => Some(CompilerAnalog::Pgi),
+        _ => None,
+    };
+
+    let (misses, wall) = match analog {
+        Some(a) => {
+            let sched = a.schedule(&kernel);
+            let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
+            run_trace_only(&kernel, sched.as_scanner(), &mut sim);
+            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let t0 = Instant::now();
+            a.execute(&mut bufs, &kernel);
+            (sim.stats().misses(), t0.elapsed())
+        }
+        None => {
+            let plan = match strategy {
+                "rect" => experiments::fig4::best_rect_plan_for(n, &spec).1,
+                _ => experiments::fig4::lattice_plan_for(n, &spec),
+            };
+            let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
+            run_trace_only(&kernel, &plan, &mut sim);
+            let exec = TiledExecutor::new(plan);
+            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let t0 = Instant::now();
+            exec.run(&mut bufs, &kernel);
+            (sim.stats().misses(), t0.elapsed())
+        }
+    };
+    println!(
+        "n={n} strategy={strategy}: simulated L1 misses={misses} wall={:?} ({:.2} GFLOP/s)",
+        wall,
+        flops / wall.as_secs_f64() / 1e9
+    );
+    0
+}
+
+fn cmd_bench(args: &[String]) -> i32 {
+    let which = args.first().map(|s| s.as_str()).unwrap_or("");
+    let flags = parse_flags(if args.is_empty() { args } else { &args[1..] });
+    let full = flags.contains_key("full");
+    match which {
+        "fig3" => bench_fig3(),
+        "fig4" => bench_fig4(full),
+        "fig4-rect" => bench_fig4_rect(full),
+        "fig5" => bench_fig5(),
+        "fig6" => bench_fig6(full),
+        "model-cost" => bench_model_cost(),
+        "policy" => bench_policy(),
+        "multilevel" => bench_multilevel(),
+        other => {
+            eprintln!(
+                "unknown bench {other:?} (fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy|multilevel)"
+            );
+            return 2;
+        }
+    }
+    0
+}
+
+fn bench_fig3() {
+    let r = experiments::fig3::run();
+    println!("Figure 3 — tile volume, lattice gen ((5,61),(7,−17)):\n");
+    let mut t = Table::new(&["tile family", "volume", "source"]);
+    t.row(vec![
+        "lattice fundamental parallelepiped".into(),
+        r.lattice_volume.to_string(),
+        "ours (=|det|, exact)".into(),
+    ]);
+    t.row(vec![
+        format!(
+            "best translation-safe rectangle {}x{}",
+            r.best_rect.0, r.best_rect.1
+        ),
+        r.best_rect_volume.to_string(),
+        "ours (exhaustive)".into(),
+    ]);
+    t.row(vec![
+        format!(
+            "best practical rectangle (dims>=8) {}x{}",
+            r.best_practical_rect.0, r.best_practical_rect.1
+        ),
+        r.best_practical_rect_volume.to_string(),
+        "ours (exhaustive)".into(),
+    ]);
+    t.row(vec![
+        "best rectangle [GMM99 A7]".into(),
+        r.paper_best_rect_volume.to_string(),
+        "paper-cited".into(),
+    ]);
+    t.row(vec![
+        "rectangle chosen by [GMM99]".into(),
+        r.paper_chosen_rect_volume.to_string(),
+        "paper-cited".into(),
+    ]);
+    t.print();
+    println!(
+        "\nlattice advantage vs best practical rectangle: {:.2}x",
+        r.advantage_vs_best_rect
+    );
+    let l = experiments::fig3::paper_lattice();
+    let (mn, mx) = experiments::fig3::rect_point_count_varies(&l, 24, 20, 6);
+    println!(
+        "regularity: 24x20 rect tiles contain {mn}..{mx} lattice points (varies); \
+         whole lattice tiles always contain exactly 1"
+    );
+}
+
+fn bench_fig4(full: bool) {
+    let sizes: &[i64] = if full {
+        &[96, 128, 192, 256, 384, 512]
+    } else {
+        &[96, 128, 192, 256]
+    };
+    println!("Figure 4 — lattice tiling vs compiler analogs (Haswell L1d sim + wallclock):\n");
+    for &n in sizes {
+        let rows = experiments::fig4::run_size(n, if full { 3 } else { 1 });
+        let mut t = Table::new(&[
+            "strategy",
+            "L1 misses",
+            "wall",
+            "GFLOP/s",
+            "speedup vs O0",
+            "miss ratio vs O0",
+        ]);
+        let sp = experiments::fig4::speedups_vs(&rows, "gcc-O0(analog)");
+        let mr = experiments::fig4::miss_ratios_vs(&rows, "gcc-O0(analog)");
+        for (i, r) in rows.iter().enumerate() {
+            t.row(vec![
+                r.strategy.clone(),
+                r.l1_misses.to_string(),
+                experiments::harness::fmt_dur(r.wall),
+                format!("{:.2}", r.gflops),
+                format!("{:.2}x", sp[i].1),
+                format!("{:.2}x", mr[i].1),
+            ]);
+        }
+        println!("n = {n}:");
+        t.print();
+        println!();
+    }
+}
+
+fn bench_fig4_rect(full: bool) {
+    let sizes: &[i64] = if full {
+        &[96, 128, 192, 256, 384]
+    } else {
+        &[96, 128, 256]
+    };
+    println!("§4.0.2 — best rectangular vs best lattice tiling:\n");
+    let mut t = Table::new(&["n", "strategy", "L1 misses", "wall", "GFLOP/s"]);
+    for &n in sizes {
+        for r in experiments::fig4::run_rect_vs_lattice(n, if full { 3 } else { 1 }) {
+            t.row(vec![
+                r.n.to_string(),
+                r.strategy.clone(),
+                r.l1_misses.to_string(),
+                experiments::harness::fmt_dur(r.wall),
+                format!("{:.2}", r.gflops),
+            ]);
+        }
+    }
+    t.print();
+}
+
+fn bench_fig5() {
+    println!("Figure 5 — spatial reuse (cacheline utilization, interior tiles):\n");
+    let mut t = Table::new(&["n", "tile family", "mean util", "min", "max"]);
+    for n in [128i64, 256] {
+        let (rect, lattice) = experiments::fig5::run(n);
+        t.row(vec![
+            n.to_string(),
+            "rect 16x8".into(),
+            format!("{:.3}", rect.mean),
+            format!("{:.3}", rect.min),
+            format!("{:.3}", rect.max),
+        ]);
+        t.row(vec![
+            n.to_string(),
+            "lattice (skewed, equal volume)".into(),
+            format!("{:.3}", lattice.mean),
+            format!("{:.3}", lattice.min),
+            format!("{:.3}", lattice.max),
+        ]);
+    }
+    t.print();
+    println!("\n(The paper's Fig.5 point: lattice tiles trade spatial reuse for volume.)");
+}
+
+fn bench_fig6(full: bool) {
+    let n = if full { 512 } else { 256 };
+    let threads: Vec<usize> = if full {
+        vec![1, 2, 4, 8, 12, 16, 20]
+    } else {
+        vec![1, 2, 4, 8]
+    };
+    let (og, gg) = experiments::fig6::parallel_grain(n);
+    println!(
+        "Figure 6 — auto-threading, n={n} (parallel grain: ours={og} bands, \
+         graphite-analog={gg} bands):\n"
+    );
+    let rows = experiments::fig6::run(n, &threads, if full { 3 } else { 1 });
+    let mut t = Table::new(&[
+        "threads",
+        "ours wall",
+        "ours speedup*",
+        "graphite wall",
+        "graphite speedup*",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.threads.to_string(),
+            experiments::harness::fmt_dur(r.ours),
+            format!("{:.2}x", r.ours_modeled),
+            experiments::harness::fmt_dur(r.graphite),
+            format!("{:.2}x", r.graphite_modeled),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n* load-balance speedup (total work / max per-thread work) — this host has\n\
+         {} core(s), so measured wallclock cannot scale; the band structure is exact.",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    );
+}
+
+fn bench_model_cost() {
+    println!("§4.0.4 — analysis/model cost:\n");
+    let rows = experiments::model_cost::run(&[16, 24, 32, 48], 2);
+    let mut t = Table::new(&[
+        "n",
+        "exact Eq.(4)",
+        "paper Δ-rule",
+        "sampled (8 classes)",
+        "K−1 closed form",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            experiments::harness::fmt_dur(r.exact),
+            experiments::harness::fmt_dur(r.exact_paper),
+            experiments::harness::fmt_dur(r.sampled),
+            experiments::harness::fmt_dur(r.k_minus_one),
+        ]);
+    }
+    t.print();
+}
+
+fn bench_multilevel() {
+    println!("extension — two-level hierarchy behaviour of the plans:\n");
+    let rows = experiments::multilevel::run(&[96, 128]);
+    let mut t = Table::new(&["n", "strategy", "L1 misses", "L2 misses", "est cycles"]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.strategy.clone(),
+            r.l1_misses.to_string(),
+            r.l2_misses.to_string(),
+            r.est_cycles.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+fn bench_policy() {
+    println!("§1.1.4 — LRU vs tree-PLRU miss counts:\n");
+    let rows = experiments::policy::run(&[96, 128]);
+    let mut t = Table::new(&["n", "strategy", "LRU", "PLRU", "Δ rel"]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.strategy.clone(),
+            r.lru.to_string(),
+            r.plru.to_string(),
+            format!("{:.3}", r.rel_delta),
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
+    let dir = flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+    let jobs = geti(flags, "jobs", 64) as usize;
+    let shape = flags
+        .get("shape")
+        .cloned()
+        .unwrap_or_else(|| "128x128x128".to_string());
+    let dims: Vec<usize> = shape.split('x').filter_map(|v| v.parse().ok()).collect();
+    if dims.len() != 3 {
+        eprintln!("--shape must be MxKxN");
+        return 2;
+    }
+    let (m, k, n) = (dims[0], dims[1], dims[2]);
+
+    let reg = match Registry::load(std::path::Path::new(&dir)) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot load artifacts from {dir}: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("loaded {} artifacts from {dir}", reg.artifacts().len());
+
+    let mut seed = 0x243F6A88u64;
+    let mut rnd = move || {
+        seed ^= seed << 13;
+        seed ^= seed >> 7;
+        seed ^= seed << 17;
+        ((seed % 1000) as f32 / 1000.0) - 0.5
+    };
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    let svc = Service::start(
+        std::path::Path::new(&dir),
+        y,
+        ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: Duration::from_millis(2),
+            spec: CacheSpec::HASWELL_L1D,
+        },
+    )
+    .expect("service start");
+
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for _ in 0..jobs {
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        rxs.push(svc.submit(x).expect("submit"));
+    }
+    for rx in rxs {
+        rx.recv().expect("recv").expect("job ok");
+    }
+    let wall = t0.elapsed();
+    let (metrics, _) = svc.stop();
+    println!("served {jobs} jobs ({m}x{k}x{n}) in {wall:?}");
+    println!("{}", metrics.report(wall));
+    0
+}

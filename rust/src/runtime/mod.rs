@@ -1,0 +1,10 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts from the Rust hot path (DESIGN.md S13).
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the binary self-contained afterwards: HLO **text** → `HloModuleProto`
+//! → `XlaComputation` → PJRT CPU executable, cached per variant.
+
+pub mod registry;
+
+pub use registry::{ArtifactKind, ArtifactMeta, Engine, Registry};

@@ -1,0 +1,267 @@
+//! Artifact registry + PJRT execution engine.
+//!
+//! `manifest.tsv` (written by `python/compile/aot.py`) lists every lowered
+//! HLO-text artifact with its shapes and block sizes. [`Registry`] parses
+//! it; [`Engine`] owns the PJRT CPU client and a cache of compiled
+//! executables, and runs matmuls with plain `f32` slices in/out.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// What a lowered artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// The Pallas tiled-matmul kernel wrapped in the L2 model.
+    PallasTiledMatmul,
+    /// The pure-jnp reference graph (numeric cross-check).
+    JnpRefMatmul,
+    /// vmapped batch-of-left-operands variant for the serve path.
+    PallasTiledMatmulBatched,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "pallas_tiled_matmul" => ArtifactKind::PallasTiledMatmul,
+            "jnp_ref_matmul" => ArtifactKind::JnpRefMatmul,
+            "pallas_tiled_matmul_batched" => ArtifactKind::PallasTiledMatmulBatched,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One row of the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: ArtifactKind,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub bm: usize,
+    pub bk: usize,
+    pub bn: usize,
+    pub batch: usize,
+}
+
+/// Parsed manifest of all shipped artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 10 {
+                bail!("manifest line {} has {} cols", lineno + 1, cols.len());
+            }
+            let u = |i: usize| -> Result<usize> {
+                cols[i]
+                    .parse()
+                    .with_context(|| format!("manifest line {} col {i}", lineno + 1))
+            };
+            artifacts.push(ArtifactMeta {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                kind: ArtifactKind::parse(cols[2])?,
+                m: u(3)?,
+                k: u(4)?,
+                n: u(5)?,
+                bm: u(6)?,
+                bk: u(7)?,
+                bn: u(8)?,
+                batch: u(9)?,
+            });
+        }
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            artifacts,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Kernel variants matching a problem size.
+    pub fn variants_for(&self, m: usize, k: usize, n: usize) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::PallasTiledMatmul && a.m == m && a.k == k && a.n == n
+            })
+            .collect()
+    }
+
+    /// The variant whose block shape is closest (L1 distance) to a
+    /// requested tile shape — how the coordinator maps a lattice-model
+    /// tile choice onto the shipped kernel set.
+    pub fn closest_variant(
+        &self,
+        m: usize,
+        k: usize,
+        n: usize,
+        want: (usize, usize, usize),
+    ) -> Option<&ArtifactMeta> {
+        self.variants_for(m, k, n).into_iter().min_by_key(|a| {
+            a.bm.abs_diff(want.0) + a.bk.abs_diff(want.1) + a.bn.abs_diff(want.2)
+        })
+    }
+}
+
+/// PJRT CPU execution engine with an executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(registry: Registry) -> Result<Engine> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            registry,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .registry
+            .by_name(name)
+            .with_context(|| format!("unknown artifact {name:?}"))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a (possibly batched) matmul artifact on row-major `f32`
+    /// data: `x` is `[batch? ×] m×k`, `y` is `k×n`; returns `[batch ×] m×n`
+    /// row-major.
+    pub fn run_matmul(&mut self, name: &str, x: &[f32], y: &[f32]) -> Result<Vec<f32>> {
+        self.prepare(name)?;
+        let meta = self.registry.by_name(name).unwrap().clone();
+        let (m, k, n, b) = (meta.m, meta.k, meta.n, meta.batch.max(1));
+        anyhow::ensure!(x.len() == b * m * k, "x size {} != {}", x.len(), b * m * k);
+        anyhow::ensure!(y.len() == k * n, "y size {} != {}", y.len(), k * n);
+
+        let x_shape: Vec<i64> = if meta.batch > 1 {
+            vec![b as i64, m as i64, k as i64]
+        } else {
+            vec![m as i64, k as i64]
+        };
+        let xl = xla::Literal::vec1(x).reshape(&x_shape)?;
+        let yl = xla::Literal::vec1(y).reshape(&[k as i64, n as i64])?;
+
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[xl, yl])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn registry_parses_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let r = Registry::load(&artifacts_dir()).unwrap();
+        assert!(!r.artifacts().is_empty());
+        assert!(!r.variants_for(256, 256, 256).is_empty());
+        let v = r.closest_variant(256, 256, 256, (60, 60, 60)).unwrap();
+        assert_eq!((v.bm, v.bk, v.bn), (64, 64, 64));
+    }
+
+    #[test]
+    fn engine_runs_pallas_kernel_and_matches_ref() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let r = Registry::load(&artifacts_dir()).unwrap();
+        let mut eng = Engine::new(r).unwrap();
+        let (m, k, n) = (128usize, 128, 128);
+        // deterministic input
+        let mut s = 0x12345678u64;
+        let mut rnd = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f32 / (1u64 << 53) as f32) - 0.5e-16 as f32
+        };
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let got = eng
+            .run_matmul("matmul_128x128x128_b64x64x64", &x, &y)
+            .unwrap();
+        // CPU-side oracle (row-major)
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                for j in 0..n {
+                    want[i * n + j] += xv * y[kk * n + j];
+                }
+            }
+        }
+        let max_diff = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-3, "pallas artifact numerics off: {max_diff}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Tiling mechanics and tile selection — §3 (DESIGN.md S7, S8).
+//!
+//! [`tile`] implements the half-open parallelepiped machinery of §3.2
+//! (`P_D(H)`, `T_D(H)`, `r(x)`); [`schedule`] turns a tile basis into a
+//! traversal order; [`selection`] chooses tiles — the paper's `K−1`
+//! lattice-point rule and the model-driven search of §4.0.4.
+
+pub mod schedule;
+pub mod selection;
+pub mod tile;
+
+pub use schedule::TiledSchedule;
+pub use selection::{
+    embed_operand_tile, k_minus_one_plan, model_driven_search, plan_with_kappa,
+    rect_candidates, scaled_lattice_tile, select, TilingPlan,
+};
+pub use tile::TileBasis;

@@ -1,0 +1,379 @@
+//! Tile selection — §4.0.4.
+//!
+//! Two selectors, as in the paper:
+//!
+//! * the **common-sense / `K−1` rule**: lattice tiles can be constructed
+//!   *without counting lattice points* — a fundamental parallelepiped of
+//!   the (LLL-reduced) conflict lattice contains exactly one lattice point,
+//!   so scaling basis vectors by integer factors with product `κ` yields a
+//!   tile with exactly `κ` points. The paper observes `κ = K−1` performs
+//!   well. Remaining loop dimensions are tiled rectangularly with sizes
+//!   induced by the lattice tile.
+//! * the **model-driven search**: score a small candidate set with the
+//!   (sampled) miss model of Eq. (4) and keep the best — the paper's
+//!   envisaged hybrid.
+
+use crate::cache::CacheSpec;
+use crate::conflict::{ConflictAnalysis, MissModel, ModelCounts};
+use crate::domain::Kernel;
+use crate::lattice::{IMat, Lattice};
+
+use super::schedule::TiledSchedule;
+use super::tile::TileBasis;
+
+/// A fully specified tiling decision for a kernel.
+#[derive(Clone, Debug)]
+pub struct TilingPlan {
+    /// Human-readable tag, e.g. `lattice[B]x7+j32` or `rect 32x32x32`.
+    pub name: String,
+    /// The loop-space schedule to execute.
+    pub schedule: TiledSchedule,
+    /// Which operand's conflict lattice shaped the tile (None = rect).
+    pub lattice_operand: Option<usize>,
+    /// Model prediction, if the plan was scored.
+    pub predicted: Option<ModelCounts>,
+}
+
+/// All integer factorizations of `k` into `parts` ordered factors.
+fn factorizations(k: i128, parts: usize) -> Vec<Vec<i128>> {
+    if parts == 1 {
+        return vec![vec![k]];
+    }
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d * d <= k || d <= k {
+        if k % d == 0 {
+            for mut rest in factorizations(k / d, parts - 1) {
+                let mut v = vec![d];
+                v.append(&mut rest);
+                out.push(v);
+            }
+        }
+        d += 1;
+        if d > k {
+            break;
+        }
+    }
+    out
+}
+
+/// Scale the columns of an LLL-reduced lattice basis so the parallelepiped
+/// contains exactly `kappa` lattice points, choosing the factor split that
+/// keeps the tile's bounding box smallest (best fit inside the operand).
+pub fn scaled_lattice_tile(l: &Lattice, kappa: i128, dims: &[i64]) -> TileBasis {
+    assert!(kappa >= 1);
+    let reduced = l.lll();
+    let b = reduced.basis();
+    let d = b.cols();
+    let mut best: Option<(i128, TileBasis)> = None;
+    for factors in factorizations(kappa, d) {
+        let mut m = b.clone();
+        for (j, &f) in factors.iter().enumerate() {
+            for i in 0..d {
+                m[(i, j)] *= f;
+            }
+        }
+        let t = TileBasis::from_cols(m);
+        // bounding-box score: penalize extents beyond the operand dims
+        let mut score = 0i128;
+        let mut fits = true;
+        for i in 0..d {
+            let ext: i128 = (0..d).map(|j| t.basis()[(i, j)].abs()).sum();
+            score += ext * ext;
+            if ext > dims[i] as i128 {
+                fits = false;
+            }
+        }
+        if !fits {
+            score *= 1024; // strongly prefer tiles inside the operand
+        }
+        if best.as_ref().is_none_or(|(s, _)| score < *s) {
+            best = Some((score, t));
+        }
+    }
+    best.expect("at least one factorization").1
+}
+
+/// Embed an operand-space tile into the loop space: operand dimension `r`
+/// must be a pure selection of one loop variable (true for every Table-1
+/// access except Kronecker's output). Non-operand loop variables get
+/// rectangular tile sizes from `other_sizes` (indexed by loop var).
+///
+/// Returns `None` if the access is not a pure selection.
+pub fn embed_operand_tile(
+    kernel: &Kernel,
+    op_idx: usize,
+    op_tile: &TileBasis,
+    other_sizes: &[i64],
+) -> Option<TileBasis> {
+    let op = kernel.operand(op_idx);
+    let n = kernel.n_free();
+    assert_eq!(other_sizes.len(), n);
+    // find the loop var each operand dim selects
+    let mut sel = Vec::with_capacity(op.access.rank());
+    for r in 0..op.access.rank() {
+        let row = &op.access.coef[r];
+        let mut var = None;
+        for (v, &a) in row.iter().enumerate() {
+            match a {
+                0 => {}
+                1 if var.is_none() && op.access.cons[r] == 0 => var = Some(v),
+                _ => return None,
+            }
+        }
+        sel.push(var?);
+    }
+    // distinct vars required
+    {
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        if s.len() != sel.len() {
+            return None;
+        }
+    }
+    let mut m = IMat::zeros(n, n);
+    let mut col = 0usize;
+    // operand tile generators, lifted
+    for j in 0..op_tile.dim() {
+        for r in 0..op_tile.dim() {
+            m[(sel[r], col)] = op_tile.basis()[(r, j)];
+        }
+        col += 1;
+    }
+    // remaining loop vars: rectangular
+    for v in 0..n {
+        if !sel.contains(&v) {
+            m[(v, col)] = other_sizes[v].max(1) as i128;
+            col += 1;
+        }
+    }
+    Some(TileBasis::from_cols(m))
+}
+
+/// The paper's `K−1` common-sense selector: lattice-tile `op_idx` with
+/// `κ = K−1` conflict-lattice points; tile the remaining loops
+/// rectangularly with sizes induced by the lattice tile's extent.
+pub fn k_minus_one_plan(kernel: &Kernel, spec: &CacheSpec, op_idx: usize) -> Option<TilingPlan> {
+    plan_with_kappa(kernel, spec, op_idx, spec.ways as i128 - 1)
+}
+
+/// Generalized `κ`-point lattice plan (the paper's `[K−α, K+β]` band).
+pub fn plan_with_kappa(
+    kernel: &Kernel,
+    spec: &CacheSpec,
+    op_idx: usize,
+    kappa: i128,
+) -> Option<TilingPlan> {
+    let analysis = ConflictAnalysis::new(kernel, spec);
+    let oc = &analysis.operands[op_idx];
+    let dims = kernel.operand(op_idx).table.dims();
+    let op_tile = scaled_lattice_tile(&oc.operand_lattice, kappa.max(1), dims);
+    // induced rectangular sizes for remaining loops: geometric mean of the
+    // lattice tile extents, clamped to the loop extent
+    let d = op_tile.dim();
+    let mean_ext: i128 = (0..d)
+        .map(|i| (0..d).map(|j| op_tile.basis()[(i, j)].abs()).sum::<i128>())
+        .max()
+        .unwrap_or(8)
+        .max(1);
+    let other: Vec<i64> = kernel
+        .extents()
+        .iter()
+        .map(|&e| (mean_ext as i64).min(e).max(1))
+        .collect();
+    let loop_basis = embed_operand_tile(kernel, op_idx, &op_tile, &other)?;
+    Some(TilingPlan {
+        name: format!(
+            "lattice[{}]x{} ({}pts)",
+            kernel.operand(op_idx).table.name(),
+            mean_ext,
+            kappa
+        ),
+        schedule: TiledSchedule::new(loop_basis),
+        lattice_operand: Some(op_idx),
+        predicted: None,
+    })
+}
+
+/// Rectangular candidates: power-of-two block sizes per loop dimension
+/// with working sets near the cache capacity (the classical search space).
+pub fn rect_candidates(kernel: &Kernel, spec: &CacheSpec) -> Vec<TilingPlan> {
+    let n = kernel.n_free();
+    let elem = kernel.operand(0).table.elem();
+    let cache_elems = (spec.capacity / elem) as i64;
+    let sizes: Vec<i64> = [4i64, 8, 16, 32, 64]
+        .iter()
+        .copied()
+        .filter(|&s| s <= *kernel.extents().iter().max().unwrap())
+        .collect();
+    let mut out = Vec::new();
+    let mut push = |tile: Vec<i64>| {
+        // rough working-set guard: Σ pairwise faces ≤ 4× cache
+        let ws: i64 = tile[0] * tile.get(2).copied().unwrap_or(1)
+            + tile.get(2).copied().unwrap_or(1) * tile.get(1).copied().unwrap_or(1)
+            + tile[0] * tile.get(1).copied().unwrap_or(1);
+        if ws > 4 * cache_elems {
+            return;
+        }
+        out.push(TilingPlan {
+            name: format!(
+                "rect {}",
+                tile.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x")
+            ),
+            schedule: TiledSchedule::new(TileBasis::rect(&tile)),
+            lattice_operand: None,
+            predicted: None,
+        });
+    };
+    // uniform cubes (the classical default)
+    for &s in &sizes {
+        push(kernel.extents().iter().map(|&e| s.min(e)).collect());
+    }
+    // anisotropic candidates for 3-D nests: long unit-stride first dim
+    // (vector-friendly), small others (set-pressure-friendly)
+    if n == 3 {
+        for &si in &[32i64, 64] {
+            for &sj in &[8i64, 16] {
+                for &sk in &[8i64, 16] {
+                    let e = kernel.extents();
+                    push(vec![si.min(e[0]), sj.min(e[1]), sk.min(e[2])]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Model-driven search: score candidates with the sampled Eq.(4) model and
+/// return them sorted best-first (fewest predicted misses).
+pub fn model_driven_search(
+    kernel: &Kernel,
+    spec: &CacheSpec,
+    mut candidates: Vec<TilingPlan>,
+    sample_classes: usize,
+) -> Vec<TilingPlan> {
+    let model = MissModel::new(kernel, spec);
+    let n_classes = model.analysis().n_classes;
+    let step = (n_classes as usize / sample_classes.max(1)).max(1);
+    let classes: Vec<i64> = (0..n_classes).step_by(step).collect();
+    for plan in candidates.iter_mut() {
+        let counts = model.sampled(&plan.schedule, &classes);
+        plan.predicted = Some(counts);
+    }
+    candidates.sort_by_key(|p| p.predicted.as_ref().map(|c| c.misses).unwrap_or(u64::MAX));
+    candidates
+}
+
+/// The paper's full decision procedure ("hybrid approach"): `K−1` lattice
+/// plans for each latticeable operand + rectangular candidates, scored by
+/// the sampled model; best first.
+pub fn select(kernel: &Kernel, spec: &CacheSpec, sample_classes: usize) -> Vec<TilingPlan> {
+    let mut cands = rect_candidates(kernel, spec);
+    for op_idx in 0..kernel.operands().len() {
+        for kappa in [spec.ways as i128 - 2, spec.ways as i128 - 1, spec.ways as i128] {
+            if kappa < 1 {
+                continue;
+            }
+            if let Some(p) = plan_with_kappa(kernel, spec, op_idx, kappa) {
+                cands.push(p);
+            }
+        }
+    }
+    model_driven_search(kernel, spec, cands, sample_classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+
+    fn toy_spec() -> CacheSpec {
+        // P = 32 elements, K = 4 ways (element-granular lines)
+        CacheSpec::new(32 * 4 * 8, 8, 4, 1)
+    }
+
+    #[test]
+    fn factorizations_complete() {
+        let f = factorizations(12, 2);
+        assert!(f.contains(&vec![3, 4]));
+        assert!(f.contains(&vec![12, 1]));
+        assert!(f.contains(&vec![1, 12]));
+        for v in &f {
+            assert_eq!(v.iter().product::<i128>(), 12);
+        }
+    }
+
+    #[test]
+    fn scaled_tile_has_kappa_points() {
+        // the defining property, checked by explicit counting (tests only)
+        let l = Lattice::from_congruence(&[1, 24], 32);
+        for kappa in [1i128, 3, 7, 8] {
+            let t = scaled_lattice_tile(&l, kappa, &[64, 64]);
+            assert_eq!(t.volume(), l.det_abs() * kappa);
+            // count lattice points in the prototile by scanning it
+            let mut count = 0;
+            t.scan_tile(&[0, 0], &[1000, 1000], |x| {
+                let x128: Vec<i128> = x.iter().map(|&v| v as i128).collect();
+                if l.contains(&x128) {
+                    count += 1;
+                }
+            });
+            assert_eq!(count, kappa, "kappa={kappa}");
+        }
+    }
+
+    #[test]
+    fn embed_matmul_b_tile() {
+        let k = ops::matmul(16, 16, 16, 8, 0);
+        let op_tile = TileBasis::rect(&[4, 4]); // on (i, kk)
+        let loop_tile = embed_operand_tile(&k, 1, &op_tile, &[0, 8, 0]).unwrap();
+        assert_eq!(loop_tile.dim(), 3);
+        // volume = 4*4*8
+        assert_eq!(loop_tile.volume(), 128);
+        // footpoint of (i=5, j=0, kk=0) moves in the i-tile direction
+        assert_eq!(loop_tile.footpoint(&[5, 0, 0]), vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn k_minus_one_plan_exists_for_matmul() {
+        let k = ops::matmul(32, 32, 32, 8, 0);
+        let plan = k_minus_one_plan(&k, &toy_spec(), 1).expect("plan");
+        assert_eq!(plan.lattice_operand, Some(1));
+        // schedule covers the domain
+        use crate::domain::order::Scanner;
+        let mut n = 0usize;
+        plan.schedule
+            .scan_points(k.extents(), &mut |_: &[i64]| n += 1);
+        assert_eq!(n, 32 * 32 * 32);
+    }
+
+    #[test]
+    fn select_ranks_plans_and_beats_naive() {
+        use crate::conflict::MissModel;
+        use crate::domain::IterOrder;
+        let k = ops::matmul(24, 24, 24, 8, 0);
+        let spec = toy_spec();
+        let ranked = select(&k, &spec, 8);
+        assert!(!ranked.is_empty());
+        let best = &ranked[0];
+        let model = MissModel::new(&k, &spec);
+        let naive = model.exact(&IterOrder::lex(3)).misses;
+        let tiled = model.exact(&best.schedule).misses;
+        assert!(
+            tiled < naive,
+            "best plan {} predicted {tiled} ≥ naive {naive}",
+            best.name
+        );
+    }
+
+    #[test]
+    fn kronecker_output_cannot_embed() {
+        let k = ops::kronecker(2, 2, 3, 3, 8, 0);
+        // output access A[3i+k, 3j+l] is not a pure selection
+        let t = TileBasis::rect(&[2, 2]);
+        assert!(embed_operand_tile(&k, 0, &t, &[1, 1, 1, 1]).is_none());
+        // but B is
+        assert!(embed_operand_tile(&k, 1, &t, &[1, 1, 2, 2]).is_some());
+    }
+}

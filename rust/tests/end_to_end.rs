@@ -1,0 +1,190 @@
+//! End-to-end integration: plan → artifact → PJRT execution → numerics,
+//! and the full simulated-miss chain plan → schedule → simulator
+//! (DESIGN.md E5/E11 in test form). Artifact-dependent tests self-skip if
+//! `make artifacts` has not run.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use latticetile::cache::{CacheSim, CacheSpec, Policy};
+use latticetile::codegen::run_trace_only;
+use latticetile::coordinator::{Planner, Service, ServiceConfig};
+use latticetile::domain::{ops, IterOrder};
+use latticetile::experiments::fig4;
+use latticetile::runtime::{Engine, Registry};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// The full model chain: the hybrid plan must beat the naive order on
+/// simulated Haswell misses at every benchmark size.
+#[test]
+fn planned_schedule_beats_naive_at_all_sizes() {
+    for n in [96i64, 128, 192, 256] {
+        let kernel = ops::matmul(n, n, n, 8, 0);
+        let (name, plan) = fig4::hybrid_plan_for(n, &CacheSpec::HASWELL_L1D);
+        let mut naive = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru).without_classification();
+        run_trace_only(&kernel, &IterOrder::lex(3), &mut naive);
+        let mut tiled = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru).without_classification();
+        run_trace_only(&kernel, &plan, &mut tiled);
+        assert!(
+            tiled.stats().misses() * 2 < naive.stats().misses(),
+            "n={n} plan={name}: {} vs naive {}",
+            tiled.stats().misses(),
+            naive.stats().misses()
+        );
+    }
+}
+
+/// All shipped kernel variants produce matching numerics through PJRT.
+#[test]
+fn all_pallas_variants_match_reference_artifact() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let mut engine = Engine::new(reg).unwrap();
+    let variants: Vec<(String, usize, usize, usize)> = engine
+        .registry()
+        .artifacts()
+        .iter()
+        .filter(|a| {
+            a.kind == latticetile::runtime::ArtifactKind::PallasTiledMatmul && a.m <= 256
+        })
+        .map(|a| (a.name.clone(), a.m, a.k, a.n))
+        .collect();
+    assert!(variants.len() >= 3, "expected several shipped variants");
+    for (name, m, k, n) in variants {
+        let mut s = 0xABCDEFu64;
+        let mut rnd = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s % 1000) as f32 / 1000.0) - 0.5
+        };
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let got = engine.run_matmul(&name, &x, &y).unwrap();
+        // compare against the jnp reference artifact for the same shape
+        let ref_name = format!("matmul_ref_{m}x{k}x{n}");
+        let want = engine.run_matmul(&ref_name, &x, &y).unwrap();
+        let maxd = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(maxd < 1e-3, "{name} deviates from jnp ref by {maxd}");
+    }
+}
+
+/// Coordinator round trip under concurrent submission, with batching.
+#[test]
+fn coordinator_serves_burst_correctly() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (m, k, n) = (128usize, 128, 128);
+    let y: Vec<f32> = (0..k * n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let svc = Service::start(
+        &artifacts_dir(),
+        y.clone(),
+        ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: Duration::from_millis(1),
+            spec: CacheSpec::HASWELL_L1D,
+        },
+    )
+    .unwrap();
+    let jobs = 12usize;
+    let xs: Vec<Vec<f32>> = (0..jobs)
+        .map(|j| {
+            (0..m * k)
+                .map(|i| (((i + j * 31) % 13) as f32 - 6.0) / 6.0)
+                .collect()
+        })
+        .collect();
+    let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+    for (idx, rx) in rxs.into_iter().enumerate() {
+        let got = rx.recv().unwrap().unwrap();
+        // spot-check one output element exactly
+        let mut want0 = 0f32;
+        for kk in 0..k {
+            want0 += xs[idx][kk] * y[kk * n];
+        }
+        assert!(
+            (got[0] - want0).abs() < 1e-2,
+            "job {idx}: {} vs {}",
+            got[0],
+            want0
+        );
+    }
+    let (metrics, _) = svc.stop();
+    assert_eq!(metrics.jobs, jobs as u64);
+    assert!(metrics.batches <= jobs as u64);
+}
+
+/// Planner resolves every serveable shape to a real artifact.
+#[test]
+fn planner_resolves_all_shipped_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let reg = Registry::load(&artifacts_dir()).unwrap();
+    let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+    let shapes: Vec<(usize, usize, usize)> = reg
+        .artifacts()
+        .iter()
+        .filter(|a| a.kind == latticetile::runtime::ArtifactKind::PallasTiledMatmul)
+        .map(|a| (a.m, a.k, a.n))
+        .collect();
+    for (m, k, n) in shapes {
+        let p = planner.plan(&reg, m, k, n);
+        assert!(
+            reg.by_name(&p.artifact).is_some(),
+            "plan for {m}x{k}x{n} resolved to missing artifact {}",
+            p.artifact
+        );
+    }
+}
+
+/// CLI smoke tests: every subcommand runs and produces plausible output.
+#[test]
+fn cli_subcommands_smoke() {
+    let bin = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("release")
+        .join("latticetile");
+    if !bin.exists() {
+        eprintln!("skipping: build the release binary first");
+        return;
+    }
+    let run = |args: &[&str]| -> String {
+        let out = std::process::Command::new(&bin)
+            .args(args)
+            .output()
+            .expect("spawn latticetile");
+        assert!(
+            out.status.success(),
+            "latticetile {args:?} failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stdout).into_owned()
+    };
+    let analyze = run(&["analyze", "--n", "64"]);
+    assert!(analyze.contains("L(C,φ) det"));
+    let plan = run(&["plan", "--n", "64"]);
+    assert!(plan.contains("rank"));
+    assert!(plan.contains("rect"));
+    let help = run(&["help"]);
+    assert!(help.contains("USAGE"));
+}

@@ -1,0 +1,261 @@
+//! Property-based tests over the core invariants (hand-rolled driver —
+//! see `latticetile::testutil`; proptest is unavailable offline).
+//!
+//! Each property is checked over dozens of pseudo-random cases with
+//! deterministic seeds, so failures reproduce exactly.
+
+use latticetile::cache::{CacheSim, CacheSpec, Policy};
+use latticetile::codegen::executor::{prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::{max_abs_diff, run_parallel, run_trace_only};
+use latticetile::conflict::MissModel;
+use latticetile::domain::order::Scanner;
+use latticetile::domain::{ops, IterOrder};
+use latticetile::lattice::{lll_reduce, norm2, IMat, Lattice};
+use latticetile::testutil::{prop_check, Rng};
+use latticetile::tiling::{TileBasis, TiledSchedule};
+
+fn random_full_rank_2x2(rng: &mut Rng, max: i64) -> IMat {
+    loop {
+        let m = IMat::from_rows(&[
+            &[
+                rng.range_i64(-max, max) as i128,
+                rng.range_i64(-max, max) as i128,
+            ],
+            &[
+                rng.range_i64(-max, max) as i128,
+                rng.range_i64(-max, max) as i128,
+            ],
+        ]);
+        if m.det() != 0 {
+            return m;
+        }
+    }
+}
+
+/// LLL preserves the lattice (same det, mutual membership) and never
+/// lengthens the shortest basis vector.
+#[test]
+fn prop_lll_preserves_lattice_and_shortens() {
+    prop_check(40, 0xA11CE, |case, rng| {
+        let b = random_full_rank_2x2(rng, 40);
+        let l = Lattice::from_basis(b.clone());
+        let r = lll_reduce(&b);
+        assert_eq!(r.det().abs(), b.det().abs(), "case {case}: det changed");
+        let lr = Lattice::from_basis(r.clone());
+        for j in 0..2 {
+            assert!(l.contains(&r.col(j)), "case {case}: reduced vec not in L");
+            assert!(lr.contains(&b.col(j)), "case {case}: original vec not in L'");
+        }
+        let orig_min = (0..2).map(|j| norm2(&b.col(j))).min().unwrap();
+        let red_min = (0..2).map(|j| norm2(&r.col(j))).min().unwrap();
+        assert!(red_min <= orig_min, "case {case}: LLL lengthened the basis");
+    });
+}
+
+/// The congruence lattice membership matches the defining congruence for
+/// random weights/moduli.
+#[test]
+fn prop_congruence_lattice_matches_definition() {
+    prop_check(30, 0xBEEF, |case, rng| {
+        let w = vec![
+            rng.range_i64(1, 50) as i128,
+            rng.range_i64(1, 200) as i128,
+        ];
+        let n = *rng.pick(&[4i128, 8, 16, 64, 512]);
+        let l = Lattice::from_congruence(&w, n);
+        for _ in 0..50 {
+            let x = [rng.range_i64(-30, 30) as i128, rng.range_i64(-30, 30) as i128];
+            let expect = (w[0] * x[0] + w[1] * x[1]).rem_euclid(n) == 0;
+            assert_eq!(l.contains(&x), expect, "case {case}, x={x:?}");
+        }
+    });
+}
+
+/// Tiles partition the domain: every point visited exactly once, for
+/// random (possibly skewed) tile bases.
+#[test]
+fn prop_tiled_schedule_is_a_partition() {
+    prop_check(25, 0x7115, |case, rng| {
+        // random 2-D basis with controlled skew
+        let b = loop {
+            let m = IMat::from_rows(&[
+                &[
+                    rng.range_i64(1, 6) as i128,
+                    rng.range_i64(-3, 3) as i128,
+                ],
+                &[
+                    rng.range_i64(-3, 3) as i128,
+                    rng.range_i64(1, 6) as i128,
+                ],
+            ]);
+            if m.det() != 0 {
+                break m;
+            }
+        };
+        let basis = TileBasis::from_cols(b);
+        let extents = [rng.range_i64(5, 18), rng.range_i64(5, 18)];
+        let s = TiledSchedule::new(basis);
+        let mut seen = std::collections::HashSet::new();
+        let mut count = 0u64;
+        s.scan_points(&extents, &mut |x: &[i64]| {
+            assert!(seen.insert(x.to_vec()), "case {case}: point visited twice");
+            count += 1;
+        });
+        assert_eq!(
+            count,
+            (extents[0] * extents[1]) as u64,
+            "case {case}: coverage"
+        );
+    });
+}
+
+/// The prototile always contains exactly |det| integer points.
+#[test]
+fn prop_prototile_volume() {
+    prop_check(25, 0xD117, |case, rng| {
+        let b = loop {
+            let m = IMat::from_rows(&[
+                &[rng.range_i64(1, 8) as i128, rng.range_i64(-4, 4) as i128],
+                &[rng.range_i64(-4, 4) as i128, rng.range_i64(1, 8) as i128],
+            ]);
+            if m.det() != 0 {
+                break m;
+            }
+        };
+        let t = TileBasis::from_cols(b);
+        let pts = prototile_points(&t);
+        assert_eq!(pts.len() as i128, t.volume(), "case {case}");
+    });
+}
+
+/// Keystone at scale: line-granular miss model == cache simulator on
+/// random kernels, specs, and orders.
+#[test]
+fn prop_model_equals_sim_random() {
+    prop_check(15, 0x5EED, |case, rng| {
+        let m = rng.range_i64(3, 14);
+        let k = rng.range_i64(3, 14);
+        let n = rng.range_i64(3, 14);
+        let lda = m + rng.range_i64(0, 4);
+        let ldb = m + rng.range_i64(0, 4);
+        let ldc = k + rng.range_i64(0, 4);
+        let base = rng.range_i64(0, 8) as usize * 8;
+        let kernel = ops::matmul_padded(m, k, n, lda, ldb, ldc, 8, base);
+        let ways = *rng.pick(&[2usize, 4, 8]);
+        let sets = *rng.pick(&[4usize, 16, 64]);
+        let line = *rng.pick(&[8usize, 16, 64]);
+        let spec = CacheSpec::new(sets * ways * line, line, ways, 1);
+        let perm: Vec<usize> = match rng.range_usize(0, 2) {
+            0 => vec![0, 1, 2],
+            1 => vec![1, 2, 0],
+            _ => vec![2, 0, 1],
+        };
+        let order = IterOrder::permuted(&perm);
+
+        let model = MissModel::new(&kernel, &spec);
+        let counts = model.exact(&order);
+        let mut sim = CacheSim::new(spec, Policy::Lru);
+        order.scan(kernel.extents(), |f| {
+            for a in kernel.addrs_at(f) {
+                sim.access(a);
+            }
+        });
+        assert_eq!(
+            counts.misses,
+            sim.stats().misses(),
+            "case {case}: kernel ({m},{k},{n}) lda={lda} spec={spec:?} perm={perm:?}"
+        );
+    });
+}
+
+/// Executors compute the right answer for random shapes/tiles/threads.
+#[test]
+fn prop_executors_numerically_correct() {
+    prop_check(12, 0xFAB, |case, rng| {
+        let m = rng.range_i64(8, 40);
+        let k = rng.range_i64(8, 40);
+        let n = rng.range_i64(8, 40);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let b = loop {
+            let mm = IMat::from_rows(&[
+                &[
+                    rng.range_i64(2, 9) as i128,
+                    0,
+                    rng.range_i64(-2, 2) as i128,
+                ],
+                &[0, rng.range_i64(2, 9) as i128, 0],
+                &[
+                    rng.range_i64(-2, 2) as i128,
+                    0,
+                    rng.range_i64(2, 9) as i128,
+                ],
+            ]);
+            if mm.det() != 0 {
+                break mm;
+            }
+        };
+        let sched = TiledSchedule::new(TileBasis::from_cols(b));
+        let exec = TiledExecutor::new(sched.clone());
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let want = bufs.reference();
+        exec.run(&mut bufs, &kernel);
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: serial tiled executor wrong"
+        );
+        let threads = rng.range_usize(1, 4);
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        run_parallel(&mut bufs, &kernel, &sched, threads, 1);
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: parallel executor wrong ({threads} threads)"
+        );
+    });
+}
+
+/// LRU reuse-distance law on the simulator: an address re-accessed after
+/// touching `d` distinct other same-set lines hits iff `d < K`.
+#[test]
+fn prop_lru_distance_law() {
+    prop_check(20, 0xCAFE, |case, rng| {
+        let ways = *rng.pick(&[2usize, 4, 8]);
+        let sets = 8usize;
+        let line = 16usize;
+        let spec = CacheSpec::new(sets * ways * line, line, ways, 1);
+        let mut sim = CacheSim::new(spec, Policy::Lru);
+        let set_stride = sets * line;
+        sim.access(0);
+        let d = rng.range_usize(0, ways + 2);
+        for t in 1..=d {
+            sim.access(t * set_stride);
+        }
+        let hit = sim.access(0).hit;
+        assert_eq!(hit, d < ways, "case {case}: d={d} K={ways}");
+    });
+}
+
+/// Miss counts are schedule-order invariants of the *set* of points only
+/// when the cache is large enough to never evict: with an infinite-ish
+/// cache every schedule yields exactly the cold-miss count.
+#[test]
+fn prop_big_cache_only_cold_misses() {
+    prop_check(10, 0x1CE, |case, rng| {
+        let m = rng.range_i64(4, 10);
+        let k = rng.range_i64(4, 10);
+        let n = rng.range_i64(4, 10);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let spec = CacheSpec::new(1 << 22, 8, 8, 1); // 4 MiB, elem-granular
+        let distinct_elems = (m * n + m * k + k * n) as u64;
+        for perm in [[0usize, 1, 2], [2, 1, 0]] {
+            let order = IterOrder::permuted(&perm);
+            let mut sim = CacheSim::new(spec, Policy::Lru);
+            run_trace_only(&kernel, &order, &mut sim);
+            assert_eq!(
+                sim.stats().misses(),
+                distinct_elems,
+                "case {case} perm {perm:?}"
+            );
+            assert_eq!(sim.stats().cold, distinct_elems);
+        }
+    });
+}
