@@ -1,23 +1,50 @@
 //! Microbenchmarks of the hot paths (EXPERIMENTS.md §Perf): cache-sim
-//! access rate, tile scanning, prototile replay, miss-model throughput.
+//! access rate, tile scanning, the packed microkernel engine, miss-model
+//! throughput.
+//!
+//! Besides the console table, results are written machine-readably to
+//! `BENCH_hot_paths.json` (label → Mops/s) so the perf trajectory can be
+//! tracked across PRs.
 use std::time::Instant;
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::microkernel::{mkernel_full, MR, NR};
 use latticetile::conflict::MissModel;
 use latticetile::domain::{ops, IterOrder};
 use latticetile::lattice::IMat;
 use latticetile::tiling::{TileBasis, TiledSchedule};
 
-fn rate(label: &str, ops_done: u64, t: std::time::Duration) {
-    println!(
-        "{label:<42} {:>10.1} Mops/s  ({ops_done} ops in {t:?})",
-        ops_done as f64 / t.as_secs_f64() / 1e6
-    );
+/// Collects (label, Mops/s) pairs while printing the console table.
+#[derive(Default)]
+struct Results {
+    rows: Vec<(String, f64)>,
+}
+
+impl Results {
+    fn rate(&mut self, label: &str, ops_done: u64, t: std::time::Duration) {
+        let mops = ops_done as f64 / t.as_secs_f64() / 1e6;
+        println!("{label:<46} {mops:>10.1} Mops/s  ({ops_done} ops in {t:?})");
+        self.rows.push((label.to_string(), mops));
+    }
+
+    fn write_json(&self, path: &str) {
+        let body: Vec<String> = self
+            .rows
+            .iter()
+            .map(|(label, mops)| format!("  \"{label}\": {mops:.1}"))
+            .collect();
+        let json = format!("{{\n{}\n}}\n", body.join(",\n"));
+        match std::fs::write(path, json) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\ncannot write {path}: {e}"),
+        }
+    }
 }
 
 fn main() {
     println!("=== hot-path microbenchmarks ===");
+    let mut res = Results::default();
 
     // cache sim raw access rate
     let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru).without_classification();
@@ -26,7 +53,7 @@ fn main() {
     for i in 0..n_acc {
         sim.access(((i * 72) % (1 << 20)) as usize);
     }
-    rate("cache sim access (no classification)", n_acc, t0.elapsed());
+    res.rate("cache sim access (no classification)", n_acc, t0.elapsed());
 
     let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
     let n_acc = 2_000_000u64;
@@ -34,9 +61,22 @@ fn main() {
     for i in 0..n_acc {
         sim.access(((i * 72) % (1 << 20)) as usize);
     }
-    rate("cache sim access (3-C classification)", n_acc, t0.elapsed());
+    res.rate("cache sim access (3-C classification)", n_acc, t0.elapsed());
 
-    // tile scanning: skewed basis, interior replay vs filter scan
+    // raw register-tiled microkernel over packed panels
+    let kc = 256usize;
+    let bp = vec![1.000_000_1f64; kc * MR];
+    let cp = vec![0.999_999_9f64; kc * NR];
+    let mut acc_buf = vec![0f64; (NR - 1) * MR + MR];
+    let reps = 40_000u64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        mkernel_full(kc, &bp, &cp, &mut acc_buf, MR);
+    }
+    res.rate("microkernel", reps * (kc * MR * NR) as u64, t0.elapsed());
+    assert!(acc_buf[0].is_finite());
+
+    // tile scanning: skewed basis, packed panel replay vs filter scan
     let basis = TileBasis::from_cols(IMat::from_rows(&[
         &[32, 0, 8],
         &[0, 16, 0],
@@ -48,7 +88,7 @@ fn main() {
     let t0 = Instant::now();
     let mut cnt = 0u64;
     sched.scan_points(kernel.extents(), &mut |_: &[i64]| cnt += 1);
-    rate("skewed tile scan_points (filter scan)", cnt, t0.elapsed());
+    res.rate("skewed tile scan_points (filter scan)", cnt, t0.elapsed());
 
     let proto = prototile_points(&basis);
     println!("prototile size: {} points", proto.len());
@@ -57,20 +97,27 @@ fn main() {
     let mut bufs = MatmulBuffers::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
-    rate(
-        "TiledExecutor (interior replay) matmul pts",
-        (256u64).pow(3),
-        t0.elapsed(),
-    );
+    res.rate("packed tile replay", (256u64).pow(3), t0.elapsed());
+
+    // rect tiles through the same pack + microkernel engine
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
+    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    res.rate("rect tiled executor (packed microkernel)", (256u64).pow(3), t0.elapsed());
 
     // miss model throughput
     let small = ops::matmul(32, 32, 32, 8, 0);
     let model = MissModel::new(&small, &CacheSpec::HASWELL_L1D);
     let t0 = Instant::now();
     let c = model.exact(&IterOrder::lex(3));
-    rate("miss model exact (accesses)", c.points * 3, t0.elapsed());
+    res.rate("miss model exact (accesses)", c.points * 3, t0.elapsed());
     let classes: Vec<i64> = (0..64).step_by(8).collect();
     let t0 = Instant::now();
     let c = model.sampled(&IterOrder::lex(3), &classes);
-    rate("miss model sampled 8/64 (accesses)", c.points * 3, t0.elapsed());
+    res.rate("miss model sampled 8/64 (accesses)", c.points * 3, t0.elapsed());
+
+    // anchor at the workspace root (cargo runs benches with cwd set to the
+    // package root, rust/)
+    res.write_json(concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hot_paths.json"));
 }

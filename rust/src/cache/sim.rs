@@ -8,7 +8,7 @@
 //! misses — so benchmarks can quantify the paper's claim that conflict
 //! misses dominate whenever tiling is wrong.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 use super::set::{CacheSet, SetAccess};
 use super::spec::{CacheSpec, Policy};
@@ -20,9 +20,15 @@ pub struct CacheSim {
     spec: CacheSpec,
     policy: Policy,
     sets: Vec<CacheSet>,
-    /// Fully-associative LRU shadow (recency list of line tags) used only
-    /// for miss classification. Capacity: `spec.n_lines()` tags.
-    shadow: Vec<u64>,
+    /// Fully-associative LRU shadow used only for miss classification,
+    /// hash-indexed for O(log n) touches: `shadow_pos` maps a resident
+    /// line tag to its recency stamp, `shadow_order` keeps stamps sorted
+    /// so the LRU victim is the first entry. Capacity: `spec.n_lines()`
+    /// tags. (The seed kept a `Vec` recency list scanned linearly —
+    /// O(n_lines) per access.)
+    shadow_pos: HashMap<u64, u64>,
+    shadow_order: BTreeMap<u64, u64>,
+    shadow_stamp: u64,
     /// Every line tag ever touched (cold-miss detection).
     touched: HashSet<u64>,
     stats: CacheStats,
@@ -48,7 +54,9 @@ impl CacheSim {
             spec,
             policy,
             sets: (0..n).map(|_| CacheSet::new(spec.ways, policy)).collect(),
-            shadow: Vec::with_capacity(spec.n_lines()),
+            shadow_pos: HashMap::new(),
+            shadow_order: BTreeMap::new(),
+            shadow_stamp: 0,
             touched: HashSet::new(),
             stats: CacheStats::new(n),
             classify: true,
@@ -100,7 +108,7 @@ impl CacheSim {
         } else {
             // seen before: capacity if the fully-associative shadow also
             // evicted it, conflict otherwise.
-            let in_shadow = self.shadow.contains(&line);
+            let in_shadow = self.shadow_pos.contains_key(&line);
             self.shadow_touch(line);
             if in_shadow {
                 Some(MissKind::Conflict)
@@ -122,12 +130,17 @@ impl CacheSim {
     }
 
     fn shadow_touch(&mut self, line: u64) {
-        if let Some(pos) = self.shadow.iter().position(|&l| l == line) {
-            self.shadow.remove(pos);
-        } else if self.shadow.len() == self.spec.n_lines() {
-            self.shadow.pop();
+        if let Some(old) = self.shadow_pos.get(&line).copied() {
+            self.shadow_order.remove(&old);
+        } else if self.shadow_pos.len() == self.spec.n_lines() {
+            // evict the least recently used tag (smallest stamp)
+            if let Some((_, victim)) = self.shadow_order.pop_first() {
+                self.shadow_pos.remove(&victim);
+            }
         }
-        self.shadow.insert(0, line);
+        self.shadow_stamp += 1;
+        self.shadow_pos.insert(line, self.shadow_stamp);
+        self.shadow_order.insert(self.shadow_stamp, line);
     }
 
     /// Run a whole address trace; returns total misses.
@@ -151,7 +164,9 @@ impl CacheSim {
         for s in self.sets.iter_mut() {
             s.clear();
         }
-        self.shadow.clear();
+        self.shadow_pos.clear();
+        self.shadow_order.clear();
+        self.shadow_stamp = 0;
         self.touched.clear();
         self.stats = CacheStats::new(self.spec.n_sets());
     }
@@ -378,6 +393,62 @@ mod tests {
         let mp = plru.run_trace(trace.iter().copied());
         assert_eq!(ml, 5, "LRU: 5 cold/conflict misses");
         assert_eq!(mp, 6, "PLRU: extra miss on the re-access of 2");
+    }
+
+    #[test]
+    fn hash_shadow_matches_reference_recency_list() {
+        // The 3-C classification must be identical to the seed's linear
+        // recency-list shadow, replayed here as the reference, over a
+        // trace mixing short/long reuse distances on two specs.
+        for spec in [CacheSpec::FIG1_TOY, CacheSpec::new(16 * 4 * 16, 16, 4, 1)] {
+            let mut sim = CacheSim::new(spec, Policy::Lru);
+            let mut rng = crate::testutil::Rng::new(0x1234_5678);
+            let span = spec.n_lines() as u64 * spec.line as u64 * 12;
+            let mut trace: Vec<usize> =
+                (0..6000).map(|_| (rng.next_u64() % span) as usize).collect();
+            // deterministic tail: thrash one set with ways+1 lines (all
+            // shadow-resident) so conflict misses provably occur
+            let set_stride = spec.n_sets() * spec.line;
+            for _ in 0..3 {
+                for t in 0..=spec.ways {
+                    trace.push(t * set_stride);
+                }
+            }
+            let mut shadow: Vec<u64> = Vec::new();
+            let mut touched = HashSet::new();
+            let (mut cold, mut capacity, mut conflict) = (0u64, 0u64, 0u64);
+            for &addr in &trace {
+                let acc = sim.access(addr);
+                let line = acc.line;
+                let expect = if acc.hit {
+                    None
+                } else if touched.insert(line) {
+                    Some(MissKind::Cold)
+                } else if shadow.contains(&line) {
+                    Some(MissKind::Conflict)
+                } else {
+                    Some(MissKind::Capacity)
+                };
+                assert_eq!(acc.kind, expect, "addr {addr}");
+                match acc.kind {
+                    Some(MissKind::Cold) => cold += 1,
+                    Some(MissKind::Capacity) => capacity += 1,
+                    Some(MissKind::Conflict) => conflict += 1,
+                    None => {}
+                }
+                // reference recency-list touch (the seed implementation)
+                if let Some(pos) = shadow.iter().position(|&l| l == line) {
+                    shadow.remove(pos);
+                } else if shadow.len() == spec.n_lines() {
+                    shadow.pop();
+                }
+                shadow.insert(0, line);
+            }
+            assert_eq!(sim.stats().cold, cold);
+            assert_eq!(sim.stats().capacity, capacity);
+            assert_eq!(sim.stats().conflict, conflict);
+            assert!(capacity > 0 && conflict > 0, "trace must exercise both");
+        }
     }
 
     #[test]

@@ -7,11 +7,19 @@
 //! perform `A[i,j] += B[i,kk] · C[kk,j]` per visited point, optionally
 //! touching a [`CacheSim`] with the three byte addresses — so simulated
 //! miss counts correspond 1:1 to the executed schedule.
+//!
+//! [`TiledExecutor`] is the fast path: tile interiors run through the
+//! packing + register-blocked microkernel engine
+//! ([`super::pack`], [`super::microkernel`]) instead of per-point
+//! callbacks — see the pipeline overview in [`super`].
 
 use crate::cache::CacheSim;
 use crate::domain::order::Scanner;
 use crate::domain::{Kernel, OpRole};
 use crate::tiling::{TileBasis, TiledSchedule};
+
+use super::microkernel::{axpy_block, NR};
+use super::pack::PackBuffers;
 
 /// Operand storage for a matmul kernel built by [`crate::domain::ops`]:
 /// one arena indexed by byte address / 8, so executor addresses equal
@@ -24,6 +32,19 @@ pub struct MatmulBuffers {
     /// Arena of f64 covering all three tables (indexed in elements).
     pub arena: Vec<f64>,
     /// Element offsets and leading dims of A, B, C.
+    pub a_off: usize,
+    pub b_off: usize,
+    pub c_off: usize,
+    pub lda: usize,
+    pub ldb: usize,
+    pub ldc: usize,
+}
+
+/// Element offsets and leading dimensions of the three operands inside
+/// one arena — the geometry the executors thread through the packing and
+/// microkernel layers.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulGeom {
     pub a_off: usize,
     pub b_off: usize,
     pub c_off: usize,
@@ -78,6 +99,18 @@ impl MatmulBuffers {
             lda: ops[0].table.map().weights()[1] as usize,
             ldb: ops[1].table.map().weights()[1] as usize,
             ldc: ops[2].table.map().weights()[1] as usize,
+        }
+    }
+
+    /// The operand geometry (offsets + leading dims) of this arena.
+    pub fn geom(&self) -> MatmulGeom {
+        MatmulGeom {
+            a_off: self.a_off,
+            b_off: self.b_off,
+            c_off: self.c_off,
+            lda: self.lda,
+            ldb: self.ldb,
+            ldc: self.ldc,
         }
     }
 
@@ -191,18 +224,46 @@ pub fn run_trace_only(kernel: &Kernel, scanner: &dyn Scanner, sim: &mut CacheSim
     });
 }
 
-/// Fast tiled executor: walks footpoints, replays a precomputed prototile
-/// point list for interior tiles (the lattice tiling's "miss regularity"
-/// made operational — every interior tile is the same point pattern
-/// shifted), and falls back to clipped scanning at the boundary.
+/// Reusable per-thread scratch for the panel-replay path: the packed B
+/// runs of the current tile and their clipped extents. Allocation-free in
+/// steady state.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayScratch {
+    /// Contiguous copy of the tile's clipped B runs.
+    bpack: Vec<f64>,
+    /// Per run: (offset into `bpack`, length, absolute kk, absolute i lo).
+    clipped: Vec<(usize, usize, usize, usize)>,
+}
+
+/// Fast tiled executor: walks footpoints and executes every tile through
+/// the packing + microkernel engine.
+///
+/// * **Rectangular bases** run a blocked loop nest that packs each tile's
+///   B and C operands into microkernel panels ([`PackBuffers`]) and
+///   dispatches `MR×NR` register-tiled blocks, clipping only boundary
+///   blocks.
+/// * **Skewed lattice bases with a decoupled `j` dimension** (every basis
+///   this crate's planners emit) replay the prototile's unit-stride runs:
+///   per tile the clipped B runs are packed contiguously once, then
+///   streamed through the `NR`-column axpy microkernel — the lattice
+///   tiling's "miss regularity" made operational: every interior tile is
+///   the same run pattern shifted.
+/// * **Fully coupled bases** fall back to exact clipped scalar run
+///   replay.
 pub struct TiledExecutor {
     schedule: TiledSchedule,
     /// Integer points of the prototile (footpoint 0), lexicographic.
     proto: Vec<Vec<i64>>,
     /// The prototile decomposed into maximal unit-stride runs along dim 0
-    /// (`i`): `(i0, rest…, len)` — the vectorizable inner loops of the
-    /// "generated code". 3-D only: (i0, j, kk, len).
+    /// (`i`): `(i0, j, kk, len)` — the vectorizable inner loops of the
+    /// "generated code". 3-D only.
     runs: Vec<(i64, i64, i64, i64)>,
+    /// Tile extent along `j` when the basis leaves `j` decoupled
+    /// (0 otherwise — panel replay unavailable).
+    tj: i64,
+    /// The `j = 0` cross-section of `runs` — `(i0, kk, len)`; valid for
+    /// every `j` in `[0, tj)` because the prototile factorizes.
+    jruns: Vec<(i64, i64, i64)>,
 }
 
 impl TiledExecutor {
@@ -214,6 +275,8 @@ impl TiledExecutor {
                 schedule,
                 proto: Vec::new(),
                 runs: Vec::new(),
+                tj: 0,
+                jruns: Vec::new(),
             };
         }
         let proto = prototile_points(schedule.basis());
@@ -243,10 +306,31 @@ impl TiledExecutor {
         } else {
             Vec::new()
         };
+        // Panel replay needs j decoupled: the prototile then factorizes as
+        // [0, tj) × (2-D prototile in the (i, kk) plane), so the j = 0 run
+        // cross-section is valid for every j of the tile.
+        let (tj, jruns) = {
+            let b = schedule.basis().basis();
+            let decoupled = schedule.basis().dim() == 3
+                && (0..3).all(|t| t == 1 || (b[(1, t)] == 0 && b[(t, 1)] == 0))
+                && b[(1, 1)] > 0;
+            if decoupled {
+                let jr: Vec<(i64, i64, i64)> = runs
+                    .iter()
+                    .filter(|r| r.1 == 0)
+                    .map(|r| (r.0, r.2, r.3))
+                    .collect();
+                (b[(1, 1)] as i64, jr)
+            } else {
+                (0, Vec::new())
+            }
+        };
         TiledExecutor {
             schedule,
             proto,
             runs,
+            tj,
+            jruns,
         }
     }
 
@@ -263,19 +347,25 @@ impl TiledExecutor {
         &self.runs
     }
 
-    /// Execute matmul with interior-tile replay: interior tiles run the
-    /// precomputed unit-stride runs (vectorizable inner loops — this is
-    /// the quality of code the paper's CLooG+gcc pipeline emits), boundary
-    /// tiles fall back to clipped point scanning.
+    /// Does this basis take the packed panel-replay path (skewed with a
+    /// decoupled `j`), as opposed to the scalar run-replay fallback?
+    pub fn panel_replay(&self) -> bool {
+        self.tj > 0
+    }
+
+    /// Execute the matmul over the whole domain. Rect bases run the
+    /// blocked pack + microkernel nest; skewed bases replay every tile via
+    /// [`TiledExecutor::run_tile`].
     pub fn run(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
         let extents = kernel.extents();
         let basis = self.schedule.basis();
-        let arena = &mut bufs.arena;
-        let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
-        let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+        let geom = bufs.geom();
         if basis.is_rect() {
-            // generated-code quality for rectangular tiles: a direct
-            // 6-deep blocked loop nest with unit-stride inner loop
+            // generated-code quality for rectangular tiles: a blocked
+            // nest packing each tile's operands, then MR×NR register
+            // tiles; only boundary blocks clip. k0 outermost keeps the
+            // per-element k order ascending; i0 above j0 lets the packed
+            // B block (the larger pack) survive the whole j sweep.
             let (ti, tj, tk) = (
                 basis.basis()[(0, 0)] as usize,
                 basis.basis()[(1, 1)] as usize,
@@ -286,23 +376,15 @@ impl TiledExecutor {
                 extents[1] as usize,
                 extents[2] as usize,
             );
-            for j0 in (0..n).step_by(tj) {
-                let jn = (j0 + tj).min(n);
-                for k0 in (0..k).step_by(tk) {
-                    let kn = (k0 + tk).min(k);
-                    for i0 in (0..m).step_by(ti) {
-                        let im = (i0 + ti).min(m);
-                        for j in j0..jn {
-                            for kk in k0..kn {
-                                let c = arena[c_off + kk + ldc * j];
-                                let b_base = b_off + ldb * kk;
-                                let a_base = a_off + lda * j;
-                                for i in i0..im {
-                                    let bv = arena[b_base + i];
-                                    arena[a_base + i] += bv * c;
-                                }
-                            }
-                        }
+            let arena: &mut [f64] = &mut bufs.arena;
+            let mut packs = PackBuffers::new();
+            for k0 in (0..k).step_by(tk) {
+                let kc = (k0 + tk).min(k) - k0;
+                for i0 in (0..m).step_by(ti) {
+                    let mc = (i0 + ti).min(m) - i0;
+                    for j0 in (0..n).step_by(tj) {
+                        let nc = (j0 + tj).min(n) - j0;
+                        run_rect_box(arena, geom, (i0, mc), (j0, nc), (k0, kc), &mut packs);
                     }
                 }
             }
@@ -311,14 +393,45 @@ impl TiledExecutor {
         // Skewed tiles: every tile (interior or boundary) is the translated
         // prototile clipped to the domain box, so clipped run replay is
         // exact — no per-point footpoint filtering anywhere.
-        let (m, n, k) = (extents[0], extents[1], extents[2]);
+        let arena: &mut [f64] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::default();
         self.schedule.scan_feet(extents, |foot| {
-            let origin: Vec<i128> = basis.basis().mul_vec(foot);
-            let (oi, oj, ok) = (origin[0] as i64, origin[1] as i64, origin[2] as i64);
-            for &(i0, j, kk, len) in &self.runs {
-                let jj = oj + j;
+            self.run_tile(arena, geom, extents, foot, &mut scratch);
+        });
+    }
+
+    /// Execute one (possibly boundary) tile of a skewed schedule at
+    /// footpoint `foot`: pack the tile's clipped B runs contiguously, then
+    /// stream `NR` output columns at a time through the axpy microkernel;
+    /// bases without a decoupled `j` fall back to scalar run replay.
+    /// Shared by the serial and parallel executors (`scratch` is
+    /// thread-local in the latter).
+    pub fn run_tile(
+        &self,
+        arena: &mut [f64],
+        g: MatmulGeom,
+        extents: &[i64],
+        foot: &[i128],
+        scratch: &mut ReplayScratch,
+    ) {
+        let basis = self.schedule.basis();
+        let (m, n, kext) = (extents[0], extents[1], extents[2]);
+        let origin = basis.basis().mul_vec(foot);
+        let (oi, oj, ok) = (origin[0] as i64, origin[1] as i64, origin[2] as i64);
+        if self.tj > 0 {
+            let jlo = oj.max(0);
+            let jhi = (oj + self.tj).min(n);
+            if jlo >= jhi {
+                return;
+            }
+            // pack: clip each prototile run once and copy its B values
+            // into one contiguous buffer (amortized across the tile's
+            // whole j extent)
+            scratch.bpack.clear();
+            scratch.clipped.clear();
+            for &(i0, kk, len) in &self.jruns {
                 let kkk = ok + kk;
-                if jj < 0 || jj >= n || kkk < 0 || kkk >= k {
+                if kkk < 0 || kkk >= kext {
                     continue;
                 }
                 let lo = (oi + i0).max(0);
@@ -326,17 +439,73 @@ impl TiledExecutor {
                 if lo >= hi {
                     continue;
                 }
-                let (jj, kkk) = (jj as usize, kkk as usize);
-                let c = arena[c_off + kkk + ldc * jj];
-                let b_base = b_off + ldb * kkk;
-                let a_base = a_off + lda * jj;
-                for i in lo as usize..hi as usize {
-                    let bv = arena[b_base + i];
-                    arena[a_base + i] += bv * c;
-                }
+                let pos = scratch.bpack.len();
+                let src = g.b_off + g.ldb * kkk as usize + lo as usize;
+                scratch.bpack.extend_from_slice(&arena[src..src + (hi - lo) as usize]);
+                scratch.clipped.push((pos, (hi - lo) as usize, kkk as usize, lo as usize));
             }
-        });
+            if scratch.clipped.is_empty() {
+                return;
+            }
+            // replay: NR output columns per pass share every packed B load
+            let (mut j, jhi) = (jlo as usize, jhi as usize);
+            while j < jhi {
+                let ncols = (jhi - j).min(NR);
+                for &(pos, len, kkk, lo) in &scratch.clipped {
+                    let mut cvals = [0f64; NR];
+                    for (c, cv) in cvals.iter_mut().enumerate().take(ncols) {
+                        *cv = arena[g.c_off + kkk + g.ldc * (j + c)];
+                    }
+                    let a_base = g.a_off + lo + g.lda * j;
+                    axpy_block(
+                        &mut arena[a_base..],
+                        g.lda,
+                        &scratch.bpack[pos..pos + len],
+                        &cvals[..ncols],
+                    );
+                }
+                j += NR;
+            }
+            return;
+        }
+        // fallback for fully coupled bases: exact clipped scalar replay
+        for &(i0, jr, kk, len) in &self.runs {
+            let jj = oj + jr;
+            let kkk = ok + kk;
+            if jj < 0 || jj >= n || kkk < 0 || kkk >= kext {
+                continue;
+            }
+            let lo = (oi + i0).max(0);
+            let hi = (oi + i0 + len).min(m);
+            if lo >= hi {
+                continue;
+            }
+            let (jj, kkk) = (jj as usize, kkk as usize);
+            let cv = arena[g.c_off + kkk + g.ldc * jj];
+            let b_base = g.b_off + g.ldb * kkk;
+            let a_base = g.a_off + g.lda * jj;
+            for i in lo as usize..hi as usize {
+                arena[a_base + i] += arena[b_base + i] * cv;
+            }
+        }
     }
+}
+
+/// Execute one clipped rectangular tile box `[ilo, ilo+mc) × [jlo, jlo+nc)
+/// × [klo, klo+kc)` through the pack + microkernel engine — the per-tile
+/// rect dispatch shared by the serial and parallel executors. Packed B/C
+/// blocks are reused across consecutive calls via their block keys.
+pub fn run_rect_box(
+    arena: &mut [f64],
+    g: MatmulGeom,
+    (ilo, mc): (usize, usize),
+    (jlo, nc): (usize, usize),
+    (klo, kc): (usize, usize),
+    packs: &mut PackBuffers,
+) {
+    packs.pack_b_cached(arena, g.b_off, g.ldb, ilo, mc, klo, kc);
+    packs.pack_c_cached(arena, g.c_off, g.ldc, klo, kc, jlo, nc);
+    packs.run_tile(arena, g.a_off, g.lda, ilo, jlo);
 }
 
 /// Enumerate the integer points of the prototile (footpoint 0) of a tile
@@ -444,6 +613,14 @@ mod tests {
         );
     }
 
+    fn check_executor(kernel: &Kernel, basis: TileBasis) {
+        let exec = TiledExecutor::new(TiledSchedule::new(basis));
+        let mut bufs = MatmulBuffers::from_kernel(kernel);
+        let want = bufs.reference();
+        exec.run(&mut bufs, kernel);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
     #[test]
     fn naive_orders_correct() {
         let k = ops::matmul(13, 7, 9, 8, 0);
@@ -486,11 +663,51 @@ mod tests {
             &[0, 6, 0],
             &[-1, 0, 4],
         ]));
-        let exec = TiledExecutor::new(TiledSchedule::new(basis));
-        let mut b1 = MatmulBuffers::from_kernel(&k);
-        let want = b1.reference();
-        exec.run(&mut b1, &k);
-        assert!(max_abs_diff(&want, &b1.output()) < 1e-9);
+        check_executor(&k, basis);
+    }
+
+    #[test]
+    fn rect_executor_packs_non_multiple_extents() {
+        // extents not multiples of the tile, tile not a multiple of MR/NR
+        let k = ops::matmul(21, 9, 11, 8, 0);
+        check_executor(&k, TileBasis::rect(&[10, 6, 5]));
+        // tile bigger than the whole domain
+        let k = ops::matmul(5, 3, 2, 8, 0);
+        check_executor(&k, TileBasis::rect(&[16, 16, 16]));
+    }
+
+    #[test]
+    fn rect_executor_handles_padded_layouts() {
+        let k = ops::matmul_padded(13, 7, 9, 17, 15, 11, 8, 64);
+        check_executor(&k, TileBasis::rect(&[8, 4, 4]));
+    }
+
+    #[test]
+    fn panel_replay_detection() {
+        let decoupled = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 0, 1],
+            &[0, 4, 0],
+            &[1, 0, 4],
+        ]));
+        assert!(TiledExecutor::new(TiledSchedule::new(decoupled)).panel_replay());
+        let coupled = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 1, 0],
+            &[1, 4, 0],
+            &[0, 0, 2],
+        ]));
+        assert!(!TiledExecutor::new(TiledSchedule::new(coupled)).panel_replay());
+    }
+
+    #[test]
+    fn coupled_j_basis_falls_back_and_is_correct() {
+        let k = ops::matmul(14, 15, 13, 8, 0);
+        // j coupled with i: panel replay unavailable, scalar replay exact
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 1, 0],
+            &[1, 4, 0],
+            &[0, 0, 2],
+        ]));
+        check_executor(&k, basis);
     }
 
     #[test]

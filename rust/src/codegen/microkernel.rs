@@ -1,0 +1,215 @@
+//! Register-blocked f64 microkernels — the tile-interior code quality the
+//! paper gets from CLooG+gcc, written out by hand.
+//!
+//! Two kernels, both operating on *packed*, unit-stride panels (built by
+//! [`super::pack`]) so the inner loops carry no bounds logic and no
+//! strided loads:
+//!
+//! * [`mkernel_full`] — an `MR×NR` register tile: `MR·NR` accumulators
+//!   held live across the whole k-loop (one store per output element per
+//!   tile, instead of one per k step), fed by `MR + NR` packed loads per
+//!   k step. [`mkernel_edge`] is the clipped variant for boundary blocks;
+//!   packed panels are zero-padded so it can accumulate the full block
+//!   and write back only the live `mr×nr` corner.
+//! * [`axpy_block`] — the panel-replay kernel for skewed lattice tiles:
+//!   one packed unit-stride run of B updates `NR` output columns at once,
+//!   so each B element is loaded once per `NR` FMAs.
+//!
+//! All `get_unchecked` indexing is encapsulated here, behind length
+//! asserts at entry — callers hand in plain slices.
+
+/// Microkernel register-tile rows (unit-stride output dimension).
+pub const MR: usize = 8;
+
+/// Microkernel register-tile columns.
+pub const NR: usize = 4;
+
+/// Full `MR×NR` register-tiled block over packed panels:
+///
+/// `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`
+///
+/// for `r < MR`, `c < NR`, `t < kc`. `bp` is an MR-row B panel, `cp` an
+/// NR-column C panel (layouts per [`super::pack::PackBuffers`]); `a` is
+/// the output window starting at the block's top-left element with column
+/// stride `cs`.
+pub fn mkernel_full(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
+    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(cp.len() >= kc * NR, "C panel too short");
+    assert!(cs >= MR, "output columns overlap");
+    assert!(a.len() >= (NR - 1) * cs + MR, "output window too small");
+    let mut acc = [[0f64; MR]; NR];
+    // SAFETY: the asserts above bound every index used below.
+    unsafe {
+        for t in 0..kc {
+            let b = bp.get_unchecked(t * MR..t * MR + MR);
+            let c = cp.get_unchecked(t * NR..t * NR + NR);
+            for (jc, accj) in acc.iter_mut().enumerate() {
+                let cv = *c.get_unchecked(jc);
+                for (r, av) in accj.iter_mut().enumerate() {
+                    *av += *b.get_unchecked(r) * cv;
+                }
+            }
+        }
+        for (jc, accj) in acc.iter().enumerate() {
+            let base = jc * cs;
+            for (r, &v) in accj.iter().enumerate() {
+                *a.get_unchecked_mut(base + r) += v;
+            }
+        }
+    }
+}
+
+/// Clipped `mr×nr` boundary block (`mr ≤ MR`, `nr ≤ NR`) over the same
+/// packed panels. The panels are zero-padded past the live rows/columns,
+/// so the accumulation runs the full register tile and only the write-back
+/// is clipped.
+pub fn mkernel_edge(
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    bp: &[f64],
+    cp: &[f64],
+    a: &mut [f64],
+    cs: usize,
+) {
+    assert!((1..=MR).contains(&mr) && (1..=NR).contains(&nr));
+    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(cp.len() >= kc * NR, "C panel too short");
+    assert!(a.len() >= (nr - 1) * cs + mr, "output window too small");
+    let mut acc = [[0f64; MR]; NR];
+    for t in 0..kc {
+        let b = &bp[t * MR..t * MR + MR];
+        let c = &cp[t * NR..t * NR + NR];
+        for (jc, accj) in acc.iter_mut().enumerate() {
+            let cv = c[jc];
+            for (r, av) in accj.iter_mut().enumerate() {
+                *av += b[r] * cv;
+            }
+        }
+    }
+    for (jc, accj) in acc.iter().enumerate().take(nr) {
+        for (r, &v) in accj.iter().enumerate().take(mr) {
+            a[jc * cs + r] += v;
+        }
+    }
+}
+
+/// Panel-replay kernel: one packed unit-stride run of B values updates up
+/// to `NR` output columns at once:
+///
+/// `a[r + cs·col] += b[r] · c[col]`
+///
+/// for `r < b.len()`, `col < c.len()` (`c.len() ≤ NR`). `b` is a packed
+/// (contiguous) run, `a` the output window at the run's first row of the
+/// first column. The NR-wide case is unrolled; narrower boundary blocks
+/// take the generic column loop.
+pub fn axpy_block(a: &mut [f64], cs: usize, b: &[f64], c: &[f64]) {
+    let len = b.len();
+    let ncols = c.len();
+    assert!((1..=NR).contains(&ncols), "column block of 1..=NR");
+    assert!(len <= cs, "run longer than the output column stride");
+    assert!(a.len() >= (ncols - 1) * cs + len, "output window too small");
+    if ncols == NR {
+        let (c0, c1, c2, c3) = (c[0], c[1], c[2], c[3]);
+        // SAFETY: the asserts above bound every index used below.
+        unsafe {
+            for r in 0..len {
+                let bv = *b.get_unchecked(r);
+                *a.get_unchecked_mut(r) += bv * c0;
+                *a.get_unchecked_mut(r + cs) += bv * c1;
+                *a.get_unchecked_mut(r + 2 * cs) += bv * c2;
+                *a.get_unchecked_mut(r + 3 * cs) += bv * c3;
+            }
+        }
+    } else {
+        for (col, &cv) in c.iter().enumerate() {
+            let base = col * cs;
+            // SAFETY: base + len ≤ (ncols-1)·cs + len ≤ a.len().
+            unsafe {
+                for r in 0..len {
+                    *a.get_unchecked_mut(base + r) += *b.get_unchecked(r) * cv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::testutil::Rng::new(seed);
+        (0..len).map(|_| rng.f64_unit() - 0.5).collect()
+    }
+
+    #[test]
+    fn full_kernel_matches_naive() {
+        let kc = 13;
+        let bp = fill(kc * MR, 1);
+        let cp = fill(kc * NR, 2);
+        let cs = MR + 3;
+        let mut a = fill((NR - 1) * cs + MR, 3);
+        let orig = a.clone();
+        mkernel_full(kc, &bp, &cp, &mut a, cs);
+        for jc in 0..NR {
+            for r in 0..MR {
+                let want: f64 = (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
+                let got = a[jc * cs + r] - orig[jc * cs + r];
+                assert!((got - want).abs() < 1e-12, "({r},{jc})");
+            }
+        }
+    }
+
+    #[test]
+    fn edge_kernel_writes_only_live_corner() {
+        let kc = 5;
+        let (mr, nr) = (3usize, 2usize);
+        // zero-pad the dead rows/cols as the packer does
+        let mut bp = vec![0f64; kc * MR];
+        let mut cp = vec![0f64; kc * NR];
+        for t in 0..kc {
+            for r in 0..mr {
+                bp[t * MR + r] = (t * MR + r) as f64 * 0.25 - 1.0;
+            }
+            for c in 0..nr {
+                cp[t * NR + c] = (t * NR + c) as f64 * 0.5 - 2.0;
+            }
+        }
+        let cs = MR;
+        let mut a = vec![7.0; (NR - 1) * cs + MR];
+        let sentinel = a.clone();
+        mkernel_edge(mr, nr, kc, &bp, &cp, &mut a, cs);
+        for jc in 0..NR {
+            for r in 0..MR {
+                let idx = jc * cs + r;
+                if r < mr && jc < nr {
+                    let want: f64 =
+                        (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
+                    assert!((a[idx] - 7.0 - want).abs() < 1e-12, "({r},{jc})");
+                } else {
+                    assert_eq!(a[idx], sentinel[idx], "dead element ({r},{jc}) written");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_block_all_widths() {
+        let len = 11;
+        let cs = 16;
+        let b = fill(len, 9);
+        for ncols in 1..=NR {
+            let c = fill(ncols, 10);
+            let mut a = fill((ncols - 1) * cs + len, 11);
+            let orig = a.clone();
+            axpy_block(&mut a, cs, &b, &c);
+            for (col, &cv) in c.iter().enumerate() {
+                for r in 0..len {
+                    let want = orig[col * cs + r] + b[r] * cv;
+                    assert!((a[col * cs + r] - want).abs() < 1e-12, "ncols={ncols}");
+                }
+            }
+        }
+    }
+}

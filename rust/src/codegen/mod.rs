@@ -1,16 +1,42 @@
 //! Loop-nest execution ("code generation") — DESIGN.md S9, S11.
 //!
 //! The paper generates C code with CLooG and compiles it; we execute the
-//! same traversals directly: [`executor`] walks a schedule and performs
-//! the matmul (optionally instrumented against the cache simulator),
-//! [`parallel`] adds the OpenMP-analog threaded execution over tile
-//! footpoints.
+//! same traversals directly, at the code quality the paper's CLooG+gcc
+//! pipeline emits. The executor pipeline is
+//!
+//! ```text
+//!   scan  →  pack  →  microkernel  →  clip fallback
+//! ```
+//!
+//! * **scan** — [`executor::TiledExecutor`] walks tile footpoints
+//!   ([`crate::tiling::TiledSchedule`]); every tile, interior or
+//!   boundary, is the translated prototile clipped to the domain box.
+//! * **pack** — [`pack::PackBuffers`] copies each tile's B and C operands
+//!   into contiguous, `MR`/`NR`-strided zero-padded panels, amortized
+//!   across the tile's k-loop and reused across tiles (thread-local in
+//!   the parallel path).
+//! * **microkernel** — [`microkernel`] holds the register-blocked f64
+//!   kernels: the `MR×NR` FMA register tile for rectangular tiles and the
+//!   `NR`-column axpy panel kernel replaying the unit-stride runs of
+//!   skewed lattice tiles. All unchecked indexing is encapsulated there
+//!   behind length-asserted safe entry points.
+//! * **clip fallback** — boundary blocks write back through the clipped
+//!   edge kernel; tile bases that couple the `j` dimension (which no
+//!   planner in this crate emits) drop to exact scalar run replay.
+//!
+//! [`executor`] also provides the instrumented point-wise executors
+//! (simulator-faithful traversals), and [`parallel`] adds the OpenMP-analog
+//! threaded execution over tile footpoints on the same engine.
 
 pub mod executor;
+pub mod microkernel;
+pub mod pack;
 pub mod parallel;
 
 pub use executor::{
-    max_abs_diff, run_instrumented, run_schedule, run_trace_only, tiled_executor,
-    MatmulBuffers, TiledExecutor,
+    max_abs_diff, run_instrumented, run_rect_box, run_schedule, run_trace_only,
+    tiled_executor, MatmulBuffers, MatmulGeom, ReplayScratch, TiledExecutor,
 };
+pub use microkernel::{MR, NR};
+pub use pack::PackBuffers;
 pub use parallel::run_parallel;

@@ -1,0 +1,252 @@
+//! Operand packing for the microkernel execution engine.
+//!
+//! [`PackBuffers`] copies the B and C operands of one tile into
+//! contiguous, microkernel-strided buffers:
+//!
+//! * **B panels** — `⌈mc/MR⌉` panels of `MR` consecutive rows; panel `p`
+//!   stores element `(t, r)` (k step `t`, row `r`) at
+//!   `p·kc·MR + t·MR + r`, so each k step of the microkernel reads one
+//!   contiguous `MR`-vector.
+//! * **C panels** — `⌈nc/NR⌉` panels of `NR` consecutive columns; panel
+//!   `q` stores `(t, c)` at `q·kc·NR + t·NR + c`.
+//!
+//! Rows past `mc` / columns past `nc` are zero-filled so boundary blocks
+//! can run the full register tile and clip only the write-back
+//! ([`super::microkernel::mkernel_edge`]).
+//!
+//! The packing cost is `O(mc·kc + kc·nc)` per tile against `O(mc·kc·nc)`
+//! microkernel work, i.e. amortized across the k-loop exactly as in a
+//! blocked BLAS. Buffers are reused across tiles (and are thread-local in
+//! the parallel executor) so steady-state packing performs no allocation.
+
+use super::microkernel::{mkernel_edge, mkernel_full, MR, NR};
+
+/// Reusable pack buffers + the geometry of the tile they currently hold.
+///
+/// The `*_cached` packers skip the copy when the requested block is the
+/// one already packed (keys `(i0, mc, k0, kc)` / `(k0, kc, j0, nc)`) —
+/// valid while the source operand bytes are unchanged, which holds for
+/// the executors: B and C are read-only during a run.
+#[derive(Clone, Debug, Default)]
+pub struct PackBuffers {
+    bp: Vec<f64>,
+    cp: Vec<f64>,
+    kc_b: usize,
+    kc_c: usize,
+    mc: usize,
+    nc: usize,
+    b_key: Option<(usize, usize, usize, usize)>,
+    c_key: Option<(usize, usize, usize, usize)>,
+}
+
+impl PackBuffers {
+    pub fn new() -> PackBuffers {
+        PackBuffers::default()
+    }
+
+    /// Pack `mc` rows × `kc` k-steps of B (column-major, leading dim
+    /// `ldb`, rows starting at `i0`, k starting at `k0`) into MR panels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_b(
+        &mut self,
+        src: &[f64],
+        b_off: usize,
+        ldb: usize,
+        i0: usize,
+        mc: usize,
+        k0: usize,
+        kc: usize,
+    ) {
+        assert!(mc >= 1 && kc >= 1);
+        self.kc_b = kc;
+        self.mc = mc;
+        self.b_key = Some((i0, mc, k0, kc));
+        let panels = mc.div_ceil(MR);
+        self.bp.clear();
+        self.bp.resize(panels * kc * MR, 0.0);
+        for p in 0..panels {
+            let rows = MR.min(mc - p * MR);
+            let base = p * kc * MR;
+            for t in 0..kc {
+                let srow = b_off + i0 + p * MR + ldb * (k0 + t);
+                let dst = base + t * MR;
+                self.bp[dst..dst + rows].copy_from_slice(&src[srow..srow + rows]);
+            }
+        }
+    }
+
+    /// Pack `kc` k-steps × `nc` columns of C (column-major, leading dim
+    /// `ldc`, k starting at `k0`, columns starting at `j0`) into NR
+    /// panels.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_c(
+        &mut self,
+        src: &[f64],
+        c_off: usize,
+        ldc: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        nc: usize,
+    ) {
+        assert!(nc >= 1 && kc >= 1);
+        self.kc_c = kc;
+        self.nc = nc;
+        self.c_key = Some((k0, kc, j0, nc));
+        let panels = nc.div_ceil(NR);
+        self.cp.clear();
+        self.cp.resize(panels * kc * NR, 0.0);
+        for q in 0..panels {
+            let cols = NR.min(nc - q * NR);
+            let base = q * kc * NR;
+            for c in 0..cols {
+                let col = c_off + k0 + ldc * (j0 + q * NR + c);
+                for t in 0..kc {
+                    self.cp[base + t * NR + c] = src[col + t];
+                }
+            }
+        }
+    }
+
+    /// As [`PackBuffers::pack_b`], but a no-op when the same B block is
+    /// already packed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_b_cached(
+        &mut self,
+        src: &[f64],
+        b_off: usize,
+        ldb: usize,
+        i0: usize,
+        mc: usize,
+        k0: usize,
+        kc: usize,
+    ) {
+        if self.b_key != Some((i0, mc, k0, kc)) {
+            self.pack_b(src, b_off, ldb, i0, mc, k0, kc);
+        }
+    }
+
+    /// As [`PackBuffers::pack_c`], but a no-op when the same C block is
+    /// already packed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_c_cached(
+        &mut self,
+        src: &[f64],
+        c_off: usize,
+        ldc: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        nc: usize,
+    ) {
+        if self.c_key != Some((k0, kc, j0, nc)) {
+            self.pack_c(src, c_off, ldc, k0, kc, j0, nc);
+        }
+    }
+
+    /// Run the packed tile: `A[i0+r, j0+c] += Σ_t B·C` over the packed
+    /// `mc×kc` × `kc×nc` panels, dispatching full `MR×NR` blocks to the
+    /// register-tiled microkernel and clipped boundary blocks to the edge
+    /// kernel. `a` is the whole arena slice; `a_off`/`lda` locate the
+    /// output table.
+    pub fn run_tile(&self, a: &mut [f64], a_off: usize, lda: usize, i0: usize, j0: usize) {
+        assert_eq!(self.kc_b, self.kc_c, "B and C packed with different k depths");
+        let kc = self.kc_b;
+        let bpanels = self.mc.div_ceil(MR);
+        let cpanels = self.nc.div_ceil(NR);
+        for q in 0..cpanels {
+            let nr = NR.min(self.nc - q * NR);
+            let cp = &self.cp[q * kc * NR..(q + 1) * kc * NR];
+            for p in 0..bpanels {
+                let mr = MR.min(self.mc - p * MR);
+                let bp = &self.bp[p * kc * MR..(p + 1) * kc * MR];
+                let a_base = a_off + i0 + p * MR + lda * (j0 + q * NR);
+                if mr == MR && nr == NR {
+                    mkernel_full(kc, bp, cp, &mut a[a_base..], lda);
+                } else {
+                    mkernel_edge(mr, nr, kc, bp, cp, &mut a[a_base..], lda);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(len: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::testutil::Rng::new(seed);
+        (0..len).map(|_| rng.f64_unit() - 0.5).collect()
+    }
+
+    #[test]
+    fn pack_b_layout_and_zero_fill() {
+        let (m, k, ldb) = (11usize, 5usize, 13usize);
+        let src = fill(ldb * k, 7);
+        let mut packs = PackBuffers::new();
+        packs.pack_b(&src, 0, ldb, 2, m - 2, 1, k - 1);
+        let (mc, kc) = (m - 2, k - 1);
+        let panels = mc.div_ceil(MR);
+        assert_eq!(packs.bp.len(), panels * kc * MR);
+        for p in 0..panels {
+            for t in 0..kc {
+                for r in 0..MR {
+                    let got = packs.bp[p * kc * MR + t * MR + r];
+                    if p * MR + r < mc {
+                        assert_eq!(got, src[2 + p * MR + r + ldb * (1 + t)]);
+                    } else {
+                        assert_eq!(got, 0.0, "padding must be zero");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_c_layout_and_zero_fill() {
+        let (k, n, ldc) = (6usize, 7usize, 9usize);
+        let src = fill(ldc * n, 8);
+        let mut packs = PackBuffers::new();
+        packs.pack_c(&src, 0, ldc, 1, k - 1, 2, n - 2);
+        let (kc, nc) = (k - 1, n - 2);
+        let panels = nc.div_ceil(NR);
+        assert_eq!(packs.cp.len(), panels * kc * NR);
+        for q in 0..panels {
+            for t in 0..kc {
+                for c in 0..NR {
+                    let got = packs.cp[q * kc * NR + t * NR + c];
+                    if q * NR + c < nc {
+                        assert_eq!(got, src[1 + t + ldc * (2 + q * NR + c)]);
+                    } else {
+                        assert_eq!(got, 0.0, "padding must be zero");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_tile_matches_naive_gemm() {
+        // whole-matrix "tile", non-multiple extents, padded lda
+        for (m, k, n) in [(1usize, 1usize, 1usize), (7, 5, 3), (17, 9, 13), (8, 8, 4)] {
+            let (lda, ldb, ldc) = (m + 2, m + 1, k + 3);
+            let b = fill(ldb * k, 21);
+            let c = fill(ldc * n, 22);
+            let mut a = vec![0f64; lda * n];
+            let mut packs = PackBuffers::new();
+            packs.pack_b(&b, 0, ldb, 0, m, 0, k);
+            packs.pack_c(&c, 0, ldc, 0, k, 0, n);
+            packs.run_tile(&mut a, 0, lda, 0, 0);
+            for j in 0..n {
+                for i in 0..m {
+                    let want: f64 = (0..k).map(|t| b[i + ldb * t] * c[t + ldc * j]).sum();
+                    assert!(
+                        (a[i + lda * j] - want).abs() < 1e-12,
+                        "({m},{k},{n}) at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+}

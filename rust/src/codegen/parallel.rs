@@ -4,13 +4,19 @@
 //! threads own disjoint column bands of `A` and no write races occur —
 //! the same decomposition the paper's generated `omp parallel for` over
 //! the outer tile loop produces when `j` is the outer tile dimension.
+//!
+//! Tile interiors run through the same packing + microkernel engine as
+//! the serial [`TiledExecutor`](super::executor::TiledExecutor); every
+//! worker owns thread-local [`PackBuffers`] / scratch so the hot loop
+//! performs no shared allocation.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::domain::Kernel;
 use crate::tiling::TiledSchedule;
 
-use super::executor::MatmulBuffers;
+use super::executor::{MatmulBuffers, ReplayScratch, TiledExecutor};
+use super::pack::PackBuffers;
 
 /// Execute the tiled matmul with `threads` worker threads. Footpoints are
 /// grouped by their footpoint coordinate along `partition_var` (loop-space
@@ -57,13 +63,11 @@ pub fn run_parallel(
     let groups: Vec<Vec<Vec<i128>>> = groups.into_values().collect();
 
     let extents = kernel.extents().to_vec();
-    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
-    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+    let geom = bufs.geom();
 
-    // Prototile run list: every tile (interior or boundary) replays the
-    // clipped runs — exact and allocation-free.
-    let exec = super::executor::TiledExecutor::new(schedule.clone());
-    let runs: Vec<(i64, i64, i64, i64)> = exec.runs().to_vec();
+    // The shared tile engine: rect tiles pack + microkernel per clipped
+    // tile box, skewed tiles replay packed panels (TiledExecutor::run_tile).
+    let exec = TiledExecutor::new(schedule.clone());
     let is_rect = basis.is_rect();
 
     // Work queue: group index counter.
@@ -77,9 +81,15 @@ pub fn run_parallel(
             let next = &next;
             let extents = &extents;
             let arena_ptr = &arena_ptr;
-            let runs = &runs;
+            let exec = &exec;
             scope.spawn(move || {
                 let (m, n, k) = (extents[0], extents[1], extents[2]);
+                // thread-local pack buffers + replay scratch; packed
+                // blocks are reused across consecutive tiles via their
+                // keys (run_rect_box), so nothing is re-packed when only
+                // one tile coordinate advances
+                let mut packs = PackBuffers::new();
+                let mut scratch = ReplayScratch::default();
                 loop {
                     let g = next.fetch_add(1, Ordering::Relaxed);
                     if g >= groups.len() {
@@ -91,50 +101,33 @@ pub fn run_parallel(
                     let arena: &mut [f64] =
                         unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
                     for foot in &groups[g] {
-                        let origin = basis.basis().mul_vec(foot);
-                        let (oi, oj, ok) =
-                            (origin[0] as i64, origin[1] as i64, origin[2] as i64);
                         if is_rect {
-                            // direct blocked nest over the clipped box
+                            // pack + microkernel over the clipped tile box
+                            let basis = exec.schedule().basis();
+                            let origin = basis.basis().mul_vec(foot);
+                            let (oi, oj, ok) =
+                                (origin[0] as i64, origin[1] as i64, origin[2] as i64);
                             let (ti, tj, tk) = (
                                 basis.basis()[(0, 0)] as i64,
                                 basis.basis()[(1, 1)] as i64,
                                 basis.basis()[(2, 2)] as i64,
                             );
-                            let (ilo, ihi) = ((oi).max(0).min(m), (oi + ti).max(0).min(m));
-                            let (jlo, jhi) = ((oj).max(0).min(n), (oj + tj).max(0).min(n));
-                            let (klo, khi) = ((ok).max(0).min(k), (ok + tk).max(0).min(k));
-                            for j in jlo..jhi {
-                                for kk in klo..khi {
-                                    let c = arena[c_off + kk as usize + ldc * j as usize];
-                                    let b_base = b_off + ldb * kk as usize;
-                                    let a_base = a_off + lda * j as usize;
-                                    for i in ilo as usize..ihi as usize {
-                                        let bv = arena[b_base + i];
-                                        arena[a_base + i] += bv * c;
-                                    }
-                                }
+                            let (ilo, ihi) = (oi.max(0).min(m), (oi + ti).max(0).min(m));
+                            let (jlo, jhi) = (oj.max(0).min(n), (oj + tj).max(0).min(n));
+                            let (klo, khi) = (ok.max(0).min(k), (ok + tk).max(0).min(k));
+                            if ilo >= ihi || jlo >= jhi || klo >= khi {
+                                continue;
                             }
+                            super::executor::run_rect_box(
+                                arena,
+                                geom,
+                                (ilo as usize, (ihi - ilo) as usize),
+                                (jlo as usize, (jhi - jlo) as usize),
+                                (klo as usize, (khi - klo) as usize),
+                                &mut packs,
+                            );
                         } else {
-                            for &(i0, j, kk, len) in runs {
-                                let jj = oj + j;
-                                let kkk = ok + kk;
-                                if jj < 0 || jj >= n || kkk < 0 || kkk >= k {
-                                    continue;
-                                }
-                                let lo = (oi + i0).max(0);
-                                let hi = (oi + i0 + len).min(m);
-                                if lo >= hi {
-                                    continue;
-                                }
-                                let c = arena[c_off + kkk as usize + ldc * jj as usize];
-                                let b_base = b_off + ldb * kkk as usize;
-                                let a_base = a_off + lda * jj as usize;
-                                for i in lo as usize..hi as usize {
-                                    let bv = arena[b_base + i];
-                                    arena[a_base + i] += bv * c;
-                                }
-                            }
+                            exec.run_tile(arena, geom, extents, foot, &mut scratch);
                         }
                     }
                 }
@@ -168,6 +161,18 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn parallel_matches_reference_rect_non_multiple() {
+        // extents not multiples of the tile → boundary tiles exercise the
+        // edge microkernel in every dimension
+        let k = ops::matmul(23, 19, 17, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let want = bufs.reference();
+        run_parallel(&mut bufs, &k, &s, 3, 1);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
     }
 
     #[test]

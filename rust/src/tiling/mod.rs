@@ -12,6 +12,6 @@ pub mod tile;
 pub use schedule::TiledSchedule;
 pub use selection::{
     embed_operand_tile, k_minus_one_plan, model_driven_search, plan_with_kappa,
-    rect_candidates, scaled_lattice_tile, select, TilingPlan,
+    rect_candidates, scaled_lattice_tile, select, snap_to_microkernel, TilingPlan,
 };
 pub use tile::TileBasis;

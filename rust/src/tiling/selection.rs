@@ -14,6 +14,7 @@
 //!   envisaged hybrid.
 
 use crate::cache::CacheSpec;
+use crate::codegen::microkernel::{MR, NR};
 use crate::conflict::{ConflictAnalysis, MissModel, ModelCounts};
 use crate::domain::Kernel;
 use crate::lattice::{IMat, Lattice};
@@ -92,6 +93,34 @@ pub fn scaled_lattice_tile(l: &Lattice, kappa: i128, dims: &[i64]) -> TileBasis 
         }
     }
     best.expect("at least one factorization").1
+}
+
+/// Snap a rectangular tile's microkernel-facing inner dimensions to
+/// microkernel multiples: dim 0 (the unit-stride rows fed to the `MR`-wide
+/// register tile) to a multiple of `MR`, dim 1 (the output columns) to a
+/// multiple of `NR`. Tiles that are multiples keep the register blocks
+/// full, so the boundary (clipped) kernel only ever runs on the domain
+/// boundary, not inside every tile.
+pub fn snap_to_microkernel(tile: &[i64], extents: &[i64]) -> Vec<i64> {
+    let mut t = tile.to_vec();
+    if !t.is_empty() {
+        t[0] = snap_dim(t[0], MR as i64, extents[0]);
+    }
+    if t.len() > 1 {
+        t[1] = snap_dim(t[1], NR as i64, extents[1]);
+    }
+    t
+}
+
+/// Largest multiple of `quantum` that is ≤ `size` (at least one quantum),
+/// clamped into the loop extent; degenerates gracefully when the extent is
+/// smaller than one quantum.
+fn snap_dim(size: i64, quantum: i64, extent: i64) -> i64 {
+    if extent < quantum {
+        return size.clamp(1, extent);
+    }
+    let max_mult = (extent / quantum) * quantum;
+    ((size / quantum) * quantum).clamp(quantum, max_mult)
 }
 
 /// Embed an operand-space tile into the loop space: operand dimension `r`
@@ -182,6 +211,9 @@ pub fn plan_with_kappa(
         .iter()
         .map(|&e| (mean_ext as i64).min(e).max(1))
         .collect();
+    // snap the rectangular (non-lattice) loop dims to microkernel
+    // multiples so the executor's register blocks stay full
+    let other = snap_to_microkernel(&other, kernel.extents());
     let loop_basis = embed_operand_tile(kernel, op_idx, &op_tile, &other)?;
     Some(TilingPlan {
         name: format!(
@@ -208,23 +240,32 @@ pub fn rect_candidates(kernel: &Kernel, spec: &CacheSpec) -> Vec<TilingPlan> {
         .filter(|&s| s <= *kernel.extents().iter().max().unwrap())
         .collect();
     let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let extents = kernel.extents().to_vec();
     let mut push = |tile: Vec<i64>| {
-        // rough working-set guard: Σ pairwise faces ≤ 4× cache
-        let ws: i64 = tile[0] * tile.get(2).copied().unwrap_or(1)
-            + tile.get(2).copied().unwrap_or(1) * tile.get(1).copied().unwrap_or(1)
-            + tile[0] * tile.get(1).copied().unwrap_or(1);
-        if ws > 4 * cache_elems {
-            return;
+        // score the microkernel-snapped variant alongside the raw tile
+        // (snapped first, so ties in the model prefer full register blocks)
+        for t in [snap_to_microkernel(&tile, &extents), tile] {
+            if !seen.insert(t.clone()) {
+                continue;
+            }
+            // rough working-set guard: Σ pairwise faces ≤ 4× cache
+            let ws: i64 = t[0] * t.get(2).copied().unwrap_or(1)
+                + t.get(2).copied().unwrap_or(1) * t.get(1).copied().unwrap_or(1)
+                + t[0] * t.get(1).copied().unwrap_or(1);
+            if ws > 4 * cache_elems {
+                continue;
+            }
+            out.push(TilingPlan {
+                name: format!(
+                    "rect {}",
+                    t.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x")
+                ),
+                schedule: TiledSchedule::new(TileBasis::rect(&t)),
+                lattice_operand: None,
+                predicted: None,
+            });
         }
-        out.push(TilingPlan {
-            name: format!(
-                "rect {}",
-                tile.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("x")
-            ),
-            schedule: TiledSchedule::new(TileBasis::rect(&tile)),
-            lattice_operand: None,
-            predicted: None,
-        });
     };
     // uniform cubes (the classical default)
     for &s in &sizes {
@@ -365,6 +406,36 @@ mod tests {
             "best plan {} predicted {tiled} ≥ naive {naive}",
             best.name
         );
+    }
+
+    #[test]
+    fn snap_rounds_inner_dims_to_microkernel_multiples() {
+        use crate::codegen::microkernel::{MR, NR};
+        let ext = [100i64, 100, 100];
+        let t = snap_to_microkernel(&[13, 13, 13], &ext);
+        assert_eq!(t[0] % MR as i64, 0);
+        assert_eq!(t[1] % NR as i64, 0);
+        assert_eq!(t[2], 13, "k dim untouched");
+        // never snapped to zero, never past the extent
+        let t = snap_to_microkernel(&[3, 2, 5], &ext);
+        assert_eq!(t, vec![MR as i64, NR as i64, 5]);
+        let t = snap_to_microkernel(&[13, 13], &[5, 2]);
+        assert_eq!(t, vec![5, 2], "tiny extents clamp instead of snapping");
+    }
+
+    #[test]
+    fn rect_candidates_include_snapped_variants() {
+        use crate::codegen::microkernel::{MR, NR};
+        let k = ops::matmul(100, 100, 100, 8, 0);
+        let cands = rect_candidates(&k, &CacheSpec::HASWELL_L1D);
+        assert!(cands.iter().any(|p| {
+            let b = p.schedule.basis().basis();
+            b[(0, 0)] % MR as i128 == 0 && b[(1, 1)] % NR as i128 == 0
+        }));
+        // no duplicate tile shapes
+        let names: Vec<&str> = cands.iter().map(|p| p.name.as_str()).collect();
+        let set: std::collections::HashSet<&&str> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Property tests pinning the packed / microkernel executor paths
+//! against the naive oracle: random skewed bases, non-multiple extents,
+//! padded layouts (`ops::matmul_padded`) — so boundary clipping and
+//! packing offsets can never silently regress.
+
+use latticetile::codegen::executor::{max_abs_diff, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::{run_parallel, MR, NR};
+use latticetile::domain::ops;
+use latticetile::lattice::IMat;
+use latticetile::testutil::prop_check;
+use latticetile::tiling::{TileBasis, TiledSchedule};
+
+fn check(kernel: &latticetile::domain::Kernel, basis: TileBasis, label: &str) {
+    let sched = TiledSchedule::new(basis);
+    let exec = TiledExecutor::new(sched.clone());
+    let mut bufs = MatmulBuffers::from_kernel(kernel);
+    let want = bufs.reference();
+    exec.run(&mut bufs, kernel);
+    assert!(
+        max_abs_diff(&want, &bufs.output()) < 1e-9,
+        "{label}: serial executor wrong"
+    );
+}
+
+/// Rect pack + microkernel path: random shapes and paddings, tile sizes
+/// deliberately not multiples of MR/NR (and sometimes larger than the
+/// domain) so edge blocks appear inside and on every boundary.
+#[test]
+fn prop_packed_rect_matches_reference() {
+    prop_check(20, 0x9ACC, |case, rng| {
+        let m = rng.range_i64(1, 45);
+        let k = rng.range_i64(1, 30);
+        let n = rng.range_i64(1, 40);
+        let lda = m + rng.range_i64(0, 5);
+        let ldb = m + rng.range_i64(0, 5);
+        let ldc = k + rng.range_i64(0, 5);
+        let base = rng.range_i64(0, 16) as usize * 8;
+        let kernel = ops::matmul_padded(m, k, n, lda, ldb, ldc, 8, base);
+        let tile = [
+            rng.range_i64(1, 2 * MR as i64).min(m.max(1)),
+            rng.range_i64(1, 2 * NR as i64).min(n.max(1)),
+            rng.range_i64(1, 12).min(k.max(1)),
+        ];
+        check(
+            &kernel,
+            TileBasis::rect(&tile),
+            &format!("case {case}: rect {m}x{k}x{n} lda={lda} tile={tile:?}"),
+        );
+    });
+}
+
+/// Skewed panel-replay path (j decoupled): random (i, kk)-skews, padded
+/// layouts, extents that never divide the tile.
+#[test]
+fn prop_panel_replay_matches_reference() {
+    prop_check(20, 0x5EAD, |case, rng| {
+        let m = rng.range_i64(6, 40);
+        let k = rng.range_i64(6, 34);
+        let n = rng.range_i64(6, 38);
+        let lda = m + rng.range_i64(0, 4);
+        let ldb = m + rng.range_i64(0, 4);
+        let ldc = k + rng.range_i64(0, 4);
+        let kernel = ops::matmul_padded(m, k, n, lda, ldb, ldc, 8, 0);
+        let basis = loop {
+            let b = IMat::from_rows(&[
+                &[
+                    rng.range_i64(2, 9) as i128,
+                    0,
+                    rng.range_i64(-3, 3) as i128,
+                ],
+                &[0, rng.range_i64(1, 9) as i128, 0],
+                &[
+                    rng.range_i64(-3, 3) as i128,
+                    0,
+                    rng.range_i64(2, 9) as i128,
+                ],
+            ]);
+            // require a genuine (i, kk) skew — a diagonal draw would be
+            // rect and take the pack path instead of panel replay
+            if b.det() != 0 && (b[(0, 2)] != 0 || b[(2, 0)] != 0) {
+                break b;
+            }
+        };
+        let tile = TileBasis::from_cols(basis);
+        let exec = TiledExecutor::new(TiledSchedule::new(tile.clone()));
+        assert!(
+            exec.panel_replay(),
+            "case {case}: decoupled-j basis must take the panel path"
+        );
+        check(&kernel, tile, &format!("case {case}: skewed {m}x{k}x{n}"));
+    });
+}
+
+/// Fully coupled bases (no decoupled j) must fall back to scalar replay
+/// and still be exact.
+#[test]
+fn prop_coupled_fallback_matches_reference() {
+    prop_check(12, 0xC0DE, |case, rng| {
+        let m = rng.range_i64(5, 24);
+        let k = rng.range_i64(5, 20);
+        let n = rng.range_i64(5, 22);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let basis = loop {
+            let b = IMat::from_rows(&[
+                &[rng.range_i64(2, 6) as i128, rng.range_i64(0, 2) as i128, 0],
+                &[rng.range_i64(1, 2) as i128, rng.range_i64(2, 6) as i128, 0],
+                &[0, 0, rng.range_i64(2, 6) as i128],
+            ]);
+            if b.det() != 0 {
+                break b;
+            }
+        };
+        let tile = TileBasis::from_cols(basis);
+        let exec = TiledExecutor::new(TiledSchedule::new(tile.clone()));
+        assert!(
+            !exec.panel_replay(),
+            "case {case}: coupled-j basis must fall back"
+        );
+        check(&kernel, tile, &format!("case {case}: coupled {m}x{k}x{n}"));
+    });
+}
+
+/// The parallel executor shares the engine: rect and skewed tiles under
+/// 1–4 threads must match the oracle, including non-multiple extents.
+#[test]
+fn prop_parallel_engine_matches_reference() {
+    prop_check(10, 0xFA57, |case, rng| {
+        let m = rng.range_i64(8, 36);
+        let k = rng.range_i64(8, 30);
+        let n = rng.range_i64(8, 33);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let threads = rng.range_usize(1, 4);
+        // rect
+        let tile = [
+            rng.range_i64(2, 12).min(m),
+            rng.range_i64(2, 12).min(n),
+            rng.range_i64(2, 12).min(k),
+        ];
+        let sched = TiledSchedule::new(TileBasis::rect(&tile));
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let want = bufs.reference();
+        run_parallel(&mut bufs, &kernel, &sched, threads, 1);
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: parallel rect ({threads} threads)"
+        );
+        // skewed, j decoupled
+        let basis = loop {
+            let b = IMat::from_rows(&[
+                &[rng.range_i64(2, 7) as i128, 0, rng.range_i64(-2, 2) as i128],
+                &[0, rng.range_i64(2, 7) as i128, 0],
+                &[rng.range_i64(-2, 2) as i128, 0, rng.range_i64(2, 7) as i128],
+            ]);
+            if b.det() != 0 {
+                break b;
+            }
+        };
+        let sched = TiledSchedule::new(TileBasis::from_cols(basis));
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        run_parallel(&mut bufs, &kernel, &sched, threads, 1);
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: parallel skewed ({threads} threads)"
+        );
+    });
+}
+
+/// Exact MR/NR boundary shapes: one-off extents around the register-tile
+/// sizes where an off-by-one in panel clipping would bite first.
+#[test]
+fn microkernel_boundary_shapes() {
+    let mr = MR as i64;
+    let nr = NR as i64;
+    for m in [1, mr - 1, mr, mr + 1, 2 * mr] {
+        for n in [1, nr - 1, nr, nr + 1, 3 * nr] {
+            for k in [1, 2, 7] {
+                let kernel = ops::matmul(m, k, n, 8, 0);
+                check(
+                    &kernel,
+                    TileBasis::rect(&[mr.min(m), nr.min(n), k]),
+                    &format!("boundary {m}x{k}x{n}"),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build environment has no crates.io access, so the subset of the
+//! `anyhow` API the workspace uses is reimplemented here on top of plain
+//! `String` messages: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros. Error chains are
+//! flattened into `"context: cause"` strings at attachment time, so both
+//! `{}` and `{:#}` render the full chain. Swap this path dependency for
+//! the real crate when building networked.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error`, it deliberately does
+/// NOT implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` impl below stays coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context layer (`"context: cause"`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::msg(&err)
+    }
+}
+
+/// `anyhow::Result<T>` — a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built as by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse().context("not a number")?;
+        ensure!(n < 100, "{n} too large");
+        Ok(n)
+    }
+
+    #[test]
+    fn happy_path() {
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = parse("abc").unwrap_err();
+        assert!(e.to_string().starts_with("not a number:"), "{e}");
+    }
+
+    #[test]
+    fn ensure_formats() {
+        let e = parse("105").unwrap_err();
+        assert_eq!(e.to_string(), "105 too large");
+    }
+
+    #[test]
+    fn expr_arm_accepts_trailing_comma() {
+        let msg = String::from("boom");
+        let e = crate::anyhow!(msg,);
+        assert_eq!(e.to_string(), "boom");
+    }
+
+    #[test]
+    fn bare_ensure_and_option_context() {
+        fn f(cond: bool) -> Result<()> {
+            ensure!(cond);
+            Ok(())
+        }
+        assert!(f(false).unwrap_err().to_string().contains("condition failed"));
+        let none: Option<u32> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
