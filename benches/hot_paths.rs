@@ -8,7 +8,8 @@
 use std::time::Instant;
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
-use latticetile::codegen::executor::{prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::autotune;
+use latticetile::codegen::executor::{max_abs_diff, prototile_points, MatmulBuffers, TiledExecutor};
 use latticetile::codegen::microkernel::{mkernel_full, MR, NR};
 use latticetile::conflict::MissModel;
 use latticetile::domain::{ops, IterOrder};
@@ -44,6 +45,9 @@ impl Results {
 
 fn main() {
     println!("=== hot-path microbenchmarks ===");
+    // BENCH_QUICK=1 (CI smoke): shrink the macro-kernel comparison size
+    // so the bench binary stays exercised without a long runtime
+    let quick = std::env::var("BENCH_QUICK").is_ok();
     let mut res = Results::default();
 
     // cache sim raw access rate
@@ -105,6 +109,46 @@ fn main() {
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate("rect tiled executor (packed microkernel)", (256u64).pow(3), t0.elapsed());
+
+    // the two-level macro-kernel vs the single-level per-tile engine at
+    // an L2-exceeding size (same L1 tile for both, so the delta is the
+    // macro blocking alone)
+    let big = if quick { 192i64 } else { 512 };
+    let kernel = ops::matmul(big, big, big, 8, 0);
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
+    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run_l1_only(&mut bufs, &kernel);
+    res.rate(
+        &format!("per-tile packed engine matmul n={big}"),
+        (big as u64).pow(3),
+        t0.elapsed(),
+    );
+    let want = bufs.output();
+    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel); // macro-kernel path
+    // quick (CI) runs use a different n — key the row separately so the
+    // tracked "macro-kernel matmul" trajectory only ever compares n=512
+    let macro_label = if quick {
+        format!("macro-kernel matmul n={big}")
+    } else {
+        "macro-kernel matmul".to_string()
+    };
+    res.rate(&macro_label, (big as u64).pow(3), t0.elapsed());
+    assert!(
+        max_abs_diff(&want, &bufs.output()) < 1e-9,
+        "macro-kernel diverged from the per-tile engine"
+    );
+
+    // startup register-tile calibration (one-shot cost report)
+    let t0 = Instant::now();
+    let shape = autotune::calibrate(2_000);
+    println!(
+        "autotune: {} wins in {:?} (8x4 stays the compile-time default)",
+        shape.name(),
+        t0.elapsed()
+    );
 
     // miss model throughput
     let small = ops::matmul(32, 32, 32, 8, 0);

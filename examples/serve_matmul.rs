@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         "planner: shape {m}x{k}x{n} → plan '{}' (model tile {:?}, predicted misses {}) → artifact {}",
         plan.plan_name, plan.model_tile, plan.predicted_misses, plan.artifact
     );
+    println!("planner: two-level blocking → {}", plan.describe());
 
     // deterministic inputs
     let mut seed = 0xDEADBEEFu64;

@@ -1,0 +1,92 @@
+//! One-shot startup calibration of the register-tile shape (ROADMAP:
+//! "Autotune MR×NR at startup").
+//!
+//! The packed-panel layouts are `NR`-specific, so the candidate shapes
+//! are separate kernels ([`mkernel_full`] 8×4 and [`mkernel_full_8x6`]
+//! 8×6); the calibrator times both on an L1-resident packed panel and
+//! reports the winner. `8×4` stays the compile-time default everywhere —
+//! the measured choice is only *recorded*
+//! ([`crate::runtime::Registry::set_micro_shape`]) so serving stacks can
+//! route to the wide variant once the execution engine grows an
+//! `NR_WIDE` panel path.
+
+use std::time::Instant;
+
+use super::microkernel::{mkernel_full, mkernel_full_8x6, MR, NR, NR_WIDE};
+
+/// A register-tile shape candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroShape {
+    /// The compile-time default 8×4.
+    Mr8Nr4,
+    /// The wide-vector candidate 8×6.
+    Mr8Nr6,
+}
+
+impl MicroShape {
+    /// `(MR, NR)` of the shape.
+    pub fn dims(self) -> (usize, usize) {
+        match self {
+            MicroShape::Mr8Nr4 => (MR, NR),
+            MicroShape::Mr8Nr6 => (MR, NR_WIDE),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroShape::Mr8Nr4 => "8x4",
+            MicroShape::Mr8Nr6 => "8x6",
+        }
+    }
+}
+
+/// Time both candidates on a tiny packed panel and return the shape with
+/// the higher FMA rate. Ties (within 5%) keep the compile-time default,
+/// so calibration can only ever *upgrade*. Takes ~1 ms at the default
+/// serving `reps`; the work is deterministic so repeated calls agree on
+/// a quiet machine.
+pub fn calibrate(reps: u64) -> MicroShape {
+    let kc = 128usize;
+    let bp = vec![1.000_000_1f64; kc * MR];
+    let cp4 = vec![0.999_999_9f64; kc * NR];
+    let cp6 = vec![0.999_999_9f64; kc * NR_WIDE];
+    let mut a4 = vec![0f64; (NR - 1) * MR + MR];
+    let mut a6 = vec![0f64; (NR_WIDE - 1) * MR + MR];
+    // warm both code paths and the panel lines
+    mkernel_full(kc, &bp, &cp4, &mut a4, MR);
+    mkernel_full_8x6(kc, &bp, &cp6, &mut a6, MR);
+    let t4 = Instant::now();
+    for _ in 0..reps {
+        mkernel_full(kc, &bp, &cp4, &mut a4, MR);
+    }
+    let rate4 =
+        (reps * (kc * MR * NR) as u64) as f64 / t4.elapsed().as_secs_f64().max(1e-9);
+    let t6 = Instant::now();
+    for _ in 0..reps {
+        mkernel_full_8x6(kc, &bp, &cp6, &mut a6, MR);
+    }
+    let rate6 =
+        (reps * (kc * MR * NR_WIDE) as u64) as f64 / t6.elapsed().as_secs_f64().max(1e-9);
+    // keep the optimizer honest about the accumulators
+    assert!(a4[0].is_finite() && a6[0].is_finite());
+    if rate6 > rate4 * 1.05 {
+        MicroShape::Mr8Nr6
+    } else {
+        MicroShape::Mr8Nr4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrate_returns_a_candidate_quickly() {
+        let shape = calibrate(50);
+        assert!(matches!(shape, MicroShape::Mr8Nr4 | MicroShape::Mr8Nr6));
+        let (mr, nr) = shape.dims();
+        assert_eq!(mr, MR);
+        assert!(nr == NR || nr == NR_WIDE);
+        assert!(!shape.name().is_empty());
+    }
+}

@@ -13,13 +13,13 @@
 //! ([`super::pack`], [`super::microkernel`]) instead of per-point
 //! callbacks — see the pipeline overview in [`super`].
 
-use crate::cache::CacheSim;
+use crate::cache::{CacheSim, CacheSpec};
 use crate::domain::order::Scanner;
 use crate::domain::{Kernel, OpRole};
-use crate::tiling::{TileBasis, TiledSchedule};
+use crate::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 use super::microkernel::{axpy_block, NR};
-use super::pack::PackBuffers;
+use super::pack::{run_macro_block, PackBuffers, PackedB, PackedC};
 
 /// Operand storage for a matmul kernel built by [`crate::domain::ops`]:
 /// one arena indexed by byte address / 8, so executor addresses equal
@@ -252,6 +252,9 @@ pub struct ReplayScratch {
 ///   replay.
 pub struct TiledExecutor {
     schedule: TiledSchedule,
+    /// Explicit L2/L3 macro-block shape for the rect path (None = derive
+    /// a capacity heuristic from the Haswell L2 + L3-slice specs).
+    level: Option<LevelPlan>,
     /// Integer points of the prototile (footpoint 0), lexicographic.
     proto: Vec<Vec<i64>>,
     /// The prototile decomposed into maximal unit-stride runs along dim 0
@@ -273,6 +276,7 @@ impl TiledExecutor {
             // the run list
             return TiledExecutor {
                 schedule,
+                level: None,
                 proto: Vec::new(),
                 runs: Vec::new(),
                 tj: 0,
@@ -327,11 +331,24 @@ impl TiledExecutor {
         };
         TiledExecutor {
             schedule,
+            level: None,
             proto,
             runs,
             tj,
             jruns,
         }
+    }
+
+    /// Override the derived L2/L3 macro-block shape (rect bases only;
+    /// skewed bases ignore it and replay per tile).
+    pub fn with_level_plan(mut self, level: LevelPlan) -> TiledExecutor {
+        self.level = Some(level);
+        self
+    }
+
+    /// The explicit macro-block shape, if one was set.
+    pub fn level_plan(&self) -> Option<&LevelPlan> {
+        self.level.as_ref()
     }
 
     pub fn schedule(&self) -> &TiledSchedule {
@@ -354,18 +371,66 @@ impl TiledExecutor {
     }
 
     /// Execute the matmul over the whole domain. Rect bases run the
-    /// blocked pack + microkernel nest; skewed bases replay every tile via
+    /// two-level macro-kernel ([`run_macro_matmul`]): L2/L3-sized
+    /// `mc×kc×nc` blocks packed once, L1 tiles driven inside from the
+    /// packed panels. Skewed bases replay every tile via
     /// [`TiledExecutor::run_tile`].
     pub fn run(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
         let extents = kernel.extents();
         let basis = self.schedule.basis();
         let geom = bufs.geom();
         if basis.is_rect() {
-            // generated-code quality for rectangular tiles: a blocked
-            // nest packing each tile's operands, then MR×NR register
-            // tiles; only boundary blocks clip. k0 outermost keeps the
-            // per-element k order ascending; i0 above j0 lets the packed
-            // B block (the larger pack) survive the whole j sweep.
+            let (ti, tj, tk) = (
+                basis.basis()[(0, 0)] as usize,
+                basis.basis()[(1, 1)] as usize,
+                basis.basis()[(2, 2)] as usize,
+            );
+            let (m, n, k) = (
+                extents[0] as usize,
+                extents[1] as usize,
+                extents[2] as usize,
+            );
+            let lp = self.level.unwrap_or_else(|| {
+                LevelPlan::heuristic(
+                    (ti, tj, tk),
+                    (m, n, k),
+                    &CacheSpec::HASWELL_L2,
+                    Some(&CacheSpec::HASWELL_L3_SLICE),
+                )
+            });
+            run_macro_matmul(
+                &mut bufs.arena,
+                geom,
+                (m, n, k),
+                &lp,
+                &mut PackedB::new(),
+                &mut PackedC::new(),
+            );
+            return;
+        }
+        // Skewed tiles: every tile (interior or boundary) is the translated
+        // prototile clipped to the domain box, so clipped run replay is
+        // exact — no per-point footpoint filtering anywhere.
+        let arena: &mut [f64] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::default();
+        self.schedule.scan_feet(extents, |foot| {
+            self.run_tile(arena, geom, extents, foot, &mut scratch);
+        });
+    }
+
+    /// Execute with single-level blocking only: the per-tile pack +
+    /// microkernel nest (the engine before the macro-kernel layer), kept
+    /// for A/B comparison in the benches and two-level tests. Skewed
+    /// bases behave exactly like [`TiledExecutor::run`].
+    pub fn run_l1_only(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
+        let extents = kernel.extents();
+        let basis = self.schedule.basis();
+        let geom = bufs.geom();
+        if basis.is_rect() {
+            // a blocked nest packing each tile's operands, then MR×NR
+            // register tiles; only boundary blocks clip. k0 outermost
+            // keeps the per-element k order ascending; i0 above j0 lets
+            // the packed B block (the larger pack) survive the j sweep.
             let (ti, tj, tk) = (
                 basis.basis()[(0, 0)] as usize,
                 basis.basis()[(1, 1)] as usize,
@@ -390,9 +455,6 @@ impl TiledExecutor {
             }
             return;
         }
-        // Skewed tiles: every tile (interior or boundary) is the translated
-        // prototile clipped to the domain box, so clipped run replay is
-        // exact — no per-point footpoint filtering anywhere.
         let arena: &mut [f64] = &mut bufs.arena;
         let mut scratch = ReplayScratch::default();
         self.schedule.scan_feet(extents, |foot| {
@@ -486,6 +548,58 @@ impl TiledExecutor {
             let a_base = g.a_off + g.lda * jj;
             for i in lo as usize..hi as usize {
                 arena[a_base + i] += arena[b_base + i] * cv;
+            }
+        }
+    }
+}
+
+/// Execute the whole matmul as the two-level macro/micro nest (the
+/// BLIS-style macro-kernel):
+///
+/// ```text
+///   for k0 by kc:            pack ALL mc×kc B blocks of the slice once
+///     for j0 by nc:          pack the kc×nc C block once
+///       for each B block:    run all L1 tiles from the packed panels
+/// ```
+///
+/// Each B macro block is packed exactly once (k slices partition k, row
+/// blocks partition m) and each C block once per `(k0, j0)` — the arena
+/// is streamed a number of times independent of the L1 tile size, which
+/// is what makes L2-exceeding shapes run at macro-block speed. The packed
+/// buffers are caller-owned so tests can assert the pack counts and the
+/// parallel executor can share `packed_b` read-only.
+pub fn run_macro_matmul(
+    arena: &mut [f64],
+    g: MatmulGeom,
+    (m, n, k): (usize, usize, usize),
+    lp: &LevelPlan,
+    packed_b: &mut PackedB,
+    packed_c: &mut PackedC,
+) {
+    let mc = lp.mc.max(1);
+    let kc = lp.kc.max(1);
+    let nc = lp.nc.max(1);
+    for k0 in (0..k).step_by(kc) {
+        let kcc = (k0 + kc).min(k) - k0;
+        packed_b.pack_slice(arena, g.b_off, g.ldb, m, mc, k0, kcc);
+        for j0 in (0..n).step_by(nc) {
+            let ncc = (j0 + nc).min(n) - j0;
+            packed_c.pack_block(arena, g.c_off, g.ldc, k0, kcc, j0, ncc);
+            for bi in 0..packed_b.n_blocks() {
+                let (bp, i0, mcc) = packed_b.block(bi);
+                run_macro_block(
+                    bp,
+                    mcc,
+                    packed_c.panels(),
+                    ncc,
+                    kcc,
+                    (lp.l1_tile.0, lp.l1_tile.1),
+                    arena,
+                    g.a_off,
+                    g.lda,
+                    i0,
+                    j0,
+                );
             }
         }
     }
@@ -680,6 +794,24 @@ mod tests {
     fn rect_executor_handles_padded_layouts() {
         let k = ops::matmul_padded(13, 7, 9, 17, 15, 11, 8, 64);
         check_executor(&k, TileBasis::rect(&[8, 4, 4]));
+    }
+
+    #[test]
+    fn macro_run_matches_l1_only_run() {
+        let k = ops::matmul(33, 21, 27, 8, 0);
+        let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[10, 6, 5])))
+            .with_level_plan(LevelPlan {
+                l1_tile: (10, 6, 5),
+                mc: 14,
+                kc: 9,
+                nc: 11,
+            });
+        let mut macro_bufs = MatmulBuffers::from_kernel(&k);
+        exec.run(&mut macro_bufs, &k);
+        let mut l1_bufs = MatmulBuffers::from_kernel(&k);
+        exec.run_l1_only(&mut l1_bufs, &k);
+        assert!(max_abs_diff(&macro_bufs.output(), &l1_bufs.output()) < 1e-9);
+        assert!(max_abs_diff(&macro_bufs.reference(), &macro_bufs.output()) < 1e-9);
     }
 
     #[test]

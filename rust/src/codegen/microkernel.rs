@@ -24,6 +24,13 @@ pub const MR: usize = 8;
 /// Microkernel register-tile columns.
 pub const NR: usize = 4;
 
+/// Register-tile columns of the wide autotune candidate
+/// ([`mkernel_full_8x6`]). The packed panel layouts are `NR`-specific, so
+/// the wide shape is a separate kernel; `8×4` stays the compile-time
+/// default and the startup calibrator ([`super::autotune`]) only records
+/// which shape wins on the host core.
+pub const NR_WIDE: usize = 6;
+
 /// Full `MR×NR` register-tiled block over packed panels:
 ///
 /// `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`
@@ -43,6 +50,37 @@ pub fn mkernel_full(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize)
         for t in 0..kc {
             let b = bp.get_unchecked(t * MR..t * MR + MR);
             let c = cp.get_unchecked(t * NR..t * NR + NR);
+            for (jc, accj) in acc.iter_mut().enumerate() {
+                let cv = *c.get_unchecked(jc);
+                for (r, av) in accj.iter_mut().enumerate() {
+                    *av += *b.get_unchecked(r) * cv;
+                }
+            }
+        }
+        for (jc, accj) in acc.iter().enumerate() {
+            let base = jc * cs;
+            for (r, &v) in accj.iter().enumerate() {
+                *a.get_unchecked_mut(base + r) += v;
+            }
+        }
+    }
+}
+
+/// The `MR×NR_WIDE` (8×6) register tile — identical contract to
+/// [`mkernel_full`] but over `NR_WIDE`-column C panels
+/// (`cp[t·NR_WIDE + c]`). Only the startup autotuner times it today; the
+/// execution engine stays on the 8×4 default.
+pub fn mkernel_full_8x6(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
+    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(cp.len() >= kc * NR_WIDE, "C panel too short");
+    assert!(cs >= MR, "output columns overlap");
+    assert!(a.len() >= (NR_WIDE - 1) * cs + MR, "output window too small");
+    let mut acc = [[0f64; MR]; NR_WIDE];
+    // SAFETY: the asserts above bound every index used below.
+    unsafe {
+        for t in 0..kc {
+            let b = bp.get_unchecked(t * MR..t * MR + MR);
+            let c = cp.get_unchecked(t * NR_WIDE..t * NR_WIDE + NR_WIDE);
             for (jc, accj) in acc.iter_mut().enumerate() {
                 let cv = *c.get_unchecked(jc);
                 for (r, av) in accj.iter_mut().enumerate() {
@@ -155,6 +193,26 @@ mod tests {
         for jc in 0..NR {
             for r in 0..MR {
                 let want: f64 = (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
+                let got = a[jc * cs + r] - orig[jc * cs + r];
+                assert!((got - want).abs() < 1e-12, "({r},{jc})");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_kernel_matches_naive() {
+        let kc = 11;
+        let bp = fill(kc * MR, 4);
+        let cp = fill(kc * NR_WIDE, 5);
+        let cs = MR + 2;
+        let mut a = fill((NR_WIDE - 1) * cs + MR, 6);
+        let orig = a.clone();
+        mkernel_full_8x6(kc, &bp, &cp, &mut a, cs);
+        for jc in 0..NR_WIDE {
+            for r in 0..MR {
+                let want: f64 = (0..kc)
+                    .map(|t| bp[t * MR + r] * cp[t * NR_WIDE + jc])
+                    .sum();
                 let got = a[jc * cs + r] - orig[jc * cs + r];
                 assert!((got - want).abs() < 1e-12, "({r},{jc})");
             }

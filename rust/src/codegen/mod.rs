@@ -2,41 +2,54 @@
 //!
 //! The paper generates C code with CLooG and compiles it; we execute the
 //! same traversals directly, at the code quality the paper's CLooG+gcc
-//! pipeline emits. The executor pipeline is
+//! pipeline emits. The executor pipeline is a **two-level nest**
 //!
 //! ```text
-//!   scan  →  pack  →  microkernel  →  clip fallback
+//!   macro-block  →  pack once  →  micro-tiles  →  clip fallback
 //! ```
 //!
-//! * **scan** — [`executor::TiledExecutor`] walks tile footpoints
-//!   ([`crate::tiling::TiledSchedule`]); every tile, interior or
-//!   boundary, is the translated prototile clipped to the domain box.
-//! * **pack** — [`pack::PackBuffers`] copies each tile's B and C operands
-//!   into contiguous, `MR`/`NR`-strided zero-padded panels, amortized
-//!   across the tile's k-loop and reused across tiles (thread-local in
-//!   the parallel path).
-//! * **microkernel** — [`microkernel`] holds the register-blocked f64
-//!   kernels: the `MR×NR` FMA register tile for rectangular tiles and the
-//!   `NR`-column axpy panel kernel replaying the unit-stride runs of
-//!   skewed lattice tiles. All unchecked indexing is encapsulated there
-//!   behind length-asserted safe entry points.
+//! * **macro-block** — rect schedules are partitioned into L2/L3-sized
+//!   `mc×kc×nc` blocks ([`crate::tiling::LevelPlan`]): `k` is sliced by
+//!   `kc`, rows by `mc` (the packed B block streams from L2), output
+//!   columns by `nc` (the packed C block sits in an L3 slice).
+//!   [`executor::run_macro_matmul`] walks the blocks `k0 → j0 → block`.
+//! * **pack once** — per macro block, each operand is packed exactly
+//!   once: [`pack::PackedB`] holds every `mc×kc` B block of the current
+//!   k slice (shared **read-only** across threads in the parallel path),
+//!   [`pack::PackedC`] the `kc×nc` C block of the current column band.
+//!   [`pack::PackBuffers`] remains the per-tile packer for the
+//!   single-level engine (`TiledExecutor::run_l1_only`) and the skewed
+//!   replay path; its block cache keys carry the source identity so
+//!   reuse across arenas can never replay stale panels.
+//! * **micro-tiles** — [`pack::run_macro_block`] drives all L1 tiles of
+//!   one macro block straight from the packed panels: the `MR×NR` FMA
+//!   register tile ([`microkernel`]) for full blocks, with the C
+//!   micro-panel of each L1 tile reused L1-resident across the tile's B
+//!   panels. Skewed lattice tiles replay their unit-stride runs through
+//!   the `NR`-column axpy kernel per tile, as before. All unchecked
+//!   indexing is encapsulated in [`microkernel`] behind length-asserted
+//!   safe entry points. [`autotune`] calibrates the register-tile shape
+//!   (8×4 vs 8×6) once at startup and records the winner.
 //! * **clip fallback** — boundary blocks write back through the clipped
 //!   edge kernel; tile bases that couple the `j` dimension (which no
 //!   planner in this crate emits) drop to exact scalar run replay.
 //!
 //! [`executor`] also provides the instrumented point-wise executors
 //! (simulator-faithful traversals), and [`parallel`] adds the OpenMP-analog
-//! threaded execution over tile footpoints on the same engine.
+//! threaded execution — whole `nc` column bands per worker over the shared
+//! packed B slice for rect schedules, footpoint groups for skewed ones.
 
+pub mod autotune;
 pub mod executor;
 pub mod microkernel;
 pub mod pack;
 pub mod parallel;
 
+pub use autotune::{calibrate, MicroShape};
 pub use executor::{
-    max_abs_diff, run_instrumented, run_rect_box, run_schedule, run_trace_only,
-    tiled_executor, MatmulBuffers, MatmulGeom, ReplayScratch, TiledExecutor,
+    max_abs_diff, run_instrumented, run_macro_matmul, run_rect_box, run_schedule,
+    run_trace_only, tiled_executor, MatmulBuffers, MatmulGeom, ReplayScratch, TiledExecutor,
 };
-pub use microkernel::{MR, NR};
-pub use pack::PackBuffers;
-pub use parallel::run_parallel;
+pub use microkernel::{MR, NR, NR_WIDE};
+pub use pack::{run_macro_block, PackBuffers, PackedB, PackedC};
+pub use parallel::{run_parallel, run_parallel_macro};

@@ -18,15 +18,31 @@
 //! microkernel work, i.e. amortized across the k-loop exactly as in a
 //! blocked BLAS. Buffers are reused across tiles (and are thread-local in
 //! the parallel executor) so steady-state packing performs no allocation.
+//!
+//! The macro-kernel layer packs at L2/L3 block granularity instead:
+//! [`PackedB`] holds *every* `mc×kc` B block of one k-depth slice in the
+//! same panel layout (a read-only handle shared across threads in the
+//! parallel executor), [`PackedC`] one `kc×nc` C block, and
+//! [`run_macro_block`] drives the register-tiled micro-engine over all L1
+//! tiles of one macro block straight from those panels — each operand
+//! block is packed exactly once per macro block.
 
 use super::microkernel::{mkernel_edge, mkernel_full, MR, NR};
+
+/// Cache key of a packed block: source identity (pointer, element offset,
+/// leading dim) + block coordinates. The source identity guards against
+/// replaying stale panels when one `PackBuffers` is reused across kernels
+/// or arenas whose block coordinates happen to coincide.
+type PackKey = (usize, usize, usize, usize, usize, usize, usize);
 
 /// Reusable pack buffers + the geometry of the tile they currently hold.
 ///
 /// The `*_cached` packers skip the copy when the requested block is the
-/// one already packed (keys `(i0, mc, k0, kc)` / `(k0, kc, j0, nc)`) —
-/// valid while the source operand bytes are unchanged, which holds for
-/// the executors: B and C are read-only during a run.
+/// one already packed — keyed by source identity *and* block coordinates
+/// (see [`PackKey`]) — valid while the source operand bytes are
+/// unchanged, which holds for the executors: B and C are read-only during
+/// a run. Callers that mutate the source between runs must call
+/// [`PackBuffers::invalidate`] first.
 #[derive(Clone, Debug, Default)]
 pub struct PackBuffers {
     bp: Vec<f64>,
@@ -35,13 +51,21 @@ pub struct PackBuffers {
     kc_c: usize,
     mc: usize,
     nc: usize,
-    b_key: Option<(usize, usize, usize, usize)>,
-    c_key: Option<(usize, usize, usize, usize)>,
+    b_key: Option<PackKey>,
+    c_key: Option<PackKey>,
 }
 
 impl PackBuffers {
     pub fn new() -> PackBuffers {
         PackBuffers::default()
+    }
+
+    /// Forget the cached block keys, forcing the next `*_cached` call to
+    /// repack. Call at run entry whenever the source bytes may have
+    /// changed since the buffers were last used.
+    pub fn invalidate(&mut self) {
+        self.b_key = None;
+        self.c_key = None;
     }
 
     /// Pack `mc` rows × `kc` k-steps of B (column-major, leading dim
@@ -60,7 +84,7 @@ impl PackBuffers {
         assert!(mc >= 1 && kc >= 1);
         self.kc_b = kc;
         self.mc = mc;
-        self.b_key = Some((i0, mc, k0, kc));
+        self.b_key = Some((src.as_ptr() as usize, b_off, ldb, i0, mc, k0, kc));
         let panels = mc.div_ceil(MR);
         self.bp.clear();
         self.bp.resize(panels * kc * MR, 0.0);
@@ -92,7 +116,7 @@ impl PackBuffers {
         assert!(nc >= 1 && kc >= 1);
         self.kc_c = kc;
         self.nc = nc;
-        self.c_key = Some((k0, kc, j0, nc));
+        self.c_key = Some((src.as_ptr() as usize, c_off, ldc, k0, kc, j0, nc));
         let panels = nc.div_ceil(NR);
         self.cp.clear();
         self.cp.resize(panels * kc * NR, 0.0);
@@ -121,7 +145,7 @@ impl PackBuffers {
         k0: usize,
         kc: usize,
     ) {
-        if self.b_key != Some((i0, mc, k0, kc)) {
+        if self.b_key != Some((src.as_ptr() as usize, b_off, ldb, i0, mc, k0, kc)) {
             self.pack_b(src, b_off, ldb, i0, mc, k0, kc);
         }
     }
@@ -139,7 +163,7 @@ impl PackBuffers {
         j0: usize,
         nc: usize,
     ) {
-        if self.c_key != Some((k0, kc, j0, nc)) {
+        if self.c_key != Some((src.as_ptr() as usize, c_off, ldc, k0, kc, j0, nc)) {
             self.pack_c(src, c_off, ldc, k0, kc, j0, nc);
         }
     }
@@ -165,6 +189,219 @@ impl PackBuffers {
                     mkernel_full(kc, bp, cp, &mut a[a_base..], lda);
                 } else {
                     mkernel_edge(mr, nr, kc, bp, cp, &mut a[a_base..], lda);
+                }
+            }
+        }
+    }
+}
+
+/// Every `mc×kc` B block of one k-depth slice, packed once into the
+/// microkernel panel layout and shared **read-only** across threads in
+/// the parallel macro-kernel.
+///
+/// Block `bi` covers rows `[bi·mc, bi·mc + mcc)` (clipped at `m`) and
+/// holds `⌈mcc/MR⌉` MR-row panels of depth `kc`, zero-padded past the
+/// live rows; all blocks share the stride of a full block so block
+/// lookup is O(1).
+#[derive(Clone, Debug, Default)]
+pub struct PackedB {
+    buf: Vec<f64>,
+    m: usize,
+    mc: usize,
+    kc: usize,
+    block_stride: usize,
+    packs: u64,
+}
+
+impl PackedB {
+    pub fn new() -> PackedB {
+        PackedB::default()
+    }
+
+    /// Pack every `mc`-row block of B rows `[0, m)` at k slice
+    /// `[k0, k0+kc)` (column-major source, leading dim `ldb`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_slice(
+        &mut self,
+        src: &[f64],
+        b_off: usize,
+        ldb: usize,
+        m: usize,
+        mc: usize,
+        k0: usize,
+        kc: usize,
+    ) {
+        assert!(m >= 1 && mc >= 1 && kc >= 1);
+        let mc = mc.min(m);
+        self.m = m;
+        self.mc = mc;
+        self.kc = kc;
+        let panels_per_block = mc.div_ceil(MR);
+        self.block_stride = panels_per_block * kc * MR;
+        let n_blocks = m.div_ceil(mc);
+        self.buf.clear();
+        self.buf.resize(n_blocks * self.block_stride, 0.0);
+        for bi in 0..n_blocks {
+            let i0 = bi * mc;
+            let mcc = mc.min(m - i0);
+            let base = bi * self.block_stride;
+            for p in 0..mcc.div_ceil(MR) {
+                let rows = MR.min(mcc - p * MR);
+                let pbase = base + p * kc * MR;
+                for t in 0..kc {
+                    let srow = b_off + i0 + p * MR + ldb * (k0 + t);
+                    let dst = pbase + t * MR;
+                    self.buf[dst..dst + rows].copy_from_slice(&src[srow..srow + rows]);
+                }
+            }
+            self.packs += 1;
+        }
+    }
+
+    /// Number of row blocks in the packed slice.
+    pub fn n_blocks(&self) -> usize {
+        self.m.div_ceil(self.mc)
+    }
+
+    /// Panel view of block `bi`: `(panels, i0, mcc)` — the packed panels,
+    /// the block's first absolute row, and its live row count.
+    pub fn block(&self, bi: usize) -> (&[f64], usize, usize) {
+        assert!(bi < self.n_blocks());
+        let i0 = bi * self.mc;
+        let mcc = self.mc.min(self.m - i0);
+        (
+            &self.buf[bi * self.block_stride..(bi + 1) * self.block_stride],
+            i0,
+            mcc,
+        )
+    }
+
+    /// The packed k depth of the current slice.
+    pub fn kc(&self) -> usize {
+        self.kc
+    }
+
+    /// How many B blocks have been packed over this buffer's lifetime
+    /// (each macro block counts once — the pack-amortization invariant
+    /// the tests pin).
+    pub fn pack_count(&self) -> u64 {
+        self.packs
+    }
+}
+
+/// One `kc×nc` C block packed into NR-column panels — the macro-kernel's
+/// thread-local counterpart of [`PackedB`] (each thread owns the C block
+/// of its output column band).
+#[derive(Clone, Debug, Default)]
+pub struct PackedC {
+    buf: Vec<f64>,
+    kc: usize,
+    nc: usize,
+    packs: u64,
+}
+
+impl PackedC {
+    pub fn new() -> PackedC {
+        PackedC::default()
+    }
+
+    /// Pack `kc` k-steps × `nc` columns of C (column-major, leading dim
+    /// `ldc`, k starting at `k0`, columns starting at `j0`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_block(
+        &mut self,
+        src: &[f64],
+        c_off: usize,
+        ldc: usize,
+        k0: usize,
+        kc: usize,
+        j0: usize,
+        nc: usize,
+    ) {
+        assert!(nc >= 1 && kc >= 1);
+        self.kc = kc;
+        self.nc = nc;
+        let panels = nc.div_ceil(NR);
+        self.buf.clear();
+        self.buf.resize(panels * kc * NR, 0.0);
+        for q in 0..panels {
+            let cols = NR.min(nc - q * NR);
+            let base = q * kc * NR;
+            for c in 0..cols {
+                let col = c_off + k0 + ldc * (j0 + q * NR + c);
+                for t in 0..kc {
+                    self.buf[base + t * NR + c] = src[col + t];
+                }
+            }
+        }
+        self.packs += 1;
+    }
+
+    /// The packed NR-column panels.
+    pub fn panels(&self) -> &[f64] {
+        &self.buf
+    }
+
+    /// `(kc, nc)` of the currently packed block.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.kc, self.nc)
+    }
+
+    /// How many C blocks have been packed over this buffer's lifetime.
+    pub fn pack_count(&self) -> u64 {
+        self.packs
+    }
+}
+
+/// Drive the `MR×NR` micro-engine over all L1 tiles of one macro block,
+/// straight from packed panels: `bp` is one [`PackedB`] block (`mcc` live
+/// rows), `cp` one [`PackedC`] block (`ncc` live columns), both `kc`
+/// deep. `(ti, tj)` is the L1 tile footprint — rounded up to `MR`/`NR`
+/// multiples here so L1 tiles partition the register-block grid — and
+/// `(i0, j0)` the block's top-left element of the output table at
+/// `a_off`/`lda` inside `a`.
+///
+/// The loop nest is `jt → it → q → p`: the C micro-panel of an L1 tile
+/// (`kc×NR`, L1-resident) is reused across all of the tile's B panels,
+/// while the B block streams from the outer-level cache — no packing
+/// happens here at all.
+#[allow(clippy::too_many_arguments)]
+pub fn run_macro_block(
+    bp: &[f64],
+    mcc: usize,
+    cp: &[f64],
+    ncc: usize,
+    kc: usize,
+    (ti, tj): (usize, usize),
+    a: &mut [f64],
+    a_off: usize,
+    lda: usize,
+    i0: usize,
+    j0: usize,
+) {
+    assert!(mcc >= 1 && ncc >= 1 && kc >= 1);
+    let ti = ti.div_ceil(MR).max(1) * MR;
+    let tj = tj.div_ceil(NR).max(1) * NR;
+    let bpanels = mcc.div_ceil(MR);
+    let cpanels = ncc.div_ceil(NR);
+    assert!(bp.len() >= bpanels * kc * MR, "B block panels too short");
+    assert!(cp.len() >= cpanels * kc * NR, "C block panels too short");
+    for jt in (0..ncc).step_by(tj) {
+        let q_hi = cpanels.min((jt + tj) / NR);
+        for it in (0..mcc).step_by(ti) {
+            let p_hi = bpanels.min((it + ti) / MR);
+            for q in (jt / NR)..q_hi {
+                let nr = NR.min(ncc - q * NR);
+                let cpq = &cp[q * kc * NR..(q + 1) * kc * NR];
+                for p in (it / MR)..p_hi {
+                    let mr = MR.min(mcc - p * MR);
+                    let bpp = &bp[p * kc * MR..(p + 1) * kc * MR];
+                    let a_base = a_off + i0 + p * MR + lda * (j0 + q * NR);
+                    if mr == MR && nr == NR {
+                        mkernel_full(kc, bpp, cpq, &mut a[a_base..], lda);
+                    } else {
+                        mkernel_edge(mr, nr, kc, bpp, cpq, &mut a[a_base..], lda);
+                    }
                 }
             }
         }
@@ -244,6 +481,110 @@ mod tests {
                     assert!(
                         (a[i + lda * j] - want).abs() < 1e-12,
                         "({m},{k},{n}) at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_pack_keys_include_source_identity() {
+        // regression: same block coordinates, different arena/operand —
+        // the old (i0, mc, k0, kc)-only key replayed stale panels here
+        let (m, k, ldb) = (8usize, 4usize, 8usize);
+        let a1 = vec![1.0f64; ldb * k];
+        let a2 = vec![2.0f64; ldb * k];
+        let mut packs = PackBuffers::new();
+        packs.pack_b_cached(&a1, 0, ldb, 0, m, 0, k);
+        assert_eq!(packs.bp[0], 1.0);
+        packs.pack_b_cached(&a2, 0, ldb, 0, m, 0, k);
+        assert_eq!(packs.bp[0], 2.0, "stale B panel replayed across arenas");
+        // same arena, different operand offset/ld must also repack
+        let big = fill(2 * ldb * k, 5);
+        packs.pack_b_cached(&big, 0, ldb, 0, m, 0, k);
+        let first = packs.bp[0];
+        packs.pack_b_cached(&big, ldb * k, ldb, 0, m, 0, k);
+        assert_eq!(packs.bp[0], big[ldb * k]);
+        assert_ne!(packs.bp[0], first);
+        // C side: different arenas with equal coordinates
+        let c1 = vec![3.0f64; k * 4];
+        let c2 = vec![4.0f64; k * 4];
+        packs.pack_c_cached(&c1, 0, k, 0, k, 0, 4);
+        assert_eq!(packs.cp[0], 3.0);
+        packs.pack_c_cached(&c2, 0, k, 0, k, 0, 4);
+        assert_eq!(packs.cp[0], 4.0, "stale C panel replayed across arenas");
+    }
+
+    #[test]
+    fn invalidate_forces_repack_of_mutated_source() {
+        let (m, k, ldb) = (8usize, 4usize, 8usize);
+        let mut src = vec![3.0f64; ldb * k];
+        let mut packs = PackBuffers::new();
+        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
+        src[0] = 9.0;
+        // same source + coordinates: documented to stay cached...
+        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
+        assert_eq!(packs.bp[0], 3.0);
+        // ...until the caller invalidates
+        packs.invalidate();
+        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
+        assert_eq!(packs.bp[0], 9.0);
+    }
+
+    #[test]
+    fn packed_b_slice_layout_and_blocking() {
+        let (m, k, ldb) = (21usize, 6usize, 23usize);
+        let src = fill(ldb * k, 31);
+        let (mc, k0, kc) = (9usize, 1usize, k - 1);
+        let mut pb = PackedB::new();
+        pb.pack_slice(&src, 0, ldb, m, mc, k0, kc);
+        assert_eq!(pb.n_blocks(), 3); // 9 + 9 + 3
+        assert_eq!(pb.pack_count(), 3);
+        for bi in 0..pb.n_blocks() {
+            let (panels, i0, mcc) = pb.block(bi);
+            assert_eq!(i0, bi * mc);
+            assert_eq!(mcc, mc.min(m - i0));
+            for p in 0..mcc.div_ceil(MR) {
+                for t in 0..kc {
+                    for r in 0..MR {
+                        let got = panels[p * kc * MR + t * MR + r];
+                        if p * MR + r < mcc {
+                            assert_eq!(got, src[i0 + p * MR + r + ldb * (k0 + t)]);
+                        } else {
+                            assert_eq!(got, 0.0, "padding must be zero");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn macro_block_matches_naive_gemm() {
+        // one macro block over the whole (padded) problem, L1 tiles that
+        // divide nothing evenly
+        for (m, k, n, ti, tj) in [
+            (17usize, 9usize, 13usize, 5usize, 3usize),
+            (8, 8, 4, 8, 4),
+            (1, 1, 1, 1, 1),
+            (23, 7, 19, 16, 32),
+        ] {
+            let (lda, ldb, ldc) = (m + 2, m + 1, k + 3);
+            let b = fill(ldb * k, 41);
+            let c = fill(ldc * n, 42);
+            let mut a = vec![0f64; lda * n];
+            let mut pb = PackedB::new();
+            pb.pack_slice(&b, 0, ldb, m, m, 0, k);
+            let mut pc = PackedC::new();
+            pc.pack_block(&c, 0, ldc, 0, k, 0, n);
+            let (panels, i0, mcc) = pb.block(0);
+            run_macro_block(panels, mcc, pc.panels(), n, k, (ti, tj), &mut a, 0, lda, i0, 0);
+            for j in 0..n {
+                for i in 0..m {
+                    let want: f64 = (0..k).map(|t| b[i + ldb * t] * c[t + ldc * j]).sum();
+                    assert!(
+                        (a[i + lda * j] - want).abs() < 1e-12,
+                        "({m},{k},{n}) tile ({ti},{tj}) at ({i},{j})"
                     );
                 }
             }

@@ -1,22 +1,28 @@
 //! Auto-threading — §4.0.3 (DESIGN.md S11; OpenMP substitute).
 //!
-//! Footpoints are partitioned by their `j` (output-column) footprint, so
-//! threads own disjoint column bands of `A` and no write races occur —
-//! the same decomposition the paper's generated `omp parallel for` over
-//! the outer tile loop produces when `j` is the outer tile dimension.
+//! Rect schedules run the two-level macro-kernel with parallelism over
+//! whole `nc` **column bands**: the packed B k-slice ([`PackedB`]) is
+//! built once and shared read-only across all workers — B is never
+//! re-packed thread-locally — while each worker packs the C block of its
+//! own band and writes a disjoint column range of `A`, so no write races
+//! occur. This is the same decomposition the paper's generated
+//! `omp parallel for` over the outer tile loop produces when `j` is the
+//! outer tile dimension, lifted from L1 tiles to macro blocks.
 //!
-//! Tile interiors run through the same packing + microkernel engine as
-//! the serial [`TiledExecutor`](super::executor::TiledExecutor); every
-//! worker owns thread-local [`PackBuffers`] / scratch so the hot loop
-//! performs no shared allocation.
+//! Skewed schedules keep the footpoint partition: tile interiors run
+//! through the same packing + microkernel engine as the serial
+//! [`TiledExecutor`](super::executor::TiledExecutor); every worker owns
+//! thread-local [`PackBuffers`] / scratch so the hot loop performs no
+//! shared allocation.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use crate::cache::CacheSpec;
 use crate::domain::Kernel;
-use crate::tiling::TiledSchedule;
+use crate::tiling::{LevelPlan, TiledSchedule};
 
 use super::executor::{MatmulBuffers, ReplayScratch, TiledExecutor};
-use super::pack::PackBuffers;
+use super::pack::{run_macro_block, PackBuffers, PackedB, PackedC};
 
 /// Execute the tiled matmul with `threads` worker threads. Footpoints are
 /// grouped by their footpoint coordinate along `partition_var` (loop-space
@@ -49,6 +55,14 @@ pub fn run_parallel(
                 "partition var is coupled by the tile basis"
             );
         }
+    }
+
+    // Rect bases partitioned over j take the macro-kernel band path: the
+    // packed B slice is shared across workers instead of re-packed
+    // thread-locally, and each worker owns whole nc column bands.
+    if basis.is_rect() && basis.dim() == 3 && partition_var == 1 {
+        run_parallel_macro(bufs, kernel, schedule, threads, None);
+        return;
     }
 
     // collect footpoints, grouped by the partition coordinate
@@ -136,6 +150,101 @@ pub fn run_parallel(
     });
 }
 
+/// The macro-kernel parallel path: for each `kc` k-slice the whole
+/// packed B ([`PackedB`]) is built once by the calling thread and shared
+/// **read-only** by all workers; workers then claim `nc`-wide output
+/// column bands from an atomic counter, pack their band's C block
+/// thread-locally ([`PackedC`]) and drive the L1 tiles of every B block
+/// from the shared panels. Bands are disjoint `A` column ranges, so
+/// writes never race. `level` overrides the derived macro shape.
+pub fn run_parallel_macro(
+    bufs: &mut MatmulBuffers,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    level: Option<LevelPlan>,
+) {
+    assert!(threads >= 1);
+    let basis = schedule.basis();
+    assert!(
+        basis.is_rect() && basis.dim() == 3,
+        "macro-kernel path needs a 3-D rect L1 basis"
+    );
+    let l1 = (
+        basis.basis()[(0, 0)] as usize,
+        basis.basis()[(1, 1)] as usize,
+        basis.basis()[(2, 2)] as usize,
+    );
+    let extents = kernel.extents();
+    let (m, n, k) = (
+        extents[0] as usize,
+        extents[1] as usize,
+        extents[2] as usize,
+    );
+    let lp = level.unwrap_or_else(|| {
+        LevelPlan::heuristic(
+            l1,
+            (m, n, k),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+        )
+    });
+    let mc = lp.mc.max(1);
+    let kc = lp.kc.max(1);
+    let nc = lp.nc.max(1);
+    let geom = bufs.geom();
+    let n_bands = n.div_ceil(nc);
+    let arena_len = bufs.arena.len();
+    let mut packed_b = PackedB::new();
+    for k0 in (0..k).step_by(kc) {
+        let kcc = (k0 + kc).min(k) - k0;
+        packed_b.pack_slice(&bufs.arena, geom.b_off, geom.ldb, m, mc, k0, kcc);
+        let pb = &packed_b;
+        let next = AtomicUsize::new(0);
+        let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(n_bands) {
+                let next = &next;
+                let arena_ptr = &arena_ptr;
+                scope.spawn(move || {
+                    let mut packed_c = PackedC::new();
+                    loop {
+                        let band = next.fetch_add(1, Ordering::Relaxed);
+                        if band >= n_bands {
+                            break;
+                        }
+                        let j0 = band * nc;
+                        let ncc = (j0 + nc).min(n) - j0;
+                        // SAFETY: bands are disjoint A column ranges; B/C
+                        // and the shared packed B are read-only here, so
+                        // each arena element is written by at most one
+                        // thread.
+                        let arena: &mut [f64] =
+                            unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
+                        packed_c.pack_block(arena, geom.c_off, geom.ldc, k0, kcc, j0, ncc);
+                        for bi in 0..pb.n_blocks() {
+                            let (bp, i0, mcc) = pb.block(bi);
+                            run_macro_block(
+                                bp,
+                                mcc,
+                                packed_c.panels(),
+                                ncc,
+                                kcc,
+                                (l1.0, l1.1),
+                                arena,
+                                geom.a_off,
+                                geom.lda,
+                                i0,
+                                j0,
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
 struct SendPtr(*mut f64);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
@@ -188,6 +297,29 @@ mod tests {
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 4, 1);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn parallel_macro_explicit_shape_matches_reference() {
+        // multiple macro blocks in every dimension, bands narrower than
+        // the L1 tile, threads > bands
+        let k = ops::matmul(29, 23, 26, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 5,
+        };
+        for threads in [1, 3, 8] {
+            let mut bufs = MatmulBuffers::from_kernel(&k);
+            let want = bufs.reference();
+            run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp));
+            assert!(
+                max_abs_diff(&want, &bufs.output()) < 1e-9,
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

@@ -21,12 +21,34 @@ pub struct Plan {
     pub n: usize,
     /// Tile shape the lattice model preferred (loop-space extents).
     pub model_tile: (usize, usize, usize),
+    /// Two-level macro/micro blocking: the L1 tile above driven inside
+    /// L2/L3-sized `mc×kc×nc` macro blocks, selected per level
+    /// ([`tiling::level_plan`] against the Haswell L2 + L3-slice specs).
+    pub level: tiling::LevelPlan,
     /// Name of the AOT artifact chosen to realize it.
     pub artifact: String,
     /// Predicted misses (sampled model) for the chosen schedule.
     pub predicted_misses: u64,
     /// Human-readable description of the winning plan.
     pub plan_name: String,
+}
+
+impl Plan {
+    /// One-line report of the plan including the multi-level block shape.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, artifact {}",
+            self.plan_name,
+            self.m,
+            self.k,
+            self.n,
+            self.model_tile,
+            self.level.mc,
+            self.level.kc,
+            self.level.nc,
+            self.artifact
+        )
+    }
 }
 
 /// Shape-keyed plan cache around the selector.
@@ -75,7 +97,7 @@ impl Planner {
         );
         let ranked = tiling::select(&kernel, &self.spec, self.sample_classes);
         let best = ranked.first();
-        let (tile, name, predicted) = match best {
+        let (tile, l1_tile, name, predicted) = match best {
             Some(p) => {
                 let b = p.schedule.basis();
                 let ext = |i: usize| -> usize {
@@ -85,12 +107,24 @@ impl Planner {
                 };
                 (
                     (ext(0), ext(2), ext(1)),
+                    (ext(0), ext(1), ext(2)),
                     p.name.clone(),
                     p.predicted.as_ref().map(|c| c.misses).unwrap_or(0),
                 )
             }
-            None => ((64, 64, 64), "fallback rect 64".to_string(), 0),
+            None => ((64, 64, 64), (64, 64, 64), "fallback rect 64".to_string(), 0),
         };
+        // per-level selection: run the selector against the L2 spec to
+        // seed the macro block, nc from the L3 slice — against the *true*
+        // (m, n, k), not the shrunk model instance
+        let level = tiling::level_plan(
+            &kernel,
+            (m, n, k),
+            l1_tile,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            self.sample_classes,
+        );
         let artifact = registry
             .closest_variant(m, k, n, tile)
             .map(|a| a.name.clone())
@@ -100,6 +134,7 @@ impl Planner {
             k,
             n,
             model_tile: tile,
+            level,
             artifact,
             predicted_misses: predicted,
             plan_name: name,
@@ -151,5 +186,20 @@ mod tests {
         let p = planner.plan(&reg, 64, 64, 64);
         assert!(p.artifact.contains("no artifact"));
         assert!(p.model_tile.0 > 0);
+    }
+
+    #[test]
+    fn plans_carry_and_report_macro_shape() {
+        use crate::codegen::{MR, NR};
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p = planner.plan(&reg, 512, 512, 512);
+        assert_eq!(p.level.mc % MR, 0);
+        assert_eq!(p.level.nc % NR, 0);
+        assert!(p.level.kc >= 1 && p.level.kc <= 512);
+        // the packed B block targets L2 (half capacity + MR-row slack)
+        assert!(p.level.mc * p.level.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * p.level.kc * 8);
+        let d = p.describe();
+        assert!(d.contains("macro mc="), "{d}");
     }
 }

@@ -15,10 +15,11 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::CacheSpec;
+use crate::codegen::autotune;
 use crate::runtime::{ArtifactKind, Engine, Registry};
 
 use super::metrics::Metrics;
-use super::planner::Planner;
+use super::planner::{Plan, Planner};
 
 struct Job {
     x: Vec<f32>,
@@ -38,12 +39,20 @@ pub struct Service {
     m: usize,
     k: usize,
     n: usize,
+    plan: Plan,
 }
 
 impl Service {
     /// The served output shape (m, n) per job.
     pub fn output_shape(&self) -> (usize, usize) {
         (self.m, self.n)
+    }
+
+    /// The plan chosen for the served shape — carries the two-level
+    /// `mc×kc×nc` macro-block decision alongside the L1 tile
+    /// (report with [`Plan::describe`]).
+    pub fn plan(&self) -> &Plan {
+        &self.plan
     }
 }
 
@@ -76,7 +85,10 @@ impl Service {
     /// the chosen executables, spawns the worker thread that owns the
     /// PJRT engine.
     pub fn start(artifact_dir: &Path, y: Vec<f32>, cfg: ServiceConfig) -> Result<Service> {
-        let registry = Registry::load(artifact_dir)?;
+        let mut registry = Registry::load(artifact_dir)?;
+        // one-shot startup autotune (ROADMAP): record the winning
+        // register-tile shape; 8×4 stays the compile-time default
+        registry.set_micro_shape(autotune::calibrate(2_000));
         anyhow::ensure!(
             y.len() == cfg.k * cfg.n,
             "y must be k×n = {}",
@@ -120,6 +132,7 @@ impl Service {
             m,
             k,
             n,
+            plan,
         })
     }
 
@@ -279,6 +292,7 @@ mod tests {
         )
         .unwrap();
 
+        println!("serving with {}", svc.plan().describe());
         let xs: Vec<Vec<f32>> = (0..5)
             .map(|_| (0..m * k).map(|_| rnd()).collect())
             .collect();

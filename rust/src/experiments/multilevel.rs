@@ -1,18 +1,29 @@
 //! Extension (paper §4 future work): multi-level behaviour of the chosen
-//! tilings.
+//! tilings — and of the macro-kernel that now exploits it.
 //!
 //! The paper tiles for a single level (L1) and defers multi-level tiling.
-//! This experiment quantifies what that leaves on the table: we run each
-//! plan through a two-level Haswell hierarchy (L1d 32 KiB/8-way +
-//! L2 256 KiB/8-way) and report per-level misses. An L1-optimal tile
-//! whose working set blows L2 would show here; conversely it demonstrates
-//! that L2 absorbs the L1 conflicts of the *untiled* orders only partially
-//! — motivating (as the paper anticipates) hierarchical lattice tiling.
+//! This experiment quantifies both sides: each plan runs through a
+//! two-level Haswell hierarchy (L1d 32 KiB/8-way + L2 256 KiB/8-way) and
+//! reports per-level misses, and the two-level **macro-kernel**
+//! (`run_macro_matmul`) is traced at address level — pack reads stream
+//! the arena once per macro block, micro-kernel reads hit the packed
+//! panels (which get their own simulated addresses past the arena) — so
+//! its L2 advantage over the single-level plans is *measured*, not
+//! asserted. Rows also carry executed Mops/s so the simulated and real
+//! orderings can be compared.
+
+use std::time::Instant;
 
 use crate::baseline::CompilerAnalog;
-use crate::cache::{Hierarchy, Policy};
+use crate::cache::{CacheSpec, Hierarchy, Policy};
+use crate::codegen::executor::{max_abs_diff, run_macro_matmul, run_schedule, MatmulBuffers};
+use crate::codegen::pack::{PackedB, PackedC};
+use crate::codegen::{MR, NR};
 use crate::domain::ops;
+use crate::domain::order::Scanner;
+use crate::domain::Kernel;
 use crate::experiments::fig4::hybrid_plan_for;
+use crate::tiling::LevelPlan;
 
 #[derive(Clone, Debug)]
 pub struct MultiLevelRow {
@@ -22,12 +33,170 @@ pub struct MultiLevelRow {
     pub l2_misses: u64,
     /// Simple cycle estimate from the hierarchy's latency model.
     pub est_cycles: u64,
+    /// Executed throughput of the strategy (lattice points per second,
+    /// in millions), measured on real buffers.
+    pub mops: f64,
+}
+
+/// Per-point address trace of a scanner-driven schedule (A, B, C per
+/// visited point, write-allocate output).
+pub fn trace_pointwise(kernel: &Kernel, scanner: &dyn Scanner, h: &mut Hierarchy) {
+    let bases: Vec<usize> = kernel.operands().iter().map(|o| o.table.base()).collect();
+    let lds: Vec<usize> = kernel
+        .operands()
+        .iter()
+        .map(|o| o.table.map().weights()[1] as usize)
+        .collect();
+    scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
+        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
+        h.access(bases[0] + 8 * (i + lds[0] * j));
+        h.access(bases[1] + 8 * (i + lds[1] * kk));
+        h.access(bases[2] + 8 * (kk + lds[2] * j));
+    });
+}
+
+/// The macro shape this experiment simulates: quarter-L2 packed B and C
+/// blocks, so both stay resident together with the output band during a
+/// macro block (the modelled hierarchy has no L3, so `nc` is bounded the
+/// same way as `mc`).
+pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
+    let extents = kernel.extents();
+    let (m, n, k) = (
+        extents[0] as usize,
+        extents[1] as usize,
+        extents[2] as usize,
+    );
+    let quarter = CacheSpec::HASWELL_L2.capacity / (4 * 8);
+    let kc = k.clamp(1, 128);
+    let mc = ((quarter / kc).max(MR) / MR * MR).min(m.div_ceil(MR) * MR);
+    let nc = ((quarter / kc).max(NR) / NR * NR).min(n.div_ceil(NR) * NR);
+    LevelPlan {
+        l1_tile: (32.min(m.max(1)), 32.min(n.max(1)), 32.min(k.max(1))),
+        mc,
+        kc,
+        nc,
+    }
+}
+
+/// Address-level trace of the two-level macro-kernel, mirroring
+/// `run_macro_matmul` exactly: pack reads/writes touch the arena and the
+/// packed buffers (placed line-aligned past the arena), the micro-kernel
+/// reads only packed panels, and each output element is touched once per
+/// register block per k slice.
+pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
+    let operands = kernel.operands();
+    let a_base = operands[0].table.base();
+    let b_base = operands[1].table.base();
+    let c_base = operands[2].table.base();
+    let lda = operands[0].table.map().weights()[1] as usize;
+    let ldb = operands[1].table.map().weights()[1] as usize;
+    let ldc = operands[2].table.map().weights()[1] as usize;
+    let extents = kernel.extents();
+    let (m, n, k) = (
+        extents[0] as usize,
+        extents[1] as usize,
+        extents[2] as usize,
+    );
+    let mc = lp.mc.max(1).min(m);
+    let kc = lp.kc.max(1);
+    let nc = lp.nc.max(1);
+    // packed buffers live after the arena, line-aligned, and are reused
+    // across macro blocks exactly like the real Vec allocations
+    let end = operands
+        .iter()
+        .map(|o| o.table.base() + o.table.bytes())
+        .max()
+        .unwrap();
+    let bp_base = end.div_ceil(64) * 64;
+    let n_blocks = m.div_ceil(mc);
+    // buffer bases sized by the deepest (full-kc) slice; per-slice panel
+    // strides below use the clipped kcc, exactly like the real packers
+    let full_stride = mc.div_ceil(MR) * kc * MR;
+    let cp_base = (bp_base + 8 * n_blocks * full_stride).div_ceil(64) * 64;
+    let ti = lp.l1_tile.0.div_ceil(MR).max(1) * MR;
+    let tj = lp.l1_tile.1.div_ceil(NR).max(1) * NR;
+    for k0 in (0..k).step_by(kc) {
+        let kcc = (k0 + kc).min(k) - k0;
+        let block_stride = mc.div_ceil(MR) * kcc * MR;
+        // pack the B slice: stream the arena once, write the panels
+        for bi in 0..n_blocks {
+            let i0 = bi * mc;
+            let mcc = mc.min(m - i0);
+            for p in 0..mcc.div_ceil(MR) {
+                let rows = MR.min(mcc - p * MR);
+                for t in 0..kcc {
+                    for r in 0..rows {
+                        h.access(b_base + 8 * (i0 + p * MR + r + ldb * (k0 + t)));
+                        h.access(bp_base + 8 * (bi * block_stride + p * kcc * MR + t * MR + r));
+                    }
+                }
+            }
+        }
+        for j0 in (0..n).step_by(nc) {
+            let ncc = (j0 + nc).min(n) - j0;
+            // pack the C block of this column band
+            for q in 0..ncc.div_ceil(NR) {
+                let cols = NR.min(ncc - q * NR);
+                for c in 0..cols {
+                    for t in 0..kcc {
+                        h.access(c_base + 8 * (k0 + t + ldc * (j0 + q * NR + c)));
+                        h.access(cp_base + 8 * (q * kcc * NR + t * NR + c));
+                    }
+                }
+            }
+            // macro block: L1 tiles over the packed panels
+            for bi in 0..n_blocks {
+                let i0 = bi * mc;
+                let mcc = mc.min(m - i0);
+                let bpanels = mcc.div_ceil(MR);
+                let cpanels = ncc.div_ceil(NR);
+                for jt in (0..ncc).step_by(tj) {
+                    let q_hi = cpanels.min((jt + tj) / NR);
+                    for it in (0..mcc).step_by(ti) {
+                        let p_hi = bpanels.min((it + ti) / MR);
+                        for q in (jt / NR)..q_hi {
+                            let nr = NR.min(ncc - q * NR);
+                            for p in (it / MR)..p_hi {
+                                let mr = MR.min(mcc - p * MR);
+                                for t in 0..kcc {
+                                    for r in 0..MR {
+                                        h.access(
+                                            bp_base
+                                                + 8 * (bi * block_stride
+                                                    + p * kcc * MR
+                                                    + t * MR
+                                                    + r),
+                                        );
+                                    }
+                                    for c in 0..NR {
+                                        h.access(cp_base + 8 * (q * kcc * NR + t * NR + c));
+                                    }
+                                }
+                                for c in 0..nr {
+                                    for r in 0..mr {
+                                        h.access(
+                                            a_base
+                                                + 8 * (i0
+                                                    + p * MR
+                                                    + r
+                                                    + lda * (j0 + q * NR + c)),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
     let mut rows = Vec::new();
     for &n in sizes {
         let kernel = ops::matmul(n, n, n, 8, 0);
+        let points = (n * n * n) as u64;
         let mut entries: Vec<(String, Box<dyn crate::domain::order::Scanner>)> = vec![
             (
                 CompilerAnalog::GccO0.name().to_string(),
@@ -49,26 +218,51 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
 
         for (strategy, scanner) in entries {
             let mut h = Hierarchy::haswell(Policy::Lru);
-            let bases: Vec<usize> = kernel.operands().iter().map(|o| o.table.base()).collect();
-            let lds: Vec<usize> = kernel
-                .operands()
-                .iter()
-                .map(|o| o.table.map().weights()[1] as usize)
-                .collect();
-            scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
-                let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
-                h.access(bases[0] + 8 * (i + lds[0] * j));
-                h.access(bases[1] + 8 * (i + lds[1] * kk));
-                h.access(bases[2] + 8 * (kk + lds[2] * j));
-            });
+            trace_pointwise(&kernel, scanner.as_ref(), &mut h);
+            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let t0 = Instant::now();
+            run_schedule(&mut bufs, &kernel, scanner.as_ref());
+            let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
             rows.push(MultiLevelRow {
                 n,
                 strategy,
                 l1_misses: h.level(0).stats().misses(),
                 l2_misses: h.level(1).stats().misses(),
                 est_cycles: h.cost_model(),
+                mops,
             });
         }
+
+        // the two-level macro-kernel: simulated trace + real execution
+        let lp = macro_plan_for(&kernel);
+        let mut h = Hierarchy::haswell(Policy::Lru);
+        trace_macro_kernel(&kernel, &lp, &mut h);
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let want = bufs.reference();
+        let geom = bufs.geom();
+        let dims = (n as usize, n as usize, n as usize);
+        let t0 = Instant::now();
+        run_macro_matmul(
+            &mut bufs.arena,
+            geom,
+            dims,
+            &lp,
+            &mut PackedB::new(),
+            &mut PackedC::new(),
+        );
+        let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "macro-kernel diverged from the oracle at n={n}"
+        );
+        rows.push(MultiLevelRow {
+            n,
+            strategy: "macro-kernel".to_string(),
+            l1_misses: h.level(0).stats().misses(),
+            l2_misses: h.level(1).stats().misses(),
+            est_cycles: h.cost_model(),
+            mops,
+        });
     }
     rows
 }
@@ -96,5 +290,26 @@ mod tests {
         for r in run(&[64]) {
             assert!(r.l2_misses <= r.l1_misses, "{}", r.strategy);
         }
+    }
+
+    #[test]
+    fn macro_kernel_lowers_l2_misses_at_l2_exceeding_sizes() {
+        // at n=160 the 3·n²·8 B arena is ~2.3× the 256 KiB L2, so the
+        // single-level plan re-streams operands through L2 while the
+        // macro-kernel's packed blocks stay resident
+        let n = 160i64;
+        let kernel = ops::matmul(n, n, n, 8, 0);
+        let (_, plan) = hybrid_plan_for(n, &CacheSpec::HASWELL_L1D);
+        let mut h1 = Hierarchy::haswell(Policy::Lru);
+        trace_pointwise(&kernel, &plan, &mut h1);
+        let mut h2 = Hierarchy::haswell(Policy::Lru);
+        let lp = macro_plan_for(&kernel);
+        trace_macro_kernel(&kernel, &lp, &mut h2);
+        let single = h1.level(1).stats().misses();
+        let multi = h2.level(1).stats().misses();
+        assert!(
+            multi < single,
+            "macro-kernel L2 misses {multi} not below single-level {single}"
+        );
     }
 }

@@ -422,7 +422,7 @@ fn bench_model_cost() {
 fn bench_multilevel() {
     println!("extension — two-level hierarchy behaviour of the plans:\n");
     let rows = experiments::multilevel::run(&[96, 128]);
-    let mut t = Table::new(&["n", "strategy", "L1 misses", "L2 misses", "est cycles"]);
+    let mut t = Table::new(&["n", "strategy", "L1 misses", "L2 misses", "est cycles", "Mops/s"]);
     for r in rows {
         t.row(vec![
             r.n.to_string(),
@@ -430,6 +430,7 @@ fn bench_multilevel() {
             r.l1_misses.to_string(),
             r.l2_misses.to_string(),
             r.est_cycles.to_string(),
+            format!("{:.1}", r.mops),
         ]);
     }
     t.print();

@@ -52,6 +52,10 @@ pub struct ArtifactMeta {
 pub struct Registry {
     dir: PathBuf,
     artifacts: Vec<ArtifactMeta>,
+    /// Startup-calibrated register-tile shape
+    /// ([`crate::codegen::autotune::calibrate`]); `None` until a host
+    /// has run the one-shot calibration.
+    micro_shape: Option<crate::codegen::autotune::MicroShape>,
 }
 
 impl Registry {
@@ -90,11 +94,22 @@ impl Registry {
         Ok(Registry {
             dir: dir.to_path_buf(),
             artifacts,
+            micro_shape: None,
         })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Record the startup-calibrated register-tile shape.
+    pub fn set_micro_shape(&mut self, shape: crate::codegen::autotune::MicroShape) {
+        self.micro_shape = Some(shape);
+    }
+
+    /// The calibrated register-tile shape, if calibration has run.
+    pub fn micro_shape(&self) -> Option<crate::codegen::autotune::MicroShape> {
+        self.micro_shape
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {

@@ -11,7 +11,7 @@ pub mod tile;
 
 pub use schedule::TiledSchedule;
 pub use selection::{
-    embed_operand_tile, k_minus_one_plan, model_driven_search, plan_with_kappa,
-    rect_candidates, scaled_lattice_tile, select, snap_to_microkernel, TilingPlan,
+    embed_operand_tile, k_minus_one_plan, level_plan, model_driven_search, plan_with_kappa,
+    rect_candidates, scaled_lattice_tile, select, snap_to_microkernel, LevelPlan, TilingPlan,
 };
 pub use tile::TileBasis;

@@ -22,6 +22,114 @@ use crate::lattice::{IMat, Lattice};
 use super::schedule::TiledSchedule;
 use super::tile::TileBasis;
 
+/// A two-level tiling decision: the L1 tile the paper's selector picks,
+/// driven inside BLIS-style `mc×kc×nc` macro blocks sized for the outer
+/// cache levels (L2 for the packed B block, an L3 slice for the packed C
+/// block). Executed by [`crate::codegen::executor::run_macro_matmul`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelPlan {
+    /// L1 tile footprint `(ti, tj, tk)` in loop space (i, j, kk).
+    pub l1_tile: (usize, usize, usize),
+    /// Macro-block rows of the packed B block (`MR`-aligned).
+    pub mc: usize,
+    /// Macro-block k depth shared by the packed B and C blocks.
+    pub kc: usize,
+    /// Macro-block output columns (`NR`-aligned) — the parallel unit.
+    pub nc: usize,
+}
+
+impl LevelPlan {
+    /// Capacity-driven macro shape: `mc×kc` sized to half of `l2` so the
+    /// packed B block stays L2-resident while streaming, `nc` sized so
+    /// the packed C block fits half an `l3` slice (whole output width
+    /// when no L3 is modelled).
+    pub fn heuristic(
+        l1_tile: (usize, usize, usize),
+        extents: (usize, usize, usize),
+        l2: &CacheSpec,
+        l3: Option<&CacheSpec>,
+    ) -> LevelPlan {
+        let (m, n, k) = extents;
+        let elem = 8usize; // f64 engine
+        let half_l2 = (l2.capacity / (2 * elem)).max(MR);
+        // deep k first: kc is the only k blocking between the macro level
+        // and the registers, and it amortizes the A write-back
+        let kc = k.clamp(1, 256.max(l1_tile.2));
+        let mc = round_down_mult(half_l2 / kc, MR)
+            .clamp(MR, round_up_mult(m, MR));
+        let nc = match l3 {
+            Some(l3) => {
+                let cap = (l3.capacity / (2 * elem * kc)).max(NR);
+                round_down_mult(cap, NR).clamp(NR, round_up_mult(n, NR))
+            }
+            None => round_up_mult(n, NR),
+        };
+        LevelPlan { l1_tile, mc, kc, nc }
+    }
+}
+
+/// Largest multiple of `q` that is ≤ `v` (0 when `v < q`).
+fn round_down_mult(v: usize, q: usize) -> usize {
+    (v / q) * q
+}
+
+/// Smallest multiple of `q` that is ≥ `v` (at least one quantum).
+fn round_up_mult(v: usize, q: usize) -> usize {
+    v.div_ceil(q).max(1) * q
+}
+
+/// Model-driven macro shape: run the existing selector against the
+/// *outer*-level spec (`l2`) to seed the `mc×kc` block — the same K−1
+/// lattice rule + sampled-model search the L1 tile comes from, just
+/// against the next level's associativity lattice — then grow the seed
+/// to the level's capacity (the selector's candidate set is bounded, so
+/// growth keeps its aspect ratio). `extents` is the true `(m, n, k)` to
+/// block, which may exceed the (possibly shrunk) model kernel's box.
+pub fn level_plan(
+    kernel: &Kernel,
+    extents: (usize, usize, usize),
+    l1_tile: (usize, usize, usize),
+    l2: &CacheSpec,
+    l3: Option<&CacheSpec>,
+    sample_classes: usize,
+) -> LevelPlan {
+    let (m, n, k) = extents;
+    let ranked = select(kernel, l2, sample_classes);
+    let seed = ranked
+        .first()
+        .map(|p| {
+            let b = p.schedule.basis();
+            let ext = |i: usize| -> usize {
+                (0..b.dim())
+                    .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
+                    .sum()
+            };
+            (ext(0).max(1), ext(2).max(1))
+        })
+        .unwrap_or((l1_tile.0.max(MR), l1_tile.2.max(1)));
+    let elem = 8usize;
+    let half_l2 = (l2.capacity / (2 * elem)).max(MR);
+    let (mut mc, mut kc) = seed;
+    mc = round_up_mult(mc, MR);
+    let mc_cap = round_up_mult(m, MR);
+    while 2 * kc <= k && mc * 2 * kc <= half_l2 {
+        kc *= 2;
+    }
+    while mc + MR <= mc_cap && (mc + MR) * kc <= half_l2 {
+        mc += MR;
+    }
+    kc = kc.min(k.max(1));
+    mc = mc.min(mc_cap).max(MR);
+    let nc = match l3 {
+        Some(l3) => {
+            let cap = (l3.capacity / (2 * elem * kc)).max(NR);
+            round_down_mult(cap, NR).clamp(NR, round_up_mult(n, NR))
+        }
+        None => round_up_mult(n, NR),
+    };
+    LevelPlan { l1_tile, mc, kc, nc }
+}
+
 /// A fully specified tiling decision for a kernel.
 #[derive(Clone, Debug)]
 pub struct TilingPlan {
@@ -436,6 +544,48 @@ mod tests {
         let names: Vec<&str> = cands.iter().map(|p| p.name.as_str()).collect();
         let set: std::collections::HashSet<&&str> = names.iter().collect();
         assert_eq!(set.len(), names.len());
+    }
+
+    #[test]
+    fn heuristic_level_plan_is_aligned_and_bounded() {
+        let lp = LevelPlan::heuristic(
+            (32, 32, 32),
+            (512, 512, 512),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+        );
+        assert_eq!(lp.mc % MR, 0);
+        assert_eq!(lp.nc % NR, 0);
+        assert!(lp.kc >= 1 && lp.kc <= 512);
+        // packed B block fits half of L2
+        assert!(lp.mc * lp.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * lp.kc * 8);
+        // packed C block fits half the L3 slice
+        assert!(lp.kc * lp.nc * 8 <= CacheSpec::HASWELL_L3_SLICE.capacity / 2 + NR * lp.kc * 8);
+        // tiny problems degenerate to a single macro block
+        let small = LevelPlan::heuristic((8, 8, 8), (24, 24, 24), &CacheSpec::HASWELL_L2, None);
+        assert!(small.mc >= 24 && small.nc >= 24 && small.kc == 24);
+    }
+
+    #[test]
+    fn model_level_plan_targets_l2() {
+        let k = ops::matmul(64, 64, 64, 8, 0);
+        let lp = level_plan(
+            &k,
+            (512, 512, 512),
+            (32, 32, 32),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        assert_eq!(lp.mc % MR, 0);
+        assert_eq!(lp.nc % NR, 0);
+        assert!(lp.kc >= 1 && lp.kc <= 512);
+        assert!(lp.mc >= MR && lp.nc >= NR);
+        // the grown block must use a decent fraction of L2 without
+        // overflowing half of it (+ one MR row of slack from growth)
+        let half_l2_elems = CacheSpec::HASWELL_L2.capacity / 16;
+        assert!(lp.mc * lp.kc <= half_l2_elems + MR * lp.kc);
+        assert!(lp.mc * lp.kc >= half_l2_elems / 4, "block far too small");
     }
 
     #[test]

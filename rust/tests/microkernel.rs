@@ -1,14 +1,18 @@
 //! Property tests pinning the packed / microkernel executor paths
 //! against the naive oracle: random skewed bases, non-multiple extents,
 //! padded layouts (`ops::matmul_padded`) — so boundary clipping and
-//! packing offsets can never silently regress.
+//! packing offsets can never silently regress. The two-level tests do
+//! the same for the macro-kernel: random `mc×kc×nc` macro shapes that
+//! divide neither the L1 tile nor MR/NR, plus the pack-once invariant.
 
-use latticetile::codegen::executor::{max_abs_diff, MatmulBuffers, TiledExecutor};
-use latticetile::codegen::{run_parallel, MR, NR};
+use latticetile::codegen::executor::{
+    max_abs_diff, run_macro_matmul, MatmulBuffers, TiledExecutor,
+};
+use latticetile::codegen::{run_parallel, run_parallel_macro, PackedB, PackedC, MR, NR};
 use latticetile::domain::ops;
 use latticetile::lattice::IMat;
 use latticetile::testutil::prop_check;
-use latticetile::tiling::{TileBasis, TiledSchedule};
+use latticetile::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 fn check(kernel: &latticetile::domain::Kernel, basis: TileBasis, label: &str) {
     let sched = TiledSchedule::new(basis);
@@ -161,6 +165,117 @@ fn prop_parallel_engine_matches_reference() {
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
             "case {case}: parallel skewed ({threads} threads)"
+        );
+    });
+}
+
+/// Two-level macro-kernel: random macro shapes — `mc/kc/nc` deliberately
+/// not multiples of the L1 tile or of MR/NR — over padded layouts with
+/// non-zero arena bases, against the naive oracle.
+#[test]
+fn prop_macro_kernel_matches_reference() {
+    prop_check(20, 0x2CE1, |case, rng| {
+        let m = rng.range_i64(1, 50);
+        let k = rng.range_i64(1, 40);
+        let n = rng.range_i64(1, 45);
+        let lda = m + rng.range_i64(0, 5);
+        let ldb = m + rng.range_i64(0, 5);
+        let ldc = k + rng.range_i64(0, 5);
+        let base = rng.range_i64(0, 8) as usize * 8;
+        let kernel = ops::matmul_padded(m, k, n, lda, ldb, ldc, 8, base);
+        let lp = LevelPlan {
+            l1_tile: (
+                rng.range_usize(1, 20),
+                rng.range_usize(1, 16),
+                rng.range_usize(1, 12),
+            ),
+            mc: rng.range_usize(1, 24),
+            kc: rng.range_usize(1, 20),
+            nc: rng.range_usize(1, 22),
+        };
+        let tile = [
+            (lp.l1_tile.0 as i64).min(m),
+            (lp.l1_tile.1 as i64).min(n),
+            (lp.l1_tile.2 as i64).min(k),
+        ];
+        let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&tile)))
+            .with_level_plan(lp);
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let want = bufs.reference();
+        exec.run(&mut bufs, &kernel);
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: macro {m}x{k}x{n} lda={lda} lp={lp:?}"
+        );
+    });
+}
+
+/// The pack-amortization invariant the macro-kernel exists for: each B
+/// macro block is packed exactly once, each C block once per
+/// (k-slice, column band) — counted, not assumed.
+#[test]
+fn macro_kernel_packs_each_b_block_exactly_once() {
+    let (m, k, n) = (37usize, 29, 31);
+    let kernel = ops::matmul(m as i64, k as i64, n as i64, 8, 0);
+    let lp = LevelPlan {
+        l1_tile: (8, 8, 8),
+        mc: 16,
+        kc: 12,
+        nc: 10,
+    };
+    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let want = bufs.reference();
+    let geom = bufs.geom();
+    let mut pb = PackedB::new();
+    let mut pc = PackedC::new();
+    run_macro_matmul(&mut bufs.arena, geom, (m, n, k), &lp, &mut pb, &mut pc);
+    assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    let kslices = k.div_ceil(lp.kc) as u64;
+    let bblocks = m.div_ceil(lp.mc) as u64;
+    let cbands = n.div_ceil(lp.nc) as u64;
+    assert_eq!(
+        pb.pack_count(),
+        kslices * bblocks,
+        "B pack count per macro block must be exactly 1"
+    );
+    assert_eq!(
+        pc.pack_count(),
+        kslices * cbands,
+        "C pack count per (k-slice, band) must be exactly 1"
+    );
+}
+
+/// The macro-kernel parallel path: random macro shapes, whole-nc column
+/// bands per worker over the shared packed B, 1–4 threads.
+#[test]
+fn prop_parallel_macro_matches_reference() {
+    prop_check(10, 0xBA2D, |case, rng| {
+        let m = rng.range_i64(8, 40);
+        let k = rng.range_i64(8, 30);
+        let n = rng.range_i64(8, 36);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let threads = rng.range_usize(1, 4);
+        let lp = LevelPlan {
+            l1_tile: (
+                rng.range_usize(4, 12),
+                rng.range_usize(4, 12),
+                rng.range_usize(4, 12),
+            ),
+            mc: rng.range_usize(4, 20),
+            kc: rng.range_usize(4, 16),
+            nc: rng.range_usize(4, 18),
+        };
+        let sched = TiledSchedule::new(TileBasis::rect(&[
+            (lp.l1_tile.0 as i64).min(m),
+            (lp.l1_tile.1 as i64).min(n),
+            (lp.l1_tile.2 as i64).min(k),
+        ]));
+        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let want = bufs.reference();
+        run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp));
+        assert!(
+            max_abs_diff(&want, &bufs.output()) < 1e-9,
+            "case {case}: parallel macro {m}x{k}x{n} ({threads} threads) lp={lp:?}"
         );
     });
 }
