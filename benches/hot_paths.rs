@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::autotune;
-use latticetile::codegen::executor::{max_abs_diff, prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::executor::{max_abs_diff, prototile_points, KernelBuffers, TiledExecutor};
 use latticetile::codegen::microkernel::{mkernel_full, MR, NR};
 use latticetile::conflict::MissModel;
 use latticetile::domain::{ops, IterOrder};
@@ -98,14 +98,14 @@ fn main() {
     println!("prototile size: {} points", proto.len());
 
     let exec = TiledExecutor::new(TiledSchedule::new(basis));
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate("packed tile replay", (256u64).pow(3), t0.elapsed());
 
     // rect tiles through the same pack + microkernel engine
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate("rect tiled executor (packed microkernel)", (256u64).pow(3), t0.elapsed());
@@ -116,7 +116,7 @@ fn main() {
     let big = if quick { 192i64 } else { 512 };
     let kernel = ops::matmul(big, big, big, 8, 0);
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run_l1_only(&mut bufs, &kernel);
     res.rate(
@@ -125,7 +125,7 @@ fn main() {
         t0.elapsed(),
     );
     let want = bufs.output();
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel); // macro-kernel path
     // quick (CI) runs use a different n — key the row separately so the
@@ -141,11 +141,42 @@ fn main() {
         "macro-kernel diverged from the per-tile engine"
     );
 
+    // Table-1 workload diversity: convolution and Kronecker through the
+    // same packed micro/macro engine (kernel-agnostic RunPlan path) —
+    // tracked from day one so the generalized engine can't regress
+    // silently. BENCH_QUICK shrinks the sizes (different label keys, so
+    // the full-size trajectories stay comparable across PRs).
+    let conv_n = if quick { 1i64 << 15 } else { 1 << 20 };
+    let kernel = ops::convolution(conv_n, 8, 0);
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[256])));
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    res.rate(
+        &format!("packed engine convolution n={conv_n}"),
+        conv_n as u64,
+        t0.elapsed(),
+    );
+    assert!(bufs.output()[0].is_finite());
+
+    let kb = if quick { 12i64 } else { 24 };
+    let kernel = ops::kronecker(kb, kb, kb, kb, 8, 0);
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[8, 8, 8, 8])));
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    res.rate(
+        &format!("packed engine kronecker {kb}^4"),
+        (kb as u64).pow(4),
+        t0.elapsed(),
+    );
+    assert!(bufs.output()[0].is_finite());
+
     // startup register-tile calibration (one-shot cost report)
     let t0 = Instant::now();
     let shape = autotune::calibrate(2_000);
     println!(
-        "autotune: {} wins in {:?} (8x4 stays the compile-time default)",
+        "autotune: {} wins in {:?} (the packed engine dispatches the winner)",
         shape.name(),
         t0.elapsed()
     );

@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
-use latticetile::codegen::executor::{MatmulBuffers, TiledExecutor};
+use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
 use latticetile::codegen::{max_abs_diff, run_trace_only};
 use latticetile::conflict::MissModel;
 use latticetile::domain::{ops, IterOrder, JointDomain};
@@ -79,7 +79,7 @@ fn main() {
     run_trace_only(&kernel, &schedule, &mut sim_tiled);
 
     let exec = TiledExecutor::new(schedule);
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let want = bufs.reference();
     let t0 = std::time::Instant::now();
     exec.run(&mut bufs, &kernel);

@@ -12,7 +12,7 @@ use crate::domain::{IterOrder, Kernel};
 use crate::tiling::{TileBasis, TiledSchedule};
 
 use super::refblas;
-use crate::codegen::executor::MatmulBuffers;
+use crate::codegen::executor::KernelBuffers;
 
 /// The baseline set of Figure 4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -87,10 +87,25 @@ impl CompilerAnalog {
     /// for the untiled analogs (compilers emit real loops, not
     /// point-callbacks), the tuned blocked GEMM for the O3/icc class, and
     /// the run-replaying tiled executor for graphite.
-    pub fn execute(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
-        let (m, k, n) = (bufs.m as usize, bufs.k as usize, bufs.n as usize);
-        let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
-        let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
+    pub fn execute(&self, bufs: &mut KernelBuffers, kernel: &Kernel) {
+        // the analogs are matmul-specific by design (they model compiler
+        // output for the paper's GEMM benchmark): read the column-major
+        // geometry straight off the kernel's tables
+        assert_eq!(kernel.name(), "matmul");
+        let extents = kernel.extents();
+        let (m, n, k) = (
+            extents[0] as usize,
+            extents[1] as usize,
+            extents[2] as usize,
+        );
+        let tab = |i: usize| kernel.operand(i).table.clone();
+        let (a, b, c) = (tab(0), tab(1), tab(2));
+        let (a_off, b_off, c_off) = (a.base() / 8, b.base() / 8, c.base() / 8);
+        let (lda, ldb, ldc) = (
+            a.map().weights()[1] as usize,
+            b.map().weights()[1] as usize,
+            c.map().weights()[1] as usize,
+        );
         match self {
             CompilerAnalog::GccO3 | CompilerAnalog::IccO3 => {
                 // split the arena to get simultaneous &mut a, &b, &c —
@@ -172,7 +187,7 @@ mod tests {
     fn all_analogs_compute_correct_result() {
         let k = ops::matmul(33, 29, 31, 8, 0);
         for analog in CompilerAnalog::ALL {
-            let mut bufs = MatmulBuffers::from_kernel(&k);
+            let mut bufs = KernelBuffers::from_kernel(&k);
             let want = bufs.reference();
             analog.execute(&mut bufs, &k);
             assert!(

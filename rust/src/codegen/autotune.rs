@@ -1,14 +1,17 @@
 //! One-shot startup calibration of the register-tile shape (ROADMAP:
 //! "Autotune MR×NR at startup").
 //!
-//! The packed-panel layouts are `NR`-specific, so the candidate shapes
+//! The packed-panel layouts are width-specific, so the candidate shapes
 //! are separate kernels ([`mkernel_full`] 8×4 and [`mkernel_full_8x6`]
 //! 8×6); the calibrator times both on an L1-resident packed panel and
-//! reports the winner. `8×4` stays the compile-time default everywhere —
-//! the measured choice is only *recorded*
-//! ([`crate::runtime::Registry::set_micro_shape`]) so serving stacks can
-//! route to the wide variant once the execution engine grows an
-//! `NR_WIDE` panel path.
+//! reports the winner. The measured choice is recorded in the registry
+//! ([`crate::runtime::Registry::set_micro_shape`]) and the packed
+//! engine **dispatches it**: the planner threads it into
+//! [`Plan`](crate::coordinator::Plan), and
+//! [`TiledExecutor::with_micro_shape`](crate::codegen::TiledExecutor::with_micro_shape)
+//! / [`run_parallel_macro`](crate::codegen::run_parallel_macro) select
+//! the const-generic `NRW` panel path. `8×4` remains the default when no
+//! calibration has run.
 
 use std::time::Instant;
 

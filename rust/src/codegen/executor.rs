@@ -1,337 +1,218 @@
 //! Schedule-faithful executors — the stand-in for the paper's
-//! CLooG-generated loop nests (DESIGN.md S9).
+//! CLooG-generated loop nests (DESIGN.md S9), kernel-agnostic since the
+//! `RunPlan` refactor.
 //!
-//! [`MatmulBuffers`] owns the operand storage laid out exactly as the
+//! [`KernelBuffers`] owns the operand storage laid out exactly as the
 //! kernel's [`Table`](crate::index::Table)s describe (padding, base
-//! offsets); executors walk a [`Scanner`] (plain or tiled schedule) and
-//! perform `A[i,j] += B[i,kk] · C[kk,j]` per visited point, optionally
+//! offsets); the point-wise executors walk a [`Scanner`] (plain or tiled
+//! schedule) and perform `out[π₀(f)] += in1[π₁(f)] · in2[π₂(f)]` per
+//! visited point through the composed [`OperandView`]s, optionally
 //! touching a [`CacheSim`] with the three byte addresses — so simulated
-//! miss counts correspond 1:1 to the executed schedule.
+//! miss counts correspond 1:1 to the executed schedule, for *any*
+//! Table-1 kernel.
 //!
 //! [`TiledExecutor`] is the fast path: tile interiors run through the
-//! packing + register-blocked microkernel engine
-//! ([`super::pack`], [`super::microkernel`]) instead of per-point
-//! callbacks — see the pipeline overview in [`super`].
+//! packing + register-blocked microkernel engine ([`super::pack`],
+//! [`super::microkernel`]) driven by the [`RunPlan`] IR instead of
+//! per-point callbacks — see the pipeline overview in [`super`].
 
 use crate::cache::{CacheSim, CacheSpec};
 use crate::domain::order::Scanner;
 use crate::domain::{Kernel, OpRole};
 use crate::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
-use super::microkernel::{axpy_block, NR};
-use super::pack::{run_macro_block, PackBuffers, PackedB, PackedC};
+use super::autotune::MicroShape;
+use super::microkernel::{axpy_block, NR, NR_WIDE};
+use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
+use super::runplan::{kernel_views, GemmForm, OperandView, RunPlan};
 
-/// Operand storage for a matmul kernel built by [`crate::domain::ops`]:
-/// one arena indexed by byte address / 8, so executor addresses equal
-/// simulator addresses.
-#[derive(Clone, Debug)]
-pub struct MatmulBuffers {
-    pub m: i64,
-    pub k: i64,
-    pub n: i64,
-    /// Arena of f64 covering all three tables (indexed in elements).
-    pub arena: Vec<f64>,
-    /// Element offsets and leading dims of A, B, C.
-    pub a_off: usize,
-    pub b_off: usize,
-    pub c_off: usize,
-    pub lda: usize,
-    pub ldb: usize,
-    pub ldc: usize,
-}
+pub use super::runplan::KernelBuffers;
 
-/// Element offsets and leading dimensions of the three operands inside
-/// one arena — the geometry the executors thread through the packing and
-/// microkernel layers.
-#[derive(Clone, Copy, Debug)]
-pub struct MatmulGeom {
-    pub a_off: usize,
-    pub b_off: usize,
-    pub c_off: usize,
-    pub lda: usize,
-    pub ldb: usize,
-    pub ldc: usize,
-}
-
-impl MatmulBuffers {
-    /// Allocate and deterministically initialize from a matmul kernel
-    /// (B, C pseudorandom; A zero).
-    pub fn from_kernel(kernel: &Kernel) -> MatmulBuffers {
-        assert_eq!(kernel.name(), "matmul");
-        let (m, n, k) = (
-            kernel.extents()[0],
-            kernel.extents()[1],
-            kernel.extents()[2],
-        );
-        let ops = kernel.operands();
-        let elem = ops[0].table.elem();
-        assert_eq!(elem, 8, "f64 only");
-        let end = ops
-            .iter()
-            .map(|o| o.table.base() + o.table.bytes())
-            .max()
-            .unwrap();
-        let mut arena = vec![0f64; end / 8];
-        // deterministic xorshift fill for the inputs
-        let mut state = 0x9E3779B97F4A7C15u64;
-        let mut rnd = move || {
-            state ^= state << 13;
-            state ^= state >> 7;
-            state ^= state << 17;
-            ((state >> 11) as f64 / (1u64 << 53) as f64) - 0.5
-        };
-        for op in &ops[1..=2] {
-            let t = &op.table;
-            for j in 0..t.dims()[1] {
-                for i in 0..t.dims()[0] {
-                    arena[t.addr(&[i, j]) / 8] = rnd();
-                }
-            }
-        }
-        MatmulBuffers {
-            m,
-            k,
-            n,
-            arena,
-            a_off: ops[0].table.base() / 8,
-            b_off: ops[1].table.base() / 8,
-            c_off: ops[2].table.base() / 8,
-            lda: ops[0].table.map().weights()[1] as usize,
-            ldb: ops[1].table.map().weights()[1] as usize,
-            ldc: ops[2].table.map().weights()[1] as usize,
-        }
-    }
-
-    /// The operand geometry (offsets + leading dims) of this arena.
-    pub fn geom(&self) -> MatmulGeom {
-        MatmulGeom {
-            a_off: self.a_off,
-            b_off: self.b_off,
-            c_off: self.c_off,
-            lda: self.lda,
-            ldb: self.ldb,
-            ldc: self.ldc,
-        }
-    }
-
-    #[inline(always)]
-    pub fn a_idx(&self, i: i64, j: i64) -> usize {
-        self.a_off + i as usize + self.lda * j as usize
-    }
-
-    #[inline(always)]
-    pub fn b_idx(&self, i: i64, kk: i64) -> usize {
-        self.b_off + i as usize + self.ldb * kk as usize
-    }
-
-    #[inline(always)]
-    pub fn c_idx(&self, kk: i64, j: i64) -> usize {
-        self.c_off + kk as usize + self.ldc * j as usize
-    }
-
-    /// Reset the output to zero (between schedule runs).
-    pub fn reset_output(&mut self) {
-        for j in 0..self.n {
-            for i in 0..self.m {
-                let idx = self.a_idx(i, j);
-                self.arena[idx] = 0.0;
-            }
-        }
-    }
-
-    /// Copy of the output matrix (column-major m×n).
-    pub fn output(&self) -> Vec<f64> {
-        let mut out = Vec::with_capacity((self.m * self.n) as usize);
-        for j in 0..self.n {
-            for i in 0..self.m {
-                out.push(self.arena[self.a_idx(i, j)]);
-            }
-        }
-        out
-    }
-
-    /// Reference result computed by the naive oracle (fresh buffers).
-    pub fn reference(&self) -> Vec<f64> {
-        let mut out = vec![0f64; (self.m * self.n) as usize];
-        for j in 0..self.n {
-            for kk in 0..self.k {
-                let ckj = self.arena[self.c_idx(kk, j)];
-                for i in 0..self.m {
-                    out[(i + self.m * j) as usize] += self.arena[self.b_idx(i, kk)] * ckj;
-                }
-            }
-        }
-        out
-    }
-}
-
-/// Execute the matmul following `scanner`'s visit order. Returns nothing;
+/// Execute the kernel following `scanner`'s visit order. Returns nothing;
 /// the result accumulates into `bufs.arena`.
-pub fn run_schedule(bufs: &mut MatmulBuffers, kernel: &Kernel, scanner: &dyn Scanner) {
+pub fn run_schedule(bufs: &mut KernelBuffers, kernel: &Kernel, scanner: &dyn Scanner) {
+    let views = kernel_views(kernel);
+    let (v0, v1, v2) = (&views[0], &views[1], &views[2]);
     let arena = &mut bufs.arena;
-    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
-    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
     scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
-        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
-        let b = arena[b_off + i + ldb * kk];
-        let c = arena[c_off + kk + ldc * j];
-        arena[a_off + i + lda * j] += b * c;
+        let prod = arena[v1.idx(f)] * arena[v2.idx(f)];
+        arena[v0.idx(f)] += prod;
     });
 }
 
 /// Execute while feeding every touched byte address through the cache
-/// simulator, in operand order A, B, C per point (write-allocate, i.e. the
-/// output is touched like a read-modify-write).
+/// simulator, in operand order (out, in1, in2) per point (write-allocate,
+/// i.e. the output is touched like a read-modify-write).
 pub fn run_instrumented(
-    bufs: &mut MatmulBuffers,
+    bufs: &mut KernelBuffers,
     kernel: &Kernel,
     scanner: &dyn Scanner,
     sim: &mut CacheSim,
 ) {
-    let a_base = kernel.operand(0).table.base();
-    let b_base = kernel.operand(1).table.base();
-    let c_base = kernel.operand(2).table.base();
+    let views = kernel_views(kernel);
+    let (v0, v1, v2) = (&views[0], &views[1], &views[2]);
     let arena = &mut bufs.arena;
-    let (a_off, b_off, c_off) = (bufs.a_off, bufs.b_off, bufs.c_off);
-    let (lda, ldb, ldc) = (bufs.lda, bufs.ldb, bufs.ldc);
     scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
-        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
-        sim.access(a_base + 8 * (i + lda * j));
-        sim.access(b_base + 8 * (i + ldb * kk));
-        sim.access(c_base + 8 * (kk + ldc * j));
-        let b = arena[b_off + i + ldb * kk];
-        let c = arena[c_off + kk + ldc * j];
-        arena[a_off + i + lda * j] += b * c;
+        sim.access(v0.addr(f));
+        sim.access(v1.addr(f));
+        sim.access(v2.addr(f));
+        let prod = arena[v1.idx(f)] * arena[v2.idx(f)];
+        arena[v0.idx(f)] += prod;
     });
 }
 
 /// Trace-only variant: feed addresses to the simulator without computing
 /// (for pure miss-count sweeps; ~3× faster than instrumented execution).
 pub fn run_trace_only(kernel: &Kernel, scanner: &dyn Scanner, sim: &mut CacheSim) {
-    let bases: Vec<usize> = kernel.operands().iter().map(|o| o.table.base()).collect();
-    let lds: Vec<usize> = kernel
-        .operands()
-        .iter()
-        .map(|o| o.table.map().weights()[1] as usize)
-        .collect();
-    let ranks_ok = kernel.operands().iter().all(|o| o.table.rank() == 2);
-    assert!(ranks_ok, "run_trace_only expects 2-D operands (matmul)");
+    let views = kernel_views(kernel);
     scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
-        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
-        sim.access(bases[0] + 8 * (i + lds[0] * j));
-        sim.access(bases[1] + 8 * (i + lds[1] * kk));
-        sim.access(bases[2] + 8 * (kk + lds[2] * j));
+        for v in &views {
+            sim.access(v.addr(f));
+        }
     });
 }
 
-/// Reusable per-thread scratch for the panel-replay path: the packed B
-/// runs of the current tile and their clipped extents. Allocation-free in
-/// steady state.
+/// Reusable per-thread scratch for the panel-replay path: the packed
+/// row-operand runs of the current tile and their clipped extents.
+/// Allocation-free in steady state.
 #[derive(Clone, Debug, Default)]
 pub struct ReplayScratch {
-    /// Contiguous copy of the tile's clipped B runs.
+    /// Contiguous copy of the tile's clipped row-operand runs.
     bpack: Vec<f64>,
-    /// Per run: (offset into `bpack`, length, absolute kk, absolute i lo).
-    clipped: Vec<(usize, usize, usize, usize)>,
+    /// Per run: (offset into `bpack`, length, absolute red coord,
+    /// absolute row lo).
+    clipped: Vec<(usize, usize, i64, i64)>,
 }
 
-/// Fast tiled executor: walks footpoints and executes every tile through
-/// the packing + microkernel engine.
+/// The 3-D GEMM axes of a skewed replay (loop dims of the row, column and
+/// reduction axes) plus the output column stride.
+#[derive(Clone, Copy, Debug)]
+struct ReplayAxes {
+    row: usize,
+    col: usize,
+    red: usize,
+    /// Output element stride per column step.
+    cs: i64,
+}
+
+/// Precomputed per-(kernel, schedule) state for executing *skewed* tiles:
+/// the prototile's unit-stride run decomposition in GEMM axes, the
+/// operand views, and the panel-replay cross-section. Built once per run
+/// (or once before spawning workers in the parallel executor) and shared
+/// read-only.
 ///
-/// * **Rectangular bases** run a blocked loop nest that packs each tile's
-///   B and C operands into microkernel panels ([`PackBuffers`]) and
-///   dispatches `MR×NR` register-tiled blocks, clipping only boundary
-///   blocks.
-/// * **Skewed lattice bases with a decoupled `j` dimension** (every basis
-///   this crate's planners emit) replay the prototile's unit-stride runs:
-///   per tile the clipped B runs are packed contiguously once, then
-///   streamed through the `NR`-column axpy microkernel — the lattice
-///   tiling's "miss regularity" made operational: every interior tile is
-///   the same run pattern shifted.
-/// * **Fully coupled bases** fall back to exact clipped scalar run
-///   replay.
-pub struct TiledExecutor {
-    schedule: TiledSchedule,
-    /// Explicit L2/L3 macro-block shape for the rect path (None = derive
-    /// a capacity heuristic from the Haswell L2 + L3-slice specs).
-    level: Option<LevelPlan>,
-    /// Integer points of the prototile (footpoint 0), lexicographic.
+/// Three execution strategies, chosen at construction:
+///
+/// * **panel replay** (`panel_replay()`): 3-D GEMM-form kernels whose
+///   basis leaves the column axis decoupled — every tile replays the
+///   prototile's packed unit-stride runs through the `NR`-column axpy
+///   microkernel.
+/// * **scalar run replay**: 3-D GEMM-form kernels with a coupled column
+///   axis — exact clipped scalar replay of the prototile runs.
+/// * **point fallback** (`axes = None`): everything else (non-3-D or
+///   non-GEMM kernels under skewed bases) — exact per-point evaluation
+///   via [`TileBasis::scan_tile`] through the operand views.
+pub struct ReplayPlan {
+    basis: TileBasis,
+    views: Vec<OperandView>,
+    axes: Option<ReplayAxes>,
+    /// Integer points of the prototile (footpoint 0), lexicographic —
+    /// only computed for the run-replay strategies.
     proto: Vec<Vec<i64>>,
-    /// The prototile decomposed into maximal unit-stride runs along dim 0
-    /// (`i`): `(i0, j, kk, len)` — the vectorizable inner loops of the
-    /// "generated code". 3-D only.
+    /// Prototile runs in GEMM axes: `(row0, col, red, len)`.
     runs: Vec<(i64, i64, i64, i64)>,
-    /// Tile extent along `j` when the basis leaves `j` decoupled
-    /// (0 otherwise — panel replay unavailable).
+    /// Tile extent along the column axis when decoupled (0 otherwise).
     tj: i64,
-    /// The `j = 0` cross-section of `runs` — `(i0, kk, len)`; valid for
-    /// every `j` in `[0, tj)` because the prototile factorizes.
+    /// The `col = 0` cross-section of `runs` — `(row0, red, len)`; valid
+    /// for every column of the tile because the prototile factorizes.
     jruns: Vec<(i64, i64, i64)>,
 }
 
-impl TiledExecutor {
-    pub fn new(schedule: TiledSchedule) -> TiledExecutor {
-        if schedule.basis().is_rect() {
-            // the rect fast path in run() needs neither the prototile nor
-            // the run list
-            return TiledExecutor {
-                schedule,
-                level: None,
-                proto: Vec::new(),
-                runs: Vec::new(),
-                tj: 0,
-                jruns: Vec::new(),
-            };
-        }
-        let proto = prototile_points(schedule.basis());
-        let runs = if schedule.basis().dim() == 3 {
-            // group by (j, kk), merge consecutive i
-            let mut pts: Vec<(i64, i64, i64)> =
-                proto.iter().map(|p| (p[1], p[2], p[0])).collect();
+impl ReplayPlan {
+    pub fn new(kernel: &Kernel, schedule: &TiledSchedule) -> ReplayPlan {
+        let basis = schedule.basis().clone();
+        let views = kernel_views(kernel);
+        let d = basis.dim();
+        assert_eq!(d, kernel.n_free(), "schedule/kernel dimension mismatch");
+        // replay needs the 3-D GEMM normal form with one axis per group
+        // and unit stride on the row axis for both the output and the row
+        // operand
+        let axes = GemmForm::of(kernel).and_then(|gf| {
+            if d != 3 || gf.row_axes.len() != 1 || gf.col_axes.len() != 1 {
+                return None;
+            }
+            let (row, col) = (gf.row_axes[0], gf.col_axes[0]);
+            let red = (0..3).find(|t| *t != row && *t != col).unwrap();
+            let (vo, vr, _) = gf.role_views(&views);
+            if vo.w[row] != 1 || vr.w[row] != 1 {
+                return None;
+            }
+            let mut v = views.clone();
+            if gf.swap {
+                v.swap(1, 2);
+            }
+            Some((ReplayAxes { row, col, red, cs: views[0].w[col] }, v))
+        });
+        let (axes, views) = match axes {
+            Some((a, v)) => (Some(a), v),
+            None => (None, views),
+        };
+        let (proto, runs) = if axes.is_some() && !basis.is_rect() {
+            let proto = prototile_points(&basis);
+            let ax = axes.unwrap();
+            // group by (col, red), merge consecutive rows
+            let mut pts: Vec<(i64, i64, i64)> = proto
+                .iter()
+                .map(|p| (p[ax.col], p[ax.red], p[ax.row]))
+                .collect();
             pts.sort_unstable();
-            let mut runs = Vec::new();
+            let mut runs: Vec<(i64, i64, i64, i64)> = Vec::new();
             let mut iter = pts.into_iter();
-            if let Some((mut j, mut kk, mut i0)) = iter.next() {
+            if let Some((mut c, mut r, mut i0)) = iter.next() {
                 let mut len = 1i64;
-                for (pj, pkk, pi) in iter {
-                    if pj == j && pkk == kk && pi == i0 + len {
+                for (pc, pr, pi) in iter {
+                    if pc == c && pr == r && pi == i0 + len {
                         len += 1;
                     } else {
-                        runs.push((i0, j, kk, len));
-                        j = pj;
-                        kk = pkk;
+                        runs.push((i0, c, r, len));
+                        c = pc;
+                        r = pr;
                         i0 = pi;
                         len = 1;
                     }
                 }
-                runs.push((i0, j, kk, len));
+                runs.push((i0, c, r, len));
             }
-            runs
+            (proto, runs)
         } else {
-            Vec::new()
+            (Vec::new(), Vec::new())
         };
-        // Panel replay needs j decoupled: the prototile then factorizes as
-        // [0, tj) × (2-D prototile in the (i, kk) plane), so the j = 0 run
-        // cross-section is valid for every j of the tile.
-        let (tj, jruns) = {
-            let b = schedule.basis().basis();
-            let decoupled = schedule.basis().dim() == 3
-                && (0..3).all(|t| t == 1 || (b[(1, t)] == 0 && b[(t, 1)] == 0))
-                && b[(1, 1)] > 0;
-            if decoupled {
-                let jr: Vec<(i64, i64, i64)> = runs
-                    .iter()
-                    .filter(|r| r.1 == 0)
-                    .map(|r| (r.0, r.2, r.3))
-                    .collect();
-                (b[(1, 1)] as i64, jr)
-            } else {
-                (0, Vec::new())
+        // Panel replay needs the column axis decoupled: the prototile then
+        // factorizes as [0, tj) × (2-D prototile in the (row, red) plane),
+        // so the col = 0 run cross-section is valid for every column.
+        let (tj, jruns) = match axes {
+            Some(ax) if !basis.is_rect() => {
+                let b = basis.basis();
+                let decoupled = (0..3)
+                    .all(|t| t == ax.col || (b[(ax.col, t)] == 0 && b[(t, ax.col)] == 0))
+                    && b[(ax.col, ax.col)] > 0;
+                if decoupled {
+                    let jr: Vec<(i64, i64, i64)> = runs
+                        .iter()
+                        .filter(|r| r.1 == 0)
+                        .map(|r| (r.0, r.2, r.3))
+                        .collect();
+                    (b[(ax.col, ax.col)] as i64, jr)
+                } else {
+                    (0, Vec::new())
+                }
             }
+            _ => (0, Vec::new()),
         };
-        TiledExecutor {
-            schedule,
-            level: None,
+        ReplayPlan {
+            basis,
+            views,
+            axes,
             proto,
             runs,
             tj,
@@ -339,156 +220,63 @@ impl TiledExecutor {
         }
     }
 
-    /// Override the derived L2/L3 macro-block shape (rect bases only;
-    /// skewed bases ignore it and replay per tile).
-    pub fn with_level_plan(mut self, level: LevelPlan) -> TiledExecutor {
-        self.level = Some(level);
-        self
-    }
-
-    /// The explicit macro-block shape, if one was set.
-    pub fn level_plan(&self) -> Option<&LevelPlan> {
-        self.level.as_ref()
-    }
-
-    pub fn schedule(&self) -> &TiledSchedule {
-        &self.schedule
-    }
-
-    pub fn prototile(&self) -> &[Vec<i64>] {
-        &self.proto
-    }
-
-    /// The prototile's unit-stride run decomposition (3-D skewed bases).
-    pub fn runs(&self) -> &[(i64, i64, i64, i64)] {
-        &self.runs
-    }
-
-    /// Does this basis take the packed panel-replay path (skewed with a
-    /// decoupled `j`), as opposed to the scalar run-replay fallback?
+    /// Does this plan take the packed panel-replay path (skewed with a
+    /// decoupled column axis), as opposed to a scalar fallback?
     pub fn panel_replay(&self) -> bool {
         self.tj > 0
     }
 
-    /// Execute the matmul over the whole domain. Rect bases run the
-    /// two-level macro-kernel ([`run_macro_matmul`]): L2/L3-sized
-    /// `mc×kc×nc` blocks packed once, L1 tiles driven inside from the
-    /// packed panels. Skewed bases replay every tile via
-    /// [`TiledExecutor::run_tile`].
-    pub fn run(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
-        let extents = kernel.extents();
-        let basis = self.schedule.basis();
-        let geom = bufs.geom();
-        if basis.is_rect() {
-            let (ti, tj, tk) = (
-                basis.basis()[(0, 0)] as usize,
-                basis.basis()[(1, 1)] as usize,
-                basis.basis()[(2, 2)] as usize,
-            );
-            let (m, n, k) = (
-                extents[0] as usize,
-                extents[1] as usize,
-                extents[2] as usize,
-            );
-            let lp = self.level.unwrap_or_else(|| {
-                LevelPlan::heuristic(
-                    (ti, tj, tk),
-                    (m, n, k),
-                    &CacheSpec::HASWELL_L2,
-                    Some(&CacheSpec::HASWELL_L3_SLICE),
-                )
-            });
-            run_macro_matmul(
-                &mut bufs.arena,
-                geom,
-                (m, n, k),
-                &lp,
-                &mut PackedB::new(),
-                &mut PackedC::new(),
-            );
-            return;
-        }
-        // Skewed tiles: every tile (interior or boundary) is the translated
-        // prototile clipped to the domain box, so clipped run replay is
-        // exact — no per-point footpoint filtering anywhere.
-        let arena: &mut [f64] = &mut bufs.arena;
-        let mut scratch = ReplayScratch::default();
-        self.schedule.scan_feet(extents, |foot| {
-            self.run_tile(arena, geom, extents, foot, &mut scratch);
-        });
+    /// The prototile's integer points (empty for the point-fallback and
+    /// rect strategies).
+    pub fn prototile(&self) -> &[Vec<i64>] {
+        &self.proto
     }
 
-    /// Execute with single-level blocking only: the per-tile pack +
-    /// microkernel nest (the engine before the macro-kernel layer), kept
-    /// for A/B comparison in the benches and two-level tests. Skewed
-    /// bases behave exactly like [`TiledExecutor::run`].
-    pub fn run_l1_only(&self, bufs: &mut MatmulBuffers, kernel: &Kernel) {
-        let extents = kernel.extents();
-        let basis = self.schedule.basis();
-        let geom = bufs.geom();
-        if basis.is_rect() {
-            // a blocked nest packing each tile's operands, then MR×NR
-            // register tiles; only boundary blocks clip. k0 outermost
-            // keeps the per-element k order ascending; i0 above j0 lets
-            // the packed B block (the larger pack) survive the j sweep.
-            let (ti, tj, tk) = (
-                basis.basis()[(0, 0)] as usize,
-                basis.basis()[(1, 1)] as usize,
-                basis.basis()[(2, 2)] as usize,
-            );
-            let (m, n, k) = (
-                extents[0] as usize,
-                extents[1] as usize,
-                extents[2] as usize,
-            );
-            let arena: &mut [f64] = &mut bufs.arena;
-            let mut packs = PackBuffers::new();
-            for k0 in (0..k).step_by(tk) {
-                let kc = (k0 + tk).min(k) - k0;
-                for i0 in (0..m).step_by(ti) {
-                    let mc = (i0 + ti).min(m) - i0;
-                    for j0 in (0..n).step_by(tj) {
-                        let nc = (j0 + tj).min(n) - j0;
-                        run_rect_box(arena, geom, (i0, mc), (j0, nc), (k0, kc), &mut packs);
-                    }
-                }
-            }
-            return;
-        }
-        let arena: &mut [f64] = &mut bufs.arena;
-        let mut scratch = ReplayScratch::default();
-        self.schedule.scan_feet(extents, |foot| {
-            self.run_tile(arena, geom, extents, foot, &mut scratch);
-        });
+    /// The prototile's unit-stride run decomposition in GEMM axes:
+    /// `(row0, col, red, len)`.
+    pub fn runs(&self) -> &[(i64, i64, i64, i64)] {
+        &self.runs
     }
 
-    /// Execute one (possibly boundary) tile of a skewed schedule at
-    /// footpoint `foot`: pack the tile's clipped B runs contiguously, then
-    /// stream `NR` output columns at a time through the axpy microkernel;
-    /// bases without a decoupled `j` fall back to scalar run replay.
-    /// Shared by the serial and parallel executors (`scratch` is
-    /// thread-local in the latter).
+    /// Execute one (possibly boundary) tile at footpoint `foot`: pack the
+    /// tile's clipped row-operand runs contiguously, then stream `NR`
+    /// output columns at a time through the axpy microkernel; coupled
+    /// bases fall back to scalar run replay, non-GEMM kernels to exact
+    /// per-point evaluation. Shared by the serial and parallel executors
+    /// (`scratch` is thread-local in the latter).
     pub fn run_tile(
         &self,
         arena: &mut [f64],
-        g: MatmulGeom,
         extents: &[i64],
         foot: &[i128],
         scratch: &mut ReplayScratch,
     ) {
-        let basis = self.schedule.basis();
-        let (m, n, kext) = (extents[0], extents[1], extents[2]);
-        let origin = basis.basis().mul_vec(foot);
-        let (oi, oj, ok) = (origin[0] as i64, origin[1] as i64, origin[2] as i64);
+        let Some(ax) = self.axes else {
+            // exact per-point fallback through the views
+            let (v0, v1, v2) = (&self.views[0], &self.views[1], &self.views[2]);
+            self.basis.scan_tile(foot, extents, |x| {
+                let prod = arena[v1.idx(x)] * arena[v2.idx(x)];
+                arena[v0.idx(x)] += prod;
+            });
+            return;
+        };
+        let (vo, vr, vc) = (&self.views[0], &self.views[1], &self.views[2]);
+        let (m, n, kext) = (extents[ax.row], extents[ax.col], extents[ax.red]);
+        let origin = self.basis.basis().mul_vec(foot);
+        let (oi, oj, ok) = (
+            origin[ax.row] as i64,
+            origin[ax.col] as i64,
+            origin[ax.red] as i64,
+        );
         if self.tj > 0 {
             let jlo = oj.max(0);
             let jhi = (oj + self.tj).min(n);
             if jlo >= jhi {
                 return;
             }
-            // pack: clip each prototile run once and copy its B values
-            // into one contiguous buffer (amortized across the tile's
-            // whole j extent)
+            // pack: clip each prototile run once and copy its row-operand
+            // values into one contiguous buffer (amortized across the
+            // tile's whole column extent)
             scratch.bpack.clear();
             scratch.clipped.clear();
             for &(i0, kk, len) in &self.jruns {
@@ -502,35 +290,38 @@ impl TiledExecutor {
                     continue;
                 }
                 let pos = scratch.bpack.len();
-                let src = g.b_off + g.ldb * kkk as usize + lo as usize;
-                scratch.bpack.extend_from_slice(&arena[src..src + (hi - lo) as usize]);
-                scratch.clipped.push((pos, (hi - lo) as usize, kkk as usize, lo as usize));
+                let src = (vr.off + vr.w[ax.red] * kkk + lo) as usize;
+                scratch
+                    .bpack
+                    .extend_from_slice(&arena[src..src + (hi - lo) as usize]);
+                scratch.clipped.push((pos, (hi - lo) as usize, kkk, lo));
             }
             if scratch.clipped.is_empty() {
                 return;
             }
-            // replay: NR output columns per pass share every packed B load
-            let (mut j, jhi) = (jlo as usize, jhi as usize);
+            // replay: NR output columns per pass share every packed load
+            let (mut j, jhi) = (jlo, jhi);
             while j < jhi {
-                let ncols = (jhi - j).min(NR);
+                let ncols = ((jhi - j) as usize).min(NR);
                 for &(pos, len, kkk, lo) in &scratch.clipped {
                     let mut cvals = [0f64; NR];
                     for (c, cv) in cvals.iter_mut().enumerate().take(ncols) {
-                        *cv = arena[g.c_off + kkk + g.ldc * (j + c)];
+                        *cv = arena
+                            [(vc.off + vc.w[ax.red] * kkk + vc.w[ax.col] * (j + c as i64)) as usize];
                     }
-                    let a_base = g.a_off + lo + g.lda * j;
+                    let a_base = (vo.off + lo + ax.cs * j) as usize;
                     axpy_block(
                         &mut arena[a_base..],
-                        g.lda,
+                        ax.cs as usize,
                         &scratch.bpack[pos..pos + len],
                         &cvals[..ncols],
                     );
                 }
-                j += NR;
+                j += NR as i64;
             }
             return;
         }
-        // fallback for fully coupled bases: exact clipped scalar replay
+        // fallback for coupled bases: exact clipped scalar run replay
         for &(i0, jr, kk, len) in &self.runs {
             let jj = oj + jr;
             let kkk = ok + kk;
@@ -542,84 +333,316 @@ impl TiledExecutor {
             if lo >= hi {
                 continue;
             }
-            let (jj, kkk) = (jj as usize, kkk as usize);
-            let cv = arena[g.c_off + kkk + g.ldc * jj];
-            let b_base = g.b_off + g.ldb * kkk;
-            let a_base = g.a_off + g.lda * jj;
-            for i in lo as usize..hi as usize {
-                arena[a_base + i] += arena[b_base + i] * cv;
+            let cv = arena[(vc.off + vc.w[ax.red] * kkk + vc.w[ax.col] * jj) as usize];
+            let b_base = vr.off + vr.w[ax.red] * kkk;
+            let a_base = vo.off + ax.cs * jj;
+            for i in lo..hi {
+                arena[(a_base + i) as usize] += arena[(b_base + i) as usize] * cv;
             }
         }
     }
 }
 
-/// Execute the whole matmul as the two-level macro/micro nest (the
-/// BLIS-style macro-kernel):
+/// Fast tiled executor: executes any Table-1 kernel under a tiled
+/// schedule through the packing + microkernel engine.
+///
+/// * **Rectangular bases, GEMM-form kernels** run the two-level
+///   macro-kernel ([`run_macro`]): L2/L3-sized `mc×kc×nc` blocks packed
+///   once from the whole-domain [`RunPlan`], L1 tiles driven inside from
+///   the packed panels.
+/// * **Skewed lattice bases with a decoupled column axis** (every basis
+///   this crate's planners emit) replay the prototile's unit-stride runs
+///   ([`ReplayPlan`]): per tile the clipped runs are packed contiguously
+///   once, then streamed through the `NR`-column axpy microkernel — the
+///   lattice tiling's "miss regularity" made operational.
+/// * **Everything else** (coupled bases, non-GEMM kernels) falls back to
+///   exact scalar replay, still tile-ordered.
+pub struct TiledExecutor {
+    schedule: TiledSchedule,
+    /// Explicit L2/L3 macro-block shape for the rect path (None = derive
+    /// a capacity heuristic from the Haswell L2 + L3-slice specs).
+    level: Option<LevelPlan>,
+    /// Register-tile shape for the packed paths (the startup autotuner's
+    /// winner when the caller wires it through; 8×4 otherwise).
+    micro: MicroShape,
+}
+
+impl TiledExecutor {
+    pub fn new(schedule: TiledSchedule) -> TiledExecutor {
+        TiledExecutor {
+            schedule,
+            level: None,
+            micro: MicroShape::Mr8Nr4,
+        }
+    }
+
+    /// Override the derived L2/L3 macro-block shape (rect bases only;
+    /// skewed bases ignore it and replay per tile).
+    pub fn with_level_plan(mut self, level: LevelPlan) -> TiledExecutor {
+        self.level = Some(level);
+        self
+    }
+
+    /// Select the register-tile shape (e.g. the autotuned winner recorded
+    /// in [`Registry::micro_shape`](crate::runtime::Registry::micro_shape)).
+    pub fn with_micro_shape(mut self, micro: MicroShape) -> TiledExecutor {
+        self.micro = micro;
+        self
+    }
+
+    /// The explicit macro-block shape, if one was set.
+    pub fn level_plan(&self) -> Option<&LevelPlan> {
+        self.level.as_ref()
+    }
+
+    /// The selected register-tile shape.
+    pub fn micro_shape(&self) -> MicroShape {
+        self.micro
+    }
+
+    pub fn schedule(&self) -> &TiledSchedule {
+        &self.schedule
+    }
+
+    /// Build the skewed-tile replay state for `kernel` (shared read-only
+    /// across workers in the parallel executor).
+    pub fn replay(&self, kernel: &Kernel) -> ReplayPlan {
+        ReplayPlan::new(kernel, &self.schedule)
+    }
+
+    /// Execute the kernel over the whole domain (see the type docs for
+    /// the strategy per basis/kernel class).
+    pub fn run(&self, bufs: &mut KernelBuffers, kernel: &Kernel) {
+        let extents = kernel.extents();
+        let basis = self.schedule.basis();
+        if basis.is_rect() {
+            if let Some(gf) = GemmForm::of(kernel) {
+                let views = kernel_views(kernel);
+                let lo = vec![0i64; extents.len()];
+                let plan = gf.plan_box(&views, &lo, extents);
+                let lp = self.level.unwrap_or_else(|| {
+                    LevelPlan::heuristic(
+                        gf.l1_tile(basis),
+                        (gf.m, gf.n, gf.k),
+                        &CacheSpec::HASWELL_L2,
+                        Some(&CacheSpec::HASWELL_L3_SLICE),
+                    )
+                });
+                run_macro(
+                    &mut bufs.arena,
+                    &plan,
+                    &lp,
+                    self.micro,
+                    &mut PackedRows::new(),
+                    &mut PackedCols::new(),
+                );
+                return;
+            }
+        }
+        // Skewed tiles (and rect tiles of non-GEMM kernels): every tile is
+        // the translated prototile clipped to the domain box, so clipped
+        // replay is exact — no per-point footpoint filtering anywhere.
+        let rp = self.replay(kernel);
+        let arena: &mut [f64] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::default();
+        self.schedule.scan_feet(extents, |foot| {
+            rp.run_tile(arena, extents, foot, &mut scratch);
+        });
+    }
+
+    /// Execute with single-level blocking only: the per-tile pack +
+    /// microkernel nest (the engine before the macro-kernel layer), kept
+    /// for A/B comparison in the benches and two-level tests. Skewed
+    /// bases behave exactly like [`TiledExecutor::run`].
+    pub fn run_l1_only(&self, bufs: &mut KernelBuffers, kernel: &Kernel) {
+        let extents = kernel.extents();
+        let basis = self.schedule.basis();
+        if basis.is_rect() {
+            if let Some(gf) = GemmForm::of(kernel) {
+                // a blocked nest packing each tile's operands, then MR×NR
+                // register tiles; only boundary blocks clip. Reduction
+                // axes outermost keep the per-element reduction order
+                // ascending; rows above columns let the packed row block
+                // (the larger pack) survive the column sweep.
+                let views = kernel_views(kernel);
+                let d = extents.len();
+                let order: Vec<usize> = gf
+                    .red_axes
+                    .iter()
+                    .chain(gf.row_axes.iter())
+                    .chain(gf.col_axes.iter())
+                    .copied()
+                    .collect();
+                let sizes: Vec<i64> = (0..d)
+                    .map(|t| basis.basis()[(t, t)].max(1) as i64)
+                    .collect();
+                let row_red: Vec<usize> = gf
+                    .row_axes
+                    .iter()
+                    .chain(gf.red_axes.iter())
+                    .copied()
+                    .collect();
+                let col_red: Vec<usize> = gf
+                    .col_axes
+                    .iter()
+                    .chain(gf.red_axes.iter())
+                    .copied()
+                    .collect();
+                let micro = self.micro;
+                let mut packs = PackBuffers::new();
+                // scratch plan reused across tiles: the per-tile loop is
+                // allocation-free in steady state
+                let mut plan = RunPlan::default();
+                let arena: &mut [f64] = &mut bufs.arena;
+                scan_rect_tiles(&order, &sizes, extents, |lo, hi| {
+                    gf.plan_box_into(&views, lo, hi, &mut plan);
+                    run_rect_box(
+                        arena,
+                        &plan,
+                        micro,
+                        &mut packs,
+                        box_key(&row_red, lo, hi),
+                        box_key(&col_red, lo, hi),
+                    );
+                });
+                return;
+            }
+        }
+        let rp = self.replay(kernel);
+        let arena: &mut [f64] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::default();
+        self.schedule.scan_feet(extents, |foot| {
+            rp.run_tile(arena, extents, foot, &mut scratch);
+        });
+    }
+}
+
+/// Cache tag of a box along a subset of axes: `lo‖hi` restricted to the
+/// axes the packed operand actually depends on — so e.g. a column-box
+/// advance leaves the row pack cached.
+pub fn box_key(axes: &[usize], lo: &[i64], hi: &[i64]) -> Vec<i64> {
+    axes.iter()
+        .flat_map(|&t| [lo[t], hi[t]])
+        .collect()
+}
+
+/// Odometer over rectangular loop-space tiles: visit every clipped box of
+/// the grid `sizes` covering `[0, extents)`, iterating `order[0]`
+/// outermost and the last axis of `order` fastest. Yields `(lo, hi)`.
+pub fn scan_rect_tiles<F: FnMut(&[i64], &[i64])>(
+    order: &[usize],
+    sizes: &[i64],
+    extents: &[i64],
+    mut f: F,
+) {
+    let d = extents.len();
+    assert_eq!(order.len(), d);
+    assert_eq!(sizes.len(), d);
+    if extents.iter().any(|&e| e <= 0) {
+        return;
+    }
+    let mut lo = vec![0i64; d];
+    let mut hi: Vec<i64> = (0..d).map(|t| sizes[t].min(extents[t])).collect();
+    'outer: loop {
+        f(&lo, &hi);
+        let mut idx = order.len();
+        loop {
+            if idx == 0 {
+                break 'outer;
+            }
+            idx -= 1;
+            let t = order[idx];
+            lo[t] += sizes[t];
+            if lo[t] < extents[t] {
+                hi[t] = (lo[t] + sizes[t]).min(extents[t]);
+                continue 'outer;
+            }
+            lo[t] = 0;
+            hi[t] = sizes[t].min(extents[t]);
+        }
+    }
+}
+
+/// Execute the whole kernel as the two-level macro/micro nest (the
+/// BLIS-style macro-kernel) over its whole-domain [`RunPlan`]:
 ///
 /// ```text
-///   for k0 by kc:            pack ALL mc×kc B blocks of the slice once
-///     for j0 by nc:          pack the kc×nc C block once
-///       for each B block:    run all L1 tiles from the packed panels
+///   for k0 by kc:            pack ALL mc-row blocks of the slice once
+///     for j0 by nc:          pack the kc×nc column band once
+///       for each row block:  run all L1 tiles from the packed panels
 /// ```
 ///
-/// Each B macro block is packed exactly once (k slices partition k, row
-/// blocks partition m) and each C block once per `(k0, j0)` — the arena
-/// is streamed a number of times independent of the L1 tile size, which
-/// is what makes L2-exceeding shapes run at macro-block speed. The packed
-/// buffers are caller-owned so tests can assert the pack counts and the
-/// parallel executor can share `packed_b` read-only.
-pub fn run_macro_matmul(
+/// Each row block is packed exactly once per reduction slice (slices
+/// partition the reduction, blocks partition the rows) and each column
+/// band once per `(k0, j0)` — the arena is streamed a number of times
+/// independent of the L1 tile size, which is what makes L2-exceeding
+/// shapes run at macro-block speed. The packed buffers are caller-owned
+/// so tests can assert the pack counts and the parallel executor can
+/// share the packed rows read-only.
+pub fn run_macro(
     arena: &mut [f64],
-    g: MatmulGeom,
-    (m, n, k): (usize, usize, usize),
+    plan: &RunPlan,
     lp: &LevelPlan,
-    packed_b: &mut PackedB,
-    packed_c: &mut PackedC,
+    micro: MicroShape,
+    rows: &mut PackedRows,
+    cols: &mut PackedCols,
+) {
+    match micro {
+        MicroShape::Mr8Nr4 => run_macro_impl::<NR>(arena, plan, lp, rows, cols),
+        MicroShape::Mr8Nr6 => run_macro_impl::<NR_WIDE>(arena, plan, lp, rows, cols),
+    }
+}
+
+fn run_macro_impl<const NRW: usize>(
+    arena: &mut [f64],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    rows: &mut PackedRows,
+    cols: &mut PackedCols,
 ) {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
-    for k0 in (0..k).step_by(kc) {
-        let kcc = (k0 + kc).min(k) - k0;
-        packed_b.pack_slice(arena, g.b_off, g.ldb, m, mc, k0, kcc);
-        for j0 in (0..n).step_by(nc) {
-            let ncc = (j0 + nc).min(n) - j0;
-            packed_c.pack_block(arena, g.c_off, g.ldc, k0, kcc, j0, ncc);
-            for bi in 0..packed_b.n_blocks() {
-                let (bp, i0, mcc) = packed_b.block(bi);
-                run_macro_block(
-                    bp,
-                    mcc,
-                    packed_c.panels(),
-                    ncc,
-                    kcc,
-                    (lp.l1_tile.0, lp.l1_tile.1),
-                    arena,
-                    g.a_off,
-                    g.lda,
-                    i0,
-                    j0,
-                );
+    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
+    for k0 in (0..plan.k).step_by(kc) {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        rows.pack_slice(arena, plan, mc, k0, kcc);
+        for j0 in (0..plan.n).step_by(nc) {
+            let ncc = (j0 + nc).min(plan.n) - j0;
+            cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+            for bi in 0..rows.n_blocks() {
+                run_macro_block::<NRW>(rows.block(bi), cols, plan, j0, l1, arena);
             }
         }
     }
 }
 
-/// Execute one clipped rectangular tile box `[ilo, ilo+mc) × [jlo, jlo+nc)
-/// × [klo, klo+kc)` through the pack + microkernel engine — the per-tile
-/// rect dispatch shared by the serial and parallel executors. Packed B/C
-/// blocks are reused across consecutive calls via their block keys.
+/// Execute one clipped box through the pack + microkernel engine — the
+/// per-tile rect dispatch shared by the serial and parallel executors.
+/// Packed blocks are reused across consecutive calls via the caller's
+/// box keys (see [`box_key`]).
 pub fn run_rect_box(
     arena: &mut [f64],
-    g: MatmulGeom,
-    (ilo, mc): (usize, usize),
-    (jlo, nc): (usize, usize),
-    (klo, kc): (usize, usize),
+    plan: &RunPlan,
+    micro: MicroShape,
     packs: &mut PackBuffers,
+    row_key: Vec<i64>,
+    col_key: Vec<i64>,
 ) {
-    packs.pack_b_cached(arena, g.b_off, g.ldb, ilo, mc, klo, kc);
-    packs.pack_c_cached(arena, g.c_off, g.ldc, klo, kc, jlo, nc);
-    packs.run_tile(arena, g.a_off, g.lda, ilo, jlo);
+    if plan.m == 0 || plan.n == 0 || plan.k == 0 {
+        return;
+    }
+    packs.pack_rows_cached(arena, plan, row_key);
+    match micro {
+        MicroShape::Mr8Nr4 => {
+            packs.pack_cols_cached::<NR>(arena, plan, col_key);
+            packs.run_box::<NR>(arena, plan);
+        }
+        MicroShape::Mr8Nr6 => {
+            packs.pack_cols_cached::<NR_WIDE>(arena, plan, col_key);
+            packs.run_box::<NR_WIDE>(arena, plan);
+        }
+    }
 }
 
 /// Enumerate the integer points of the prototile (footpoint 0) of a tile
@@ -712,12 +735,14 @@ pub fn writes_first_operand(kernel: &Kernel) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::domain::access::AffineAccess;
     use crate::domain::ops;
-    use crate::domain::IterOrder;
+    use crate::domain::{IterOrder, Operand};
+    use crate::index::{Layout, Table};
     use crate::lattice::IMat;
 
     fn check_correct(kernel: &Kernel, scanner: &dyn Scanner) {
-        let mut bufs = MatmulBuffers::from_kernel(kernel);
+        let mut bufs = KernelBuffers::from_kernel(kernel);
         let want = bufs.reference();
         run_schedule(&mut bufs, kernel, scanner);
         let got = bufs.output();
@@ -729,7 +754,7 @@ mod tests {
 
     fn check_executor(kernel: &Kernel, basis: TileBasis) {
         let exec = TiledExecutor::new(TiledSchedule::new(basis));
-        let mut bufs = MatmulBuffers::from_kernel(kernel);
+        let mut bufs = KernelBuffers::from_kernel(kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, kernel);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -797,6 +822,16 @@ mod tests {
     }
 
     #[test]
+    fn rect_executor_runs_convolution_and_kronecker() {
+        check_executor(&ops::convolution(37, 8, 0), TileBasis::rect(&[8]));
+        check_executor(&ops::scalar_product(29, 8, 16), TileBasis::rect(&[16]));
+        check_executor(
+            &ops::kronecker(5, 3, 7, 4, 8, 0),
+            TileBasis::rect(&[2, 2, 4, 3]),
+        );
+    }
+
+    #[test]
     fn macro_run_matches_l1_only_run() {
         let k = ops::matmul(33, 21, 27, 8, 0);
         let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[10, 6, 5])))
@@ -806,34 +841,52 @@ mod tests {
                 kc: 9,
                 nc: 11,
             });
-        let mut macro_bufs = MatmulBuffers::from_kernel(&k);
+        let mut macro_bufs = KernelBuffers::from_kernel(&k);
         exec.run(&mut macro_bufs, &k);
-        let mut l1_bufs = MatmulBuffers::from_kernel(&k);
+        let mut l1_bufs = KernelBuffers::from_kernel(&k);
         exec.run_l1_only(&mut l1_bufs, &k);
         assert!(max_abs_diff(&macro_bufs.output(), &l1_bufs.output()) < 1e-9);
         assert!(max_abs_diff(&macro_bufs.reference(), &macro_bufs.output()) < 1e-9);
     }
 
     #[test]
+    fn wide_micro_shape_matches_default() {
+        let k = ops::matmul(26, 17, 23, 8, 0);
+        let sched = TiledSchedule::new(TileBasis::rect(&[8, 12, 6]));
+        let mut narrow = KernelBuffers::from_kernel(&k);
+        TiledExecutor::new(sched.clone()).run(&mut narrow, &k);
+        let mut wide = KernelBuffers::from_kernel(&k);
+        TiledExecutor::new(sched)
+            .with_micro_shape(MicroShape::Mr8Nr6)
+            .run(&mut wide, &k);
+        assert!(max_abs_diff(&narrow.output(), &wide.output()) < 1e-9);
+        assert!(max_abs_diff(&narrow.reference(), &wide.output()) < 1e-9);
+    }
+
+    #[test]
     fn panel_replay_detection() {
+        let k = ops::matmul(16, 16, 16, 8, 0);
         let decoupled = TileBasis::from_cols(IMat::from_rows(&[
             &[3, 0, 1],
             &[0, 4, 0],
             &[1, 0, 4],
         ]));
-        assert!(TiledExecutor::new(TiledSchedule::new(decoupled)).panel_replay());
+        let exec = TiledExecutor::new(TiledSchedule::new(decoupled));
+        assert!(exec.replay(&k).panel_replay());
         let coupled = TileBasis::from_cols(IMat::from_rows(&[
             &[3, 1, 0],
             &[1, 4, 0],
             &[0, 0, 2],
         ]));
-        assert!(!TiledExecutor::new(TiledSchedule::new(coupled)).panel_replay());
+        let exec = TiledExecutor::new(TiledSchedule::new(coupled));
+        assert!(!exec.replay(&k).panel_replay());
     }
 
     #[test]
     fn coupled_j_basis_falls_back_and_is_correct() {
         let k = ops::matmul(14, 15, 13, 8, 0);
-        // j coupled with i: panel replay unavailable, scalar replay exact
+        // column axis coupled with rows: panel replay unavailable, scalar
+        // replay exact
         let basis = TileBasis::from_cols(IMat::from_rows(&[
             &[3, 1, 0],
             &[1, 4, 0],
@@ -842,18 +895,72 @@ mod tests {
         check_executor(&k, basis);
     }
 
+    /// A kernel outside the GEMM class (one axis shared by the output and
+    /// *both* inputs): must take the exact per-point fallback on both
+    /// rect and skewed bases.
+    fn elementwise_square(n: i64) -> Kernel {
+        let a = Table::new("A", &[n], Layout::ColumnMajor, 8, 0);
+        let b = Table::new("B", &[n], Layout::ColumnMajor, 8, n as usize * 8);
+        Kernel::new(
+            "elementwise_square",
+            vec![n],
+            vec![
+                Operand {
+                    table: a,
+                    access: AffineAccess::select(1, &[0]),
+                    role: OpRole::ReadWrite,
+                },
+                Operand {
+                    table: b.clone(),
+                    access: AffineAccess::select(1, &[0]),
+                    role: OpRole::Read,
+                },
+                Operand {
+                    table: b,
+                    access: AffineAccess::select(1, &[0]),
+                    role: OpRole::Read,
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn non_gemm_kernel_takes_point_fallback() {
+        let k = elementwise_square(23);
+        assert!(GemmForm::of(&k).is_none());
+        check_executor(&k, TileBasis::rect(&[5]));
+    }
+
     #[test]
     fn prototile_size_is_volume() {
         let basis = TileBasis::from_cols(IMat::from_rows(&[&[3, 1], &[1, 4]]));
-        let exec = TiledExecutor::new(TiledSchedule::new(basis));
-        assert_eq!(exec.prototile().len(), 11);
+        assert_eq!(prototile_points(&basis).len(), 11);
+    }
+
+    #[test]
+    fn scan_rect_tiles_covers_domain_in_order() {
+        // 2-D: order (1, 0) means axis 1 outermost, axis 0 fastest
+        let mut boxes = Vec::new();
+        scan_rect_tiles(&[1, 0], &[3, 4], &[7, 6], |lo, hi| {
+            boxes.push((lo.to_vec(), hi.to_vec()));
+        });
+        assert_eq!(boxes.len(), 3 * 2);
+        assert_eq!(boxes[0], (vec![0, 0], vec![3, 4]));
+        assert_eq!(boxes[1], (vec![3, 0], vec![6, 4]));
+        assert_eq!(boxes[2], (vec![6, 0], vec![7, 4]));
+        assert_eq!(boxes[3], (vec![0, 4], vec![3, 6]));
+        let total: i64 = boxes
+            .iter()
+            .map(|(lo, hi)| (hi[0] - lo[0]) * (hi[1] - lo[1]))
+            .sum();
+        assert_eq!(total, 42);
     }
 
     #[test]
     fn instrumented_counts_accesses() {
         use crate::cache::{CacheSim, CacheSpec, Policy};
         let k = ops::matmul(8, 8, 8, 8, 0);
-        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::from_kernel(&k);
         let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
         run_instrumented(&mut bufs, &k, &IterOrder::lex(3), &mut sim);
         assert_eq!(sim.stats().accesses, 3 * 8 * 8 * 8);
@@ -868,9 +975,23 @@ mod tests {
         let s = TiledSchedule::new(TileBasis::rect(&[4, 4, 4]));
         let mut sim1 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
         let mut sim2 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
-        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::from_kernel(&k);
         run_instrumented(&mut bufs, &k, &s, &mut sim1);
         run_trace_only(&k, &s, &mut sim2);
         assert_eq!(sim1.stats().misses(), sim2.stats().misses());
+    }
+
+    #[test]
+    fn trace_only_works_for_all_table1_kernels() {
+        use crate::cache::{CacheSim, CacheSpec, Policy};
+        for k in [
+            ops::convolution(12, 8, 0),
+            ops::scalar_product(12, 8, 0),
+            ops::kronecker(2, 3, 4, 2, 8, 0),
+        ] {
+            let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
+            run_trace_only(&k, &IterOrder::lex(k.n_free()), &mut sim);
+            assert_eq!(sim.stats().accesses, 3 * k.domain_size() as u64);
+        }
     }
 }

@@ -1,19 +1,28 @@
 //! Register-blocked f64 microkernels — the tile-interior code quality the
 //! paper gets from CLooG+gcc, written out by hand.
 //!
-//! Two kernels, both operating on *packed*, unit-stride panels (built by
-//! [`super::pack`]) so the inner loops carry no bounds logic and no
-//! strided loads:
+//! All kernels operate on *packed*, unit-stride panels (built by
+//! [`super::pack`] from a [`RunPlan`](super::runplan::RunPlan)) so the
+//! inner loops carry no bounds logic and no strided loads:
 //!
-//! * [`mkernel_full`] — an `MR×NR` register tile: `MR·NR` accumulators
-//!   held live across the whole k-loop (one store per output element per
-//!   tile, instead of one per k step), fed by `MR + NR` packed loads per
-//!   k step. [`mkernel_edge`] is the clipped variant for boundary blocks;
+//! * [`mkernel_full_at`] — an `MR×NRW` register tile (`NRW` a const
+//!   generic: 4 for the default shape, 6 for the autotuned wide shape):
+//!   `MR·NRW` accumulators held live across the whole k-loop (one store
+//!   per output element per tile, instead of one per k step), fed by
+//!   `MR + NRW` packed loads per k step. Output columns are addressed by
+//!   **per-column base offsets**, so kernels whose output columns are not
+//!   uniformly strided (e.g. Kronecker) dispatch the same register tile.
+//!   [`mkernel_edge_at`] is the clipped variant for boundary blocks;
 //!   packed panels are zero-padded so it can accumulate the full block
 //!   and write back only the live `mr×nr` corner.
+//! * [`mkernel_full`] / [`mkernel_full_8x6`] / [`mkernel_edge`] — the
+//!   uniform-stride wrappers (column stride `cs`), kept for the packed
+//!   single-block callers and the startup autotuner
+//!   ([`super::autotune`]); they lower onto the `_at` kernels.
 //! * [`axpy_block`] — the panel-replay kernel for skewed lattice tiles:
-//!   one packed unit-stride run of B updates `NR` output columns at once,
-//!   so each B element is loaded once per `NR` FMAs.
+//!   one packed unit-stride run of the row operand updates `NR` output
+//!   columns at once, so each packed element is loaded once per `NR`
+//!   FMAs.
 //!
 //! All `get_unchecked` indexing is encapsulated here, behind length
 //! asserts at entry — callers hand in plain slices.
@@ -21,86 +30,123 @@
 /// Microkernel register-tile rows (unit-stride output dimension).
 pub const MR: usize = 8;
 
-/// Microkernel register-tile columns.
+/// Microkernel register-tile columns of the default shape.
 pub const NR: usize = 4;
 
-/// Register-tile columns of the wide autotune candidate
-/// ([`mkernel_full_8x6`]). The packed panel layouts are `NR`-specific, so
-/// the wide shape is a separate kernel; `8×4` stays the compile-time
-/// default and the startup calibrator ([`super::autotune`]) only records
-/// which shape wins on the host core.
+/// Register-tile columns of the wide autotune candidate. The packed panel
+/// layouts are width-specific, so the engine packs with whichever width
+/// the startup calibrator ([`super::autotune`]) selected.
 pub const NR_WIDE: usize = 6;
 
-/// Full `MR×NR` register-tiled block over packed panels:
+/// Full `MR×NRW` register-tiled block over packed panels, with per-column
+/// output bases:
 ///
-/// `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`
+/// `a[bases[c] + r] += Σ_t bp[t·MR + r] · cp[t·NRW + c]`
 ///
-/// for `r < MR`, `c < NR`, `t < kc`. `bp` is an MR-row B panel, `cp` an
-/// NR-column C panel (layouts per [`super::pack::PackBuffers`]); `a` is
-/// the output window starting at the block's top-left element with column
-/// stride `cs`.
+/// for `r < MR`, `c < NRW`, `t < kc`. `bp` is an MR-row panel of the row
+/// operand, `cp` an NRW-column panel of the column operand (layouts per
+/// [`super::pack`]); `a` is the whole output arena. Callers guarantee the
+/// `NRW` column windows `[bases[c], bases[c] + MR)` are disjoint (true
+/// whenever the kernel's output map is injective).
+pub fn mkernel_full_at<const NRW: usize>(
+    kc: usize,
+    bp: &[f64],
+    cp: &[f64],
+    a: &mut [f64],
+    bases: &[usize; NRW],
+) {
+    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(cp.len() >= kc * NRW, "C panel too short");
+    for &b in bases {
+        assert!(b + MR <= a.len(), "output window too small");
+    }
+    let mut acc = [[0f64; MR]; NRW];
+    // SAFETY: the asserts above bound every index used below.
+    unsafe {
+        for t in 0..kc {
+            let b = bp.get_unchecked(t * MR..t * MR + MR);
+            let c = cp.get_unchecked(t * NRW..t * NRW + NRW);
+            for (jc, accj) in acc.iter_mut().enumerate() {
+                let cv = *c.get_unchecked(jc);
+                for (r, av) in accj.iter_mut().enumerate() {
+                    *av += *b.get_unchecked(r) * cv;
+                }
+            }
+        }
+        for (jc, accj) in acc.iter().enumerate() {
+            let base = *bases.get_unchecked(jc);
+            for (r, &v) in accj.iter().enumerate() {
+                *a.get_unchecked_mut(base + r) += v;
+            }
+        }
+    }
+}
+
+/// Clipped `mr×nr` boundary block (`mr ≤ MR`, `nr ≤ NRW`) over the same
+/// packed panels, with per-column output bases (`bases.len() ≥ nr`). The
+/// panels are zero-padded past the live rows/columns, so the accumulation
+/// runs the full register tile and only the write-back is clipped.
+pub fn mkernel_edge_at<const NRW: usize>(
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    bp: &[f64],
+    cp: &[f64],
+    a: &mut [f64],
+    bases: &[usize],
+) {
+    assert!((1..=MR).contains(&mr) && (1..=NRW).contains(&nr));
+    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(cp.len() >= kc * NRW, "C panel too short");
+    assert!(bases.len() >= nr, "missing column bases");
+    for &b in &bases[..nr] {
+        assert!(b + mr <= a.len(), "output window too small");
+    }
+    let mut acc = [[0f64; MR]; NRW];
+    for t in 0..kc {
+        let b = &bp[t * MR..t * MR + MR];
+        let c = &cp[t * NRW..t * NRW + NRW];
+        for (jc, accj) in acc.iter_mut().enumerate() {
+            let cv = c[jc];
+            for (r, av) in accj.iter_mut().enumerate() {
+                *av += b[r] * cv;
+            }
+        }
+    }
+    for (jc, accj) in acc.iter().enumerate().take(nr) {
+        let base = bases[jc];
+        for (r, &v) in accj.iter().enumerate().take(mr) {
+            a[base + r] += v;
+        }
+    }
+}
+
+/// Uniform-stride wrapper: full `MR×NR` register tile with output column
+/// stride `cs` — `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`, `a`
+/// starting at the block's top-left element.
 pub fn mkernel_full(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
-    assert!(bp.len() >= kc * MR, "B panel too short");
-    assert!(cp.len() >= kc * NR, "C panel too short");
     assert!(cs >= MR, "output columns overlap");
-    assert!(a.len() >= (NR - 1) * cs + MR, "output window too small");
-    let mut acc = [[0f64; MR]; NR];
-    // SAFETY: the asserts above bound every index used below.
-    unsafe {
-        for t in 0..kc {
-            let b = bp.get_unchecked(t * MR..t * MR + MR);
-            let c = cp.get_unchecked(t * NR..t * NR + NR);
-            for (jc, accj) in acc.iter_mut().enumerate() {
-                let cv = *c.get_unchecked(jc);
-                for (r, av) in accj.iter_mut().enumerate() {
-                    *av += *b.get_unchecked(r) * cv;
-                }
-            }
-        }
-        for (jc, accj) in acc.iter().enumerate() {
-            let base = jc * cs;
-            for (r, &v) in accj.iter().enumerate() {
-                *a.get_unchecked_mut(base + r) += v;
-            }
-        }
+    let mut bases = [0usize; NR];
+    for (jc, b) in bases.iter_mut().enumerate() {
+        *b = jc * cs;
     }
+    mkernel_full_at::<NR>(kc, bp, cp, a, &bases);
 }
 
-/// The `MR×NR_WIDE` (8×6) register tile — identical contract to
-/// [`mkernel_full`] but over `NR_WIDE`-column C panels
-/// (`cp[t·NR_WIDE + c]`). Only the startup autotuner times it today; the
-/// execution engine stays on the 8×4 default.
+/// Uniform-stride wrapper for the `MR×NR_WIDE` (8×6) register tile —
+/// identical contract to [`mkernel_full`] but over `NR_WIDE`-column C
+/// panels (`cp[t·NR_WIDE + c]`).
 pub fn mkernel_full_8x6(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
-    assert!(bp.len() >= kc * MR, "B panel too short");
-    assert!(cp.len() >= kc * NR_WIDE, "C panel too short");
     assert!(cs >= MR, "output columns overlap");
-    assert!(a.len() >= (NR_WIDE - 1) * cs + MR, "output window too small");
-    let mut acc = [[0f64; MR]; NR_WIDE];
-    // SAFETY: the asserts above bound every index used below.
-    unsafe {
-        for t in 0..kc {
-            let b = bp.get_unchecked(t * MR..t * MR + MR);
-            let c = cp.get_unchecked(t * NR_WIDE..t * NR_WIDE + NR_WIDE);
-            for (jc, accj) in acc.iter_mut().enumerate() {
-                let cv = *c.get_unchecked(jc);
-                for (r, av) in accj.iter_mut().enumerate() {
-                    *av += *b.get_unchecked(r) * cv;
-                }
-            }
-        }
-        for (jc, accj) in acc.iter().enumerate() {
-            let base = jc * cs;
-            for (r, &v) in accj.iter().enumerate() {
-                *a.get_unchecked_mut(base + r) += v;
-            }
-        }
+    let mut bases = [0usize; NR_WIDE];
+    for (jc, b) in bases.iter_mut().enumerate() {
+        *b = jc * cs;
     }
+    mkernel_full_at::<NR_WIDE>(kc, bp, cp, a, &bases);
 }
 
-/// Clipped `mr×nr` boundary block (`mr ≤ MR`, `nr ≤ NR`) over the same
-/// packed panels. The panels are zero-padded past the live rows/columns,
-/// so the accumulation runs the full register tile and only the write-back
-/// is clipped.
+/// Uniform-stride wrapper: clipped `mr×nr` boundary block (`mr ≤ MR`,
+/// `nr ≤ NR`) with output column stride `cs`.
 pub fn mkernel_edge(
     mr: usize,
     nr: usize,
@@ -110,30 +156,15 @@ pub fn mkernel_edge(
     a: &mut [f64],
     cs: usize,
 ) {
-    assert!((1..=MR).contains(&mr) && (1..=NR).contains(&nr));
-    assert!(bp.len() >= kc * MR, "B panel too short");
-    assert!(cp.len() >= kc * NR, "C panel too short");
-    assert!(a.len() >= (nr - 1) * cs + mr, "output window too small");
-    let mut acc = [[0f64; MR]; NR];
-    for t in 0..kc {
-        let b = &bp[t * MR..t * MR + MR];
-        let c = &cp[t * NR..t * NR + NR];
-        for (jc, accj) in acc.iter_mut().enumerate() {
-            let cv = c[jc];
-            for (r, av) in accj.iter_mut().enumerate() {
-                *av += b[r] * cv;
-            }
-        }
+    let mut bases = [0usize; NR];
+    for (jc, b) in bases.iter_mut().enumerate() {
+        *b = jc * cs;
     }
-    for (jc, accj) in acc.iter().enumerate().take(nr) {
-        for (r, &v) in accj.iter().enumerate().take(mr) {
-            a[jc * cs + r] += v;
-        }
-    }
+    mkernel_edge_at::<NR>(mr, nr, kc, bp, cp, a, &bases[..nr]);
 }
 
-/// Panel-replay kernel: one packed unit-stride run of B values updates up
-/// to `NR` output columns at once:
+/// Panel-replay kernel: one packed unit-stride run of row-operand values
+/// updates up to `NR` output columns at once:
 ///
 /// `a[r + cs·col] += b[r] · c[col]`
 ///
@@ -220,6 +251,36 @@ mod tests {
     }
 
     #[test]
+    fn full_at_kernel_scattered_columns() {
+        // non-uniform column bases (the Kronecker case): columns placed
+        // out of order with uneven gaps
+        let kc = 7;
+        let bp = fill(kc * MR, 10);
+        let cp = fill(kc * NR, 11);
+        let bases = [40usize, 0, 96, 16];
+        let mut a = fill(128, 12);
+        let orig = a.clone();
+        mkernel_full_at::<NR>(kc, &bp, &cp, &mut a, &bases);
+        for (jc, &base) in bases.iter().enumerate() {
+            for r in 0..MR {
+                let want: f64 = (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
+                let got = a[base + r] - orig[base + r];
+                assert!((got - want).abs() < 1e-12, "({r},{jc})");
+            }
+        }
+        // untouched elements stay untouched
+        let touched: std::collections::HashSet<usize> = bases
+            .iter()
+            .flat_map(|&b| (b..b + MR).collect::<Vec<_>>())
+            .collect();
+        for (i, (&x, &o)) in a.iter().zip(&orig).enumerate() {
+            if !touched.contains(&i) {
+                assert_eq!(x, o, "element {i} written");
+            }
+        }
+    }
+
+    #[test]
     fn edge_kernel_writes_only_live_corner() {
         let kc = 5;
         let (mr, nr) = (3usize, 2usize);
@@ -248,6 +309,38 @@ mod tests {
                 } else {
                     assert_eq!(a[idx], sentinel[idx], "dead element ({r},{jc}) written");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn edge_at_wide_panel_clips() {
+        // NR_WIDE panel, clipped write-back at scattered bases
+        let kc = 4;
+        let (mr, nr) = (5usize, 3usize);
+        let mut bp = vec![0f64; kc * MR];
+        let mut cp = vec![0f64; kc * NR_WIDE];
+        for t in 0..kc {
+            for r in 0..mr {
+                bp[t * MR + r] = (t + r) as f64 - 2.0;
+            }
+            for c in 0..nr {
+                cp[t * NR_WIDE + c] = (t * 2 + c) as f64 * 0.5;
+            }
+        }
+        let bases = [20usize, 0, 40];
+        let mut a = vec![1.0f64; 64];
+        let sentinel = a.clone();
+        mkernel_edge_at::<NR_WIDE>(mr, nr, kc, &bp, &cp, &mut a, &bases);
+        for (jc, &base) in bases.iter().enumerate() {
+            for r in 0..mr {
+                let want: f64 = (0..kc)
+                    .map(|t| bp[t * MR + r] * cp[t * NR_WIDE + jc])
+                    .sum();
+                assert!((a[base + r] - 1.0 - want).abs() < 1e-12, "({r},{jc})");
+            }
+            for r in mr..MR {
+                assert_eq!(a[base + r], sentinel[base + r]);
             }
         }
     }

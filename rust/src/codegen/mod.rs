@@ -2,54 +2,79 @@
 //!
 //! The paper generates C code with CLooG and compiles it; we execute the
 //! same traversals directly, at the code quality the paper's CLooG+gcc
-//! pipeline emits. The executor pipeline is a **two-level nest**
+//! pipeline emits. The executor pipeline is **kernel-agnostic**: every
+//! Table-1 kernel (scalar product, convolution, matmul, Kronecker) lowers
+//! through the same four stages
 //!
 //! ```text
-//!   macro-block  →  pack once  →  micro-tiles  →  clip fallback
+//!   buffers  →  RunPlan  →  pack once  →  micro/macro dispatch
 //! ```
 //!
-//! * **macro-block** — rect schedules are partitioned into L2/L3-sized
-//!   `mc×kc×nc` blocks ([`crate::tiling::LevelPlan`]): `k` is sliced by
-//!   `kc`, rows by `mc` (the packed B block streams from L2), output
-//!   columns by `nc` (the packed C block sits in an L3 slice).
-//!   [`executor::run_macro_matmul`] walks the blocks `k0 → j0 → block`.
-//! * **pack once** — per macro block, each operand is packed exactly
-//!   once: [`pack::PackedB`] holds every `mc×kc` B block of the current
-//!   k slice (shared **read-only** across threads in the parallel path),
-//!   [`pack::PackedC`] the `kc×nc` C block of the current column band.
-//!   [`pack::PackBuffers`] remains the per-tile packer for the
-//!   single-level engine (`TiledExecutor::run_l1_only`) and the skewed
-//!   replay path; its block cache keys carry the source identity so
-//!   reuse across arenas can never replay stale panels.
-//! * **micro-tiles** — [`pack::run_macro_block`] drives all L1 tiles of
-//!   one macro block straight from the packed panels: the `MR×NR` FMA
-//!   register tile ([`microkernel`]) for full blocks, with the C
-//!   micro-panel of each L1 tile reused L1-resident across the tile's B
-//!   panels. Skewed lattice tiles replay their unit-stride runs through
-//!   the `NR`-column axpy kernel per tile, as before. All unchecked
-//!   indexing is encapsulated in [`microkernel`] behind length-asserted
-//!   safe entry points. [`autotune`] calibrates the register-tile shape
-//!   (8×4 vs 8×6) once at startup and records the winner.
-//! * **clip fallback** — boundary blocks write back through the clipped
-//!   edge kernel; tile bases that couple the `j` dimension (which no
-//!   planner in this crate emits) drop to exact scalar run replay.
+//! * **buffers** — [`runplan::KernelBuffers`] lays one f64 arena out by
+//!   the kernel's tables (element index × 8 = simulator byte address) and
+//!   derives one [`runplan::OperandView`] per operand: the composed
+//!   affine map `φ ∘ access` on the loop variables. No executor hardcodes
+//!   an operand geometry — the former matmul-only `MatmulBuffers` /
+//!   `MatmulGeom` layer (and its `a_idx`/`b_idx`/`c_idx` indexing) is
+//!   retired; the kernel-semantic scalar oracle
+//!   ([`KernelBuffers::reference`](runplan::KernelBuffers::reference))
+//!   survives as the differential-test baseline.
+//! * **RunPlan** — [`runplan::GemmForm`] classifies the loop axes into
+//!   GEMM row/column/reduction groups from the access maps (matmul is
+//!   `{i}×{j}×{kk}`; Kronecker the reduction-free outer product with
+//!   swapped inputs; convolution and scalar product the degenerate
+//!   `1×1×{k}` dot), and [`GemmForm::plan_box`](runplan::GemmForm::plan_box)
+//!   lowers any clipped loop-space box to a [`runplan::RunPlan`]:
+//!   maximal unit-stride runs along the rows plus explicit per-column and
+//!   per-reduction-step offset tables. Tiles, macro blocks and whole
+//!   domains are all the same IR.
+//! * **pack once** — [`pack`] copies RunPlan rows into `MR`-row panels
+//!   (unit-stride `memcpy` per run segment) and columns into `NRW`-column
+//!   panels (gathers through the offset tables — convolution's reversed
+//!   operand packs into a forward-streaming panel). Per macro block each
+//!   operand is packed exactly once: [`pack::PackedRows`] holds every
+//!   `mc`-row block of the current reduction slice (shared **read-only**
+//!   across threads in the parallel path), [`pack::PackedCols`] the
+//!   band of the current output columns. [`pack::PackBuffers`] is the
+//!   per-tile packer for the single-level engine and the parallel
+//!   per-tile path; its cache keys carry the source identity so reuse
+//!   across arenas can never replay stale panels.
+//! * **micro/macro dispatch** — [`executor::run_macro`] walks reduction
+//!   slices × column bands × row blocks ([`pack::run_macro_block`]
+//!   drives the L1 tiles straight from the panels), dispatching the
+//!   `MR×NRW` FMA register tile ([`microkernel::mkernel_full_at`]) with
+//!   **per-column output bases** — which is what lets kernels without a
+//!   uniform output column stride (Kronecker) use the same register
+//!   tiles. `NRW` is const-generic: the startup autotuner ([`autotune`])
+//!   times 8×4 vs 8×6 and the engine dispatches whichever shape the
+//!   [`Registry`](crate::runtime::Registry) recorded. Boundary blocks
+//!   write back through the clipped edge kernel; skewed lattice bases
+//!   replay their prototile's unit-stride runs through the `NR`-column
+//!   axpy kernel per tile ([`executor::ReplayPlan`]); kernels outside
+//!   the GEMM class fall back to exact per-point evaluation through the
+//!   views.
 //!
 //! [`executor`] also provides the instrumented point-wise executors
-//! (simulator-faithful traversals), and [`parallel`] adds the OpenMP-analog
-//! threaded execution — whole `nc` column bands per worker over the shared
-//! packed B slice for rect schedules, footpoint groups for skewed ones.
+//! (simulator-faithful traversals for any kernel), and [`parallel`] adds
+//! the OpenMP-analog threaded execution — whole column bands per worker
+//! over the shared packed rows for rect schedules, footpoint groups for
+//! skewed ones.
 
 pub mod autotune;
 pub mod executor;
 pub mod microkernel;
 pub mod pack;
 pub mod parallel;
+pub mod runplan;
 
 pub use autotune::{calibrate, MicroShape};
 pub use executor::{
-    max_abs_diff, run_instrumented, run_macro_matmul, run_rect_box, run_schedule,
-    run_trace_only, tiled_executor, MatmulBuffers, MatmulGeom, ReplayScratch, TiledExecutor,
+    box_key, max_abs_diff, run_instrumented, run_macro, run_rect_box, run_schedule,
+    run_trace_only, scan_rect_tiles, tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
 };
 pub use microkernel::{MR, NR, NR_WIDE};
-pub use pack::{run_macro_block, PackBuffers, PackedB, PackedC};
-pub use parallel::{run_parallel, run_parallel_macro};
+pub use pack::{run_macro_block, PackBuffers, PackedBlock, PackedCols, PackedRows};
+pub use parallel::{run_parallel, run_parallel_macro, run_parallel_micro};
+pub use runplan::{
+    kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,
+};

@@ -1,58 +1,174 @@
-//! Operand packing for the microkernel execution engine.
+//! Operand packing for the microkernel execution engine — kernel-neutral:
+//! every packer consumes a [`RunPlan`] (unit-stride runs + column /
+//! reduction offset tables) instead of a hardcoded matmul geometry.
 //!
-//! [`PackBuffers`] copies the B and C operands of one tile into
-//! contiguous, microkernel-strided buffers:
+//! Panel layouts (identical for every kernel):
 //!
-//! * **B panels** — `⌈mc/MR⌉` panels of `MR` consecutive rows; panel `p`
-//!   stores element `(t, r)` (k step `t`, row `r`) at
-//!   `p·kc·MR + t·MR + r`, so each k step of the microkernel reads one
-//!   contiguous `MR`-vector.
-//! * **C panels** — `⌈nc/NR⌉` panels of `NR` consecutive columns; panel
-//!   `q` stores `(t, c)` at `q·kc·NR + t·NR + c`.
+//! * **row panels** — [`RunPlan::row_panels`] chops the plan's runs into
+//!   panels of up to `MR` consecutive rows; panel `p` stores element
+//!   `(t, r)` (reduction step `t`, row `r`) at `p·kc·MR + t·MR + r`, so
+//!   each k step of the microkernel reads one contiguous `MR`-vector.
+//!   Because panels never straddle run boundaries, every copy is a
+//!   unit-stride `memcpy` from the arena.
+//! * **column panels** — `⌈nc/NRW⌉` panels of `NRW` consecutive columns
+//!   (`NRW` = 4 or the autotuned wide 6); panel `q` stores `(t, c)` at
+//!   `q·kc·NRW + t·NRW + c`, gathered through the plan's `col_in` /
+//!   `red_col` tables (which is how convolution's reversed operand packs
+//!   into a forward-streaming panel).
 //!
-//! Rows past `mc` / columns past `nc` are zero-filled so boundary blocks
-//! can run the full register tile and clip only the write-back
-//! ([`super::microkernel::mkernel_edge`]).
+//! Rows past a panel's live count / columns past `nc` are zero-filled so
+//! boundary blocks can run the full register tile and clip only the
+//! write-back ([`super::microkernel::mkernel_edge_at`]).
 //!
-//! The packing cost is `O(mc·kc + kc·nc)` per tile against `O(mc·kc·nc)`
-//! microkernel work, i.e. amortized across the k-loop exactly as in a
-//! blocked BLAS. Buffers are reused across tiles (and are thread-local in
-//! the parallel executor) so steady-state packing performs no allocation.
+//! The packing cost is `O(m·kc + kc·nc)` per block against `O(m·kc·nc)`
+//! microkernel work, i.e. amortized across the reduction loop exactly as
+//! in a blocked BLAS. Buffers are reused across tiles (and are
+//! thread-local in the parallel executor) so steady-state packing
+//! performs no allocation.
 //!
-//! The macro-kernel layer packs at L2/L3 block granularity instead:
-//! [`PackedB`] holds *every* `mc×kc` B block of one k-depth slice in the
-//! same panel layout (a read-only handle shared across threads in the
-//! parallel executor), [`PackedC`] one `kc×nc` C block, and
-//! [`run_macro_block`] drives the register-tiled micro-engine over all L1
-//! tiles of one macro block straight from those panels — each operand
-//! block is packed exactly once per macro block.
+//! Two granularities:
+//!
+//! * [`PackBuffers`] — per-tile packer for the single-level engine and
+//!   the parallel per-tile path; its block cache keys carry the source
+//!   identity so reuse across arenas can never replay stale panels.
+//! * [`PackedRows`] / [`PackedCols`] — macro-kernel granularity:
+//!   [`PackedRows`] holds *every* `mc`-row block of one reduction slice
+//!   (a read-only handle shared across threads in the parallel path),
+//!   [`PackedCols`] one `kc×nc` column band, and [`run_macro_block`]
+//!   drives the register-tiled micro-engine over all L1 tiles of one
+//!   macro block straight from those panels — each operand block is
+//!   packed exactly once per macro block.
 
-use super::microkernel::{mkernel_edge, mkernel_full, MR, NR};
+use super::microkernel::{mkernel_edge_at, mkernel_full_at, MR};
+use super::runplan::{RowPanel, RunPlan};
 
-/// Cache key of a packed block: source identity (pointer, element offset,
-/// leading dim) + block coordinates. The source identity guards against
-/// replaying stale panels when one `PackBuffers` is reused across kernels
-/// or arenas whose block coordinates happen to coincide.
-type PackKey = (usize, usize, usize, usize, usize, usize, usize);
+/// Pack a list of row panels into `buf` (layout `p·kc·MR + t·MR + r`,
+/// zero-padded): the one copy loop shared by the per-tile and macro
+/// packers.
+fn pack_row_panels(
+    buf: &mut Vec<f64>,
+    arena: &[f64],
+    panels: &[RowPanel],
+    red_row: &[i64],
+) {
+    let kc = red_row.len();
+    buf.clear();
+    buf.resize(panels.len() * kc * MR, 0.0);
+    for (pi, p) in panels.iter().enumerate() {
+        let base = pi * kc * MR;
+        for (t, &rr) in red_row.iter().enumerate() {
+            let src = (p.row + rr) as usize;
+            let dst = base + t * MR;
+            buf[dst..dst + p.rows].copy_from_slice(&arena[src..src + p.rows]);
+        }
+    }
+}
 
-/// Reusable pack buffers + the geometry of the tile they currently hold.
+/// Pack one column band `[j0, j0+nc)` into NRW panels (layout
+/// `q·kc·NRW + t·NRW + c`, zero-padded), gathering through the plan's
+/// offset tables.
+fn pack_col_panels<const NRW: usize>(
+    buf: &mut Vec<f64>,
+    arena: &[f64],
+    plan: &RunPlan,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    let panels = nc.div_ceil(NRW);
+    buf.clear();
+    buf.resize(panels * kc * NRW, 0.0);
+    for q in 0..panels {
+        let cols = NRW.min(nc - q * NRW);
+        let base = q * kc * NRW;
+        for c in 0..cols {
+            let ci = plan.col_in[j0 + q * NRW + c];
+            for t in 0..kc {
+                buf[base + t * NRW + c] = arena[(ci + plan.red_col[k0 + t]) as usize];
+            }
+        }
+    }
+}
+
+/// Dispatch all `(column panel, row panel)` register blocks of one packed
+/// block against the arena, `tj`/`ti`-grouped so the column micro-panel
+/// of an L1 tile is reused L1-resident across the tile's row panels.
 ///
-/// The `*_cached` packers skip the copy when the requested block is the
-/// one already packed — keyed by source identity *and* block coordinates
-/// (see [`PackKey`]) — valid while the source operand bytes are
-/// unchanged, which holds for the executors: B and C are read-only during
-/// a run. Callers that mutate the source between runs must call
+/// `col_out` is the output-offset table of the band's columns (length ≥
+/// `nc`); `panels[pi]`'s data lives at `rows_buf[pi·kc·MR ..]`.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_block<const NRW: usize>(
+    arena: &mut [f64],
+    rows_buf: &[f64],
+    panels: &[RowPanel],
+    cols_buf: &[f64],
+    nc: usize,
+    kc: usize,
+    (ti, tj): (usize, usize),
+    col_out: &[i64],
+) {
+    if panels.is_empty() || nc == 0 || kc == 0 {
+        return;
+    }
+    let cpanels = nc.div_ceil(NRW);
+    debug_assert!(rows_buf.len() >= panels.len() * kc * MR);
+    debug_assert!(cols_buf.len() >= cpanels * kc * NRW);
+    // L1 tile extents in panel units
+    let pt = ti.div_ceil(MR).max(1);
+    let qt = tj.div_ceil(NRW).max(1);
+    for q0 in (0..cpanels).step_by(qt) {
+        let q_hi = cpanels.min(q0 + qt);
+        for p0 in (0..panels.len()).step_by(pt) {
+            let p_hi = panels.len().min(p0 + pt);
+            for q in q0..q_hi {
+                let nr = NRW.min(nc - q * NRW);
+                let cpq = &cols_buf[q * kc * NRW..(q + 1) * kc * NRW];
+                for (pi, p) in panels.iter().enumerate().take(p_hi).skip(p0) {
+                    let bp = &rows_buf[pi * kc * MR..(pi + 1) * kc * MR];
+                    let mut bases = [0usize; NRW];
+                    for (jc, b) in bases.iter_mut().enumerate().take(nr) {
+                        let o = p.out + col_out[q * NRW + jc];
+                        debug_assert!(o >= 0);
+                        *b = o as usize;
+                    }
+                    if p.rows == MR && nr == NRW {
+                        mkernel_full_at::<NRW>(kc, bp, cpq, arena, &bases);
+                    } else {
+                        mkernel_edge_at::<NRW>(p.rows, nr, kc, bp, cpq, arena, &bases[..nr]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cache key of a packed block: source identity (arena pointer) + the
+/// caller-supplied box coordinates. The source identity guards against
+/// replaying stale panels when one `PackBuffers` is reused across kernels
+/// or arenas whose box coordinates happen to coincide.
+type PackKey = (usize, Vec<i64>);
+
+/// Reusable per-tile pack buffers + the plan geometry of the tile they
+/// currently hold.
+///
+/// The `pack_*_cached` packers skip the copy when the requested box is
+/// the one already packed — keyed by source identity *and* box
+/// coordinates (see [`PackKey`]) — valid while the source operand bytes
+/// are unchanged, which holds for the executors: inputs are read-only
+/// during a run. Callers that mutate the source between runs must call
 /// [`PackBuffers::invalidate`] first.
 #[derive(Clone, Debug, Default)]
 pub struct PackBuffers {
-    bp: Vec<f64>,
-    cp: Vec<f64>,
-    kc_b: usize,
-    kc_c: usize,
-    mc: usize,
+    rows_buf: Vec<f64>,
+    panels: Vec<RowPanel>,
+    cols_buf: Vec<f64>,
+    kc_rows: usize,
+    kc_cols: usize,
     nc: usize,
-    b_key: Option<PackKey>,
-    c_key: Option<PackKey>,
+    nrw: usize,
+    row_key: Option<PackKey>,
+    col_key: Option<PackKey>,
 }
 
 impl PackBuffers {
@@ -60,228 +176,170 @@ impl PackBuffers {
         PackBuffers::default()
     }
 
-    /// Forget the cached block keys, forcing the next `*_cached` call to
+    /// Forget the cached box keys, forcing the next `*_cached` call to
     /// repack. Call at run entry whenever the source bytes may have
     /// changed since the buffers were last used.
     pub fn invalidate(&mut self) {
-        self.b_key = None;
-        self.c_key = None;
+        self.row_key = None;
+        self.col_key = None;
     }
 
-    /// Pack `mc` rows × `kc` k-steps of B (column-major, leading dim
-    /// `ldb`, rows starting at `i0`, k starting at `k0`) into MR panels.
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_b(
+    /// Pack all rows × reduction steps of `plan` into MR panels. `key`
+    /// identifies the packed row/reduction sub-box (cache tag); the plan's
+    /// own operand offsets are folded in, so reusing one `PackBuffers`
+    /// across kernels or operand layouts whose box coordinates coincide
+    /// can never replay stale panels (the PR 2 regression, generalized).
+    pub fn pack_rows_cached(&mut self, arena: &[f64], plan: &RunPlan, mut key: Vec<i64>) {
+        key.extend([
+            plan.m as i64,
+            plan.k as i64,
+            plan.runs.first().map_or(-1, |r| r.row),
+            plan.runs.first().map_or(-1, |r| r.out),
+            plan.red_row.first().copied().unwrap_or(-1),
+            plan.red_row.last().copied().unwrap_or(-1),
+        ]);
+        let full = (arena.as_ptr() as usize, key);
+        if self.row_key.as_ref() == Some(&full) {
+            return;
+        }
+        self.panels = plan.row_panels(0, plan.m);
+        pack_row_panels(&mut self.rows_buf, arena, &self.panels, &plan.red_row);
+        self.kc_rows = plan.k;
+        self.row_key = Some(full);
+    }
+
+    /// Pack all columns × reduction steps of `plan` into NRW panels (same
+    /// source-identity key discipline as [`PackBuffers::pack_rows_cached`]).
+    pub fn pack_cols_cached<const NRW: usize>(
         &mut self,
-        src: &[f64],
-        b_off: usize,
-        ldb: usize,
-        i0: usize,
-        mc: usize,
-        k0: usize,
-        kc: usize,
+        arena: &[f64],
+        plan: &RunPlan,
+        mut key: Vec<i64>,
     ) {
-        assert!(mc >= 1 && kc >= 1);
-        self.kc_b = kc;
-        self.mc = mc;
-        self.b_key = Some((src.as_ptr() as usize, b_off, ldb, i0, mc, k0, kc));
-        let panels = mc.div_ceil(MR);
-        self.bp.clear();
-        self.bp.resize(panels * kc * MR, 0.0);
-        for p in 0..panels {
-            let rows = MR.min(mc - p * MR);
-            let base = p * kc * MR;
-            for t in 0..kc {
-                let srow = b_off + i0 + p * MR + ldb * (k0 + t);
-                let dst = base + t * MR;
-                self.bp[dst..dst + rows].copy_from_slice(&src[srow..srow + rows]);
-            }
+        key.extend([
+            plan.n as i64,
+            plan.k as i64,
+            plan.col_in.first().copied().unwrap_or(-1),
+            plan.col_out.first().copied().unwrap_or(-1),
+            plan.red_col.first().copied().unwrap_or(-1),
+            plan.red_col.last().copied().unwrap_or(-1),
+        ]);
+        let full = (arena.as_ptr() as usize, key);
+        if self.nrw == NRW && self.col_key.as_ref() == Some(&full) {
+            return;
         }
+        pack_col_panels::<NRW>(&mut self.cols_buf, arena, plan, 0, plan.k, 0, plan.n);
+        self.kc_cols = plan.k;
+        self.nc = plan.n;
+        self.nrw = NRW;
+        self.col_key = Some(full);
     }
 
-    /// Pack `kc` k-steps × `nc` columns of C (column-major, leading dim
-    /// `ldc`, k starting at `k0`, columns starting at `j0`) into NR
-    /// panels.
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_c(
-        &mut self,
-        src: &[f64],
-        c_off: usize,
-        ldc: usize,
-        k0: usize,
-        kc: usize,
-        j0: usize,
-        nc: usize,
-    ) {
-        assert!(nc >= 1 && kc >= 1);
-        self.kc_c = kc;
-        self.nc = nc;
-        self.c_key = Some((src.as_ptr() as usize, c_off, ldc, k0, kc, j0, nc));
-        let panels = nc.div_ceil(NR);
-        self.cp.clear();
-        self.cp.resize(panels * kc * NR, 0.0);
-        for q in 0..panels {
-            let cols = NR.min(nc - q * NR);
-            let base = q * kc * NR;
-            for c in 0..cols {
-                let col = c_off + k0 + ldc * (j0 + q * NR + c);
-                for t in 0..kc {
-                    self.cp[base + t * NR + c] = src[col + t];
-                }
-            }
-        }
+    /// Run the packed box: dispatch every register block of the packed
+    /// panels against the arena.
+    pub fn run_box<const NRW: usize>(&self, arena: &mut [f64], plan: &RunPlan) {
+        assert_eq!(
+            self.kc_rows, self.kc_cols,
+            "rows and columns packed with different reduction depths"
+        );
+        assert_eq!(self.nrw, NRW, "column panels packed with a different width");
+        dispatch_block::<NRW>(
+            arena,
+            &self.rows_buf,
+            &self.panels,
+            &self.cols_buf,
+            self.nc,
+            self.kc_rows,
+            (self.panels.len() * MR, self.nc), // per-tile engine: one L1 tile
+            &plan.col_out,
+        );
     }
 
-    /// As [`PackBuffers::pack_b`], but a no-op when the same B block is
-    /// already packed.
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_b_cached(
-        &mut self,
-        src: &[f64],
-        b_off: usize,
-        ldb: usize,
-        i0: usize,
-        mc: usize,
-        k0: usize,
-        kc: usize,
-    ) {
-        if self.b_key != Some((src.as_ptr() as usize, b_off, ldb, i0, mc, k0, kc)) {
-            self.pack_b(src, b_off, ldb, i0, mc, k0, kc);
-        }
+    /// The packed row panels (tests).
+    pub fn row_panel_data(&self) -> (&[RowPanel], &[f64]) {
+        (&self.panels, &self.rows_buf)
     }
 
-    /// As [`PackBuffers::pack_c`], but a no-op when the same C block is
-    /// already packed.
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_c_cached(
-        &mut self,
-        src: &[f64],
-        c_off: usize,
-        ldc: usize,
-        k0: usize,
-        kc: usize,
-        j0: usize,
-        nc: usize,
-    ) {
-        if self.c_key != Some((src.as_ptr() as usize, c_off, ldc, k0, kc, j0, nc)) {
-            self.pack_c(src, c_off, ldc, k0, kc, j0, nc);
-        }
-    }
-
-    /// Run the packed tile: `A[i0+r, j0+c] += Σ_t B·C` over the packed
-    /// `mc×kc` × `kc×nc` panels, dispatching full `MR×NR` blocks to the
-    /// register-tiled microkernel and clipped boundary blocks to the edge
-    /// kernel. `a` is the whole arena slice; `a_off`/`lda` locate the
-    /// output table.
-    pub fn run_tile(&self, a: &mut [f64], a_off: usize, lda: usize, i0: usize, j0: usize) {
-        assert_eq!(self.kc_b, self.kc_c, "B and C packed with different k depths");
-        let kc = self.kc_b;
-        let bpanels = self.mc.div_ceil(MR);
-        let cpanels = self.nc.div_ceil(NR);
-        for q in 0..cpanels {
-            let nr = NR.min(self.nc - q * NR);
-            let cp = &self.cp[q * kc * NR..(q + 1) * kc * NR];
-            for p in 0..bpanels {
-                let mr = MR.min(self.mc - p * MR);
-                let bp = &self.bp[p * kc * MR..(p + 1) * kc * MR];
-                let a_base = a_off + i0 + p * MR + lda * (j0 + q * NR);
-                if mr == MR && nr == NR {
-                    mkernel_full(kc, bp, cp, &mut a[a_base..], lda);
-                } else {
-                    mkernel_edge(mr, nr, kc, bp, cp, &mut a[a_base..], lda);
-                }
-            }
-        }
+    /// The packed column panels (tests).
+    pub fn col_panel_data(&self) -> &[f64] {
+        &self.cols_buf
     }
 }
 
-/// Every `mc×kc` B block of one k-depth slice, packed once into the
+/// Every `mc`-row block of one reduction slice, packed once into the
 /// microkernel panel layout and shared **read-only** across threads in
 /// the parallel macro-kernel.
 ///
-/// Block `bi` covers rows `[bi·mc, bi·mc + mcc)` (clipped at `m`) and
-/// holds `⌈mcc/MR⌉` MR-row panels of depth `kc`, zero-padded past the
-/// live rows; all blocks share the stride of a full block so block
-/// lookup is O(1).
+/// Block `bi` covers plan rows `[bi·mc, bi·mc + mcc)` (clipped at `m`);
+/// its panels never straddle run boundaries, so blocks of kernels with
+/// segmented rows (Kronecker) simply carry more, shorter panels.
 #[derive(Clone, Debug, Default)]
-pub struct PackedB {
+pub struct PackedRows {
     buf: Vec<f64>,
-    m: usize,
-    mc: usize,
+    panels: Vec<RowPanel>,
+    /// Per block: (first panel index, panel count).
+    blocks: Vec<(usize, usize)>,
     kc: usize,
-    block_stride: usize,
     packs: u64,
 }
 
-impl PackedB {
-    pub fn new() -> PackedB {
-        PackedB::default()
+/// Read-only view of one packed row block: `panels[i]`'s data lives at
+/// `data[i·kc·MR .. (i+1)·kc·MR]`.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedBlock<'a> {
+    pub panels: &'a [RowPanel],
+    pub data: &'a [f64],
+    pub kc: usize,
+}
+
+impl PackedRows {
+    pub fn new() -> PackedRows {
+        PackedRows::default()
     }
 
-    /// Pack every `mc`-row block of B rows `[0, m)` at k slice
-    /// `[k0, k0+kc)` (column-major source, leading dim `ldb`).
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_slice(
-        &mut self,
-        src: &[f64],
-        b_off: usize,
-        ldb: usize,
-        m: usize,
-        mc: usize,
-        k0: usize,
-        kc: usize,
-    ) {
-        assert!(m >= 1 && mc >= 1 && kc >= 1);
-        let mc = mc.min(m);
-        self.m = m;
-        self.mc = mc;
+    /// Pack every `mc`-row block of the plan's rows at reduction slice
+    /// `[k0, k0+kc)`.
+    pub fn pack_slice(&mut self, arena: &[f64], plan: &RunPlan, mc: usize, k0: usize, kc: usize) {
+        assert!(kc >= 1 && k0 + kc <= plan.k);
+        let m = plan.m;
+        let mc = mc.clamp(1, m.max(1));
         self.kc = kc;
-        let panels_per_block = mc.div_ceil(MR);
-        self.block_stride = panels_per_block * kc * MR;
-        let n_blocks = m.div_ceil(mc);
-        self.buf.clear();
-        self.buf.resize(n_blocks * self.block_stride, 0.0);
-        for bi in 0..n_blocks {
-            let i0 = bi * mc;
-            let mcc = mc.min(m - i0);
-            let base = bi * self.block_stride;
-            for p in 0..mcc.div_ceil(MR) {
-                let rows = MR.min(mcc - p * MR);
-                let pbase = base + p * kc * MR;
-                for t in 0..kc {
-                    let srow = b_off + i0 + p * MR + ldb * (k0 + t);
-                    let dst = pbase + t * MR;
-                    self.buf[dst..dst + rows].copy_from_slice(&src[srow..srow + rows]);
-                }
-            }
+        self.panels.clear();
+        self.blocks.clear();
+        let red_row = &plan.red_row[k0..k0 + kc];
+        let mut r0 = 0usize;
+        while r0 < m {
+            let mcc = mc.min(m - r0);
+            let start = self.panels.len();
+            self.panels.extend(plan.row_panels(r0, mcc));
+            self.blocks.push((start, self.panels.len() - start));
             self.packs += 1;
+            r0 += mcc;
         }
+        pack_row_panels(&mut self.buf, arena, &self.panels, red_row);
     }
 
     /// Number of row blocks in the packed slice.
     pub fn n_blocks(&self) -> usize {
-        self.m.div_ceil(self.mc)
+        self.blocks.len()
     }
 
-    /// Panel view of block `bi`: `(panels, i0, mcc)` — the packed panels,
-    /// the block's first absolute row, and its live row count.
-    pub fn block(&self, bi: usize) -> (&[f64], usize, usize) {
-        assert!(bi < self.n_blocks());
-        let i0 = bi * self.mc;
-        let mcc = self.mc.min(self.m - i0);
-        (
-            &self.buf[bi * self.block_stride..(bi + 1) * self.block_stride],
-            i0,
-            mcc,
-        )
+    /// Panel view of block `bi`.
+    pub fn block(&self, bi: usize) -> PackedBlock<'_> {
+        let (start, count) = self.blocks[bi];
+        PackedBlock {
+            panels: &self.panels[start..start + count],
+            data: &self.buf[start * self.kc * MR..(start + count) * self.kc * MR],
+            kc: self.kc,
+        }
     }
 
-    /// The packed k depth of the current slice.
+    /// The packed reduction depth of the current slice.
     pub fn kc(&self) -> usize {
         self.kc
     }
 
-    /// How many B blocks have been packed over this buffer's lifetime
+    /// How many row blocks have been packed over this buffer's lifetime
     /// (each macro block counts once — the pack-amortization invariant
     /// the tests pin).
     pub fn pack_count(&self) -> u64 {
@@ -289,149 +347,123 @@ impl PackedB {
     }
 }
 
-/// One `kc×nc` C block packed into NR-column panels — the macro-kernel's
-/// thread-local counterpart of [`PackedB`] (each thread owns the C block
-/// of its output column band).
+/// One `kc×nc` column-operand band packed into NRW-column panels — the
+/// macro-kernel's thread-local counterpart of [`PackedRows`] (each thread
+/// owns the band of its output column range).
 #[derive(Clone, Debug, Default)]
-pub struct PackedC {
+pub struct PackedCols {
     buf: Vec<f64>,
     kc: usize,
     nc: usize,
     packs: u64,
 }
 
-impl PackedC {
-    pub fn new() -> PackedC {
-        PackedC::default()
+impl PackedCols {
+    pub fn new() -> PackedCols {
+        PackedCols::default()
     }
 
-    /// Pack `kc` k-steps × `nc` columns of C (column-major, leading dim
-    /// `ldc`, k starting at `k0`, columns starting at `j0`).
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_block(
+    /// Pack columns `[j0, j0+nc)` at reduction slice `[k0, k0+kc)`.
+    pub fn pack_band<const NRW: usize>(
         &mut self,
-        src: &[f64],
-        c_off: usize,
-        ldc: usize,
+        arena: &[f64],
+        plan: &RunPlan,
         k0: usize,
         kc: usize,
         j0: usize,
         nc: usize,
     ) {
         assert!(nc >= 1 && kc >= 1);
+        assert!(j0 + nc <= plan.n && k0 + kc <= plan.k);
         self.kc = kc;
         self.nc = nc;
-        let panels = nc.div_ceil(NR);
-        self.buf.clear();
-        self.buf.resize(panels * kc * NR, 0.0);
-        for q in 0..panels {
-            let cols = NR.min(nc - q * NR);
-            let base = q * kc * NR;
-            for c in 0..cols {
-                let col = c_off + k0 + ldc * (j0 + q * NR + c);
-                for t in 0..kc {
-                    self.buf[base + t * NR + c] = src[col + t];
-                }
-            }
-        }
+        pack_col_panels::<NRW>(&mut self.buf, arena, plan, k0, kc, j0, nc);
         self.packs += 1;
     }
 
-    /// The packed NR-column panels.
+    /// The packed NRW-column panels.
     pub fn panels(&self) -> &[f64] {
         &self.buf
     }
 
-    /// `(kc, nc)` of the currently packed block.
+    /// `(kc, nc)` of the currently packed band.
     pub fn shape(&self) -> (usize, usize) {
         (self.kc, self.nc)
     }
 
-    /// How many C blocks have been packed over this buffer's lifetime.
+    /// How many bands have been packed over this buffer's lifetime.
     pub fn pack_count(&self) -> u64 {
         self.packs
     }
 }
 
-/// Drive the `MR×NR` micro-engine over all L1 tiles of one macro block,
-/// straight from packed panels: `bp` is one [`PackedB`] block (`mcc` live
-/// rows), `cp` one [`PackedC`] block (`ncc` live columns), both `kc`
-/// deep. `(ti, tj)` is the L1 tile footprint — rounded up to `MR`/`NR`
-/// multiples here so L1 tiles partition the register-block grid — and
-/// `(i0, j0)` the block's top-left element of the output table at
-/// `a_off`/`lda` inside `a`.
+/// Drive the `MR×NRW` micro-engine over all L1 tiles of one macro block,
+/// straight from packed panels: `block` is one [`PackedRows`] block,
+/// `cols` one [`PackedCols`] band of `nc` live columns starting at plan
+/// column `j0`, both `kc` deep. `(ti, tj)` is the L1 tile footprint in
+/// GEMM row/column units — rounded up to `MR`/`NRW` panel multiples so L1
+/// tiles partition the register-block grid.
 ///
-/// The loop nest is `jt → it → q → p`: the C micro-panel of an L1 tile
-/// (`kc×NR`, L1-resident) is reused across all of the tile's B panels,
-/// while the B block streams from the outer-level cache — no packing
-/// happens here at all.
+/// The loop nest is `column-tile → row-tile → q → p`: the column
+/// micro-panel of an L1 tile (`kc×NRW`, L1-resident) is reused across all
+/// of the tile's row panels, while the row block streams from the
+/// outer-level cache — no packing happens here at all.
 #[allow(clippy::too_many_arguments)]
-pub fn run_macro_block(
-    bp: &[f64],
-    mcc: usize,
-    cp: &[f64],
-    ncc: usize,
-    kc: usize,
-    (ti, tj): (usize, usize),
-    a: &mut [f64],
-    a_off: usize,
-    lda: usize,
-    i0: usize,
+pub fn run_macro_block<const NRW: usize>(
+    block: PackedBlock<'_>,
+    cols: &PackedCols,
+    plan: &RunPlan,
     j0: usize,
+    (ti, tj): (usize, usize),
+    arena: &mut [f64],
 ) {
-    assert!(mcc >= 1 && ncc >= 1 && kc >= 1);
-    let ti = ti.div_ceil(MR).max(1) * MR;
-    let tj = tj.div_ceil(NR).max(1) * NR;
-    let bpanels = mcc.div_ceil(MR);
-    let cpanels = ncc.div_ceil(NR);
-    assert!(bp.len() >= bpanels * kc * MR, "B block panels too short");
-    assert!(cp.len() >= cpanels * kc * NR, "C block panels too short");
-    for jt in (0..ncc).step_by(tj) {
-        let q_hi = cpanels.min((jt + tj) / NR);
-        for it in (0..mcc).step_by(ti) {
-            let p_hi = bpanels.min((it + ti) / MR);
-            for q in (jt / NR)..q_hi {
-                let nr = NR.min(ncc - q * NR);
-                let cpq = &cp[q * kc * NR..(q + 1) * kc * NR];
-                for p in (it / MR)..p_hi {
-                    let mr = MR.min(mcc - p * MR);
-                    let bpp = &bp[p * kc * MR..(p + 1) * kc * MR];
-                    let a_base = a_off + i0 + p * MR + lda * (j0 + q * NR);
-                    if mr == MR && nr == NR {
-                        mkernel_full(kc, bpp, cpq, &mut a[a_base..], lda);
-                    } else {
-                        mkernel_edge(mr, nr, kc, bpp, cpq, &mut a[a_base..], lda);
-                    }
-                }
-            }
-        }
-    }
+    let (kc, nc) = cols.shape();
+    assert_eq!(block.kc, kc, "row and column panels differ in depth");
+    dispatch_block::<NRW>(
+        arena,
+        block.data,
+        block.panels,
+        &cols.buf,
+        nc,
+        kc,
+        (ti, tj),
+        &plan.col_out[j0..j0 + nc],
+    );
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::runplan::{kernel_views, GemmForm, KernelBuffers};
+    use crate::domain::ops;
 
-    fn fill(len: usize, seed: u64) -> Vec<f64> {
-        let mut rng = crate::testutil::Rng::new(seed);
-        (0..len).map(|_| rng.f64_unit() - 0.5).collect()
+    fn matmul_plan(
+        m: i64,
+        k: i64,
+        n: i64,
+    ) -> (crate::domain::Kernel, KernelBuffers, RunPlan) {
+        let kernel = ops::matmul_padded(m, k, n, m + 2, m + 1, k + 3, 8, 0);
+        let bufs = KernelBuffers::from_kernel(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+        (kernel, bufs, plan)
     }
 
     #[test]
-    fn pack_b_layout_and_zero_fill() {
-        let (m, k, ldb) = (11usize, 5usize, 13usize);
-        let src = fill(ldb * k, 7);
+    fn row_panels_pack_layout_and_zero_fill() {
+        let (_, bufs, plan) = matmul_plan(11, 5, 3);
         let mut packs = PackBuffers::new();
-        packs.pack_b(&src, 0, ldb, 2, m - 2, 1, k - 1);
-        let (mc, kc) = (m - 2, k - 1);
-        let panels = mc.div_ceil(MR);
-        assert_eq!(packs.bp.len(), panels * kc * MR);
-        for p in 0..panels {
-            for t in 0..kc {
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        let (panels, buf) = packs.row_panel_data();
+        assert_eq!(panels.len(), 11usize.div_ceil(MR));
+        assert_eq!(buf.len(), panels.len() * plan.k * MR);
+        for (pi, p) in panels.iter().enumerate() {
+            for t in 0..plan.k {
                 for r in 0..MR {
-                    let got = packs.bp[p * kc * MR + t * MR + r];
-                    if p * MR + r < mc {
-                        assert_eq!(got, src[2 + p * MR + r + ldb * (1 + t)]);
+                    let got = buf[pi * plan.k * MR + t * MR + r];
+                    if r < p.rows {
+                        let src = (p.row + plan.red_row[t]) as usize + r;
+                        assert_eq!(got, bufs.arena[src]);
                     } else {
                         assert_eq!(got, 0.0, "padding must be zero");
                     }
@@ -441,20 +473,22 @@ mod tests {
     }
 
     #[test]
-    fn pack_c_layout_and_zero_fill() {
-        let (k, n, ldc) = (6usize, 7usize, 9usize);
-        let src = fill(ldc * n, 8);
+    fn col_panels_pack_layout_and_zero_fill() {
+        use crate::codegen::microkernel::NR;
+        let (_, bufs, plan) = matmul_plan(6, 5, 7);
         let mut packs = PackBuffers::new();
-        packs.pack_c(&src, 0, ldc, 1, k - 1, 2, n - 2);
-        let (kc, nc) = (k - 1, n - 2);
-        let panels = nc.div_ceil(NR);
-        assert_eq!(packs.cp.len(), panels * kc * NR);
+        packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
+        let buf = packs.col_panel_data();
+        let panels = plan.n.div_ceil(NR);
+        assert_eq!(buf.len(), panels * plan.k * NR);
         for q in 0..panels {
-            for t in 0..kc {
+            for t in 0..plan.k {
                 for c in 0..NR {
-                    let got = packs.cp[q * kc * NR + t * NR + c];
-                    if q * NR + c < nc {
-                        assert_eq!(got, src[1 + t + ldc * (2 + q * NR + c)]);
+                    let got = buf[q * plan.k * NR + t * NR + c];
+                    if q * NR + c < plan.n {
+                        let src =
+                            (plan.col_in[q * NR + c] + plan.red_col[t]) as usize;
+                        assert_eq!(got, bufs.arena[src]);
                     } else {
                         assert_eq!(got, 0.0, "padding must be zero");
                     }
@@ -464,130 +498,175 @@ mod tests {
     }
 
     #[test]
-    fn packed_tile_matches_naive_gemm() {
-        // whole-matrix "tile", non-multiple extents, padded lda
-        for (m, k, n) in [(1usize, 1usize, 1usize), (7, 5, 3), (17, 9, 13), (8, 8, 4)] {
-            let (lda, ldb, ldc) = (m + 2, m + 1, k + 3);
-            let b = fill(ldb * k, 21);
-            let c = fill(ldc * n, 22);
-            let mut a = vec![0f64; lda * n];
+    fn packed_box_matches_scalar_oracle() {
+        use crate::codegen::microkernel::NR;
+        // whole-domain "tile", non-multiple extents, padded lda
+        for (m, k, n) in [(1i64, 1i64, 1i64), (7, 5, 3), (17, 9, 13), (8, 8, 4)] {
+            let (_, mut bufs, plan) = matmul_plan(m, k, n);
+            let want = bufs.reference();
             let mut packs = PackBuffers::new();
-            packs.pack_b(&b, 0, ldb, 0, m, 0, k);
-            packs.pack_c(&c, 0, ldc, 0, k, 0, n);
-            packs.run_tile(&mut a, 0, lda, 0, 0);
-            for j in 0..n {
-                for i in 0..m {
-                    let want: f64 = (0..k).map(|t| b[i + ldb * t] * c[t + ldc * j]).sum();
-                    assert!(
-                        (a[i + lda * j] - want).abs() < 1e-12,
-                        "({m},{k},{n}) at ({i},{j})"
-                    );
-                }
+            packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+            packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
+            packs.run_box::<NR>(&mut bufs.arena, &plan);
+            let got = bufs.output();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12, "({m},{k},{n}) flat {i}");
             }
         }
     }
 
     #[test]
     fn cached_pack_keys_include_source_identity() {
-        // regression: same block coordinates, different arena/operand —
-        // the old (i0, mc, k0, kc)-only key replayed stale panels here
-        let (m, k, ldb) = (8usize, 4usize, 8usize);
-        let a1 = vec![1.0f64; ldb * k];
-        let a2 = vec![2.0f64; ldb * k];
+        use crate::codegen::microkernel::NR;
+        // regression: same box coordinates, different arena — a
+        // coordinates-only key would replay stale panels here
+        let (_, bufs, plan) = matmul_plan(8, 4, 4);
+        let mut other = bufs.clone();
+        for v in other.arena.iter_mut() {
+            *v += 1.0;
+        }
         let mut packs = PackBuffers::new();
-        packs.pack_b_cached(&a1, 0, ldb, 0, m, 0, k);
-        assert_eq!(packs.bp[0], 1.0);
-        packs.pack_b_cached(&a2, 0, ldb, 0, m, 0, k);
-        assert_eq!(packs.bp[0], 2.0, "stale B panel replayed across arenas");
-        // same arena, different operand offset/ld must also repack
-        let big = fill(2 * ldb * k, 5);
-        packs.pack_b_cached(&big, 0, ldb, 0, m, 0, k);
-        let first = packs.bp[0];
-        packs.pack_b_cached(&big, ldb * k, ldb, 0, m, 0, k);
-        assert_eq!(packs.bp[0], big[ldb * k]);
-        assert_ne!(packs.bp[0], first);
-        // C side: different arenas with equal coordinates
-        let c1 = vec![3.0f64; k * 4];
-        let c2 = vec![4.0f64; k * 4];
-        packs.pack_c_cached(&c1, 0, k, 0, k, 0, 4);
-        assert_eq!(packs.cp[0], 3.0);
-        packs.pack_c_cached(&c2, 0, k, 0, k, 0, 4);
-        assert_eq!(packs.cp[0], 4.0, "stale C panel replayed across arenas");
-    }
-
-    #[test]
-    fn invalidate_forces_repack_of_mutated_source() {
-        let (m, k, ldb) = (8usize, 4usize, 8usize);
-        let mut src = vec![3.0f64; ldb * k];
-        let mut packs = PackBuffers::new();
-        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
-        src[0] = 9.0;
-        // same source + coordinates: documented to stay cached...
-        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
-        assert_eq!(packs.bp[0], 3.0);
-        // ...until the caller invalidates
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![7, 7, 7]);
+        let first = packs.row_panel_data().1[0];
+        packs.pack_rows_cached(&other.arena, &plan, vec![7, 7, 7]);
+        assert_eq!(
+            packs.row_panel_data().1[0],
+            first + 1.0,
+            "stale row panel replayed across arenas"
+        );
+        packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![1, 2]);
+        let c_first = packs.col_panel_data()[0];
+        packs.pack_cols_cached::<NR>(&other.arena, &plan, vec![1, 2]);
+        assert_eq!(
+            packs.col_panel_data()[0],
+            c_first + 1.0,
+            "stale column panel replayed across arenas"
+        );
+        // same arena, same caller key, different *operand* (shifted plan
+        // offsets — the generalization of PR 2's off/ld regression): the
+        // plan fingerprint folded into the key must force a repack
+        let mut shifted = plan.clone();
+        for r in shifted.runs.iter_mut() {
+            r.row += 1;
+        }
         packs.invalidate();
-        packs.pack_b_cached(&src, 0, ldb, 0, m, 0, k);
-        assert_eq!(packs.bp[0], 9.0);
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![7, 7, 7]);
+        let v_plain = packs.row_panel_data().1[0];
+        packs.pack_rows_cached(&bufs.arena, &shifted, vec![7, 7, 7]);
+        assert_eq!(
+            packs.row_panel_data().1[0],
+            bufs.arena[(shifted.runs[0].row + plan.red_row[0]) as usize],
+            "stale row panel replayed across operands in one arena"
+        );
+        let _ = v_plain;
+        let mut shifted_cols = plan.clone();
+        for c in shifted_cols.col_in.iter_mut() {
+            *c += 1;
+        }
+        packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![5]);
+        let c_plain = packs.col_panel_data()[0];
+        packs.pack_cols_cached::<NR>(&bufs.arena, &shifted_cols, vec![5]);
+        assert_eq!(
+            packs.col_panel_data()[0],
+            bufs.arena[(shifted_cols.col_in[0] + plan.red_col[0]) as usize],
+            "stale column panel replayed across operands in one arena"
+        );
+        let _ = c_plain;
+        // same arena, same key: cached (values unchanged after mutation)…
+        let mut src = bufs.clone();
+        packs.invalidate();
+        packs.pack_rows_cached(&src.arena, &plan, vec![3]);
+        let v0 = packs.row_panel_data().1[0];
+        src.arena[(plan.runs[0].row + plan.red_row[0]) as usize] = v0 + 9.0;
+        packs.pack_rows_cached(&src.arena, &plan, vec![3]);
+        assert_eq!(packs.row_panel_data().1[0], v0);
+        // …until the caller invalidates
+        packs.invalidate();
+        packs.pack_rows_cached(&src.arena, &plan, vec![3]);
+        assert_eq!(packs.row_panel_data().1[0], v0 + 9.0);
     }
 
     #[test]
-    fn packed_b_slice_layout_and_blocking() {
-        let (m, k, ldb) = (21usize, 6usize, 23usize);
-        let src = fill(ldb * k, 31);
-        let (mc, k0, kc) = (9usize, 1usize, k - 1);
-        let mut pb = PackedB::new();
-        pb.pack_slice(&src, 0, ldb, m, mc, k0, kc);
-        assert_eq!(pb.n_blocks(), 3); // 9 + 9 + 3
-        assert_eq!(pb.pack_count(), 3);
-        for bi in 0..pb.n_blocks() {
-            let (panels, i0, mcc) = pb.block(bi);
-            assert_eq!(i0, bi * mc);
-            assert_eq!(mcc, mc.min(m - i0));
-            for p in 0..mcc.div_ceil(MR) {
-                for t in 0..kc {
+    fn packed_rows_slice_blocks_and_counts() {
+        let (_, bufs, plan) = matmul_plan(21, 6, 4);
+        let (mc, k0, kc) = (9usize, 1usize, 5usize);
+        let mut pr = PackedRows::new();
+        pr.pack_slice(&bufs.arena, &plan, mc, k0, kc);
+        assert_eq!(pr.n_blocks(), 3); // 9 + 9 + 3
+        assert_eq!(pr.pack_count(), 3);
+        let mut r0 = 0usize;
+        for bi in 0..pr.n_blocks() {
+            let block = pr.block(bi);
+            let mcc = mc.min(plan.m - r0);
+            assert_eq!(block.panels.iter().map(|p| p.rows).sum::<usize>(), mcc);
+            for (pi, p) in block.panels.iter().enumerate() {
+                for (t, &rr) in plan.red_row[k0..k0 + kc].iter().enumerate() {
                     for r in 0..MR {
-                        let got = panels[p * kc * MR + t * MR + r];
-                        if p * MR + r < mcc {
-                            assert_eq!(got, src[i0 + p * MR + r + ldb * (k0 + t)]);
+                        let got = block.data[pi * kc * MR + t * MR + r];
+                        if r < p.rows {
+                            assert_eq!(got, bufs.arena[(p.row + rr) as usize + r]);
                         } else {
                             assert_eq!(got, 0.0, "padding must be zero");
                         }
                     }
                 }
             }
+            r0 += mcc;
         }
     }
 
     #[test]
-    fn macro_block_matches_naive_gemm() {
+    fn macro_block_matches_scalar_oracle() {
+        use crate::codegen::microkernel::NR;
         // one macro block over the whole (padded) problem, L1 tiles that
         // divide nothing evenly
         for (m, k, n, ti, tj) in [
-            (17usize, 9usize, 13usize, 5usize, 3usize),
+            (17i64, 9i64, 13i64, 5usize, 3usize),
             (8, 8, 4, 8, 4),
             (1, 1, 1, 1, 1),
             (23, 7, 19, 16, 32),
         ] {
-            let (lda, ldb, ldc) = (m + 2, m + 1, k + 3);
-            let b = fill(ldb * k, 41);
-            let c = fill(ldc * n, 42);
-            let mut a = vec![0f64; lda * n];
-            let mut pb = PackedB::new();
-            pb.pack_slice(&b, 0, ldb, m, m, 0, k);
-            let mut pc = PackedC::new();
-            pc.pack_block(&c, 0, ldc, 0, k, 0, n);
-            let (panels, i0, mcc) = pb.block(0);
-            run_macro_block(panels, mcc, pc.panels(), n, k, (ti, tj), &mut a, 0, lda, i0, 0);
-            for j in 0..n {
-                for i in 0..m {
-                    let want: f64 = (0..k).map(|t| b[i + ldb * t] * c[t + ldc * j]).sum();
-                    assert!(
-                        (a[i + lda * j] - want).abs() < 1e-12,
-                        "({m},{k},{n}) tile ({ti},{tj}) at ({i},{j})"
-                    );
-                }
+            let (_, mut bufs, plan) = matmul_plan(m, k, n);
+            let want = bufs.reference();
+            let mut pr = PackedRows::new();
+            pr.pack_slice(&bufs.arena, &plan, plan.m, 0, plan.k);
+            let mut pc = PackedCols::new();
+            pc.pack_band::<NR>(&bufs.arena, &plan, 0, plan.k, 0, plan.n);
+            // split borrows: clone the packed handles out of the arena
+            let block = pr.block(0);
+            let panels: Vec<RowPanel> = block.panels.to_vec();
+            let data: Vec<f64> = block.data.to_vec();
+            let block = PackedBlock {
+                panels: &panels,
+                data: &data,
+                kc: plan.k,
+            };
+            run_macro_block::<NR>(block, &pc, &plan, 0, (ti, tj), &mut bufs.arena);
+            let got = bufs.output();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-12,
+                    "({m},{k},{n}) tile ({ti},{tj}) flat {i}"
+                );
             }
+        }
+    }
+
+    #[test]
+    fn kronecker_packs_segmented_runs() {
+        use crate::codegen::microkernel::NR;
+        let kernel = ops::kronecker(3, 2, 4, 5, 8, 0);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0; 4], kernel.extents());
+        let want = bufs.reference();
+        let mut packs = PackBuffers::new();
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
+        packs.run_box::<NR>(&mut bufs.arena, &plan);
+        let got = bufs.output();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-12, "kronecker flat {i}");
         }
     }
 }

@@ -1,19 +1,25 @@
-//! Auto-threading — §4.0.3 (DESIGN.md S11; OpenMP substitute).
+//! Auto-threading — §4.0.3 (DESIGN.md S11; OpenMP substitute),
+//! kernel-agnostic since the `RunPlan` refactor.
 //!
-//! Rect schedules run the two-level macro-kernel with parallelism over
-//! whole `nc` **column bands**: the packed B k-slice ([`PackedB`]) is
-//! built once and shared read-only across all workers — B is never
-//! re-packed thread-locally — while each worker packs the C block of its
-//! own band and writes a disjoint column range of `A`, so no write races
-//! occur. This is the same decomposition the paper's generated
-//! `omp parallel for` over the outer tile loop produces when `j` is the
-//! outer tile dimension, lifted from L1 tiles to macro blocks.
+//! Rect schedules of GEMM-form kernels run the two-level macro-kernel
+//! with parallelism over whole `nc` **column bands** (GEMM columns, i.e.
+//! the loop axes the output shares with the column operand): the packed
+//! row slice ([`PackedRows`]) is built once and shared read-only across
+//! all workers — rows are never re-packed thread-locally — while each
+//! worker packs the column band of its own output range and writes a
+//! disjoint set of output elements (the kernel's output map is injective
+//! per (row, column)), so no write races occur. This is the same
+//! decomposition the paper's generated `omp parallel for` over the outer
+//! tile loop produces, lifted from L1 tiles to macro blocks.
 //!
 //! Skewed schedules keep the footpoint partition: tile interiors run
 //! through the same packing + microkernel engine as the serial
-//! [`TiledExecutor`](super::executor::TiledExecutor); every worker owns
-//! thread-local [`PackBuffers`] / scratch so the hot loop performs no
-//! shared allocation.
+//! [`TiledExecutor`](super::executor::TiledExecutor) — per-tile
+//! [`RunPlan`] boxes for rect bases, [`ReplayPlan`] panel replay for
+//! skewed ones; every worker owns thread-local [`PackBuffers`] / scratch
+//! so the hot loop performs no shared allocation. Kernels whose output
+//! does not stride along the partition variable (e.g. convolution's
+//! scalar output) degrade to one worker instead of racing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -21,21 +27,49 @@ use crate::cache::CacheSpec;
 use crate::domain::Kernel;
 use crate::tiling::{LevelPlan, TiledSchedule};
 
-use super::executor::{MatmulBuffers, ReplayScratch, TiledExecutor};
-use super::pack::{run_macro_block, PackBuffers, PackedB, PackedC};
+use super::autotune::MicroShape;
+use super::executor::{box_key, run_rect_box, KernelBuffers, ReplayPlan, ReplayScratch};
+use super::microkernel::{NR, NR_WIDE};
+use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
+use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
 
-/// Execute the tiled matmul with `threads` worker threads. Footpoints are
-/// grouped by their footpoint coordinate along `partition_var` (loop-space
-/// dimension index; use 1 = `j` for matmul plans built by this crate);
-/// groups are handed to workers round-robin. Panics if the tile basis
-/// couples `partition_var` with other dimensions (the column band would
-/// not be disjoint).
+/// Execute the tiled kernel with `threads` worker threads, dispatching
+/// the default 8×4 register tile. See [`run_parallel_micro`].
 pub fn run_parallel(
-    bufs: &mut MatmulBuffers,
+    bufs: &mut KernelBuffers,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
     partition_var: usize,
+) {
+    run_parallel_micro(
+        bufs,
+        kernel,
+        schedule,
+        threads,
+        partition_var,
+        MicroShape::Mr8Nr4,
+    );
+}
+
+/// Execute the tiled kernel with `threads` worker threads and an explicit
+/// register-tile shape (pass the autotuned winner from
+/// [`Registry::micro_shape`](crate::runtime::Registry::micro_shape) /
+/// [`Plan::micro`](crate::coordinator::Plan)). Footpoints are grouped by
+/// their footpoint coordinate along `partition_var` (loop-space dimension
+/// index; use 1 = `j` for matmul plans built by this crate); groups are
+/// handed to workers round-robin. Panics if the tile basis couples
+/// `partition_var` with other dimensions (the bands would not be
+/// disjoint). Kernels whose output map cannot be proven injective per
+/// (row, column) — or does not stride along `partition_var` — degrade to
+/// one worker instead of racing.
+pub fn run_parallel_micro(
+    bufs: &mut KernelBuffers,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    partition_var: usize,
+    micro: MicroShape,
 ) {
     assert!(threads >= 1);
     let basis = schedule.basis();
@@ -57,13 +91,39 @@ pub fn run_parallel(
         }
     }
 
-    // Rect bases partitioned over j take the macro-kernel band path: the
-    // packed B slice is shared across workers instead of re-packed
-    // thread-locally, and each worker owns whole nc column bands.
-    if basis.is_rect() && basis.dim() == 3 && partition_var == 1 {
-        run_parallel_macro(bufs, kernel, schedule, threads, None);
-        return;
+    let gf = GemmForm::of(kernel);
+    let views = kernel_views(kernel);
+    let extents_ref = kernel.extents();
+
+    // Rect bases partitioned over a GEMM column axis take the
+    // macro-kernel band path: the packed row slice is shared across
+    // workers instead of re-packed thread-locally, and each worker owns
+    // whole nc column bands. Requires a provably injective output map —
+    // the write-disjointness of the bands (true for all Table-1 ops).
+    if basis.is_rect() {
+        if let Some(gf) = &gf {
+            if gf.col_axes.contains(&partition_var)
+                && gf.output_injective(&views, extents_ref)
+            {
+                run_parallel_macro(bufs, kernel, schedule, threads, None, micro);
+                return;
+            }
+        }
     }
+
+    // Partition groups write disjoint output ranges only when the output
+    // strides along the partition variable AND the output map is provably
+    // injective on its striding axes; reduction-style outputs
+    // (convolution, scalar product) and unprovable maps degrade to one
+    // worker instead of racing.
+    let out_axes: Vec<usize> = (0..d).filter(|&t| views[0].w[t] != 0).collect();
+    let threads = if views[0].w[partition_var] == 0
+        || !view_injective(&views[0], extents_ref, &out_axes)
+    {
+        1
+    } else {
+        threads
+    };
 
     // collect footpoints, grouped by the partition coordinate
     let mut groups: std::collections::BTreeMap<i128, Vec<Vec<i128>>> =
@@ -77,12 +137,21 @@ pub fn run_parallel(
     let groups: Vec<Vec<Vec<i128>>> = groups.into_values().collect();
 
     let extents = kernel.extents().to_vec();
-    let geom = bufs.geom();
-
-    // The shared tile engine: rect tiles pack + microkernel per clipped
-    // tile box, skewed tiles replay packed panels (TiledExecutor::run_tile).
-    let exec = TiledExecutor::new(schedule.clone());
-    let is_rect = basis.is_rect();
+    let rect_gemm = basis.is_rect() && gf.is_some();
+    // skewed (or non-GEMM) tiles share the serial replay engine
+    let rp = if rect_gemm {
+        None
+    } else {
+        Some(ReplayPlan::new(kernel, schedule))
+    };
+    let sizes: Vec<i64> = (0..d).map(|t| basis.basis()[(t, t)].max(1) as i64).collect();
+    let (row_red_axes, col_red_axes): (Vec<usize>, Vec<usize>) = match &gf {
+        Some(gf) => (
+            gf.row_axes.iter().chain(&gf.red_axes).copied().collect(),
+            gf.col_axes.iter().chain(&gf.red_axes).copied().collect(),
+        ),
+        None => (Vec::new(), Vec::new()),
+    };
 
     // Work queue: group index counter.
     let next = AtomicUsize::new(0);
@@ -95,53 +164,61 @@ pub fn run_parallel(
             let next = &next;
             let extents = &extents;
             let arena_ptr = &arena_ptr;
-            let exec = &exec;
+            let rp = rp.as_ref();
+            let gf = gf.as_ref();
+            let views = &views;
+            let sizes = &sizes;
+            let row_red_axes = &row_red_axes;
+            let col_red_axes = &col_red_axes;
             scope.spawn(move || {
-                let (m, n, k) = (extents[0], extents[1], extents[2]);
-                // thread-local pack buffers + replay scratch; packed
-                // blocks are reused across consecutive tiles via their
+                let d = extents.len();
+                // thread-local pack buffers + replay/plan scratch; packed
+                // boxes are reused across consecutive tiles via their box
                 // keys (run_rect_box), so nothing is re-packed when only
-                // one tile coordinate advances
+                // the column coordinate advances, and the scratch RunPlan
+                // keeps the per-tile loop allocation-free in steady state
                 let mut packs = PackBuffers::new();
                 let mut scratch = ReplayScratch::default();
+                let mut plan = RunPlan::default();
+                let mut lo = vec![0i64; d];
+                let mut hi = vec![0i64; d];
                 loop {
                     let g = next.fetch_add(1, Ordering::Relaxed);
                     if g >= groups.len() {
                         break;
                     }
-                    // SAFETY: groups are disjoint column bands of A, and
-                    // B/C are read-only here; each element of the arena is
-                    // written by at most one thread.
+                    // SAFETY: groups are disjoint output ranges (the
+                    // output strides along the decoupled partition
+                    // variable and its map is injective on the striding
+                    // axes — all checked above) and the inputs are
+                    // read-only here; each arena element is written by at
+                    // most one thread.
                     let arena: &mut [f64] =
                         unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
                     for foot in &groups[g] {
-                        if is_rect {
+                        if let (true, Some(gf)) = (rect_gemm, gf) {
                             // pack + microkernel over the clipped tile box
-                            let basis = exec.schedule().basis();
-                            let origin = basis.basis().mul_vec(foot);
-                            let (oi, oj, ok) =
-                                (origin[0] as i64, origin[1] as i64, origin[2] as i64);
-                            let (ti, tj, tk) = (
-                                basis.basis()[(0, 0)] as i64,
-                                basis.basis()[(1, 1)] as i64,
-                                basis.basis()[(2, 2)] as i64,
-                            );
-                            let (ilo, ihi) = (oi.max(0).min(m), (oi + ti).max(0).min(m));
-                            let (jlo, jhi) = (oj.max(0).min(n), (oj + tj).max(0).min(n));
-                            let (klo, khi) = (ok.max(0).min(k), (ok + tk).max(0).min(k));
-                            if ilo >= ihi || jlo >= jhi || klo >= khi {
+                            let mut empty = false;
+                            for t in 0..d {
+                                let o = (foot[t] as i64) * sizes[t];
+                                lo[t] = o.clamp(0, extents[t]);
+                                hi[t] = (o + sizes[t]).clamp(0, extents[t]);
+                                empty |= lo[t] >= hi[t];
+                            }
+                            if empty {
                                 continue;
                             }
-                            super::executor::run_rect_box(
+                            gf.plan_box_into(views, &lo, &hi, &mut plan);
+                            run_rect_box(
                                 arena,
-                                geom,
-                                (ilo as usize, (ihi - ilo) as usize),
-                                (jlo as usize, (jhi - jlo) as usize),
-                                (klo as usize, (khi - klo) as usize),
+                                &plan,
+                                micro,
                                 &mut packs,
+                                box_key(row_red_axes, &lo, &hi),
+                                box_key(col_red_axes, &lo, &hi),
                             );
                         } else {
-                            exec.run_tile(arena, geom, extents, foot, &mut scratch);
+                            rp.unwrap().run_tile(arena, extents, foot, &mut scratch);
                         }
                     }
                 }
@@ -150,41 +227,44 @@ pub fn run_parallel(
     });
 }
 
-/// The macro-kernel parallel path: for each `kc` k-slice the whole
-/// packed B ([`PackedB`]) is built once by the calling thread and shared
-/// **read-only** by all workers; workers then claim `nc`-wide output
-/// column bands from an atomic counter, pack their band's C block
-/// thread-locally ([`PackedC`]) and drive the L1 tiles of every B block
-/// from the shared panels. Bands are disjoint `A` column ranges, so
-/// writes never race. `level` overrides the derived macro shape.
+/// The macro-kernel parallel path: for each `kc` reduction slice the
+/// whole packed row slice ([`PackedRows`]) is built once by the calling
+/// thread and shared **read-only** by all workers; workers then claim
+/// `nc`-wide output column bands from an atomic counter, pack their
+/// band's column block thread-locally ([`PackedCols`]) and drive the L1
+/// tiles of every row block from the shared panels. Bands are disjoint
+/// output element sets (the kernel's output map is injective per
+/// (row, column)), so writes never race. `level` overrides the derived
+/// macro shape; `micro` selects the register-tile width (pass the
+/// autotuned winner from
+/// [`Registry::micro_shape`](crate::runtime::Registry::micro_shape)).
 pub fn run_parallel_macro(
-    bufs: &mut MatmulBuffers,
+    bufs: &mut KernelBuffers,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
     level: Option<LevelPlan>,
+    micro: MicroShape,
 ) {
     assert!(threads >= 1);
     let basis = schedule.basis();
-    assert!(
-        basis.is_rect() && basis.dim() == 3,
-        "macro-kernel path needs a 3-D rect L1 basis"
-    );
-    let l1 = (
-        basis.basis()[(0, 0)] as usize,
-        basis.basis()[(1, 1)] as usize,
-        basis.basis()[(2, 2)] as usize,
-    );
+    assert!(basis.is_rect(), "macro-kernel path needs a rect L1 basis");
+    let gf = GemmForm::of(kernel).expect("macro-kernel path needs a GEMM-form kernel");
+    let views = kernel_views(kernel);
     let extents = kernel.extents();
-    let (m, n, k) = (
-        extents[0] as usize,
-        extents[1] as usize,
-        extents[2] as usize,
+    // bands write disjoint output element sets only when the output map
+    // is injective per (row, column) — provable for every Table-1 op
+    assert!(
+        gf.output_injective(&views, extents),
+        "macro-kernel bands need an injective output map"
     );
+    let lo0 = vec![0i64; extents.len()];
+    let plan = gf.plan_box(&views, &lo0, extents);
+    let l1 = gf.l1_tile(basis);
     let lp = level.unwrap_or_else(|| {
         LevelPlan::heuristic(
             l1,
-            (m, n, k),
+            (gf.m, gf.n, gf.k),
             &CacheSpec::HASWELL_L2,
             Some(&CacheSpec::HASWELL_L3_SLICE),
         )
@@ -192,14 +272,15 @@ pub fn run_parallel_macro(
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
-    let geom = bufs.geom();
-    let n_bands = n.div_ceil(nc);
+    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
+    let n_bands = plan.n.div_ceil(nc);
     let arena_len = bufs.arena.len();
-    let mut packed_b = PackedB::new();
-    for k0 in (0..k).step_by(kc) {
-        let kcc = (k0 + kc).min(k) - k0;
-        packed_b.pack_slice(&bufs.arena, geom.b_off, geom.ldb, m, mc, k0, kcc);
-        let pb = &packed_b;
+    let mut packed_rows = PackedRows::new();
+    for k0 in (0..plan.k).step_by(kc) {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        packed_rows.pack_slice(&bufs.arena, &plan, mc, k0, kcc);
+        let pr = &packed_rows;
+        let plan = &plan;
         let next = AtomicUsize::new(0);
         let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
         std::thread::scope(|scope| {
@@ -207,36 +288,47 @@ pub fn run_parallel_macro(
                 let next = &next;
                 let arena_ptr = &arena_ptr;
                 scope.spawn(move || {
-                    let mut packed_c = PackedC::new();
+                    let mut packed_cols = PackedCols::new();
                     loop {
                         let band = next.fetch_add(1, Ordering::Relaxed);
                         if band >= n_bands {
                             break;
                         }
                         let j0 = band * nc;
-                        let ncc = (j0 + nc).min(n) - j0;
-                        // SAFETY: bands are disjoint A column ranges; B/C
-                        // and the shared packed B are read-only here, so
-                        // each arena element is written by at most one
-                        // thread.
+                        let ncc = (j0 + nc).min(plan.n) - j0;
+                        // SAFETY: bands are disjoint output element sets;
+                        // the inputs and the shared packed rows are
+                        // read-only here, so each arena element is written
+                        // by at most one thread.
                         let arena: &mut [f64] =
                             unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
-                        packed_c.pack_block(arena, geom.c_off, geom.ldc, k0, kcc, j0, ncc);
-                        for bi in 0..pb.n_blocks() {
-                            let (bp, i0, mcc) = pb.block(bi);
-                            run_macro_block(
-                                bp,
-                                mcc,
-                                packed_c.panels(),
-                                ncc,
-                                kcc,
-                                (l1.0, l1.1),
-                                arena,
-                                geom.a_off,
-                                geom.lda,
-                                i0,
-                                j0,
-                            );
+                        match micro {
+                            MicroShape::Mr8Nr4 => {
+                                packed_cols.pack_band::<NR>(arena, plan, k0, kcc, j0, ncc);
+                                for bi in 0..pr.n_blocks() {
+                                    run_macro_block::<NR>(
+                                        pr.block(bi),
+                                        &packed_cols,
+                                        plan,
+                                        j0,
+                                        l1,
+                                        arena,
+                                    );
+                                }
+                            }
+                            MicroShape::Mr8Nr6 => {
+                                packed_cols.pack_band::<NR_WIDE>(arena, plan, k0, kcc, j0, ncc);
+                                for bi in 0..pr.n_blocks() {
+                                    run_macro_block::<NR_WIDE>(
+                                        pr.block(bi),
+                                        &packed_cols,
+                                        plan,
+                                        j0,
+                                        l1,
+                                        arena,
+                                    );
+                                }
+                            }
                         }
                     }
                 });
@@ -252,7 +344,7 @@ unsafe impl Sync for SendPtr {}
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen::executor::{max_abs_diff, MatmulBuffers};
+    use crate::codegen::executor::{max_abs_diff, KernelBuffers};
     use crate::domain::ops;
     use crate::lattice::IMat;
     use crate::tiling::TileBasis;
@@ -262,7 +354,7 @@ mod tests {
         let k = ops::matmul(24, 20, 28, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
         for threads in [1, 2, 4] {
-            let mut bufs = MatmulBuffers::from_kernel(&k);
+            let mut bufs = KernelBuffers::from_kernel(&k);
             let want = bufs.reference();
             run_parallel(&mut bufs, &k, &s, threads, 1);
             assert!(
@@ -278,7 +370,7 @@ mod tests {
         // edge microkernel in every dimension
         let k = ops::matmul(23, 19, 17, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
-        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 3, 1);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -293,9 +385,34 @@ mod tests {
             &[1, 0, 4],
         ]));
         let s = TiledSchedule::new(basis);
-        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 4, 1);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn parallel_row_partition_takes_tile_path() {
+        // partitioning over the row axis (i): groups are row bands, each
+        // tile box runs through the per-tile packed engine
+        let k = ops::matmul(25, 14, 18, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 6, 7]));
+        let mut bufs = KernelBuffers::from_kernel(&k);
+        let want = bufs.reference();
+        run_parallel(&mut bufs, &k, &s, 3, 0);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn parallel_reduction_output_degrades_serially() {
+        // convolution's output is a scalar: any partition var has output
+        // weight 0, so the group path must degrade to one worker and
+        // still be exact
+        let k = ops::convolution(57, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8]));
+        let mut bufs = KernelBuffers::from_kernel(&k);
+        let want = bufs.reference();
+        run_parallel(&mut bufs, &k, &s, 4, 0);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
     }
 
@@ -312,13 +429,76 @@ mod tests {
             nc: 5,
         };
         for threads in [1, 3, 8] {
-            let mut bufs = MatmulBuffers::from_kernel(&k);
+            for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+                let mut bufs = KernelBuffers::from_kernel(&k);
+                let want = bufs.reference();
+                run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp), micro);
+                assert!(
+                    max_abs_diff(&want, &bufs.output()) < 1e-9,
+                    "threads={threads} micro={micro:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_macro_runs_kronecker() {
+        let k = ops::kronecker(5, 4, 6, 3, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[2, 2, 4, 3]));
+        let mut bufs = KernelBuffers::from_kernel(&k);
+        let want = bufs.reference();
+        run_parallel_macro(&mut bufs, &k, &s, 3, None, MicroShape::Mr8Nr4);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+        // via run_parallel: loop axis 0 (i) is a GEMM column axis for
+        // Kronecker, so this takes the band path
+        let mut bufs = KernelBuffers::from_kernel(&k);
+        run_parallel(&mut bufs, &k, &s, 4, 0);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn non_injective_output_degrades_serially() {
+        // out[i+j] += in1[i] · in2[j]: GEMM-classified, but the output
+        // map collides across (i, j) — the band path must be refused and
+        // the group path must degrade to one worker instead of racing
+        use crate::domain::access::AffineAccess;
+        use crate::domain::{Kernel, OpRole, Operand};
+        use crate::index::{Layout, Table};
+        let n = 6i64;
+        let a = Table::new("A", &[2 * n - 1], Layout::ColumnMajor, 8, 0);
+        let b = Table::new("B", &[n], Layout::ColumnMajor, 8, (2 * n - 1) as usize * 8);
+        let c = Table::new("C", &[n], Layout::ColumnMajor, 8, (3 * n - 1) as usize * 8);
+        let kernel = Kernel::new(
+            "outer_sum",
+            vec![n, n],
+            vec![
+                Operand {
+                    table: a,
+                    access: AffineAccess::new(vec![vec![1, 1]], vec![0]),
+                    role: OpRole::ReadWrite,
+                },
+                Operand {
+                    table: b,
+                    access: AffineAccess::select(2, &[0]),
+                    role: OpRole::Read,
+                },
+                Operand {
+                    table: c,
+                    access: AffineAccess::select(2, &[1]),
+                    role: OpRole::Read,
+                },
+            ],
+        );
+        assert!(GemmForm::of(&kernel).is_some());
+        assert!(!GemmForm::of(&kernel)
+            .unwrap()
+            .output_injective(&kernel_views(&kernel), kernel.extents()));
+        let s = TiledSchedule::new(TileBasis::rect(&[2, 2]));
+        for pv in [0usize, 1] {
+            let mut bufs = KernelBuffers::from_kernel(&kernel);
             let want = bufs.reference();
-            run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp));
-            assert!(
-                max_abs_diff(&want, &bufs.output()) < 1e-9,
-                "threads={threads}"
-            );
+            run_parallel(&mut bufs, &kernel, &s, 4, pv);
+            assert!(max_abs_diff(&want, &bufs.output()) < 1e-9, "pv={pv}");
         }
     }
 
@@ -329,11 +509,11 @@ mod tests {
         // tile couples j with i
         let basis = TileBasis::from_cols(IMat::from_rows(&[
             &[2, 1, 0],
-            &[1, 2, 0],
+            &[1, 4, 0],
             &[0, 0, 2],
         ]));
         let s = TiledSchedule::new(basis);
-        let mut bufs = MatmulBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::from_kernel(&k);
         run_parallel(&mut bufs, &k, &s, 2, 1);
     }
 }

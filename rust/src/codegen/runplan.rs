@@ -1,0 +1,863 @@
+//! The kernel-neutral operand layer and the `RunPlan` IR — the bridge
+//! between a [`Kernel`]'s affine access maps and the packed micro/macro
+//! execution engine.
+//!
+//! Three layers, each derived from the kernel instead of hardcoded:
+//!
+//! * [`OperandView`] — the composed affine functional `φ ∘ access` of one
+//!   operand on the *loop* variables: one constant element offset plus one
+//!   weight per loop variable. Everything downstream (scalar executors,
+//!   address tracing, packing) indexes the arena through views, so no
+//!   executor ever hardcodes a kernel's `a_idx`/`b_idx`/`c_idx` geometry.
+//! * [`GemmForm`] — the GEMM normal form of a Table-1 kernel: every loop
+//!   axis classified as a **row** axis (shared by the output and one
+//!   input), a **column** axis (shared by the output and the other
+//!   input), or a **reduction** axis (absent from the output). The input
+//!   sharing the output's unit-stride axis becomes the *row operand* (the
+//!   packed-panel side of the microkernel); multiplication commutes, so
+//!   the inputs swap roles freely (`swap`). Matmul is `{i} × {j} × {kk}`,
+//!   Kronecker the reduction-free outer product `{k,l} × {i,j}`,
+//!   convolution and scalar product the degenerate `1 × 1 × {k}` dot.
+//! * [`RunPlan`] — the per-box execution IR: the rows of the (sub-)box
+//!   decomposed into maximal **unit-stride runs** (consecutive in both
+//!   the output and the row operand), plus explicit per-column and
+//!   per-reduction-step offset tables. A `RunPlan` is exactly what the
+//!   packers consume; tile boxes, macro blocks, and whole domains all
+//!   lower to the same IR.
+//!
+//! [`KernelBuffers`] replaces the former matmul-only `MatmulBuffers`: one
+//! arena laid out by the kernel's [`Table`](crate::index::Table)s (so
+//! executor element indices × 8 equal simulator byte addresses), with a
+//! kernel-semantic scalar [`reference`](KernelBuffers::reference) oracle.
+
+use crate::domain::order::IterOrder;
+use crate::domain::{Kernel, Operand};
+use crate::tiling::TileBasis;
+
+/// The composed affine map of one operand on the loop variables:
+/// arena element index `= off + Σ_j w[j]·f[j]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OperandView {
+    /// Constant element offset (table base + composed affine constants).
+    pub off: i64,
+    /// Element weight per loop variable.
+    pub w: Vec<i64>,
+}
+
+impl OperandView {
+    /// Build the view of one operand (`φ ∘ access` plus the table base).
+    pub fn of(op: &Operand) -> OperandView {
+        let (w, o) = op
+            .access
+            .compose_weights(op.table.map().weights(), op.table.map().offset());
+        let elem = op.table.elem();
+        debug_assert_eq!(op.table.base() % elem, 0, "table base must be elem-aligned");
+        OperandView {
+            off: (op.table.base() / elem) as i64 + o,
+            w,
+        }
+    }
+
+    /// Arena element index at loop point `f`.
+    #[inline(always)]
+    pub fn idx(&self, f: &[i64]) -> usize {
+        let mut v = self.off;
+        for (&wj, &fj) in self.w.iter().zip(f) {
+            v += wj * fj;
+        }
+        debug_assert!(v >= 0, "operand index underflow at {f:?}");
+        v as usize
+    }
+
+    /// Byte address at loop point `f` (f64 arenas).
+    #[inline(always)]
+    pub fn addr(&self, f: &[i64]) -> usize {
+        8 * self.idx(f)
+    }
+}
+
+/// Views of all three operands of a kernel, in operand order
+/// (output, input 1, input 2).
+pub fn kernel_views(kernel: &Kernel) -> Vec<OperandView> {
+    kernel.operands().iter().map(OperandView::of).collect()
+}
+
+/// Operand storage for any Table-1 kernel: one f64 arena indexed by byte
+/// address / 8, so executor addresses equal simulator addresses.
+#[derive(Clone, Debug)]
+pub struct KernelBuffers {
+    /// Arena of f64 covering all operand tables (indexed in elements).
+    pub arena: Vec<f64>,
+    views: Vec<OperandView>,
+    extents: Vec<i64>,
+    /// Logical dims of the output table (flatten order of `output()`).
+    out_dims: Vec<i64>,
+    /// Element offset (incl. table base) and per-dim element weights of
+    /// the output table's index map — for walking the output in layout
+    /// space without the kernel.
+    out_elem_off: i64,
+    out_elem_w: Vec<i64>,
+    /// Composed loop-space weights/offset of the *logical flat* output
+    /// index (dim 0 fastest) — the `reference()` oracle's write index.
+    flat_w: Vec<i64>,
+    flat_off: i64,
+}
+
+impl KernelBuffers {
+    /// Allocate and deterministically initialize from a kernel: inputs
+    /// (operands 1, 2) pseudorandom, output zero.
+    pub fn from_kernel(kernel: &Kernel) -> KernelBuffers {
+        let ops = kernel.operands();
+        assert_eq!(ops.len(), 3, "KernelBuffers expects out = in1 ⊙ in2 kernels");
+        for op in ops {
+            assert_eq!(op.table.elem(), 8, "f64 only");
+        }
+        let end = ops
+            .iter()
+            .map(|o| o.table.base() + o.table.bytes())
+            .max()
+            .unwrap();
+        let mut arena = vec![0f64; end.div_ceil(8)];
+        // deterministic xorshift fill for the inputs
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            ((state >> 11) as f64 / (1u64 << 53) as f64) - 0.5
+        };
+        for op in &ops[1..=2] {
+            let t = &op.table;
+            scan_dims(t.dims(), |x| {
+                arena[t.addr(x) / 8] = rnd();
+            });
+        }
+        let out = &ops[0];
+        let out_dims = out.table.dims().to_vec();
+        // logical (unpadded) column-major flatten weights of the output
+        let mut fw = vec![0i64; out_dims.len()];
+        let mut acc = 1i64;
+        for (r, w) in fw.iter_mut().enumerate() {
+            *w = acc;
+            acc *= out_dims[r];
+        }
+        let (flat_w, flat_off) = out.access.compose_weights(&fw, 0);
+        KernelBuffers {
+            arena,
+            views: kernel_views(kernel),
+            extents: kernel.extents().to_vec(),
+            out_elem_off: (out.table.base() / 8) as i64 + out.table.map().offset(),
+            out_elem_w: out.table.map().weights().to_vec(),
+            out_dims,
+            flat_w,
+            flat_off,
+        }
+    }
+
+    /// The composed operand views (output, input 1, input 2).
+    pub fn views(&self) -> &[OperandView] {
+        &self.views
+    }
+
+    pub fn view(&self, i: usize) -> &OperandView {
+        &self.views[i]
+    }
+
+    /// Number of logical output elements.
+    pub fn out_len(&self) -> usize {
+        self.out_dims.iter().product::<i64>() as usize
+    }
+
+    /// Refill the inputs with small *integer-valued* f64 (range
+    /// `[-range, range]`), so products and partial sums are exact and
+    /// every summation order yields bit-identical results — the fill the
+    /// bit-for-bit differential tests use.
+    pub fn fill_ints(&mut self, range: u64, seed: u64) {
+        let mut state = seed | 1;
+        let span = 2 * range + 1;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state % span) as f64 - range as f64
+        };
+        // the inputs occupy everything outside the output table; the
+        // simplest exact refill walks the whole arena, then re-zeroes the
+        // output table (padding values are never read by any executor)
+        for v in self.arena.iter_mut() {
+            *v = rnd();
+        }
+        self.reset_output();
+    }
+
+    /// Element index of the output table at logical index `x`.
+    #[inline(always)]
+    fn out_elem(&self, x: &[i64]) -> usize {
+        let mut v = self.out_elem_off;
+        for (&wj, &xj) in self.out_elem_w.iter().zip(x) {
+            v += wj * xj;
+        }
+        v as usize
+    }
+
+    /// Reset the output table to zero (between schedule runs).
+    pub fn reset_output(&mut self) {
+        let dims = self.out_dims.clone();
+        let off = self.out_elem_off;
+        let w = self.out_elem_w.clone();
+        let arena = &mut self.arena;
+        scan_dims(&dims, |x| {
+            let mut e = off;
+            for (&wj, &xj) in w.iter().zip(x) {
+                e += wj * xj;
+            }
+            arena[e as usize] = 0.0;
+        });
+    }
+
+    /// Copy of the output table, flattened logically (dim 0 fastest).
+    pub fn output(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.out_len());
+        scan_dims(&self.out_dims, |x| out.push(self.arena[self.out_elem(x)]));
+        out
+    }
+
+    /// Reference result computed by the kernel-semantic scalar oracle
+    /// (`out[π₀(f)] += in1[π₁(f)] · in2[π₂(f)]` over the whole domain in
+    /// lexicographic order), into fresh buffers — the differential-test
+    /// oracle for every executor path.
+    pub fn reference(&self) -> Vec<f64> {
+        let mut out = vec![0f64; self.out_len()];
+        let d = self.extents.len();
+        let (v1, v2) = (&self.views[1], &self.views[2]);
+        IterOrder::lex(d).scan(&self.extents, |f| {
+            let mut o = self.flat_off;
+            for (&wj, &fj) in self.flat_w.iter().zip(f) {
+                o += wj * fj;
+            }
+            out[o as usize] += self.arena[v1.idx(f)] * self.arena[v2.idx(f)];
+        });
+        out
+    }
+}
+
+/// Odometer over logical table dims, dim 0 fastest (column-major layout
+/// order).
+fn scan_dims<F: FnMut(&[i64])>(dims: &[i64], mut f: F) {
+    if dims.iter().any(|&m| m <= 0) {
+        return;
+    }
+    let d = dims.len();
+    let mut x = vec![0i64; d];
+    'outer: loop {
+        f(&x);
+        let mut r = 0;
+        loop {
+            if r == d {
+                break 'outer;
+            }
+            x[r] += 1;
+            if x[r] < dims[r] {
+                continue 'outer;
+            }
+            x[r] = 0;
+            r += 1;
+        }
+    }
+}
+
+/// The GEMM normal form of a kernel: loop axes grouped into row, column
+/// and reduction dimensions (see the module docs). `m`/`n`/`k` are the
+/// products of the group extents — the shape the macro-level
+/// [`LevelPlan`](crate::tiling::LevelPlan) blocks against.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GemmForm {
+    /// Row axes, unit-stride axis first (may be empty: `m = 1`).
+    pub row_axes: Vec<usize>,
+    /// Column axes (may be empty: `n = 1`).
+    pub col_axes: Vec<usize>,
+    /// Reduction axes (absent from the output; may be empty: `k = 1`).
+    pub red_axes: Vec<usize>,
+    /// Inputs swapped: the *second* input is the row operand.
+    pub swap: bool,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmForm {
+    /// Classify `kernel` into GEMM normal form. `None` when an axis is
+    /// shared by the output and *both* inputs (or by the output alone) —
+    /// those kernels fall back to the exact scalar path.
+    pub fn of(kernel: &Kernel) -> Option<GemmForm> {
+        if kernel.operands().len() != 3 {
+            return None;
+        }
+        let views = kernel_views(kernel);
+        let extents = kernel.extents();
+        let d = kernel.n_free();
+        let (vo, v1, v2) = (&views[0], &views[1], &views[2]);
+        let mut side1 = Vec::new();
+        let mut side2 = Vec::new();
+        let mut red = Vec::new();
+        for t in 0..d {
+            let (wo, w1, w2) = (vo.w[t], v1.w[t], v2.w[t]);
+            if extents[t] <= 1 || wo == 0 {
+                red.push(t);
+            } else if w1 != 0 && w2 == 0 {
+                side1.push(t);
+            } else if w2 != 0 && w1 == 0 {
+                side2.push(t);
+            } else {
+                // coupled (output + both inputs) or output-only axis
+                return None;
+            }
+        }
+        let unit1 = side1.iter().position(|&t| vo.w[t] == 1 && v1.w[t] == 1);
+        let unit2 = side2.iter().position(|&t| vo.w[t] == 1 && v2.w[t] == 1);
+        let front = |mut axes: Vec<usize>, u: usize| -> Vec<usize> {
+            let ax = axes.remove(u);
+            axes.insert(0, ax);
+            axes
+        };
+        let (row_axes, col_axes, swap) = match (unit1, unit2) {
+            // the input sharing the output's unit-stride axis packs as
+            // the row operand; the unit axis leads the row group
+            (Some(u), _) => (front(side1, u), side2, false),
+            (None, Some(u)) => (front(side2, u), side1, true),
+            (None, None) => {
+                // no unit-stride axis anywhere: keep the row dimension
+                // trivial when one side has no axes (runs stay long);
+                // otherwise rows degrade to short runs, which is still
+                // exact, just slower to pack
+                if side1.is_empty() && !side2.is_empty() {
+                    (side1, side2, false)
+                } else if side2.is_empty() && !side1.is_empty() {
+                    (side2, side1, true)
+                } else {
+                    (side1, side2, false)
+                }
+            }
+        };
+        let prod = |axes: &[usize]| -> usize {
+            axes.iter()
+                .map(|&t| extents[t].max(0) as usize)
+                .product::<usize>()
+        };
+        // extent-1/reduction axes contribute their extents to k so the
+        // macro blocking sees the true reduction depth
+        let m = prod(&row_axes);
+        let n = prod(&col_axes);
+        let k = prod(&red);
+        Some(GemmForm {
+            row_axes,
+            col_axes,
+            red_axes: red,
+            swap,
+            m,
+            n,
+            k,
+        })
+    }
+
+    /// The views in GEMM roles `(out, row operand, column operand)`.
+    pub fn role_views<'a>(
+        &self,
+        views: &'a [OperandView],
+    ) -> (&'a OperandView, &'a OperandView, &'a OperandView) {
+        if self.swap {
+            (&views[0], &views[2], &views[1])
+        } else {
+            (&views[0], &views[1], &views[2])
+        }
+    }
+
+    /// The L1 tile footprint `(ti, tj, tk)` in GEMM space induced by a
+    /// rectangular loop-space tile basis: products of the basis diagonal
+    /// over each axis group.
+    pub fn l1_tile(&self, basis: &TileBasis) -> (usize, usize, usize) {
+        assert!(basis.is_rect());
+        let prod = |axes: &[usize]| -> usize {
+            axes.iter()
+                .map(|&t| basis.basis()[(t, t)].max(1) as usize)
+                .product::<usize>()
+                .max(1)
+        };
+        (
+            prod(&self.row_axes),
+            prod(&self.col_axes),
+            prod(&self.red_axes),
+        )
+    }
+
+    /// Build the [`RunPlan`] of the clipped loop-space box
+    /// `[lo_t, hi_t)` — the whole domain when `lo = 0`, `hi = extents`.
+    pub fn plan_box(&self, views: &[OperandView], lo: &[i64], hi: &[i64]) -> RunPlan {
+        let mut plan = RunPlan::default();
+        self.plan_box_into(views, lo, hi, &mut plan);
+        plan
+    }
+
+    /// As [`GemmForm::plan_box`], but refilling a caller-owned plan — the
+    /// per-tile executors reuse one scratch plan so the hot loop performs
+    /// no allocation in steady state (Vec capacities persist).
+    pub fn plan_box_into(
+        &self,
+        views: &[OperandView],
+        lo: &[i64],
+        hi: &[i64],
+        plan: &mut RunPlan,
+    ) {
+        let (vo, vr, vc) = self.role_views(views);
+        plan.runs.clear();
+        plan.col_out.clear();
+        plan.col_in.clear();
+        plan.red_row.clear();
+        plan.red_col.clear();
+        // rows: maximal unit-stride runs of (out, row operand)
+        let runs = &mut plan.runs;
+        let mut m = 0usize;
+        scan_axes(&self.row_axes, lo, hi, |coords| {
+            m += 1;
+            let mut o = vo.off;
+            let mut r = vr.off;
+            for (p, &t) in self.row_axes.iter().enumerate() {
+                o += vo.w[t] * coords[p];
+                r += vr.w[t] * coords[p];
+            }
+            match runs.last_mut() {
+                Some(run)
+                    if run.out + run.len as i64 == o && run.row + run.len as i64 == r =>
+                {
+                    run.len += 1;
+                }
+                _ => runs.push(Run { out: o, row: r, len: 1 }),
+            }
+        });
+        // columns: absolute column-operand offsets, relative output ones
+        let col_out = &mut plan.col_out;
+        let col_in = &mut plan.col_in;
+        scan_axes(&self.col_axes, lo, hi, |coords| {
+            let mut o = 0i64;
+            let mut c = vc.off;
+            for (p, &t) in self.col_axes.iter().enumerate() {
+                o += vo.w[t] * coords[p];
+                c += vc.w[t] * coords[p];
+            }
+            col_out.push(o);
+            col_in.push(c);
+        });
+        // reduction steps: relative offsets for both inputs
+        let red_row = &mut plan.red_row;
+        let red_col = &mut plan.red_col;
+        scan_axes(&self.red_axes, lo, hi, |coords| {
+            let mut r = 0i64;
+            let mut c = 0i64;
+            for (p, &t) in self.red_axes.iter().enumerate() {
+                r += vr.w[t] * coords[p];
+                c += vc.w[t] * coords[p];
+            }
+            red_row.push(r);
+            red_col.push(c);
+        });
+        plan.m = m;
+        plan.n = plan.col_out.len();
+        plan.k = plan.red_row.len();
+    }
+
+    /// Sufficient (mixed-radix) check that distinct `(row, column)`
+    /// positions map to distinct output elements — the invariant the
+    /// parallel band decomposition's write-disjointness rests on. True
+    /// for every Table-1 kernel; conservatively false when the weights
+    /// don't dominate each other's spans.
+    pub fn output_injective(&self, views: &[OperandView], extents: &[i64]) -> bool {
+        let (vo, _, _) = self.role_views(views);
+        let axes: Vec<usize> = self
+            .row_axes
+            .iter()
+            .chain(&self.col_axes)
+            .copied()
+            .collect();
+        view_injective(vo, extents, &axes)
+    }
+}
+
+/// Sufficient mixed-radix condition that an operand view is injective on
+/// the box coordinates of `axes`: sorted by |weight|, every weight must
+/// exceed the maximal offset span reachable by all smaller-weight axes
+/// together. Conservative (may return false for injective maps), never
+/// wrong when it returns true.
+pub fn view_injective(v: &OperandView, extents: &[i64], axes: &[usize]) -> bool {
+    let mut axes: Vec<usize> = axes.to_vec();
+    axes.sort_by_key(|&t| v.w[t].unsigned_abs());
+    let mut span: i128 = 0;
+    for &t in &axes {
+        let w = v.w[t].unsigned_abs() as i128;
+        if w <= span {
+            return false;
+        }
+        span += w * ((extents[t].max(1) - 1) as i128);
+    }
+    true
+}
+
+/// Odometer over a subset of loop axes clipped to `[lo, hi)`, first axis
+/// fastest. Calls `f` once with empty coords when `axes` is empty; calls
+/// it zero times when any clipped range is empty.
+fn scan_axes<F: FnMut(&[i64])>(axes: &[usize], lo: &[i64], hi: &[i64], mut f: F) {
+    if axes.is_empty() {
+        f(&[]);
+        return;
+    }
+    if axes.iter().any(|&t| lo[t] >= hi[t]) {
+        return;
+    }
+    let d = axes.len();
+    let mut x: Vec<i64> = axes.iter().map(|&t| lo[t]).collect();
+    'outer: loop {
+        f(&x);
+        let mut p = 0;
+        loop {
+            if p == d {
+                break 'outer;
+            }
+            x[p] += 1;
+            if x[p] < hi[axes[p]] {
+                continue 'outer;
+            }
+            x[p] = lo[axes[p]];
+            p += 1;
+        }
+    }
+}
+
+/// One maximal unit-stride run: `len` consecutive output elements
+/// starting at element `out`, with the matching row-operand elements
+/// starting at `row` — both advancing by +1 — shared by every column and
+/// reduction step of the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    /// Output element offset of the run's first row (column contribution
+    /// excluded — add `col_out[c]`).
+    pub out: i64,
+    /// Row-operand element offset of the first row (reduction
+    /// contribution excluded — add `red_row[t]`).
+    pub row: i64,
+    pub len: usize,
+}
+
+/// The per-box execution IR consumed by the packed engine: unit-stride
+/// runs along the row dimension, plus per-column and per-reduction-step
+/// offset tables (see the module docs for the offset split).
+#[derive(Clone, Debug, Default)]
+pub struct RunPlan {
+    pub runs: Vec<Run>,
+    /// Output element contribution of column `c` (add to `Run::out`).
+    pub col_out: Vec<i64>,
+    /// Absolute column-operand element offset of column `c` at reduction
+    /// contribution zero (add `red_col[t]`).
+    pub col_in: Vec<i64>,
+    /// Row-operand element contribution of reduction step `t`.
+    pub red_row: Vec<i64>,
+    /// Column-operand element contribution of reduction step `t`.
+    pub red_col: Vec<i64>,
+    /// Total rows (Σ run lengths), columns, reduction steps.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// One `MR`-granular packing panel of a row range: up to
+/// [`MR`](super::microkernel::MR) live rows starting at absolute output
+/// element `out` / row-operand element `row`. Panels never straddle run
+/// boundaries, so both offsets are unit-stride across the panel's rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowPanel {
+    pub out: i64,
+    pub row: i64,
+    pub rows: usize,
+}
+
+impl RunPlan {
+    /// Decompose global row positions `[r0, r0 + rows)` into MR-granular
+    /// packing panels (shared by the packers and the address-level
+    /// tracer, so their layouts can never diverge).
+    pub fn row_panels(&self, r0: usize, rows: usize) -> Vec<RowPanel> {
+        use super::microkernel::MR;
+        let mut panels = Vec::new();
+        let r1 = r0 + rows;
+        let mut pos = 0usize;
+        for run in &self.runs {
+            let lo = pos.max(r0);
+            let hi = (pos + run.len).min(r1);
+            if lo < hi {
+                let base = (lo - pos) as i64;
+                let seg_len = hi - lo;
+                let mut p = 0usize;
+                while p < seg_len {
+                    let live = MR.min(seg_len - p);
+                    panels.push(RowPanel {
+                        out: run.out + base + p as i64,
+                        row: run.row + base + p as i64,
+                        rows: live,
+                    });
+                    p += MR;
+                }
+            }
+            pos += run.len;
+            if pos >= r1 {
+                break;
+            }
+        }
+        panels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+
+    #[test]
+    fn views_match_pointwise_addresses() {
+        // composed views must agree with Kernel::addrs_at everywhere
+        for kernel in [
+            ops::matmul_padded(5, 4, 6, 7, 6, 5, 8, 64),
+            ops::convolution(9, 8, 16),
+            ops::scalar_product(7, 8, 8),
+            ops::kronecker(2, 3, 4, 2, 8, 0),
+        ] {
+            let views = kernel_views(&kernel);
+            IterOrder::lex(kernel.n_free()).scan(kernel.extents(), |f| {
+                let addrs = kernel.addrs_at(f);
+                for (v, a) in views.iter().zip(&addrs) {
+                    assert_eq!(v.addr(f), *a, "kernel {} at {f:?}", kernel.name());
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn gemm_form_matmul() {
+        let k = ops::matmul(8, 6, 10, 8, 0);
+        let gf = GemmForm::of(&k).unwrap();
+        assert_eq!(gf.row_axes, vec![0]);
+        assert_eq!(gf.col_axes, vec![1]);
+        assert_eq!(gf.red_axes, vec![2]);
+        assert!(!gf.swap);
+        assert_eq!((gf.m, gf.n, gf.k), (8, 10, 6));
+    }
+
+    #[test]
+    fn gemm_form_convolution_and_scalar() {
+        for k in [ops::convolution(12, 8, 0), ops::scalar_product(12, 8, 0)] {
+            let gf = GemmForm::of(&k).unwrap();
+            assert!(gf.row_axes.is_empty(), "{}", k.name());
+            assert!(gf.col_axes.is_empty());
+            assert_eq!(gf.red_axes, vec![0]);
+            assert_eq!((gf.m, gf.n, gf.k), (1, 1, 12));
+        }
+    }
+
+    #[test]
+    fn gemm_form_kronecker_swaps_inputs() {
+        let k = ops::kronecker(3, 4, 5, 2, 8, 0);
+        let gf = GemmForm::of(&k).unwrap();
+        // C (operand 2) shares the output's unit-stride axis k (loop 2)
+        assert!(gf.swap);
+        assert_eq!(gf.row_axes, vec![2, 3]);
+        assert_eq!(gf.col_axes, vec![0, 1]);
+        assert!(gf.red_axes.is_empty());
+        assert_eq!((gf.m, gf.n, gf.k), (5 * 2, 3 * 4, 1));
+    }
+
+    #[test]
+    fn plan_box_offsets_match_views_matmul() {
+        let kernel = ops::matmul_padded(9, 5, 7, 11, 10, 6, 8, 16);
+        let views = kernel_views(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let lo = [2i64, 1, 0];
+        let hi = [7i64, 6, 5];
+        let plan = gf.plan_box(&views, &lo, &hi);
+        assert_eq!((plan.m, plan.n, plan.k), (5, 5, 5));
+        // exhaustive check: every (row, col, red) offset triple equals the
+        // view-computed element indices
+        let mut r = 0usize;
+        for run in &plan.runs {
+            for i in 0..run.len {
+                for (c, (&co, &ci)) in plan.col_out.iter().zip(&plan.col_in).enumerate() {
+                    for (t, (&rr, &rc)) in plan.red_row.iter().zip(&plan.red_col).enumerate()
+                    {
+                        let f = [
+                            lo[0] + (r + i) as i64,
+                            lo[1] + c as i64,
+                            lo[2] + t as i64,
+                        ];
+                        assert_eq!((run.out + i as i64 + co) as usize, views[0].idx(&f));
+                        assert_eq!((run.row + i as i64 + rr) as usize, views[1].idx(&f));
+                        assert_eq!((ci + rc) as usize, views[2].idx(&f));
+                    }
+                }
+            }
+            r += run.len;
+        }
+        // matmul rows are one unit-stride run per box
+        assert_eq!(plan.runs.len(), 1);
+    }
+
+    #[test]
+    fn plan_box_kronecker_runs_have_inner_extent() {
+        let kernel = ops::kronecker(3, 2, 4, 5, 8, 0);
+        let views = kernel_views(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let lo = vec![0i64; 4];
+        let hi: Vec<i64> = kernel.extents().to_vec();
+        let plan = gf.plan_box(&views, &lo, &hi);
+        assert_eq!(plan.m, 20);
+        assert_eq!(plan.n, 6);
+        assert_eq!(plan.k, 1);
+        // the output jumps every m1c = 4 rows (lda = 12 > 4)
+        assert_eq!(plan.runs.len(), 5);
+        assert!(plan.runs.iter().all(|r| r.len == 4));
+        // the row operand (C) is fully contiguous across runs
+        for w in plan.runs.windows(2) {
+            assert_eq!(w[0].row + w[0].len as i64, w[1].row);
+        }
+    }
+
+    #[test]
+    fn plan_box_convolution_reverses_column_operand() {
+        let n = 10i64;
+        let kernel = ops::convolution(n, 8, 0);
+        let views = kernel_views(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&views, &[0], &[n]);
+        assert_eq!((plan.m, plan.n, plan.k), (1, 1, 10));
+        // red_col must walk C backwards: C_{n-1-t}
+        for t in 0..plan.k {
+            let f = [t as i64];
+            assert_eq!(
+                (plan.col_in[0] + plan.red_col[t]) as usize,
+                views[2].idx(&f)
+            );
+            assert_eq!(
+                (plan.runs[0].row + plan.red_row[t]) as usize,
+                views[1].idx(&f)
+            );
+        }
+    }
+
+    #[test]
+    fn row_panels_never_straddle_runs() {
+        use crate::codegen::microkernel::MR;
+        let kernel = ops::kronecker(3, 2, 4, 5, 8, 0);
+        let views = kernel_views(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&views, &[0, 0, 0, 0], kernel.extents());
+        let panels = plan.row_panels(0, plan.m);
+        let total: usize = panels.iter().map(|p| p.rows).sum();
+        assert_eq!(total, plan.m);
+        // runs are 4 long, MR = 8: every panel is a whole 4-row run
+        assert!(panels.iter().all(|p| p.rows <= MR));
+        // sub-range request clips
+        let sub = plan.row_panels(2, 7);
+        assert_eq!(sub.iter().map(|p| p.rows).sum::<usize>(), 7);
+        assert_eq!(sub[0].out, plan.runs[0].out + 2);
+    }
+
+    #[test]
+    fn output_injectivity_holds_for_table1_and_rejects_collisions() {
+        for kernel in [
+            ops::matmul_padded(9, 5, 7, 11, 10, 6, 8, 16),
+            ops::kronecker(3, 4, 5, 2, 8, 0),
+            ops::convolution(12, 8, 0),
+            ops::scalar_product(12, 8, 0),
+        ] {
+            let gf = GemmForm::of(&kernel).unwrap();
+            assert!(
+                gf.output_injective(&kernel_views(&kernel), kernel.extents()),
+                "{}",
+                kernel.name()
+            );
+        }
+        // a colliding map: out = i + j over i, j ∈ [0, 4) is not injective
+        let v = OperandView {
+            off: 0,
+            w: vec![1, 1],
+        };
+        assert!(!view_injective(&v, &[4, 4], &[0, 1]));
+        // dominating weights are accepted
+        let v = OperandView {
+            off: 0,
+            w: vec![1, 4],
+        };
+        assert!(view_injective(&v, &[4, 4], &[0, 1]));
+        assert!(view_injective(&v, &[4, 4], &[1, 0]), "order-insensitive");
+    }
+
+    #[test]
+    fn plan_box_into_reuses_scratch() {
+        let kernel = ops::matmul(10, 6, 8, 8, 0);
+        let views = kernel_views(&kernel);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let mut scratch = RunPlan::default();
+        gf.plan_box_into(&views, &[0, 0, 0], kernel.extents(), &mut scratch);
+        let full = gf.plan_box(&views, &[0, 0, 0], kernel.extents());
+        assert_eq!(scratch.runs, full.runs);
+        assert_eq!((scratch.m, scratch.n, scratch.k), (full.m, full.n, full.k));
+        // refill with a smaller box: stale state must be fully replaced
+        gf.plan_box_into(&views, &[2, 1, 1], &[5, 4, 3], &mut scratch);
+        assert_eq!((scratch.m, scratch.n, scratch.k), (3, 3, 2));
+        assert_eq!(scratch.col_out.len(), 3);
+        assert_eq!(scratch.red_row.len(), 2);
+    }
+
+    #[test]
+    fn buffers_reference_matches_legacy_matmul_oracle() {
+        let kernel = ops::matmul_padded(7, 5, 6, 9, 8, 7, 8, 32);
+        let bufs = KernelBuffers::from_kernel(&kernel);
+        // legacy oracle (j, kk, i nesting) on the same arena
+        let views = kernel_views(&kernel);
+        let (m, n, k) = (7usize, 6, 5);
+        let mut want = vec![0f64; m * n];
+        for j in 0..n {
+            for kk in 0..k {
+                for i in 0..m {
+                    let f = [i as i64, j as i64, kk as i64];
+                    want[i + m * j] +=
+                        bufs.arena[views[1].idx(&f)] * bufs.arena[views[2].idx(&f)];
+                }
+            }
+        }
+        let got = bufs.reference();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn buffers_output_and_reset_roundtrip() {
+        let kernel = ops::kronecker(2, 3, 3, 2, 8, 0);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        assert_eq!(bufs.out_len(), 36);
+        assert!(bufs.output().iter().all(|&v| v == 0.0));
+        let e = bufs.view(0).idx(&[0, 0, 0, 0]);
+        bufs.arena[e] = 3.5;
+        assert_eq!(bufs.output()[0], 3.5);
+        bufs.reset_output();
+        assert!(bufs.output().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fill_ints_is_integer_valued() {
+        let kernel = ops::matmul(6, 5, 4, 8, 0);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        bufs.fill_ints(2, 0xF00D);
+        for &v in &bufs.arena {
+            assert_eq!(v, v.trunc());
+            assert!(v.abs() <= 2.0);
+        }
+        assert!(bufs.output().iter().all(|&v| v == 0.0));
+    }
+}

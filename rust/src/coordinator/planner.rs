@@ -1,31 +1,46 @@
 //! The planner: lattice-model tile selection mapped onto shipped kernels.
 //!
-//! For each job shape the planner runs the paper's selector (§4.0.4: K−1
+//! For each job the planner runs the paper's selector (§4.0.4: K−1
 //! lattice rule + model-driven search) against the configured cache spec,
 //! derives a preferred tile shape, and resolves the nearest AOT kernel
-//! variant from the [`Registry`]. Plans are cached per shape — selection
-//! runs once, off the hot path.
+//! variant from the [`Registry`]. Since the `RunPlan` refactor the
+//! planner is kernel-agnostic: [`Planner::plan_kernel`] plans **any**
+//! registered Table-1 kernel (selection, GEMM normal form, two-level
+//! macro shape, register-tile width); [`Planner::plan`] keeps the
+//! matmul serving entry point (model evaluation on a size-capped
+//! instance with the true leading dimensions). Plans are cached per
+//! shape — selection runs once, off the hot path.
 
 use std::collections::HashMap;
 
 use crate::cache::CacheSpec;
-use crate::domain::ops;
+use crate::codegen::{GemmForm, MicroShape};
+use crate::domain::{ops, Kernel};
 use crate::runtime::Registry;
 use crate::tiling;
 
-/// A resolved execution plan for one matmul shape.
+/// A resolved execution plan for one kernel shape.
 #[derive(Clone, Debug)]
 pub struct Plan {
+    /// Kernel name (`matmul`, `convolution`, `kronecker`, …).
+    pub kernel: String,
+    /// GEMM-normal dimensions of the planned shape (rows, reduction,
+    /// columns — for matmul exactly `m`, `k`, `n`).
     pub m: usize,
     pub k: usize,
     pub n: usize,
-    /// Tile shape the lattice model preferred (loop-space extents).
+    /// Tile shape the lattice model preferred, in GEMM-normal order
+    /// (rows, reduction, columns).
     pub model_tile: (usize, usize, usize),
     /// Two-level macro/micro blocking: the L1 tile above driven inside
     /// L2/L3-sized `mc×kc×nc` macro blocks, selected per level
     /// ([`tiling::level_plan`] against the Haswell L2 + L3-slice specs).
     pub level: tiling::LevelPlan,
-    /// Name of the AOT artifact chosen to realize it.
+    /// Register-tile shape the engine dispatches (the startup autotuner's
+    /// winner when the registry recorded one; 8×4 otherwise).
+    pub micro: MicroShape,
+    /// Name of the AOT artifact chosen to realize it (matmul shapes), or
+    /// the in-process packed engine for other kernels.
     pub artifact: String,
     /// Predicted misses (sampled model) for the chosen schedule.
     pub predicted_misses: u64,
@@ -34,11 +49,13 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// One-line report of the plan including the multi-level block shape.
+    /// One-line report of the plan including the multi-level block shape
+    /// and the register-tile width.
     pub fn describe(&self) -> String {
         format!(
-            "{} ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, artifact {}",
+            "{} [{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, micro {}, artifact {}",
             self.plan_name,
+            self.kernel,
             self.m,
             self.k,
             self.n,
@@ -46,6 +63,7 @@ impl Plan {
             self.level.mc,
             self.level.kc,
             self.level.nc,
+            self.micro.name(),
             self.artifact
         )
     }
@@ -54,7 +72,7 @@ impl Plan {
 /// Shape-keyed plan cache around the selector.
 pub struct Planner {
     spec: CacheSpec,
-    cache: HashMap<(usize, usize, usize), Plan>,
+    cache: HashMap<(String, Vec<i64>), Plan>,
     sample_classes: usize,
 }
 
@@ -76,14 +94,20 @@ impl Planner {
         &self.spec
     }
 
-    /// Plan for an `m×k×n` matmul, resolving against `registry`.
+    /// Plan for an `m×k×n` matmul, resolving against `registry`. Model
+    /// selection runs on a proportional small instance when the real size
+    /// would make even the sampled model slow; the conflict lattice
+    /// depends on the leading dimension, which is preserved.
     pub fn plan(&mut self, registry: &Registry, m: usize, k: usize, n: usize) -> Plan {
-        if let Some(p) = self.cache.get(&(m, k, n)) {
+        // distinct cache namespace from `plan_kernel` — the two entry
+        // points resolve different artifacts for the same matmul extents
+        let key = (
+            "matmul#aot".to_string(),
+            vec![m as i64, n as i64, k as i64],
+        );
+        if let Some(p) = self.cache.get(&key) {
             return p.clone();
         }
-        // Model selection runs on a proportional small instance when the
-        // real size would make even the sampled model slow; the conflict
-        // lattice depends on the leading dimension, which we preserve.
         let (sm, sk, sn) = shrink(m, k, n);
         let kernel = ops::matmul_padded(
             sm as i64,
@@ -95,19 +119,76 @@ impl Planner {
             8,
             0,
         );
-        let ranked = tiling::select(&kernel, &self.spec, self.sample_classes);
+        let mut plan = self.plan_shape(registry, &kernel, (m, n, k));
+        // resolve the AOT artifact against the *true* shape
+        plan.artifact = registry
+            .closest_variant(m, k, n, plan.model_tile)
+            .map(|a| a.name.clone())
+            .unwrap_or_else(|| format!("<no artifact for {m}x{k}x{n}>"));
+        self.cache.insert(key, plan.clone());
+        plan
+    }
+
+    /// Plan any registered Table-1 kernel: selector + GEMM normal form +
+    /// per-level macro shape, executed by the in-process packed engine.
+    /// Model selection runs on a size-capped instance of the same op when
+    /// the real domain would make even the sampled model slow (the same
+    /// guard `plan` applies to matmul).
+    pub fn plan_kernel(&mut self, registry: &Registry, kernel: &Kernel) -> Plan {
+        let key = (kernel.name().to_string(), kernel.extents().to_vec());
+        if let Some(p) = self.cache.get(&key) {
+            return p.clone();
+        }
+        let dims = GemmForm::of(kernel)
+            .map(|gf| (gf.m, gf.n, gf.k))
+            .unwrap_or_else(|| (kernel.domain_size().max(1) as usize, 1, 1));
+        let shrunk = shrink_kernel(kernel);
+        let model_kernel = shrunk.as_ref().unwrap_or(kernel);
+        let mut plan = self.plan_shape(registry, model_kernel, dims);
+        plan.kernel = kernel.name().to_string();
+        plan.artifact = format!("<packed-engine {}>", kernel.name());
+        self.cache.insert(key, plan.clone());
+        plan
+    }
+
+    /// Shared planning core: run the selector on `kernel`, lift the
+    /// winning tile into GEMM-normal shape `(m, n, k)`, and derive the
+    /// two-level macro shape against the true extents.
+    fn plan_shape(
+        &self,
+        registry: &Registry,
+        kernel: &Kernel,
+        (m, n, k): (usize, usize, usize),
+    ) -> Plan {
+        let ranked = tiling::select(kernel, &self.spec, self.sample_classes);
         let best = ranked.first();
+        let gf = GemmForm::of(kernel);
         let (tile, l1_tile, name, predicted) = match best {
             Some(p) => {
                 let b = p.schedule.basis();
                 let ext = |i: usize| -> usize {
                     (0..b.dim())
                         .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
-                        .sum()
+                        .sum::<usize>()
+                        .max(1)
+                };
+                let group = |axes: &[usize]| -> usize {
+                    axes.iter().map(|&t| ext(t)).product::<usize>().max(1)
+                };
+                let (ti, tj, tk) = match &gf {
+                    Some(gf) => (
+                        group(&gf.row_axes),
+                        group(&gf.col_axes),
+                        group(&gf.red_axes),
+                    ),
+                    None => {
+                        let d = b.dim();
+                        (ext(0), if d > 1 { ext(1) } else { 1 }, if d > 2 { ext(2) } else { 1 })
+                    }
                 };
                 (
-                    (ext(0), ext(2), ext(1)),
-                    (ext(0), ext(1), ext(2)),
+                    (ti, tk, tj),
+                    (ti, tj, tk),
                     p.name.clone(),
                     p.predicted.as_ref().map(|c| c.misses).unwrap_or(0),
                 )
@@ -118,29 +199,25 @@ impl Planner {
         // seed the macro block, nc from the L3 slice — against the *true*
         // (m, n, k), not the shrunk model instance
         let level = tiling::level_plan(
-            &kernel,
+            kernel,
             (m, n, k),
             l1_tile,
             &CacheSpec::HASWELL_L2,
             Some(&CacheSpec::HASWELL_L3_SLICE),
             self.sample_classes,
         );
-        let artifact = registry
-            .closest_variant(m, k, n, tile)
-            .map(|a| a.name.clone())
-            .unwrap_or_else(|| format!("<no artifact for {m}x{k}x{n}>"));
-        let plan = Plan {
+        Plan {
+            kernel: kernel.name().to_string(),
             m,
             k,
             n,
             model_tile: tile,
             level,
-            artifact,
+            micro: registry.micro_shape().unwrap_or(MicroShape::Mr8Nr4),
+            artifact: String::new(),
             predicted_misses: predicted,
             plan_name: name,
-        };
-        self.cache.insert((m, k, n), plan.clone());
-        plan
+        }
     }
 
     pub fn cached_plans(&self) -> usize {
@@ -148,11 +225,48 @@ impl Planner {
     }
 }
 
-/// Shrink a problem size for model evaluation (keep ≤ 48³ points),
+/// Shrink a problem size for model evaluation (keep ≤ 64³ points),
 /// preserving divisibility structure where possible.
 fn shrink(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
     let cap = 64usize;
     (m.min(cap), k.min(cap), n.min(cap))
+}
+
+/// Size-capped model instance of a registered Table-1 kernel, or `None`
+/// when the real domain is already small enough for the sampled model.
+/// Matmul preserves the true leading dimensions (the conflict lattice
+/// depends on them); for the other ops the capped instance's layout is a
+/// proportional approximation.
+fn shrink_kernel(kernel: &Kernel) -> Option<Kernel> {
+    const CAP: i64 = 1 << 18;
+    if kernel.domain_size() <= CAP {
+        return None;
+    }
+    let e = kernel.extents();
+    match kernel.name() {
+        "convolution" => Some(ops::convolution(e[0].min(1 << 16), 8, 0)),
+        "scalar_product" => Some(ops::scalar_product(e[0].min(1 << 16), 8, 0)),
+        "kronecker" => Some(ops::kronecker(
+            e[0].min(16),
+            e[1].min(16),
+            e[2].min(24),
+            e[3].min(24),
+            8,
+            0,
+        )),
+        // matmul extents are (m, n, k): shrink like `plan`, true lds
+        "matmul" => Some(ops::matmul_padded(
+            e[0].min(64),
+            e[2].min(64),
+            e[1].min(64),
+            e[0],
+            e[0],
+            e[2],
+            8,
+            0,
+        )),
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +300,7 @@ mod tests {
         let p = planner.plan(&reg, 64, 64, 64);
         assert!(p.artifact.contains("no artifact"));
         assert!(p.model_tile.0 > 0);
+        assert_eq!(p.kernel, "matmul");
     }
 
     #[test]
@@ -201,5 +316,68 @@ mod tests {
         assert!(p.level.mc * p.level.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * p.level.kc * 8);
         let d = p.describe();
         assert!(d.contains("macro mc="), "{d}");
+        assert!(d.contains("micro 8x"), "{d}");
+    }
+
+    #[test]
+    fn planner_plans_any_table1_kernel() {
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let conv = planner.plan_kernel(&reg, &ops::convolution(4096, 8, 0));
+        assert_eq!(conv.kernel, "convolution");
+        assert_eq!((conv.m, conv.n), (1, 1));
+        assert_eq!(conv.k, 4096);
+        assert!(conv.artifact.contains("packed-engine"));
+        assert!(conv.level.kc >= 1);
+        let kron = planner.plan_kernel(&reg, &ops::kronecker(16, 16, 24, 24, 8, 0));
+        assert_eq!(kron.kernel, "kronecker");
+        assert_eq!(kron.m, 24 * 24);
+        assert_eq!(kron.n, 16 * 16);
+        assert_eq!(kron.k, 1);
+        let d = kron.describe();
+        assert!(d.contains("kronecker"), "{d}");
+        // plans are cached per kernel/extents
+        planner.plan_kernel(&reg, &ops::convolution(4096, 8, 0));
+        assert_eq!(planner.cached_plans(), 2);
+    }
+
+    #[test]
+    fn plan_entry_points_do_not_share_cache_slots() {
+        // plan() resolves AOT artifacts, plan_kernel() the packed engine:
+        // identical matmul extents must not collide in the cache
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let generic = planner.plan_kernel(&reg, &crate::domain::ops::matmul(64, 64, 64, 8, 0));
+        assert!(generic.artifact.contains("packed-engine"));
+        let served = planner.plan(&reg, 64, 64, 64);
+        assert!(
+            served.artifact.contains("no artifact") || !served.artifact.contains("packed-engine"),
+            "plan() returned plan_kernel()'s cached artifact: {}",
+            served.artifact
+        );
+        assert_eq!(planner.cached_plans(), 2);
+    }
+
+    #[test]
+    fn plan_kernel_shrinks_oversized_models() {
+        // a 64⁴ Kronecker domain (~16.8M points) must not reach the
+        // sampled model at full size; planning stays fast and the GEMM
+        // dims still reflect the *true* shape
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p = planner.plan_kernel(&reg, &crate::domain::ops::kronecker(64, 64, 64, 64, 8, 0));
+        assert_eq!(p.m, 64 * 64);
+        assert_eq!(p.n, 64 * 64);
+        assert_eq!(p.k, 1);
+    }
+
+    #[test]
+    fn plan_reports_recorded_micro_shape() {
+        let mut reg = Registry::default();
+        reg.set_micro_shape(MicroShape::Mr8Nr6);
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p = planner.plan(&reg, 64, 64, 64);
+        assert_eq!(p.micro, MicroShape::Mr8Nr6);
+        assert!(p.describe().contains("micro 8x6"));
     }
 }

@@ -49,8 +49,8 @@ impl Service {
     }
 
     /// The plan chosen for the served shape — carries the two-level
-    /// `mc×kc×nc` macro-block decision alongside the L1 tile
-    /// (report with [`Plan::describe`]).
+    /// `mc×kc×nc` macro-block decision and the autotuned register-tile
+    /// width alongside the L1 tile (report with [`Plan::describe`]).
     pub fn plan(&self) -> &Plan {
         &self.plan
     }

@@ -5,20 +5,23 @@
 //! This experiment quantifies both sides: each plan runs through a
 //! two-level Haswell hierarchy (L1d 32 KiB/8-way + L2 256 KiB/8-way) and
 //! reports per-level misses, and the two-level **macro-kernel**
-//! (`run_macro_matmul`) is traced at address level — pack reads stream
-//! the arena once per macro block, micro-kernel reads hit the packed
-//! panels (which get their own simulated addresses past the arena) — so
-//! its L2 advantage over the single-level plans is *measured*, not
-//! asserted. Rows also carry executed Mops/s so the simulated and real
-//! orderings can be compared.
+//! ([`run_macro`](crate::codegen::run_macro)) is traced at address level
+//! — pack reads stream the arena once per macro block, micro-kernel reads
+//! hit the packed panels (which get their own simulated addresses past
+//! the arena) — so its L2 advantage over the single-level plans is
+//! *measured*, not asserted. Since the `RunPlan` refactor the tracer is
+//! kernel-agnostic: it walks the same [`RunPlan`] / panel enumeration the
+//! real engine executes, for matmul, convolution and Kronecker alike.
+//! Rows also carry executed Mops/s so the simulated and real orderings
+//! can be compared.
 
 use std::time::Instant;
 
 use crate::baseline::CompilerAnalog;
 use crate::cache::{CacheSpec, Hierarchy, Policy};
-use crate::codegen::executor::{max_abs_diff, run_macro_matmul, run_schedule, MatmulBuffers};
-use crate::codegen::pack::{PackedB, PackedC};
-use crate::codegen::{MR, NR};
+use crate::codegen::executor::{max_abs_diff, run_macro, run_schedule, KernelBuffers};
+use crate::codegen::runplan::{kernel_views, GemmForm, RowPanel};
+use crate::codegen::{MicroShape, PackedCols, PackedRows, MR, NR};
 use crate::domain::ops;
 use crate::domain::order::Scanner;
 use crate::domain::Kernel;
@@ -38,34 +41,25 @@ pub struct MultiLevelRow {
     pub mops: f64,
 }
 
-/// Per-point address trace of a scanner-driven schedule (A, B, C per
-/// visited point, write-allocate output).
+/// Per-point address trace of a scanner-driven schedule (operands in
+/// order out, in1, in2 per visited point, write-allocate output) — any
+/// Table-1 kernel, through the composed operand views.
 pub fn trace_pointwise(kernel: &Kernel, scanner: &dyn Scanner, h: &mut Hierarchy) {
-    let bases: Vec<usize> = kernel.operands().iter().map(|o| o.table.base()).collect();
-    let lds: Vec<usize> = kernel
-        .operands()
-        .iter()
-        .map(|o| o.table.map().weights()[1] as usize)
-        .collect();
+    let views = kernel_views(kernel);
     scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
-        let (i, j, kk) = (f[0] as usize, f[1] as usize, f[2] as usize);
-        h.access(bases[0] + 8 * (i + lds[0] * j));
-        h.access(bases[1] + 8 * (i + lds[1] * kk));
-        h.access(bases[2] + 8 * (kk + lds[2] * j));
+        for v in &views {
+            h.access(v.addr(f));
+        }
     });
 }
 
-/// The macro shape this experiment simulates: quarter-L2 packed B and C
-/// blocks, so both stay resident together with the output band during a
-/// macro block (the modelled hierarchy has no L3, so `nc` is bounded the
-/// same way as `mc`).
+/// The macro shape this experiment simulates: quarter-L2 packed row and
+/// column blocks, so both stay resident together with the output band
+/// during a macro block (the modelled hierarchy has no L3, so `nc` is
+/// bounded the same way as `mc`).
 pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
-    let extents = kernel.extents();
-    let (m, n, k) = (
-        extents[0] as usize,
-        extents[1] as usize,
-        extents[2] as usize,
-    );
+    let gf = GemmForm::of(kernel).expect("GEMM-form kernel");
+    let (m, n, k) = (gf.m, gf.n, gf.k);
     let quarter = CacheSpec::HASWELL_L2.capacity / (4 * 8);
     let kc = k.clamp(1, 128);
     let mc = ((quarter / kc).max(MR) / MR * MR).min(m.div_ceil(MR) * MR);
@@ -79,114 +73,112 @@ pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
 }
 
 /// Address-level trace of the two-level macro-kernel, mirroring
-/// `run_macro_matmul` exactly: pack reads/writes touch the arena and the
-/// packed buffers (placed line-aligned past the arena), the micro-kernel
-/// reads only packed panels, and each output element is touched once per
-/// register block per k slice.
+/// [`run_macro`] over the kernel's whole-domain [`RunPlan`] exactly: pack
+/// reads/writes touch the arena and the packed buffers (placed
+/// line-aligned past the arena), the micro-kernel reads only packed
+/// panels, and each output element is touched once per register block per
+/// reduction slice. Works for any GEMM-form kernel (the trace models the
+/// default 8×4 register tile).
 pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
-    let operands = kernel.operands();
-    let a_base = operands[0].table.base();
-    let b_base = operands[1].table.base();
-    let c_base = operands[2].table.base();
-    let lda = operands[0].table.map().weights()[1] as usize;
-    let ldb = operands[1].table.map().weights()[1] as usize;
-    let ldc = operands[2].table.map().weights()[1] as usize;
-    let extents = kernel.extents();
-    let (m, n, k) = (
-        extents[0] as usize,
-        extents[1] as usize,
-        extents[2] as usize,
-    );
-    let mc = lp.mc.max(1).min(m);
+    let views = kernel_views(kernel);
+    let gf = GemmForm::of(kernel).expect("GEMM-form kernel");
+    let lo = vec![0i64; kernel.n_free()];
+    let plan = gf.plan_box(&views, &lo, kernel.extents());
+    let mc = lp.mc.clamp(1, plan.m.max(1));
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
     // packed buffers live after the arena, line-aligned, and are reused
     // across macro blocks exactly like the real Vec allocations
-    let end = operands
+    let end = kernel
+        .operands()
         .iter()
         .map(|o| o.table.base() + o.table.bytes())
         .max()
         .unwrap();
-    let bp_base = end.div_ceil(64) * 64;
-    let n_blocks = m.div_ceil(mc);
+    let rows_base = end.div_ceil(64) * 64;
+    // the panel list depends only on the rows, not on the slice depth —
+    // precompute it per block exactly as PackedRows does
+    let mut block_panels: Vec<Vec<RowPanel>> = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < plan.m {
+        let mcc = mc.min(plan.m - r0);
+        block_panels.push(plan.row_panels(r0, mcc));
+        r0 += mcc;
+    }
+    let total_panels: usize = block_panels.iter().map(|b| b.len()).sum();
     // buffer bases sized by the deepest (full-kc) slice; per-slice panel
     // strides below use the clipped kcc, exactly like the real packers
-    let full_stride = mc.div_ceil(MR) * kc * MR;
-    let cp_base = (bp_base + 8 * n_blocks * full_stride).div_ceil(64) * 64;
-    let ti = lp.l1_tile.0.div_ceil(MR).max(1) * MR;
-    let tj = lp.l1_tile.1.div_ceil(NR).max(1) * NR;
-    for k0 in (0..k).step_by(kc) {
-        let kcc = (k0 + kc).min(k) - k0;
-        let block_stride = mc.div_ceil(MR) * kcc * MR;
-        // pack the B slice: stream the arena once, write the panels
-        for bi in 0..n_blocks {
-            let i0 = bi * mc;
-            let mcc = mc.min(m - i0);
-            for p in 0..mcc.div_ceil(MR) {
-                let rows = MR.min(mcc - p * MR);
+    let cols_base = (rows_base + 8 * total_panels * kc * MR).div_ceil(64) * 64;
+    let pt = lp.l1_tile.0.div_ceil(MR).max(1);
+    let qt = lp.l1_tile.1.div_ceil(NR).max(1);
+    for k0 in (0..plan.k).step_by(kc) {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        // pack the row slice: stream the arena once, write the panels
+        let mut gpi = 0usize; // global panel index across blocks
+        for panels in &block_panels {
+            for p in panels {
                 for t in 0..kcc {
-                    for r in 0..rows {
-                        h.access(b_base + 8 * (i0 + p * MR + r + ldb * (k0 + t)));
-                        h.access(bp_base + 8 * (bi * block_stride + p * kcc * MR + t * MR + r));
+                    for r in 0..p.rows {
+                        h.access(8 * (p.row + plan.red_row[k0 + t]) as usize + 8 * r);
+                        h.access(rows_base + 8 * (gpi * kcc * MR + t * MR + r));
                     }
                 }
+                gpi += 1;
             }
         }
-        for j0 in (0..n).step_by(nc) {
-            let ncc = (j0 + nc).min(n) - j0;
-            // pack the C block of this column band
+        for j0 in (0..plan.n).step_by(nc) {
+            let ncc = (j0 + nc).min(plan.n) - j0;
+            // pack the column band
             for q in 0..ncc.div_ceil(NR) {
                 let cols = NR.min(ncc - q * NR);
                 for c in 0..cols {
+                    let ci = plan.col_in[j0 + q * NR + c];
                     for t in 0..kcc {
-                        h.access(c_base + 8 * (k0 + t + ldc * (j0 + q * NR + c)));
-                        h.access(cp_base + 8 * (q * kcc * NR + t * NR + c));
+                        h.access(8 * (ci + plan.red_col[k0 + t]) as usize);
+                        h.access(cols_base + 8 * (q * kcc * NR + t * NR + c));
                     }
                 }
             }
-            // macro block: L1 tiles over the packed panels
-            for bi in 0..n_blocks {
-                let i0 = bi * mc;
-                let mcc = mc.min(m - i0);
-                let bpanels = mcc.div_ceil(MR);
+            // macro blocks: L1 tiles over the packed panels, mirroring
+            // dispatch_block's column-tile → row-tile → q → p nest
+            let mut block_gpi = 0usize;
+            for panels in &block_panels {
                 let cpanels = ncc.div_ceil(NR);
-                for jt in (0..ncc).step_by(tj) {
-                    let q_hi = cpanels.min((jt + tj) / NR);
-                    for it in (0..mcc).step_by(ti) {
-                        let p_hi = bpanels.min((it + ti) / MR);
-                        for q in (jt / NR)..q_hi {
+                for q0 in (0..cpanels).step_by(qt) {
+                    let q_hi = cpanels.min(q0 + qt);
+                    for p0 in (0..panels.len()).step_by(pt) {
+                        let p_hi = panels.len().min(p0 + pt);
+                        for q in q0..q_hi {
                             let nr = NR.min(ncc - q * NR);
-                            for p in (it / MR)..p_hi {
-                                let mr = MR.min(mcc - p * MR);
+                            for (pi, p) in
+                                panels.iter().enumerate().take(p_hi).skip(p0)
+                            {
+                                let gpi = block_gpi + pi;
                                 for t in 0..kcc {
                                     for r in 0..MR {
                                         h.access(
-                                            bp_base
-                                                + 8 * (bi * block_stride
-                                                    + p * kcc * MR
-                                                    + t * MR
-                                                    + r),
+                                            rows_base
+                                                + 8 * (gpi * kcc * MR + t * MR + r),
                                         );
                                     }
                                     for c in 0..NR {
-                                        h.access(cp_base + 8 * (q * kcc * NR + t * NR + c));
+                                        h.access(
+                                            cols_base
+                                                + 8 * (q * kcc * NR + t * NR + c),
+                                        );
                                     }
                                 }
                                 for c in 0..nr {
-                                    for r in 0..mr {
-                                        h.access(
-                                            a_base
-                                                + 8 * (i0
-                                                    + p * MR
-                                                    + r
-                                                    + lda * (j0 + q * NR + c)),
-                                        );
+                                    let col = plan.col_out[j0 + q * NR + c];
+                                    for r in 0..p.rows {
+                                        h.access(8 * (p.out + col) as usize + 8 * r);
                                     }
                                 }
                             }
                         }
                     }
                 }
+                block_gpi += panels.len();
             }
         }
     }
@@ -219,7 +211,7 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
         for (strategy, scanner) in entries {
             let mut h = Hierarchy::haswell(Policy::Lru);
             trace_pointwise(&kernel, scanner.as_ref(), &mut h);
-            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::from_kernel(&kernel);
             let t0 = Instant::now();
             run_schedule(&mut bufs, &kernel, scanner.as_ref());
             let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
@@ -237,18 +229,18 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
         let lp = macro_plan_for(&kernel);
         let mut h = Hierarchy::haswell(Policy::Lru);
         trace_macro_kernel(&kernel, &lp, &mut h);
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         let want = bufs.reference();
-        let geom = bufs.geom();
-        let dims = (n as usize, n as usize, n as usize);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let rplan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
         let t0 = Instant::now();
-        run_macro_matmul(
+        run_macro(
             &mut bufs.arena,
-            geom,
-            dims,
+            &rplan,
             &lp,
-            &mut PackedB::new(),
-            &mut PackedC::new(),
+            MicroShape::Mr8Nr4,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
         );
         let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
         assert!(
@@ -311,5 +303,25 @@ mod tests {
             multi < single,
             "macro-kernel L2 misses {multi} not below single-level {single}"
         );
+    }
+
+    #[test]
+    fn generalized_trace_covers_convolution_and_kronecker() {
+        // the tracer must walk the same structures the engine executes —
+        // for every Table-1 kernel, not just matmul
+        for kernel in [
+            ops::convolution(4096, 8, 0),
+            ops::kronecker(12, 12, 16, 16, 8, 0),
+        ] {
+            let lp = macro_plan_for(&kernel);
+            let mut h = Hierarchy::haswell(Policy::Lru);
+            trace_macro_kernel(&kernel, &lp, &mut h);
+            assert!(h.level(0).stats().accesses > 0, "{}", kernel.name());
+            assert!(
+                h.level(1).stats().misses() <= h.level(0).stats().misses(),
+                "{}",
+                kernel.name()
+            );
+        }
     }
 }

@@ -15,7 +15,7 @@ use std::time::{Duration, Instant};
 
 use latticetile::baseline::CompilerAnalog;
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
-use latticetile::codegen::executor::{MatmulBuffers, TiledExecutor};
+use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
 use latticetile::codegen::run_trace_only;
 use latticetile::conflict::MissModel;
 use latticetile::coordinator::{Service, ServiceConfig};
@@ -181,7 +181,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             let sched = a.schedule(&kernel);
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, sched.as_scanner(), &mut sim);
-            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::from_kernel(&kernel);
             let t0 = Instant::now();
             a.execute(&mut bufs, &kernel);
             (sim.stats().misses(), t0.elapsed())
@@ -193,8 +193,11 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             };
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, &plan, &mut sim);
-            let exec = TiledExecutor::new(plan);
-            let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            // one-shot startup calibration picks the register-tile width
+            // the packed engine dispatches (8×4 vs 8×6)
+            let exec = TiledExecutor::new(plan)
+                .with_micro_shape(latticetile::codegen::autotune::calibrate(500));
+            let mut bufs = KernelBuffers::from_kernel(&kernel);
             let t0 = Instant::now();
             exec.run(&mut bufs, &kernel);
             (sim.stats().misses(), t0.elapsed())

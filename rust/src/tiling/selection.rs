@@ -25,7 +25,7 @@ use super::tile::TileBasis;
 /// A two-level tiling decision: the L1 tile the paper's selector picks,
 /// driven inside BLIS-style `mc×kc×nc` macro blocks sized for the outer
 /// cache levels (L2 for the packed B block, an L3 slice for the packed C
-/// block). Executed by [`crate::codegen::executor::run_macro_matmul`].
+/// block). Executed by [`crate::codegen::executor::run_macro`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LevelPlan {
     /// L1 tile footprint `(ti, tj, tk)` in loop space (i, j, kk).

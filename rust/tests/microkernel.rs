@@ -1,14 +1,19 @@
 //! Property tests pinning the packed / microkernel executor paths
-//! against the naive oracle: random skewed bases, non-multiple extents,
-//! padded layouts (`ops::matmul_padded`) — so boundary clipping and
-//! packing offsets can never silently regress. The two-level tests do
-//! the same for the macro-kernel: random `mc×kc×nc` macro shapes that
-//! divide neither the L1 tile nor MR/NR, plus the pack-once invariant.
+//! against the kernel-semantic scalar oracle: random skewed bases,
+//! non-multiple extents, padded layouts (`ops::matmul_padded`) — so
+//! boundary clipping and packing offsets can never silently regress. The
+//! two-level tests do the same for the macro-kernel: random `mc×kc×nc`
+//! macro shapes that divide neither the L1 tile nor MR/NR, plus the
+//! pack-once invariant. (Differential tests for the non-matmul Table-1
+//! kernels live in `tests/kernels.rs`.)
 
 use latticetile::codegen::executor::{
-    max_abs_diff, run_macro_matmul, MatmulBuffers, TiledExecutor,
+    max_abs_diff, run_macro, KernelBuffers, TiledExecutor,
 };
-use latticetile::codegen::{run_parallel, run_parallel_macro, PackedB, PackedC, MR, NR};
+use latticetile::codegen::{
+    kernel_views, run_parallel, run_parallel_macro, GemmForm, MicroShape, PackedCols,
+    PackedRows, MR, NR,
+};
 use latticetile::domain::ops;
 use latticetile::lattice::IMat;
 use latticetile::testutil::prop_check;
@@ -17,7 +22,7 @@ use latticetile::tiling::{LevelPlan, TileBasis, TiledSchedule};
 fn check(kernel: &latticetile::domain::Kernel, basis: TileBasis, label: &str) {
     let sched = TiledSchedule::new(basis);
     let exec = TiledExecutor::new(sched.clone());
-    let mut bufs = MatmulBuffers::from_kernel(kernel);
+    let mut bufs = KernelBuffers::from_kernel(kernel);
     let want = bufs.reference();
     exec.run(&mut bufs, kernel);
     assert!(
@@ -88,7 +93,7 @@ fn prop_panel_replay_matches_reference() {
         let tile = TileBasis::from_cols(basis);
         let exec = TiledExecutor::new(TiledSchedule::new(tile.clone()));
         assert!(
-            exec.panel_replay(),
+            exec.replay(&kernel).panel_replay(),
             "case {case}: decoupled-j basis must take the panel path"
         );
         check(&kernel, tile, &format!("case {case}: skewed {m}x{k}x{n}"));
@@ -117,7 +122,7 @@ fn prop_coupled_fallback_matches_reference() {
         let tile = TileBasis::from_cols(basis);
         let exec = TiledExecutor::new(TiledSchedule::new(tile.clone()));
         assert!(
-            !exec.panel_replay(),
+            !exec.replay(&kernel).panel_replay(),
             "case {case}: coupled-j basis must fall back"
         );
         check(&kernel, tile, &format!("case {case}: coupled {m}x{k}x{n}"));
@@ -141,7 +146,7 @@ fn prop_parallel_engine_matches_reference() {
             rng.range_i64(2, 12).min(k),
         ];
         let sched = TiledSchedule::new(TileBasis::rect(&tile));
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         let want = bufs.reference();
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
@@ -160,7 +165,7 @@ fn prop_parallel_engine_matches_reference() {
             }
         };
         let sched = TiledSchedule::new(TileBasis::from_cols(basis));
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
@@ -171,7 +176,8 @@ fn prop_parallel_engine_matches_reference() {
 
 /// Two-level macro-kernel: random macro shapes — `mc/kc/nc` deliberately
 /// not multiples of the L1 tile or of MR/NR — over padded layouts with
-/// non-zero arena bases, against the naive oracle.
+/// non-zero arena bases, against the naive oracle; both register-tile
+/// widths.
 #[test]
 fn prop_macro_kernel_matches_reference() {
     prop_check(20, 0x2CE1, |case, rng| {
@@ -198,23 +204,25 @@ fn prop_macro_kernel_matches_reference() {
             (lp.l1_tile.1 as i64).min(n),
             (lp.l1_tile.2 as i64).min(k),
         ];
+        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
         let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&tile)))
-            .with_level_plan(lp);
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+            .with_level_plan(lp)
+            .with_micro_shape(micro);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, &kernel);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
-            "case {case}: macro {m}x{k}x{n} lda={lda} lp={lp:?}"
+            "case {case}: macro {m}x{k}x{n} lda={lda} lp={lp:?} micro={micro:?}"
         );
     });
 }
 
-/// The pack-amortization invariant the macro-kernel exists for: each B
-/// macro block is packed exactly once, each C block once per
-/// (k-slice, column band) — counted, not assumed.
+/// The pack-amortization invariant the macro-kernel exists for: each row
+/// macro block is packed exactly once per reduction slice, each column
+/// band once per (slice, band) — counted, not assumed.
 #[test]
-fn macro_kernel_packs_each_b_block_exactly_once() {
+fn macro_kernel_packs_each_row_block_exactly_once() {
     let (m, k, n) = (37usize, 29, 31);
     let kernel = ops::matmul(m as i64, k as i64, n as i64, 8, 0);
     let lp = LevelPlan {
@@ -223,30 +231,38 @@ fn macro_kernel_packs_each_b_block_exactly_once() {
         kc: 12,
         nc: 10,
     };
-    let mut bufs = MatmulBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::from_kernel(&kernel);
     let want = bufs.reference();
-    let geom = bufs.geom();
-    let mut pb = PackedB::new();
-    let mut pc = PackedC::new();
-    run_macro_matmul(&mut bufs.arena, geom, (m, n, k), &lp, &mut pb, &mut pc);
+    let gf = GemmForm::of(&kernel).unwrap();
+    let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+    let mut pr = PackedRows::new();
+    let mut pc = PackedCols::new();
+    run_macro(
+        &mut bufs.arena,
+        &plan,
+        &lp,
+        MicroShape::Mr8Nr4,
+        &mut pr,
+        &mut pc,
+    );
     assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
     let kslices = k.div_ceil(lp.kc) as u64;
-    let bblocks = m.div_ceil(lp.mc) as u64;
+    let rblocks = m.div_ceil(lp.mc) as u64;
     let cbands = n.div_ceil(lp.nc) as u64;
     assert_eq!(
-        pb.pack_count(),
-        kslices * bblocks,
-        "B pack count per macro block must be exactly 1"
+        pr.pack_count(),
+        kslices * rblocks,
+        "row pack count per macro block must be exactly 1"
     );
     assert_eq!(
         pc.pack_count(),
         kslices * cbands,
-        "C pack count per (k-slice, band) must be exactly 1"
+        "column pack count per (slice, band) must be exactly 1"
     );
 }
 
 /// The macro-kernel parallel path: random macro shapes, whole-nc column
-/// bands per worker over the shared packed B, 1–4 threads.
+/// bands per worker over the shared packed rows, 1–4 threads.
 #[test]
 fn prop_parallel_macro_matches_reference() {
     prop_check(10, 0xBA2D, |case, rng| {
@@ -270,9 +286,10 @@ fn prop_parallel_macro_matches_reference() {
             (lp.l1_tile.1 as i64).min(n),
             (lp.l1_tile.2 as i64).min(k),
         ]));
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         let want = bufs.reference();
-        run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp));
+        run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
             "case {case}: parallel macro {m}x{k}x{n} ({threads} threads) lp={lp:?}"

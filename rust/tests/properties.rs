@@ -5,7 +5,7 @@
 //! deterministic seeds, so failures reproduce exactly.
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
-use latticetile::codegen::executor::{prototile_points, MatmulBuffers, TiledExecutor};
+use latticetile::codegen::executor::{prototile_points, KernelBuffers, TiledExecutor};
 use latticetile::codegen::{max_abs_diff, run_parallel, run_trace_only};
 use latticetile::conflict::MissModel;
 use latticetile::domain::order::Scanner;
@@ -196,7 +196,7 @@ fn prop_executors_numerically_correct() {
         };
         let sched = TiledSchedule::new(TileBasis::from_cols(b));
         let exec = TiledExecutor::new(sched.clone());
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, &kernel);
         assert!(
@@ -204,7 +204,7 @@ fn prop_executors_numerically_correct() {
             "case {case}: serial tiled executor wrong"
         );
         let threads = rng.range_usize(1, 4);
-        let mut bufs = MatmulBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::from_kernel(&kernel);
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,

@@ -1,0 +1,181 @@
+//! Minimal offline stand-in for the `xla-rs` PJRT bindings.
+//!
+//! This build environment has no crates.io access and no PJRT shared
+//! library, so the subset of the `xla` API the workspace's
+//! `runtime::registry` module uses is reimplemented here as a typed stub:
+//! everything compiles and links, and every operation that would need a
+//! real PJRT runtime fails at *runtime* with a clear error instead.
+//! Host-side [`Literal`] plumbing (construction, reshape, extraction) is
+//! real, so code paths up to the device boundary stay testable. Swap this
+//! path dependency for the real crate when building networked.
+
+use std::fmt;
+
+/// Error type for all stubbed operations. Implements `std::error::Error`
+/// so `?` converts into the workspace's `anyhow::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what} unavailable: offline `xla` stub (no PJRT runtime in this build)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be extracted into.
+pub trait ElementType: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl ElementType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// A host-side tensor of `f32` data with a shape (the only dtype the
+/// workspace moves across the PJRT boundary).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: ElementType>(v: &[T]) -> Literal {
+        Literal {
+            data: v.iter().map(|x| x.to_f32()).collect(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Unwrap a 1-tuple result (XLA computations lowered with
+    /// `return_tuple=True` wrap the root in a tuple; the stub models the
+    /// tuple as identity).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    /// Extract the flat data.
+    pub fn to_vec<T: ElementType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Parsed HLO module (stub: never constructible offline).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HLO text parsing"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side buffer handle (stub: never constructible offline).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("device-to-host transfer"))
+    }
+}
+
+/// Compiled executable handle (stub: never constructible offline).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PJRT execution"))
+    }
+}
+
+/// PJRT client handle. `cpu()` fails offline, so no executable, buffer or
+/// HLO module can ever exist behind this stub.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("XLA compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert_eq!(r.to_tuple1().unwrap().to_vec::<f32>().unwrap().len(), 6);
+    }
+
+    #[test]
+    fn runtime_operations_fail_cleanly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline"), "{e}");
+        assert!(HloModuleProto::from_text_file("/nope").is_err());
+    }
+}
