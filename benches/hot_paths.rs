@@ -98,14 +98,14 @@ fn main() {
     println!("prototile size: {} points", proto.len());
 
     let exec = TiledExecutor::new(TiledSchedule::new(basis));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate("packed tile replay", (256u64).pow(3), t0.elapsed());
 
     // rect tiles through the same pack + microkernel engine
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate("rect tiled executor (packed microkernel)", (256u64).pow(3), t0.elapsed());
@@ -116,7 +116,7 @@ fn main() {
     let big = if quick { 192i64 } else { 512 };
     let kernel = ops::matmul(big, big, big, 8, 0);
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run_l1_only(&mut bufs, &kernel);
     res.rate(
@@ -125,7 +125,7 @@ fn main() {
         t0.elapsed(),
     );
     let want = bufs.output();
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel); // macro-kernel path
     // quick (CI) runs use a different n — key the row separately so the
@@ -149,7 +149,7 @@ fn main() {
     let conv_n = if quick { 1i64 << 15 } else { 1 << 20 };
     let kernel = ops::convolution(conv_n, 8, 0);
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[256])));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate(
@@ -162,7 +162,7 @@ fn main() {
     let kb = if quick { 12i64 } else { 24 };
     let kernel = ops::kronecker(kb, kb, kb, kb, 8, 0);
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[8, 8, 8, 8])));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, &kernel);
     res.rate(
@@ -172,12 +172,45 @@ fn main() {
     );
     assert!(bufs.output()[0].is_finite());
 
-    // startup register-tile calibration (one-shot cost report)
+    // the element-generic engine at f32: the same macro-kernel matmul
+    // and packed convolution as above, at half the element size and
+    // twice the register-tile width — the f32/f64 throughput ratio is
+    // what the tracked BENCH_hot_paths.json rows expose across PRs.
+    // Both matmul rows run the *narrow* width class (8x4 vs 8x8, no
+    // autotune) so the ratio isolates the dtype, not the calibrator.
+    let kernel = ops::matmul(big, big, big, 4, 0);
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])));
+    let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    let f32_label = if quick {
+        format!("macro-kernel matmul f32 n={big}")
+    } else {
+        "macro-kernel matmul f32".to_string()
+    };
+    res.rate(&f32_label, (big as u64).pow(3), t0.elapsed());
+    assert!(bufs.output()[0].is_finite());
+
+    let kernel = ops::convolution(conv_n, 4, 0);
+    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[256])));
+    let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, &kernel);
+    res.rate(
+        &format!("packed engine convolution f32 n={conv_n}"),
+        conv_n as u64,
+        t0.elapsed(),
+    );
+    assert!(bufs.output()[0].is_finite());
+
+    // startup register-tile calibration (one-shot cost report, per dtype)
     let t0 = Instant::now();
     let shape = autotune::calibrate(2_000);
+    let shape32 = autotune::calibrate_dtype::<f32>(2_000);
     println!(
-        "autotune: {} wins in {:?} (the packed engine dispatches the winner)",
+        "autotune: f64 {} / f32 {} win in {:?} (the packed engine dispatches the winners)",
         shape.name(),
+        shape32.label_for(latticetile::codegen::DType::F32),
         t0.elapsed()
     );
 

@@ -23,7 +23,7 @@ fn main() {
     let sched = latticetile::tiling::TiledSchedule::new(latticetile::tiling::TileBasis::rect(&[
         16, 16, 16,
     ]));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let want = bufs.reference();
     run_parallel(&mut bufs, &kernel, &sched, 4, 1);
     assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);

@@ -79,7 +79,7 @@ fn main() {
     run_trace_only(&kernel, &schedule, &mut sim_tiled);
 
     let exec = TiledExecutor::new(schedule);
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let want = bufs.reference();
     let t0 = std::time::Instant::now();
     exec.run(&mut bufs, &kernel);

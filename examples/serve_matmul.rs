@@ -13,7 +13,8 @@
 use std::time::{Duration, Instant};
 
 use latticetile::cache::CacheSpec;
-use latticetile::coordinator::{Planner, Service, ServiceConfig};
+use latticetile::codegen::DType;
+use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::runtime::Registry;
 
 fn main() -> anyhow::Result<()> {
@@ -28,7 +29,7 @@ fn main() -> anyhow::Result<()> {
     // planner trace: show what the lattice model decided for this shape
     let registry = Registry::load(&dir)?;
     let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
-    let plan = planner.plan(&registry, m, k, n);
+    let plan = planner.plan(&registry, m, k, n, DType::F32);
     println!(
         "planner: shape {m}x{k}x{n} → plan '{}' (model tile {:?}, predicted misses {}) → artifact {}",
         plan.plan_name, plan.model_tile, plan.predicted_misses, plan.artifact
@@ -54,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             n,
             batch_window: Duration::from_millis(2),
             spec: CacheSpec::HASWELL_L1D,
+            backend: Backend::Pjrt,
         },
     )?;
 

@@ -187,7 +187,7 @@ mod tests {
     fn all_analogs_compute_correct_result() {
         let k = ops::matmul(33, 29, 31, 8, 0);
         for analog in CompilerAnalog::ALL {
-            let mut bufs = KernelBuffers::from_kernel(&k);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
             let want = bufs.reference();
             analog.execute(&mut bufs, &k);
             assert!(

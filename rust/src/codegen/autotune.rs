@@ -1,78 +1,75 @@
 //! One-shot startup calibration of the register-tile shape (ROADMAP:
-//! "Autotune MR×NR at startup").
+//! "Autotune MR×NR at startup"), per dtype.
 //!
 //! The packed-panel layouts are width-specific, so the candidate shapes
-//! are separate kernels ([`mkernel_full`] 8×4 and [`mkernel_full_8x6`]
-//! 8×6); the calibrator times both on an L1-resident packed panel and
-//! reports the winner. The measured choice is recorded in the registry
-//! ([`crate::runtime::Registry::set_micro_shape`]) and the packed
-//! engine **dispatches it**: the planner threads it into
-//! [`Plan`](crate::coordinator::Plan), and
+//! are separate kernel instantiations (the dtype's narrow vs wide
+//! [`MicroShape`]); the calibrator times both on an L1-resident packed
+//! panel and reports the winner. [`calibrate_dtype`] runs the race at any
+//! [`Scalar`] type's own widths (8×4 vs 8×6 at f64, 8×8 vs 8×12 at f32);
+//! the measured choices are recorded per dtype in the registry
+//! ([`crate::runtime::Registry::set_micro_shape_for`]) and the packed
+//! engine **dispatches them**: the planner threads the dtype's winner
+//! into [`Plan`](crate::coordinator::Plan), and
 //! [`TiledExecutor::with_micro_shape`](crate::codegen::TiledExecutor::with_micro_shape)
 //! / [`run_parallel_macro`](crate::codegen::run_parallel_macro) select
-//! the const-generic `NRW` panel path. `8×4` remains the default when no
-//! calibration has run.
+//! the const-generic `NRW` panel path. The narrow shape remains the
+//! default when no calibration has run.
 
 use std::time::Instant;
 
-use super::microkernel::{mkernel_full, mkernel_full_8x6, MR, NR, NR_WIDE};
+use super::microkernel::{mkernel_full_at, MR};
+use super::scalar::Scalar;
 
-/// A register-tile shape candidate.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum MicroShape {
-    /// The compile-time default 8×4.
-    Mr8Nr4,
-    /// The wide-vector candidate 8×6.
-    Mr8Nr6,
-}
+pub use super::scalar::MicroShape;
 
-impl MicroShape {
-    /// `(MR, NR)` of the shape.
-    pub fn dims(self) -> (usize, usize) {
-        match self {
-            MicroShape::Mr8Nr4 => (MR, NR),
-            MicroShape::Mr8Nr6 => (MR, NR_WIDE),
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            MicroShape::Mr8Nr4 => "8x4",
-            MicroShape::Mr8Nr6 => "8x6",
-        }
-    }
-}
-
-/// Time both candidates on a tiny packed panel and return the shape with
-/// the higher FMA rate. Ties (within 5%) keep the compile-time default,
-/// so calibration can only ever *upgrade*. Takes ~1 ms at the default
-/// serving `reps`; the work is deterministic so repeated calls agree on
-/// a quiet machine.
+/// Time both width classes at f64 and return the winner — the legacy
+/// entry point; see [`calibrate_dtype`] for the per-dtype race.
 pub fn calibrate(reps: u64) -> MicroShape {
+    calibrate_dtype::<f64>(reps)
+}
+
+/// Time both of `T`'s register-tile widths on a tiny packed panel and
+/// return the shape with the higher FMA rate. Ties (within 5%) keep the
+/// compile-time default, so calibration can only ever *upgrade*. Takes
+/// ~1 ms at the default serving `reps`; the work is deterministic so
+/// repeated calls agree on a quiet machine.
+pub fn calibrate_dtype<T: Scalar>(reps: u64) -> MicroShape {
+    match (T::NR, T::NR_WIDE) {
+        (4, 6) => calibrate_impl::<T, 4, 6>(reps),
+        (8, 12) => calibrate_impl::<T, 8, 12>(reps),
+        // unreachable for the sealed dtypes; keep the default rather
+        // than panic in a startup path
+        _ => MicroShape::Mr8Nr4,
+    }
+}
+
+fn calibrate_impl<T: Scalar, const N: usize, const W: usize>(reps: u64) -> MicroShape {
     let kc = 128usize;
-    let bp = vec![1.000_000_1f64; kc * MR];
-    let cp4 = vec![0.999_999_9f64; kc * NR];
-    let cp6 = vec![0.999_999_9f64; kc * NR_WIDE];
-    let mut a4 = vec![0f64; (NR - 1) * MR + MR];
-    let mut a6 = vec![0f64; (NR_WIDE - 1) * MR + MR];
+    let bp = vec![T::from_f64(1.000_000_1); kc * MR];
+    let cpn = vec![T::from_f64(0.999_999_9); kc * N];
+    let cpw = vec![T::from_f64(0.999_999_9); kc * W];
+    let mut an = vec![T::ZERO; (N - 1) * MR + MR];
+    let mut aw = vec![T::ZERO; (W - 1) * MR + MR];
+    let bases_n: [usize; N] = std::array::from_fn(|jc| jc * MR);
+    let bases_w: [usize; W] = std::array::from_fn(|jc| jc * MR);
     // warm both code paths and the panel lines
-    mkernel_full(kc, &bp, &cp4, &mut a4, MR);
-    mkernel_full_8x6(kc, &bp, &cp6, &mut a6, MR);
-    let t4 = Instant::now();
+    mkernel_full_at::<T, N>(kc, &bp, &cpn, &mut an, &bases_n);
+    mkernel_full_at::<T, W>(kc, &bp, &cpw, &mut aw, &bases_w);
+    let tn = Instant::now();
     for _ in 0..reps {
-        mkernel_full(kc, &bp, &cp4, &mut a4, MR);
+        mkernel_full_at::<T, N>(kc, &bp, &cpn, &mut an, &bases_n);
     }
-    let rate4 =
-        (reps * (kc * MR * NR) as u64) as f64 / t4.elapsed().as_secs_f64().max(1e-9);
-    let t6 = Instant::now();
+    let rate_n =
+        (reps * (kc * MR * N) as u64) as f64 / tn.elapsed().as_secs_f64().max(1e-9);
+    let tw = Instant::now();
     for _ in 0..reps {
-        mkernel_full_8x6(kc, &bp, &cp6, &mut a6, MR);
+        mkernel_full_at::<T, W>(kc, &bp, &cpw, &mut aw, &bases_w);
     }
-    let rate6 =
-        (reps * (kc * MR * NR_WIDE) as u64) as f64 / t6.elapsed().as_secs_f64().max(1e-9);
+    let rate_w =
+        (reps * (kc * MR * W) as u64) as f64 / tw.elapsed().as_secs_f64().max(1e-9);
     // keep the optimizer honest about the accumulators
-    assert!(a4[0].is_finite() && a6[0].is_finite());
-    if rate6 > rate4 * 1.05 {
+    assert!(an[0].to_f64().is_finite() && aw[0].to_f64().is_finite());
+    if rate_w > rate_n * 1.05 {
         MicroShape::Mr8Nr6
     } else {
         MicroShape::Mr8Nr4
@@ -82,6 +79,7 @@ pub fn calibrate(reps: u64) -> MicroShape {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::microkernel::{NR, NR_WIDE};
 
     #[test]
     fn calibrate_returns_a_candidate_quickly() {
@@ -91,5 +89,15 @@ mod tests {
         assert_eq!(mr, MR);
         assert!(nr == NR || nr == NR_WIDE);
         assert!(!shape.name().is_empty());
+    }
+
+    #[test]
+    fn calibrate_runs_at_both_dtypes() {
+        for shape in [calibrate_dtype::<f32>(50), calibrate_dtype::<f64>(50)] {
+            assert!(matches!(shape, MicroShape::Mr8Nr4 | MicroShape::Mr8Nr6));
+        }
+        // the f32 winner names an f32-wide register tile
+        let s32 = calibrate_dtype::<f32>(20);
+        assert!(s32.nr_for(crate::codegen::DType::F32) >= 8);
     }
 }

@@ -1,15 +1,15 @@
 //! Schedule-faithful executors — the stand-in for the paper's
 //! CLooG-generated loop nests (DESIGN.md S9), kernel-agnostic since the
-//! `RunPlan` refactor.
+//! `RunPlan` refactor and element-generic since the `Scalar` refactor.
 //!
 //! [`KernelBuffers`] owns the operand storage laid out exactly as the
 //! kernel's [`Table`](crate::index::Table)s describe (padding, base
-//! offsets); the point-wise executors walk a [`Scanner`] (plain or tiled
-//! schedule) and perform `out[π₀(f)] += in1[π₁(f)] · in2[π₂(f)]` per
-//! visited point through the composed [`OperandView`]s, optionally
-//! touching a [`CacheSim`] with the three byte addresses — so simulated
-//! miss counts correspond 1:1 to the executed schedule, for *any*
-//! Table-1 kernel.
+//! offsets, element size); the point-wise executors walk a [`Scanner`]
+//! (plain or tiled schedule) and perform
+//! `out[π₀(f)] += in1[π₁(f)] · in2[π₂(f)]` per visited point through the
+//! composed [`OperandView`]s, optionally touching a [`CacheSim`] with the
+//! three byte addresses — so simulated miss counts correspond 1:1 to the
+//! executed schedule, for *any* Table-1 kernel at either precision.
 //!
 //! [`TiledExecutor`] is the fast path: tile interiors run through the
 //! packing + register-blocked microkernel engine ([`super::pack`],
@@ -22,15 +22,20 @@ use crate::domain::{Kernel, OpRole};
 use crate::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 use super::autotune::MicroShape;
-use super::microkernel::{axpy_block, NR, NR_WIDE};
+use super::microkernel::{axpy_block, dot_update, AXPY_MAX_COLS};
 use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
 use super::runplan::{kernel_views, GemmForm, OperandView, RunPlan};
+use super::scalar::Scalar;
 
 pub use super::runplan::KernelBuffers;
 
 /// Execute the kernel following `scanner`'s visit order. Returns nothing;
 /// the result accumulates into `bufs.arena`.
-pub fn run_schedule(bufs: &mut KernelBuffers, kernel: &Kernel, scanner: &dyn Scanner) {
+pub fn run_schedule<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
+    kernel: &Kernel,
+    scanner: &dyn Scanner,
+) {
     let views = kernel_views(kernel);
     let (v0, v1, v2) = (&views[0], &views[1], &views[2]);
     let arena = &mut bufs.arena;
@@ -43,8 +48,8 @@ pub fn run_schedule(bufs: &mut KernelBuffers, kernel: &Kernel, scanner: &dyn Sca
 /// Execute while feeding every touched byte address through the cache
 /// simulator, in operand order (out, in1, in2) per point (write-allocate,
 /// i.e. the output is touched like a read-modify-write).
-pub fn run_instrumented(
-    bufs: &mut KernelBuffers,
+pub fn run_instrumented<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     scanner: &dyn Scanner,
     sim: &mut CacheSim,
@@ -63,6 +68,8 @@ pub fn run_instrumented(
 
 /// Trace-only variant: feed addresses to the simulator without computing
 /// (for pure miss-count sweeps; ~3× faster than instrumented execution).
+/// Addresses scale with the kernel's declared element size, so f32
+/// kernels legitimately see twice the elements per line.
 pub fn run_trace_only(kernel: &Kernel, scanner: &dyn Scanner, sim: &mut CacheSim) {
     let views = kernel_views(kernel);
     scanner.scan_points(kernel.extents(), &mut |f: &[i64]| {
@@ -76,9 +83,9 @@ pub fn run_trace_only(kernel: &Kernel, scanner: &dyn Scanner, sim: &mut CacheSim
 /// row-operand runs of the current tile and their clipped extents.
 /// Allocation-free in steady state.
 #[derive(Clone, Debug, Default)]
-pub struct ReplayScratch {
+pub struct ReplayScratch<T: Scalar = f64> {
     /// Contiguous copy of the tile's clipped row-operand runs.
-    bpack: Vec<f64>,
+    bpack: Vec<T>,
     /// Per run: (offset into `bpack`, length, absolute red coord,
     /// absolute row lo).
     clipped: Vec<(usize, usize, i64, i64)>,
@@ -105,8 +112,8 @@ struct ReplayAxes {
 ///
 /// * **panel replay** (`panel_replay()`): 3-D GEMM-form kernels whose
 ///   basis leaves the column axis decoupled — every tile replays the
-///   prototile's packed unit-stride runs through the `NR`-column axpy
-///   microkernel.
+///   prototile's packed unit-stride runs through the dtype's
+///   `NR`-column axpy microkernel.
 /// * **scalar run replay**: 3-D GEMM-form kernels with a coupled column
 ///   axis — exact clipped scalar replay of the prototile runs.
 /// * **point fallback** (`axes = None`): everything else (non-3-D or
@@ -239,17 +246,18 @@ impl ReplayPlan {
     }
 
     /// Execute one (possibly boundary) tile at footpoint `foot`: pack the
-    /// tile's clipped row-operand runs contiguously, then stream `NR`
-    /// output columns at a time through the axpy microkernel; coupled
-    /// bases fall back to scalar run replay, non-GEMM kernels to exact
-    /// per-point evaluation. Shared by the serial and parallel executors
-    /// (`scratch` is thread-local in the latter).
-    pub fn run_tile(
+    /// tile's clipped row-operand runs contiguously, then stream the
+    /// dtype's `NR` output columns at a time through the axpy
+    /// microkernel; coupled bases fall back to scalar run replay,
+    /// non-GEMM kernels to exact per-point evaluation. Shared by the
+    /// serial and parallel executors (`scratch` is thread-local in the
+    /// latter).
+    pub fn run_tile<T: Scalar>(
         &self,
-        arena: &mut [f64],
+        arena: &mut [T],
         extents: &[i64],
         foot: &[i128],
-        scratch: &mut ReplayScratch,
+        scratch: &mut ReplayScratch<T>,
     ) {
         let Some(ax) = self.axes else {
             // exact per-point fallback through the views
@@ -299,12 +307,14 @@ impl ReplayPlan {
             if scratch.clipped.is_empty() {
                 return;
             }
-            // replay: NR output columns per pass share every packed load
+            // replay: the dtype's narrow register width of output columns
+            // per pass shares every packed load
+            let ncw = T::NR.min(AXPY_MAX_COLS);
             let (mut j, jhi) = (jlo, jhi);
             while j < jhi {
-                let ncols = ((jhi - j) as usize).min(NR);
+                let ncols = ((jhi - j) as usize).min(ncw);
                 for &(pos, len, kkk, lo) in &scratch.clipped {
-                    let mut cvals = [0f64; NR];
+                    let mut cvals = [T::ZERO; AXPY_MAX_COLS];
                     for (c, cv) in cvals.iter_mut().enumerate().take(ncols) {
                         *cv = arena
                             [(vc.off + vc.w[ax.red] * kkk + vc.w[ax.col] * (j + c as i64)) as usize];
@@ -317,7 +327,7 @@ impl ReplayPlan {
                         &cvals[..ncols],
                     );
                 }
-                j += NR as i64;
+                j += ncw as i64;
             }
             return;
         }
@@ -337,33 +347,39 @@ impl ReplayPlan {
             let b_base = vr.off + vr.w[ax.red] * kkk;
             let a_base = vo.off + ax.cs * jj;
             for i in lo..hi {
-                arena[(a_base + i) as usize] += arena[(b_base + i) as usize] * cv;
+                let prod = arena[(b_base + i) as usize] * cv;
+                arena[(a_base + i) as usize] += prod;
             }
         }
     }
 }
 
 /// Fast tiled executor: executes any Table-1 kernel under a tiled
-/// schedule through the packing + microkernel engine.
+/// schedule through the packing + microkernel engine, at the kernel's
+/// declared element type (`KernelBuffers<f32>` or `KernelBuffers<f64>`).
 ///
 /// * **Rectangular bases, GEMM-form kernels** run the two-level
 ///   macro-kernel ([`run_macro`]): L2/L3-sized `mc×kc×nc` blocks packed
 ///   once from the whole-domain [`RunPlan`], L1 tiles driven inside from
-///   the packed panels.
+///   the packed panels. Degenerate `m = n = 1` forms (scalar product,
+///   convolution) skip packing entirely and run the dot microkernel.
 /// * **Skewed lattice bases with a decoupled column axis** (every basis
 ///   this crate's planners emit) replay the prototile's unit-stride runs
 ///   ([`ReplayPlan`]): per tile the clipped runs are packed contiguously
-///   once, then streamed through the `NR`-column axpy microkernel — the
-///   lattice tiling's "miss regularity" made operational.
+///   once, then streamed through the dtype's `NR`-column axpy
+///   microkernel — the lattice tiling's "miss regularity" made
+///   operational.
 /// * **Everything else** (coupled bases, non-GEMM kernels) falls back to
 ///   exact scalar replay, still tile-ordered.
 pub struct TiledExecutor {
     schedule: TiledSchedule,
     /// Explicit L2/L3 macro-block shape for the rect path (None = derive
-    /// a capacity heuristic from the Haswell L2 + L3-slice specs).
+    /// a capacity heuristic from the Haswell L2 + L3-slice specs and the
+    /// element size).
     level: Option<LevelPlan>,
-    /// Register-tile shape for the packed paths (the startup autotuner's
-    /// winner when the caller wires it through; 8×4 otherwise).
+    /// Register-tile width class for the packed paths (the startup
+    /// autotuner's per-dtype winner when the caller wires it through;
+    /// narrow otherwise).
     micro: MicroShape,
 }
 
@@ -383,8 +399,9 @@ impl TiledExecutor {
         self
     }
 
-    /// Select the register-tile shape (e.g. the autotuned winner recorded
-    /// in [`Registry::micro_shape`](crate::runtime::Registry::micro_shape)).
+    /// Select the register-tile width class (e.g. the dtype's autotuned
+    /// winner recorded in
+    /// [`Registry::micro_shape_for`](crate::runtime::Registry::micro_shape_for)).
     pub fn with_micro_shape(mut self, micro: MicroShape) -> TiledExecutor {
         self.micro = micro;
         self
@@ -395,7 +412,7 @@ impl TiledExecutor {
         self.level.as_ref()
     }
 
-    /// The selected register-tile shape.
+    /// The selected register-tile width class.
     pub fn micro_shape(&self) -> MicroShape {
         self.micro
     }
@@ -412,7 +429,7 @@ impl TiledExecutor {
 
     /// Execute the kernel over the whole domain (see the type docs for
     /// the strategy per basis/kernel class).
-    pub fn run(&self, bufs: &mut KernelBuffers, kernel: &Kernel) {
+    pub fn run<T: Scalar>(&self, bufs: &mut KernelBuffers<T>, kernel: &Kernel) {
         let extents = kernel.extents();
         let basis = self.schedule.basis();
         if basis.is_rect() {
@@ -424,6 +441,7 @@ impl TiledExecutor {
                     LevelPlan::heuristic(
                         gf.l1_tile(basis),
                         (gf.m, gf.n, gf.k),
+                        T::ELEM,
                         &CacheSpec::HASWELL_L2,
                         Some(&CacheSpec::HASWELL_L3_SLICE),
                     )
@@ -433,8 +451,8 @@ impl TiledExecutor {
                     &plan,
                     &lp,
                     self.micro,
-                    &mut PackedRows::new(),
-                    &mut PackedCols::new(),
+                    &mut PackedRows::<T>::new(),
+                    &mut PackedCols::<T>::new(),
                 );
                 return;
             }
@@ -443,8 +461,8 @@ impl TiledExecutor {
         // the translated prototile clipped to the domain box, so clipped
         // replay is exact — no per-point footpoint filtering anywhere.
         let rp = self.replay(kernel);
-        let arena: &mut [f64] = &mut bufs.arena;
-        let mut scratch = ReplayScratch::default();
+        let arena: &mut [T] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::<T>::default();
         self.schedule.scan_feet(extents, |foot| {
             rp.run_tile(arena, extents, foot, &mut scratch);
         });
@@ -454,7 +472,7 @@ impl TiledExecutor {
     /// microkernel nest (the engine before the macro-kernel layer), kept
     /// for A/B comparison in the benches and two-level tests. Skewed
     /// bases behave exactly like [`TiledExecutor::run`].
-    pub fn run_l1_only(&self, bufs: &mut KernelBuffers, kernel: &Kernel) {
+    pub fn run_l1_only<T: Scalar>(&self, bufs: &mut KernelBuffers<T>, kernel: &Kernel) {
         let extents = kernel.extents();
         let basis = self.schedule.basis();
         if basis.is_rect() {
@@ -489,11 +507,11 @@ impl TiledExecutor {
                     .copied()
                     .collect();
                 let micro = self.micro;
-                let mut packs = PackBuffers::new();
+                let mut packs = PackBuffers::<T>::new();
                 // scratch plan reused across tiles: the per-tile loop is
                 // allocation-free in steady state
                 let mut plan = RunPlan::default();
-                let arena: &mut [f64] = &mut bufs.arena;
+                let arena: &mut [T] = &mut bufs.arena;
                 scan_rect_tiles(&order, &sizes, extents, |lo, hi| {
                     gf.plan_box_into(&views, lo, hi, &mut plan);
                     run_rect_box(
@@ -509,8 +527,8 @@ impl TiledExecutor {
             }
         }
         let rp = self.replay(kernel);
-        let arena: &mut [f64] = &mut bufs.arena;
-        let mut scratch = ReplayScratch::default();
+        let arena: &mut [T] = &mut bufs.arena;
+        let mut scratch = ReplayScratch::<T>::default();
         self.schedule.scan_feet(extents, |foot| {
             rp.run_tile(arena, extents, foot, &mut scratch);
         });
@@ -563,6 +581,30 @@ pub fn scan_rect_tiles<F: FnMut(&[i64], &[i64])>(
     }
 }
 
+/// Is this plan the degenerate `m = n = 1` GEMM form (scalar product,
+/// convolution, any fully-reduced box)? Those run the dot microkernel
+/// straight from the arena — `MR×NRW` panels would be `1/(MR·NRW)` live.
+fn is_dot_plan(plan: &RunPlan) -> bool {
+    plan.m == 1 && plan.n == 1
+}
+
+/// Run a degenerate plan through [`dot_update`].
+fn run_dot<T: Scalar>(arena: &mut [T], plan: &RunPlan) {
+    // a 1-row box always lowers to exactly one run today; assert for real
+    // (not debug) so a future multi-run degenerate form fails loudly
+    // instead of silently dropping runs past the first
+    assert!(is_dot_plan(plan) && plan.runs.len() == 1);
+    let out = (plan.runs[0].out + plan.col_out[0]) as usize;
+    dot_update(
+        arena,
+        out,
+        plan.runs[0].row,
+        plan.col_in[0],
+        &plan.red_row,
+        &plan.red_col,
+    );
+}
+
 /// Execute the whole kernel as the two-level macro/micro nest (the
 /// BLIS-style macro-kernel) over its whole-domain [`RunPlan`]:
 ///
@@ -579,40 +621,130 @@ pub fn scan_rect_tiles<F: FnMut(&[i64], &[i64])>(
 /// shapes run at macro-block speed. The packed buffers are caller-owned
 /// so tests can assert the pack counts and the parallel executor can
 /// share the packed rows read-only.
-pub fn run_macro(
-    arena: &mut [f64],
+///
+/// Degenerate `m = n = 1` plans (scalar product, convolution) skip the
+/// pack/block machinery and stream both operands once through the dot
+/// microkernel — the packed buffers stay untouched.
+pub fn run_macro<T: Scalar>(
+    arena: &mut [T],
     plan: &RunPlan,
     lp: &LevelPlan,
     micro: MicroShape,
-    rows: &mut PackedRows,
-    cols: &mut PackedCols,
+    rows: &mut PackedRows<T>,
+    cols: &mut PackedCols<T>,
 ) {
-    match micro {
-        MicroShape::Mr8Nr4 => run_macro_impl::<NR>(arena, plan, lp, rows, cols),
-        MicroShape::Mr8Nr6 => run_macro_impl::<NR_WIDE>(arena, plan, lp, rows, cols),
+    if plan.m == 0 || plan.n == 0 || plan.k == 0 {
+        return;
+    }
+    if is_dot_plan(plan) {
+        run_dot(arena, plan);
+        return;
+    }
+    match T::nr(micro) {
+        4 => run_macro_impl::<T, 4>(arena, plan, lp, rows, cols),
+        6 => run_macro_impl::<T, 6>(arena, plan, lp, rows, cols),
+        8 => run_macro_impl::<T, 8>(arena, plan, lp, rows, cols),
+        12 => run_macro_impl::<T, 12>(arena, plan, lp, rows, cols),
+        w => unreachable!("unsupported register-tile width {w}"),
     }
 }
 
-fn run_macro_impl<const NRW: usize>(
-    arena: &mut [f64],
+fn run_macro_impl<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
     plan: &RunPlan,
     lp: &LevelPlan,
-    rows: &mut PackedRows,
-    cols: &mut PackedCols,
+    rows: &mut PackedRows<T>,
+    cols: &mut PackedCols<T>,
 ) {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
-    let nc = lp.nc.max(1);
-    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
     for k0 in (0..plan.k).step_by(kc) {
         let kcc = (k0 + kc).min(plan.k) - k0;
         rows.pack_slice(arena, plan, mc, k0, kcc);
-        for j0 in (0..plan.n).step_by(nc) {
-            let ncc = (j0 + nc).min(plan.n) - j0;
-            cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
-            for bi in 0..rows.n_blocks() {
-                run_macro_block::<NRW>(rows.block(bi), cols, plan, j0, l1, arena);
-            }
+        run_macro_slice::<T, NRW>(arena, plan, lp, rows, cols, k0, kcc);
+    }
+}
+
+/// One reduction slice of the macro nest: column bands × row blocks over
+/// an already-packed row slice.
+fn run_macro_slice<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    rows: &PackedRows<T>,
+    cols: &mut PackedCols<T>,
+    k0: usize,
+    kcc: usize,
+) {
+    let nc = lp.nc.max(1);
+    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
+    for j0 in (0..plan.n).step_by(nc) {
+        let ncc = (j0 + nc).min(plan.n) - j0;
+        cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+        for bi in 0..rows.n_blocks() {
+            run_macro_block::<T, NRW>(rows.block(bi), cols, plan, j0, l1, arena);
+        }
+    }
+}
+
+/// Pre-pack every `kc` reduction slice of the plan's row operand — for
+/// callers whose row operand is **constant across runs** (the native
+/// serve backend's resident weights): pay the row-panel copies once,
+/// then drive [`run_macro_prepacked`] per run. Slices follow exactly the
+/// `k0` stepping of [`run_macro`] under the same `lp`.
+pub fn pack_row_slices<T: Scalar>(
+    arena: &[T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+) -> Vec<PackedRows<T>> {
+    let mc = lp.mc.max(1);
+    let kc = lp.kc.max(1);
+    (0..plan.k)
+        .step_by(kc)
+        .map(|k0| {
+            let kcc = (k0 + kc).min(plan.k) - k0;
+            let mut pr = PackedRows::new();
+            pr.pack_slice(arena, plan, mc, k0, kcc);
+            pr
+        })
+        .collect()
+}
+
+/// [`run_macro`] over row slices packed ahead of time by
+/// [`pack_row_slices`] (same plan, same `lp`): only the column operand
+/// is packed per call, so a serve loop with resident weights never
+/// re-copies them. The row-operand bytes must be unchanged since the
+/// slices were packed; degenerate `m = n = 1` plans take the dot path
+/// and ignore `rows`.
+pub fn run_macro_prepacked<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    cols: &mut PackedCols<T>,
+) {
+    if plan.m == 0 || plan.n == 0 || plan.k == 0 {
+        return;
+    }
+    if is_dot_plan(plan) {
+        run_dot(arena, plan);
+        return;
+    }
+    let kc = lp.kc.max(1);
+    assert_eq!(
+        rows.len(),
+        plan.k.div_ceil(kc),
+        "pre-packed slices do not match the macro shape"
+    );
+    for (si, k0) in (0..plan.k).step_by(kc).enumerate() {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        match T::nr(micro) {
+            4 => run_macro_slice::<T, 4>(arena, plan, lp, &rows[si], cols, k0, kcc),
+            6 => run_macro_slice::<T, 6>(arena, plan, lp, &rows[si], cols, k0, kcc),
+            8 => run_macro_slice::<T, 8>(arena, plan, lp, &rows[si], cols, k0, kcc),
+            12 => run_macro_slice::<T, 12>(arena, plan, lp, &rows[si], cols, k0, kcc),
+            w => unreachable!("unsupported register-tile width {w}"),
         }
     }
 }
@@ -620,28 +752,42 @@ fn run_macro_impl<const NRW: usize>(
 /// Execute one clipped box through the pack + microkernel engine — the
 /// per-tile rect dispatch shared by the serial and parallel executors.
 /// Packed blocks are reused across consecutive calls via the caller's
-/// box keys (see [`box_key`]).
-pub fn run_rect_box(
-    arena: &mut [f64],
+/// box keys (see [`box_key`]). Degenerate `m = n = 1` boxes run the dot
+/// microkernel without packing.
+pub fn run_rect_box<T: Scalar>(
+    arena: &mut [T],
     plan: &RunPlan,
     micro: MicroShape,
-    packs: &mut PackBuffers,
+    packs: &mut PackBuffers<T>,
     row_key: Vec<i64>,
     col_key: Vec<i64>,
 ) {
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
         return;
     }
+    if is_dot_plan(plan) {
+        run_dot(arena, plan);
+        return;
+    }
     packs.pack_rows_cached(arena, plan, row_key);
-    match micro {
-        MicroShape::Mr8Nr4 => {
-            packs.pack_cols_cached::<NR>(arena, plan, col_key);
-            packs.run_box::<NR>(arena, plan);
+    match T::nr(micro) {
+        4 => {
+            packs.pack_cols_cached::<4>(arena, plan, col_key);
+            packs.run_box::<4>(arena, plan);
         }
-        MicroShape::Mr8Nr6 => {
-            packs.pack_cols_cached::<NR_WIDE>(arena, plan, col_key);
-            packs.run_box::<NR_WIDE>(arena, plan);
+        6 => {
+            packs.pack_cols_cached::<6>(arena, plan, col_key);
+            packs.run_box::<6>(arena, plan);
         }
+        8 => {
+            packs.pack_cols_cached::<8>(arena, plan, col_key);
+            packs.run_box::<8>(arena, plan);
+        }
+        12 => {
+            packs.pack_cols_cached::<12>(arena, plan, col_key);
+            packs.run_box::<12>(arena, plan);
+        }
+        w => unreachable!("unsupported register-tile width {w}"),
     }
 }
 
@@ -716,11 +862,11 @@ pub fn tiled_executor(basis: TileBasis) -> TiledExecutor {
     TiledExecutor::new(TiledSchedule::new(basis))
 }
 
-/// Max |a−b| over two equal-length slices.
-pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+/// Max |a−b| over two equal-length scalar slices, as f64.
+pub fn max_abs_diff<T: Scalar>(a: &[T], b: &[T]) -> f64 {
     a.iter()
         .zip(b)
-        .map(|(x, y)| (x - y).abs())
+        .map(|(x, y)| (x.to_f64() - y.to_f64()).abs())
         .fold(0.0, f64::max)
 }
 
@@ -742,7 +888,7 @@ mod tests {
     use crate::lattice::IMat;
 
     fn check_correct(kernel: &Kernel, scanner: &dyn Scanner) {
-        let mut bufs = KernelBuffers::from_kernel(kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(kernel);
         let want = bufs.reference();
         run_schedule(&mut bufs, kernel, scanner);
         let got = bufs.output();
@@ -754,7 +900,7 @@ mod tests {
 
     fn check_executor(kernel: &Kernel, basis: TileBasis) {
         let exec = TiledExecutor::new(TiledSchedule::new(basis));
-        let mut bufs = KernelBuffers::from_kernel(kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, kernel);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -832,6 +978,41 @@ mod tests {
     }
 
     #[test]
+    fn f32_executor_matches_reference() {
+        // the same engine at f32: rect macro path, skewed replay path and
+        // the degenerate dot path, against the f32 oracle
+        for (kernel, basis) in [
+            (ops::matmul(21, 9, 11, 4, 0), TileBasis::rect(&[10, 6, 5])),
+            (ops::convolution(37, 4, 0), TileBasis::rect(&[8])),
+            (
+                ops::kronecker(5, 3, 7, 4, 4, 0),
+                TileBasis::rect(&[2, 2, 4, 3]),
+            ),
+        ] {
+            let exec = TiledExecutor::new(TiledSchedule::new(basis));
+            let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+            bufs.fill_ints(3, 0x32);
+            let want = bufs.reference();
+            exec.run(&mut bufs, &kernel);
+            assert_eq!(bufs.output(), want, "{} f32", kernel.name());
+        }
+        // skewed f32 matmul through the panel-replay path
+        let k = ops::matmul(16, 16, 16, 4, 0);
+        let basis = TileBasis::from_cols(IMat::from_rows(&[
+            &[3, 0, 1],
+            &[0, 4, 0],
+            &[1, 0, 4],
+        ]));
+        let exec = TiledExecutor::new(TiledSchedule::new(basis));
+        assert!(exec.replay(&k).panel_replay());
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
+        bufs.fill_ints(3, 0x33);
+        let want = bufs.reference();
+        exec.run(&mut bufs, &k);
+        assert_eq!(bufs.output(), want, "f32 skewed replay");
+    }
+
+    #[test]
     fn macro_run_matches_l1_only_run() {
         let k = ops::matmul(33, 21, 27, 8, 0);
         let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[10, 6, 5])))
@@ -841,9 +1022,9 @@ mod tests {
                 kc: 9,
                 nc: 11,
             });
-        let mut macro_bufs = KernelBuffers::from_kernel(&k);
+        let mut macro_bufs = KernelBuffers::<f64>::from_kernel(&k);
         exec.run(&mut macro_bufs, &k);
-        let mut l1_bufs = KernelBuffers::from_kernel(&k);
+        let mut l1_bufs = KernelBuffers::<f64>::from_kernel(&k);
         exec.run_l1_only(&mut l1_bufs, &k);
         assert!(max_abs_diff(&macro_bufs.output(), &l1_bufs.output()) < 1e-9);
         assert!(max_abs_diff(&macro_bufs.reference(), &macro_bufs.output()) < 1e-9);
@@ -853,14 +1034,85 @@ mod tests {
     fn wide_micro_shape_matches_default() {
         let k = ops::matmul(26, 17, 23, 8, 0);
         let sched = TiledSchedule::new(TileBasis::rect(&[8, 12, 6]));
-        let mut narrow = KernelBuffers::from_kernel(&k);
+        let mut narrow = KernelBuffers::<f64>::from_kernel(&k);
         TiledExecutor::new(sched.clone()).run(&mut narrow, &k);
-        let mut wide = KernelBuffers::from_kernel(&k);
+        let mut wide = KernelBuffers::<f64>::from_kernel(&k);
         TiledExecutor::new(sched)
             .with_micro_shape(MicroShape::Mr8Nr6)
             .run(&mut wide, &k);
         assert!(max_abs_diff(&narrow.output(), &wide.output()) < 1e-9);
         assert!(max_abs_diff(&narrow.reference(), &wide.output()) < 1e-9);
+    }
+
+    #[test]
+    fn prepacked_macro_matches_run_macro_and_never_repacks() {
+        // the serve path's steady state: rows packed once, then many runs
+        // against changing column-operand data
+        let k = ops::matmul(26, 19, 23, 8, 0);
+        let views = kernel_views(&k);
+        let gf = GemmForm::of(&k).unwrap();
+        let plan = gf.plan_box(&views, &[0, 0, 0], k.extents());
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 9,
+        };
+        for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+            let want = bufs.reference();
+            let rows = pack_row_slices(&bufs.arena, &plan, &lp);
+            let packed: u64 = rows.iter().map(|r| r.pack_count()).sum();
+            let mut cols = PackedCols::<f64>::new();
+            run_macro_prepacked(&mut bufs.arena, &plan, &lp, micro, &rows, &mut cols);
+            assert!(max_abs_diff(&want, &bufs.output()) < 1e-9, "{micro:?}");
+            // a second run with mutated column-operand data: rows stay as
+            // packed (the resident-weights contract), result tracks the
+            // fresh oracle
+            let (c_start, c_len) = bufs.operand_range(2);
+            for v in &mut bufs.arena[c_start..c_start + c_len] {
+                *v += 1.0;
+            }
+            bufs.reset_output();
+            let want2 = bufs.reference();
+            run_macro_prepacked(&mut bufs.arena, &plan, &lp, micro, &rows, &mut cols);
+            assert!(max_abs_diff(&want2, &bufs.output()) < 1e-9, "{micro:?} rerun");
+            let repacked: u64 = rows.iter().map(|r| r.pack_count()).sum();
+            assert_eq!(packed, repacked, "pre-packed rows must never repack");
+        }
+    }
+
+    #[test]
+    fn degenerate_dot_skips_packing() {
+        // conv/scalar product plans are m = n = 1: the macro path must
+        // take the dot kernel and leave the packed buffers untouched
+        for kernel in [ops::convolution(57, 8, 0), ops::scalar_product(41, 8, 0)] {
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+            let want = bufs.reference();
+            let gf = GemmForm::of(&kernel).unwrap();
+            let plan =
+                gf.plan_box(&kernel_views(&kernel), &[0], kernel.extents());
+            assert!(is_dot_plan(&plan), "{}", kernel.name());
+            let mut rows = PackedRows::<f64>::new();
+            let mut cols = PackedCols::<f64>::new();
+            let lp = LevelPlan {
+                l1_tile: (1, 1, 8),
+                mc: 1,
+                kc: 8,
+                nc: 1,
+            };
+            run_macro(
+                &mut bufs.arena,
+                &plan,
+                &lp,
+                MicroShape::Mr8Nr4,
+                &mut rows,
+                &mut cols,
+            );
+            assert_eq!(rows.pack_count(), 0, "dot path must not pack rows");
+            assert_eq!(cols.pack_count(), 0, "dot path must not pack columns");
+            assert!(max_abs_diff(&want, &bufs.output()) < 1e-9, "{}", kernel.name());
+        }
     }
 
     #[test]
@@ -960,7 +1212,7 @@ mod tests {
     fn instrumented_counts_accesses() {
         use crate::cache::{CacheSim, CacheSpec, Policy};
         let k = ops::matmul(8, 8, 8, 8, 0);
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let mut sim = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
         run_instrumented(&mut bufs, &k, &IterOrder::lex(3), &mut sim);
         assert_eq!(sim.stats().accesses, 3 * 8 * 8 * 8);
@@ -975,7 +1227,7 @@ mod tests {
         let s = TiledSchedule::new(TileBasis::rect(&[4, 4, 4]));
         let mut sim1 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
         let mut sim2 = CacheSim::new(CacheSpec::FIG1_TOY, Policy::Lru);
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         run_instrumented(&mut bufs, &k, &s, &mut sim1);
         run_trace_only(&k, &s, &mut sim2);
         assert_eq!(sim1.stats().misses(), sim2.stats().misses());
@@ -993,5 +1245,24 @@ mod tests {
             run_trace_only(&k, &IterOrder::lex(k.n_free()), &mut sim);
             assert_eq!(sim.stats().accesses, 3 * k.domain_size() as u64);
         }
+    }
+
+    #[test]
+    fn f32_addresses_halve_the_span() {
+        // the f32 kernel's trace touches half the byte span of the f64
+        // kernel's — elements per line really doubled
+        use crate::cache::{CacheSim, CacheSpec, Policy};
+        let k64 = ops::matmul(16, 16, 16, 8, 0);
+        let k32 = ops::matmul(16, 16, 16, 4, 0);
+        let v64 = kernel_views(&k64);
+        let v32 = kernel_views(&k32);
+        let f = [15i64, 15, 15];
+        assert_eq!(v32[0].addr(&f) * 2, v64[0].addr(&f));
+        // and produces no more misses under the same spec
+        let mut s64 = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
+        let mut s32 = CacheSim::new(CacheSpec::HASWELL_L1D, Policy::Lru);
+        run_trace_only(&k64, &IterOrder::lex(3), &mut s64);
+        run_trace_only(&k32, &IterOrder::lex(3), &mut s32);
+        assert!(s32.stats().misses() <= s64.stats().misses());
     }
 }

@@ -1,42 +1,59 @@
-//! Register-blocked f64 microkernels — the tile-interior code quality the
-//! paper gets from CLooG+gcc, written out by hand.
+//! Register-blocked microkernels — the tile-interior code quality the
+//! paper gets from CLooG+gcc, written out by hand. Element-generic: every
+//! kernel is `T: Scalar` (f32 or f64); f32 panels are twice as wide
+//! ([`Scalar::NR`]) because twice as many elements fit a vector register.
 //!
 //! All kernels operate on *packed*, unit-stride panels (built by
 //! [`super::pack`] from a [`RunPlan`](super::runplan::RunPlan)) so the
 //! inner loops carry no bounds logic and no strided loads:
 //!
 //! * [`mkernel_full_at`] — an `MR×NRW` register tile (`NRW` a const
-//!   generic: 4 for the default shape, 6 for the autotuned wide shape):
-//!   `MR·NRW` accumulators held live across the whole k-loop (one store
-//!   per output element per tile, instead of one per k step), fed by
-//!   `MR + NRW` packed loads per k step. Output columns are addressed by
-//!   **per-column base offsets**, so kernels whose output columns are not
-//!   uniformly strided (e.g. Kronecker) dispatch the same register tile.
-//!   [`mkernel_edge_at`] is the clipped variant for boundary blocks;
-//!   packed panels are zero-padded so it can accumulate the full block
-//!   and write back only the live `mr×nr` corner.
+//!   generic: the dtype's narrow or wide width, resolved by
+//!   [`Scalar::nr`] at the dispatch sites): `MR·NRW` accumulators held
+//!   live across the whole k-loop (one store per output element per tile,
+//!   instead of one per k step), fed by `MR + NRW` packed loads per k
+//!   step. Output columns are addressed by **per-column base offsets**,
+//!   so kernels whose output columns are not uniformly strided (e.g.
+//!   Kronecker) dispatch the same register tile. [`mkernel_edge_at`] is
+//!   the clipped variant for boundary blocks; packed panels are
+//!   zero-padded so it can accumulate the full block and write back only
+//!   the live `mr×nr` corner.
 //! * [`mkernel_full`] / [`mkernel_full_8x6`] / [`mkernel_edge`] — the
-//!   uniform-stride wrappers (column stride `cs`), kept for the packed
-//!   single-block callers and the startup autotuner
-//!   ([`super::autotune`]); they lower onto the `_at` kernels.
+//!   f64 uniform-stride wrappers (column stride `cs`), kept for the
+//!   packed single-block callers and the legacy autotune entry point;
+//!   they lower onto the `_at` kernels.
 //! * [`axpy_block`] — the panel-replay kernel for skewed lattice tiles:
-//!   one packed unit-stride run of the row operand updates `NR` output
-//!   columns at once, so each packed element is loaded once per `NR`
-//!   FMAs.
+//!   one packed unit-stride run of the row operand updates up to
+//!   [`AXPY_MAX_COLS`] output columns at once, so each packed element is
+//!   loaded once per column block.
+//! * [`dot_update`] — the degenerate `m = n = 1` path (scalar product,
+//!   convolution): a 4-way-unrolled dot over the plan's reduction offset
+//!   tables, straight from the arena. Packing a 1-row, 1-column problem
+//!   into `MR×NRW` zero-padded panels would waste `MR·NRW − 1` of every
+//!   register tile; the dot kernel skips packing entirely.
 //!
 //! All `get_unchecked` indexing is encapsulated here, behind length
 //! asserts at entry — callers hand in plain slices.
 
-/// Microkernel register-tile rows (unit-stride output dimension).
+use super::scalar::Scalar;
+
+/// Microkernel register-tile rows (unit-stride output dimension), shared
+/// by both dtypes.
 pub const MR: usize = 8;
 
-/// Microkernel register-tile columns of the default shape.
+/// f64 register-tile columns of the default (narrow) shape. Per-dtype
+/// widths live on [`Scalar::NR`]; f32 doubles this.
 pub const NR: usize = 4;
 
-/// Register-tile columns of the wide autotune candidate. The packed panel
-/// layouts are width-specific, so the engine packs with whichever width
-/// the startup calibrator ([`super::autotune`]) selected.
+/// f64 register-tile columns of the wide autotune candidate. The packed
+/// panel layouts are width-specific, so the engine packs with whichever
+/// width the startup calibrator ([`super::autotune`]) selected for the
+/// dtype.
 pub const NR_WIDE: usize = 6;
+
+/// Upper bound on the column-block width [`axpy_block`] accepts — large
+/// enough for the widest *narrow* replay width (f32's `NR = 8`).
+pub const AXPY_MAX_COLS: usize = 8;
 
 /// Full `MR×NRW` register-tiled block over packed panels, with per-column
 /// output bases:
@@ -48,11 +65,11 @@ pub const NR_WIDE: usize = 6;
 /// [`super::pack`]); `a` is the whole output arena. Callers guarantee the
 /// `NRW` column windows `[bases[c], bases[c] + MR)` are disjoint (true
 /// whenever the kernel's output map is injective).
-pub fn mkernel_full_at<const NRW: usize>(
+pub fn mkernel_full_at<T: Scalar, const NRW: usize>(
     kc: usize,
-    bp: &[f64],
-    cp: &[f64],
-    a: &mut [f64],
+    bp: &[T],
+    cp: &[T],
+    a: &mut [T],
     bases: &[usize; NRW],
 ) {
     assert!(bp.len() >= kc * MR, "B panel too short");
@@ -60,7 +77,7 @@ pub fn mkernel_full_at<const NRW: usize>(
     for &b in bases {
         assert!(b + MR <= a.len(), "output window too small");
     }
-    let mut acc = [[0f64; MR]; NRW];
+    let mut acc = [[T::ZERO; MR]; NRW];
     // SAFETY: the asserts above bound every index used below.
     unsafe {
         for t in 0..kc {
@@ -86,13 +103,13 @@ pub fn mkernel_full_at<const NRW: usize>(
 /// packed panels, with per-column output bases (`bases.len() ≥ nr`). The
 /// panels are zero-padded past the live rows/columns, so the accumulation
 /// runs the full register tile and only the write-back is clipped.
-pub fn mkernel_edge_at<const NRW: usize>(
+pub fn mkernel_edge_at<T: Scalar, const NRW: usize>(
     mr: usize,
     nr: usize,
     kc: usize,
-    bp: &[f64],
-    cp: &[f64],
-    a: &mut [f64],
+    bp: &[T],
+    cp: &[T],
+    a: &mut [T],
     bases: &[usize],
 ) {
     assert!((1..=MR).contains(&mr) && (1..=NRW).contains(&nr));
@@ -102,7 +119,7 @@ pub fn mkernel_edge_at<const NRW: usize>(
     for &b in &bases[..nr] {
         assert!(b + mr <= a.len(), "output window too small");
     }
-    let mut acc = [[0f64; MR]; NRW];
+    let mut acc = [[T::ZERO; MR]; NRW];
     for t in 0..kc {
         let b = &bp[t * MR..t * MR + MR];
         let c = &cp[t * NRW..t * NRW + NRW];
@@ -121,19 +138,19 @@ pub fn mkernel_edge_at<const NRW: usize>(
     }
 }
 
-/// Uniform-stride wrapper: full `MR×NR` register tile with output column
-/// stride `cs` — `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`, `a`
-/// starting at the block's top-left element.
+/// Uniform-stride wrapper: full f64 `MR×NR` register tile with output
+/// column stride `cs` — `a[r + cs·c] += Σ_t bp[t·MR + r] · cp[t·NR + c]`,
+/// `a` starting at the block's top-left element.
 pub fn mkernel_full(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
     assert!(cs >= MR, "output columns overlap");
     let mut bases = [0usize; NR];
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_full_at::<NR>(kc, bp, cp, a, &bases);
+    mkernel_full_at::<f64, NR>(kc, bp, cp, a, &bases);
 }
 
-/// Uniform-stride wrapper for the `MR×NR_WIDE` (8×6) register tile —
+/// Uniform-stride wrapper for the f64 `MR×NR_WIDE` (8×6) register tile —
 /// identical contract to [`mkernel_full`] but over `NR_WIDE`-column C
 /// panels (`cp[t·NR_WIDE + c]`).
 pub fn mkernel_full_8x6(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize) {
@@ -142,10 +159,10 @@ pub fn mkernel_full_8x6(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: us
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_full_at::<NR_WIDE>(kc, bp, cp, a, &bases);
+    mkernel_full_at::<f64, NR_WIDE>(kc, bp, cp, a, &bases);
 }
 
-/// Uniform-stride wrapper: clipped `mr×nr` boundary block (`mr ≤ MR`,
+/// Uniform-stride wrapper: clipped f64 `mr×nr` boundary block (`mr ≤ MR`,
 /// `nr ≤ NR`) with output column stride `cs`.
 pub fn mkernel_edge(
     mr: usize,
@@ -160,25 +177,29 @@ pub fn mkernel_edge(
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_edge_at::<NR>(mr, nr, kc, bp, cp, a, &bases[..nr]);
+    mkernel_edge_at::<f64, NR>(mr, nr, kc, bp, cp, a, &bases[..nr]);
 }
 
 /// Panel-replay kernel: one packed unit-stride run of row-operand values
-/// updates up to `NR` output columns at once:
+/// updates up to [`AXPY_MAX_COLS`] output columns at once:
 ///
 /// `a[r + cs·col] += b[r] · c[col]`
 ///
-/// for `r < b.len()`, `col < c.len()` (`c.len() ≤ NR`). `b` is a packed
-/// (contiguous) run, `a` the output window at the run's first row of the
-/// first column. The NR-wide case is unrolled; narrower boundary blocks
-/// take the generic column loop.
-pub fn axpy_block(a: &mut [f64], cs: usize, b: &[f64], c: &[f64]) {
+/// for `r < b.len()`, `col < c.len()`. `b` is a packed (contiguous) run,
+/// `a` the output window at the run's first row of the first column. The
+/// full-width cases — 4 columns (f64's narrow replay width) and 8
+/// columns (f32's) — are unrolled; boundary widths take the generic
+/// column loop.
+pub fn axpy_block<T: Scalar>(a: &mut [T], cs: usize, b: &[T], c: &[T]) {
     let len = b.len();
     let ncols = c.len();
-    assert!((1..=NR).contains(&ncols), "column block of 1..=NR");
+    assert!(
+        (1..=AXPY_MAX_COLS).contains(&ncols),
+        "column block of 1..=AXPY_MAX_COLS"
+    );
     assert!(len <= cs, "run longer than the output column stride");
     assert!(a.len() >= (ncols - 1) * cs + len, "output window too small");
-    if ncols == NR {
+    if ncols == 4 {
         let (c0, c1, c2, c3) = (c[0], c[1], c[2], c[3]);
         // SAFETY: the asserts above bound every index used below.
         unsafe {
@@ -188,6 +209,23 @@ pub fn axpy_block(a: &mut [f64], cs: usize, b: &[f64], c: &[f64]) {
                 *a.get_unchecked_mut(r + cs) += bv * c1;
                 *a.get_unchecked_mut(r + 2 * cs) += bv * c2;
                 *a.get_unchecked_mut(r + 3 * cs) += bv * c3;
+            }
+        }
+    } else if ncols == 8 {
+        let (c0, c1, c2, c3) = (c[0], c[1], c[2], c[3]);
+        let (c4, c5, c6, c7) = (c[4], c[5], c[6], c[7]);
+        // SAFETY: the asserts above bound every index used below.
+        unsafe {
+            for r in 0..len {
+                let bv = *b.get_unchecked(r);
+                *a.get_unchecked_mut(r) += bv * c0;
+                *a.get_unchecked_mut(r + cs) += bv * c1;
+                *a.get_unchecked_mut(r + 2 * cs) += bv * c2;
+                *a.get_unchecked_mut(r + 3 * cs) += bv * c3;
+                *a.get_unchecked_mut(r + 4 * cs) += bv * c4;
+                *a.get_unchecked_mut(r + 5 * cs) += bv * c5;
+                *a.get_unchecked_mut(r + 6 * cs) += bv * c6;
+                *a.get_unchecked_mut(r + 7 * cs) += bv * c7;
             }
         }
     } else {
@@ -201,6 +239,37 @@ pub fn axpy_block(a: &mut [f64], cs: usize, b: &[f64], c: &[f64]) {
             }
         }
     }
+}
+
+/// Degenerate `m = n = 1` GEMM form (scalar product, convolution): a
+/// 4-way-unrolled dot over the plan's reduction offset tables —
+///
+/// `a[out] += Σ_t a[(row + red_row[t])] · a[(col + red_col[t])]`
+///
+/// straight from the arena, no packing. `row`/`col` are the absolute
+/// row-/column-operand element bases of the box ([`Run::row`] /
+/// [`RunPlan::col_in`]).
+///
+/// [`Run::row`]: super::runplan::Run::row
+/// [`RunPlan::col_in`]: super::runplan::RunPlan::col_in
+pub fn dot_update<T: Scalar>(
+    a: &mut [T],
+    out: usize,
+    row: i64,
+    col: i64,
+    red_row: &[i64],
+    red_col: &[i64],
+) {
+    let kc = red_row.len();
+    assert_eq!(red_col.len(), kc, "reduction tables differ in length");
+    assert!(out < a.len(), "output index out of the arena");
+    let mut acc = [T::ZERO; 4];
+    for (t, (&rr, &rc)) in red_row.iter().zip(red_col).enumerate() {
+        let b = a[(row + rr) as usize];
+        let c = a[(col + rc) as usize];
+        acc[t & 3] += b * c;
+    }
+    a[out] += (acc[0] + acc[1]) + (acc[2] + acc[3]);
 }
 
 #[cfg(test)]
@@ -251,6 +320,29 @@ mod tests {
     }
 
     #[test]
+    fn f32_wide_panel_matches_naive() {
+        // f32's narrow width (8 columns): exact with small integer fills
+        const W: usize = 8;
+        let kc = 9usize;
+        let bp: Vec<f32> = (0..kc * MR).map(|i| (i % 7) as f32 - 3.0).collect();
+        let cp: Vec<f32> = (0..kc * W).map(|i| (i % 5) as f32 - 2.0).collect();
+        let cs = MR + 1;
+        let mut a = vec![1.0f32; (W - 1) * cs + MR];
+        let orig = a.clone();
+        let mut bases = [0usize; W];
+        for (jc, b) in bases.iter_mut().enumerate() {
+            *b = jc * cs;
+        }
+        mkernel_full_at::<f32, W>(kc, &bp, &cp, &mut a, &bases);
+        for jc in 0..W {
+            for r in 0..MR {
+                let want: f32 = (0..kc).map(|t| bp[t * MR + r] * cp[t * W + jc]).sum();
+                assert_eq!(a[jc * cs + r] - orig[jc * cs + r], want, "({r},{jc})");
+            }
+        }
+    }
+
+    #[test]
     fn full_at_kernel_scattered_columns() {
         // non-uniform column bases (the Kronecker case): columns placed
         // out of order with uneven gaps
@@ -260,7 +352,7 @@ mod tests {
         let bases = [40usize, 0, 96, 16];
         let mut a = fill(128, 12);
         let orig = a.clone();
-        mkernel_full_at::<NR>(kc, &bp, &cp, &mut a, &bases);
+        mkernel_full_at::<f64, NR>(kc, &bp, &cp, &mut a, &bases);
         for (jc, &base) in bases.iter().enumerate() {
             for r in 0..MR {
                 let want: f64 = (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
@@ -331,7 +423,7 @@ mod tests {
         let bases = [20usize, 0, 40];
         let mut a = vec![1.0f64; 64];
         let sentinel = a.clone();
-        mkernel_edge_at::<NR_WIDE>(mr, nr, kc, &bp, &cp, &mut a, &bases);
+        mkernel_edge_at::<f64, NR_WIDE>(mr, nr, kc, &bp, &cp, &mut a, &bases);
         for (jc, &base) in bases.iter().enumerate() {
             for r in 0..mr {
                 let want: f64 = (0..kc)
@@ -350,7 +442,7 @@ mod tests {
         let len = 11;
         let cs = 16;
         let b = fill(len, 9);
-        for ncols in 1..=NR {
+        for ncols in 1..=AXPY_MAX_COLS {
             let c = fill(ncols, 10);
             let mut a = fill((ncols - 1) * cs + len, 11);
             let orig = a.clone();
@@ -362,5 +454,29 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn dot_update_matches_naive_both_dtypes() {
+        // scattered reduction offsets, including a reversed (negative
+        // stride) column walk like convolution's
+        let n = 13i64;
+        let red_row: Vec<i64> = (0..n).collect();
+        let red_col: Vec<i64> = (0..n).map(|t| -t).collect();
+        let (row, col, out) = (2i64, (2 + n + n - 1) as i64, 40usize);
+        let mut a64: Vec<f64> = (0..48).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
+        let want: f64 = (0..n)
+            .map(|t| a64[(row + t) as usize] * a64[(col - t) as usize])
+            .sum::<f64>()
+            + a64[out];
+        dot_update(&mut a64, out, row, col, &red_row, &red_col);
+        assert_eq!(a64[out], want, "f64 dot");
+        let mut a32: Vec<f32> = (0..48).map(|i| ((i * 7) % 11) as f32 - 5.0).collect();
+        let want32: f32 = (0..n)
+            .map(|t| a32[(row + t) as usize] * a32[(col - t) as usize])
+            .sum::<f32>()
+            + a32[out];
+        dot_update(&mut a32, out, row, col, &red_row, &red_col);
+        assert_eq!(a32[out], want32, "f32 dot");
     }
 }

@@ -2,23 +2,27 @@
 //!
 //! The paper generates C code with CLooG and compiles it; we execute the
 //! same traversals directly, at the code quality the paper's CLooG+gcc
-//! pipeline emits. The executor pipeline is **kernel-agnostic**: every
-//! Table-1 kernel (scalar product, convolution, matmul, Kronecker) lowers
-//! through the same four stages
+//! pipeline emits. The executor pipeline is **kernel-agnostic** and
+//! **element-generic**: every Table-1 kernel (scalar product,
+//! convolution, matmul, Kronecker) lowers through the same four stages,
+//! at either supported precision (`T: Scalar`, f32 or f64 — the
+//! [`scalar`] layer):
 //!
 //! ```text
 //!   buffers  →  RunPlan  →  pack once  →  micro/macro dispatch
 //! ```
 //!
-//! * **buffers** — [`runplan::KernelBuffers`] lays one f64 arena out by
-//!   the kernel's tables (element index × 8 = simulator byte address) and
-//!   derives one [`runplan::OperandView`] per operand: the composed
-//!   affine map `φ ∘ access` on the loop variables. No executor hardcodes
-//!   an operand geometry — the former matmul-only `MatmulBuffers` /
-//!   `MatmulGeom` layer (and its `a_idx`/`b_idx`/`c_idx` indexing) is
-//!   retired; the kernel-semantic scalar oracle
-//!   ([`KernelBuffers::reference`](runplan::KernelBuffers::reference))
-//!   survives as the differential-test baseline.
+//! * **buffers** — [`runplan::KernelBuffers`]`<T>` lays one `T` arena out
+//!   by the kernel's tables (element index × [`Scalar::ELEM`] =
+//!   simulator byte address, so an f32 arena legitimately packs twice the
+//!   elements per cacheline) and derives one [`runplan::OperandView`] per
+//!   operand: the composed affine map `φ ∘ access` on the loop variables,
+//!   carrying its table's element size. No executor hardcodes an operand
+//!   geometry — the former matmul-only `MatmulBuffers` layer is retired,
+//!   and with the `Scalar` refactor the last matmul-era assumption — that
+//!   "element" means 8 bytes — is gone too. The kernel-semantic scalar
+//!   oracle ([`KernelBuffers::reference`](runplan::KernelBuffers::reference))
+//!   survives as the differential-test baseline at both precisions.
 //! * **RunPlan** — [`runplan::GemmForm`] classifies the loop axes into
 //!   GEMM row/column/reduction groups from the access maps (matmul is
 //!   `{i}×{j}×{kk}`; Kronecker the reduction-free outer product with
@@ -27,38 +31,52 @@
 //!   lowers any clipped loop-space box to a [`runplan::RunPlan`]:
 //!   maximal unit-stride runs along the rows plus explicit per-column and
 //!   per-reduction-step offset tables. Tiles, macro blocks and whole
-//!   domains are all the same IR.
+//!   domains are all the same IR, for either dtype.
 //! * **pack once** — [`pack`] copies RunPlan rows into `MR`-row panels
 //!   (unit-stride `memcpy` per run segment) and columns into `NRW`-column
 //!   panels (gathers through the offset tables — convolution's reversed
-//!   operand packs into a forward-streaming panel). Per macro block each
-//!   operand is packed exactly once: [`pack::PackedRows`] holds every
-//!   `mc`-row block of the current reduction slice (shared **read-only**
-//!   across threads in the parallel path), [`pack::PackedCols`] the
-//!   band of the current output columns. [`pack::PackBuffers`] is the
-//!   per-tile packer for the single-level engine and the parallel
-//!   per-tile path; its cache keys carry the source identity so reuse
-//!   across arenas can never replay stale panels.
+//!   operand packs into a forward-streaming panel). `NRW` is per-dtype:
+//!   the narrow/wide width classes ([`MicroShape`]) resolve to 4/6
+//!   columns at f64 and 8/12 at f32 ([`Scalar::nr`]). Per macro block
+//!   each operand is packed exactly once: [`pack::PackedRows`] holds
+//!   every `mc`-row block of the current reduction slice (shared
+//!   **read-only** across threads in the parallel path),
+//!   [`pack::PackedCols`] the band of the current output columns.
+//!   [`pack::PackBuffers`] is the per-tile packer for the single-level
+//!   engine and the parallel per-tile path; its cache keys carry the
+//!   source identity *and* element size so reuse across arenas or dtypes
+//!   can never replay stale panels.
 //! * **micro/macro dispatch** — [`executor::run_macro`] walks reduction
 //!   slices × column bands × row blocks ([`pack::run_macro_block`]
 //!   drives the L1 tiles straight from the panels), dispatching the
 //!   `MR×NRW` FMA register tile ([`microkernel::mkernel_full_at`]) with
 //!   **per-column output bases** — which is what lets kernels without a
 //!   uniform output column stride (Kronecker) use the same register
-//!   tiles. `NRW` is const-generic: the startup autotuner ([`autotune`])
-//!   times 8×4 vs 8×6 and the engine dispatches whichever shape the
-//!   [`Registry`](crate::runtime::Registry) recorded. Boundary blocks
-//!   write back through the clipped edge kernel; skewed lattice bases
-//!   replay their prototile's unit-stride runs through the `NR`-column
-//!   axpy kernel per tile ([`executor::ReplayPlan`]); kernels outside
-//!   the GEMM class fall back to exact per-point evaluation through the
-//!   views.
+//!   tiles. The startup autotuner ([`autotune::calibrate_dtype`]) races
+//!   the dtype's narrow vs wide shape and the engine dispatches whichever
+//!   class the [`Registry`](crate::runtime::Registry) recorded *for that
+//!   dtype*. Degenerate `m = n = 1` forms (scalar product, convolution)
+//!   skip packing entirely and run the dot microkernel
+//!   ([`microkernel::dot_update`]) straight from the arena. Boundary
+//!   blocks write back through the clipped edge kernel; skewed lattice
+//!   bases replay their prototile's unit-stride runs through the dtype's
+//!   `NR`-column axpy kernel per tile ([`executor::ReplayPlan`]); kernels
+//!   outside the GEMM class fall back to exact per-point evaluation
+//!   through the views.
+//!
+//! The element size also flows *upward* from here: the tile selectors
+//! ([`crate::tiling::level_plan`], [`LevelPlan::heuristic`]) take it into
+//! their working-set math, so an f32 plan legitimately selects a wider
+//! footprint than an f64 plan for the same shape — dtype reaches the
+//! model, not just the kernels.
 //!
 //! [`executor`] also provides the instrumented point-wise executors
-//! (simulator-faithful traversals for any kernel), and [`parallel`] adds
-//! the OpenMP-analog threaded execution — whole column bands per worker
-//! over the shared packed rows for rect schedules, footpoint groups for
-//! skewed ones.
+//! (simulator-faithful traversals for any kernel, at the kernel's
+//! declared element size), and [`parallel`] adds the OpenMP-analog
+//! threaded execution — whole column bands per worker over the shared
+//! packed rows for rect schedules, footpoint groups for skewed ones.
+//!
+//! [`LevelPlan::heuristic`]: crate::tiling::LevelPlan::heuristic
 
 pub mod autotune;
 pub mod executor;
@@ -66,15 +84,18 @@ pub mod microkernel;
 pub mod pack;
 pub mod parallel;
 pub mod runplan;
+pub mod scalar;
 
-pub use autotune::{calibrate, MicroShape};
+pub use autotune::{calibrate, calibrate_dtype, MicroShape};
 pub use executor::{
-    box_key, max_abs_diff, run_instrumented, run_macro, run_rect_box, run_schedule,
-    run_trace_only, scan_rect_tiles, tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
+    box_key, max_abs_diff, pack_row_slices, run_instrumented, run_macro, run_macro_prepacked,
+    run_rect_box, run_schedule, run_trace_only, scan_rect_tiles, tiled_executor, ReplayPlan,
+    ReplayScratch, TiledExecutor,
 };
-pub use microkernel::{MR, NR, NR_WIDE};
+pub use microkernel::{dot_update, MR, NR, NR_WIDE};
 pub use pack::{run_macro_block, PackBuffers, PackedBlock, PackedCols, PackedRows};
 pub use parallel::{run_parallel, run_parallel_macro, run_parallel_micro};
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,
 };
+pub use scalar::{DType, Scalar};

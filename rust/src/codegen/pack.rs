@@ -1,8 +1,10 @@
-//! Operand packing for the microkernel execution engine — kernel-neutral:
-//! every packer consumes a [`RunPlan`] (unit-stride runs + column /
-//! reduction offset tables) instead of a hardcoded matmul geometry.
+//! Operand packing for the microkernel execution engine — kernel-neutral
+//! *and* element-generic: every packer consumes a [`RunPlan`]
+//! (unit-stride runs + column / reduction offset tables) instead of a
+//! hardcoded matmul geometry, and packs `T: Scalar` panels (f32 panels
+//! are twice as wide per [`Scalar::NR`]).
 //!
-//! Panel layouts (identical for every kernel):
+//! Panel layouts (identical for every kernel and dtype):
 //!
 //! * **row panels** — [`RunPlan::row_panels`] chops the plan's runs into
 //!   panels of up to `MR` consecutive rows; panel `p` stores element
@@ -11,10 +13,10 @@
 //!   Because panels never straddle run boundaries, every copy is a
 //!   unit-stride `memcpy` from the arena.
 //! * **column panels** — `⌈nc/NRW⌉` panels of `NRW` consecutive columns
-//!   (`NRW` = 4 or the autotuned wide 6); panel `q` stores `(t, c)` at
-//!   `q·kc·NRW + t·NRW + c`, gathered through the plan's `col_in` /
-//!   `red_col` tables (which is how convolution's reversed operand packs
-//!   into a forward-streaming panel).
+//!   (`NRW` = the dtype's narrow or autotuned wide width); panel `q`
+//!   stores `(t, c)` at `q·kc·NRW + t·NRW + c`, gathered through the
+//!   plan's `col_in` / `red_col` tables (which is how convolution's
+//!   reversed operand packs into a forward-streaming panel).
 //!
 //! Rows past a panel's live count / columns past `nc` are zero-filled so
 //! boundary blocks can run the full register tile and clip only the
@@ -30,7 +32,8 @@
 //!
 //! * [`PackBuffers`] — per-tile packer for the single-level engine and
 //!   the parallel per-tile path; its block cache keys carry the source
-//!   identity so reuse across arenas can never replay stale panels.
+//!   identity *and* the element size so reuse across arenas or dtypes can
+//!   never replay stale panels.
 //! * [`PackedRows`] / [`PackedCols`] — macro-kernel granularity:
 //!   [`PackedRows`] holds *every* `mc`-row block of one reduction slice
 //!   (a read-only handle shared across threads in the parallel path),
@@ -41,19 +44,20 @@
 
 use super::microkernel::{mkernel_edge_at, mkernel_full_at, MR};
 use super::runplan::{RowPanel, RunPlan};
+use super::scalar::Scalar;
 
 /// Pack a list of row panels into `buf` (layout `p·kc·MR + t·MR + r`,
 /// zero-padded): the one copy loop shared by the per-tile and macro
 /// packers.
-fn pack_row_panels(
-    buf: &mut Vec<f64>,
-    arena: &[f64],
+fn pack_row_panels<T: Scalar>(
+    buf: &mut Vec<T>,
+    arena: &[T],
     panels: &[RowPanel],
     red_row: &[i64],
 ) {
     let kc = red_row.len();
     buf.clear();
-    buf.resize(panels.len() * kc * MR, 0.0);
+    buf.resize(panels.len() * kc * MR, T::ZERO);
     for (pi, p) in panels.iter().enumerate() {
         let base = pi * kc * MR;
         for (t, &rr) in red_row.iter().enumerate() {
@@ -67,9 +71,9 @@ fn pack_row_panels(
 /// Pack one column band `[j0, j0+nc)` into NRW panels (layout
 /// `q·kc·NRW + t·NRW + c`, zero-padded), gathering through the plan's
 /// offset tables.
-fn pack_col_panels<const NRW: usize>(
-    buf: &mut Vec<f64>,
-    arena: &[f64],
+fn pack_col_panels<T: Scalar, const NRW: usize>(
+    buf: &mut Vec<T>,
+    arena: &[T],
     plan: &RunPlan,
     k0: usize,
     kc: usize,
@@ -78,7 +82,7 @@ fn pack_col_panels<const NRW: usize>(
 ) {
     let panels = nc.div_ceil(NRW);
     buf.clear();
-    buf.resize(panels * kc * NRW, 0.0);
+    buf.resize(panels * kc * NRW, T::ZERO);
     for q in 0..panels {
         let cols = NRW.min(nc - q * NRW);
         let base = q * kc * NRW;
@@ -98,11 +102,11 @@ fn pack_col_panels<const NRW: usize>(
 /// `col_out` is the output-offset table of the band's columns (length ≥
 /// `nc`); `panels[pi]`'s data lives at `rows_buf[pi·kc·MR ..]`.
 #[allow(clippy::too_many_arguments)]
-fn dispatch_block<const NRW: usize>(
-    arena: &mut [f64],
-    rows_buf: &[f64],
+fn dispatch_block<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    rows_buf: &[T],
     panels: &[RowPanel],
-    cols_buf: &[f64],
+    cols_buf: &[T],
     nc: usize,
     kc: usize,
     (ti, tj): (usize, usize),
@@ -133,9 +137,17 @@ fn dispatch_block<const NRW: usize>(
                         *b = o as usize;
                     }
                     if p.rows == MR && nr == NRW {
-                        mkernel_full_at::<NRW>(kc, bp, cpq, arena, &bases);
+                        mkernel_full_at::<T, NRW>(kc, bp, cpq, arena, &bases);
                     } else {
-                        mkernel_edge_at::<NRW>(p.rows, nr, kc, bp, cpq, arena, &bases[..nr]);
+                        mkernel_edge_at::<T, NRW>(
+                            p.rows,
+                            nr,
+                            kc,
+                            bp,
+                            cpq,
+                            arena,
+                            &bases[..nr],
+                        );
                     }
                 }
             }
@@ -143,11 +155,12 @@ fn dispatch_block<const NRW: usize>(
     }
 }
 
-/// Cache key of a packed block: source identity (arena pointer) + the
-/// caller-supplied box coordinates. The source identity guards against
-/// replaying stale panels when one `PackBuffers` is reused across kernels
-/// or arenas whose box coordinates happen to coincide.
-type PackKey = (usize, Vec<i64>);
+/// Cache key of a packed block: source identity (arena pointer + element
+/// size) + the caller-supplied box coordinates. The source identity
+/// guards against replaying stale panels when one `PackBuffers` is reused
+/// across kernels, arenas or dtypes whose box coordinates happen to
+/// coincide.
+type PackKey = (usize, usize, Vec<i64>);
 
 /// Reusable per-tile pack buffers + the plan geometry of the tile they
 /// currently hold.
@@ -159,10 +172,10 @@ type PackKey = (usize, Vec<i64>);
 /// during a run. Callers that mutate the source between runs must call
 /// [`PackBuffers::invalidate`] first.
 #[derive(Clone, Debug, Default)]
-pub struct PackBuffers {
-    rows_buf: Vec<f64>,
+pub struct PackBuffers<T: Scalar = f64> {
+    rows_buf: Vec<T>,
     panels: Vec<RowPanel>,
-    cols_buf: Vec<f64>,
+    cols_buf: Vec<T>,
     kc_rows: usize,
     kc_cols: usize,
     nc: usize,
@@ -171,8 +184,8 @@ pub struct PackBuffers {
     col_key: Option<PackKey>,
 }
 
-impl PackBuffers {
-    pub fn new() -> PackBuffers {
+impl<T: Scalar> PackBuffers<T> {
+    pub fn new() -> PackBuffers<T> {
         PackBuffers::default()
     }
 
@@ -189,7 +202,7 @@ impl PackBuffers {
     /// own operand offsets are folded in, so reusing one `PackBuffers`
     /// across kernels or operand layouts whose box coordinates coincide
     /// can never replay stale panels (the PR 2 regression, generalized).
-    pub fn pack_rows_cached(&mut self, arena: &[f64], plan: &RunPlan, mut key: Vec<i64>) {
+    pub fn pack_rows_cached(&mut self, arena: &[T], plan: &RunPlan, mut key: Vec<i64>) {
         key.extend([
             plan.m as i64,
             plan.k as i64,
@@ -198,7 +211,7 @@ impl PackBuffers {
             plan.red_row.first().copied().unwrap_or(-1),
             plan.red_row.last().copied().unwrap_or(-1),
         ]);
-        let full = (arena.as_ptr() as usize, key);
+        let full = (arena.as_ptr() as usize, T::ELEM, key);
         if self.row_key.as_ref() == Some(&full) {
             return;
         }
@@ -212,7 +225,7 @@ impl PackBuffers {
     /// source-identity key discipline as [`PackBuffers::pack_rows_cached`]).
     pub fn pack_cols_cached<const NRW: usize>(
         &mut self,
-        arena: &[f64],
+        arena: &[T],
         plan: &RunPlan,
         mut key: Vec<i64>,
     ) {
@@ -224,11 +237,11 @@ impl PackBuffers {
             plan.red_col.first().copied().unwrap_or(-1),
             plan.red_col.last().copied().unwrap_or(-1),
         ]);
-        let full = (arena.as_ptr() as usize, key);
+        let full = (arena.as_ptr() as usize, T::ELEM, key);
         if self.nrw == NRW && self.col_key.as_ref() == Some(&full) {
             return;
         }
-        pack_col_panels::<NRW>(&mut self.cols_buf, arena, plan, 0, plan.k, 0, plan.n);
+        pack_col_panels::<T, NRW>(&mut self.cols_buf, arena, plan, 0, plan.k, 0, plan.n);
         self.kc_cols = plan.k;
         self.nc = plan.n;
         self.nrw = NRW;
@@ -237,13 +250,13 @@ impl PackBuffers {
 
     /// Run the packed box: dispatch every register block of the packed
     /// panels against the arena.
-    pub fn run_box<const NRW: usize>(&self, arena: &mut [f64], plan: &RunPlan) {
+    pub fn run_box<const NRW: usize>(&self, arena: &mut [T], plan: &RunPlan) {
         assert_eq!(
             self.kc_rows, self.kc_cols,
             "rows and columns packed with different reduction depths"
         );
         assert_eq!(self.nrw, NRW, "column panels packed with a different width");
-        dispatch_block::<NRW>(
+        dispatch_block::<T, NRW>(
             arena,
             &self.rows_buf,
             &self.panels,
@@ -256,12 +269,12 @@ impl PackBuffers {
     }
 
     /// The packed row panels (tests).
-    pub fn row_panel_data(&self) -> (&[RowPanel], &[f64]) {
+    pub fn row_panel_data(&self) -> (&[RowPanel], &[T]) {
         (&self.panels, &self.rows_buf)
     }
 
     /// The packed column panels (tests).
-    pub fn col_panel_data(&self) -> &[f64] {
+    pub fn col_panel_data(&self) -> &[T] {
         &self.cols_buf
     }
 }
@@ -274,8 +287,8 @@ impl PackBuffers {
 /// its panels never straddle run boundaries, so blocks of kernels with
 /// segmented rows (Kronecker) simply carry more, shorter panels.
 #[derive(Clone, Debug, Default)]
-pub struct PackedRows {
-    buf: Vec<f64>,
+pub struct PackedRows<T: Scalar = f64> {
+    buf: Vec<T>,
     panels: Vec<RowPanel>,
     /// Per block: (first panel index, panel count).
     blocks: Vec<(usize, usize)>,
@@ -286,20 +299,20 @@ pub struct PackedRows {
 /// Read-only view of one packed row block: `panels[i]`'s data lives at
 /// `data[i·kc·MR .. (i+1)·kc·MR]`.
 #[derive(Clone, Copy, Debug)]
-pub struct PackedBlock<'a> {
+pub struct PackedBlock<'a, T: Scalar = f64> {
     pub panels: &'a [RowPanel],
-    pub data: &'a [f64],
+    pub data: &'a [T],
     pub kc: usize,
 }
 
-impl PackedRows {
-    pub fn new() -> PackedRows {
+impl<T: Scalar> PackedRows<T> {
+    pub fn new() -> PackedRows<T> {
         PackedRows::default()
     }
 
     /// Pack every `mc`-row block of the plan's rows at reduction slice
     /// `[k0, k0+kc)`.
-    pub fn pack_slice(&mut self, arena: &[f64], plan: &RunPlan, mc: usize, k0: usize, kc: usize) {
+    pub fn pack_slice(&mut self, arena: &[T], plan: &RunPlan, mc: usize, k0: usize, kc: usize) {
         assert!(kc >= 1 && k0 + kc <= plan.k);
         let m = plan.m;
         let mc = mc.clamp(1, m.max(1));
@@ -325,7 +338,7 @@ impl PackedRows {
     }
 
     /// Panel view of block `bi`.
-    pub fn block(&self, bi: usize) -> PackedBlock<'_> {
+    pub fn block(&self, bi: usize) -> PackedBlock<'_, T> {
         let (start, count) = self.blocks[bi];
         PackedBlock {
             panels: &self.panels[start..start + count],
@@ -351,22 +364,22 @@ impl PackedRows {
 /// macro-kernel's thread-local counterpart of [`PackedRows`] (each thread
 /// owns the band of its output column range).
 #[derive(Clone, Debug, Default)]
-pub struct PackedCols {
-    buf: Vec<f64>,
+pub struct PackedCols<T: Scalar = f64> {
+    buf: Vec<T>,
     kc: usize,
     nc: usize,
     packs: u64,
 }
 
-impl PackedCols {
-    pub fn new() -> PackedCols {
+impl<T: Scalar> PackedCols<T> {
+    pub fn new() -> PackedCols<T> {
         PackedCols::default()
     }
 
     /// Pack columns `[j0, j0+nc)` at reduction slice `[k0, k0+kc)`.
     pub fn pack_band<const NRW: usize>(
         &mut self,
-        arena: &[f64],
+        arena: &[T],
         plan: &RunPlan,
         k0: usize,
         kc: usize,
@@ -377,12 +390,12 @@ impl PackedCols {
         assert!(j0 + nc <= plan.n && k0 + kc <= plan.k);
         self.kc = kc;
         self.nc = nc;
-        pack_col_panels::<NRW>(&mut self.buf, arena, plan, k0, kc, j0, nc);
+        pack_col_panels::<T, NRW>(&mut self.buf, arena, plan, k0, kc, j0, nc);
         self.packs += 1;
     }
 
     /// The packed NRW-column panels.
-    pub fn panels(&self) -> &[f64] {
+    pub fn panels(&self) -> &[T] {
         &self.buf
     }
 
@@ -409,17 +422,17 @@ impl PackedCols {
 /// of the tile's row panels, while the row block streams from the
 /// outer-level cache — no packing happens here at all.
 #[allow(clippy::too_many_arguments)]
-pub fn run_macro_block<const NRW: usize>(
-    block: PackedBlock<'_>,
-    cols: &PackedCols,
+pub fn run_macro_block<T: Scalar, const NRW: usize>(
+    block: PackedBlock<'_, T>,
+    cols: &PackedCols<T>,
     plan: &RunPlan,
     j0: usize,
     (ti, tj): (usize, usize),
-    arena: &mut [f64],
+    arena: &mut [T],
 ) {
     let (kc, nc) = cols.shape();
     assert_eq!(block.kc, kc, "row and column panels differ in depth");
-    dispatch_block::<NRW>(
+    dispatch_block::<T, NRW>(
         arena,
         block.data,
         block.panels,
@@ -443,7 +456,7 @@ mod tests {
         n: i64,
     ) -> (crate::domain::Kernel, KernelBuffers, RunPlan) {
         let kernel = ops::matmul_padded(m, k, n, m + 2, m + 1, k + 3, 8, 0);
-        let bufs = KernelBuffers::from_kernel(&kernel);
+        let bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let gf = GemmForm::of(&kernel).unwrap();
         let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
         (kernel, bufs, plan)
@@ -452,7 +465,7 @@ mod tests {
     #[test]
     fn row_panels_pack_layout_and_zero_fill() {
         let (_, bufs, plan) = matmul_plan(11, 5, 3);
-        let mut packs = PackBuffers::new();
+        let mut packs = PackBuffers::<f64>::new();
         packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
         let (panels, buf) = packs.row_panel_data();
         assert_eq!(panels.len(), 11usize.div_ceil(MR));
@@ -476,7 +489,7 @@ mod tests {
     fn col_panels_pack_layout_and_zero_fill() {
         use crate::codegen::microkernel::NR;
         let (_, bufs, plan) = matmul_plan(6, 5, 7);
-        let mut packs = PackBuffers::new();
+        let mut packs = PackBuffers::<f64>::new();
         packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
         let buf = packs.col_panel_data();
         let panels = plan.n.div_ceil(NR);
@@ -504,7 +517,7 @@ mod tests {
         for (m, k, n) in [(1i64, 1i64, 1i64), (7, 5, 3), (17, 9, 13), (8, 8, 4)] {
             let (_, mut bufs, plan) = matmul_plan(m, k, n);
             let want = bufs.reference();
-            let mut packs = PackBuffers::new();
+            let mut packs = PackBuffers::<f64>::new();
             packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
             packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
             packs.run_box::<NR>(&mut bufs.arena, &plan);
@@ -513,6 +526,24 @@ mod tests {
                 assert!((a - b).abs() < 1e-12, "({m},{k},{n}) flat {i}");
             }
         }
+    }
+
+    #[test]
+    fn f32_packed_box_matches_scalar_oracle() {
+        // the same engine at half the element size: f32 kernel, f32
+        // buffers, f32's narrow (8-wide) panels — exact with integer fills
+        const W: usize = 8;
+        let kernel = ops::matmul_padded(13, 6, 9, 15, 14, 9, 4, 0);
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+        bufs.fill_ints(3, 0xF32);
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+        let want = bufs.reference();
+        let mut packs = PackBuffers::<f32>::new();
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        packs.pack_cols_cached::<W>(&bufs.arena, &plan, vec![0]);
+        packs.run_box::<W>(&mut bufs.arena, &plan);
+        assert_eq!(bufs.output(), want, "f32 packed box differs bitwise");
     }
 
     #[test]
@@ -525,7 +556,7 @@ mod tests {
         for v in other.arena.iter_mut() {
             *v += 1.0;
         }
-        let mut packs = PackBuffers::new();
+        let mut packs = PackBuffers::<f64>::new();
         packs.pack_rows_cached(&bufs.arena, &plan, vec![7, 7, 7]);
         let first = packs.row_panel_data().1[0];
         packs.pack_rows_cached(&other.arena, &plan, vec![7, 7, 7]);
@@ -590,7 +621,7 @@ mod tests {
     fn packed_rows_slice_blocks_and_counts() {
         let (_, bufs, plan) = matmul_plan(21, 6, 4);
         let (mc, k0, kc) = (9usize, 1usize, 5usize);
-        let mut pr = PackedRows::new();
+        let mut pr = PackedRows::<f64>::new();
         pr.pack_slice(&bufs.arena, &plan, mc, k0, kc);
         assert_eq!(pr.n_blocks(), 3); // 9 + 9 + 3
         assert_eq!(pr.pack_count(), 3);
@@ -628,9 +659,9 @@ mod tests {
         ] {
             let (_, mut bufs, plan) = matmul_plan(m, k, n);
             let want = bufs.reference();
-            let mut pr = PackedRows::new();
+            let mut pr = PackedRows::<f64>::new();
             pr.pack_slice(&bufs.arena, &plan, plan.m, 0, plan.k);
-            let mut pc = PackedCols::new();
+            let mut pc = PackedCols::<f64>::new();
             pc.pack_band::<NR>(&bufs.arena, &plan, 0, plan.k, 0, plan.n);
             // split borrows: clone the packed handles out of the arena
             let block = pr.block(0);
@@ -641,7 +672,7 @@ mod tests {
                 data: &data,
                 kc: plan.k,
             };
-            run_macro_block::<NR>(block, &pc, &plan, 0, (ti, tj), &mut bufs.arena);
+            run_macro_block::<f64, NR>(block, &pc, &plan, 0, (ti, tj), &mut bufs.arena);
             let got = bufs.output();
             for (i, (a, b)) in got.iter().zip(&want).enumerate() {
                 assert!(
@@ -656,11 +687,11 @@ mod tests {
     fn kronecker_packs_segmented_runs() {
         use crate::codegen::microkernel::NR;
         let kernel = ops::kronecker(3, 2, 4, 5, 8, 0);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let gf = GemmForm::of(&kernel).unwrap();
         let plan = gf.plan_box(&kernel_views(&kernel), &[0; 4], kernel.extents());
         let want = bufs.reference();
-        let mut packs = PackBuffers::new();
+        let mut packs = PackBuffers::<f64>::new();
         packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
         packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
         packs.run_box::<NR>(&mut bufs.arena, &plan);

@@ -1,5 +1,7 @@
 //! Auto-threading — §4.0.3 (DESIGN.md S11; OpenMP substitute),
-//! kernel-agnostic since the `RunPlan` refactor.
+//! kernel-agnostic since the `RunPlan` refactor and element-generic since
+//! the `Scalar` refactor (every entry point is `T: Scalar`; the dtype's
+//! autotuned register width is dispatched per call).
 //!
 //! Rect schedules of GEMM-form kernels run the two-level macro-kernel
 //! with parallelism over whole `nc` **column bands** (GEMM columns, i.e.
@@ -19,7 +21,9 @@
 //! skewed ones; every worker owns thread-local [`PackBuffers`] / scratch
 //! so the hot loop performs no shared allocation. Kernels whose output
 //! does not stride along the partition variable (e.g. convolution's
-//! scalar output) degrade to one worker instead of racing.
+//! scalar output) degrade to one worker instead of racing — and their
+//! degenerate `m = n = 1` boxes run the dot microkernel, not the panel
+//! engine.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -29,14 +33,14 @@ use crate::tiling::{LevelPlan, TiledSchedule};
 
 use super::autotune::MicroShape;
 use super::executor::{box_key, run_rect_box, KernelBuffers, ReplayPlan, ReplayScratch};
-use super::microkernel::{NR, NR_WIDE};
 use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
 use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
+use super::scalar::Scalar;
 
 /// Execute the tiled kernel with `threads` worker threads, dispatching
-/// the default 8×4 register tile. See [`run_parallel_micro`].
-pub fn run_parallel(
-    bufs: &mut KernelBuffers,
+/// the dtype's default (narrow) register tile. See [`run_parallel_micro`].
+pub fn run_parallel<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
@@ -53,8 +57,8 @@ pub fn run_parallel(
 }
 
 /// Execute the tiled kernel with `threads` worker threads and an explicit
-/// register-tile shape (pass the autotuned winner from
-/// [`Registry::micro_shape`](crate::runtime::Registry::micro_shape) /
+/// register-tile width class (pass the dtype's autotuned winner from
+/// [`Registry::micro_shape_for`](crate::runtime::Registry::micro_shape_for) /
 /// [`Plan::micro`](crate::coordinator::Plan)). Footpoints are grouped by
 /// their footpoint coordinate along `partition_var` (loop-space dimension
 /// index; use 1 = `j` for matmul plans built by this crate); groups are
@@ -63,8 +67,8 @@ pub fn run_parallel(
 /// disjoint). Kernels whose output map cannot be proven injective per
 /// (row, column) — or does not stride along `partition_var` — degrade to
 /// one worker instead of racing.
-pub fn run_parallel_micro(
-    bufs: &mut KernelBuffers,
+pub fn run_parallel_micro<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
@@ -177,8 +181,8 @@ pub fn run_parallel_micro(
                 // keys (run_rect_box), so nothing is re-packed when only
                 // the column coordinate advances, and the scratch RunPlan
                 // keeps the per-tile loop allocation-free in steady state
-                let mut packs = PackBuffers::new();
-                let mut scratch = ReplayScratch::default();
+                let mut packs = PackBuffers::<T>::new();
+                let mut scratch = ReplayScratch::<T>::default();
                 let mut plan = RunPlan::default();
                 let mut lo = vec![0i64; d];
                 let mut hi = vec![0i64; d];
@@ -193,7 +197,7 @@ pub fn run_parallel_micro(
                     // axes — all checked above) and the inputs are
                     // read-only here; each arena element is written by at
                     // most one thread.
-                    let arena: &mut [f64] =
+                    let arena: &mut [T] =
                         unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
                     for foot in &groups[g] {
                         if let (true, Some(gf)) = (rect_gemm, gf) {
@@ -235,11 +239,11 @@ pub fn run_parallel_micro(
 /// tiles of every row block from the shared panels. Bands are disjoint
 /// output element sets (the kernel's output map is injective per
 /// (row, column)), so writes never race. `level` overrides the derived
-/// macro shape; `micro` selects the register-tile width (pass the
-/// autotuned winner from
-/// [`Registry::micro_shape`](crate::runtime::Registry::micro_shape)).
-pub fn run_parallel_macro(
-    bufs: &mut KernelBuffers,
+/// macro shape; `micro` selects the register-tile width class (the
+/// dtype's autotuned winner from
+/// [`Registry::micro_shape_for`](crate::runtime::Registry::micro_shape_for)).
+pub fn run_parallel_macro<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
@@ -260,22 +264,39 @@ pub fn run_parallel_macro(
     );
     let lo0 = vec![0i64; extents.len()];
     let plan = gf.plan_box(&views, &lo0, extents);
+    if plan.m == 0 || plan.n == 0 || plan.k == 0 {
+        return;
+    }
     let l1 = gf.l1_tile(basis);
     let lp = level.unwrap_or_else(|| {
         LevelPlan::heuristic(
             l1,
             (gf.m, gf.n, gf.k),
+            T::ELEM,
             &CacheSpec::HASWELL_L2,
             Some(&CacheSpec::HASWELL_L3_SLICE),
         )
     });
+    if plan.m == 1 && plan.n == 1 {
+        // degenerate dot (n_bands = 1 anyway): run serially through the
+        // same path the serial macro-kernel takes
+        super::executor::run_macro(
+            &mut bufs.arena,
+            &plan,
+            &lp,
+            micro,
+            &mut PackedRows::<T>::new(),
+            &mut PackedCols::<T>::new(),
+        );
+        return;
+    }
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
     let l1 = (lp.l1_tile.0, lp.l1_tile.1);
     let n_bands = plan.n.div_ceil(nc);
     let arena_len = bufs.arena.len();
-    let mut packed_rows = PackedRows::new();
+    let mut packed_rows = PackedRows::<T>::new();
     for k0 in (0..plan.k).step_by(kc) {
         let kcc = (k0 + kc).min(plan.k) - k0;
         packed_rows.pack_slice(&bufs.arena, &plan, mc, k0, kcc);
@@ -288,7 +309,7 @@ pub fn run_parallel_macro(
                 let next = &next;
                 let arena_ptr = &arena_ptr;
                 scope.spawn(move || {
-                    let mut packed_cols = PackedCols::new();
+                    let mut packed_cols = PackedCols::<T>::new();
                     loop {
                         let band = next.fetch_add(1, Ordering::Relaxed);
                         if band >= n_bands {
@@ -300,35 +321,22 @@ pub fn run_parallel_macro(
                         // the inputs and the shared packed rows are
                         // read-only here, so each arena element is written
                         // by at most one thread.
-                        let arena: &mut [f64] =
+                        let arena: &mut [T] =
                             unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
-                        match micro {
-                            MicroShape::Mr8Nr4 => {
-                                packed_cols.pack_band::<NR>(arena, plan, k0, kcc, j0, ncc);
-                                for bi in 0..pr.n_blocks() {
-                                    run_macro_block::<NR>(
-                                        pr.block(bi),
-                                        &packed_cols,
-                                        plan,
-                                        j0,
-                                        l1,
-                                        arena,
-                                    );
-                                }
-                            }
-                            MicroShape::Mr8Nr6 => {
-                                packed_cols.pack_band::<NR_WIDE>(arena, plan, k0, kcc, j0, ncc);
-                                for bi in 0..pr.n_blocks() {
-                                    run_macro_block::<NR_WIDE>(
-                                        pr.block(bi),
-                                        &packed_cols,
-                                        plan,
-                                        j0,
-                                        l1,
-                                        arena,
-                                    );
-                                }
-                            }
+                        match T::nr(micro) {
+                            4 => macro_band::<T, 4>(
+                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
+                            ),
+                            6 => macro_band::<T, 6>(
+                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
+                            ),
+                            8 => macro_band::<T, 8>(
+                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
+                            ),
+                            12 => macro_band::<T, 12>(
+                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
+                            ),
+                            w => unreachable!("unsupported register-tile width {w}"),
                         }
                     }
                 });
@@ -337,9 +345,29 @@ pub fn run_parallel_macro(
     }
 }
 
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// One worker's macro-kernel band: pack the `kc×nc` column block
+/// thread-locally, then drive the L1 tiles of every shared row block.
+#[allow(clippy::too_many_arguments)]
+fn macro_band<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    pr: &PackedRows<T>,
+    packed_cols: &mut PackedCols<T>,
+    plan: &RunPlan,
+    k0: usize,
+    kcc: usize,
+    j0: usize,
+    ncc: usize,
+    l1: (usize, usize),
+) {
+    packed_cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+    for bi in 0..pr.n_blocks() {
+        run_macro_block::<T, NRW>(pr.block(bi), packed_cols, plan, j0, l1, arena);
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
 #[cfg(test)]
 mod tests {
@@ -354,7 +382,7 @@ mod tests {
         let k = ops::matmul(24, 20, 28, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
         for threads in [1, 2, 4] {
-            let mut bufs = KernelBuffers::from_kernel(&k);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
             let want = bufs.reference();
             run_parallel(&mut bufs, &k, &s, threads, 1);
             assert!(
@@ -370,7 +398,7 @@ mod tests {
         // edge microkernel in every dimension
         let k = ops::matmul(23, 19, 17, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 3, 1);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -385,7 +413,7 @@ mod tests {
             &[1, 0, 4],
         ]));
         let s = TiledSchedule::new(basis);
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 4, 1);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -397,7 +425,7 @@ mod tests {
         // tile box runs through the per-tile packed engine
         let k = ops::matmul(25, 14, 18, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 6, 7]));
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 3, 0);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -410,7 +438,7 @@ mod tests {
         // still be exact
         let k = ops::convolution(57, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8]));
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let want = bufs.reference();
         run_parallel(&mut bufs, &k, &s, 4, 0);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
@@ -430,7 +458,7 @@ mod tests {
         };
         for threads in [1, 3, 8] {
             for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
-                let mut bufs = KernelBuffers::from_kernel(&k);
+                let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
                 let want = bufs.reference();
                 run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp), micro);
                 assert!(
@@ -442,16 +470,43 @@ mod tests {
     }
 
     #[test]
+    fn parallel_macro_f32_both_widths_matches_reference() {
+        // the f32 band path at both width classes (8×8 and 8×12 panels),
+        // bitwise against the integer-filled oracle
+        let k = ops::matmul(29, 23, 26, 4, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 9,
+        };
+        for threads in [1, 3] {
+            for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+                let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
+                bufs.fill_ints(3, 0x32F);
+                let want = bufs.reference();
+                run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp), micro);
+                assert_eq!(
+                    bufs.output(),
+                    want,
+                    "threads={threads} micro={micro:?} (f32)"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn parallel_macro_runs_kronecker() {
         let k = ops::kronecker(5, 4, 6, 3, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[2, 2, 4, 3]));
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         let want = bufs.reference();
         run_parallel_macro(&mut bufs, &k, &s, 3, None, MicroShape::Mr8Nr4);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
         // via run_parallel: loop axis 0 (i) is a GEMM column axis for
         // Kronecker, so this takes the band path
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         run_parallel(&mut bufs, &k, &s, 4, 0);
         assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
     }
@@ -495,7 +550,7 @@ mod tests {
             .output_injective(&kernel_views(&kernel), kernel.extents()));
         let s = TiledSchedule::new(TileBasis::rect(&[2, 2]));
         for pv in [0usize, 1] {
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
             let want = bufs.reference();
             run_parallel(&mut bufs, &kernel, &s, 4, pv);
             assert!(max_abs_diff(&want, &bufs.output()) < 1e-9, "pv={pv}");
@@ -513,7 +568,7 @@ mod tests {
             &[0, 0, 2],
         ]));
         let s = TiledSchedule::new(basis);
-        let mut bufs = KernelBuffers::from_kernel(&k);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         run_parallel(&mut bufs, &k, &s, 2, 1);
     }
 }

@@ -26,10 +26,13 @@
 //!   lower to the same IR.
 //!
 //! [`KernelBuffers`] replaces the former matmul-only `MatmulBuffers`: one
-//! arena laid out by the kernel's [`Table`](crate::index::Table)s (so
-//! executor element indices × 8 equal simulator byte addresses), with a
-//! kernel-semantic scalar [`reference`](KernelBuffers::reference) oracle.
+//! `T: Scalar` arena (f32 or f64, matching the kernel's declared element
+//! size) laid out by the kernel's [`Table`](crate::index::Table)s — so
+//! executor element indices × [`Scalar::ELEM`] equal simulator byte
+//! addresses — with a kernel-semantic scalar
+//! [`reference`](KernelBuffers::reference) oracle.
 
+use super::scalar::Scalar;
 use crate::domain::order::IterOrder;
 use crate::domain::{Kernel, Operand};
 use crate::tiling::TileBasis;
@@ -42,6 +45,9 @@ pub struct OperandView {
     pub off: i64,
     /// Element weight per loop variable.
     pub w: Vec<i64>,
+    /// Element size in bytes (from the operand's table) — scales element
+    /// indices to simulator byte addresses.
+    pub elem: usize,
 }
 
 impl OperandView {
@@ -55,6 +61,7 @@ impl OperandView {
         OperandView {
             off: (op.table.base() / elem) as i64 + o,
             w,
+            elem,
         }
     }
 
@@ -69,10 +76,12 @@ impl OperandView {
         v as usize
     }
 
-    /// Byte address at loop point `f` (f64 arenas).
+    /// Byte address at loop point `f` (element index × element size, so
+    /// f32 arenas pack two elements where an f64 arena packs one — the
+    /// simulator sees twice the elements per line).
     #[inline(always)]
     pub fn addr(&self, f: &[i64]) -> usize {
-        8 * self.idx(f)
+        self.elem * self.idx(f)
     }
 }
 
@@ -82,14 +91,19 @@ pub fn kernel_views(kernel: &Kernel) -> Vec<OperandView> {
     kernel.operands().iter().map(OperandView::of).collect()
 }
 
-/// Operand storage for any Table-1 kernel: one f64 arena indexed by byte
-/// address / 8, so executor addresses equal simulator addresses.
+/// Operand storage for any Table-1 kernel: one `T: Scalar` arena indexed
+/// by byte address / element size, so executor addresses equal simulator
+/// addresses. The kernel's tables must be declared with `T`'s element
+/// size (`ops::matmul(m, k, n, 4, 0)` pairs with `KernelBuffers<f32>`).
 #[derive(Clone, Debug)]
-pub struct KernelBuffers {
-    /// Arena of f64 covering all operand tables (indexed in elements).
-    pub arena: Vec<f64>,
+pub struct KernelBuffers<T: Scalar = f64> {
+    /// Arena of `T` covering all operand tables (indexed in elements).
+    pub arena: Vec<T>,
     views: Vec<OperandView>,
     extents: Vec<i64>,
+    /// Per-operand arena element range `(start, len)` of the (possibly
+    /// padded) table span — see [`KernelBuffers::operand_mut`].
+    op_ranges: Vec<(usize, usize)>,
     /// Logical dims of the output table (flatten order of `output()`).
     out_dims: Vec<i64>,
     /// Element offset (incl. table base) and per-dim element weights of
@@ -103,21 +117,27 @@ pub struct KernelBuffers {
     flat_off: i64,
 }
 
-impl KernelBuffers {
+impl<T: Scalar> KernelBuffers<T> {
     /// Allocate and deterministically initialize from a kernel: inputs
     /// (operands 1, 2) pseudorandom, output zero.
-    pub fn from_kernel(kernel: &Kernel) -> KernelBuffers {
+    pub fn from_kernel(kernel: &Kernel) -> KernelBuffers<T> {
         let ops = kernel.operands();
         assert_eq!(ops.len(), 3, "KernelBuffers expects out = in1 ⊙ in2 kernels");
         for op in ops {
-            assert_eq!(op.table.elem(), 8, "f64 only");
+            assert_eq!(
+                op.table.elem(),
+                T::ELEM,
+                "kernel declared {}-byte elements, buffers are {}-byte",
+                op.table.elem(),
+                T::ELEM
+            );
         }
         let end = ops
             .iter()
             .map(|o| o.table.base() + o.table.bytes())
             .max()
             .unwrap();
-        let mut arena = vec![0f64; end.div_ceil(8)];
+        let mut arena = vec![T::ZERO; end.div_ceil(T::ELEM)];
         // deterministic xorshift fill for the inputs
         let mut state = 0x9E3779B97F4A7C15u64;
         let mut rnd = move || {
@@ -129,9 +149,13 @@ impl KernelBuffers {
         for op in &ops[1..=2] {
             let t = &op.table;
             scan_dims(t.dims(), |x| {
-                arena[t.addr(x) / 8] = rnd();
+                arena[t.addr(x) / T::ELEM] = T::from_f64(rnd());
             });
         }
+        let op_ranges = ops
+            .iter()
+            .map(|o| (o.table.base() / T::ELEM, o.table.bytes() / T::ELEM))
+            .collect();
         let out = &ops[0];
         let out_dims = out.table.dims().to_vec();
         // logical (unpadded) column-major flatten weights of the output
@@ -146,7 +170,8 @@ impl KernelBuffers {
             arena,
             views: kernel_views(kernel),
             extents: kernel.extents().to_vec(),
-            out_elem_off: (out.table.base() / 8) as i64 + out.table.map().offset(),
+            op_ranges,
+            out_elem_off: (out.table.base() / T::ELEM) as i64 + out.table.map().offset(),
             out_elem_w: out.table.map().weights().to_vec(),
             out_dims,
             flat_w,
@@ -168,10 +193,24 @@ impl KernelBuffers {
         self.out_dims.iter().product::<i64>() as usize
     }
 
-    /// Refill the inputs with small *integer-valued* f64 (range
-    /// `[-range, range]`), so products and partial sums are exact and
-    /// every summation order yields bit-identical results — the fill the
-    /// bit-for-bit differential tests use.
+    /// Arena element range `(start, len)` of operand `i`'s table span.
+    pub fn operand_range(&self, i: usize) -> (usize, usize) {
+        self.op_ranges[i]
+    }
+
+    /// Mutable view of operand `i`'s table span in the arena — how
+    /// callers that own real data (e.g. the native serve backend) load an
+    /// operand. For dense unpadded tables the span is exactly the logical
+    /// element count in layout order.
+    pub fn operand_mut(&mut self, i: usize) -> &mut [T] {
+        let (start, len) = self.op_ranges[i];
+        &mut self.arena[start..start + len]
+    }
+
+    /// Refill the inputs with small *integer-valued* scalars (range
+    /// `[-range, range]`), so products and partial sums are exact at
+    /// either precision and every summation order yields bit-identical
+    /// results — the fill the bit-for-bit differential tests use.
     pub fn fill_ints(&mut self, range: u64, seed: u64) {
         let mut state = seed | 1;
         let span = 2 * range + 1;
@@ -185,7 +224,7 @@ impl KernelBuffers {
         // simplest exact refill walks the whole arena, then re-zeroes the
         // output table (padding values are never read by any executor)
         for v in self.arena.iter_mut() {
-            *v = rnd();
+            *v = T::from_f64(rnd());
         }
         self.reset_output();
     }
@@ -211,12 +250,12 @@ impl KernelBuffers {
             for (&wj, &xj) in w.iter().zip(x) {
                 e += wj * xj;
             }
-            arena[e as usize] = 0.0;
+            arena[e as usize] = T::ZERO;
         });
     }
 
     /// Copy of the output table, flattened logically (dim 0 fastest).
-    pub fn output(&self) -> Vec<f64> {
+    pub fn output(&self) -> Vec<T> {
         let mut out = Vec::with_capacity(self.out_len());
         scan_dims(&self.out_dims, |x| out.push(self.arena[self.out_elem(x)]));
         out
@@ -224,10 +263,10 @@ impl KernelBuffers {
 
     /// Reference result computed by the kernel-semantic scalar oracle
     /// (`out[π₀(f)] += in1[π₁(f)] · in2[π₂(f)]` over the whole domain in
-    /// lexicographic order), into fresh buffers — the differential-test
-    /// oracle for every executor path.
-    pub fn reference(&self) -> Vec<f64> {
-        let mut out = vec![0f64; self.out_len()];
+    /// lexicographic order, accumulating in `T`), into fresh buffers —
+    /// the differential-test oracle for every executor path.
+    pub fn reference(&self) -> Vec<T> {
+        let mut out = vec![T::ZERO; self.out_len()];
         let d = self.extents.len();
         let (v1, v2) = (&self.views[1], &self.views[2]);
         IterOrder::lex(d).scan(&self.extents, |f| {
@@ -620,12 +659,15 @@ mod tests {
 
     #[test]
     fn views_match_pointwise_addresses() {
-        // composed views must agree with Kernel::addrs_at everywhere
+        // composed views must agree with Kernel::addrs_at everywhere —
+        // including 4-byte (f32) kernels, whose addresses advance by 4
         for kernel in [
             ops::matmul_padded(5, 4, 6, 7, 6, 5, 8, 64),
             ops::convolution(9, 8, 16),
             ops::scalar_product(7, 8, 8),
             ops::kronecker(2, 3, 4, 2, 8, 0),
+            ops::matmul_padded(5, 4, 6, 7, 6, 5, 4, 64),
+            ops::convolution(9, 4, 16),
         ] {
             let views = kernel_views(&kernel);
             IterOrder::lex(kernel.n_free()).scan(kernel.extents(), |f| {
@@ -784,12 +826,14 @@ mod tests {
         let v = OperandView {
             off: 0,
             w: vec![1, 1],
+            elem: 8,
         };
         assert!(!view_injective(&v, &[4, 4], &[0, 1]));
         // dominating weights are accepted
         let v = OperandView {
             off: 0,
             w: vec![1, 4],
+            elem: 8,
         };
         assert!(view_injective(&v, &[4, 4], &[0, 1]));
         assert!(view_injective(&v, &[4, 4], &[1, 0]), "order-insensitive");
@@ -815,7 +859,7 @@ mod tests {
     #[test]
     fn buffers_reference_matches_legacy_matmul_oracle() {
         let kernel = ops::matmul_padded(7, 5, 6, 9, 8, 7, 8, 32);
-        let bufs = KernelBuffers::from_kernel(&kernel);
+        let bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         // legacy oracle (j, kk, i nesting) on the same arena
         let views = kernel_views(&kernel);
         let (m, n, k) = (7usize, 6, 5);
@@ -839,7 +883,7 @@ mod tests {
     #[test]
     fn buffers_output_and_reset_roundtrip() {
         let kernel = ops::kronecker(2, 3, 3, 2, 8, 0);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         assert_eq!(bufs.out_len(), 36);
         assert!(bufs.output().iter().all(|&v| v == 0.0));
         let e = bufs.view(0).idx(&[0, 0, 0, 0]);
@@ -852,7 +896,7 @@ mod tests {
     #[test]
     fn fill_ints_is_integer_valued() {
         let kernel = ops::matmul(6, 5, 4, 8, 0);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         bufs.fill_ints(2, 0xF00D);
         for &v in &bufs.arena {
             assert_eq!(v, v.trunc());

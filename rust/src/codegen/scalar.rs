@@ -1,0 +1,258 @@
+//! The element-type layer of the packed engine: the sealed [`Scalar`]
+//! trait (f32/f64) and the per-dtype register-tile geometry.
+//!
+//! The paper's associativity-lattice model is parameterized by cache
+//! geometry in *elements per line*, so the element size must flow through
+//! every layer — halving it doubles the elements per line (the conflict
+//! lattice period divides differently) and doubles the natural register
+//! tile width. [`Scalar`] carries exactly that: the element size the
+//! selectors feed into working-set math ([`Scalar::ELEM`]), the
+//! per-dtype register-tile column counts ([`Scalar::NR`] /
+//! [`Scalar::NR_WIDE`] — f32 doubles f64's widths), and the ULP-scaled
+//! differential-test tolerance ([`Scalar::ulp_tol`]).
+//!
+//! [`MicroShape`] names a register-tile *width class* (narrow/wide), not
+//! an absolute column count: the startup autotuner
+//! ([`super::autotune::calibrate_dtype`]) picks one winner per dtype and
+//! the engine resolves the class to the dtype's actual width at dispatch
+//! ([`Scalar::nr`]). The trait is sealed: the packed panel layouts and
+//! the dispatch matches below enumerate exactly these two types.
+
+use super::microkernel::{MR, NR, NR_WIDE};
+
+/// Runtime tag of a supported element type — what the registry keys its
+/// per-dtype autotune winners by and the CLI parses from `--dtype`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    /// Element size in bytes.
+    pub fn elem(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    /// Dense index for per-dtype tables (e.g. the registry's autotune
+    /// winners).
+    pub fn index(self) -> usize {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+        }
+    }
+
+    /// The dtype of a kernel built with `elem`-byte elements.
+    pub fn from_elem(elem: usize) -> Option<DType> {
+        match elem {
+            4 => Some(DType::F32),
+            8 => Some(DType::F64),
+            _ => None,
+        }
+    }
+
+    /// Parse a CLI spelling (`f32`/`f64`).
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            _ => None,
+        }
+    }
+}
+
+/// A register-tile width class. The column count is per-dtype
+/// ([`MicroShape::nr_for`]): f32 panels are twice as wide as f64 panels
+/// for the same class, because twice as many elements fit one vector
+/// register / cacheline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroShape {
+    /// The compile-time default: 8×4 at f64, 8×8 at f32.
+    Mr8Nr4,
+    /// The wide-vector candidate: 8×6 at f64, 8×12 at f32.
+    Mr8Nr6,
+}
+
+impl MicroShape {
+    /// `(MR, NR)` of the shape at f64 (the legacy accessor; use
+    /// [`MicroShape::dims_for`] for dtype-aware reporting).
+    pub fn dims(self) -> (usize, usize) {
+        self.dims_for(DType::F64)
+    }
+
+    /// Register-tile columns of this width class at `dtype`.
+    pub fn nr_for(self, dtype: DType) -> usize {
+        match (self, dtype) {
+            (MicroShape::Mr8Nr4, DType::F64) => NR,
+            (MicroShape::Mr8Nr6, DType::F64) => NR_WIDE,
+            (MicroShape::Mr8Nr4, DType::F32) => 2 * NR,
+            (MicroShape::Mr8Nr6, DType::F32) => 2 * NR_WIDE,
+        }
+    }
+
+    /// `(MR, NR)` of this width class at `dtype`.
+    pub fn dims_for(self, dtype: DType) -> (usize, usize) {
+        (MR, self.nr_for(dtype))
+    }
+
+    /// Human-readable `MRxNR` at f64 (legacy; see
+    /// [`MicroShape::label_for`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            MicroShape::Mr8Nr4 => "8x4",
+            MicroShape::Mr8Nr6 => "8x6",
+        }
+    }
+
+    /// Human-readable `MRxNR` at `dtype` (what [`Plan::describe`]
+    /// reports).
+    ///
+    /// [`Plan::describe`]: crate::coordinator::Plan::describe
+    pub fn label_for(self, dtype: DType) -> String {
+        format!("{}x{}", MR, self.nr_for(dtype))
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// A packed-engine element type. Sealed to f32/f64: the microkernels,
+/// packers, executors and buffers are generic over `T: Scalar`, and every
+/// width-dispatch site enumerates exactly the widths these two types
+/// declare.
+pub trait Scalar:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Element size in bytes — drives byte addresses
+    /// ([`OperandView::addr`](super::runplan::OperandView::addr)) and the
+    /// selectors' working-set math.
+    const ELEM: usize;
+    /// Runtime tag of this type.
+    const DTYPE: DType;
+    /// Register-tile columns of the narrow (default) width class.
+    const NR: usize;
+    /// Register-tile columns of the wide autotune candidate.
+    const NR_WIDE: usize;
+    /// Machine epsilon, as f64.
+    const EPS: f64;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// The register-tile column count this type dispatches for a width
+    /// class.
+    fn nr(micro: MicroShape) -> usize {
+        match micro {
+            MicroShape::Mr8Nr4 => Self::NR,
+            MicroShape::Mr8Nr6 => Self::NR_WIDE,
+        }
+    }
+
+    /// ULP-scaled differential-test tolerance for a depth-`depth`
+    /// reduction of order-1 values, *per unit of result magnitude*:
+    /// two correct summation orders of `depth` terms differ by at most
+    /// O(depth · ε · max|partial sum|). Callers multiply by the result's
+    /// magnitude scale. Integer fills need no tolerance at all — they are
+    /// exact at either precision.
+    fn ulp_tol(depth: usize) -> f64 {
+        depth.max(1) as f64 * 8.0 * Self::EPS
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const ELEM: usize = 8;
+    const DTYPE: DType = DType::F64;
+    const NR: usize = super::microkernel::NR;
+    const NR_WIDE: usize = super::microkernel::NR_WIDE;
+    const EPS: f64 = f64::EPSILON;
+
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const ELEM: usize = 4;
+    const DTYPE: DType = DType::F32;
+    // half-size elements → twice the vector lanes → twice the panel width
+    const NR: usize = 2 * super::microkernel::NR;
+    const NR_WIDE: usize = 2 * super::microkernel::NR_WIDE;
+    const EPS: f64 = f32::EPSILON as f64;
+
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_doubles_register_tile_width() {
+        assert_eq!(MicroShape::Mr8Nr4.nr_for(DType::F64), 4);
+        assert_eq!(MicroShape::Mr8Nr6.nr_for(DType::F64), 6);
+        assert_eq!(MicroShape::Mr8Nr4.nr_for(DType::F32), 8);
+        assert_eq!(MicroShape::Mr8Nr6.nr_for(DType::F32), 12);
+        assert_eq!(<f32 as Scalar>::nr(MicroShape::Mr8Nr4), 8);
+        assert_eq!(<f64 as Scalar>::nr(MicroShape::Mr8Nr6), 6);
+        assert_eq!(MicroShape::Mr8Nr6.label_for(DType::F32), "8x12");
+        assert_eq!(MicroShape::Mr8Nr4.label_for(DType::F64), "8x4");
+    }
+
+    #[test]
+    fn dtype_roundtrips() {
+        for d in [DType::F32, DType::F64] {
+            assert_eq!(DType::from_elem(d.elem()), Some(d));
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_elem(2), None);
+        assert_eq!(DType::parse("f16"), None);
+        assert_ne!(DType::F32.index(), DType::F64.index());
+    }
+
+    #[test]
+    fn ulp_tol_scales_with_depth_and_precision() {
+        assert!(f32::ulp_tol(100) > f64::ulp_tol(100));
+        assert!(f32::ulp_tol(200) > f32::ulp_tol(10));
+        assert!(f64::ulp_tol(0) > 0.0);
+    }
+}

@@ -2,9 +2,12 @@
 //! metrics.
 //!
 //! This is the request path of the system: clients submit matmul jobs;
-//! the planner (paper's §4.0.4 selector, cached per shape) resolves each
-//! shape to an AOT kernel variant; the service batches jobs and dispatches
-//! them through PJRT. Python never runs here.
+//! the planner (paper's §4.0.4 selector, cached per shape and dtype)
+//! resolves each shape to an AOT kernel variant or the in-process packed
+//! engine; the service batches jobs and dispatches them through PJRT
+//! ([`service::Backend::Pjrt`]) or serves f32 directly through the
+//! packed macro-kernel ([`service::Backend::Native`]). Python never runs
+//! here.
 
 pub mod metrics;
 pub mod planner;
@@ -12,4 +15,4 @@ pub mod service;
 
 pub use metrics::Metrics;
 pub use planner::{Plan, Planner};
-pub use service::{Service, ServiceConfig};
+pub use service::{Backend, Service, ServiceConfig};

@@ -4,17 +4,20 @@
 //! lattice rule + model-driven search) against the configured cache spec,
 //! derives a preferred tile shape, and resolves the nearest AOT kernel
 //! variant from the [`Registry`]. Since the `RunPlan` refactor the
-//! planner is kernel-agnostic: [`Planner::plan_kernel`] plans **any**
-//! registered Table-1 kernel (selection, GEMM normal form, two-level
-//! macro shape, register-tile width); [`Planner::plan`] keeps the
-//! matmul serving entry point (model evaluation on a size-capped
-//! instance with the true leading dimensions). Plans are cached per
-//! shape — selection runs once, off the hot path.
+//! planner is kernel-agnostic, and since the `Scalar` refactor it is
+//! dtype-aware: [`Planner::plan_kernel`] plans **any** registered Table-1
+//! kernel at the kernel's own element size (selection, GEMM normal form,
+//! two-level macro shape, per-dtype register-tile width);
+//! [`Planner::plan`] keeps the matmul serving entry point (model
+//! evaluation on a size-capped instance with the true leading dimensions,
+//! at the requested [`DType`] — the PJRT serve path is f32, so its plans
+//! legitimately get 2× the elements per line). Plans are cached per
+//! (shape, dtype) — selection runs once, off the hot path.
 
 use std::collections::HashMap;
 
 use crate::cache::CacheSpec;
-use crate::codegen::{GemmForm, MicroShape};
+use crate::codegen::{DType, GemmForm, MicroShape};
 use crate::domain::{ops, Kernel};
 use crate::runtime::Registry;
 use crate::tiling;
@@ -24,6 +27,8 @@ use crate::tiling;
 pub struct Plan {
     /// Kernel name (`matmul`, `convolution`, `kronecker`, …).
     pub kernel: String,
+    /// Element type the plan was modelled (and will execute) at.
+    pub dtype: DType,
     /// GEMM-normal dimensions of the planned shape (rows, reduction,
     /// columns — for matmul exactly `m`, `k`, `n`).
     pub m: usize,
@@ -34,10 +39,12 @@ pub struct Plan {
     pub model_tile: (usize, usize, usize),
     /// Two-level macro/micro blocking: the L1 tile above driven inside
     /// L2/L3-sized `mc×kc×nc` macro blocks, selected per level
-    /// ([`tiling::level_plan`] against the Haswell L2 + L3-slice specs).
+    /// ([`tiling::level_plan`] against the Haswell L2 + L3-slice specs,
+    /// at the plan's element size).
     pub level: tiling::LevelPlan,
-    /// Register-tile shape the engine dispatches (the startup autotuner's
-    /// winner when the registry recorded one; 8×4 otherwise).
+    /// Register-tile width class the engine dispatches (the dtype's
+    /// startup-autotune winner when the registry recorded one; narrow
+    /// otherwise). Resolves to 8×4/8×6 at f64, 8×8/8×12 at f32.
     pub micro: MicroShape,
     /// Name of the AOT artifact chosen to realize it (matmul shapes), or
     /// the in-process packed engine for other kernels.
@@ -49,13 +56,14 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// One-line report of the plan including the multi-level block shape
-    /// and the register-tile width.
+    /// One-line report of the plan including the dtype, the multi-level
+    /// block shape and the per-dtype register-tile width.
     pub fn describe(&self) -> String {
         format!(
-            "{} [{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, micro {}, artifact {}",
+            "{} [{}/{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, micro {}, artifact {}",
             self.plan_name,
             self.kernel,
+            self.dtype.name(),
             self.m,
             self.k,
             self.n,
@@ -63,7 +71,7 @@ impl Plan {
             self.level.mc,
             self.level.kc,
             self.level.nc,
-            self.micro.name(),
+            self.micro.label_for(self.dtype),
             self.artifact
         )
     }
@@ -94,15 +102,23 @@ impl Planner {
         &self.spec
     }
 
-    /// Plan for an `m×k×n` matmul, resolving against `registry`. Model
-    /// selection runs on a proportional small instance when the real size
-    /// would make even the sampled model slow; the conflict lattice
-    /// depends on the leading dimension, which is preserved.
-    pub fn plan(&mut self, registry: &Registry, m: usize, k: usize, n: usize) -> Plan {
+    /// Plan for an `m×k×n` matmul at `dtype`, resolving against
+    /// `registry`. Model selection runs on a proportional small instance
+    /// when the real size would make even the sampled model slow; the
+    /// conflict lattice depends on the leading dimension *and* the
+    /// element size, both of which are preserved.
+    pub fn plan(
+        &mut self,
+        registry: &Registry,
+        m: usize,
+        k: usize,
+        n: usize,
+        dtype: DType,
+    ) -> Plan {
         // distinct cache namespace from `plan_kernel` — the two entry
         // points resolve different artifacts for the same matmul extents
         let key = (
-            "matmul#aot".to_string(),
+            format!("matmul#aot#{}", dtype.name()),
             vec![m as i64, n as i64, k as i64],
         );
         if let Some(p) = self.cache.get(&key) {
@@ -116,10 +132,10 @@ impl Planner {
             m as i64, // preserve true leading dims → true conflict lattice
             m as i64,
             k as i64,
-            8,
+            dtype.elem(),
             0,
         );
-        let mut plan = self.plan_shape(registry, &kernel, (m, n, k));
+        let mut plan = self.plan_shape(registry, &kernel, (m, n, k), dtype);
         // resolve the AOT artifact against the *true* shape
         plan.artifact = registry
             .closest_variant(m, k, n, plan.model_tile)
@@ -129,13 +145,19 @@ impl Planner {
         plan
     }
 
-    /// Plan any registered Table-1 kernel: selector + GEMM normal form +
-    /// per-level macro shape, executed by the in-process packed engine.
-    /// Model selection runs on a size-capped instance of the same op when
-    /// the real domain would make even the sampled model slow (the same
-    /// guard `plan` applies to matmul).
+    /// Plan any registered Table-1 kernel at the kernel's own element
+    /// size: selector + GEMM normal form + per-level macro shape,
+    /// executed by the in-process packed engine. Model selection runs on
+    /// a size-capped instance of the same op when the real domain would
+    /// make even the sampled model slow (the same guard `plan` applies to
+    /// matmul).
     pub fn plan_kernel(&mut self, registry: &Registry, kernel: &Kernel) -> Plan {
-        let key = (kernel.name().to_string(), kernel.extents().to_vec());
+        let elem = kernel.operand(0).table.elem();
+        let dtype = DType::from_elem(elem)
+            .unwrap_or_else(|| panic!("no supported dtype for {elem}-byte elements"));
+        let mut key_dims = kernel.extents().to_vec();
+        key_dims.push(elem as i64); // f32/f64 instances are distinct plans
+        let key = (kernel.name().to_string(), key_dims);
         if let Some(p) = self.cache.get(&key) {
             return p.clone();
         }
@@ -144,7 +166,7 @@ impl Planner {
             .unwrap_or_else(|| (kernel.domain_size().max(1) as usize, 1, 1));
         let shrunk = shrink_kernel(kernel);
         let model_kernel = shrunk.as_ref().unwrap_or(kernel);
-        let mut plan = self.plan_shape(registry, model_kernel, dims);
+        let mut plan = self.plan_shape(registry, model_kernel, dims, dtype);
         plan.kernel = kernel.name().to_string();
         plan.artifact = format!("<packed-engine {}>", kernel.name());
         self.cache.insert(key, plan.clone());
@@ -153,12 +175,14 @@ impl Planner {
 
     /// Shared planning core: run the selector on `kernel`, lift the
     /// winning tile into GEMM-normal shape `(m, n, k)`, and derive the
-    /// two-level macro shape against the true extents.
+    /// two-level macro shape against the true extents (at the model
+    /// kernel's element size, which matches `dtype`).
     fn plan_shape(
         &self,
         registry: &Registry,
         kernel: &Kernel,
         (m, n, k): (usize, usize, usize),
+        dtype: DType,
     ) -> Plan {
         let ranked = tiling::select(kernel, &self.spec, self.sample_classes);
         let best = ranked.first();
@@ -197,7 +221,8 @@ impl Planner {
         };
         // per-level selection: run the selector against the L2 spec to
         // seed the macro block, nc from the L3 slice — against the *true*
-        // (m, n, k), not the shrunk model instance
+        // (m, n, k), not the shrunk model instance; the element size
+        // flows from the kernel's own tables
         let level = tiling::level_plan(
             kernel,
             (m, n, k),
@@ -208,12 +233,13 @@ impl Planner {
         );
         Plan {
             kernel: kernel.name().to_string(),
+            dtype,
             m,
             k,
             n,
             model_tile: tile,
             level,
-            micro: registry.micro_shape().unwrap_or(MicroShape::Mr8Nr4),
+            micro: registry.micro_shape_for(dtype).unwrap_or(MicroShape::Mr8Nr4),
             artifact: String::new(),
             predicted_misses: predicted,
             plan_name: name,
@@ -235,23 +261,25 @@ fn shrink(m: usize, k: usize, n: usize) -> (usize, usize, usize) {
 /// Size-capped model instance of a registered Table-1 kernel, or `None`
 /// when the real domain is already small enough for the sampled model.
 /// Matmul preserves the true leading dimensions (the conflict lattice
-/// depends on them); for the other ops the capped instance's layout is a
-/// proportional approximation.
+/// depends on them); every op preserves the source kernel's element size
+/// (the lattice period depends on it too); for the non-matmul ops the
+/// capped instance's layout is a proportional approximation.
 fn shrink_kernel(kernel: &Kernel) -> Option<Kernel> {
     const CAP: i64 = 1 << 18;
     if kernel.domain_size() <= CAP {
         return None;
     }
     let e = kernel.extents();
+    let elem = kernel.operand(0).table.elem();
     match kernel.name() {
-        "convolution" => Some(ops::convolution(e[0].min(1 << 16), 8, 0)),
-        "scalar_product" => Some(ops::scalar_product(e[0].min(1 << 16), 8, 0)),
+        "convolution" => Some(ops::convolution(e[0].min(1 << 16), elem, 0)),
+        "scalar_product" => Some(ops::scalar_product(e[0].min(1 << 16), elem, 0)),
         "kronecker" => Some(ops::kronecker(
             e[0].min(16),
             e[1].min(16),
             e[2].min(24),
             e[3].min(24),
-            8,
+            elem,
             0,
         )),
         // matmul extents are (m, n, k): shrink like `plan`, true lds
@@ -262,7 +290,7 @@ fn shrink_kernel(kernel: &Kernel) -> Option<Kernel> {
             e[0],
             e[0],
             e[2],
-            8,
+            elem,
             0,
         )),
         _ => None,
@@ -286,9 +314,9 @@ mod tests {
         }
         let reg = Registry::load(&artifacts_dir()).unwrap();
         let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
-        let p1 = planner.plan(&reg, 256, 256, 256);
+        let p1 = planner.plan(&reg, 256, 256, 256, DType::F32);
         assert!(p1.artifact.starts_with("matmul_256x256x256"));
-        let p2 = planner.plan(&reg, 256, 256, 256);
+        let p2 = planner.plan(&reg, 256, 256, 256, DType::F32);
         assert_eq!(p1.artifact, p2.artifact);
         assert_eq!(planner.cached_plans(), 1);
     }
@@ -297,10 +325,11 @@ mod tests {
     fn planner_works_without_artifacts() {
         let reg = Registry::default();
         let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
-        let p = planner.plan(&reg, 64, 64, 64);
+        let p = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert!(p.artifact.contains("no artifact"));
         assert!(p.model_tile.0 > 0);
         assert_eq!(p.kernel, "matmul");
+        assert_eq!(p.dtype, DType::F64);
     }
 
     #[test]
@@ -308,7 +337,7 @@ mod tests {
         use crate::codegen::{MR, NR};
         let reg = Registry::default();
         let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
-        let p = planner.plan(&reg, 512, 512, 512);
+        let p = planner.plan(&reg, 512, 512, 512, DType::F64);
         assert_eq!(p.level.mc % MR, 0);
         assert_eq!(p.level.nc % NR, 0);
         assert!(p.level.kc >= 1 && p.level.kc <= 512);
@@ -317,6 +346,7 @@ mod tests {
         let d = p.describe();
         assert!(d.contains("macro mc="), "{d}");
         assert!(d.contains("micro 8x"), "{d}");
+        assert!(d.contains("/f64"), "{d}");
     }
 
     #[test]
@@ -349,7 +379,7 @@ mod tests {
         let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
         let generic = planner.plan_kernel(&reg, &crate::domain::ops::matmul(64, 64, 64, 8, 0));
         assert!(generic.artifact.contains("packed-engine"));
-        let served = planner.plan(&reg, 64, 64, 64);
+        let served = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert!(
             served.artifact.contains("no artifact") || !served.artifact.contains("packed-engine"),
             "plan() returned plan_kernel()'s cached artifact: {}",
@@ -376,8 +406,49 @@ mod tests {
         let mut reg = Registry::default();
         reg.set_micro_shape(MicroShape::Mr8Nr6);
         let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
-        let p = planner.plan(&reg, 64, 64, 64);
+        let p = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert_eq!(p.micro, MicroShape::Mr8Nr6);
         assert!(p.describe().contains("micro 8x6"));
+    }
+
+    #[test]
+    fn f32_plan_is_wider_and_reports_its_own_micro_shape() {
+        // the acceptance invariant: for the same 512³ matmul, the f32
+        // plan must select a strictly larger macro footprint than the f64
+        // plan (element size reaches the selector), carry dtype F32, and
+        // report the *f32* autotune winner (8×12, not 8×6)
+        let mut reg = Registry::default();
+        reg.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr4);
+        reg.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p64 = planner.plan_kernel(&reg, &ops::matmul(512, 512, 512, 8, 0));
+        let p32 = planner.plan_kernel(&reg, &ops::matmul(512, 512, 512, 4, 0));
+        assert_eq!(p32.dtype, DType::F32);
+        assert_eq!(p64.dtype, DType::F64);
+        assert_eq!(planner.cached_plans(), 2, "dtypes must not share a slot");
+        assert!(
+            p32.level.mc * p32.level.kc > p64.level.mc * p64.level.kc,
+            "f32 macro footprint {:?} not wider than f64 {:?}",
+            p32.level,
+            p64.level
+        );
+        assert!(p32.describe().contains("/f32"), "{}", p32.describe());
+        assert!(
+            p32.describe().contains("micro 8x12"),
+            "f32 wide class must report 8x12: {}",
+            p32.describe()
+        );
+        assert!(p64.describe().contains("micro 8x4"), "{}", p64.describe());
+    }
+
+    #[test]
+    fn plan_dtype_namespaces_do_not_collide() {
+        let reg = Registry::default();
+        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let a = planner.plan(&reg, 64, 64, 64, DType::F64);
+        let b = planner.plan(&reg, 64, 64, 64, DType::F32);
+        assert_eq!(planner.cached_plans(), 2);
+        assert_eq!(a.dtype, DType::F64);
+        assert_eq!(b.dtype, DType::F32);
     }
 }

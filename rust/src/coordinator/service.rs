@@ -1,12 +1,26 @@
-//! The serving coordinator: job queue → dynamic batcher → PJRT dispatch.
+//! The serving coordinator: job queue → dynamic batcher → backend
+//! dispatch.
 //!
 //! One [`Service`] hosts one weight matrix `y` (k×n) and serves matmul
 //! jobs `x·y` for m×k left operands, the way an inference router serves a
 //! fixed model. Jobs are accumulated for up to a batching window and
-//! dispatched through the vmapped batched artifact when possible (padding
-//! partial batches with zeros), falling back to the single-shape kernel.
-//! Python is never involved: the executables were AOT-compiled by
-//! `make artifacts`.
+//! dispatched through one of two backends:
+//!
+//! * [`Backend::Pjrt`] — the AOT-compiled JAX/Pallas artifacts via PJRT
+//!   (vmapped batched variant when shipped, padding partial batches with
+//!   zeros; single-shape kernel otherwise). Python is never involved: the
+//!   executables were AOT-compiled by `make artifacts`.
+//! * [`Backend::Native`] — the in-process **f32 packed macro-kernel**:
+//!   the engine that serves every Table-1 kernel now serves the f32
+//!   request path directly, with a plan whose element size, macro
+//!   footprint and register-tile width were all selected *for f32*
+//!   ([`Planner::plan_kernel`] on a 4-byte-element kernel). Needs no
+//!   artifacts, and doubles as the differential baseline against the
+//!   PJRT path.
+//!
+//! Either way the worker thread runs a one-shot startup autotune per
+//! dtype and records the winners in the registry, so plans report the
+//! register-tile shape the engine actually dispatches.
 
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -15,11 +29,27 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::CacheSpec;
-use crate::codegen::autotune;
+use crate::codegen::executor::{pack_row_slices, run_macro_prepacked};
+use crate::codegen::{
+    autotune, kernel_views, DType, GemmForm, KernelBuffers, MicroShape, PackedCols, PackedRows,
+    RunPlan,
+};
+use crate::domain::ops;
 use crate::runtime::{ArtifactKind, Engine, Registry};
+use crate::tiling::LevelPlan;
 
 use super::metrics::Metrics;
 use super::planner::{Plan, Planner};
+
+/// Which execution engine serves the jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// AOT PJRT artifacts (requires `make artifacts`).
+    #[default]
+    Pjrt,
+    /// The in-process f32 packed macro-kernel (no artifacts needed).
+    Native,
+}
 
 struct Job {
     x: Vec<f32>,
@@ -48,9 +78,10 @@ impl Service {
         (self.m, self.n)
     }
 
-    /// The plan chosen for the served shape — carries the two-level
-    /// `mc×kc×nc` macro-block decision and the autotuned register-tile
-    /// width alongside the L1 tile (report with [`Plan::describe`]).
+    /// The plan chosen for the served shape — carries the dtype, the
+    /// two-level `mc×kc×nc` macro-block decision and the per-dtype
+    /// autotuned register-tile width alongside the L1 tile (report with
+    /// [`Plan::describe`]).
     pub fn plan(&self) -> &Plan {
         &self.plan
     }
@@ -66,6 +97,8 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     /// Cache spec the planner models (tile selection).
     pub spec: CacheSpec,
+    /// Execution engine: PJRT artifacts or the native packed kernel.
+    pub backend: Backend,
 }
 
 impl Default for ServiceConfig {
@@ -76,56 +109,98 @@ impl Default for ServiceConfig {
             n: 128,
             batch_window: Duration::from_millis(2),
             spec: CacheSpec::HASWELL_L1D,
+            backend: Backend::Pjrt,
         }
     }
 }
 
 impl Service {
-    /// Start the coordinator: loads the registry, plans the shape, warms
+    /// Start the coordinator: loads the registry (optional for the
+    /// native backend), plans the shape at the serving dtype (f32), warms
     /// the chosen executables, spawns the worker thread that owns the
-    /// PJRT engine.
+    /// engine.
     pub fn start(artifact_dir: &Path, y: Vec<f32>, cfg: ServiceConfig) -> Result<Service> {
-        let mut registry = Registry::load(artifact_dir)?;
-        // one-shot startup autotune (ROADMAP): record the winning
-        // register-tile shape; 8×4 stays the compile-time default
-        registry.set_micro_shape(autotune::calibrate(2_000));
+        let mut registry = match cfg.backend {
+            Backend::Pjrt => Registry::load(artifact_dir)?,
+            // the native engine needs no artifacts; keep whatever loads
+            // so mixed deployments can still resolve PJRT names
+            Backend::Native => Registry::load(artifact_dir).unwrap_or_default(),
+        };
+        // one-shot startup autotune (ROADMAP), per dtype: record each
+        // precision's winning register-tile width class; the narrow shape
+        // stays the compile-time default
+        registry.set_micro_shape_for(DType::F64, autotune::calibrate_dtype::<f64>(2_000));
+        registry.set_micro_shape_for(DType::F32, autotune::calibrate_dtype::<f32>(2_000));
         anyhow::ensure!(
             y.len() == cfg.k * cfg.n,
             "y must be k×n = {}",
             cfg.k * cfg.n
         );
         let mut planner = Planner::new(cfg.spec);
-        let plan = planner.plan(&registry, cfg.m, cfg.k, cfg.n);
-        let single = registry
-            .by_name(&plan.artifact)
-            .with_context(|| format!("planned artifact {} missing", plan.artifact))?
-            .name
-            .clone();
-        // batched variant with the same problem shape, if shipped
-        let batched = registry
-            .artifacts()
-            .iter()
-            .find(|a| {
-                a.kind == ArtifactKind::PallasTiledMatmulBatched
-                    && a.m == cfg.m
-                    && a.k == cfg.k
-                    && a.n == cfg.n
-            })
-            .map(|a| (a.name.clone(), a.batch));
-
         let (tx, rx) = channel::<Msg>();
         let m = cfg.m;
         let k = cfg.k;
         let n = cfg.n;
         let window = cfg.batch_window;
-        let handle = std::thread::spawn(move || {
-            let mut engine = Engine::new(registry).expect("pjrt engine");
-            engine.prepare(&single).expect("prepare single artifact");
-            if let Some((name, _)) = &batched {
-                engine.prepare(name).expect("prepare batched artifact");
+        let (plan, handle) = match cfg.backend {
+            Backend::Pjrt => {
+                // the PJRT artifacts compute in f32 — plan at f32 so the
+                // model sees the true elements-per-line
+                let plan = planner.plan(&registry, m, k, n, DType::F32);
+                let single = registry
+                    .by_name(&plan.artifact)
+                    .with_context(|| format!("planned artifact {} missing", plan.artifact))?
+                    .name
+                    .clone();
+                // batched variant with the same problem shape, if shipped
+                let batched = registry
+                    .artifacts()
+                    .iter()
+                    .find(|a| {
+                        a.kind == ArtifactKind::PallasTiledMatmulBatched
+                            && a.m == m
+                            && a.k == k
+                            && a.n == n
+                    })
+                    .map(|a| (a.name.clone(), a.batch));
+                let handle = std::thread::spawn(move || {
+                    let mut engine = Engine::new(registry).expect("pjrt engine");
+                    engine.prepare(&single).expect("prepare single artifact");
+                    if let Some((name, _)) = &batched {
+                        engine.prepare(name).expect("prepare batched artifact");
+                    }
+                    let backend = WorkerBackend::Pjrt {
+                        engine,
+                        single,
+                        batched,
+                        y,
+                    };
+                    worker_loop(backend, rx, m, k, n, window)
+                });
+                (plan, handle)
             }
-            worker_loop(&mut engine, rx, y, m, k, n, single, batched, window)
-        });
+            Backend::Native => {
+                // plan the kernel the native engine actually executes: the
+                // f32 (4-byte-element) column-major formulation below — so
+                // the macro shape and micro width are selected for f32
+                let mut plan =
+                    planner.plan_kernel(&registry, &NativeMatmul::kernel_for(m, k, n));
+                // the executed kernel is the transpose lowering (GEMM rows
+                // = serve columns), and the plan's m/n/tile/macro fields
+                // describe *that* kernel consistently; surface the serve
+                // shape in the name so plan lines are readable next to the
+                // PJRT backend's
+                plan.plan_name =
+                    format!("{} (serving {m}x{k}x{n} via transpose)", plan.plan_name);
+                let level = plan.level;
+                let micro = plan.micro;
+                let handle = std::thread::spawn(move || {
+                    let native = NativeMatmul::new(m, k, n, &y, level, micro);
+                    worker_loop(WorkerBackend::Native(Box::new(native)), rx, m, k, n, window)
+                });
+                (plan, handle)
+            }
+        };
         Ok(Service {
             tx,
             handle,
@@ -157,16 +232,124 @@ impl Service {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// The f32 packed-macro-kernel serve engine: one resident
+/// [`KernelBuffers<f32>`] arena holding `y` — whose row panels really
+/// are packed once, at startup ([`pack_row_slices`]) — and the per-job
+/// `x`, driven by [`run_macro_prepacked`] with the plan's macro shape
+/// and the f32 autotune winner. Per job only the `x` column bands are
+/// packed; the weight panels are reused as-is.
+///
+/// Row-major serving lowers onto the column-major engine via the
+/// transpose identity `(x·y)ᵀ = yᵀ·xᵀ`: the kernel computes the
+/// column-major product `A(n×m) = B(n×k)·C(k×m)`, and the row-major
+/// buffers are *bit-identical* reinterpretations — `y` row-major k×n is
+/// exactly `B = yᵀ` column-major n×k, `x` row-major m×k is exactly
+/// `C = xᵀ` column-major k×m, and the output table read in layout order
+/// is exactly `x·y` row-major m×n. No transposition copies anywhere.
+struct NativeMatmul {
+    plan: RunPlan,
+    level: LevelPlan,
+    micro: MicroShape,
+    bufs: KernelBuffers<f32>,
+    /// `y`'s row panels, one [`PackedRows`] per reduction slice — packed
+    /// once at startup, shared by every job (`y` never changes).
+    rows: Vec<PackedRows<f32>>,
+    cols: PackedCols<f32>,
+}
+
+impl NativeMatmul {
+    /// The f32 kernel the native backend executes for an m×k×n serve
+    /// shape (see the type docs for the transpose lowering).
+    fn kernel_for(m: usize, k: usize, n: usize) -> crate::domain::Kernel {
+        ops::matmul(n as i64, k as i64, m as i64, DType::F32.elem(), 0)
+    }
+
+    fn new(
+        m: usize,
+        k: usize,
+        n: usize,
+        y: &[f32],
+        level: LevelPlan,
+        micro: MicroShape,
+    ) -> NativeMatmul {
+        let kernel = NativeMatmul::kernel_for(m, k, n);
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+        // operand 1 is B = yᵀ (n×k column-major) — the same linear bytes
+        // as y (k×n row-major)
+        bufs.operand_mut(1).copy_from_slice(y);
+        let gf = GemmForm::of(&kernel).expect("matmul is GEMM-form");
+        let lo = vec![0i64; kernel.n_free()];
+        let plan = gf.plan_box(&kernel_views(&kernel), &lo, kernel.extents());
+        // y is resident for the service's lifetime: pack its row panels
+        // exactly once, here
+        let rows = pack_row_slices(&bufs.arena, &plan, &level);
+        NativeMatmul {
+            plan,
+            level,
+            micro,
+            bufs,
+            rows,
+            cols: PackedCols::new(),
+        }
+    }
+
+    /// Serve one job: load `x`, zero the output, run the packed
+    /// macro-kernel over the pre-packed weight panels, read the output in
+    /// row-major order.
+    fn run(&mut self, x: &[f32]) -> Vec<f32> {
+        self.bufs.reset_output();
+        self.bufs.operand_mut(2).copy_from_slice(x);
+        run_macro_prepacked(
+            &mut self.bufs.arena,
+            &self.plan,
+            &self.level,
+            self.micro,
+            &self.rows,
+            &mut self.cols,
+        );
+        self.bufs.output()
+    }
+}
+
+enum WorkerBackend {
+    Pjrt {
+        engine: Engine,
+        single: String,
+        batched: Option<(String, usize)>,
+        y: Vec<f32>,
+    },
+    Native(Box<NativeMatmul>),
+}
+
+impl WorkerBackend {
+    /// How many jobs one dispatch can carry.
+    fn batch_cap(&self) -> usize {
+        match self {
+            WorkerBackend::Pjrt {
+                batched: Some((_, b)),
+                ..
+            } => *b,
+            _ => 1,
+        }
+    }
+
+    /// Run a single job.
+    fn run_one(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            WorkerBackend::Pjrt {
+                engine, single, y, ..
+            } => engine.run_matmul(single, x, y),
+            WorkerBackend::Native(native) => Ok(native.run(x)),
+        }
+    }
+}
+
 fn worker_loop(
-    engine: &mut Engine,
+    mut backend: WorkerBackend,
     rx: Receiver<Msg>,
-    y: Vec<f32>,
     m: usize,
     k: usize,
     n: usize,
-    single: String,
-    batched: Option<(String, usize)>,
     window: Duration,
 ) -> (Metrics, Duration) {
     let started = Instant::now();
@@ -177,7 +360,7 @@ fn worker_loop(
 
     while !stopping || !pending.is_empty() {
         // fill the batch within the window
-        let cap = batched.as_ref().map(|(_, b)| *b).unwrap_or(1);
+        let cap = backend.batch_cap();
         let deadline = Instant::now() + window;
         while !stopping && pending.len() < cap {
             let timeout = deadline.saturating_duration_since(Instant::now());
@@ -208,14 +391,28 @@ fn worker_loop(
 
         metrics.record_batch();
         let batch = std::mem::take(&mut pending);
-        match (&batched, batch.len()) {
-            (Some((name, cap)), len) if len > 1 => {
+        let use_batched = batch.len() > 1
+            && matches!(
+                &backend,
+                WorkerBackend::Pjrt {
+                    batched: Some(_),
+                    ..
+                }
+            );
+        if use_batched {
+            if let WorkerBackend::Pjrt {
+                engine,
+                batched: Some((name, cap)),
+                y,
+                ..
+            } = &mut backend
+            {
                 // pad to the full batch with zeros
-                let mut xs = vec![0f32; cap * m * k];
+                let mut xs = vec![0f32; *cap * m * k];
                 for (i, j) in batch.iter().enumerate() {
                     xs[i * m * k..(i + 1) * m * k].copy_from_slice(&j.x);
                 }
-                match engine.run_matmul(name, &xs, &y) {
+                match engine.run_matmul(name, &xs, y) {
                     Ok(out) => {
                         for (i, j) in batch.into_iter().enumerate() {
                             let slice = out[i * m * n..(i + 1) * m * n].to_vec();
@@ -230,12 +427,11 @@ fn worker_loop(
                     }
                 }
             }
-            _ => {
-                for j in batch {
-                    let r = engine.run_matmul(&single, &j.x, &y);
-                    metrics.record_job(j.submitted.elapsed(), flops_per_job);
-                    let _ = j.resp.send(r);
-                }
+        } else {
+            for j in batch {
+                let r = backend.run_one(&j.x);
+                metrics.record_job(j.submitted.elapsed(), flops_per_job);
+                let _ = j.resp.send(r);
             }
         }
     }
@@ -264,6 +460,16 @@ mod tests {
         out
     }
 
+    fn xorshift_f32(seed: u64) -> impl FnMut() -> f32 {
+        let mut s = seed | 1;
+        move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s % 1000) as f32 / 1000.0) - 0.5
+        }
+    }
+
     #[test]
     fn service_serves_correct_results() {
         if !artifacts_dir().join("manifest.tsv").exists() {
@@ -271,13 +477,7 @@ mod tests {
             return;
         }
         let (m, k, n) = (128usize, 128, 128);
-        let mut s = 7u64;
-        let mut rnd = move || {
-            s ^= s << 13;
-            s ^= s >> 7;
-            s ^= s << 17;
-            ((s % 1000) as f32 / 1000.0) - 0.5
-        };
+        let mut rnd = xorshift_f32(7);
         let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
         let svc = Service::start(
             &artifacts_dir(),
@@ -288,6 +488,7 @@ mod tests {
                 n,
                 batch_window: Duration::from_millis(1),
                 spec: CacheSpec::HASWELL_L1D,
+                backend: Backend::Pjrt,
             },
         )
         .unwrap();
@@ -311,5 +512,131 @@ mod tests {
         assert_eq!(metrics.jobs, 5);
         assert!(metrics.batches >= 1);
         println!("serve test: {}", metrics.report(wall));
+    }
+
+    #[test]
+    fn native_backend_serves_f32_matmul_without_artifacts() {
+        // the acceptance path: f32 matmul jobs through the packed
+        // macro-kernel, no PJRT artifacts anywhere; non-multiple shape so
+        // edge register blocks are exercised on the serve path
+        let (m, k, n) = (45usize, 33, 52);
+        let mut rnd = xorshift_f32(0xA11CE);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("definitely-no-artifacts-here"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(1),
+                spec: CacheSpec::HASWELL_L1D,
+                backend: Backend::Native,
+            },
+        )
+        .expect("native service must start without artifacts");
+        let plan = svc.plan().clone();
+        assert_eq!(plan.dtype, DType::F32, "{}", plan.describe());
+        assert!(plan.artifact.contains("packed-engine"), "{}", plan.describe());
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = rowmajor_matmul(m, k, n, x, &y);
+            assert_eq!(got.len(), want.len());
+            let maxd = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(maxd < 1e-3, "native serve result off by {maxd}");
+        }
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 4);
+    }
+
+    #[test]
+    fn native_backend_matches_pjrt_differentially() {
+        // when artifacts are shipped, the two backends must agree on the
+        // existing batching workload — the native engine is the PJRT
+        // path's differential baseline and vice versa
+        if !artifacts_dir().join("manifest.tsv").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let (m, k, n) = (128usize, 128, 128);
+        let mut rnd = xorshift_f32(0xD1FF);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let mut outs: Vec<Vec<Vec<f32>>> = Vec::new();
+        for backend in [Backend::Pjrt, Backend::Native] {
+            let svc = Service::start(
+                &artifacts_dir(),
+                y.clone(),
+                ServiceConfig {
+                    m,
+                    k,
+                    n,
+                    batch_window: Duration::from_millis(1),
+                    spec: CacheSpec::HASWELL_L1D,
+                    backend,
+                },
+            )
+            .unwrap();
+            let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+            outs.push(rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect());
+            svc.stop();
+        }
+        for (job, (a, b)) in outs[0].iter().zip(&outs[1]).enumerate() {
+            let maxd = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0f32, f32::max);
+            assert!(maxd < 1e-2, "job {job}: backends disagree by {maxd}");
+        }
+    }
+
+    #[test]
+    fn native_backend_batches_under_load() {
+        // a wider window than the submit cadence: several jobs coalesce
+        // into batches and every result stays correct
+        let (m, k, n) = (32usize, 24, 40);
+        let mut rnd = xorshift_f32(0xBA7C4);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(5),
+                spec: CacheSpec::HASWELL_L1D,
+                backend: Backend::Native,
+            },
+        )
+        .unwrap();
+        let xs: Vec<Vec<f32>> = (0..8)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = rowmajor_matmul(m, k, n, x, &y);
+            let maxd = got
+                .iter()
+                .zip(&want)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0f32, f32::max);
+            assert!(maxd < 1e-3, "batched native result off by {maxd}");
+        }
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 8);
+        assert!(metrics.batches >= 1);
     }
 }

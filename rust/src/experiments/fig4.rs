@@ -85,7 +85,7 @@ pub fn run_size(n: i64, reps: usize) -> Vec<Fig4Row> {
     for analog in CompilerAnalog::ALL {
         let sched = analog.schedule(&kernel);
         let misses = sim_misses(&kernel, sched.as_scanner());
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let (wall, _) = time_reps(reps, || {
             bufs.reset_output();
             analog.execute(&mut bufs, &kernel);
@@ -109,7 +109,7 @@ pub fn run_size(n: i64, reps: usize) -> Vec<Fig4Row> {
     ] {
         let misses = sim_misses(&kernel, &plan);
         let exec = TiledExecutor::new(plan);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let (wall, _) = time_reps(reps, || {
             bufs.reset_output();
             exec.run(&mut bufs, &kernel);
@@ -139,7 +139,7 @@ pub fn run_rect_vs_lattice(n: i64, reps: usize) -> Vec<Fig4Row> {
     for (name, plan) in [(rect_name, rect_plan), ("lattice(K-1)".into(), lattice_plan)] {
         let misses = sim_misses(&kernel, &plan);
         let exec = TiledExecutor::new(plan);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let (wall, _) = time_reps(reps, || {
             bufs.reset_output();
             exec.run(&mut bufs, &kernel);
@@ -216,7 +216,7 @@ mod tests {
         let kernel = ops::matmul(n, n, n, 8, 0);
         let plan = lattice_plan_for(n, &CacheSpec::HASWELL_L1D);
         let exec = TiledExecutor::new(plan);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, &kernel);
         assert!(crate::codegen::max_abs_diff(&want, &bufs.output()) < 1e-9);

@@ -97,12 +97,12 @@ pub fn run(n: i64, threads_list: &[usize], reps: usize) -> Vec<Fig6Row> {
     let mut base_graphite = Duration::ZERO;
     let mut rows = Vec::new();
     for &t in threads_list {
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let (w_ours, _) = time_reps(reps, || {
             bufs.reset_output();
             run_parallel(&mut bufs, &kernel, &ours, t, 1);
         });
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let (w_graphite, _) = time_reps(reps, || {
             bufs.reset_output();
             run_parallel(&mut bufs, &kernel, &graphite, t, 1);
@@ -147,7 +147,7 @@ mod tests {
         let n = 64i64;
         let kernel = ops::matmul(n, n, n, 8, 0);
         for sched in [ours_schedule(n), graphite_schedule(n)] {
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
             let want = bufs.reference();
             run_parallel(&mut bufs, &kernel, &sched, 4, 1);
             assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);

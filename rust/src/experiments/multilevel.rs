@@ -78,7 +78,10 @@ pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
 /// line-aligned past the arena), the micro-kernel reads only packed
 /// panels, and each output element is touched once per register block per
 /// reduction slice. Works for any GEMM-form kernel (the trace models the
-/// default 8×4 register tile).
+/// default f64 8×4 register tile; degenerate `m = n = 1` kernels are
+/// traced through the packed formulation even though the real engine now
+/// short-circuits them into the dot microkernel — the trace is an upper
+/// bound there).
 pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
     let views = kernel_views(kernel);
     let gf = GemmForm::of(kernel).expect("GEMM-form kernel");
@@ -211,7 +214,7 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
         for (strategy, scanner) in entries {
             let mut h = Hierarchy::haswell(Policy::Lru);
             trace_pointwise(&kernel, scanner.as_ref(), &mut h);
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
             let t0 = Instant::now();
             run_schedule(&mut bufs, &kernel, scanner.as_ref());
             let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
@@ -229,7 +232,7 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
         let lp = macro_plan_for(&kernel);
         let mut h = Hierarchy::haswell(Policy::Lru);
         trace_macro_kernel(&kernel, &lp, &mut h);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         let gf = GemmForm::of(&kernel).unwrap();
         let rplan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
@@ -239,8 +242,8 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
             &rplan,
             &lp,
             MicroShape::Mr8Nr4,
-            &mut PackedRows::new(),
-            &mut PackedCols::new(),
+            &mut PackedRows::<f64>::new(),
+            &mut PackedCols::<f64>::new(),
         );
         let mops = points as f64 / t0.elapsed().as_secs_f64().max(1e-9) / 1e6;
         assert!(

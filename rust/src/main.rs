@@ -16,13 +16,14 @@ use std::time::{Duration, Instant};
 use latticetile::baseline::CompilerAnalog;
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
-use latticetile::codegen::run_trace_only;
+use latticetile::codegen::{autotune, run_trace_only, DType, Scalar};
 use latticetile::conflict::MissModel;
-use latticetile::coordinator::{Service, ServiceConfig};
+use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::domain::ops;
 use latticetile::experiments::{self, harness::Table};
 use latticetile::runtime::Registry;
 use latticetile::tiling;
+use latticetile::tiling::TiledSchedule;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -51,10 +52,18 @@ fn print_usage() {
 
 USAGE:
   latticetile analyze [--n N | --m M --k K --nn N] [--lda L]
-  latticetile plan    [--n N] [--samples S]
+  latticetile plan    [--n N] [--samples S] [--dtype f32|f64]
   latticetile run     [--n N] [--strategy lattice|rect|O0|O2|O3|graphite|icc|pgi]
+                      [--dtype f32|f64]
   latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy> [--full]
   latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
+                      [--backend pjrt|native]
+
+--dtype selects the element type the model and the packed engine run at
+(f32 halves the element size, so plans get twice the elements per line
+and twice the register-tile width; compiler-analog strategies are
+f64-only). --backend native serves f32 through the in-process packed
+macro-kernel, no AOT artifacts needed.
 
 The cache spec defaults to Intel Haswell L1d (32 KiB, 64 B lines, 8-way)."
     );
@@ -127,18 +136,35 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
+fn parse_dtype(flags: &HashMap<String, String>) -> Option<DType> {
+    match flags.get("dtype") {
+        None => Some(DType::F64),
+        Some(s) => {
+            let d = DType::parse(s);
+            if d.is_none() {
+                eprintln!("--dtype must be f32 or f64 (got {s:?})");
+            }
+            d
+        }
+    }
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let n = geti(flags, "n", 128);
     let samples = geti(flags, "samples", 8) as usize;
+    let Some(dtype) = parse_dtype(flags) else {
+        return 2;
+    };
     let spec = CacheSpec::HASWELL_L1D;
     let cap = 64i64.min(n);
-    let kernel = ops::matmul_padded(cap, cap, cap, n, n, n, 8, 0);
+    let kernel = ops::matmul_padded(cap, cap, cap, n, n, n, dtype.elem(), 0);
     let t0 = Instant::now();
     let ranked = tiling::select(&kernel, &spec, samples);
     println!(
-        "ranked {} candidate plans in {:?} (model sampled on a {cap}³ instance, true lda={n}):\n",
+        "ranked {} candidate plans in {:?} (model sampled on a {cap}³ {} instance, true lda={n}):\n",
         ranked.len(),
-        t0.elapsed()
+        t0.elapsed(),
+        dtype.name(),
     );
     let mut tab = Table::new(&["rank", "plan", "predicted misses", "volume"]);
     for (i, p) in ranked.iter().enumerate() {
@@ -153,7 +179,31 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
         ]);
     }
     tab.print();
+    // the full resolved plan (two-level macro shape + the per-dtype
+    // autotuned register-tile width) through the coordinator's planner
+    let mut reg = Registry::default();
+    reg.set_micro_shape_for(DType::F64, autotune::calibrate_dtype::<f64>(500));
+    reg.set_micro_shape_for(DType::F32, autotune::calibrate_dtype::<f32>(500));
+    let mut planner = Planner::new(spec).with_sample_classes(samples);
+    let full = planner.plan_kernel(&reg, &ops::matmul(n, n, n, dtype.elem(), 0));
+    println!("\nresolved plan: {}", full.describe());
     0
+}
+
+/// Execute `kernel` under `plan` at `T` with the dtype's freshly
+/// calibrated register-tile width; returns the wall time.
+fn timed_packed_run<T: Scalar>(
+    kernel: &latticetile::domain::Kernel,
+    plan: TiledSchedule,
+) -> Duration {
+    // one-shot startup calibration picks the register-tile width the
+    // packed engine dispatches for this dtype (8×4/8×6 at f64,
+    // 8×8/8×12 at f32)
+    let exec = TiledExecutor::new(plan).with_micro_shape(autotune::calibrate_dtype::<T>(500));
+    let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
+    let t0 = Instant::now();
+    exec.run(&mut bufs, kernel);
+    t0.elapsed()
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> i32 {
@@ -162,7 +212,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         .get("strategy")
         .map(|s| s.as_str())
         .unwrap_or("lattice");
-    let kernel = ops::matmul(n, n, n, 8, 0);
+    let Some(dtype) = parse_dtype(flags) else {
+        return 2;
+    };
     let spec = CacheSpec::HASWELL_L1D;
     let flops = 2.0 * (n as f64).powi(3);
 
@@ -175,36 +227,62 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         "pgi" => Some(CompilerAnalog::Pgi),
         _ => None,
     };
+    // compiler analogs model f64 compiler output only: force the
+    // effective dtype so the summary line reports what actually ran
+    let dtype = if analog.is_some() && dtype != DType::F64 {
+        eprintln!("compiler-analog strategies are f64-only; running f64");
+        DType::F64
+    } else {
+        dtype
+    };
 
     let (misses, wall) = match analog {
         Some(a) => {
+            let kernel = ops::matmul(n, n, n, 8, 0);
             let sched = a.schedule(&kernel);
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, sched.as_scanner(), &mut sim);
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
             let t0 = Instant::now();
             a.execute(&mut bufs, &kernel);
             (sim.stats().misses(), t0.elapsed())
         }
         None => {
-            let plan = match strategy {
-                "rect" => experiments::fig4::best_rect_plan_for(n, &spec).1,
-                _ => experiments::fig4::lattice_plan_for(n, &spec),
+            // the kernel carries the element size: f32 instances halve
+            // every byte address, so the simulated misses below reflect
+            // the doubled elements-per-line for free
+            let kernel = ops::matmul(n, n, n, dtype.elem(), 0);
+            let plan = match (strategy, dtype) {
+                ("rect", DType::F64) => experiments::fig4::best_rect_plan_for(n, &spec).1,
+                (_, DType::F64) => experiments::fig4::lattice_plan_for(n, &spec),
+                // f32: select against the f32 kernel's own conflict
+                // lattices on a size-capped model instance
+                _ => {
+                    let cap = 64i64.min(n);
+                    let model = ops::matmul_padded(cap, cap, cap, n, n, n, 4, 0);
+                    let ranked = tiling::select(&model, &spec, 8);
+                    let keep_rect = strategy == "rect";
+                    ranked
+                        .into_iter()
+                        .find(|p| !keep_rect || p.lattice_operand.is_none())
+                        .map(|p| p.schedule)
+                        .unwrap_or_else(|| {
+                            TiledSchedule::new(tiling::TileBasis::rect(&[32, 32, 32]))
+                        })
+                }
             };
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, &plan, &mut sim);
-            // one-shot startup calibration picks the register-tile width
-            // the packed engine dispatches (8×4 vs 8×6)
-            let exec = TiledExecutor::new(plan)
-                .with_micro_shape(latticetile::codegen::autotune::calibrate(500));
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
-            let t0 = Instant::now();
-            exec.run(&mut bufs, &kernel);
-            (sim.stats().misses(), t0.elapsed())
+            let wall = match dtype {
+                DType::F64 => timed_packed_run::<f64>(&kernel, plan),
+                DType::F32 => timed_packed_run::<f32>(&kernel, plan),
+            };
+            (sim.stats().misses(), wall)
         }
     };
     println!(
-        "n={n} strategy={strategy}: simulated L1 misses={misses} wall={:?} ({:.2} GFLOP/s)",
+        "n={n} strategy={strategy} dtype={}: simulated L1 misses={misses} wall={:?} ({:.2} GFLOP/s)",
+        dtype.name(),
         wall,
         flops / wall.as_secs_f64() / 1e9
     );
@@ -471,15 +549,25 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         return 2;
     }
     let (m, k, n) = (dims[0], dims[1], dims[2]);
+    let backend = match flags.get("backend").map(|s| s.as_str()) {
+        None | Some("pjrt") => Backend::Pjrt,
+        Some("native") => Backend::Native,
+        Some(other) => {
+            eprintln!("--backend must be pjrt or native (got {other:?})");
+            return 2;
+        }
+    };
 
-    let reg = match Registry::load(std::path::Path::new(&dir)) {
-        Ok(r) => r,
-        Err(e) => {
+    match (backend, Registry::load(std::path::Path::new(&dir))) {
+        (_, Ok(r)) => println!("loaded {} artifacts from {dir}", r.artifacts().len()),
+        (Backend::Native, Err(_)) => {
+            println!("no artifacts in {dir} — native backend needs none")
+        }
+        (Backend::Pjrt, Err(e)) => {
             eprintln!("cannot load artifacts from {dir}: {e:#}\nrun `make artifacts` first");
             return 1;
         }
     };
-    println!("loaded {} artifacts from {dir}", reg.artifacts().len());
 
     let mut seed = 0x243F6A88u64;
     let mut rnd = move || {
@@ -498,9 +586,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             n,
             batch_window: Duration::from_millis(2),
             spec: CacheSpec::HASWELL_L1D,
+            backend,
         },
     )
     .expect("service start");
+    println!("serving with {}", svc.plan().describe());
 
     let t0 = Instant::now();
     let mut rxs = Vec::new();

@@ -52,10 +52,11 @@ pub struct ArtifactMeta {
 pub struct Registry {
     dir: PathBuf,
     artifacts: Vec<ArtifactMeta>,
-    /// Startup-calibrated register-tile shape
-    /// ([`crate::codegen::autotune::calibrate`]); `None` until a host
-    /// has run the one-shot calibration.
-    micro_shape: Option<crate::codegen::autotune::MicroShape>,
+    /// Startup-calibrated register-tile width class, **per dtype**
+    /// ([`crate::codegen::autotune::calibrate_dtype`]), indexed by
+    /// [`DType::index`](crate::codegen::DType::index); `None` until a
+    /// host has run the one-shot calibration for that dtype.
+    micro_shape: [Option<crate::codegen::MicroShape>; 2],
 }
 
 impl Registry {
@@ -94,7 +95,7 @@ impl Registry {
         Ok(Registry {
             dir: dir.to_path_buf(),
             artifacts,
-            micro_shape: None,
+            micro_shape: [None; 2],
         })
     }
 
@@ -102,14 +103,36 @@ impl Registry {
         &self.dir
     }
 
-    /// Record the startup-calibrated register-tile shape.
-    pub fn set_micro_shape(&mut self, shape: crate::codegen::autotune::MicroShape) {
-        self.micro_shape = Some(shape);
+    /// Record the startup-calibrated register-tile width class for f64
+    /// (legacy entry point; see [`Registry::set_micro_shape_for`]).
+    pub fn set_micro_shape(&mut self, shape: crate::codegen::MicroShape) {
+        self.set_micro_shape_for(crate::codegen::DType::F64, shape);
     }
 
-    /// The calibrated register-tile shape, if calibration has run.
-    pub fn micro_shape(&self) -> Option<crate::codegen::autotune::MicroShape> {
-        self.micro_shape
+    /// The calibrated f64 register-tile width class, if calibration has
+    /// run (legacy entry point; see [`Registry::micro_shape_for`]).
+    pub fn micro_shape(&self) -> Option<crate::codegen::MicroShape> {
+        self.micro_shape_for(crate::codegen::DType::F64)
+    }
+
+    /// Record the startup-calibrated register-tile width class for one
+    /// dtype — each precision races its own candidate widths
+    /// ([`crate::codegen::autotune::calibrate_dtype`]).
+    pub fn set_micro_shape_for(
+        &mut self,
+        dtype: crate::codegen::DType,
+        shape: crate::codegen::MicroShape,
+    ) {
+        self.micro_shape[dtype.index()] = Some(shape);
+    }
+
+    /// The calibrated register-tile width class of `dtype`, if that
+    /// dtype's calibration has run.
+    pub fn micro_shape_for(
+        &self,
+        dtype: crate::codegen::DType,
+    ) -> Option<crate::codegen::MicroShape> {
+        self.micro_shape[dtype.index()]
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {
@@ -225,6 +248,21 @@ mod tests {
 
     fn have_artifacts() -> bool {
         artifacts_dir().join("manifest.tsv").exists()
+    }
+
+    #[test]
+    fn micro_shapes_are_recorded_per_dtype() {
+        use crate::codegen::{DType, MicroShape};
+        let mut r = Registry::default();
+        assert_eq!(r.micro_shape_for(DType::F32), None);
+        assert_eq!(r.micro_shape_for(DType::F64), None);
+        r.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
+        assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
+        assert_eq!(r.micro_shape_for(DType::F64), None, "dtypes must not alias");
+        // legacy accessors address the f64 slot
+        r.set_micro_shape(MicroShape::Mr8Nr4);
+        assert_eq!(r.micro_shape(), Some(MicroShape::Mr8Nr4));
+        assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
     }
 
     #[test]

@@ -42,15 +42,18 @@ impl LevelPlan {
     /// Capacity-driven macro shape: `mc×kc` sized to half of `l2` so the
     /// packed B block stays L2-resident while streaming, `nc` sized so
     /// the packed C block fits half an `l3` slice (whole output width
-    /// when no L3 is modelled).
+    /// when no L3 is modelled). `elem` is the kernel's element size in
+    /// bytes (4 for f32, 8 for f64) — halving it doubles the elements a
+    /// level holds, so f32 plans legitimately get 2× the block area.
     pub fn heuristic(
         l1_tile: (usize, usize, usize),
         extents: (usize, usize, usize),
+        elem: usize,
         l2: &CacheSpec,
         l3: Option<&CacheSpec>,
     ) -> LevelPlan {
         let (m, n, k) = extents;
-        let elem = 8usize; // f64 engine
+        let elem = elem.max(1);
         let half_l2 = (l2.capacity / (2 * elem)).max(MR);
         // deep k first: kc is the only k blocking between the macro level
         // and the registers, and it amortizes the A write-back
@@ -85,6 +88,11 @@ fn round_up_mult(v: usize, q: usize) -> usize {
 /// to the level's capacity (the selector's candidate set is bounded, so
 /// growth keeps its aspect ratio). `extents` is the true `(m, n, k)` to
 /// block, which may exceed the (possibly shrunk) model kernel's box.
+///
+/// The element size comes from the kernel's own tables, so an f32 kernel
+/// (4-byte elements) both reshapes the conflict lattices the seed is
+/// selected against *and* doubles the elements each level's capacity
+/// holds — the selector sees the dtype end to end.
 pub fn level_plan(
     kernel: &Kernel,
     extents: (usize, usize, usize),
@@ -107,7 +115,7 @@ pub fn level_plan(
             (ext(0).max(1), ext(2).max(1))
         })
         .unwrap_or((l1_tile.0.max(MR), l1_tile.2.max(1)));
-    let elem = 8usize;
+    let elem = kernel.operand(0).table.elem().max(1);
     let half_l2 = (l2.capacity / (2 * elem)).max(MR);
     let (mut mc, mut kc) = seed;
     mc = round_up_mult(mc, MR);
@@ -551,6 +559,7 @@ mod tests {
         let lp = LevelPlan::heuristic(
             (32, 32, 32),
             (512, 512, 512),
+            8,
             &CacheSpec::HASWELL_L2,
             Some(&CacheSpec::HASWELL_L3_SLICE),
         );
@@ -562,8 +571,35 @@ mod tests {
         // packed C block fits half the L3 slice
         assert!(lp.kc * lp.nc * 8 <= CacheSpec::HASWELL_L3_SLICE.capacity / 2 + NR * lp.kc * 8);
         // tiny problems degenerate to a single macro block
-        let small = LevelPlan::heuristic((8, 8, 8), (24, 24, 24), &CacheSpec::HASWELL_L2, None);
+        let small =
+            LevelPlan::heuristic((8, 8, 8), (24, 24, 24), 8, &CacheSpec::HASWELL_L2, None);
         assert!(small.mc >= 24 && small.nc >= 24 && small.kc == 24);
+    }
+
+    #[test]
+    fn heuristic_f32_blocks_hold_twice_the_elements() {
+        // same shape, half the element size → the L2-resident block
+        // carries ~2× the elements (equal bytes), not the same count
+        let lp64 = LevelPlan::heuristic(
+            (32, 32, 32),
+            (2048, 2048, 2048),
+            8,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+        );
+        let lp32 = LevelPlan::heuristic(
+            (32, 32, 32),
+            (2048, 2048, 2048),
+            4,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+        );
+        assert!(
+            lp32.mc * lp32.kc > lp64.mc * lp64.kc,
+            "f32 {lp32:?} not wider than f64 {lp64:?}"
+        );
+        // both still fit half their level in *bytes*
+        assert!(lp32.mc * lp32.kc * 4 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * lp32.kc * 4);
     }
 
     #[test]
@@ -586,6 +622,40 @@ mod tests {
         let half_l2_elems = CacheSpec::HASWELL_L2.capacity / 16;
         assert!(lp.mc * lp.kc <= half_l2_elems + MR * lp.kc);
         assert!(lp.mc * lp.kc >= half_l2_elems / 4, "block far too small");
+    }
+
+    #[test]
+    fn f32_plan_selects_wider_footprint_than_f64() {
+        // the dtype must reach the selector: the same 512³ GEMM shape,
+        // modelled once with 8-byte and once with 4-byte elements, must
+        // yield a strictly larger f32 macro footprint (2× the elements
+        // fit each level)
+        let k64 = ops::matmul(64, 64, 64, 8, 0);
+        let k32 = ops::matmul(64, 64, 64, 4, 0);
+        let args = ((512usize, 512usize, 512usize), (32usize, 32usize, 32usize));
+        let lp64 = level_plan(
+            &k64,
+            args.0,
+            args.1,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        let lp32 = level_plan(
+            &k32,
+            args.0,
+            args.1,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        assert!(
+            lp32.mc * lp32.kc > lp64.mc * lp64.kc,
+            "f32 plan {lp32:?} not wider than f64 plan {lp64:?}"
+        );
+        // in bytes both target half of L2 (+ one MR-row of growth slack)
+        assert!(lp32.mc * lp32.kc * 4 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * lp32.kc * 4);
+        assert!(lp64.mc * lp64.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * lp64.kc * 8);
     }
 
     #[test]

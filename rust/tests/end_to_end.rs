@@ -8,7 +8,8 @@ use std::time::Duration;
 
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::run_trace_only;
-use latticetile::coordinator::{Planner, Service, ServiceConfig};
+use latticetile::codegen::DType;
+use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::domain::{ops, IterOrder};
 use latticetile::experiments::fig4;
 use latticetile::runtime::{Engine, Registry};
@@ -101,6 +102,7 @@ fn coordinator_serves_burst_correctly() {
             n,
             batch_window: Duration::from_millis(1),
             spec: CacheSpec::HASWELL_L1D,
+            backend: Backend::Pjrt,
         },
     )
     .unwrap();
@@ -148,7 +150,7 @@ fn planner_resolves_all_shipped_shapes() {
         .map(|a| (a.m, a.k, a.n))
         .collect();
     for (m, k, n) in shapes {
-        let p = planner.plan(&reg, m, k, n);
+        let p = planner.plan(&reg, m, k, n, DType::F32);
         assert!(
             reg.by_name(&p.artifact).is_some(),
             "plan for {m}x{k}x{n} resolved to missing artifact {}",
@@ -185,6 +187,60 @@ fn cli_subcommands_smoke() {
     let plan = run(&["plan", "--n", "64"]);
     assert!(plan.contains("rank"));
     assert!(plan.contains("rect"));
+    // dtype-aware planning: the f32 plan line must report an f32-wide
+    // register tile (8x8 or 8x12), the f64 line an f64 one
+    let plan32 = run(&["plan", "--n", "64", "--dtype", "f32"]);
+    assert!(plan32.contains("/f32"), "{plan32}");
     let help = run(&["help"]);
     assert!(help.contains("USAGE"));
+    assert!(help.contains("--dtype"), "usage must document --dtype");
+}
+
+/// The native f32 serve backend works end to end with no artifacts at
+/// all — the packed macro-kernel is the serving engine.
+#[test]
+fn native_serve_backend_end_to_end() {
+    let (m, k, n) = (64usize, 48, 56);
+    let y: Vec<f32> = (0..k * n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+    let svc = Service::start(
+        std::path::Path::new("no-artifacts-anywhere"),
+        y.clone(),
+        ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: Duration::from_millis(1),
+            spec: CacheSpec::HASWELL_L1D,
+            backend: Backend::Native,
+        },
+    )
+    .unwrap();
+    assert_eq!(svc.plan().dtype, DType::F32);
+    let jobs = 6usize;
+    let xs: Vec<Vec<f32>> = (0..jobs)
+        .map(|j| {
+            (0..m * k)
+                .map(|i| (((i + j * 31) % 13) as f32 - 6.0) / 6.0)
+                .collect()
+        })
+        .collect();
+    let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+    for (idx, rx) in rxs.into_iter().enumerate() {
+        let got = rx.recv().unwrap().unwrap();
+        // full-row check against an exact f64 accumulation oracle
+        for j in 0..n {
+            let mut want = 0f64;
+            for kk in 0..k {
+                want += (xs[idx][kk] as f64) * (y[kk * n + j] as f64);
+            }
+            assert!(
+                (got[j] as f64 - want).abs() < 1e-3,
+                "job {idx} col {j}: {} vs {}",
+                got[j],
+                want
+            );
+        }
+    }
+    let (metrics, _) = svc.stop();
+    assert_eq!(metrics.jobs, jobs as u64);
 }

@@ -1,18 +1,27 @@
-//! Differential tests for the *generalized* packed engine: convolution
-//! and Kronecker product — the non-matmul rows of the paper's Table 1 —
-//! executed through the packed micro/macro pipeline and compared against
-//! the kernel-semantic scalar oracle ([`KernelBuffers::reference`]).
+//! Differential tests for the *generalized* packed engine: all four
+//! Table-1 kernels (scalar product, convolution, matmul, Kronecker)
+//! executed through the packed micro/macro pipeline — at **both element
+//! types** (f32 and f64) and both register-tile width classes — and
+//! compared against the kernel-semantic scalar oracle
+//! ([`KernelBuffers::reference`]).
 //!
-//! The engine paths are compared **bit-for-bit**: the buffers are
-//! refilled with small integer-valued f64 ([`KernelBuffers::fill_ints`]),
-//! so every product and partial sum is exactly representable and any
-//! correct summation order produces identical bits — a mismatch of even
-//! one ULP means the engine touched the wrong element, not "rounding".
-//! Random-real runs with a tolerance are layered on top for the shapes
-//! where integer fills could mask a sign/offset bug hidden by symmetry.
+//! Two comparison regimes:
+//!
+//! * **bit-for-bit**: the buffers are refilled with small integer-valued
+//!   scalars ([`KernelBuffers::fill_ints`]), so every product and partial
+//!   sum is exactly representable *at either precision* and any correct
+//!   summation order produces identical bits — a mismatch of even one
+//!   ULP means the engine touched the wrong element, not "rounding".
+//! * **ULP-scaled**: random real fills with the [`Scalar::ulp_tol`]
+//!   tolerance (per reduction depth, scaled by the result magnitude) —
+//!   this is what catches a sign/offset bug that integer symmetry could
+//!   mask, and it exercises the f32 rounding behaviour the bitwise runs
+//!   cannot.
 
 use latticetile::codegen::executor::{max_abs_diff, KernelBuffers, TiledExecutor};
-use latticetile::codegen::{run_parallel, run_parallel_macro, GemmForm, MicroShape};
+use latticetile::codegen::{
+    run_parallel, run_parallel_macro, GemmForm, MicroShape, Scalar,
+};
 use latticetile::domain::ops;
 use latticetile::domain::Kernel;
 use latticetile::lattice::IMat;
@@ -20,32 +29,67 @@ use latticetile::testutil::prop_check;
 use latticetile::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 /// Integer-filled scalar oracle for `kernel` (exact, order-independent).
-fn int_oracle(bufs: &mut KernelBuffers, range: u64, seed: u64) -> Vec<f64> {
+fn int_oracle<T: Scalar>(bufs: &mut KernelBuffers<T>, range: u64, seed: u64) -> Vec<T> {
     bufs.fill_ints(range, seed);
     bufs.reference()
 }
 
-/// Run `kernel` under `basis` through the packed engine (both macro and
-/// per-tile L1 paths, both register-tile widths) and require bitwise
-/// equality with the scalar oracle.
-fn check_bitwise(kernel: &Kernel, basis: TileBasis, label: &str) {
-    let sched = TiledSchedule::new(basis);
+/// Run `make(T::ELEM)` under `basis` through the packed engine at one
+/// dtype (both macro and per-tile L1 paths, both register-tile widths)
+/// and require bitwise equality with the scalar oracle.
+fn check_bitwise_t<T: Scalar>(make: &dyn Fn(usize) -> Kernel, basis: &TileBasis, label: &str) {
+    let kernel = make(T::ELEM);
+    let sched = TiledSchedule::new(basis.clone());
     for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
         let exec = TiledExecutor::new(sched.clone()).with_micro_shape(micro);
-        let mut bufs = KernelBuffers::from_kernel(kernel);
+        let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
         let want = int_oracle(&mut bufs, 3, 0xD1FF ^ label.len() as u64);
-        exec.run(&mut bufs, kernel);
+        exec.run(&mut bufs, &kernel);
         assert_eq!(
             bufs.output(),
             want,
-            "{label} ({micro:?}): macro path differs from the oracle bitwise"
+            "{label} ({micro:?}, {}B elem): macro path differs from the oracle bitwise",
+            T::ELEM
         );
         bufs.reset_output();
-        exec.run_l1_only(&mut bufs, kernel);
+        exec.run_l1_only(&mut bufs, &kernel);
         assert_eq!(
             bufs.output(),
             want,
-            "{label} ({micro:?}): per-tile path differs from the oracle bitwise"
+            "{label} ({micro:?}, {}B elem): per-tile path differs from the oracle bitwise",
+            T::ELEM
+        );
+    }
+}
+
+/// [`check_bitwise_t`] at f64 *and* f32 — the kernel constructor takes
+/// the element size so each dtype gets its own (lattice-correct) kernel.
+fn check_bitwise(make: impl Fn(usize) -> Kernel, basis: TileBasis, label: &str) {
+    check_bitwise_t::<f64>(&make, &basis, label);
+    check_bitwise_t::<f32>(&make, &basis, label);
+}
+
+/// Random-real differential run at one dtype: engine vs oracle within
+/// the ULP-scaled tolerance for the kernel's reduction depth.
+fn check_real_t<T: Scalar>(make: &dyn Fn(usize) -> Kernel, basis: &TileBasis, label: &str) {
+    let kernel = make(T::ELEM);
+    let depth = GemmForm::of(&kernel).map(|gf| gf.k).unwrap_or(1);
+    let sched = TiledSchedule::new(basis.clone());
+    for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+        let exec = TiledExecutor::new(sched.clone()).with_micro_shape(micro);
+        let mut bufs = KernelBuffers::<T>::from_kernel(&kernel); // random fill
+        let want = bufs.reference();
+        exec.run(&mut bufs, &kernel);
+        // the random fill is in [-0.5, 0.5], so every partial sum is
+        // bounded by depth·0.25 — scale the per-unit ULP tolerance by the
+        // worst-case partial-sum magnitude
+        let tol = T::ulp_tol(depth) * (1.0 + 0.25 * depth as f64);
+        let got = bufs.output();
+        let diff = max_abs_diff(&got, &want);
+        assert!(
+            diff < tol,
+            "{label} ({micro:?}, {}B elem): |Δ| = {diff} ≥ ulp tol {tol}",
+            T::ELEM
         );
     }
 }
@@ -54,29 +98,34 @@ fn check_bitwise(kernel: &Kernel, basis: TileBasis, label: &str) {
 fn convolution_executes_through_the_packed_engine() {
     // the engine must classify convolution as GEMM-form (degenerate
     // 1×1×n dot with a reversed column operand), not fall back
-    let k = ops::convolution(100, 8, 0);
-    assert!(GemmForm::of(&k).is_some());
-    check_bitwise(&k, TileBasis::rect(&[16]), "conv n=100 tile=16");
+    assert!(GemmForm::of(&ops::convolution(100, 8, 0)).is_some());
+    check_bitwise(
+        |elem| ops::convolution(100, elem, 0),
+        TileBasis::rect(&[16]),
+        "conv n=100 tile=16",
+    );
 }
 
 #[test]
 fn kronecker_executes_through_the_packed_engine() {
-    let k = ops::kronecker(5, 3, 7, 4, 8, 0);
-    assert!(GemmForm::of(&k).is_some());
-    check_bitwise(&k, TileBasis::rect(&[2, 2, 4, 3]), "kron 5x3x7x4");
+    assert!(GemmForm::of(&ops::kronecker(5, 3, 7, 4, 8, 0)).is_some());
+    check_bitwise(
+        |elem| ops::kronecker(5, 3, 7, 4, elem, 0),
+        TileBasis::rect(&[2, 2, 4, 3]),
+        "kron 5x3x7x4",
+    );
 }
 
 /// Convolution across random sizes, bases, and tile widths — including
-/// tiles larger than the domain and size-1 domains.
+/// tiles larger than the domain and size-1 domains — at both dtypes.
 #[test]
 fn prop_convolution_bitwise() {
     prop_check(20, 0xC04, |case, rng| {
         let n = rng.range_i64(1, 300);
-        let base = rng.range_i64(0, 16) as usize * 8;
-        let kernel = ops::convolution(n, 8, base);
+        let base16 = rng.range_i64(0, 16) as usize;
         let tile = rng.range_i64(1, 48);
         check_bitwise(
-            &kernel,
+            move |elem| ops::convolution(n, elem, base16 * elem),
             TileBasis::rect(&[tile]),
             &format!("case {case}: conv n={n} tile={tile}"),
         );
@@ -88,10 +137,10 @@ fn prop_convolution_bitwise() {
 fn prop_scalar_product_bitwise() {
     prop_check(10, 0x5CA, |case, rng| {
         let n = rng.range_i64(1, 200);
-        let kernel = ops::scalar_product(n, 8, rng.range_i64(0, 8) as usize * 8);
+        let base8 = rng.range_i64(0, 8) as usize;
         let tile = rng.range_i64(1, 32);
         check_bitwise(
-            &kernel,
+            move |elem| ops::scalar_product(n, elem, base8 * elem),
             TileBasis::rect(&[tile]),
             &format!("case {case}: scalar n={n} tile={tile}"),
         );
@@ -100,7 +149,7 @@ fn prop_scalar_product_bitwise() {
 
 /// Kronecker across random factor shapes and non-multiple rect tiles:
 /// segmented runs (the output jumps every m1c rows), swapped operand
-/// roles, per-column output bases.
+/// roles, per-column output bases — at both dtypes.
 #[test]
 fn prop_kronecker_bitwise() {
     prop_check(15, 0x12C4, |case, rng| {
@@ -108,7 +157,6 @@ fn prop_kronecker_bitwise() {
         let m2b = rng.range_i64(1, 6);
         let m1c = rng.range_i64(1, 9);
         let m2c = rng.range_i64(1, 6);
-        let kernel = ops::kronecker(m1b, m2b, m1c, m2c, 8, 0);
         let tile = [
             rng.range_i64(1, 4).min(m1b),
             rng.range_i64(1, 4).min(m2b),
@@ -116,7 +164,7 @@ fn prop_kronecker_bitwise() {
             rng.range_i64(1, 4).min(m2c),
         ];
         check_bitwise(
-            &kernel,
+            move |elem| ops::kronecker(m1b, m2b, m1c, m2c, elem, 0),
             TileBasis::rect(&tile),
             &format!("case {case}: kron {m1b}x{m2b}x{m1c}x{m2c} tile={tile:?}"),
         );
@@ -124,15 +172,26 @@ fn prop_kronecker_bitwise() {
 }
 
 /// Kronecker under a *skewed* 4-D basis: outside the 3-D replay class,
-/// must take the exact per-point fallback and stay correct.
+/// must take the exact per-point fallback and stay correct — both dtypes.
 #[test]
 fn prop_kronecker_skewed_fallback() {
+    fn run_case<T: Scalar>(kernel: &Kernel, sched: &TiledSchedule, case: usize, seed: u64) {
+        let exec = TiledExecutor::new(sched.clone());
+        let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
+        let want = int_oracle(&mut bufs, 3, seed);
+        exec.run(&mut bufs, kernel);
+        assert_eq!(
+            bufs.output(),
+            want,
+            "case {case}: skewed kronecker fallback differs ({}B elem)",
+            T::ELEM
+        );
+    }
     prop_check(8, 0x5E4D, |case, rng| {
         let m1b = rng.range_i64(2, 6);
         let m2b = rng.range_i64(2, 5);
         let m1c = rng.range_i64(2, 7);
         let m2c = rng.range_i64(2, 5);
-        let kernel = ops::kronecker(m1b, m2b, m1c, m2c, 8, 0);
         let basis = loop {
             let b = IMat::from_rows(&[
                 &[rng.range_i64(2, 4) as i128, rng.range_i64(0, 2) as i128, 0, 0],
@@ -145,84 +204,154 @@ fn prop_kronecker_skewed_fallback() {
             }
         };
         let sched = TiledSchedule::new(TileBasis::from_cols(basis));
-        let exec = TiledExecutor::new(sched);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
-        let want = int_oracle(&mut bufs, 3, 0xAB ^ case as u64);
-        exec.run(&mut bufs, &kernel);
-        assert_eq!(
-            bufs.output(),
-            want,
-            "case {case}: skewed kronecker fallback differs"
-        );
+        let seed = 0xAB ^ case as u64;
+        run_case::<f64>(&ops::kronecker(m1b, m2b, m1c, m2c, 8, 0), &sched, case, seed);
+        run_case::<f32>(&ops::kronecker(m1b, m2b, m1c, m2c, 4, 0), &sched, case, seed);
     });
 }
 
 /// Convolution's reversed operand is where an offset bug hides behind
-/// symmetric data: check with asymmetric *real* data too (tolerance, not
-/// bitwise — summation order differs between oracle and sliced engine).
+/// symmetric data: check with asymmetric *real* data too (ULP tolerance,
+/// not bitwise — summation order differs between oracle and engine).
 #[test]
 fn convolution_reversal_with_real_data() {
-    let n = 129i64;
-    let kernel = ops::convolution(n, 8, 64);
-    let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[10])));
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
-    let want = bufs.reference();
-    exec.run(&mut bufs, &kernel);
-    assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    for tile in [10i64, 129] {
+        check_real_t::<f64>(
+            &|elem| ops::convolution(129, elem, 8 * elem),
+            &TileBasis::rect(&[tile]),
+            "conv reversal",
+        );
+        check_real_t::<f32>(
+            &|elem| ops::convolution(129, elem, 8 * elem),
+            &TileBasis::rect(&[tile]),
+            "conv reversal",
+        );
+    }
 }
 
-/// The parallel paths for the generalized kernels: Kronecker through the
-/// band macro path and the per-tile group path, convolution degrading to
-/// a single worker — all bitwise against the oracle.
+/// Random real fills for every Table-1 kernel at both dtypes: the
+/// engine's reassociated summation must stay within the ULP-scaled
+/// tolerance of the sequential oracle.
+#[test]
+fn real_fills_within_ulp_tolerance_all_kernels() {
+    let cases: Vec<(Box<dyn Fn(usize) -> Kernel>, TileBasis, &str)> = vec![
+        (
+            Box::new(|elem| ops::matmul_padded(23, 17, 19, 26, 24, 20, elem, 0)),
+            TileBasis::rect(&[10, 6, 5]),
+            "matmul 23x17x19 padded",
+        ),
+        (
+            Box::new(|elem| ops::convolution(257, elem, 0)),
+            TileBasis::rect(&[32]),
+            "conv n=257",
+        ),
+        (
+            Box::new(|elem| ops::scalar_product(123, elem, 0)),
+            TileBasis::rect(&[16]),
+            "scalar n=123",
+        ),
+        (
+            Box::new(|elem| ops::kronecker(4, 3, 6, 5, elem, 0)),
+            TileBasis::rect(&[2, 2, 4, 3]),
+            "kron 4x3x6x5",
+        ),
+    ];
+    for (make, basis, label) in &cases {
+        check_real_t::<f64>(make.as_ref(), basis, label);
+        check_real_t::<f32>(make.as_ref(), basis, label);
+    }
+}
+
+/// The parallel paths for the generalized kernels at both dtypes:
+/// Kronecker through the band macro path and the per-tile group path,
+/// convolution degrading to a single worker — all bitwise against the
+/// oracle.
 #[test]
 fn prop_parallel_generalized_kernels() {
-    prop_check(8, 0x9A81, |case, rng| {
-        let threads = rng.range_usize(1, 4);
-        // kronecker: partition over a column axis (i → band macro path)
-        // and over a row axis (k → per-tile group path)
-        let kernel = ops::kronecker(
-            rng.range_i64(2, 6),
-            rng.range_i64(2, 5),
-            rng.range_i64(2, 7),
-            rng.range_i64(2, 5),
-            8,
-            0,
-        );
+    fn kron_case<T: Scalar>(
+        dims: (i64, i64, i64, i64),
+        threads: usize,
+        case: usize,
+        seed: u64,
+    ) {
+        let kernel = ops::kronecker(dims.0, dims.1, dims.2, dims.3, T::ELEM, 0);
         let sched = TiledSchedule::new(TileBasis::rect(&[2, 2, 3, 2]));
         for pv in [0usize, 2] {
-            let mut bufs = KernelBuffers::from_kernel(&kernel);
-            let want = int_oracle(&mut bufs, 3, 0x77 ^ case as u64);
+            let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
+            let want = int_oracle(&mut bufs, 3, seed);
             run_parallel(&mut bufs, &kernel, &sched, threads, pv);
             assert_eq!(
                 bufs.output(),
                 want,
-                "case {case}: parallel kronecker pv={pv} threads={threads}"
+                "case {case}: parallel kronecker pv={pv} threads={threads} ({}B elem)",
+                T::ELEM
             );
         }
-        // convolution: scalar output → must degrade serially, stay exact
-        let kernel = ops::convolution(rng.range_i64(1, 120), 8, 0);
+    }
+    fn conv_case<T: Scalar>(n: i64, threads: usize, case: usize, seed: u64) {
+        let kernel = ops::convolution(n, T::ELEM, 0);
         let sched = TiledSchedule::new(TileBasis::rect(&[7]));
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
-        let want = int_oracle(&mut bufs, 3, 0x99 ^ case as u64);
+        let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
+        let want = int_oracle(&mut bufs, 3, seed);
         run_parallel(&mut bufs, &kernel, &sched, threads, 0);
-        assert_eq!(bufs.output(), want, "case {case}: parallel convolution");
+        assert_eq!(
+            bufs.output(),
+            want,
+            "case {case}: parallel convolution ({}B elem)",
+            T::ELEM
+        );
+    }
+    prop_check(8, 0x9A81, |case, rng| {
+        let threads = rng.range_usize(1, 4);
+        // kronecker: partition over a column axis (i → band macro path)
+        // and over a row axis (k → per-tile group path)
+        let dims = (
+            rng.range_i64(2, 6),
+            rng.range_i64(2, 5),
+            rng.range_i64(2, 7),
+            rng.range_i64(2, 5),
+        );
+        kron_case::<f64>(dims, threads, case, 0x77 ^ case as u64);
+        kron_case::<f32>(dims, threads, case, 0x77 ^ case as u64);
+        // convolution: scalar output → must degrade serially, stay exact
+        let n = rng.range_i64(1, 120);
+        conv_case::<f64>(n, threads, case, 0x99 ^ case as u64);
+        conv_case::<f32>(n, threads, case, 0x99 ^ case as u64);
     });
 }
 
-/// Explicit macro shapes for Kronecker through `run_parallel_macro`, both
-/// register-tile widths.
+/// Explicit macro shapes for Kronecker through `run_parallel_macro`,
+/// both register-tile width classes, both dtypes.
 #[test]
 fn prop_parallel_macro_kronecker() {
+    fn run_case<T: Scalar>(
+        dims: (i64, i64, i64, i64),
+        lp: LevelPlan,
+        micro: MicroShape,
+        threads: usize,
+        case: usize,
+        seed: u64,
+    ) {
+        let kernel = ops::kronecker(dims.0, dims.1, dims.2, dims.3, T::ELEM, 0);
+        let sched = TiledSchedule::new(TileBasis::rect(&[2, 2, 3, 2]));
+        let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
+        let want = int_oracle(&mut bufs, 3, seed);
+        run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
+        assert_eq!(
+            bufs.output(),
+            want,
+            "case {case}: parallel macro kronecker lp={lp:?} micro={micro:?} ({}B elem)",
+            T::ELEM
+        );
+    }
     prop_check(6, 0xFACE, |case, rng| {
-        let kernel = ops::kronecker(
+        let dims = (
             rng.range_i64(2, 6),
             rng.range_i64(2, 6),
             rng.range_i64(2, 8),
             rng.range_i64(2, 6),
-            8,
-            0,
         );
-        let gf = GemmForm::of(&kernel).unwrap();
+        let gf = GemmForm::of(&ops::kronecker(dims.0, dims.1, dims.2, dims.3, 8, 0)).unwrap();
         let lp = LevelPlan {
             l1_tile: (
                 rng.range_usize(2, 12),
@@ -233,23 +362,17 @@ fn prop_parallel_macro_kronecker() {
             kc: 1,
             nc: rng.range_usize(2, 14).min(gf.n.max(2)),
         };
-        let sched = TiledSchedule::new(TileBasis::rect(&[2, 2, 3, 2]));
         let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
         let threads = rng.range_usize(1, 4);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
-        let want = int_oracle(&mut bufs, 3, 0x31 ^ case as u64);
-        run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
-        assert_eq!(
-            bufs.output(),
-            want,
-            "case {case}: parallel macro kronecker lp={lp:?} micro={micro:?}"
-        );
+        let seed = 0x31 ^ case as u64;
+        run_case::<f64>(dims, lp, micro, threads, case, seed);
+        run_case::<f32>(dims, lp, micro, threads, case, seed);
     });
 }
 
 /// Matmul itself is just one instantiation now: bitwise through the same
-/// generalized engine (integer fill makes the slice/register summation
-/// reassociation exact).
+/// generalized engine at both dtypes (integer fill makes the
+/// slice/register summation reassociation exact at either precision).
 #[test]
 fn prop_matmul_bitwise_through_generalized_engine() {
     prop_check(10, 0x3A7, |case, rng| {
@@ -259,16 +382,43 @@ fn prop_matmul_bitwise_through_generalized_engine() {
         let lda = m + rng.range_i64(0, 4);
         let ldb = m + rng.range_i64(0, 4);
         let ldc = k + rng.range_i64(0, 4);
-        let kernel = ops::matmul_padded(m, k, n, lda, ldb, ldc, 8, 0);
         let tile = [
             rng.range_i64(1, 14).min(m),
             rng.range_i64(1, 10).min(n),
             rng.range_i64(1, 9).min(k),
         ];
         check_bitwise(
-            &kernel,
+            move |elem| ops::matmul_padded(m, k, n, lda, ldb, ldc, elem, 0),
             TileBasis::rect(&tile),
             &format!("case {case}: matmul {m}x{k}x{n}"),
+        );
+    });
+}
+
+/// The parallel matmul path at f32, both micro width classes, threads
+/// > 1 — the serving dtype through the threaded band engine.
+#[test]
+fn prop_parallel_matmul_f32() {
+    prop_check(6, 0xF32A, |case, rng| {
+        let m = rng.range_i64(8, 36);
+        let k = rng.range_i64(8, 30);
+        let n = rng.range_i64(8, 33);
+        let kernel = ops::matmul(m, k, n, 4, 0);
+        let threads = rng.range_usize(1, 4);
+        let tile = [
+            rng.range_i64(2, 12).min(m),
+            rng.range_i64(2, 12).min(n),
+            rng.range_i64(2, 12).min(k),
+        ];
+        let sched = TiledSchedule::new(TileBasis::rect(&tile));
+        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+        let want = int_oracle(&mut bufs, 3, 0x55 ^ case as u64);
+        latticetile::codegen::run_parallel_micro(&mut bufs, &kernel, &sched, threads, 1, micro);
+        assert_eq!(
+            bufs.output(),
+            want,
+            "case {case}: parallel f32 matmul {m}x{k}x{n} threads={threads} micro={micro:?}"
         );
     });
 }

@@ -22,7 +22,7 @@ use latticetile::tiling::{LevelPlan, TileBasis, TiledSchedule};
 fn check(kernel: &latticetile::domain::Kernel, basis: TileBasis, label: &str) {
     let sched = TiledSchedule::new(basis);
     let exec = TiledExecutor::new(sched.clone());
-    let mut bufs = KernelBuffers::from_kernel(kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(kernel);
     let want = bufs.reference();
     exec.run(&mut bufs, kernel);
     assert!(
@@ -146,7 +146,7 @@ fn prop_parallel_engine_matches_reference() {
             rng.range_i64(2, 12).min(k),
         ];
         let sched = TiledSchedule::new(TileBasis::rect(&tile));
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
@@ -165,7 +165,7 @@ fn prop_parallel_engine_matches_reference() {
             }
         };
         let sched = TiledSchedule::new(TileBasis::from_cols(basis));
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
@@ -208,7 +208,7 @@ fn prop_macro_kernel_matches_reference() {
         let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&tile)))
             .with_level_plan(lp)
             .with_micro_shape(micro);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, &kernel);
         assert!(
@@ -231,12 +231,12 @@ fn macro_kernel_packs_each_row_block_exactly_once() {
         kc: 12,
         nc: 10,
     };
-    let mut bufs = KernelBuffers::from_kernel(&kernel);
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let want = bufs.reference();
     let gf = GemmForm::of(&kernel).unwrap();
     let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
-    let mut pr = PackedRows::new();
-    let mut pc = PackedCols::new();
+    let mut pr = PackedRows::<f64>::new();
+    let mut pc = PackedCols::<f64>::new();
     run_macro(
         &mut bufs.arena,
         &plan,
@@ -287,7 +287,7 @@ fn prop_parallel_macro_matches_reference() {
             (lp.l1_tile.2 as i64).min(k),
         ]));
         let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         run_parallel_macro(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
         assert!(

@@ -196,7 +196,7 @@ fn prop_executors_numerically_correct() {
         };
         let sched = TiledSchedule::new(TileBasis::from_cols(b));
         let exec = TiledExecutor::new(sched.clone());
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
         exec.run(&mut bufs, &kernel);
         assert!(
@@ -204,7 +204,7 @@ fn prop_executors_numerically_correct() {
             "case {case}: serial tiled executor wrong"
         );
         let threads = rng.range_usize(1, 4);
-        let mut bufs = KernelBuffers::from_kernel(&kernel);
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         run_parallel(&mut bufs, &kernel, &sched, threads, 1);
         assert!(
             max_abs_diff(&want, &bufs.output()) < 1e-9,
