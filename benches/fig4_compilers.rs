@@ -12,7 +12,10 @@ fn main() {
         let rows = fig4::run_size(n, reps);
         let sp = fig4::speedups_vs(&rows, "gcc-O0(analog)");
         println!("\nn = {n}:");
-        println!("{:<22} {:>12} {:>10} {:>9} {:>10}", "strategy", "L1 misses", "wall", "GFLOP/s", "vs O0");
+        println!(
+            "{:<22} {:>12} {:>10} {:>9} {:>10}",
+            "strategy", "L1 misses", "wall", "GFLOP/s", "vs O0"
+        );
         for (i, r) in rows.iter().enumerate() {
             println!(
                 "{:<22} {:>12} {:>10} {:>9.2} {:>9.2}x",

@@ -6,7 +6,10 @@ fn main() {
     let threads = [1usize, 2, 4, 8, 12, 16, 20];
     let (og, gg) = fig6::parallel_grain(n);
     println!("=== Figure 6: auto-threading (n={n}; bands: ours={og}, graphite={gg}) ===");
-    println!("{:>7} {:>12} {:>9} {:>12} {:>9}", "threads", "ours wall", "speedup*", "graphite", "speedup*");
+    println!(
+        "{:>7} {:>12} {:>9} {:>12} {:>9}",
+        "threads", "ours wall", "speedup*", "graphite", "speedup*"
+    );
     for r in fig6::run(n, &threads, 1) {
         println!(
             "{:>7} {:>12} {:>8.2}x {:>12} {:>8.2}x",

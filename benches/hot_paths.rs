@@ -141,6 +141,32 @@ fn main() {
         "macro-kernel diverged from the per-tile engine"
     );
 
+    // the L3 super-band parallel scheduler: whole super-bands per worker
+    // with thread-local row-slice packing — the threaded row tracked
+    // across PRs next to the serial macro-kernel row
+    let threads = 4usize;
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+    let sched = TiledSchedule::new(TileBasis::rect(&[64, 64, 64]));
+    let t0 = Instant::now();
+    latticetile::codegen::run_parallel_macro(
+        &mut bufs,
+        &kernel,
+        &sched,
+        threads,
+        None,
+        latticetile::codegen::MicroShape::Mr8Nr4,
+    );
+    let par_label = if quick {
+        format!("parallel super-band matmul n={big} t={threads}")
+    } else {
+        format!("parallel super-band matmul t={threads}")
+    };
+    res.rate(&par_label, (big as u64).pow(3), t0.elapsed());
+    assert!(
+        max_abs_diff(&want, &bufs.output()) < 1e-9,
+        "parallel super-band path diverged from the serial engine"
+    );
+
     // Table-1 workload diversity: convolution and Kronecker through the
     // same packed micro/macro engine (kernel-agnostic RunPlan path) —
     // tracked from day one so the generalized engine can't regress

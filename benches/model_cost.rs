@@ -3,7 +3,10 @@ use latticetile::experiments::{harness, model_cost};
 
 fn main() {
     println!("=== §4.0.4: model evaluation cost ===");
-    println!("{:>5} {:>14} {:>14} {:>16} {:>16}", "n", "exact Eq.(4)", "paper Δ-rule", "sampled(8)", "K−1 closed form");
+    println!(
+        "{:>5} {:>14} {:>14} {:>16} {:>16}",
+        "n", "exact Eq.(4)", "paper Δ-rule", "sampled(8)", "K−1 closed form"
+    );
     for r in model_cost::run(&[16, 24, 32, 48, 64], 2) {
         println!(
             "{:>5} {:>14} {:>14} {:>16} {:>16}",

@@ -1,32 +1,35 @@
-//! E12 extension: two-level hierarchy behaviour of the plans, including
-//! the macro-kernel rows. Besides the console table, results are written
-//! machine-readably to `BENCH_multilevel.json` (strategy → per-level
-//! misses + Mops/s), mirroring `BENCH_hot_paths.json` so the perf
-//! trajectory can be tracked across PRs.
+//! E12 extension: three-level hierarchy behaviour of the plans,
+//! including the macro-kernel rows (L3-slice misses are what the
+//! super-band schedule is sized against). Besides the console table,
+//! results are written machine-readably to `BENCH_multilevel.json`
+//! (strategy → per-level misses + Mops/s), mirroring
+//! `BENCH_hot_paths.json` so the perf trajectory can be tracked across
+//! PRs — and gated by `python/check_bench.py` in CI.
 use latticetile::experiments::multilevel;
 
 fn main() {
     // BENCH_QUICK=1 (CI smoke): reduced sizes so the binary can't bit-rot
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let sizes: &[i64] = if quick { &[64, 96] } else { &[96, 128, 160] };
-    println!("=== extension: L1+L2 hierarchy behaviour ===");
+    println!("=== extension: L1+L2+L3 hierarchy behaviour ===");
     println!(
-        "{:>5} {:<22} {:>12} {:>12} {:>12} {:>10}",
-        "n", "strategy", "L1 misses", "L2 misses", "est cycles", "Mops/s"
+        "{:>5} {:<22} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "n", "strategy", "L1 misses", "L2 misses", "L3 misses", "est cycles", "Mops/s"
     );
     let rows = multilevel::run(sizes);
     for r in &rows {
         println!(
-            "{:>5} {:<22} {:>12} {:>12} {:>12} {:>10.1}",
-            r.n, r.strategy, r.l1_misses, r.l2_misses, r.est_cycles, r.mops
+            "{:>5} {:<22} {:>12} {:>12} {:>12} {:>12} {:>10.1}",
+            r.n, r.strategy, r.l1_misses, r.l2_misses, r.l3_misses, r.est_cycles, r.mops
         );
     }
     let body: Vec<String> = rows
         .iter()
         .map(|r| {
             format!(
-                "  \"n{} {}\": {{\"l1_misses\": {}, \"l2_misses\": {}, \"est_cycles\": {}, \"mops\": {:.1}}}",
-                r.n, r.strategy, r.l1_misses, r.l2_misses, r.est_cycles, r.mops
+                "  \"n{} {}\": {{\"l1_misses\": {}, \"l2_misses\": {}, \"l3_misses\": {}, \
+                 \"est_cycles\": {}, \"mops\": {:.1}}}",
+                r.n, r.strategy, r.l1_misses, r.l2_misses, r.l3_misses, r.est_cycles, r.mops
             )
         })
         .collect();

@@ -21,7 +21,9 @@ fn main() {
         r.best_practical_rect.1
     );
     let (mn, mx) = fig3::rect_point_count_varies(&fig3::paper_lattice(), 24, 20, 6);
-    println!("Fig.3 regularity — 24x20 rect tiles hold {mn}..{mx} lattice points; lattice tiles always 1\n");
+    println!(
+        "Fig.3 regularity — 24x20 rect tiles hold {mn}..{mx} lattice points; lattice tiles always 1\n"
+    );
 
     // --- spatial reuse (Figure 5) ----------------------------------------
     let (rect_u, lat_u) = fig5::run(256);

@@ -95,6 +95,8 @@ fn main() -> anyhow::Result<()> {
     let (metrics, _worker_wall) = svc.stop();
     println!("\nserved {jobs} jobs of {m}x{k}x{n} f32 matmul in {wall:?}");
     println!("{}", metrics.report(wall));
-    println!("\nall layers composed: Pallas kernel → JAX model → HLO text → PJRT → rust coordinator");
+    println!(
+        "\nall layers composed: Pallas kernel → JAX model → HLO text → PJRT → rust coordinator"
+    );
     Ok(())
 }

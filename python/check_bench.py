@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Bench-regression guard: compare a BENCH_*.json smoke run against a
+committed baseline and fail on regressions.
+
+Usage:
+    python3 python/check_bench.py <baseline.json> <current.json> [--tolerance 0.30]
+
+Baseline/current entries come in two shapes, matching the two bench
+emitters:
+
+  hot_paths:   {"label": <mops>, ...}
+  multilevel:  {"label": {"l1_misses": N, ..., "mops": X}, ...}
+
+Rules (per named entry present in the baseline):
+  * throughput ("mops" or a bare number): FAIL if current < (1 - tol) * baseline
+  * miss counts / cycle estimates (keys ending in "_misses"/"_cycles"):
+    deterministic simulation outputs — FAIL if current > (1 + tol) * baseline
+  * a baseline value of 0 (or null) means "unseeded": skipped with a note,
+    so mechanism and baselines can land before every number is ratcheted
+  * a baseline entry missing from the current run FAILS (a silently
+    renamed or dropped row would otherwise un-gate itself)
+  * current entries not in the baseline are listed as candidates to commit
+
+Exit status: 0 = pass, 1 = regression or structural mismatch.
+"""
+
+import argparse
+import json
+import sys
+
+
+def classify(key):
+    """'floor' for throughput-like values, 'ceiling' for cost-like ones."""
+    if key.endswith("_misses") or key.endswith("_cycles"):
+        return "ceiling"
+    return "floor"
+
+
+def check_value(label, key, base, cur, tol, failures, notes):
+    if base is None or base == 0:
+        notes.append(f"  unseeded  {label} [{key}] (baseline 0/null; current {cur})")
+        return
+    if classify(key) == "floor":
+        limit = (1.0 - tol) * base
+        if cur < limit:
+            failures.append(
+                f"  REGRESSION {label} [{key}]: {cur} < {limit:.1f} "
+                f"(baseline {base}, -{tol:.0%} floor)"
+            )
+    else:
+        limit = (1.0 + tol) * base
+        if cur > limit:
+            failures.append(
+                f"  REGRESSION {label} [{key}]: {cur} > {limit:.1f} "
+                f"(baseline {base}, +{tol:.0%} ceiling)"
+            )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tolerance", type=float, default=0.30)
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    failures, notes = [], []
+    for label, base_val in baseline.items():
+        if label not in current:
+            failures.append(f"  MISSING   {label}: in baseline but absent from current run")
+            continue
+        cur_val = current[label]
+        if isinstance(base_val, dict):
+            if not isinstance(cur_val, dict):
+                failures.append(f"  SHAPE     {label}: baseline is an object, current is not")
+                continue
+            for key, b in base_val.items():
+                if key not in cur_val:
+                    failures.append(f"  MISSING   {label} [{key}]: absent from current run")
+                    continue
+                check_value(label, key, b, cur_val[key], args.tolerance, failures, notes)
+        else:
+            if isinstance(cur_val, dict):
+                failures.append(f"  SHAPE     {label}: baseline is a number, current is not")
+                continue
+            check_value(label, "mops", base_val, cur_val, args.tolerance, failures, notes)
+
+    new_entries = [k for k in current if k not in baseline]
+
+    print(f"bench guard: {args.current} vs {args.baseline} (tolerance {args.tolerance:.0%})")
+    for n in notes:
+        print(n)
+    if new_entries:
+        print("  new entries (add to the baseline to start gating them):")
+        for k in new_entries:
+            print(f"    {json.dumps(k)}: {json.dumps(current[k])}")
+    if failures:
+        print(f"FAILED — {len(failures)} regression(s):")
+        for f_ in failures:
+            print(f_)
+        return 1
+    print(f"PASS — {len(baseline)} gated entries within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

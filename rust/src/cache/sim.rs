@@ -199,6 +199,16 @@ impl Hierarchy {
         ])
     }
 
+    /// Haswell L1d + L2 + L3 slice — the three-level hierarchy the
+    /// super-band schedule is sized against (`level(2)` is the L3 slice).
+    pub fn haswell_l3(policy: Policy) -> Hierarchy {
+        Hierarchy::new(vec![
+            CacheSim::new(CacheSpec::HASWELL_L1D, policy),
+            CacheSim::new(CacheSpec::HASWELL_L2, policy),
+            CacheSim::new(CacheSpec::HASWELL_L3_SLICE, policy),
+        ])
+    }
+
     /// Access an address; returns the level that hit (1-based), or
     /// `levels.len() + 1` meaning DRAM.
     pub fn access(&mut self, addr: usize) -> usize {

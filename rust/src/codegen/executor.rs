@@ -316,8 +316,8 @@ impl ReplayPlan {
                 for &(pos, len, kkk, lo) in &scratch.clipped {
                     let mut cvals = [T::ZERO; AXPY_MAX_COLS];
                     for (c, cv) in cvals.iter_mut().enumerate().take(ncols) {
-                        *cv = arena
-                            [(vc.off + vc.w[ax.red] * kkk + vc.w[ax.col] * (j + c as i64)) as usize];
+                        let ci = vc.off + vc.w[ax.red] * kkk + vc.w[ax.col] * (j + c as i64);
+                        *cv = arena[ci as usize];
                     }
                     let a_base = (vo.off + lo + ax.cs * j) as usize;
                     axpy_block(
@@ -584,12 +584,13 @@ pub fn scan_rect_tiles<F: FnMut(&[i64], &[i64])>(
 /// Is this plan the degenerate `m = n = 1` GEMM form (scalar product,
 /// convolution, any fully-reduced box)? Those run the dot microkernel
 /// straight from the arena — `MR×NRW` panels would be `1/(MR·NRW)` live.
-fn is_dot_plan(plan: &RunPlan) -> bool {
+pub(crate) fn is_dot_plan(plan: &RunPlan) -> bool {
     plan.m == 1 && plan.n == 1
 }
 
-/// Run a degenerate plan through [`dot_update`].
-fn run_dot<T: Scalar>(arena: &mut [T], plan: &RunPlan) {
+/// Run a degenerate plan through [`dot_update`] (shared with the
+/// parallel executor's `m = n = 1` short-circuit).
+pub(crate) fn run_dot<T: Scalar>(arena: &mut [T], plan: &RunPlan) {
     // a 1-row box always lowers to exactly one run today; assert for real
     // (not debug) so a future multi-run degenerate form fails loudly
     // instead of silently dropping runs past the first
@@ -605,22 +606,27 @@ fn run_dot<T: Scalar>(arena: &mut [T], plan: &RunPlan) {
     );
 }
 
-/// Execute the whole kernel as the two-level macro/micro nest (the
-/// BLIS-style macro-kernel) over its whole-domain [`RunPlan`]:
+/// Execute the whole kernel as the three-level macro/micro nest (the
+/// BLIS-style macro-kernel under an L3 super-band partition) over its
+/// whole-domain [`RunPlan`]:
 ///
 /// ```text
-///   for k0 by kc:            pack ALL mc-row blocks of the slice once
-///     for j0 by nc:          pack the kc×nc column band once
-///       for each row block:  run all L1 tiles from the packed panels
+///   for i3 by m3:                L3 super-band rows (mc-aligned)
+///     for j3 by n3:              L3 super-band columns (nc-aligned)
+///       for k0 by kc:            pack the band's mc-row blocks once
+///         for j0 by nc in band:  pack the kc×nc column band once
+///           for each row block:  run all L1 tiles from the packed panels
 /// ```
 ///
-/// Each row block is packed exactly once per reduction slice (slices
-/// partition the reduction, blocks partition the rows) and each column
-/// band once per `(k0, j0)` — the arena is streamed a number of times
-/// independent of the L1 tile size, which is what makes L2-exceeding
-/// shapes run at macro-block speed. The packed buffers are caller-owned
-/// so tests can assert the pack counts and the parallel executor can
-/// share the packed rows read-only.
+/// Within one super-band each row block is packed exactly once per
+/// reduction slice and each column band once per `(k0, j0)` — the arena
+/// is streamed a number of times independent of the L1 tile size. The
+/// super-band level bounds the packed row slice to `m3×kc` (an L3-slice
+/// quarter under the heuristic plans) so L3-exceeding row extents stop
+/// thrashing the last-level cache, and it is the exact schedule the
+/// parallel executor hands out: one super-band = one worker claim, so
+/// serial and parallel traces coincide per band. The packed buffers are
+/// caller-owned so tests can assert the pack counts.
 ///
 /// Degenerate `m = n = 1` plans (scalar product, convolution) skip the
 /// pack/block machinery and stream both operands once through the dot
@@ -649,6 +655,17 @@ pub fn run_macro<T: Scalar>(
     }
 }
 
+/// Normalize a plan's super-band extents: `m3` aligned down to a
+/// non-zero multiple of `mc`, `n3` to a multiple of `nc`. The mc/nc
+/// alignment keeps super-band boundaries on whole row blocks / column
+/// bands, which is what lets the pre-packed serve path select block
+/// subranges of full-width packed slices.
+pub(crate) fn super_band_extents(lp: &LevelPlan) -> (usize, usize) {
+    let mc = lp.mc.max(1);
+    let nc = lp.nc.max(1);
+    ((lp.m3 / mc).max(1) * mc, (lp.n3 / nc).max(1) * nc)
+}
+
 fn run_macro_impl<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -656,35 +673,51 @@ fn run_macro_impl<T: Scalar, const NRW: usize>(
     rows: &mut PackedRows<T>,
     cols: &mut PackedCols<T>,
 ) {
-    let mc = lp.mc.max(1);
-    let kc = lp.kc.max(1);
-    for k0 in (0..plan.k).step_by(kc) {
-        let kcc = (k0 + kc).min(plan.k) - k0;
-        rows.pack_slice(arena, plan, mc, k0, kcc);
-        run_macro_slice::<T, NRW>(arena, plan, lp, rows, cols, k0, kcc);
+    let (m3, n3) = super_band_extents(lp);
+    for i3 in (0..plan.m).step_by(m3) {
+        let m3c = m3.min(plan.m - i3);
+        for j3 in (0..plan.n).step_by(n3) {
+            let n3c = n3.min(plan.n - j3);
+            run_super_band::<T, NRW>(arena, plan, lp, rows, cols, (i3, m3c), (j3, n3c));
+        }
     }
 }
 
-/// One reduction slice of the macro nest: column bands × row blocks over
-/// an already-packed row slice.
-fn run_macro_slice<T: Scalar, const NRW: usize>(
+/// One `m3×n3` L3 super-band of the three-level nest: rows
+/// `[i3, i3+m3c)` × output columns `[j3, j3+n3c)`, full reduction. Per
+/// `kc` step the band's own row slice is packed once into the
+/// caller-owned buffers and every column band inside the range is driven
+/// from it — the inner nest shared by the serial executor and by one
+/// parallel worker's claimed super-band. Returns
+/// `(row_slice_packs, col_band_packs)`.
+pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
     lp: &LevelPlan,
-    rows: &PackedRows<T>,
+    rows: &mut PackedRows<T>,
     cols: &mut PackedCols<T>,
-    k0: usize,
-    kcc: usize,
-) {
+    (i3, m3c): (usize, usize),
+    (j3, n3c): (usize, usize),
+) -> (u64, u64) {
+    let mc = lp.mc.max(1);
+    let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
     let l1 = (lp.l1_tile.0, lp.l1_tile.1);
-    for j0 in (0..plan.n).step_by(nc) {
-        let ncc = (j0 + nc).min(plan.n) - j0;
-        cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
-        for bi in 0..rows.n_blocks() {
-            run_macro_block::<T, NRW>(rows.block(bi), cols, plan, j0, l1, arena);
+    let (mut row_packs, mut col_packs) = (0u64, 0u64);
+    for k0 in (0..plan.k).step_by(kc) {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        rows.pack_slice_range(arena, plan, mc, i3, m3c, k0, kcc);
+        row_packs += 1;
+        for j0 in (j3..j3 + n3c).step_by(nc) {
+            let ncc = (j0 + nc).min(j3 + n3c) - j0;
+            cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+            col_packs += 1;
+            for bi in 0..rows.n_blocks() {
+                run_macro_block::<T, NRW>(rows.block(bi), cols, plan, j0, l1, arena);
+            }
         }
     }
+    (row_packs, col_packs)
 }
 
 /// Pre-pack every `kc` reduction slice of the plan's row operand — for
@@ -713,7 +746,16 @@ pub fn pack_row_slices<T: Scalar>(
 /// [`run_macro`] over row slices packed ahead of time by
 /// [`pack_row_slices`] (same plan, same `lp`): only the column operand
 /// is packed per call, so a serve loop with resident weights never
-/// re-copies them. The row-operand bytes must be unchanged since the
+/// re-copies them. The pre-packed slices span the full row extent; the
+/// super-band nest selects whole mc-row block subranges of each slice
+/// (super-band boundaries are mc-aligned by [`super_band_extents`]), so
+/// the serve path follows the same three-level schedule as [`run_macro`]
+/// without duplicating the resident panels. Like the serial and
+/// parallel nests, a plan with several row super-bands re-packs each
+/// column band once per row band — the deliberate locality price that
+/// keeps the streamed row panels L3-resident on shapes big enough to
+/// split (single-band plans, the common serve case, pack each band
+/// exactly once). The row-operand bytes must be unchanged since the
 /// slices were packed; degenerate `m = n = 1` plans take the dot path
 /// and ignore `rows`.
 pub fn run_macro_prepacked<T: Scalar>(
@@ -737,14 +779,45 @@ pub fn run_macro_prepacked<T: Scalar>(
         plan.k.div_ceil(kc),
         "pre-packed slices do not match the macro shape"
     );
-    for (si, k0) in (0..plan.k).step_by(kc).enumerate() {
-        let kcc = (k0 + kc).min(plan.k) - k0;
-        match T::nr(micro) {
-            4 => run_macro_slice::<T, 4>(arena, plan, lp, &rows[si], cols, k0, kcc),
-            6 => run_macro_slice::<T, 6>(arena, plan, lp, &rows[si], cols, k0, kcc),
-            8 => run_macro_slice::<T, 8>(arena, plan, lp, &rows[si], cols, k0, kcc),
-            12 => run_macro_slice::<T, 12>(arena, plan, lp, &rows[si], cols, k0, kcc),
-            w => unreachable!("unsupported register-tile width {w}"),
+    match T::nr(micro) {
+        4 => run_macro_prepacked_impl::<T, 4>(arena, plan, lp, rows, cols),
+        6 => run_macro_prepacked_impl::<T, 6>(arena, plan, lp, rows, cols),
+        8 => run_macro_prepacked_impl::<T, 8>(arena, plan, lp, rows, cols),
+        12 => run_macro_prepacked_impl::<T, 12>(arena, plan, lp, rows, cols),
+        w => unreachable!("unsupported register-tile width {w}"),
+    }
+}
+
+fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    rows: &[PackedRows<T>],
+    cols: &mut PackedCols<T>,
+) {
+    let mc = lp.mc.max(1);
+    let kc = lp.kc.max(1);
+    let nc = lp.nc.max(1);
+    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
+    let (m3, n3) = super_band_extents(lp);
+    for i3 in (0..plan.m).step_by(m3) {
+        let m3c = m3.min(plan.m - i3);
+        // m3 is an mc multiple, so a super-band's rows are whole blocks
+        // of the full-width pre-packed slice
+        let b0 = i3 / mc;
+        let b1 = (i3 + m3c).div_ceil(mc);
+        for j3 in (0..plan.n).step_by(n3) {
+            let n3c = n3.min(plan.n - j3);
+            for (si, k0) in (0..plan.k).step_by(kc).enumerate() {
+                let kcc = (k0 + kc).min(plan.k) - k0;
+                for j0 in (j3..j3 + n3c).step_by(nc) {
+                    let ncc = (j0 + nc).min(j3 + n3c) - j0;
+                    cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+                    for bi in b0..b1 {
+                        run_macro_block::<T, NRW>(rows[si].block(bi), cols, plan, j0, l1, arena);
+                    }
+                }
+            }
         }
     }
 }
@@ -1021,6 +1094,8 @@ mod tests {
                 mc: 14,
                 kc: 9,
                 nc: 11,
+                m3: 28,
+                n3: 22,
             });
         let mut macro_bufs = KernelBuffers::<f64>::from_kernel(&k);
         exec.run(&mut macro_bufs, &k);
@@ -1028,6 +1103,84 @@ mod tests {
         exec.run_l1_only(&mut l1_bufs, &k);
         assert!(max_abs_diff(&macro_bufs.output(), &l1_bufs.output()) < 1e-9);
         assert!(max_abs_diff(&macro_bufs.reference(), &macro_bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn super_band_schedule_matches_flat_schedule_bitwise() {
+        // the three-level nest re-orders only whole super-bands (disjoint
+        // output element sets, same per-element reduction order): with
+        // integer fills the flat and super-band schedules must agree bit
+        // for bit — and both with the oracle
+        let k = ops::matmul(37, 23, 29, 8, 0);
+        let views = kernel_views(&k);
+        let gf = GemmForm::of(&k).unwrap();
+        let plan = gf.plan_box(&views, &[0, 0, 0], k.extents());
+        let flat = LevelPlan::flat((8, 8, 8), 10, 7, 6);
+        let sup = LevelPlan {
+            m3: 20,
+            n3: 12,
+            ..flat
+        };
+        let mut a = KernelBuffers::<f64>::from_kernel(&k);
+        a.fill_ints(3, 0x3B);
+        let mut b = a.clone();
+        let want = a.reference();
+        run_macro(
+            &mut a.arena,
+            &plan,
+            &flat,
+            MicroShape::Mr8Nr4,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+        );
+        run_macro(
+            &mut b.arena,
+            &plan,
+            &sup,
+            MicroShape::Mr8Nr4,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+        );
+        assert_eq!(a.output(), want, "flat schedule diverged");
+        assert_eq!(b.output(), want, "super-band schedule diverged");
+    }
+
+    #[test]
+    fn super_band_nest_packs_per_band_per_slice() {
+        // the pack discipline of the three-level nest, counted: each
+        // super-band packs its own row blocks once per reduction slice
+        // (duplicated across column super-bands — the locality price the
+        // schedule pays deliberately), each column band once per
+        // (super-band, slice)
+        let (m, k, n) = (40usize, 14, 22);
+        let kernel = ops::matmul(m as i64, k as i64, n as i64, 8, 0);
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 7,
+            nc: 5,
+            m3: 16,
+            n3: 10,
+        };
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+        let want = bufs.reference();
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+        let mut pr = PackedRows::<f64>::new();
+        let mut pc = PackedCols::<f64>::new();
+        run_macro(&mut bufs.arena, &plan, &lp, MicroShape::Mr8Nr4, &mut pr, &mut pc);
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+        let kslices = k.div_ceil(lp.kc) as u64; // 2
+        // row bands: 16, 16, 8 rows → 2 + 2 + 1 mc-blocks, repacked per
+        // column super-band (3) per slice
+        let row_blocks: u64 = [16u64, 16, 8].iter().map(|r| r.div_ceil(8)).sum();
+        let n_j3 = (n as u64).div_ceil(lp.n3 as u64); // 3
+        assert_eq!(pr.pack_count(), row_blocks * n_j3 * kslices);
+        // column bands per column super-band: 10, 10, 2 cols → 2 + 2 + 1,
+        // once per row super-band (3) per slice
+        let col_bands: u64 = [10u64, 10, 2].iter().map(|c| c.div_ceil(5)).sum();
+        let n_i3 = (m as u64).div_ceil(lp.m3 as u64); // 3
+        assert_eq!(pc.pack_count(), col_bands * n_i3 * kslices);
     }
 
     #[test]
@@ -1052,11 +1205,16 @@ mod tests {
         let views = kernel_views(&k);
         let gf = GemmForm::of(&k).unwrap();
         let plan = gf.plan_box(&views, &[0, 0, 0], k.extents());
+        // super-band extents that split both the rows (24 < 26) and the
+        // columns (18 < 19): the prepacked path must select whole block
+        // subranges of the full-width pre-packed slices
         let lp = LevelPlan {
             l1_tile: (8, 8, 8),
             mc: 12,
             kc: 7,
             nc: 9,
+            m3: 24,
+            n3: 18,
         };
         for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
             let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
@@ -1100,6 +1258,8 @@ mod tests {
                 mc: 1,
                 kc: 8,
                 nc: 1,
+                m3: 1,
+                n3: 1,
             };
             run_macro(
                 &mut bufs.arena,

@@ -39,42 +39,56 @@
 //!   the narrow/wide width classes ([`MicroShape`]) resolve to 4/6
 //!   columns at f64 and 8/12 at f32 ([`Scalar::nr`]). Per macro block
 //!   each operand is packed exactly once: [`pack::PackedRows`] holds
-//!   every `mc`-row block of the current reduction slice (shared
-//!   **read-only** across threads in the parallel path),
+//!   the `mc`-row blocks of the current reduction slice of a row range
+//!   (a super-band's rows; **thread-local** in the parallel path),
 //!   [`pack::PackedCols`] the band of the current output columns.
 //!   [`pack::PackBuffers`] is the per-tile packer for the single-level
 //!   engine and the parallel per-tile path; its cache keys carry the
 //!   source identity *and* element size so reuse across arenas or dtypes
 //!   can never replay stale panels.
-//! * **micro/macro dispatch** — [`executor::run_macro`] walks reduction
-//!   slices × column bands × row blocks ([`pack::run_macro_block`]
-//!   drives the L1 tiles straight from the panels), dispatching the
-//!   `MR×NRW` FMA register tile ([`microkernel::mkernel_full_at`]) with
-//!   **per-column output bases** — which is what lets kernels without a
-//!   uniform output column stride (Kronecker) use the same register
-//!   tiles. The startup autotuner ([`autotune::calibrate_dtype`]) races
-//!   the dtype's narrow vs wide shape and the engine dispatches whichever
-//!   class the [`Registry`](crate::runtime::Registry) recorded *for that
-//!   dtype*. Degenerate `m = n = 1` forms (scalar product, convolution)
-//!   skip packing entirely and run the dot microkernel
-//!   ([`microkernel::dot_update`]) straight from the arena. Boundary
-//!   blocks write back through the clipped edge kernel; skewed lattice
-//!   bases replay their prototile's unit-stride runs through the dtype's
-//!   `NR`-column axpy kernel per tile ([`executor::ReplayPlan`]); kernels
-//!   outside the GEMM class fall back to exact per-point evaluation
-//!   through the views.
+//! * **micro/macro dispatch** — [`executor::run_macro`] walks the
+//!   **three-level schedule**: `m3×n3` L3 super-bands (mc-aligned row
+//!   ranges × nc-aligned column ranges sized against the L3 slice)
+//!   partition the output, and inside each band reduction slices ×
+//!   column bands × row blocks ([`pack::run_macro_block`] drives the L1
+//!   tiles straight from the panels) dispatch the `MR×NRW` FMA register
+//!   tile ([`microkernel::mkernel_full_at`]) with **per-column output
+//!   bases** — which is what lets kernels without a uniform output
+//!   column stride (Kronecker) use the same register tiles. The
+//!   super-band level bounds the packed row slice to `m3×kc` so
+//!   L3-exceeding row extents stop thrashing the last-level cache, and
+//!   it is the parallel unit: [`parallel::run_parallel_macro`] hands
+//!   whole super-bands to workers from an atomic queue, each worker
+//!   packing its **own** row slice and column bands (nothing packed is
+//!   shared), so serial and parallel traces walk one schedule. The
+//!   startup autotuner ([`autotune::calibrate_dtype`]) races the dtype's
+//!   narrow vs wide shape and the engine dispatches whichever class the
+//!   [`Registry`](crate::runtime::Registry) recorded *for that dtype*.
+//!   Degenerate `m = n = 1` forms (scalar product, convolution) skip
+//!   packing entirely and run the dot microkernel
+//!   ([`microkernel::dot_update`]) straight from the arena — on the
+//!   serial *and* parallel entry points. Boundary blocks write back
+//!   through the clipped edge kernel; skewed lattice bases replay their
+//!   prototile's unit-stride runs through the dtype's `NR`-column axpy
+//!   kernel per tile ([`executor::ReplayPlan`]); kernels outside the
+//!   GEMM class fall back to exact per-point evaluation through the
+//!   views.
 //!
 //! The element size also flows *upward* from here: the tile selectors
 //! ([`crate::tiling::level_plan`], [`LevelPlan::heuristic`]) take it into
 //! their working-set math, so an f32 plan legitimately selects a wider
-//! footprint than an f64 plan for the same shape — dtype reaches the
-//! model, not just the kernels.
+//! footprint than an f64 plan for the same shape — and since the
+//! kernel-aware selector refactor they read each kernel's own
+//! [`GemmForm`] (convolution and scalar product block their degenerate
+//! `1×1×k` dot form, Kronecker its reduction-free outer product) instead
+//! of reusing matmul's candidate geometry. Dtype and kernel form both
+//! reach the model, not just the kernels.
 //!
 //! [`executor`] also provides the instrumented point-wise executors
 //! (simulator-faithful traversals for any kernel, at the kernel's
 //! declared element size), and [`parallel`] adds the OpenMP-analog
-//! threaded execution — whole column bands per worker over the shared
-//! packed rows for rect schedules, footpoint groups for skewed ones.
+//! threaded execution — L3 super-bands per worker with thread-local
+//! packing for rect schedules, footpoint groups for skewed ones.
 //!
 //! [`LevelPlan::heuristic`]: crate::tiling::LevelPlan::heuristic
 
@@ -94,7 +108,10 @@ pub use executor::{
 };
 pub use microkernel::{dot_update, MR, NR, NR_WIDE};
 pub use pack::{run_macro_block, PackBuffers, PackedBlock, PackedCols, PackedRows};
-pub use parallel::{run_parallel, run_parallel_macro, run_parallel_micro};
+pub use parallel::{
+    run_parallel, run_parallel_macro, run_parallel_macro_stats, run_parallel_micro,
+    ParallelMacroStats,
+};
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,
 };

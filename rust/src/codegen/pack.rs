@@ -35,12 +35,14 @@
 //!   identity *and* the element size so reuse across arenas or dtypes can
 //!   never replay stale panels.
 //! * [`PackedRows`] / [`PackedCols`] — macro-kernel granularity:
-//!   [`PackedRows`] holds *every* `mc`-row block of one reduction slice
-//!   (a read-only handle shared across threads in the parallel path),
-//!   [`PackedCols`] one `kc×nc` column band, and [`run_macro_block`]
-//!   drives the register-tiled micro-engine over all L1 tiles of one
-//!   macro block straight from those panels — each operand block is
-//!   packed exactly once per macro block.
+//!   [`PackedRows`] holds the `mc`-row blocks of one reduction slice of
+//!   a caller-chosen row range ([`PackedRows::pack_slice_range`] — an
+//!   L3 super-band's rows in the three-level schedule; both buffers are
+//!   thread-local in the parallel path, so packed panels stay on the
+//!   worker that streams them), [`PackedCols`] one `kc×nc` column band,
+//!   and [`run_macro_block`] drives the register-tiled micro-engine
+//!   over all L1 tiles of one macro block straight from those panels —
+//!   each operand block is packed exactly once per macro block.
 
 use super::microkernel::{mkernel_edge_at, mkernel_full_at, MR};
 use super::runplan::{RowPanel, RunPlan};
@@ -279,13 +281,16 @@ impl<T: Scalar> PackBuffers<T> {
     }
 }
 
-/// Every `mc`-row block of one reduction slice, packed once into the
-/// microkernel panel layout and shared **read-only** across threads in
-/// the parallel macro-kernel.
+/// The `mc`-row blocks of one reduction slice of a row range, packed
+/// once into the microkernel panel layout. In the parallel macro-kernel
+/// each worker owns one of these and packs its claimed super-band's row
+/// range into it ([`PackedRows::pack_slice_range`]) — packed panels are
+/// never shared across threads.
 ///
-/// Block `bi` covers plan rows `[bi·mc, bi·mc + mcc)` (clipped at `m`);
-/// its panels never straddle run boundaries, so blocks of kernels with
-/// segmented rows (Kronecker) simply carry more, shorter panels.
+/// Block `bi` covers the `bi`-th `mc`-row chunk of the packed range
+/// (clipped at the range end); its panels never straddle run boundaries,
+/// so blocks of kernels with segmented rows (Kronecker) simply carry
+/// more, shorter panels.
 #[derive(Clone, Debug, Default)]
 pub struct PackedRows<T: Scalar = f64> {
     buf: Vec<T>,
@@ -313,21 +318,40 @@ impl<T: Scalar> PackedRows<T> {
     /// Pack every `mc`-row block of the plan's rows at reduction slice
     /// `[k0, k0+kc)`.
     pub fn pack_slice(&mut self, arena: &[T], plan: &RunPlan, mc: usize, k0: usize, kc: usize) {
+        self.pack_slice_range(arena, plan, mc, 0, plan.m, k0, kc);
+    }
+
+    /// Pack the `mc`-row blocks of plan rows `[r0, r0+rows)` at reduction
+    /// slice `[k0, k0+kc)` — the super-band entry point: each parallel
+    /// worker (and each serial super-band) packs only its own row range,
+    /// so the packed panels stay local to the worker that streams them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_slice_range(
+        &mut self,
+        arena: &[T],
+        plan: &RunPlan,
+        mc: usize,
+        r0: usize,
+        rows: usize,
+        k0: usize,
+        kc: usize,
+    ) {
         assert!(kc >= 1 && k0 + kc <= plan.k);
-        let m = plan.m;
-        let mc = mc.clamp(1, m.max(1));
+        assert!(r0 + rows <= plan.m);
+        let mc = mc.clamp(1, rows.max(1));
         self.kc = kc;
         self.panels.clear();
         self.blocks.clear();
         let red_row = &plan.red_row[k0..k0 + kc];
-        let mut r0 = 0usize;
-        while r0 < m {
-            let mcc = mc.min(m - r0);
+        let r1 = r0 + rows;
+        let mut r = r0;
+        while r < r1 {
+            let mcc = mc.min(r1 - r);
             let start = self.panels.len();
-            self.panels.extend(plan.row_panels(r0, mcc));
+            self.panels.extend(plan.row_panels(r, mcc));
             self.blocks.push((start, self.panels.len() - start));
             self.packs += 1;
-            r0 += mcc;
+            r += mcc;
         }
         pack_row_panels(&mut self.buf, arena, &self.panels, red_row);
     }
@@ -644,6 +668,36 @@ mod tests {
             }
             r0 += mcc;
         }
+    }
+
+    #[test]
+    fn packed_rows_range_matches_full_slice_blocks() {
+        let (_, bufs, plan) = matmul_plan(21, 6, 4);
+        let (mc, k0, kc) = (8usize, 1usize, 4usize);
+        // the range pack of rows [8, 21) must hold exactly the blocks the
+        // full-m pack holds past its first block
+        let mut full = PackedRows::<f64>::new();
+        full.pack_slice(&bufs.arena, &plan, mc, k0, kc);
+        assert_eq!(full.n_blocks(), 3); // 8 + 8 + 5
+        let mut range = PackedRows::<f64>::new();
+        range.pack_slice_range(&bufs.arena, &plan, mc, 8, 13, k0, kc);
+        assert_eq!(range.n_blocks(), 2);
+        for bi in 0..range.n_blocks() {
+            let a = range.block(bi);
+            let b = full.block(bi + 1);
+            assert_eq!(a.panels, b.panels, "block {bi} panels differ");
+            assert_eq!(a.data, b.data, "block {bi} data differs");
+        }
+        // an mc-unaligned range still packs exactly its own rows
+        let mut odd = PackedRows::<f64>::new();
+        odd.pack_slice_range(&bufs.arena, &plan, mc, 3, 10, k0, kc);
+        assert_eq!(odd.n_blocks(), 2); // 8 + 2
+        let live: usize = (0..odd.n_blocks())
+            .flat_map(|bi| odd.block(bi).panels.to_vec())
+            .map(|p| p.rows)
+            .sum();
+        assert_eq!(live, 10);
+        assert_eq!(odd.block(0).panels[0].row, plan.runs[0].row + 3);
     }
 
     #[test]

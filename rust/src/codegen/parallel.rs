@@ -3,16 +3,20 @@
 //! the `Scalar` refactor (every entry point is `T: Scalar`; the dtype's
 //! autotuned register width is dispatched per call).
 //!
-//! Rect schedules of GEMM-form kernels run the two-level macro-kernel
-//! with parallelism over whole `nc` **column bands** (GEMM columns, i.e.
-//! the loop axes the output shares with the column operand): the packed
-//! row slice ([`PackedRows`]) is built once and shared read-only across
-//! all workers — rows are never re-packed thread-locally — while each
-//! worker packs the column band of its own output range and writes a
-//! disjoint set of output elements (the kernel's output map is injective
-//! per (row, column)), so no write races occur. This is the same
-//! decomposition the paper's generated `omp parallel for` over the outer
-//! tile loop produces, lifted from L1 tiles to macro blocks.
+//! Rect schedules of GEMM-form kernels run the three-level macro-kernel
+//! with parallelism over whole `m3×n3` **L3 super-bands** (mc-aligned
+//! GEMM row ranges × nc-aligned column ranges sized against the L3
+//! slice): workers claim super-bands from an atomic work queue and each
+//! worker packs its **own** row slice ([`PackedRows`]) for its band's
+//! row range per `kc` step, plus its own column bands ([`PackedCols`]) —
+//! both packed operands stay local to the worker (and socket) that
+//! streams them, which is what keeps them from ping-ponging across the
+//! last-level cache on many-core hosts. Super-bands are disjoint output
+//! element sets (the kernel's output map is injective per
+//! (row, column)), so no write races occur; each worker runs its band's
+//! whole reduction, preserving the serial per-element accumulation
+//! order. This is the paper's `omp parallel for` over the outer tile
+//! loop, lifted from L1 tiles to L3-sized output blocks.
 //!
 //! Skewed schedules keep the footpoint partition: tile interiors run
 //! through the same packing + microkernel engine as the serial
@@ -25,7 +29,7 @@
 //! degenerate `m = n = 1` boxes run the dot microkernel, not the panel
 //! engine.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::cache::CacheSpec;
 use crate::domain::Kernel;
@@ -33,7 +37,7 @@ use crate::tiling::{LevelPlan, TiledSchedule};
 
 use super::autotune::MicroShape;
 use super::executor::{box_key, run_rect_box, KernelBuffers, ReplayPlan, ReplayScratch};
-use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
+use super::pack::{PackBuffers, PackedCols, PackedRows};
 use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
 use super::scalar::Scalar;
 
@@ -100,10 +104,10 @@ pub fn run_parallel_micro<T: Scalar>(
     let extents_ref = kernel.extents();
 
     // Rect bases partitioned over a GEMM column axis take the
-    // macro-kernel band path: the packed row slice is shared across
-    // workers instead of re-packed thread-locally, and each worker owns
-    // whole nc column bands. Requires a provably injective output map —
-    // the write-disjointness of the bands (true for all Table-1 ops).
+    // macro-kernel super-band path: workers claim whole L3-sized output
+    // bands and pack their own row slices thread-locally. Requires a
+    // provably injective output map — the write-disjointness of the
+    // bands (true for all Table-1 ops).
     if basis.is_rect() {
         if let Some(gf) = &gf {
             if gf.col_axes.contains(&partition_var)
@@ -231,17 +235,46 @@ pub fn run_parallel_micro<T: Scalar>(
     });
 }
 
-/// The macro-kernel parallel path: for each `kc` reduction slice the
-/// whole packed row slice ([`PackedRows`]) is built once by the calling
-/// thread and shared **read-only** by all workers; workers then claim
-/// `nc`-wide output column bands from an atomic counter, pack their
-/// band's column block thread-locally ([`PackedCols`]) and drive the L1
-/// tiles of every row block from the shared panels. Bands are disjoint
-/// output element sets (the kernel's output map is injective per
-/// (row, column)), so writes never race. `level` overrides the derived
-/// macro shape; `micro` selects the register-tile width class (the
-/// dtype's autotuned winner from
+/// Execution counters of one [`run_parallel_macro_stats`] call — the
+/// schedule-shape invariants the tests pin (claimed super-bands, pack
+/// discipline) without reaching into thread-local buffers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ParallelMacroStats {
+    /// Super-bands in the claimed grid (row ranges × column ranges).
+    pub super_bands: usize,
+    /// Workers actually spawned (`min(threads, super_bands)`).
+    pub workers: usize,
+    /// Row-slice packs summed over workers: exactly one per claimed
+    /// super-band per `kc` step, independent of the thread count.
+    pub row_slice_packs: u64,
+    /// Column-band packs summed over workers: one per `nc` band inside a
+    /// claimed super-band per `kc` step.
+    pub col_band_packs: u64,
+}
+
+/// The macro-kernel parallel path, scheduled at L3 granularity: the
+/// output is partitioned into `m3×n3` **super-bands** (mc-aligned row
+/// ranges × nc-aligned column ranges, sized by the [`LevelPlan`] against
+/// the L3 slice), workers claim whole super-bands from an atomic work
+/// queue, and each worker packs its **own** row slice for its band's row
+/// range per `kc` step ([`PackedRows`], thread-local) alongside its own
+/// column bands ([`PackedCols`]) — so both packed operands stay local to
+/// the worker (and on NUMA hosts, to the socket) that streams them;
+/// nothing packed is shared across threads. A worker runs its band's
+/// whole reduction, so every output element still accumulates in
+/// ascending `k0` order — the same schedule the serial [`run_macro`]
+/// walks band by band.
+///
+/// Super-bands are disjoint output element sets (the kernel's output map
+/// is injective per (row, column)), so writes never race. `level`
+/// overrides the derived macro shape and is taken as-is; a *derived*
+/// plan whose grid is coarser than the thread count is refined (rows
+/// first) so shapes that fit one L3 super-band still parallelize.
+/// `micro` selects the register-tile width class (the dtype's autotuned
+/// winner from
 /// [`Registry::micro_shape_for`](crate::runtime::Registry::micro_shape_for)).
+///
+/// [`run_macro`]: super::executor::run_macro
 pub fn run_parallel_macro<T: Scalar>(
     bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
@@ -250,6 +283,18 @@ pub fn run_parallel_macro<T: Scalar>(
     level: Option<LevelPlan>,
     micro: MicroShape,
 ) {
+    run_parallel_macro_stats(bufs, kernel, schedule, threads, level, micro);
+}
+
+/// [`run_parallel_macro`], returning the schedule-shape counters.
+pub fn run_parallel_macro_stats<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    level: Option<LevelPlan>,
+    micro: MicroShape,
+) -> ParallelMacroStats {
     assert!(threads >= 1);
     let basis = schedule.basis();
     assert!(basis.is_rect(), "macro-kernel path needs a rect L1 basis");
@@ -265,10 +310,20 @@ pub fn run_parallel_macro<T: Scalar>(
     let lo0 = vec![0i64; extents.len()];
     let plan = gf.plan_box(&views, &lo0, extents);
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
-        return;
+        return ParallelMacroStats::default();
+    }
+    if super::executor::is_dot_plan(&plan) {
+        // degenerate dot: short-circuit into the dot microkernel exactly
+        // like the serial path — no pack buffers, no threads
+        super::executor::run_dot(&mut bufs.arena, &plan);
+        return ParallelMacroStats {
+            super_bands: 1,
+            workers: 1,
+            ..ParallelMacroStats::default()
+        };
     }
     let l1 = gf.l1_tile(basis);
-    let lp = level.unwrap_or_else(|| {
+    let mut lp = level.unwrap_or_else(|| {
         LevelPlan::heuristic(
             l1,
             (gf.m, gf.n, gf.k),
@@ -277,91 +332,97 @@ pub fn run_parallel_macro<T: Scalar>(
             Some(&CacheSpec::HASWELL_L3_SLICE),
         )
     });
-    if plan.m == 1 && plan.n == 1 {
-        // degenerate dot (n_bands = 1 anyway): run serially through the
-        // same path the serial macro-kernel takes
-        super::executor::run_macro(
-            &mut bufs.arena,
-            &plan,
-            &lp,
-            micro,
-            &mut PackedRows::<T>::new(),
-            &mut PackedCols::<T>::new(),
-        );
-        return;
+    if level.is_none() && threads > 1 {
+        // Parallel-grain guard for *derived* plans (explicit levels are
+        // authoritative): a shape that fits one L3 super-band would
+        // serialize, so refine the grid until it covers the thread count
+        // — rows first (row-pack volume stays constant since row ranges
+        // partition; each extra row band duplicates only the cheaper
+        // kc×n3 column-band packs), then columns as the last resort
+        // (each column split duplicates the m3×kc row-slice packs — the
+        // expensive side).
+        let (mut m3, mut n3) = super::executor::super_band_extents(&lp);
+        let mc = lp.mc.max(1);
+        let nc = lp.nc.max(1);
+        let grid = |m3: usize, n3: usize| plan.m.div_ceil(m3) * plan.n.div_ceil(n3);
+        while grid(m3, n3) < threads && m3 > mc {
+            m3 = (m3 / mc).div_ceil(2).max(1) * mc;
+        }
+        while grid(m3, n3) < threads && n3 > nc {
+            n3 = (n3 / nc).div_ceil(2).max(1) * nc;
+        }
+        lp.m3 = m3;
+        lp.n3 = n3;
     }
-    let mc = lp.mc.max(1);
-    let kc = lp.kc.max(1);
-    let nc = lp.nc.max(1);
-    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
-    let n_bands = plan.n.div_ceil(nc);
+    let (m3, n3) = super::executor::super_band_extents(&lp);
+    let n_i3 = plan.m.div_ceil(m3);
+    let n_j3 = plan.n.div_ceil(n3);
+    let n_sb = n_i3 * n_j3;
+    let workers = threads.min(n_sb);
     let arena_len = bufs.arena.len();
-    let mut packed_rows = PackedRows::<T>::new();
-    for k0 in (0..plan.k).step_by(kc) {
-        let kcc = (k0 + kc).min(plan.k) - k0;
-        packed_rows.pack_slice(&bufs.arena, &plan, mc, k0, kcc);
-        let pr = &packed_rows;
-        let plan = &plan;
-        let next = AtomicUsize::new(0);
-        let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
-        std::thread::scope(|scope| {
-            for _ in 0..threads.min(n_bands) {
-                let next = &next;
-                let arena_ptr = &arena_ptr;
-                scope.spawn(move || {
-                    let mut packed_cols = PackedCols::<T>::new();
-                    loop {
-                        let band = next.fetch_add(1, Ordering::Relaxed);
-                        if band >= n_bands {
-                            break;
-                        }
-                        let j0 = band * nc;
-                        let ncc = (j0 + nc).min(plan.n) - j0;
-                        // SAFETY: bands are disjoint output element sets;
-                        // the inputs and the shared packed rows are
-                        // read-only here, so each arena element is written
-                        // by at most one thread.
-                        let arena: &mut [T] =
-                            unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
-                        match T::nr(micro) {
-                            4 => macro_band::<T, 4>(
-                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
-                            ),
-                            6 => macro_band::<T, 6>(
-                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
-                            ),
-                            8 => macro_band::<T, 8>(
-                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
-                            ),
-                            12 => macro_band::<T, 12>(
-                                arena, pr, &mut packed_cols, plan, k0, kcc, j0, ncc, l1,
-                            ),
-                            w => unreachable!("unsupported register-tile width {w}"),
-                        }
+    let plan = &plan;
+    let lp = &lp;
+    let next = AtomicUsize::new(0);
+    let row_packs = AtomicU64::new(0);
+    let col_packs = AtomicU64::new(0);
+    let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let row_packs = &row_packs;
+            let col_packs = &col_packs;
+            let arena_ptr = &arena_ptr;
+            scope.spawn(move || {
+                // thread-local pack buffers: the claimed band's row slice
+                // and column bands are packed (and re-used) here, never
+                // shared with another worker
+                let mut rows = PackedRows::<T>::new();
+                let mut cols = PackedCols::<T>::new();
+                let (mut rp, mut cp) = (0u64, 0u64);
+                loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= n_sb {
+                        break;
                     }
-                });
-            }
-        });
-    }
-}
-
-/// One worker's macro-kernel band: pack the `kc×nc` column block
-/// thread-locally, then drive the L1 tiles of every shared row block.
-#[allow(clippy::too_many_arguments)]
-fn macro_band<T: Scalar, const NRW: usize>(
-    arena: &mut [T],
-    pr: &PackedRows<T>,
-    packed_cols: &mut PackedCols<T>,
-    plan: &RunPlan,
-    k0: usize,
-    kcc: usize,
-    j0: usize,
-    ncc: usize,
-    l1: (usize, usize),
-) {
-    packed_cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
-    for bi in 0..pr.n_blocks() {
-        run_macro_block::<T, NRW>(pr.block(bi), packed_cols, plan, j0, l1, arena);
+                    let i3 = (b % n_i3) * m3;
+                    let j3 = (b / n_i3) * n3;
+                    let m3c = m3.min(plan.m - i3);
+                    let n3c = n3.min(plan.n - j3);
+                    // SAFETY: super-bands are disjoint output element
+                    // sets (row range × column range through an injective
+                    // output map, checked above) and the inputs are
+                    // read-only during the run, so each arena element is
+                    // written by at most one thread.
+                    let arena: &mut [T] =
+                        unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
+                    let (r, c) = match T::nr(micro) {
+                        4 => super::executor::run_super_band::<T, 4>(
+                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        6 => super::executor::run_super_band::<T, 6>(
+                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        8 => super::executor::run_super_band::<T, 8>(
+                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        12 => super::executor::run_super_band::<T, 12>(
+                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        w => unreachable!("unsupported register-tile width {w}"),
+                    };
+                    rp += r;
+                    cp += c;
+                }
+                row_packs.fetch_add(rp, Ordering::Relaxed);
+                col_packs.fetch_add(cp, Ordering::Relaxed);
+            });
+        }
+    });
+    ParallelMacroStats {
+        super_bands: n_sb,
+        workers,
+        row_slice_packs: row_packs.load(Ordering::Relaxed),
+        col_band_packs: col_packs.load(Ordering::Relaxed),
     }
 }
 
@@ -447,7 +508,8 @@ mod tests {
     #[test]
     fn parallel_macro_explicit_shape_matches_reference() {
         // multiple macro blocks in every dimension, bands narrower than
-        // the L1 tile, threads > bands
+        // the L1 tile, super-band extents dividing neither m nor n,
+        // threads > super-bands (2×3 grid, 8 threads)
         let k = ops::matmul(29, 23, 26, 8, 0);
         let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
         let lp = LevelPlan {
@@ -455,6 +517,8 @@ mod tests {
             mc: 12,
             kc: 7,
             nc: 5,
+            m3: 24,
+            n3: 10,
         };
         for threads in [1, 3, 8] {
             for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
@@ -480,6 +544,8 @@ mod tests {
             mc: 12,
             kc: 7,
             nc: 9,
+            m3: 12,
+            n3: 18,
         };
         for threads in [1, 3] {
             for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
@@ -494,6 +560,143 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn parallel_macro_dot_short_circuits_without_packing() {
+        // the degenerate m = n = 1 form must take the dot microkernel
+        // directly — no pack buffers, no worker threads
+        for kernel in [ops::convolution(57, 8, 0), ops::scalar_product(41, 8, 0)] {
+            let s = TiledSchedule::new(TileBasis::rect(&[8]));
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+            let want = bufs.reference();
+            let stats =
+                run_parallel_macro_stats(&mut bufs, &kernel, &s, 4, None, MicroShape::Mr8Nr4);
+            assert_eq!(stats.row_slice_packs, 0, "dot path must not pack rows");
+            assert_eq!(stats.col_band_packs, 0, "dot path must not pack columns");
+            assert_eq!((stats.super_bands, stats.workers), (1, 1));
+            assert!(
+                max_abs_diff(&want, &bufs.output()) < 1e-9,
+                "{}",
+                kernel.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_macro_pack_counts_independent_of_threads() {
+        // the pack-discipline invariant: each claimed super-band's row
+        // slice is packed exactly once per kc step by its owning worker,
+        // each column band once per (band, kc step) — totals must not
+        // depend on the thread count, including oversubscription
+        let k = ops::matmul(40, 14, 22, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 7,
+            nc: 5,
+            m3: 16,
+            n3: 10,
+        };
+        let kslices = 2u64; // ceil(14 / 7)
+        let (n_i3, n_j3) = (3usize, 3usize); // ceil(40/16) × ceil(22/10)
+        let col_bands_per_band: u64 = 2 + 2 + 1; // ceil(10/5), ceil(10/5), ceil(2/5)
+        for threads in [1usize, 2, 5, 16] {
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+            bufs.fill_ints(3, 0x51);
+            let want = bufs.reference();
+            let stats =
+                run_parallel_macro_stats(&mut bufs, &k, &s, threads, Some(lp), MicroShape::Mr8Nr4);
+            assert_eq!(stats.super_bands, n_i3 * n_j3);
+            assert_eq!(stats.workers, threads.min(n_i3 * n_j3));
+            assert_eq!(
+                stats.row_slice_packs,
+                (n_i3 * n_j3) as u64 * kslices,
+                "row-slice pack discipline broken at threads={threads}"
+            );
+            assert_eq!(
+                stats.col_band_packs,
+                col_bands_per_band * n_i3 as u64 * kslices,
+                "column-band pack discipline broken at threads={threads}"
+            );
+            assert_eq!(bufs.output(), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn derived_plan_refines_grain_for_threads() {
+        // 192×256×64 f64: the derived heuristic gives mc = 64 and one
+        // 192-row super-band — serial. With 4 threads the grain guard
+        // must refine the rows down to mc, yielding the maximal 3-band
+        // grid (ceil(192/64) × 1) and 3 workers
+        let k = ops::matmul(192, 256, 64, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+        let want = bufs.reference();
+        let stats = run_parallel_macro_stats(&mut bufs, &k, &s, 4, None, MicroShape::Mr8Nr4);
+        assert!(
+            stats.super_bands >= 3,
+            "derived grid must refine for the thread count: {stats:?}"
+        );
+        assert!(stats.workers >= 3, "{stats:?}");
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    }
+
+    #[test]
+    fn single_super_band_degenerates_to_flat_schedule() {
+        // a plan with no super-band level (m3/n3 ≥ the GEMM extents) must
+        // claim exactly one band on one worker and walk the identical
+        // schedule as the serial macro-kernel — bitwise
+        use crate::codegen::executor::run_macro;
+        let k = ops::matmul(33, 17, 21, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let flat = LevelPlan::flat((8, 8, 8), 12, 6, 7);
+        let mut par = KernelBuffers::<f64>::from_kernel(&k);
+        par.fill_ints(3, 0x5F);
+        let mut ser = par.clone();
+        let want = par.reference();
+        let stats = run_parallel_macro_stats(&mut par, &k, &s, 4, Some(flat), MicroShape::Mr8Nr4);
+        assert_eq!(stats.super_bands, 1, "flat plan must be a single super-band");
+        assert_eq!(stats.workers, 1);
+        let gf = GemmForm::of(&k).unwrap();
+        let plan = gf.plan_box(&kernel_views(&k), &[0, 0, 0], k.extents());
+        run_macro(
+            &mut ser.arena,
+            &plan,
+            &flat,
+            MicroShape::Mr8Nr4,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+        );
+        assert_eq!(par.output(), want);
+        assert_eq!(
+            ser.output(),
+            par.output(),
+            "single-band parallel run must be bitwise the serial schedule"
+        );
+    }
+
+    #[test]
+    fn unaligned_super_band_extents_are_normalized() {
+        // m3/n3 that are not mc/nc multiples are aligned down, never up:
+        // the schedule stays correct and the grid reflects the aligned
+        // extents (m3 19→16 with mc=8, n3 7→5 with nc=5)
+        let k = ops::matmul(30, 11, 13, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 6,
+            nc: 5,
+            m3: 19,
+            n3: 7,
+        };
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+        let want = bufs.reference();
+        let stats = run_parallel_macro_stats(&mut bufs, &k, &s, 3, Some(lp), MicroShape::Mr8Nr4);
+        assert_eq!(stats.super_bands, 30usize.div_ceil(16) * 13usize.div_ceil(5));
+        assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
     }
 
     #[test]

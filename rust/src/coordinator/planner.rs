@@ -37,10 +37,12 @@ pub struct Plan {
     /// Tile shape the lattice model preferred, in GEMM-normal order
     /// (rows, reduction, columns).
     pub model_tile: (usize, usize, usize),
-    /// Two-level macro/micro blocking: the L1 tile above driven inside
-    /// L2/L3-sized `mc×kc×nc` macro blocks, selected per level
-    /// ([`tiling::level_plan`] against the Haswell L2 + L3-slice specs,
-    /// at the plan's element size).
+    /// Three-level macro/micro blocking: the L1 tile above driven inside
+    /// L2-sized `mc×kc×nc` macro blocks, themselves partitioned into
+    /// `m3×n3` L3 super-bands (the parallel scheduler's work unit),
+    /// selected per level ([`tiling::level_plan`] against the Haswell
+    /// L2 + L3-slice specs, at the plan's element size and the kernel's
+    /// own GEMM form).
     pub level: tiling::LevelPlan,
     /// Register-tile width class the engine dispatches (the dtype's
     /// startup-autotune winner when the registry recorded one; narrow
@@ -57,10 +59,12 @@ pub struct Plan {
 
 impl Plan {
     /// One-line report of the plan including the dtype, the multi-level
-    /// block shape and the per-dtype register-tile width.
+    /// block shape (macro blocks + L3 super-band) and the per-dtype
+    /// register-tile width.
     pub fn describe(&self) -> String {
         format!(
-            "{} [{}/{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, micro {}, artifact {}",
+            "{} [{}/{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, super m3={} n3={}, \
+             micro {}, artifact {}",
             self.plan_name,
             self.kernel,
             self.dtype.name(),
@@ -71,6 +75,8 @@ impl Plan {
             self.level.mc,
             self.level.kc,
             self.level.nc,
+            self.level.m3,
+            self.level.n3,
             self.micro.label_for(self.dtype),
             self.artifact
         )
@@ -342,9 +348,17 @@ mod tests {
         assert_eq!(p.level.nc % NR, 0);
         assert!(p.level.kc >= 1 && p.level.kc <= 512);
         // the packed B block targets L2 (half capacity + MR-row slack)
-        assert!(p.level.mc * p.level.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * p.level.kc * 8);
+        let half_l2 = CacheSpec::HASWELL_L2.capacity / 2;
+        assert!(p.level.mc * p.level.kc * 8 <= half_l2 + MR * p.level.kc * 8);
+        // the L3 super-band is mc/nc-aligned and its packed row slice
+        // targets a quarter of the L3 slice
+        assert_eq!(p.level.m3 % p.level.mc, 0);
+        assert_eq!(p.level.n3 % p.level.nc, 0);
+        let quarter_l3 = CacheSpec::HASWELL_L3_SLICE.capacity / 4;
+        assert!(p.level.m3 * p.level.kc * 8 <= quarter_l3 + p.level.mc * p.level.kc * 8);
         let d = p.describe();
         assert!(d.contains("macro mc="), "{d}");
+        assert!(d.contains("super m3="), "{d}");
         assert!(d.contains("micro 8x"), "{d}");
         assert!(d.contains("/f64"), "{d}");
     }
@@ -359,11 +373,18 @@ mod tests {
         assert_eq!(conv.k, 4096);
         assert!(conv.artifact.contains("packed-engine"));
         assert!(conv.level.kc >= 1);
+        // kernel-aware selection: the degenerate dot form blocks its unit
+        // dimensions at 1 instead of padding to matmul's MR/NR quanta
+        assert_eq!((conv.level.mc, conv.level.nc), (1, 1), "{:?}", conv.level);
+        assert_eq!((conv.level.m3, conv.level.n3), (1, 1), "{:?}", conv.level);
         let kron = planner.plan_kernel(&reg, &ops::kronecker(16, 16, 24, 24, 8, 0));
         assert_eq!(kron.kernel, "kronecker");
         assert_eq!(kron.m, 24 * 24);
         assert_eq!(kron.n, 16 * 16);
         assert_eq!(kron.k, 1);
+        // kernel-aware selection: the reduction-free outer product has no
+        // reduction depth to block
+        assert_eq!(kron.level.kc, 1, "{:?}", kron.level);
         let d = kron.describe();
         assert!(d.contains("kronecker"), "{d}");
         // plans are cached per kernel/extents

@@ -235,9 +235,12 @@ impl Service {
 /// The f32 packed-macro-kernel serve engine: one resident
 /// [`KernelBuffers<f32>`] arena holding `y` — whose row panels really
 /// are packed once, at startup ([`pack_row_slices`]) — and the per-job
-/// `x`, driven by [`run_macro_prepacked`] with the plan's macro shape
-/// and the f32 autotune winner. Per job only the `x` column bands are
-/// packed; the weight panels are reused as-is.
+/// `x`, driven by [`run_macro_prepacked`] with the plan's full
+/// three-level shape (the `m3×n3` L3 super-band nest selects whole
+/// block subranges of the pre-packed slices, so the serve loop follows
+/// the same schedule as the batch engine without duplicating the
+/// resident panels) and the f32 autotune winner. Per job only the `x`
+/// column bands are packed; the weight panels are reused as-is.
 ///
 /// Row-major serving lowers onto the column-major engine via the
 /// transpose identity `(x·y)ᵀ = yᵀ·xᵀ`: the kernel computes the
@@ -538,6 +541,11 @@ mod tests {
         let plan = svc.plan().clone();
         assert_eq!(plan.dtype, DType::F32, "{}", plan.describe());
         assert!(plan.artifact.contains("packed-engine"), "{}", plan.describe());
+        // the served plan carries (and reports) the L3 super-band shape
+        // the prepacked engine threads through run_macro_prepacked
+        assert!(plan.describe().contains("super m3="), "{}", plan.describe());
+        assert_eq!(plan.level.m3 % plan.level.mc, 0, "{}", plan.describe());
+        assert_eq!(plan.level.n3 % plan.level.nc, 0, "{}", plan.describe());
         let xs: Vec<Vec<f32>> = (0..4)
             .map(|_| (0..m * k).map(|_| rnd()).collect())
             .collect();

@@ -24,7 +24,12 @@ pub struct Utilization {
 /// Measure cacheline utilization of `tile` (2-D, on the operand's index
 /// space) over `table`, sampling all whole tiles with footpoints in
 /// `[0, feet)²`.
-pub fn line_utilization(table: &Table, tile: &TileBasis, spec: &CacheSpec, feet: i128) -> Utilization {
+pub fn line_utilization(
+    table: &Table,
+    tile: &TileBasis,
+    spec: &CacheSpec,
+    feet: i128,
+) -> Utilization {
     assert_eq!(tile.dim(), 2);
     let dims = table.dims();
     let extents = [dims[0], dims[1]];

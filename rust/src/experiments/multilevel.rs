@@ -3,9 +3,10 @@
 //!
 //! The paper tiles for a single level (L1) and defers multi-level tiling.
 //! This experiment quantifies both sides: each plan runs through a
-//! two-level Haswell hierarchy (L1d 32 KiB/8-way + L2 256 KiB/8-way) and
-//! reports per-level misses, and the two-level **macro-kernel**
-//! ([`run_macro`](crate::codegen::run_macro)) is traced at address level
+//! three-level Haswell hierarchy (L1d 32 KiB/8-way + L2 256 KiB/8-way +
+//! a 2 MiB/16-way L3 slice) and reports per-level misses, and the
+//! three-level **macro-kernel** (L3 super-bands over L2 macro blocks,
+//! [`run_macro`](crate::codegen::run_macro)) is traced at address level
 //! — pack reads stream the arena once per macro block, micro-kernel reads
 //! hit the packed panels (which get their own simulated addresses past
 //! the arena) — so its L2 advantage over the single-level plans is
@@ -34,6 +35,9 @@ pub struct MultiLevelRow {
     pub strategy: String,
     pub l1_misses: u64,
     pub l2_misses: u64,
+    /// Misses of the modelled L3 slice (the level the super-band
+    /// schedule is sized against).
+    pub l3_misses: u64,
     /// Simple cycle estimate from the hierarchy's latency model.
     pub est_cycles: u64,
     /// Executed throughput of the strategy (lattice points per second,
@@ -55,8 +59,11 @@ pub fn trace_pointwise(kernel: &Kernel, scanner: &dyn Scanner, h: &mut Hierarchy
 
 /// The macro shape this experiment simulates: quarter-L2 packed row and
 /// column blocks, so both stay resident together with the output band
-/// during a macro block (the modelled hierarchy has no L3, so `nc` is
-/// bounded the same way as `mc`).
+/// during a macro block (`nc` is bounded the same way as `mc`), and a
+/// single super-band — the sizes this experiment sweeps stay below the
+/// L3 slice, so the flat schedule is the right default; the super-band
+/// split is exercised explicitly by
+/// [`super_bands_cut_l3_misses_when_flat_bands_thrash`](self).
 pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
     let gf = GemmForm::of(kernel).expect("GEMM-form kernel");
     let (m, n, k) = (gf.m, gf.n, gf.k);
@@ -69,19 +76,23 @@ pub fn macro_plan_for(kernel: &Kernel) -> LevelPlan {
         mc,
         kc,
         nc,
+        m3: m.max(1).div_ceil(mc) * mc,
+        n3: n.max(1).div_ceil(nc) * nc,
     }
 }
 
-/// Address-level trace of the two-level macro-kernel, mirroring
-/// [`run_macro`] over the kernel's whole-domain [`RunPlan`] exactly: pack
-/// reads/writes touch the arena and the packed buffers (placed
-/// line-aligned past the arena), the micro-kernel reads only packed
-/// panels, and each output element is touched once per register block per
-/// reduction slice. Works for any GEMM-form kernel (the trace models the
-/// default f64 8×4 register tile; degenerate `m = n = 1` kernels are
-/// traced through the packed formulation even though the real engine now
-/// short-circuits them into the dot microkernel — the trace is an upper
-/// bound there).
+/// Address-level trace of the three-level macro-kernel, mirroring
+/// [`run_macro`] over the kernel's whole-domain [`RunPlan`] exactly —
+/// including the `m3×n3` L3 super-band nest: each super-band packs its
+/// own row slice per reduction step (into the *same* reused buffer
+/// addresses, like the real thread-local `Vec`s), pack reads/writes
+/// touch the arena and the packed buffers (placed line-aligned past the
+/// arena), the micro-kernel reads only packed panels, and each output
+/// element is touched once per register block per reduction slice.
+/// Works for any GEMM-form kernel (the trace models the default f64 8×4
+/// register tile; degenerate `m = n = 1` kernels are traced through the
+/// packed formulation even though the real engine now short-circuits
+/// them into the dot microkernel — the trace is an upper bound there).
 pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
     let views = kernel_views(kernel);
     let gf = GemmForm::of(kernel).expect("GEMM-form kernel");
@@ -90,8 +101,11 @@ pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
     let mc = lp.mc.clamp(1, plan.m.max(1));
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
+    // super-band extents from the engine's own normalization, so the
+    // trace can never desynchronize from the executed schedule
+    let (m3, n3) = crate::codegen::executor::super_band_extents(lp);
     // packed buffers live after the arena, line-aligned, and are reused
-    // across macro blocks exactly like the real Vec allocations
+    // across super-bands and macro blocks exactly like the real Vecs
     let end = kernel
         .operands()
         .iter()
@@ -99,89 +113,108 @@ pub fn trace_macro_kernel(kernel: &Kernel, lp: &LevelPlan, h: &mut Hierarchy) {
         .max()
         .unwrap();
     let rows_base = end.div_ceil(64) * 64;
-    // the panel list depends only on the rows, not on the slice depth —
-    // precompute it per block exactly as PackedRows does
-    let mut block_panels: Vec<Vec<RowPanel>> = Vec::new();
-    let mut r0 = 0usize;
-    while r0 < plan.m {
-        let mcc = mc.min(plan.m - r0);
-        block_panels.push(plan.row_panels(r0, mcc));
-        r0 += mcc;
+    // per row super-band: the mc-block panel lists, exactly as
+    // PackedRows::pack_slice_range builds them (panel indices restart at
+    // 0 per band — the buffer is reused)
+    let mut band_panels: Vec<Vec<Vec<RowPanel>>> = Vec::new();
+    let mut i3 = 0usize;
+    while i3 < plan.m {
+        let m3c = m3.min(plan.m - i3);
+        let mut blocks = Vec::new();
+        let mut r0 = i3;
+        while r0 < i3 + m3c {
+            let mcc = mc.min(i3 + m3c - r0);
+            blocks.push(plan.row_panels(r0, mcc));
+            r0 += mcc;
+        }
+        band_panels.push(blocks);
+        i3 += m3c;
     }
-    let total_panels: usize = block_panels.iter().map(|b| b.len()).sum();
-    // buffer bases sized by the deepest (full-kc) slice; per-slice panel
-    // strides below use the clipped kcc, exactly like the real packers
-    let cols_base = (rows_base + 8 * total_panels * kc * MR).div_ceil(64) * 64;
+    // buffer bases sized by the widest band and deepest slice; per-slice
+    // panel strides below use the clipped kcc, like the real packers
+    let max_panels: usize = band_panels
+        .iter()
+        .map(|b| b.iter().map(|p| p.len()).sum::<usize>())
+        .max()
+        .unwrap_or(0);
+    let cols_base = (rows_base + 8 * max_panels * kc * MR).div_ceil(64) * 64;
     let pt = lp.l1_tile.0.div_ceil(MR).max(1);
     let qt = lp.l1_tile.1.div_ceil(NR).max(1);
-    for k0 in (0..plan.k).step_by(kc) {
-        let kcc = (k0 + kc).min(plan.k) - k0;
-        // pack the row slice: stream the arena once, write the panels
-        let mut gpi = 0usize; // global panel index across blocks
-        for panels in &block_panels {
-            for p in panels {
-                for t in 0..kcc {
-                    for r in 0..p.rows {
-                        h.access(8 * (p.row + plan.red_row[k0 + t]) as usize + 8 * r);
-                        h.access(rows_base + 8 * (gpi * kcc * MR + t * MR + r));
+    for blocks in &band_panels {
+        for j3 in (0..plan.n).step_by(n3) {
+            let n3c = n3.min(plan.n - j3);
+            for k0 in (0..plan.k).step_by(kc) {
+                let kcc = (k0 + kc).min(plan.k) - k0;
+                // pack the band's row slice: stream the arena once,
+                // write the panels
+                let mut gpi = 0usize; // panel index within the band
+                for panels in blocks {
+                    for p in panels {
+                        for t in 0..kcc {
+                            for r in 0..p.rows {
+                                h.access(8 * (p.row + plan.red_row[k0 + t]) as usize + 8 * r);
+                                h.access(rows_base + 8 * (gpi * kcc * MR + t * MR + r));
+                            }
+                        }
+                        gpi += 1;
                     }
                 }
-                gpi += 1;
-            }
-        }
-        for j0 in (0..plan.n).step_by(nc) {
-            let ncc = (j0 + nc).min(plan.n) - j0;
-            // pack the column band
-            for q in 0..ncc.div_ceil(NR) {
-                let cols = NR.min(ncc - q * NR);
-                for c in 0..cols {
-                    let ci = plan.col_in[j0 + q * NR + c];
-                    for t in 0..kcc {
-                        h.access(8 * (ci + plan.red_col[k0 + t]) as usize);
-                        h.access(cols_base + 8 * (q * kcc * NR + t * NR + c));
+                for j0 in (j3..j3 + n3c).step_by(nc) {
+                    let ncc = (j0 + nc).min(j3 + n3c) - j0;
+                    // pack the column band
+                    for q in 0..ncc.div_ceil(NR) {
+                        let cols = NR.min(ncc - q * NR);
+                        for c in 0..cols {
+                            let ci = plan.col_in[j0 + q * NR + c];
+                            for t in 0..kcc {
+                                h.access(8 * (ci + plan.red_col[k0 + t]) as usize);
+                                h.access(cols_base + 8 * (q * kcc * NR + t * NR + c));
+                            }
+                        }
                     }
-                }
-            }
-            // macro blocks: L1 tiles over the packed panels, mirroring
-            // dispatch_block's column-tile → row-tile → q → p nest
-            let mut block_gpi = 0usize;
-            for panels in &block_panels {
-                let cpanels = ncc.div_ceil(NR);
-                for q0 in (0..cpanels).step_by(qt) {
-                    let q_hi = cpanels.min(q0 + qt);
-                    for p0 in (0..panels.len()).step_by(pt) {
-                        let p_hi = panels.len().min(p0 + pt);
-                        for q in q0..q_hi {
-                            let nr = NR.min(ncc - q * NR);
-                            for (pi, p) in
-                                panels.iter().enumerate().take(p_hi).skip(p0)
-                            {
-                                let gpi = block_gpi + pi;
-                                for t in 0..kcc {
-                                    for r in 0..MR {
-                                        h.access(
-                                            rows_base
-                                                + 8 * (gpi * kcc * MR + t * MR + r),
-                                        );
-                                    }
-                                    for c in 0..NR {
-                                        h.access(
-                                            cols_base
-                                                + 8 * (q * kcc * NR + t * NR + c),
-                                        );
-                                    }
-                                }
-                                for c in 0..nr {
-                                    let col = plan.col_out[j0 + q * NR + c];
-                                    for r in 0..p.rows {
-                                        h.access(8 * (p.out + col) as usize + 8 * r);
+                    // macro blocks: L1 tiles over the packed panels,
+                    // mirroring dispatch_block's column-tile → row-tile
+                    // → q → p nest
+                    let mut block_gpi = 0usize;
+                    for panels in blocks {
+                        let cpanels = ncc.div_ceil(NR);
+                        for q0 in (0..cpanels).step_by(qt) {
+                            let q_hi = cpanels.min(q0 + qt);
+                            for p0 in (0..panels.len()).step_by(pt) {
+                                let p_hi = panels.len().min(p0 + pt);
+                                for q in q0..q_hi {
+                                    let nr = NR.min(ncc - q * NR);
+                                    for (pi, p) in
+                                        panels.iter().enumerate().take(p_hi).skip(p0)
+                                    {
+                                        let gpi = block_gpi + pi;
+                                        for t in 0..kcc {
+                                            for r in 0..MR {
+                                                h.access(
+                                                    rows_base
+                                                        + 8 * (gpi * kcc * MR + t * MR + r),
+                                                );
+                                            }
+                                            for c in 0..NR {
+                                                h.access(
+                                                    cols_base
+                                                        + 8 * (q * kcc * NR + t * NR + c),
+                                                );
+                                            }
+                                        }
+                                        for c in 0..nr {
+                                            let col = plan.col_out[j0 + q * NR + c];
+                                            for r in 0..p.rows {
+                                                h.access(8 * (p.out + col) as usize + 8 * r);
+                                            }
+                                        }
                                     }
                                 }
                             }
                         }
+                        block_gpi += panels.len();
                     }
                 }
-                block_gpi += panels.len();
             }
         }
     }
@@ -212,7 +245,7 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
         entries.push((format!("ours[{name}]"), Box::new(plan)));
 
         for (strategy, scanner) in entries {
-            let mut h = Hierarchy::haswell(Policy::Lru);
+            let mut h = Hierarchy::haswell_l3(Policy::Lru);
             trace_pointwise(&kernel, scanner.as_ref(), &mut h);
             let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
             let t0 = Instant::now();
@@ -223,14 +256,15 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
                 strategy,
                 l1_misses: h.level(0).stats().misses(),
                 l2_misses: h.level(1).stats().misses(),
+                l3_misses: h.level(2).stats().misses(),
                 est_cycles: h.cost_model(),
                 mops,
             });
         }
 
-        // the two-level macro-kernel: simulated trace + real execution
+        // the three-level macro-kernel: simulated trace + real execution
         let lp = macro_plan_for(&kernel);
-        let mut h = Hierarchy::haswell(Policy::Lru);
+        let mut h = Hierarchy::haswell_l3(Policy::Lru);
         trace_macro_kernel(&kernel, &lp, &mut h);
         let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
         let want = bufs.reference();
@@ -255,6 +289,7 @@ pub fn run(sizes: &[i64]) -> Vec<MultiLevelRow> {
             strategy: "macro-kernel".to_string(),
             l1_misses: h.level(0).stats().misses(),
             l2_misses: h.level(1).stats().misses(),
+            l3_misses: h.level(2).stats().misses(),
             est_cycles: h.cost_model(),
             mops,
         });
@@ -306,6 +341,43 @@ mod tests {
             multi < single,
             "macro-kernel L2 misses {multi} not below single-level {single}"
         );
+    }
+
+    #[test]
+    fn super_bands_cut_l3_misses_when_flat_bands_thrash() {
+        // m×kc = 4608×64 f64 = 2.25 MiB of packed row panels: the flat
+        // (single-super-band) schedule streams them through the 2 MiB L3
+        // slice once per column band, so the second band re-misses the
+        // whole slice; 512-row super-bands keep each band's 256 KiB row
+        // slice L3-resident across its column bands
+        let (m, k, n) = (4608i64, 64, 64);
+        let kernel = ops::matmul(m, k, n, 8, 0);
+        let flat = LevelPlan {
+            l1_tile: (32, 32, 32),
+            mc: 64,
+            kc: 64,
+            nc: 32,
+            m3: 4608,
+            n3: 64,
+        };
+        let sup = LevelPlan {
+            m3: 512,
+            ..flat
+        };
+        let mut hf = Hierarchy::haswell_l3(Policy::Lru);
+        trace_macro_kernel(&kernel, &flat, &mut hf);
+        let mut hs = Hierarchy::haswell_l3(Policy::Lru);
+        trace_macro_kernel(&kernel, &sup, &mut hs);
+        let flat_l3 = hf.level(2).stats().misses();
+        let sup_l3 = hs.level(2).stats().misses();
+        assert!(
+            sup_l3 < flat_l3,
+            "super-band L3 misses {sup_l3} not below flat-band {flat_l3}"
+        );
+        // the super-band schedule issues *more* accesses (column bands
+        // repack once per row super-band) yet misses L3 less — the win
+        // is locality, not less work
+        assert!(hs.level(0).stats().accesses > hf.level(0).stats().accesses);
     }
 
     #[test]

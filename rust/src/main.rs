@@ -501,15 +501,24 @@ fn bench_model_cost() {
 }
 
 fn bench_multilevel() {
-    println!("extension — two-level hierarchy behaviour of the plans:\n");
+    println!("extension — three-level hierarchy behaviour of the plans:\n");
     let rows = experiments::multilevel::run(&[96, 128]);
-    let mut t = Table::new(&["n", "strategy", "L1 misses", "L2 misses", "est cycles", "Mops/s"]);
+    let mut t = Table::new(&[
+        "n",
+        "strategy",
+        "L1 misses",
+        "L2 misses",
+        "L3 misses",
+        "est cycles",
+        "Mops/s",
+    ]);
     for r in rows {
         t.row(vec![
             r.n.to_string(),
             r.strategy.clone(),
             r.l1_misses.to_string(),
             r.l2_misses.to_string(),
+            r.l3_misses.to_string(),
             r.est_cycles.to_string(),
             format!("{:.1}", r.mops),
         ]);

@@ -15,6 +15,7 @@
 
 use crate::cache::CacheSpec;
 use crate::codegen::microkernel::{MR, NR};
+use crate::codegen::runplan::GemmForm;
 use crate::conflict::{ConflictAnalysis, MissModel, ModelCounts};
 use crate::domain::Kernel;
 use crate::lattice::{IMat, Lattice};
@@ -22,10 +23,13 @@ use crate::lattice::{IMat, Lattice};
 use super::schedule::TiledSchedule;
 use super::tile::TileBasis;
 
-/// A two-level tiling decision: the L1 tile the paper's selector picks,
-/// driven inside BLIS-style `mc×kc×nc` macro blocks sized for the outer
-/// cache levels (L2 for the packed B block, an L3 slice for the packed C
-/// block). Executed by [`crate::codegen::executor::run_macro`].
+/// A three-level tiling decision: the L1 tile the paper's selector
+/// picks, driven inside BLIS-style `mc×kc×nc` macro blocks sized for the
+/// outer cache levels, which in turn partition into `m3×n3` **L3
+/// super-bands** — the unit the parallel scheduler hands to workers and
+/// the row range whose packed slice must stay L3-slice-resident.
+/// Executed by [`crate::codegen::executor::run_macro`] /
+/// [`crate::codegen::run_parallel_macro`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LevelPlan {
     /// L1 tile footprint `(ti, tj, tk)` in loop space (i, j, kk).
@@ -34,17 +38,50 @@ pub struct LevelPlan {
     pub mc: usize,
     /// Macro-block k depth shared by the packed B and C blocks.
     pub kc: usize,
-    /// Macro-block output columns (`NR`-aligned) — the parallel unit.
+    /// Macro-block output columns (`NR`-aligned).
     pub nc: usize,
+    /// Super-band rows (`mc`-aligned): the row range one worker packs and
+    /// streams per reduction slice. Values ≥ the GEMM row extent mean a
+    /// single row super-band (the pre-L3 flat schedule).
+    pub m3: usize,
+    /// Super-band output columns (`nc`-aligned). Values ≥ the GEMM
+    /// column extent mean a single column super-band.
+    pub n3: usize,
 }
 
 impl LevelPlan {
+    /// A plan with no L3 super-band level: one super-band covers the
+    /// whole output (the flat two-level schedule). For tests and callers
+    /// that size the macro level by hand.
+    pub fn flat(
+        l1_tile: (usize, usize, usize),
+        mc: usize,
+        kc: usize,
+        nc: usize,
+    ) -> LevelPlan {
+        LevelPlan {
+            l1_tile,
+            mc,
+            kc,
+            nc,
+            m3: usize::MAX,
+            n3: usize::MAX,
+        }
+    }
+
     /// Capacity-driven macro shape: `mc×kc` sized to half of `l2` so the
     /// packed B block stays L2-resident while streaming, `nc` sized so
     /// the packed C block fits half an `l3` slice (whole output width
-    /// when no L3 is modelled). `elem` is the kernel's element size in
-    /// bytes (4 for f32, 8 for f64) — halving it doubles the elements a
-    /// level holds, so f32 plans legitimately get 2× the block area.
+    /// when no L3 is modelled), and the `m3×n3` super-band sized so one
+    /// worker's packed row slice (`m3×kc`, a quarter of the slice) plus
+    /// its output band (`m3×n3`, half the slice) stay L3-slice-resident
+    /// across the reduction. `extents` is the kernel's **GEMM-form**
+    /// `(m, n, k)` — convolution and scalar product pass `(1, 1, k)`,
+    /// Kronecker its factor products — so degenerate dimensions get
+    /// degenerate blocks (`mc = 1` when `m = 1`) instead of the matmul
+    /// `MR`/`NR` defaults. `elem` is the kernel's element size in bytes
+    /// (4 for f32, 8 for f64) — halving it doubles the elements a level
+    /// holds, so f32 plans legitimately get 2× the block area.
     pub fn heuristic(
         l1_tile: (usize, usize, usize),
         extents: (usize, usize, usize),
@@ -54,20 +91,54 @@ impl LevelPlan {
     ) -> LevelPlan {
         let (m, n, k) = extents;
         let elem = elem.max(1);
-        let half_l2 = (l2.capacity / (2 * elem)).max(MR);
+        // form-aware alignment quanta: a dimension the GEMM form reduces
+        // to (almost) nothing is blocked at its true extent, not padded
+        // to a register-tile multiple
+        let mq = if m >= MR { MR } else { 1 };
+        let nq = if n >= NR { NR } else { 1 };
+        let half_l2 = (l2.capacity / (2 * elem)).max(mq);
         // deep k first: kc is the only k blocking between the macro level
         // and the registers, and it amortizes the A write-back
         let kc = k.clamp(1, 256.max(l1_tile.2));
-        let mc = round_down_mult(half_l2 / kc, MR)
-            .clamp(MR, round_up_mult(m, MR));
+        let mc = round_down_mult(half_l2 / kc, mq).clamp(mq, round_up_mult(m, mq));
         let nc = match l3 {
             Some(l3) => {
-                let cap = (l3.capacity / (2 * elem * kc)).max(NR);
-                round_down_mult(cap, NR).clamp(NR, round_up_mult(n, NR))
+                let cap = (l3.capacity / (2 * elem * kc)).max(nq);
+                round_down_mult(cap, nq).clamp(nq, round_up_mult(n, nq))
             }
-            None => round_up_mult(n, NR),
+            None => round_up_mult(n, nq),
         };
-        LevelPlan { l1_tile, mc, kc, nc }
+        let (m3, n3) = super_band_heuristic((m, n), (mc, kc, nc), elem, l3);
+        LevelPlan {
+            l1_tile,
+            mc,
+            kc,
+            nc,
+            m3,
+            n3,
+        }
+    }
+}
+
+/// Size the `m3×n3` super-band against an L3 slice: the packed row slice
+/// (`m3×kc`) gets a quarter of the slice, the output band (`m3×n3`) half,
+/// leaving headroom for the streaming column bands. Without an L3 spec a
+/// single super-band covers the output (the flat schedule).
+fn super_band_heuristic(
+    (m, n): (usize, usize),
+    (mc, kc, nc): (usize, usize, usize),
+    elem: usize,
+    l3: Option<&CacheSpec>,
+) -> (usize, usize) {
+    match l3 {
+        Some(l3) => {
+            let quarter = (l3.capacity / (4 * elem)).max(1);
+            let half = (l3.capacity / (2 * elem)).max(1);
+            let m3 = round_down_mult(quarter / kc.max(1), mc).clamp(mc, round_up_mult(m, mc));
+            let n3 = round_down_mult(half / m3, nc).clamp(nc, round_up_mult(n, nc));
+            (m3, n3)
+        }
+        None => (round_up_mult(m, mc), round_up_mult(n, nc)),
     }
 }
 
@@ -86,13 +157,22 @@ fn round_up_mult(v: usize, q: usize) -> usize {
 /// lattice rule + sampled-model search the L1 tile comes from, just
 /// against the next level's associativity lattice — then grow the seed
 /// to the level's capacity (the selector's candidate set is bounded, so
-/// growth keeps its aspect ratio). `extents` is the true `(m, n, k)` to
-/// block, which may exceed the (possibly shrunk) model kernel's box.
+/// growth keeps its aspect ratio). `extents` is the true GEMM-form
+/// `(m, n, k)` to block, which may exceed the (possibly shrunk) model
+/// kernel's box.
 ///
-/// The element size comes from the kernel's own tables, so an f32 kernel
-/// (4-byte elements) both reshapes the conflict lattices the seed is
-/// selected against *and* doubles the elements each level's capacity
-/// holds — the selector sees the dtype end to end.
+/// The selection is **kernel-aware**: the winning tile's extents are read
+/// off the kernel's own [`GemmForm`] axis groups, so convolution and
+/// scalar product seed `(mc, kc)` from their degenerate `1×1×k` dot form
+/// (the whole tile is reduction depth), Kronecker from its swapped
+/// `{k,l}×{i,j}` outer-product form (`kc = 1` — there is no reduction to
+/// deepen), and matmul from `{i}×{j}×{kk}` — instead of every kernel
+/// reusing matmul's loop-axis positions. The element size comes from the
+/// kernel's own tables, so an f32 kernel (4-byte elements) both reshapes
+/// the conflict lattices the seed is selected against *and* doubles the
+/// elements each level's capacity holds — the selector sees the dtype
+/// end to end. The `m3×n3` super-band level is sized against `l3` like
+/// [`LevelPlan::heuristic`].
 pub fn level_plan(
     kernel: &Kernel,
     extents: (usize, usize, usize),
@@ -102,6 +182,7 @@ pub fn level_plan(
     sample_classes: usize,
 ) -> LevelPlan {
     let (m, n, k) = extents;
+    let gf = GemmForm::of(kernel);
     let ranked = select(kernel, l2, sample_classes);
     let seed = ranked
         .first()
@@ -110,32 +191,58 @@ pub fn level_plan(
             let ext = |i: usize| -> usize {
                 (0..b.dim())
                     .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
-                    .sum()
+                    .sum::<usize>()
+                    .max(1)
             };
-            (ext(0).max(1), ext(2).max(1))
+            match &gf {
+                // the winning tile's extents over the kernel's own GEMM
+                // row/reduction axis groups — not matmul's loop positions
+                Some(gf) => {
+                    let group = |axes: &[usize]| -> usize {
+                        axes.iter().map(|&t| ext(t)).product::<usize>().max(1)
+                    };
+                    (group(&gf.row_axes), group(&gf.red_axes))
+                }
+                None => {
+                    let d = b.dim();
+                    (ext(0), if d > 2 { ext(2) } else { 1 })
+                }
+            }
         })
-        .unwrap_or((l1_tile.0.max(MR), l1_tile.2.max(1)));
+        .unwrap_or((l1_tile.0.max(1), l1_tile.2.max(1)));
     let elem = kernel.operand(0).table.elem().max(1);
-    let half_l2 = (l2.capacity / (2 * elem)).max(MR);
+    // form-aware quanta, as in the heuristic: degenerate GEMM dimensions
+    // are blocked at their true extent
+    let mq = if m >= MR { MR } else { 1 };
+    let nq = if n >= NR { NR } else { 1 };
+    let half_l2 = (l2.capacity / (2 * elem)).max(mq);
     let (mut mc, mut kc) = seed;
-    mc = round_up_mult(mc, MR);
-    let mc_cap = round_up_mult(m, MR);
+    mc = round_up_mult(mc, mq);
+    let mc_cap = round_up_mult(m, mq);
     while 2 * kc <= k && mc * 2 * kc <= half_l2 {
         kc *= 2;
     }
-    while mc + MR <= mc_cap && (mc + MR) * kc <= half_l2 {
-        mc += MR;
+    while mc + mq <= mc_cap && (mc + mq) * kc <= half_l2 {
+        mc += mq;
     }
     kc = kc.min(k.max(1));
-    mc = mc.min(mc_cap).max(MR);
+    mc = mc.min(mc_cap).max(mq);
     let nc = match l3 {
         Some(l3) => {
-            let cap = (l3.capacity / (2 * elem * kc)).max(NR);
-            round_down_mult(cap, NR).clamp(NR, round_up_mult(n, NR))
+            let cap = (l3.capacity / (2 * elem * kc)).max(nq);
+            round_down_mult(cap, nq).clamp(nq, round_up_mult(n, nq))
         }
-        None => round_up_mult(n, NR),
+        None => round_up_mult(n, nq),
     };
-    LevelPlan { l1_tile, mc, kc, nc }
+    let (m3, n3) = super_band_heuristic((m, n), (mc, kc, nc), elem, l3);
+    LevelPlan {
+        l1_tile,
+        mc,
+        kc,
+        nc,
+        m3,
+        n3,
+    }
 }
 
 /// A fully specified tiling decision for a kernel.
@@ -570,10 +677,69 @@ mod tests {
         assert!(lp.mc * lp.kc * 8 <= CacheSpec::HASWELL_L2.capacity / 2 + MR * lp.kc * 8);
         // packed C block fits half the L3 slice
         assert!(lp.kc * lp.nc * 8 <= CacheSpec::HASWELL_L3_SLICE.capacity / 2 + NR * lp.kc * 8);
+        // the super-band level is mc/nc-aligned and its packed row slice
+        // fits a quarter of the L3 slice
+        assert_eq!(lp.m3 % lp.mc, 0);
+        assert_eq!(lp.n3 % lp.nc, 0);
+        let quarter_l3 = CacheSpec::HASWELL_L3_SLICE.capacity / 4;
+        assert!(lp.m3 * lp.kc * 8 <= quarter_l3 + lp.mc * lp.kc * 8);
         // tiny problems degenerate to a single macro block
         let small =
             LevelPlan::heuristic((8, 8, 8), (24, 24, 24), 8, &CacheSpec::HASWELL_L2, None);
         assert!(small.mc >= 24 && small.nc >= 24 && small.kc == 24);
+        // …and, with no L3 modelled, to a single super-band
+        assert!(small.m3 >= 24 && small.n3 >= 24);
+    }
+
+    #[test]
+    fn heuristic_degenerate_dot_form_blocks_exactly() {
+        // convolution / scalar product pass their GEMM form's (1, 1, k):
+        // the row/column blocks must degenerate to 1, not pad to MR/NR
+        let lp = LevelPlan::heuristic(
+            (1, 1, 64),
+            (1, 1, 4096),
+            8,
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+        );
+        assert_eq!(lp.mc, 1, "{lp:?}");
+        assert_eq!(lp.nc, 1, "{lp:?}");
+        assert_eq!((lp.m3, lp.n3), (1, 1), "{lp:?}");
+        assert!(lp.kc >= 1 && lp.kc <= 4096);
+    }
+
+    #[test]
+    fn level_plan_is_kernel_aware() {
+        use crate::codegen::runplan::GemmForm;
+        // convolution: the selector's winning 1-D tile is pure reduction
+        // depth — mc/nc must come out 1 (its form has m = n = 1), kc > 1
+        let conv = ops::convolution(4096, 8, 0);
+        let lp = level_plan(
+            &conv,
+            (1, 1, 4096),
+            (1, 1, 64),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        assert_eq!((lp.mc, lp.nc), (1, 1), "conv plan not form-aware: {lp:?}");
+        assert!(lp.kc > 1, "conv kc must carry the reduction depth: {lp:?}");
+        assert_eq!((lp.m3, lp.n3), (1, 1), "conv super-band degenerate: {lp:?}");
+        // kronecker: reduction-free outer product — kc must be exactly 1
+        // and the row block must track the form's swapped row group
+        let kron = ops::kronecker(16, 16, 24, 24, 8, 0);
+        let gf = GemmForm::of(&kron).unwrap();
+        let lp = level_plan(
+            &kron,
+            (gf.m, gf.n, gf.k),
+            (24, 24, 1),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        assert_eq!(lp.kc, 1, "kronecker has no reduction to deepen: {lp:?}");
+        assert!(lp.mc <= 576 && lp.mc >= 1);
+        assert_eq!(lp.m3 % lp.mc, 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 
 use latticetile::codegen::executor::{max_abs_diff, KernelBuffers, TiledExecutor};
 use latticetile::codegen::{
-    run_parallel, run_parallel_macro, GemmForm, MicroShape, Scalar,
+    run_parallel, run_parallel_macro, run_parallel_macro_stats, GemmForm, MicroShape, Scalar,
 };
 use latticetile::domain::ops;
 use latticetile::domain::Kernel;
@@ -352,21 +352,89 @@ fn prop_parallel_macro_kronecker() {
             rng.range_i64(2, 6),
         );
         let gf = GemmForm::of(&ops::kronecker(dims.0, dims.1, dims.2, dims.3, 8, 0)).unwrap();
+        let mc = rng.range_usize(2, 16).min(gf.m.max(2));
+        let nc = rng.range_usize(2, 14).min(gf.n.max(2));
         let lp = LevelPlan {
             l1_tile: (
                 rng.range_usize(2, 12),
                 rng.range_usize(2, 12),
                 1,
             ),
-            mc: rng.range_usize(2, 16).min(gf.m.max(2)),
+            mc,
             kc: 1,
-            nc: rng.range_usize(2, 14).min(gf.n.max(2)),
+            nc,
+            // super-bands of 1–3 macro blocks, frequently not dividing
+            // the GEMM extents
+            m3: mc * rng.range_usize(1, 3),
+            n3: nc * rng.range_usize(1, 3),
         };
         let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
         let threads = rng.range_usize(1, 4);
         let seed = 0x31 ^ case as u64;
         run_case::<f64>(dims, lp, micro, threads, case, seed);
         run_case::<f32>(dims, lp, micro, threads, case, seed);
+    });
+}
+
+/// The L3 super-band parallel scheduler at both dtypes and both
+/// register-tile width classes: workers claim `m3×n3` super-bands and
+/// pack their own row slices — bitwise against the oracle (integer
+/// fills), across thread counts including oversubscription, with grid
+/// and pack-count invariants pinned.
+#[test]
+fn prop_parallel_super_band_matmul_bitwise() {
+    fn run_case<T: Scalar>(
+        (m, k, n): (i64, i64, i64),
+        lp: LevelPlan,
+        micro: MicroShape,
+        threads: usize,
+        case: usize,
+        seed: u64,
+    ) {
+        let kernel = ops::matmul(m, k, n, T::ELEM, 0);
+        let sched = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
+        let want = int_oracle(&mut bufs, 3, seed);
+        let stats = run_parallel_macro_stats(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
+        // m3/n3 are constructed as mc/nc multiples, so the claimed grid
+        // is exactly the ceil-division cover of the GEMM extents
+        let bands = (m as usize).div_ceil(lp.m3) * (n as usize).div_ceil(lp.n3);
+        assert_eq!(stats.super_bands, bands, "case {case} ({}B elem)", T::ELEM);
+        assert_eq!(stats.workers, threads.min(bands));
+        assert_eq!(
+            stats.row_slice_packs,
+            bands as u64 * (k as u64).div_ceil(lp.kc as u64),
+            "case {case}: each band's row slice packed once per kc step ({}B elem)",
+            T::ELEM
+        );
+        assert_eq!(
+            bufs.output(),
+            want,
+            "case {case}: super-band matmul {m}x{k}x{n} t={threads} {micro:?} ({}B elem)",
+            T::ELEM
+        );
+    }
+    prop_check(8, 0x5BA2, |case, rng| {
+        let m = rng.range_i64(17, 48);
+        let k = rng.range_i64(3, 24);
+        let n = rng.range_i64(9, 40);
+        let mc = rng.range_usize(4, 12);
+        let nc = rng.range_usize(3, 10);
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc,
+            kc: rng.range_usize(2, 9),
+            nc,
+            // super-bands of 1–2 macro blocks: frequently several bands
+            // per axis, frequently not dividing the extents
+            m3: mc * rng.range_usize(1, 2),
+            n3: nc * rng.range_usize(1, 2),
+        };
+        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let threads = rng.range_usize(1, 6);
+        let seed = 0xB17 ^ case as u64;
+        run_case::<f64>((m, k, n), lp, micro, threads, case, seed);
+        run_case::<f32>((m, k, n), lp, micro, threads, case, seed);
     });
 }
 

@@ -198,6 +198,10 @@ fn prop_macro_kernel_matches_reference() {
             mc: rng.range_usize(1, 24),
             kc: rng.range_usize(1, 20),
             nc: rng.range_usize(1, 22),
+            // raw (possibly unaligned, possibly tiny) super-band extents:
+            // the executor aligns them down to mc/nc multiples itself
+            m3: rng.range_usize(1, 60),
+            n3: rng.range_usize(1, 55),
         };
         let tile = [
             (lp.l1_tile.0 as i64).min(m),
@@ -225,12 +229,8 @@ fn prop_macro_kernel_matches_reference() {
 fn macro_kernel_packs_each_row_block_exactly_once() {
     let (m, k, n) = (37usize, 29, 31);
     let kernel = ops::matmul(m as i64, k as i64, n as i64, 8, 0);
-    let lp = LevelPlan {
-        l1_tile: (8, 8, 8),
-        mc: 16,
-        kc: 12,
-        nc: 10,
-    };
+    // a flat plan (single super-band): the classic per-slice pack counts
+    let lp = LevelPlan::flat((8, 8, 8), 16, 12, 10);
     let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
     let want = bufs.reference();
     let gf = GemmForm::of(&kernel).unwrap();
@@ -280,6 +280,10 @@ fn prop_parallel_macro_matches_reference() {
             mc: rng.range_usize(4, 20),
             kc: rng.range_usize(4, 16),
             nc: rng.range_usize(4, 18),
+            // raw super-band extents — normalized to mc/nc multiples by
+            // the scheduler, frequently yielding several claimable bands
+            m3: rng.range_usize(4, 48),
+            n3: rng.range_usize(4, 44),
         };
         let sched = TiledSchedule::new(TileBasis::rect(&[
             (lp.l1_tile.0 as i64).min(m),
@@ -295,6 +299,57 @@ fn prop_parallel_macro_matches_reference() {
             "case {case}: parallel macro {m}x{k}x{n} ({threads} threads) lp={lp:?}"
         );
     });
+}
+
+/// L3 super-band parallel edge cases through the public API: heavy
+/// oversubscription (threads ≫ bands), super-band extents that divide
+/// neither m nor n, and the single-band degeneration back to the flat
+/// schedule — all against the oracle, with the schedule counters pinned.
+#[test]
+fn parallel_super_band_edge_cases() {
+    use latticetile::codegen::run_parallel_macro_stats;
+    let kernel = ops::matmul(41, 13, 29, 8, 0);
+    let sched = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+    // 41 rows / m3=16 → 3 row bands; 29 cols / n3=12 → 3 column bands
+    // (neither extent divides)
+    let lp = LevelPlan {
+        l1_tile: (8, 8, 8),
+        mc: 8,
+        kc: 5,
+        nc: 6,
+        m3: 16,
+        n3: 12,
+    };
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+    let want = bufs.reference();
+    let stats =
+        run_parallel_macro_stats(&mut bufs, &kernel, &sched, 64, Some(lp), MicroShape::Mr8Nr4);
+    assert_eq!(stats.super_bands, 9);
+    assert_eq!(stats.workers, 9, "threads=64 must clamp to the band count");
+    assert_eq!(stats.row_slice_packs, 9 * 3, "3 kc slices per band");
+    assert!(max_abs_diff(&want, &bufs.output()) < 1e-9);
+    // single-band degeneration: a flat plan is the old behaviour —
+    // bitwise equal to the serial macro engine on the same shape
+    let flat = LevelPlan::flat((8, 8, 8), 8, 5, 6);
+    let mut par = KernelBuffers::<f64>::from_kernel(&kernel);
+    par.fill_ints(2, 0xE5);
+    let mut ser = par.clone();
+    let want2 = par.reference();
+    let stats =
+        run_parallel_macro_stats(&mut par, &kernel, &sched, 8, Some(flat), MicroShape::Mr8Nr4);
+    assert_eq!((stats.super_bands, stats.workers), (1, 1));
+    let gf = GemmForm::of(&kernel).unwrap();
+    let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+    run_macro(
+        &mut ser.arena,
+        &plan,
+        &flat,
+        MicroShape::Mr8Nr4,
+        &mut PackedRows::new(),
+        &mut PackedCols::new(),
+    );
+    assert_eq!(par.output(), want2);
+    assert_eq!(ser.output(), par.output());
 }
 
 /// Exact MR/NR boundary shapes: one-off extents around the register-tile
