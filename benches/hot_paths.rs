@@ -43,6 +43,52 @@ impl Results {
     }
 }
 
+/// Time `rounds` bursts of serve jobs (submit the whole burst, then
+/// drain it) through a native-backend [`Service`] planned for
+/// `max_batch`-wide coalescing. Returns the drained wall time.
+///
+/// [`Service`]: latticetile::coordinator::Service
+fn serve_burst_bench(
+    y: Vec<f32>,
+    xs: &[Vec<f32>],
+    (m, k, n): (usize, usize, usize),
+    max_batch: usize,
+    rounds: u64,
+) -> std::time::Duration {
+    use latticetile::coordinator::{Backend, Service, ServiceConfig};
+    let svc = Service::start(
+        std::path::Path::new("bench-no-artifacts"),
+        y,
+        ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: std::time::Duration::from_millis(5),
+            max_batch,
+            queue_cap: 1024,
+            backend: Backend::Native,
+            ..ServiceConfig::default()
+        },
+    )
+    .expect("native bench service");
+    let burst = || {
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+    };
+    for _ in 0..2 {
+        burst(); // warm the engine and the panels
+    }
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        burst();
+    }
+    let t = t0.elapsed();
+    svc.stop();
+    t
+}
+
 fn main() {
     println!("=== hot-path microbenchmarks ===");
     // BENCH_QUICK=1 (CI smoke): shrink the macro-kernel comparison size
@@ -228,6 +274,46 @@ fn main() {
         t0.elapsed(),
     );
     assert!(bufs.output()[0].is_finite());
+
+    // native serving: one-at-a-time dispatch vs the coalescing batcher
+    // over the same prepacked weights. Each round submits a burst of 8
+    // jobs and drains it; at max_batch=1 that is 8 dispatches, at
+    // max_batch=8 one widened GEMM. The tracked ratio between the two
+    // rows is the win coalescing buys (check_bench ratchets it).
+    let (sm, sk, sn) = if quick {
+        (8usize, 96usize, 96usize)
+    } else {
+        (8, 192, 192)
+    };
+    let rounds = if quick { 20u64 } else { 50 };
+    let burst = 8usize;
+    let mut sseed = 0x5EED5EEDu64;
+    let mut srnd = move || {
+        sseed ^= sseed << 13;
+        sseed ^= sseed >> 7;
+        sseed ^= sseed << 17;
+        ((sseed % 1000) as f32 / 1000.0) - 0.5
+    };
+    let sy: Vec<f32> = (0..sk * sn).map(|_| srnd()).collect();
+    let sxs: Vec<Vec<f32>> = (0..burst)
+        .map(|_| (0..sm * sk).map(|_| srnd()).collect())
+        .collect();
+    let t_single = serve_burst_bench(sy.clone(), &sxs, (sm, sk, sn), 1, rounds);
+    let t_batch = serve_burst_bench(sy, &sxs, (sm, sk, sn), burst, rounds);
+    let serve_flops = rounds * burst as u64 * 2 * (sm * sk * sn) as u64;
+    let (one_label, coal_label) = if quick {
+        (
+            format!("native serve one-at-a-time {sm}x{sk}x{sn}"),
+            format!("native serve coalesced batch B=8 {sm}x{sk}x{sn}"),
+        )
+    } else {
+        (
+            "native serve one-at-a-time".to_string(),
+            "native serve coalesced batch B=8".to_string(),
+        )
+    };
+    res.rate(&one_label, serve_flops, t_single);
+    res.rate(&coal_label, serve_flops, t_batch);
 
     // startup register-tile calibration (one-shot cost report, per dtype)
     let t0 = Instant::now();

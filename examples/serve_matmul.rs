@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     // planner trace: show what the lattice model decided for this shape
     let registry = Registry::load(&dir)?;
-    let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+    let planner = Planner::new(CacheSpec::HASWELL_L1D);
     let plan = planner.plan(&registry, m, k, n, DType::F32);
     println!(
         "planner: shape {m}x{k}x{n} → plan '{}' (model tile {:?}, predicted misses {}) → artifact {}",
@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
             batch_window: Duration::from_millis(2),
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
+            ..ServiceConfig::default()
         },
     )?;
 

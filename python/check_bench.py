@@ -15,6 +15,11 @@ Rules (per named entry present in the baseline):
   * throughput ("mops" or a bare number): FAIL if current < (1 - tol) * baseline
   * miss counts / cycle estimates (keys ending in "_misses"/"_cycles"):
     deterministic simulation outputs — FAIL if current > (1 + tol) * baseline
+  * ratio gates ('"ratio: <A> / <B>": floor'): the baseline value is a
+    machine-independent floor on current[A] / current[B], with NO
+    tolerance applied — FAIL if the measured ratio drops below it. This
+    is how relative wins (e.g. coalesced-batch vs one-at-a-time serve
+    throughput) are ratcheted without guessing absolute CI-host speeds.
   * a baseline value of 0 (or null) means "unseeded": skipped with a note,
     so mechanism and baselines can land before every number is ratcheted
   * a baseline entry missing from the current run FAILS (a silently
@@ -56,6 +61,34 @@ def check_value(label, key, base, cur, tol, failures, notes):
             )
 
 
+def check_ratio(label, floor, current, failures, notes):
+    """'ratio: <A> / <B>' gate: current[A]/current[B] must be >= floor."""
+    if floor is None or floor == 0:
+        notes.append(f"  unseeded  {label} (baseline 0/null)")
+        return
+    spec = label[len("ratio: "):]
+    parts = spec.split(" / ")
+    if len(parts) != 2:
+        failures.append(f"  SHAPE     {label}: expected 'ratio: <A> / <B>'")
+        return
+    a, b = parts
+    missing = [k for k in (a, b) if not isinstance(current.get(k), (int, float))]
+    if missing:
+        failures.append(
+            f"  MISSING   {label}: operand(s) {missing} absent from current run"
+        )
+        return
+    if current[b] == 0:
+        failures.append(f"  SHAPE     {label}: denominator {b!r} is 0")
+        return
+    ratio = current[a] / current[b]
+    if ratio < floor:
+        failures.append(
+            f"  REGRESSION {label}: {ratio:.3f} < {floor} "
+            f"({a}={current[a]}, {b}={current[b]}; no tolerance on ratio floors)"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("baseline")
@@ -70,6 +103,9 @@ def main():
 
     failures, notes = [], []
     for label, base_val in baseline.items():
+        if label.startswith("ratio: "):
+            check_ratio(label, base_val, current, failures, notes)
+            continue
         if label not in current:
             failures.append(f"  MISSING   {label}: in baseline but absent from current run")
             continue

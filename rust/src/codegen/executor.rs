@@ -766,12 +766,37 @@ pub fn run_macro_prepacked<T: Scalar>(
     rows: &[PackedRows<T>],
     cols: &mut PackedCols<T>,
 ) {
-    if plan.m == 0 || plan.n == 0 || plan.k == 0 {
-        return;
+    let _ = run_macro_prepacked_cols(arena, plan, lp, micro, rows, cols, plan.n);
+}
+
+/// [`run_macro_prepacked`] restricted to the **column prefix**
+/// `[0, n_used)` of the plan — the serve coalescer's partial-batch entry
+/// point. The plan's per-column offset tables (`col_out`/`col_in`) are
+/// indexed by absolute column, so executing a prefix of a wide plan
+/// touches exactly the same offsets a narrower plan would: a batch of
+/// `B < max_batch` jobs runs the first `B·m` columns of the
+/// `max_batch`-wide plan, with the pre-packed row slices (which depend
+/// only on rows × reduction, never on the column extent) shared as-is.
+/// `n_used = plan.n` is exactly [`run_macro_prepacked`]. Returns the
+/// number of column-band packs performed — the serve layer's
+/// pack-discipline tests pin it to exactly one per (row super-band, `kc`
+/// slice, `nc` band), independent of the batch width.
+pub fn run_macro_prepacked_cols<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    cols: &mut PackedCols<T>,
+    n_used: usize,
+) -> u64 {
+    assert!(n_used <= plan.n, "column prefix exceeds the plan");
+    if plan.m == 0 || n_used == 0 || plan.k == 0 {
+        return 0;
     }
     if is_dot_plan(plan) {
         run_dot(arena, plan);
-        return;
+        return 0;
     }
     let kc = lp.kc.max(1);
     assert_eq!(
@@ -780,10 +805,10 @@ pub fn run_macro_prepacked<T: Scalar>(
         "pre-packed slices do not match the macro shape"
     );
     match T::nr(micro) {
-        4 => run_macro_prepacked_impl::<T, 4>(arena, plan, lp, rows, cols),
-        6 => run_macro_prepacked_impl::<T, 6>(arena, plan, lp, rows, cols),
-        8 => run_macro_prepacked_impl::<T, 8>(arena, plan, lp, rows, cols),
-        12 => run_macro_prepacked_impl::<T, 12>(arena, plan, lp, rows, cols),
+        4 => run_macro_prepacked_impl::<T, 4>(arena, plan, lp, rows, cols, n_used),
+        6 => run_macro_prepacked_impl::<T, 6>(arena, plan, lp, rows, cols, n_used),
+        8 => run_macro_prepacked_impl::<T, 8>(arena, plan, lp, rows, cols, n_used),
+        12 => run_macro_prepacked_impl::<T, 12>(arena, plan, lp, rows, cols, n_used),
         w => unreachable!("unsupported register-tile width {w}"),
     }
 }
@@ -794,32 +819,63 @@ fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
     lp: &LevelPlan,
     rows: &[PackedRows<T>],
     cols: &mut PackedCols<T>,
-) {
+    n_used: usize,
+) -> u64 {
+    let (m3, n3) = super_band_extents(lp);
+    let mut col_packs = 0u64;
+    for i3 in (0..plan.m).step_by(m3) {
+        let m3c = m3.min(plan.m - i3);
+        for j3 in (0..n_used).step_by(n3) {
+            let n3c = n3.min(n_used - j3);
+            col_packs += run_super_band_prepacked::<T, NRW>(
+                arena,
+                plan,
+                lp,
+                rows,
+                cols,
+                (i3, m3c),
+                (j3, n3c),
+            );
+        }
+    }
+    col_packs
+}
+
+/// One L3 super-band of the pre-packed nest: like [`run_super_band`] but
+/// reading whole mc-block subranges of the caller's full-width resident
+/// row slices instead of packing a row slice per `kc` step (`m3` is an
+/// mc multiple by [`super_band_extents`], so a super-band's rows are
+/// whole blocks). Only the column bands are packed; returns how many.
+/// Shared by the serial pre-packed nest and by one parallel worker's
+/// claimed super-band, so both walk one schedule.
+pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    rows: &[PackedRows<T>],
+    cols: &mut PackedCols<T>,
+    (i3, m3c): (usize, usize),
+    (j3, n3c): (usize, usize),
+) -> u64 {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
     let nc = lp.nc.max(1);
     let l1 = (lp.l1_tile.0, lp.l1_tile.1);
-    let (m3, n3) = super_band_extents(lp);
-    for i3 in (0..plan.m).step_by(m3) {
-        let m3c = m3.min(plan.m - i3);
-        // m3 is an mc multiple, so a super-band's rows are whole blocks
-        // of the full-width pre-packed slice
-        let b0 = i3 / mc;
-        let b1 = (i3 + m3c).div_ceil(mc);
-        for j3 in (0..plan.n).step_by(n3) {
-            let n3c = n3.min(plan.n - j3);
-            for (si, k0) in (0..plan.k).step_by(kc).enumerate() {
-                let kcc = (k0 + kc).min(plan.k) - k0;
-                for j0 in (j3..j3 + n3c).step_by(nc) {
-                    let ncc = (j0 + nc).min(j3 + n3c) - j0;
-                    cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
-                    for bi in b0..b1 {
-                        run_macro_block::<T, NRW>(rows[si].block(bi), cols, plan, j0, l1, arena);
-                    }
-                }
+    let b0 = i3 / mc;
+    let b1 = (i3 + m3c).div_ceil(mc);
+    let mut col_packs = 0u64;
+    for (si, k0) in (0..plan.k).step_by(kc).enumerate() {
+        let kcc = (k0 + kc).min(plan.k) - k0;
+        for j0 in (j3..j3 + n3c).step_by(nc) {
+            let ncc = (j0 + nc).min(j3 + n3c) - j0;
+            cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
+            col_packs += 1;
+            for bi in b0..b1 {
+                run_macro_block::<T, NRW>(rows[si].block(bi), cols, plan, j0, l1, arena);
             }
         }
     }
+    col_packs
 }
 
 /// Execute one clipped box through the pack + microkernel engine — the
@@ -1238,6 +1294,66 @@ mod tests {
             let repacked: u64 = rows.iter().map(|r| r.pack_count()).sum();
             assert_eq!(packed, repacked, "pre-packed rows must never repack");
         }
+    }
+
+    #[test]
+    fn prepacked_column_prefix_matches_narrow_kernel() {
+        // the batching identity behind the coalesced serve path: a batch
+        // of B jobs is the column prefix [0, B·m) of a max_batch-wide
+        // plan, and executing that prefix must produce exactly what a
+        // kernel of the prefix width would — with the full-width resident
+        // row slices shared untouched and the tail columns left at zero
+        let (mg, kg, n_wide) = (26usize, 19, 36);
+        let wide_kernel = ops::matmul(mg as i64, kg as i64, n_wide as i64, 8, 0);
+        let plan = GemmForm::of(&wide_kernel).unwrap().plan_box(
+            &kernel_views(&wide_kernel),
+            &[0, 0, 0],
+            wide_kernel.extents(),
+        );
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 9,
+            m3: 24,
+            n3: 18,
+        };
+        let mut wide = KernelBuffers::<f64>::from_kernel(&wide_kernel);
+        wide.fill_ints(6, 0xC0A1);
+        let rows = pack_row_slices(&wide.arena, &plan, &lp);
+        let startup_packs: u64 = rows.iter().map(|r| r.pack_count()).sum();
+        let mut cols = PackedCols::<f64>::new();
+        for n_used in [9usize, 20, n_wide] {
+            // a narrow kernel over the same leading data is the oracle
+            let narrow_kernel = ops::matmul(mg as i64, kg as i64, n_used as i64, 8, 0);
+            let mut narrow = KernelBuffers::<f64>::from_kernel(&narrow_kernel);
+            let (bs, bl) = wide.operand_range(1);
+            narrow.operand_mut(1).copy_from_slice(&wide.arena[bs..bs + bl]);
+            let (cs, _) = wide.operand_range(2);
+            narrow
+                .operand_mut(2)
+                .copy_from_slice(&wide.arena[cs..cs + kg * n_used]);
+            let want = narrow.reference();
+            wide.reset_output();
+            run_macro_prepacked_cols(
+                &mut wide.arena,
+                &plan,
+                &lp,
+                MicroShape::Mr8Nr4,
+                &rows,
+                &mut cols,
+                n_used,
+            );
+            let out = wide.output();
+            // integer fills → exact arithmetic → bitwise equality
+            assert_eq!(&out[..mg * n_used], &want[..], "prefix n_used={n_used}");
+            assert!(
+                out[mg * n_used..].iter().all(|&v| v == 0.0),
+                "columns past the prefix must stay zero (n_used={n_used})"
+            );
+        }
+        let after: u64 = rows.iter().map(|r| r.pack_count()).sum();
+        assert_eq!(startup_packs, after, "resident slices must never repack");
     }
 
     #[test]

@@ -60,7 +60,14 @@
 //!   it is the parallel unit: [`parallel::run_parallel_macro`] hands
 //!   whole super-bands to workers from an atomic queue, each worker
 //!   packing its **own** row slice and column bands (nothing packed is
-//!   shared), so serial and parallel traces walk one schedule. The
+//!   shared), so serial and parallel traces walk one schedule. The serve
+//!   engine's variant ([`parallel::run_parallel_macro_prepacked`]) flips
+//!   exactly one of those rules: workers share the startup-resident
+//!   [`pack::PackedRows`] read-only (weights are packed once per process,
+//!   not once per band) and still own their column bands; with
+//!   [`executor::run_macro_prepacked_cols`] it also executes a **column
+//!   prefix** of the plan, which is how a partially full coalesced batch
+//!   runs the m·B-wide serve kernel without replanning. The
 //!   startup autotuner ([`autotune::calibrate_dtype`]) races the dtype's
 //!   narrow vs wide shape and the engine dispatches whichever class the
 //!   [`Registry`](crate::runtime::Registry) recorded *for that dtype*.
@@ -103,14 +110,14 @@ pub mod scalar;
 pub use autotune::{calibrate, calibrate_dtype, MicroShape};
 pub use executor::{
     box_key, max_abs_diff, pack_row_slices, run_instrumented, run_macro, run_macro_prepacked,
-    run_rect_box, run_schedule, run_trace_only, scan_rect_tiles, tiled_executor, ReplayPlan,
-    ReplayScratch, TiledExecutor,
+    run_macro_prepacked_cols, run_rect_box, run_schedule, run_trace_only, scan_rect_tiles,
+    tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
 };
 pub use microkernel::{dot_update, MR, NR, NR_WIDE};
 pub use pack::{run_macro_block, PackBuffers, PackedBlock, PackedCols, PackedRows};
 pub use parallel::{
-    run_parallel, run_parallel_macro, run_parallel_macro_stats, run_parallel_micro,
-    ParallelMacroStats,
+    run_parallel, run_parallel_macro, run_parallel_macro_prepacked, run_parallel_macro_stats,
+    run_parallel_micro, ParallelMacroStats,
 };
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,

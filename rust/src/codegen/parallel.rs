@@ -426,6 +426,123 @@ pub fn run_parallel_macro_stats<T: Scalar>(
     }
 }
 
+/// The pre-packed serve nest ([`run_macro_prepacked_cols`]) under the
+/// super-band parallel scheduler: workers claim `m3×n3` super-bands of
+/// the column prefix `[0, n_used)` from an atomic queue, read whole
+/// mc-block subranges of the caller's **shared, resident** row slices
+/// (packed once at startup — never re-packed, never duplicated per
+/// worker), and pack only their own column bands into thread-local
+/// buffers. This is the coalesced native serve path's route for batches
+/// whose widened column extent spans more than one super-band: the
+/// schedule per band is identical to the serial pre-packed nest, so
+/// serial and parallel dispatch produce bit-identical outputs.
+///
+/// `kernel` must be the GEMM-form kernel `plan` was built from — its
+/// output map is checked injective per (row, column), which is what makes
+/// the concurrent band writes disjoint. `lp` and `rows` must match as in
+/// [`run_macro_prepacked_cols`]. Returns the schedule counters; the
+/// resident row slices contribute zero `row_slice_packs` by construction.
+///
+/// [`run_macro_prepacked_cols`]: super::executor::run_macro_prepacked_cols
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_prepacked<T: Scalar>(
+    arena: &mut [T],
+    kernel: &Kernel,
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    threads: usize,
+    n_used: usize,
+) -> ParallelMacroStats {
+    assert!(threads >= 1);
+    assert!(n_used <= plan.n, "column prefix exceeds the plan");
+    if plan.m == 0 || n_used == 0 || plan.k == 0 {
+        return ParallelMacroStats::default();
+    }
+    if super::executor::is_dot_plan(plan) {
+        super::executor::run_dot(arena, plan);
+        return ParallelMacroStats {
+            super_bands: 1,
+            workers: 1,
+            ..ParallelMacroStats::default()
+        };
+    }
+    let kc = lp.kc.max(1);
+    assert_eq!(
+        rows.len(),
+        plan.k.div_ceil(kc),
+        "pre-packed slices do not match the macro shape"
+    );
+    let gf = GemmForm::of(kernel).expect("prepacked parallel path needs a GEMM-form kernel");
+    let views = kernel_views(kernel);
+    assert!(
+        gf.output_injective(&views, kernel.extents()),
+        "prepacked parallel bands need an injective output map"
+    );
+    let (m3, n3) = super::executor::super_band_extents(lp);
+    let n_i3 = plan.m.div_ceil(m3);
+    let n_j3 = n_used.div_ceil(n3);
+    let n_sb = n_i3 * n_j3;
+    let workers = threads.min(n_sb);
+    let arena_len = arena.len();
+    let next = AtomicUsize::new(0);
+    let col_packs = AtomicU64::new(0);
+    let arena_ptr = SendPtr(arena.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let col_packs = &col_packs;
+            let arena_ptr = &arena_ptr;
+            scope.spawn(move || {
+                // thread-local column bands; the resident row slices are
+                // shared read-only across all workers
+                let mut cols = PackedCols::<T>::new();
+                let mut cp = 0u64;
+                loop {
+                    let b = next.fetch_add(1, Ordering::Relaxed);
+                    if b >= n_sb {
+                        break;
+                    }
+                    let i3 = (b % n_i3) * m3;
+                    let j3 = (b / n_i3) * n3;
+                    let m3c = m3.min(plan.m - i3);
+                    let n3c = n3.min(n_used - j3);
+                    // SAFETY: super-bands are disjoint output element
+                    // sets (row range × column range through an injective
+                    // output map, checked above) and the inputs are
+                    // read-only during the run, so each arena element is
+                    // written by at most one thread.
+                    let arena: &mut [T] =
+                        unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
+                    cp += match T::nr(micro) {
+                        4 => super::executor::run_super_band_prepacked::<T, 4>(
+                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        6 => super::executor::run_super_band_prepacked::<T, 6>(
+                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        8 => super::executor::run_super_band_prepacked::<T, 8>(
+                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        12 => super::executor::run_super_band_prepacked::<T, 12>(
+                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
+                        ),
+                        w => unreachable!("unsupported register-tile width {w}"),
+                    };
+                }
+                col_packs.fetch_add(cp, Ordering::Relaxed);
+            });
+        }
+    });
+    ParallelMacroStats {
+        super_bands: n_sb,
+        workers,
+        row_slice_packs: 0,
+        col_band_packs: col_packs.load(Ordering::Relaxed),
+    }
+}
+
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
@@ -757,6 +874,83 @@ mod tests {
             let want = bufs.reference();
             run_parallel(&mut bufs, &kernel, &s, 4, pv);
             assert!(max_abs_diff(&want, &bufs.output()) < 1e-9, "pv={pv}");
+        }
+    }
+
+    #[test]
+    fn parallel_prepacked_matches_serial_prefix_bitwise() {
+        // the coalesced-serve contract: resident rows packed once at
+        // startup are shared read-only across workers, and the parallel
+        // column-prefix dispatch is bit-identical to the serial
+        // pre-packed nest at every batch width and thread count
+        use crate::codegen::executor::{pack_row_slices, run_macro_prepacked_cols};
+        let k = ops::matmul(26, 19, 36, 8, 0);
+        let views = kernel_views(&k);
+        let gf = GemmForm::of(&k).unwrap();
+        let plan = gf.plan_box(&views, &[0, 0, 0], k.extents());
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 9,
+            m3: 24,
+            n3: 18,
+        };
+        let kslices = 3u64; // ceil(19 / 7)
+        for n_used in [9usize, 20, 36] {
+            // serial prefix run as the bitwise oracle
+            let mut serial = KernelBuffers::<f64>::from_kernel(&k);
+            serial.fill_ints(5, 0x9A7);
+            let s_rows = pack_row_slices(&serial.arena, &plan, &lp);
+            let mut s_cols = PackedCols::<f64>::new();
+            run_macro_prepacked_cols(
+                &mut serial.arena,
+                &plan,
+                &lp,
+                MicroShape::Mr8Nr4,
+                &s_rows,
+                &mut s_cols,
+                n_used,
+            );
+            let want = serial.output();
+            for threads in [1usize, 2, 5, 16] {
+                let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+                bufs.fill_ints(5, 0x9A7);
+                let rows = pack_row_slices(&bufs.arena, &plan, &lp);
+                let packed: u64 = rows.iter().map(|r| r.pack_count()).sum();
+                let stats = run_parallel_macro_prepacked(
+                    &mut bufs.arena,
+                    &k,
+                    &plan,
+                    &lp,
+                    MicroShape::Mr8Nr4,
+                    &rows,
+                    threads,
+                    n_used,
+                );
+                assert_eq!(
+                    bufs.output(),
+                    want,
+                    "n_used={n_used} threads={threads}: parallel prefix must be bitwise serial"
+                );
+                // shared resident rows: never packed by workers
+                let repacked: u64 = rows.iter().map(|r| r.pack_count()).sum();
+                assert_eq!(packed, repacked, "workers must not repack resident rows");
+                assert_eq!(stats.row_slice_packs, 0);
+                let n_j3 = n_used.div_ceil(18);
+                assert_eq!(stats.super_bands, 2 * n_j3); // ceil(26/24) = 2 row bands
+                assert_eq!(stats.workers, threads.min(2 * n_j3));
+                // one column-band pack per (row band, kc slice, nc band)
+                let nc_bands: u64 = (0..n_used as u64)
+                    .step_by(18)
+                    .map(|j3| (n_used as u64 - j3).min(18).div_ceil(9))
+                    .sum();
+                assert_eq!(
+                    stats.col_band_packs,
+                    2 * kslices * nc_bands,
+                    "n_used={n_used} threads={threads}"
+                );
+            }
         }
     }
 

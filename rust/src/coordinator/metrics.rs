@@ -1,16 +1,48 @@
-//! Service metrics: latency histogram + throughput counters.
+//! Service metrics: exact latency quantiles, batch-size histogram, and
+//! the queue-wait vs compute split.
+//!
+//! Latency percentiles are computed from a **uniform reservoir** of raw
+//! samples (Algorithm R, deterministic replacement stream), not from
+//! fixed bucket boundaries: `percentile_us` sorts the reservoir and
+//! reads the order statistic, so p50/p99 are exact over the retained
+//! sample (and exact over *all* jobs until the reservoir fills at
+//! [`RESERVOIR_CAP`]). Every job also lands in the aggregate counters
+//! (jobs, errors, total/max latency, queue-wait and compute time), which
+//! are never sampled — throughput and the wait/compute split cover the
+//! full population even when the reservoir subsamples.
 
 use std::time::Duration;
 
-/// Fixed-boundary latency histogram (µs buckets) plus aggregates.
+/// Raw latency samples retained for exact quantiles. 4096 × u64 is 32 KiB
+/// — small enough to keep resident next to the serve loop, large enough
+/// that the p99 order statistic is stable under subsampling.
+pub const RESERVOIR_CAP: usize = 4096;
+
+/// Serve-loop metrics: exact-quantile latency reservoir, batch-size
+/// histogram, queue-wait vs compute attribution, error counting.
 #[derive(Clone, Debug)]
 pub struct Metrics {
-    bounds_us: Vec<u64>,
-    counts: Vec<u64>,
+    /// Uniform reservoir of per-job latencies, in µs.
+    samples_us: Vec<u64>,
+    /// Jobs offered to the reservoir so far (Algorithm R's stream index).
+    seen: u64,
+    /// Deterministic xorshift state for reservoir replacement.
+    rng: u64,
+    /// Batch-size histogram: `batch_sizes[s]` counts batches of exactly
+    /// `s` jobs (index 0 unused; grown on demand).
+    batch_sizes: Vec<u64>,
     pub jobs: u64,
     pub batches: u64,
+    /// Jobs whose execution returned an error. Errored jobs still count
+    /// in `jobs`, the latency reservoir, and the queue/compute split —
+    /// they consumed the same queue and worker time as successes.
+    pub errors: u64,
     pub total_latency: Duration,
     pub max_latency: Duration,
+    /// Total time jobs spent queued before their batch was dispatched.
+    pub queue_wait: Duration,
+    /// Total worker time spent executing batches.
+    pub compute: Duration,
     pub flops: u64,
 }
 
@@ -22,37 +54,73 @@ impl Default for Metrics {
 
 impl Metrics {
     pub fn new() -> Metrics {
-        let bounds_us = vec![
-            50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
-        ];
-        let counts = vec![0; bounds_us.len() + 1];
         Metrics {
-            bounds_us,
-            counts,
+            samples_us: Vec::new(),
+            seen: 0,
+            rng: 0x9E3779B97F4A7C15,
+            batch_sizes: Vec::new(),
             jobs: 0,
             batches: 0,
+            errors: 0,
             total_latency: Duration::ZERO,
             max_latency: Duration::ZERO,
+            queue_wait: Duration::ZERO,
+            compute: Duration::ZERO,
             flops: 0,
         }
     }
 
-    pub fn record_job(&mut self, latency: Duration, flops: u64) {
+    fn next_rng(&mut self) -> u64 {
+        let mut s = self.rng;
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        self.rng = s;
+        s
+    }
+
+    fn sample(&mut self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.seen += 1;
+        if self.samples_us.len() < RESERVOIR_CAP {
+            self.samples_us.push(us);
+        } else {
+            // Algorithm R: element `seen` replaces a resident sample with
+            // probability cap/seen — uniform over the whole stream.
+            let slot = self.next_rng() % self.seen;
+            if (slot as usize) < RESERVOIR_CAP {
+                self.samples_us[slot as usize] = us;
+            }
+        }
+    }
+
+    /// A completed job: `latency` is submit→response, `queue_wait` the
+    /// submit→dispatch share of it, `flops` the useful work it carried.
+    pub fn record_job(&mut self, latency: Duration, queue_wait: Duration, flops: u64) {
         self.jobs += 1;
         self.flops += flops;
         self.total_latency += latency;
         self.max_latency = self.max_latency.max(latency);
-        let us = latency.as_micros() as u64;
-        let idx = self
-            .bounds_us
-            .iter()
-            .position(|&b| us <= b)
-            .unwrap_or(self.bounds_us.len());
-        self.counts[idx] += 1;
+        self.queue_wait += queue_wait;
+        self.sample(latency);
     }
 
-    pub fn record_batch(&mut self) {
+    /// A job whose execution failed. It still occupied the queue and the
+    /// worker, so it counts everywhere a success does — plus `errors`.
+    pub fn record_error(&mut self, latency: Duration, queue_wait: Duration) {
+        self.record_job(latency, queue_wait, 0);
+        self.errors += 1;
+    }
+
+    /// A dispatched batch of `size` coalesced jobs that took `compute`
+    /// of worker time (packing + GEMM + response fan-out).
+    pub fn record_batch(&mut self, size: usize, compute: Duration) {
         self.batches += 1;
+        self.compute += compute;
+        if self.batch_sizes.len() <= size {
+            self.batch_sizes.resize(size + 1, 0);
+        }
+        self.batch_sizes[size] += 1;
     }
 
     pub fn mean_latency(&self) -> Duration {
@@ -63,26 +131,30 @@ impl Metrics {
         }
     }
 
-    /// Approximate percentile from the histogram (returns an upper bucket
-    /// boundary in µs).
+    /// Mean jobs per dispatched batch — the realized coalescing width.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / self.batches as f64
+        }
+    }
+
+    /// Batches dispatched with exactly `size` jobs.
+    pub fn batches_of_size(&self, size: usize) -> u64 {
+        self.batch_sizes.get(size).copied().unwrap_or(0)
+    }
+
+    /// Exact `p`-quantile latency in µs over the retained reservoir
+    /// (nearest-rank on the sorted samples).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        let total: u64 = self.counts.iter().sum();
-        if total == 0 {
+        if self.samples_us.is_empty() {
             return 0;
         }
-        let target = (total as f64 * p).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, &c) in self.counts.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return self
-                    .bounds_us
-                    .get(i)
-                    .copied()
-                    .unwrap_or(self.max_latency.as_micros() as u64);
-            }
-        }
-        self.max_latency.as_micros() as u64
+        let mut sorted = self.samples_us.clone();
+        sorted.sort_unstable();
+        let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
     }
 
     pub fn report(&self, wall: Duration) -> String {
@@ -97,16 +169,21 @@ impl Metrics {
             0.0
         };
         format!(
-            "jobs={} batches={} throughput={:.1} jobs/s {:.2} GFLOP/s \
-             mean={:?} p50≤{}µs p99≤{}µs max={:?}",
+            "jobs={} batches={} errors={} throughput={:.1} jobs/s {:.2} GFLOP/s \
+             mean={:?} p50={}µs p99={}µs max={:?} \
+             queue-wait={:?} compute={:?} mean-batch={:.2}",
             self.jobs,
             self.batches,
+            self.errors,
             thr,
             gflops,
             self.mean_latency(),
             self.percentile_us(0.50),
             self.percentile_us(0.99),
-            self.max_latency
+            self.max_latency,
+            self.queue_wait,
+            self.compute,
+            self.mean_batch_size()
         )
     }
 }
@@ -116,15 +193,61 @@ mod tests {
     use super::*;
 
     #[test]
-    fn histogram_percentiles() {
+    fn exact_percentiles_below_reservoir_cap() {
         let mut m = Metrics::new();
-        for us in [10u64, 20, 30, 40, 60, 80, 200, 400, 2_000, 80_000] {
-            m.record_job(Duration::from_micros(us), 1000);
+        // 1..=100 µs in scrambled order: p50 and p99 are exact order
+        // statistics, not bucket bounds
+        for i in 0..100u64 {
+            let us = (i * 37) % 100 + 1;
+            m.record_job(Duration::from_micros(us), Duration::ZERO, 1000);
         }
-        assert_eq!(m.jobs, 10);
-        assert!(m.percentile_us(0.5) <= 100);
-        assert!(m.percentile_us(0.99) >= 50_000);
-        assert_eq!(m.flops, 10_000);
+        assert_eq!(m.jobs, 100);
+        assert_eq!(m.percentile_us(0.50), 50);
+        assert_eq!(m.percentile_us(0.99), 99);
+        assert_eq!(m.percentile_us(1.0), 100);
+        assert_eq!(m.flops, 100_000);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_and_in_range() {
+        let mut m = Metrics::new();
+        for i in 0..3 * RESERVOIR_CAP as u64 {
+            m.record_job(Duration::from_micros(100 + i % 50), Duration::ZERO, 0);
+        }
+        assert_eq!(m.samples_us.len(), RESERVOIR_CAP);
+        let p99 = m.percentile_us(0.99);
+        assert!((100..150).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn batch_histogram_and_split() {
+        let mut m = Metrics::new();
+        for _ in 0..6 {
+            m.record_job(Duration::from_micros(300), Duration::from_micros(100), 1000);
+        }
+        m.record_batch(4, Duration::from_micros(500));
+        m.record_batch(2, Duration::from_micros(300));
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.batches_of_size(4), 1);
+        assert_eq!(m.batches_of_size(2), 1);
+        assert_eq!(m.batches_of_size(8), 0);
+        assert_eq!(m.mean_batch_size(), 3.0);
+        assert_eq!(m.queue_wait, Duration::from_micros(600));
+        assert_eq!(m.compute, Duration::from_micros(800));
+        let r = m.report(Duration::from_secs(1));
+        assert!(r.contains("queue-wait="), "{r}");
+        assert!(r.contains("mean-batch=3.00"), "{r}");
+    }
+
+    #[test]
+    fn errors_count_as_jobs() {
+        let mut m = Metrics::new();
+        m.record_job(Duration::from_micros(10), Duration::ZERO, 100);
+        m.record_error(Duration::from_micros(20), Duration::from_micros(5));
+        assert_eq!(m.jobs, 2);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.flops, 100);
+        assert_eq!(m.percentile_us(1.0), 20);
     }
 
     #[test]
@@ -132,6 +255,7 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.percentile_us(0.99), 0);
         assert_eq!(m.mean_latency(), Duration::ZERO);
+        assert_eq!(m.mean_batch_size(), 0.0);
         let _ = m.report(Duration::from_secs(1));
     }
 }

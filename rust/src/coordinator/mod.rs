@@ -1,13 +1,32 @@
-//! The L3 coordinator (DESIGN.md S12): planner, batching job service,
+//! The L3 coordinator (DESIGN.md S12): planner, coalescing job service,
 //! metrics.
 //!
-//! This is the request path of the system: clients submit matmul jobs;
-//! the planner (paper's §4.0.4 selector, cached per shape and dtype)
+//! This is the request path of the system: clients submit matmul jobs
+//! through a **bounded queue** — at most [`ServiceConfig::queue_cap`]
+//! jobs in flight, with over-capacity submissions rejected at the door
+//! by a typed [`SubmitError::QueueFull`] rather than buffered without
+//! limit ([`Service::submit`] / cloneable [`ServiceClient`] handles for
+//! concurrent clients). The planner (paper's §4.0.4 selector, cached per
+//! shape and dtype in a **sharded, concurrently shareable** cache)
 //! resolves each shape to an AOT kernel variant or the in-process packed
-//! engine; the service batches jobs and dispatches them through PJRT
-//! ([`service::Backend::Pjrt`]) or serves f32 directly through the
-//! packed macro-kernel ([`service::Backend::Native`]). Python never runs
-//! here.
+//! engine; the service **coalesces** shape-compatible jobs inside a
+//! batch window that starts at the first job's arrival and dispatches
+//! them through PJRT ([`service::Backend::Pjrt`]) or serves f32 directly
+//! through the packed macro-kernel ([`service::Backend::Native`]). On
+//! the native path a B-job batch is **one GEMM**: the transpose lowering
+//! makes each job an m-column block of the right operand, so the batch
+//! is the same kernel with its column axis widened from m to m·B over
+//! the startup-prepacked weight panels — no extra copies, no replanning
+//! for partial batches (they run a column prefix of the
+//! `max_batch`-wide plan). [`Metrics`] attributes every job's latency
+//! into queue wait vs compute and reports exact reservoir p50/p99 plus a
+//! batch-size histogram. Python never runs here.
+//!
+//! [`ServiceConfig::queue_cap`]: service::ServiceConfig::queue_cap
+//! [`SubmitError::QueueFull`]: service::SubmitError::QueueFull
+//! [`Service::submit`]: service::Service::submit
+//! [`ServiceClient`]: service::ServiceClient
+//! [`Metrics`]: metrics::Metrics
 
 pub mod metrics;
 pub mod planner;
@@ -15,4 +34,4 @@ pub mod service;
 
 pub use metrics::Metrics;
 pub use planner::{Plan, Planner};
-pub use service::{Backend, Service, ServiceConfig};
+pub use service::{Backend, Service, ServiceClient, ServiceConfig, SubmitError};

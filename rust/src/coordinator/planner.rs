@@ -13,8 +13,19 @@
 //! at the requested [`DType`] — the PJRT serve path is f32, so its plans
 //! legitimately get 2× the elements per line). Plans are cached per
 //! (shape, dtype) — selection runs once, off the hot path.
+//!
+//! The cache is **sharded**: plans hash by (kernel, element size,
+//! log₂-bucketed shape class) onto [`N_SHARDS`] independently locked
+//! maps, and a `Planner` clone shares the shards — concurrent planners
+//! (one per serve worker or client thread) contend only when planning
+//! shapes of the same class, not on one global map. Selection itself
+//! runs *outside* any shard lock; two racing planners may both model the
+//! same new shape, but the first inserted plan wins and both return it.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
 
 use crate::cache::CacheSpec;
 use crate::codegen::{DType, GemmForm, MicroShape};
@@ -83,10 +94,18 @@ impl Plan {
     }
 }
 
-/// Shape-keyed plan cache around the selector.
+/// Independently locked plan-cache shards; see the module docs.
+pub const N_SHARDS: usize = 16;
+
+type Shard = Mutex<HashMap<(String, Vec<i64>), Plan>>;
+
+/// Shape-keyed, shard-locked plan cache around the selector. `Clone`
+/// shares the shards: hand each serve worker or client thread its own
+/// clone and they plan concurrently against one cache.
+#[derive(Clone)]
 pub struct Planner {
     spec: CacheSpec,
-    cache: HashMap<(String, Vec<i64>), Plan>,
+    shards: Arc<Vec<Shard>>,
     sample_classes: usize,
 }
 
@@ -94,7 +113,7 @@ impl Planner {
     pub fn new(spec: CacheSpec) -> Planner {
         Planner {
             spec,
-            cache: HashMap::new(),
+            shards: Arc::new((0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect()),
             sample_classes: 8,
         }
     }
@@ -108,47 +127,66 @@ impl Planner {
         &self.spec
     }
 
+    /// Shard for a cache key: the kernel/dtype namespace string plus the
+    /// log₂ shape class of each dimension, so e.g. all ~256-wide matmul
+    /// plans of one dtype contend on one lock and everything else on
+    /// others.
+    fn shard(&self, key: &(String, Vec<i64>)) -> &Shard {
+        let mut h = DefaultHasher::new();
+        key.0.hash(&mut h);
+        for &d in &key.1 {
+            (64 - d.max(1).leading_zeros()).hash(&mut h);
+        }
+        &self.shards[h.finish() as usize % N_SHARDS]
+    }
+
+    /// Cached-plan lookup and first-writer-wins insert around `compute`,
+    /// which runs the selector with no shard lock held.
+    fn cached_or_plan(
+        &self,
+        key: (String, Vec<i64>),
+        compute: impl FnOnce(&Planner) -> Plan,
+    ) -> Plan {
+        let shard = self.shard(&key);
+        if let Some(p) = shard.lock().unwrap().get(&key) {
+            return p.clone();
+        }
+        let plan = compute(self);
+        shard.lock().unwrap().entry(key).or_insert(plan).clone()
+    }
+
     /// Plan for an `m×k×n` matmul at `dtype`, resolving against
     /// `registry`. Model selection runs on a proportional small instance
     /// when the real size would make even the sampled model slow; the
     /// conflict lattice depends on the leading dimension *and* the
     /// element size, both of which are preserved.
-    pub fn plan(
-        &mut self,
-        registry: &Registry,
-        m: usize,
-        k: usize,
-        n: usize,
-        dtype: DType,
-    ) -> Plan {
+    pub fn plan(&self, registry: &Registry, m: usize, k: usize, n: usize, dtype: DType) -> Plan {
         // distinct cache namespace from `plan_kernel` — the two entry
         // points resolve different artifacts for the same matmul extents
         let key = (
             format!("matmul#aot#{}", dtype.name()),
             vec![m as i64, n as i64, k as i64],
         );
-        if let Some(p) = self.cache.get(&key) {
-            return p.clone();
-        }
-        let (sm, sk, sn) = shrink(m, k, n);
-        let kernel = ops::matmul_padded(
-            sm as i64,
-            sk as i64,
-            sn as i64,
-            m as i64, // preserve true leading dims → true conflict lattice
-            m as i64,
-            k as i64,
-            dtype.elem(),
-            0,
-        );
-        let mut plan = self.plan_shape(registry, &kernel, (m, n, k), dtype);
-        // resolve the AOT artifact against the *true* shape
-        plan.artifact = registry
-            .closest_variant(m, k, n, plan.model_tile)
-            .map(|a| a.name.clone())
-            .unwrap_or_else(|| format!("<no artifact for {m}x{k}x{n}>"));
-        self.cache.insert(key, plan.clone());
-        plan
+        self.cached_or_plan(key, |this| {
+            let (sm, sk, sn) = shrink(m, k, n);
+            let kernel = ops::matmul_padded(
+                sm as i64,
+                sk as i64,
+                sn as i64,
+                m as i64, // preserve true leading dims → true conflict lattice
+                m as i64,
+                k as i64,
+                dtype.elem(),
+                0,
+            );
+            let mut plan = this.plan_shape(registry, &kernel, (m, n, k), dtype);
+            // resolve the AOT artifact against the *true* shape
+            plan.artifact = registry
+                .closest_variant(m, k, n, plan.model_tile)
+                .map(|a| a.name.clone())
+                .unwrap_or_else(|| format!("<no artifact for {m}x{k}x{n}>"));
+            plan
+        })
     }
 
     /// Plan any registered Table-1 kernel at the kernel's own element
@@ -157,26 +195,24 @@ impl Planner {
     /// a size-capped instance of the same op when the real domain would
     /// make even the sampled model slow (the same guard `plan` applies to
     /// matmul).
-    pub fn plan_kernel(&mut self, registry: &Registry, kernel: &Kernel) -> Plan {
+    pub fn plan_kernel(&self, registry: &Registry, kernel: &Kernel) -> Plan {
         let elem = kernel.operand(0).table.elem();
         let dtype = DType::from_elem(elem)
             .unwrap_or_else(|| panic!("no supported dtype for {elem}-byte elements"));
         let mut key_dims = kernel.extents().to_vec();
         key_dims.push(elem as i64); // f32/f64 instances are distinct plans
         let key = (kernel.name().to_string(), key_dims);
-        if let Some(p) = self.cache.get(&key) {
-            return p.clone();
-        }
-        let dims = GemmForm::of(kernel)
-            .map(|gf| (gf.m, gf.n, gf.k))
-            .unwrap_or_else(|| (kernel.domain_size().max(1) as usize, 1, 1));
-        let shrunk = shrink_kernel(kernel);
-        let model_kernel = shrunk.as_ref().unwrap_or(kernel);
-        let mut plan = self.plan_shape(registry, model_kernel, dims, dtype);
-        plan.kernel = kernel.name().to_string();
-        plan.artifact = format!("<packed-engine {}>", kernel.name());
-        self.cache.insert(key, plan.clone());
-        plan
+        self.cached_or_plan(key, |this| {
+            let dims = GemmForm::of(kernel)
+                .map(|gf| (gf.m, gf.n, gf.k))
+                .unwrap_or_else(|| (kernel.domain_size().max(1) as usize, 1, 1));
+            let shrunk = shrink_kernel(kernel);
+            let model_kernel = shrunk.as_ref().unwrap_or(kernel);
+            let mut plan = this.plan_shape(registry, model_kernel, dims, dtype);
+            plan.kernel = kernel.name().to_string();
+            plan.artifact = format!("<packed-engine {}>", kernel.name());
+            plan
+        })
     }
 
     /// Shared planning core: run the selector on `kernel`, lift the
@@ -253,7 +289,7 @@ impl Planner {
     }
 
     pub fn cached_plans(&self) -> usize {
-        self.cache.len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 }
 
@@ -319,7 +355,7 @@ mod tests {
             return;
         }
         let reg = Registry::load(&artifacts_dir()).unwrap();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p1 = planner.plan(&reg, 256, 256, 256, DType::F32);
         assert!(p1.artifact.starts_with("matmul_256x256x256"));
         let p2 = planner.plan(&reg, 256, 256, 256, DType::F32);
@@ -330,7 +366,7 @@ mod tests {
     #[test]
     fn planner_works_without_artifacts() {
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert!(p.artifact.contains("no artifact"));
         assert!(p.model_tile.0 > 0);
@@ -342,7 +378,7 @@ mod tests {
     fn plans_carry_and_report_macro_shape() {
         use crate::codegen::{MR, NR};
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan(&reg, 512, 512, 512, DType::F64);
         assert_eq!(p.level.mc % MR, 0);
         assert_eq!(p.level.nc % NR, 0);
@@ -366,7 +402,7 @@ mod tests {
     #[test]
     fn planner_plans_any_table1_kernel() {
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let conv = planner.plan_kernel(&reg, &ops::convolution(4096, 8, 0));
         assert_eq!(conv.kernel, "convolution");
         assert_eq!((conv.m, conv.n), (1, 1));
@@ -397,7 +433,7 @@ mod tests {
         // plan() resolves AOT artifacts, plan_kernel() the packed engine:
         // identical matmul extents must not collide in the cache
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let generic = planner.plan_kernel(&reg, &crate::domain::ops::matmul(64, 64, 64, 8, 0));
         assert!(generic.artifact.contains("packed-engine"));
         let served = planner.plan(&reg, 64, 64, 64, DType::F64);
@@ -415,7 +451,7 @@ mod tests {
         // sampled model at full size; planning stays fast and the GEMM
         // dims still reflect the *true* shape
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan_kernel(&reg, &crate::domain::ops::kronecker(64, 64, 64, 64, 8, 0));
         assert_eq!(p.m, 64 * 64);
         assert_eq!(p.n, 64 * 64);
@@ -426,7 +462,7 @@ mod tests {
     fn plan_reports_recorded_micro_shape() {
         let mut reg = Registry::default();
         reg.set_micro_shape(MicroShape::Mr8Nr6);
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert_eq!(p.micro, MicroShape::Mr8Nr6);
         assert!(p.describe().contains("micro 8x6"));
@@ -441,7 +477,7 @@ mod tests {
         let mut reg = Registry::default();
         reg.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr4);
         reg.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p64 = planner.plan_kernel(&reg, &ops::matmul(512, 512, 512, 8, 0));
         let p32 = planner.plan_kernel(&reg, &ops::matmul(512, 512, 512, 4, 0));
         assert_eq!(p32.dtype, DType::F32);
@@ -463,9 +499,43 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_planner_clones_share_one_sharded_cache() {
+        // 4 threads × one planner clone each, all planning the same set
+        // of distinct shapes: the shared shards must end up with exactly
+        // one plan per (kernel, dtype, shape) and every thread must see
+        // identical resolved plans
+        let reg = Registry::default();
+        let planner = Planner::new(CacheSpec::HASWELL_L1D).with_sample_classes(4);
+        let shapes: Vec<(usize, usize, usize)> =
+            vec![(32, 24, 40), (64, 64, 64), (48, 96, 32), (96, 32, 48)];
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let planner = planner.clone();
+                let reg = &reg;
+                let shapes = &shapes;
+                scope.spawn(move || {
+                    for &(m, k, n) in shapes {
+                        let a = planner.plan(reg, m, k, n, DType::F32);
+                        let kern = ops::matmul(m as i64, k as i64, n as i64, 8, 0);
+                        let b = planner.plan_kernel(reg, &kern);
+                        assert_eq!((a.m, a.k, a.n), (m, k, n));
+                        assert_eq!((b.m, b.k, b.n), (m, k, n));
+                    }
+                });
+            }
+        });
+        // one AOT-namespace plan and one packed-engine plan per shape,
+        // regardless of how many planners raced
+        assert_eq!(planner.cached_plans(), 2 * shapes.len());
+        // a fresh lookup returns the cached plan without re-modelling
+        let again = planner.plan(&reg, 32, 24, 40, DType::F32);
+        assert_eq!(again.plan_name, planner.plan(&reg, 32, 24, 40, DType::F32).plan_name);
+    }
+
+    #[test]
     fn plan_dtype_namespaces_do_not_collide() {
         let reg = Registry::default();
-        let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let a = planner.plan(&reg, 64, 64, 64, DType::F64);
         let b = planner.plan(&reg, 64, 64, 64, DType::F32);
         assert_eq!(planner.cached_plans(), 2);

@@ -1,40 +1,70 @@
-//! The serving coordinator: job queue → dynamic batcher → backend
-//! dispatch.
+//! The serving coordinator: bounded job queue → coalescing batcher →
+//! backend dispatch.
 //!
 //! One [`Service`] hosts one weight matrix `y` (k×n) and serves matmul
-//! jobs `x·y` for m×k left operands, the way an inference router serves a
-//! fixed model. Jobs are accumulated for up to a batching window and
-//! dispatched through one of two backends:
+//! jobs `x·y` for m×k left operands, the way an inference router serves
+//! a fixed model. The front is a **bounded async queue with admission
+//! control**: at most `queue_cap` jobs may be in flight (accepted but
+//! not yet answered), and an over-capacity [`submit`] is rejected
+//! immediately with [`SubmitError::QueueFull`] instead of buffering
+//! without limit — under overload the caller finds out at the door, not
+//! by timeout. Clone [`Service::client`] handles into as many threads as
+//! you like; they share the same queue and the same capacity.
+//!
+//! Accepted jobs coalesce into batches. The **batch window starts when
+//! the first job of a batch arrives** (idle time never consumes it), and
+//! a batch closes at `max_batch` jobs or when the window elapses,
+//! whichever is first. Only shape-compatible jobs coalesce — one service
+//! serves one (m, k, n), and [`submit`] rejects any other `x` length
+//! with [`SubmitError::ShapeMismatch`] before it can reach a batch.
+//!
+//! Batches dispatch through one of two backends:
 //!
 //! * [`Backend::Pjrt`] — the AOT-compiled JAX/Pallas artifacts via PJRT
 //!   (vmapped batched variant when shipped, padding partial batches with
-//!   zeros; single-shape kernel otherwise). Python is never involved: the
-//!   executables were AOT-compiled by `make artifacts`.
-//! * [`Backend::Native`] — the in-process **f32 packed macro-kernel**:
-//!   the engine that serves every Table-1 kernel now serves the f32
-//!   request path directly, with a plan whose element size, macro
-//!   footprint and register-tile width were all selected *for f32*
-//!   ([`Planner::plan_kernel`] on a 4-byte-element kernel). Needs no
-//!   artifacts, and doubles as the differential baseline against the
-//!   PJRT path.
+//!   zeros; single-shape kernel otherwise).
+//! * [`Backend::Native`] — the in-process **f32 packed macro-kernel**,
+//!   which executes a B-job batch as **one widened GEMM**. The transpose
+//!   lowering makes coalescing free: each job's `x` (row-major m×k) is
+//!   bit-identically the column-major k×m operand `C = xᵀ`, so B jobs
+//!   written side by side are the k×(m·B) operand of the same GEMM with
+//!   its column axis widened from m to m·B — no layout copies beyond the
+//!   per-job `copy_from_slice` already paid, and the startup-prepacked
+//!   `y` row panels plus each `kc` step's column bands are streamed once
+//!   **per batch** instead of once per job. Partial batches run the
+//!   column prefix `[0, B·m)` of the `max_batch`-wide plan
+//!   ([`run_macro_prepacked_cols`]); batches whose widened shape spans
+//!   several L3 super-bands can route through the parallel super-band
+//!   scheduler ([`run_parallel_macro_prepacked`]) with the resident row
+//!   panels shared read-only across workers.
 //!
 //! Either way the worker thread runs a one-shot startup autotune per
 //! dtype and records the winners in the registry, so plans report the
-//! register-tile shape the engine actually dispatches.
+//! register-tile shape the engine actually dispatches. [`Metrics`]
+//! attributes each job's latency into queue wait (submit → batch
+//! dispatch) and compute, with exact reservoir p50/p99 and a batch-size
+//! histogram.
+//!
+//! [`submit`]: Service::submit
+//! [`run_macro_prepacked_cols`]: crate::codegen::run_macro_prepacked_cols
+//! [`run_parallel_macro_prepacked`]: crate::codegen::run_parallel_macro_prepacked
 
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::cache::CacheSpec;
-use crate::codegen::executor::{pack_row_slices, run_macro_prepacked};
+use crate::codegen::executor::{pack_row_slices, run_macro_prepacked_cols, super_band_extents};
+use crate::codegen::parallel::run_parallel_macro_prepacked;
 use crate::codegen::{
     autotune, kernel_views, DType, GemmForm, KernelBuffers, MicroShape, PackedCols, PackedRows,
     RunPlan,
 };
-use crate::domain::ops;
+use crate::domain::{ops, Kernel};
 use crate::runtime::{ArtifactKind, Engine, Registry};
 use crate::tiling::LevelPlan;
 
@@ -51,6 +81,36 @@ pub enum Backend {
     Native,
 }
 
+/// Typed admission-control rejection from [`Service::submit`] /
+/// [`ServiceClient::submit`]. Rejections happen before the job enters
+/// the queue — a rejected job consumes no capacity and no worker time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue already holds `cap` in-flight jobs.
+    QueueFull { cap: usize },
+    /// `x` does not match the served m×k shape — it could never coalesce
+    /// with this service's batches.
+    ShapeMismatch { got: usize, want: usize },
+    /// The worker is gone (the service was stopped).
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { cap } => {
+                write!(f, "submission queue full (capacity {cap})")
+            }
+            SubmitError::ShapeMismatch { got, want } => {
+                write!(f, "x has {got} elements, served shape needs {want}")
+            }
+            SubmitError::Stopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 struct Job {
     x: Vec<f32>,
     resp: Sender<Result<Vec<f32>>>,
@@ -62,14 +122,69 @@ enum Msg {
     Stop,
 }
 
+/// Receiver for one submitted job's m×n row-major result.
+pub type ResultReceiver = Receiver<Result<Vec<f32>>>;
+
 /// Handle to a running coordinator thread.
 pub struct Service {
     tx: Sender<Msg>,
+    depth: Arc<AtomicUsize>,
+    queue_cap: usize,
     handle: std::thread::JoinHandle<(Metrics, Duration)>,
     m: usize,
     k: usize,
     n: usize,
     plan: Plan,
+}
+
+/// A cloneable submission handle onto a running [`Service`] — hand one
+/// to each client thread. Clones share the service's queue and its
+/// admission capacity.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: Sender<Msg>,
+    depth: Arc<AtomicUsize>,
+    queue_cap: usize,
+    m: usize,
+    k: usize,
+}
+
+fn admit_and_send(
+    tx: &Sender<Msg>,
+    depth: &AtomicUsize,
+    cap: usize,
+    want: usize,
+    x: Vec<f32>,
+) -> Result<ResultReceiver, SubmitError> {
+    if x.len() != want {
+        return Err(SubmitError::ShapeMismatch { got: x.len(), want });
+    }
+    // in-flight accounting: a slot is held from here until the worker
+    // has *answered* the job, so capacity bounds queued and executing
+    // work together
+    if depth.fetch_add(1, Ordering::SeqCst) >= cap {
+        depth.fetch_sub(1, Ordering::SeqCst);
+        return Err(SubmitError::QueueFull { cap });
+    }
+    let (rtx, rrx) = channel();
+    let job = Job {
+        x,
+        resp: rtx,
+        submitted: Instant::now(),
+    };
+    if tx.send(Msg::Job(job)).is_err() {
+        depth.fetch_sub(1, Ordering::SeqCst);
+        return Err(SubmitError::Stopped);
+    }
+    Ok(rrx)
+}
+
+impl ServiceClient {
+    /// Submit a job; returns the receiver for the m×n row-major result,
+    /// or a typed rejection if the queue is full / the shape is wrong.
+    pub fn submit(&self, x: Vec<f32>) -> Result<ResultReceiver, SubmitError> {
+        admit_and_send(&self.tx, &self.depth, self.queue_cap, self.m * self.k, x)
+    }
 }
 
 impl Service {
@@ -85,6 +200,17 @@ impl Service {
     pub fn plan(&self) -> &Plan {
         &self.plan
     }
+
+    /// A cloneable submission handle for client threads.
+    pub fn client(&self) -> ServiceClient {
+        ServiceClient {
+            tx: self.tx.clone(),
+            depth: self.depth.clone(),
+            queue_cap: self.queue_cap,
+            m: self.m,
+            k: self.k,
+        }
+    }
 }
 
 /// Configuration for [`Service::start`].
@@ -93,8 +219,20 @@ pub struct ServiceConfig {
     pub m: usize,
     pub k: usize,
     pub n: usize,
-    /// How long the batcher waits to fill a batch.
+    /// How long the batcher waits to fill a batch, measured from the
+    /// arrival of the batch's first job.
     pub batch_window: Duration,
+    /// Most jobs one dispatch may coalesce (the native backend plans its
+    /// widened GEMM for exactly this width at startup; the PJRT backend
+    /// is capped by the shipped batched artifact instead).
+    pub max_batch: usize,
+    /// Most in-flight jobs (accepted, not yet answered) before
+    /// [`Service::submit`] rejects with [`SubmitError::QueueFull`].
+    pub queue_cap: usize,
+    /// Worker threads for the native backend's batch GEMM: batches whose
+    /// widened shape spans several L3 super-bands route through the
+    /// parallel super-band scheduler. 1 = always serial.
+    pub threads: usize,
     /// Cache spec the planner models (tile selection).
     pub spec: CacheSpec,
     /// Execution engine: PJRT artifacts or the native packed kernel.
@@ -108,9 +246,35 @@ impl Default for ServiceConfig {
             k: 128,
             n: 128,
             batch_window: Duration::from_millis(2),
+            max_batch: 8,
+            queue_cap: 256,
+            threads: 1,
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
         }
+    }
+}
+
+/// The serve level for a coalescing-width plan pair: row/reduction-side
+/// blocking (`l1_tile`, `mc`, `kc`, `m3`) pinned from the single-job
+/// plan, column-side geometry (`nc`, `n3`) from the `max_batch`-wide
+/// plan. The split is what makes results **bitwise independent of
+/// `max_batch`**: the microkernel accumulates each `kc` reduction slice
+/// in registers and adds the slice sums in ascending-`k0` order, so the
+/// `kc` partition is the only blocking parameter that changes an output
+/// element's floating-point grouping — `mc`/`m3`/`l1` only regroup which
+/// elements run together and `nc`/`n3` only partition the widened column
+/// axis. Pinning the whole row/reduction side to the width-independent
+/// single-job plan keeps every element's accumulation order fixed while
+/// the column side still scales its bands to the widened batch extent.
+fn serving_level(job: &LevelPlan, wide: &LevelPlan) -> LevelPlan {
+    LevelPlan {
+        l1_tile: job.l1_tile,
+        mc: job.mc,
+        kc: job.kc,
+        m3: job.m3,
+        nc: wide.nc,
+        n3: wide.n3,
     }
 }
 
@@ -136,12 +300,15 @@ impl Service {
             "y must be k×n = {}",
             cfg.k * cfg.n
         );
-        let mut planner = Planner::new(cfg.spec);
+        let planner = Planner::new(cfg.spec);
         let (tx, rx) = channel::<Msg>();
+        let depth = Arc::new(AtomicUsize::new(0));
         let m = cfg.m;
         let k = cfg.k;
         let n = cfg.n;
         let window = cfg.batch_window;
+        let queue_cap = cfg.queue_cap.max(1);
+        let worker_depth = depth.clone();
         let (plan, handle) = match cfg.backend {
             Backend::Pjrt => {
                 // the PJRT artifacts compute in f32 — plan at f32 so the
@@ -175,34 +342,45 @@ impl Service {
                         batched,
                         y,
                     };
-                    worker_loop(backend, rx, m, k, n, window)
+                    worker_loop(backend, rx, worker_depth, m, k, n, window)
                 });
                 (plan, handle)
             }
             Backend::Native => {
-                // plan the kernel the native engine actually executes: the
-                // f32 (4-byte-element) column-major formulation below — so
-                // the macro shape and micro width are selected for f32
-                let mut plan =
-                    planner.plan_kernel(&registry, &NativeMatmul::kernel_for(m, k, n));
+                let max_batch = cfg.max_batch.max(1);
+                let threads = cfg.threads.max(1);
+                // plan the kernel the native engine actually executes —
+                // the f32 column-major transpose lowering — twice: once at
+                // the single-job width (the numerics anchor) and once at
+                // the full coalescing width m·max_batch (the geometry the
+                // resident arena is laid out for); see `serving_level`
+                let job_plan = planner.plan_kernel(&registry, &NativeMatmul::kernel_for(m, k, n));
+                let wide_kernel = NativeMatmul::kernel_for(m * max_batch, k, n);
+                let wide_plan = planner.plan_kernel(&registry, &wide_kernel);
+                let level = serving_level(&job_plan.level, &wide_plan.level);
+                let mut plan = job_plan;
+                plan.level = level;
                 // the executed kernel is the transpose lowering (GEMM rows
-                // = serve columns), and the plan's m/n/tile/macro fields
-                // describe *that* kernel consistently; surface the serve
-                // shape in the name so plan lines are readable next to the
+                // = serve columns); surface the serve shape and the
+                // coalescing width so plan lines are readable next to the
                 // PJRT backend's
-                plan.plan_name =
-                    format!("{} (serving {m}x{k}x{n} via transpose)", plan.plan_name);
-                let level = plan.level;
+                plan.plan_name = format!(
+                    "{} (serving {m}x{k}x{n} via transpose, coalescing <= {max_batch})",
+                    plan.plan_name
+                );
                 let micro = plan.micro;
                 let handle = std::thread::spawn(move || {
-                    let native = NativeMatmul::new(m, k, n, &y, level, micro);
-                    worker_loop(WorkerBackend::Native(Box::new(native)), rx, m, k, n, window)
+                    let native = NativeMatmul::new(m, k, n, &y, level, micro, max_batch, threads);
+                    let backend = WorkerBackend::Native(Box::new(native));
+                    worker_loop(backend, rx, worker_depth, m, k, n, window)
                 });
                 (plan, handle)
             }
         };
         Ok(Service {
             tx,
+            depth,
+            queue_cap,
             handle,
             m,
             k,
@@ -211,18 +389,11 @@ impl Service {
         })
     }
 
-    /// Submit a job; returns the receiver for the m×n row-major result.
-    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Result<Vec<f32>>>> {
-        anyhow::ensure!(x.len() == self.m * self.k, "x must be m×k");
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Msg::Job(Job {
-                x,
-                resp: rtx,
-                submitted: Instant::now(),
-            }))
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
-        Ok(rrx)
+    /// Submit a job; returns the receiver for the m×n row-major result,
+    /// or a typed rejection if the bounded queue is at capacity / the
+    /// shape is wrong.
+    pub fn submit(&self, x: Vec<f32>) -> Result<ResultReceiver, SubmitError> {
+        admit_and_send(&self.tx, &self.depth, self.queue_cap, self.m * self.k, x)
     }
 
     /// Stop and collect metrics (+ total wall time of the worker).
@@ -232,41 +403,56 @@ impl Service {
     }
 }
 
-/// The f32 packed-macro-kernel serve engine: one resident
-/// [`KernelBuffers<f32>`] arena holding `y` — whose row panels really
-/// are packed once, at startup ([`pack_row_slices`]) — and the per-job
-/// `x`, driven by [`run_macro_prepacked`] with the plan's full
-/// three-level shape (the `m3×n3` L3 super-band nest selects whole
-/// block subranges of the pre-packed slices, so the serve loop follows
-/// the same schedule as the batch engine without duplicating the
-/// resident panels) and the f32 autotune winner. Per job only the `x`
-/// column bands are packed; the weight panels are reused as-is.
+/// The f32 packed-macro-kernel serve engine, planned for a coalesced
+/// batch: one resident [`KernelBuffers<f32>`] arena laid out for the
+/// `max_batch`-wide GEMM, holding `y` — whose row panels really are
+/// packed once, at startup ([`pack_row_slices`]) — and up to `max_batch`
+/// jobs' `x` operands side by side.
 ///
 /// Row-major serving lowers onto the column-major engine via the
 /// transpose identity `(x·y)ᵀ = yᵀ·xᵀ`: the kernel computes the
-/// column-major product `A(n×m) = B(n×k)·C(k×m)`, and the row-major
+/// column-major product `A(n×m·B) = B(n×k)·C(k×m·B)`, and the row-major
 /// buffers are *bit-identical* reinterpretations — `y` row-major k×n is
-/// exactly `B = yᵀ` column-major n×k, `x` row-major m×k is exactly
-/// `C = xᵀ` column-major k×m, and the output table read in layout order
-/// is exactly `x·y` row-major m×n. No transposition copies anywhere.
+/// exactly `B = yᵀ` column-major n×k, each job's `x` row-major m×k is
+/// exactly an m-column block of `C` column-major, and the output table
+/// read in layout order is the batch's row-major m×n results
+/// concatenated. No transposition copies anywhere, so coalescing B jobs
+/// is *free*: the batch is one GEMM whose column axis widened from m to
+/// m·B, and a partial batch executes the column prefix `[0, B·m)` of the
+/// same plan ([`run_macro_prepacked_cols`] — the per-column offset
+/// tables make the prefix exactly the narrower GEMM). Per batch only the
+/// `x` column bands are packed; the weight panels are reused as-is, and
+/// when the widened shape spans several L3 super-bands and `threads > 1`
+/// the batch routes through [`run_parallel_macro_prepacked`] with those
+/// resident panels shared read-only across workers.
 struct NativeMatmul {
+    /// The `max_batch`-wide kernel (the parallel path re-checks its
+    /// output map is injective before sharing the arena across workers).
+    kernel: Kernel,
     plan: RunPlan,
     level: LevelPlan,
     micro: MicroShape,
     bufs: KernelBuffers<f32>,
     /// `y`'s row panels, one [`PackedRows`] per reduction slice — packed
-    /// once at startup, shared by every job (`y` never changes).
+    /// once at startup, shared by every batch (`y` never changes).
     rows: Vec<PackedRows<f32>>,
     cols: PackedCols<f32>,
+    m: usize,
+    k: usize,
+    n: usize,
+    max_batch: usize,
+    threads: usize,
 }
 
 impl NativeMatmul {
     /// The f32 kernel the native backend executes for an m×k×n serve
-    /// shape (see the type docs for the transpose lowering).
-    fn kernel_for(m: usize, k: usize, n: usize) -> crate::domain::Kernel {
+    /// shape (see the type docs for the transpose lowering) — pass
+    /// `m·max_batch` as `m` for the coalesced-batch kernel.
+    fn kernel_for(m: usize, k: usize, n: usize) -> Kernel {
         ops::matmul(n as i64, k as i64, m as i64, DType::F32.elem(), 0)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn new(
         m: usize,
         k: usize,
@@ -274,8 +460,11 @@ impl NativeMatmul {
         y: &[f32],
         level: LevelPlan,
         micro: MicroShape,
+        max_batch: usize,
+        threads: usize,
     ) -> NativeMatmul {
-        let kernel = NativeMatmul::kernel_for(m, k, n);
+        let max_batch = max_batch.max(1);
+        let kernel = NativeMatmul::kernel_for(m * max_batch, k, n);
         let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
         // operand 1 is B = yᵀ (n×k column-major) — the same linear bytes
         // as y (k×n row-major)
@@ -284,33 +473,71 @@ impl NativeMatmul {
         let lo = vec![0i64; kernel.n_free()];
         let plan = gf.plan_box(&kernel_views(&kernel), &lo, kernel.extents());
         // y is resident for the service's lifetime: pack its row panels
-        // exactly once, here
+        // exactly once, here — they depend only on rows × reduction, so
+        // one set serves every batch width
         let rows = pack_row_slices(&bufs.arena, &plan, &level);
         NativeMatmul {
+            kernel,
             plan,
             level,
             micro,
             bufs,
             rows,
             cols: PackedCols::new(),
+            m,
+            k,
+            n,
+            max_batch,
+            threads,
         }
     }
 
-    /// Serve one job: load `x`, zero the output, run the packed
-    /// macro-kernel over the pre-packed weight panels, read the output in
-    /// row-major order.
-    fn run(&mut self, x: &[f32]) -> Vec<f32> {
+    /// Serve a coalesced batch as one widened GEMM: load the jobs' `x`
+    /// operands side by side, zero the output, run the column prefix
+    /// `[0, B·m)` over the pre-packed weight panels (parallel across L3
+    /// super-bands when configured and profitable), slice the output per
+    /// job in row-major order. Returns the per-job results and the
+    /// number of column-band packs the batch performed (the resident row
+    /// panels are packed zero times here — test-pinned).
+    fn run_batch(&mut self, xs: &[&[f32]]) -> (Vec<Vec<f32>>, u64) {
+        let b = xs.len();
+        assert!((1..=self.max_batch).contains(&b), "batch exceeds planned width");
         self.bufs.reset_output();
-        self.bufs.operand_mut(2).copy_from_slice(x);
-        run_macro_prepacked(
-            &mut self.bufs.arena,
-            &self.plan,
-            &self.level,
-            self.micro,
-            &self.rows,
-            &mut self.cols,
-        );
-        self.bufs.output()
+        let job = self.m * self.k;
+        let op2 = self.bufs.operand_mut(2);
+        for (i, x) in xs.iter().enumerate() {
+            op2[i * job..(i + 1) * job].copy_from_slice(x);
+        }
+        let n_used = self.m * b;
+        let (m3, n3) = super_band_extents(&self.level);
+        let grid = self.plan.m.div_ceil(m3) * n_used.div_ceil(n3);
+        let col_packs = if self.threads > 1 && grid > 1 {
+            run_parallel_macro_prepacked(
+                &mut self.bufs.arena,
+                &self.kernel,
+                &self.plan,
+                &self.level,
+                self.micro,
+                &self.rows,
+                self.threads,
+                n_used,
+            )
+            .col_band_packs
+        } else {
+            run_macro_prepacked_cols(
+                &mut self.bufs.arena,
+                &self.plan,
+                &self.level,
+                self.micro,
+                &self.rows,
+                &mut self.cols,
+                n_used,
+            )
+        };
+        let out = self.bufs.output();
+        let per = self.m * self.n;
+        let outs = (0..b).map(|i| out[i * per..(i + 1) * per].to_vec()).collect();
+        (outs, col_packs)
     }
 }
 
@@ -332,17 +559,8 @@ impl WorkerBackend {
                 batched: Some((_, b)),
                 ..
             } => *b,
-            _ => 1,
-        }
-    }
-
-    /// Run a single job.
-    fn run_one(&mut self, x: &[f32]) -> Result<Vec<f32>> {
-        match self {
-            WorkerBackend::Pjrt {
-                engine, single, y, ..
-            } => engine.run_matmul(single, x, y),
-            WorkerBackend::Native(native) => Ok(native.run(x)),
+            WorkerBackend::Pjrt { .. } => 1,
+            WorkerBackend::Native(native) => native.max_batch,
         }
     }
 }
@@ -350,6 +568,7 @@ impl WorkerBackend {
 fn worker_loop(
     mut backend: WorkerBackend,
     rx: Receiver<Msg>,
+    depth: Arc<AtomicUsize>,
     m: usize,
     k: usize,
     n: usize,
@@ -362,79 +581,108 @@ fn worker_loop(
     let mut stopping = false;
 
     while !stopping || !pending.is_empty() {
-        // fill the batch within the window
         let cap = backend.batch_cap();
-        let deadline = Instant::now() + window;
-        while !stopping && pending.len() < cap {
-            let timeout = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(timeout) {
-                Ok(Msg::Job(j)) => pending.push(j),
-                Ok(Msg::Stop) => stopping = true,
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => {
-                    stopping = true;
-                    break;
-                }
-            }
-            if pending.len() == 1 && window.is_zero() {
-                break;
-            }
-        }
-        if pending.is_empty() {
-            if stopping {
-                break;
-            }
-            // idle: block for the next message
+        if pending.is_empty() && !stopping {
+            // idle: block for the batch's first job — the window must
+            // not start (or tick) until it lands
             match rx.recv() {
                 Ok(Msg::Job(j)) => pending.push(j),
                 Ok(Msg::Stop) | Err(_) => stopping = true,
             }
-            continue;
         }
-
-        metrics.record_batch();
-        let batch = std::mem::take(&mut pending);
-        let use_batched = batch.len() > 1
-            && matches!(
-                &backend,
-                WorkerBackend::Pjrt {
-                    batched: Some(_),
-                    ..
+        if !pending.is_empty() && !stopping {
+            // the batch window runs from the first job's arrival
+            let deadline = Instant::now() + window;
+            while pending.len() < cap {
+                let timeout = deadline.saturating_duration_since(Instant::now());
+                if timeout.is_zero() {
+                    break;
                 }
-            );
-        if use_batched {
-            if let WorkerBackend::Pjrt {
-                engine,
-                batched: Some((name, cap)),
-                y,
-                ..
-            } = &mut backend
-            {
-                // pad to the full batch with zeros
-                let mut xs = vec![0f32; *cap * m * k];
-                for (i, j) in batch.iter().enumerate() {
-                    xs[i * m * k..(i + 1) * m * k].copy_from_slice(&j.x);
-                }
-                match engine.run_matmul(name, &xs, y) {
-                    Ok(out) => {
-                        for (i, j) in batch.into_iter().enumerate() {
-                            let slice = out[i * m * n..(i + 1) * m * n].to_vec();
-                            metrics.record_job(j.submitted.elapsed(), flops_per_job);
-                            let _ = j.resp.send(Ok(slice));
-                        }
+                match rx.recv_timeout(timeout) {
+                    Ok(Msg::Job(j)) => pending.push(j),
+                    Ok(Msg::Stop) => {
+                        stopping = true;
+                        break;
                     }
-                    Err(e) => {
-                        for j in batch {
-                            let _ = j.resp.send(Err(anyhow::anyhow!("{e:#}")));
-                        }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        stopping = true;
+                        break;
                     }
                 }
             }
-        } else {
-            for j in batch {
-                let r = backend.run_one(&j.x);
-                metrics.record_job(j.submitted.elapsed(), flops_per_job);
-                let _ = j.resp.send(r);
+        }
+        if pending.is_empty() {
+            continue;
+        }
+
+        let take = cap.min(pending.len());
+        let batch: Vec<Job> = pending.drain(..take).collect();
+        let dispatch = Instant::now();
+        let waits: Vec<Duration> = batch
+            .iter()
+            .map(|j| dispatch.saturating_duration_since(j.submitted))
+            .collect();
+        match &mut backend {
+            WorkerBackend::Native(native) => {
+                let xs: Vec<&[f32]> = batch.iter().map(|j| j.x.as_slice()).collect();
+                let (outs, _col_packs) = native.run_batch(&xs);
+                metrics.record_batch(batch.len(), dispatch.elapsed());
+                for ((j, out), wait) in batch.into_iter().zip(outs).zip(waits) {
+                    metrics.record_job(j.submitted.elapsed(), wait, flops_per_job);
+                    let _ = j.resp.send(Ok(out));
+                    depth.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            WorkerBackend::Pjrt {
+                engine,
+                single,
+                batched,
+                y,
+            } => {
+                if batch.len() > 1 {
+                    let (name, bcap) = batched
+                        .as_ref()
+                        .expect("multi-job batch without a batched artifact");
+                    // pad to the full batch with zeros
+                    let mut xs = vec![0f32; *bcap * m * k];
+                    for (i, j) in batch.iter().enumerate() {
+                        xs[i * m * k..(i + 1) * m * k].copy_from_slice(&j.x);
+                    }
+                    let run = engine.run_matmul(name, &xs, y);
+                    metrics.record_batch(batch.len(), dispatch.elapsed());
+                    match run {
+                        Ok(out) => {
+                            for ((i, j), wait) in batch.into_iter().enumerate().zip(waits) {
+                                let slice = out[i * m * n..(i + 1) * m * n].to_vec();
+                                metrics.record_job(j.submitted.elapsed(), wait, flops_per_job);
+                                let _ = j.resp.send(Ok(slice));
+                                depth.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                        Err(e) => {
+                            // failed jobs still count: they held queue
+                            // capacity and worker time, and hiding them
+                            // would overstate the service's health
+                            for (j, wait) in batch.into_iter().zip(waits) {
+                                metrics.record_error(j.submitted.elapsed(), wait);
+                                let _ = j.resp.send(Err(anyhow::anyhow!("{e:#}")));
+                                depth.fetch_sub(1, Ordering::SeqCst);
+                            }
+                        }
+                    }
+                } else {
+                    for (j, wait) in batch.into_iter().zip(waits) {
+                        let r = engine.run_matmul(single, &j.x, y);
+                        match &r {
+                            Ok(_) => metrics.record_job(j.submitted.elapsed(), wait, flops_per_job),
+                            Err(_) => metrics.record_error(j.submitted.elapsed(), wait),
+                        }
+                        let _ = j.resp.send(r);
+                        depth.fetch_sub(1, Ordering::SeqCst);
+                    }
+                    metrics.record_batch(take, dispatch.elapsed());
+                }
             }
         }
     }
@@ -473,6 +721,17 @@ mod tests {
         }
     }
 
+    fn native_config(m: usize, k: usize, n: usize, window: Duration) -> ServiceConfig {
+        ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: window,
+            backend: Backend::Native,
+            ..ServiceConfig::default()
+        }
+    }
+
     #[test]
     fn service_serves_correct_results() {
         if !artifacts_dir().join("manifest.tsv").exists() {
@@ -490,8 +749,7 @@ mod tests {
                 k,
                 n,
                 batch_window: Duration::from_millis(1),
-                spec: CacheSpec::HASWELL_L1D,
-                backend: Backend::Pjrt,
+                ..ServiceConfig::default()
             },
         )
         .unwrap();
@@ -528,21 +786,14 @@ mod tests {
         let svc = Service::start(
             Path::new("definitely-no-artifacts-here"),
             y.clone(),
-            ServiceConfig {
-                m,
-                k,
-                n,
-                batch_window: Duration::from_millis(1),
-                spec: CacheSpec::HASWELL_L1D,
-                backend: Backend::Native,
-            },
+            native_config(m, k, n, Duration::from_millis(1)),
         )
         .expect("native service must start without artifacts");
         let plan = svc.plan().clone();
         assert_eq!(plan.dtype, DType::F32, "{}", plan.describe());
         assert!(plan.artifact.contains("packed-engine"), "{}", plan.describe());
         // the served plan carries (and reports) the L3 super-band shape
-        // the prepacked engine threads through run_macro_prepacked
+        // the prepacked engine threads through the coalesced batch GEMM
         assert!(plan.describe().contains("super m3="), "{}", plan.describe());
         assert_eq!(plan.level.m3 % plan.level.mc, 0, "{}", plan.describe());
         assert_eq!(plan.level.n3 % plan.level.nc, 0, "{}", plan.describe());
@@ -590,8 +841,8 @@ mod tests {
                     k,
                     n,
                     batch_window: Duration::from_millis(1),
-                    spec: CacheSpec::HASWELL_L1D,
                     backend,
+                    ..ServiceConfig::default()
                 },
             )
             .unwrap();
@@ -611,25 +862,20 @@ mod tests {
 
     #[test]
     fn native_backend_batches_under_load() {
-        // a wider window than the submit cadence: several jobs coalesce
-        // into batches and every result stays correct
+        // a wider window than the submit cadence: the batcher must
+        // actually coalesce — strictly fewer dispatches than jobs — and
+        // every result stays correct
         let (m, k, n) = (32usize, 24, 40);
         let mut rnd = xorshift_f32(0xBA7C4);
         let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
         let svc = Service::start(
             Path::new("no-artifacts"),
             y.clone(),
-            ServiceConfig {
-                m,
-                k,
-                n,
-                batch_window: Duration::from_millis(5),
-                spec: CacheSpec::HASWELL_L1D,
-                backend: Backend::Native,
-            },
+            native_config(m, k, n, Duration::from_millis(50)),
         )
         .unwrap();
-        let xs: Vec<Vec<f32>> = (0..8)
+        let jobs = 8usize;
+        let xs: Vec<Vec<f32>> = (0..jobs)
             .map(|_| (0..m * k).map(|_| rnd()).collect())
             .collect();
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
@@ -644,7 +890,241 @@ mod tests {
             assert!(maxd < 1e-3, "batched native result off by {maxd}");
         }
         let (metrics, _) = svc.stop();
-        assert_eq!(metrics.jobs, 8);
-        assert!(metrics.batches >= 1);
+        assert_eq!(metrics.jobs, jobs as u64);
+        assert!(
+            metrics.batches < jobs as u64,
+            "a 50ms window over back-to-back submits must coalesce: \
+             {} batches for {} jobs",
+            metrics.batches,
+            jobs
+        );
+        assert!(metrics.mean_batch_size() > 1.0);
+        // the batch-size histogram accounts for every job
+        let accounted: u64 = (0..=jobs).map(|s| s as u64 * metrics.batches_of_size(s)).sum();
+        assert_eq!(accounted, jobs as u64);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow_with_typed_error() {
+        // capacity 2, a window long enough that the worker is still
+        // holding both jobs when the third arrives: the third submit must
+        // be rejected at the door, and capacity must free once results
+        // are delivered
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0xCA9);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y,
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(150),
+                max_batch: 16,
+                queue_cap: 2,
+                backend: Backend::Native,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let x = || -> Vec<f32> { vec![0.25; m * k] };
+        // wrong shape: typed rejection before any queueing
+        let bad = svc.submit(vec![0.0; m * k + 1]);
+        assert_eq!(
+            bad.err(),
+            Some(SubmitError::ShapeMismatch {
+                got: m * k + 1,
+                want: m * k
+            })
+        );
+        let rx1 = svc.submit(x()).unwrap();
+        let rx2 = svc.submit(x()).unwrap();
+        let over = svc.submit(x());
+        assert_eq!(over.err(), Some(SubmitError::QueueFull { cap: 2 }));
+        let msg = SubmitError::QueueFull { cap: 2 }.to_string();
+        assert!(msg.contains("capacity 2"), "{msg}");
+        // both in-flight jobs complete (the window elapses), freeing
+        // capacity for a new submission
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
+        let rx4 = svc.submit(x()).unwrap();
+        rx4.recv().unwrap().unwrap();
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 3, "rejected submissions must not count");
+        assert_eq!(metrics.errors, 0);
+    }
+
+    #[test]
+    fn coalesced_results_bitwise_stable_across_max_batch() {
+        // the numerics contract of the widened-GEMM coalescer: the same
+        // job set served through max_batch 1, 4 and 16 produces
+        // bit-identical f32 results — the kc partition (the only blocking
+        // parameter that regroups an output element's reduction) is
+        // pinned from the single-job plan at every width
+        for (m, k, n) in [(45usize, 33usize, 52usize), (8, 96, 40)] {
+            let mut rnd = xorshift_f32(0xB17 + ((m as u64) << 3));
+            let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+            let jobs = 6usize;
+            let xs: Vec<Vec<f32>> = (0..jobs)
+                .map(|_| (0..m * k).map(|_| rnd()).collect())
+                .collect();
+            let mut per_width: Vec<Vec<Vec<f32>>> = Vec::new();
+            for max_batch in [1usize, 4, 16] {
+                let svc = Service::start(
+                    Path::new("no-artifacts"),
+                    y.clone(),
+                    ServiceConfig {
+                        m,
+                        k,
+                        n,
+                        batch_window: Duration::from_millis(10),
+                        max_batch,
+                        backend: Backend::Native,
+                        ..ServiceConfig::default()
+                    },
+                )
+                .unwrap();
+                let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+                let outs: Vec<Vec<f32>> =
+                    rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+                svc.stop();
+                per_width.push(outs);
+            }
+            // bitwise across widths (Vec<f32> equality is exact)
+            assert_eq!(
+                per_width[0], per_width[1],
+                "{m}x{k}x{n}: max_batch 1 vs 4 differ"
+            );
+            assert_eq!(
+                per_width[1], per_width[2],
+                "{m}x{k}x{n}: max_batch 4 vs 16 differ"
+            );
+            // and correct vs the row-major oracle
+            for (x, got) in xs.iter().zip(&per_width[2]) {
+                let want = rowmajor_matmul(m, k, n, x, &y);
+                let maxd = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(maxd < 1e-3, "{m}x{k}x{n}: coalesced result off by {maxd}");
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_batch_pack_discipline() {
+        // the amortization the tentpole buys, pinned at the counter
+        // level: a B-job batch packs the resident y row panels ZERO times
+        // and each x column band exactly once — independent of B
+        let (m, k, n) = (5usize, 20, 24);
+        let max_batch = 8usize;
+        let level = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 16,
+            kc: 9,
+            nc: 12,
+            m3: 32,
+            n3: 24,
+        };
+        let mut rnd = xorshift_f32(0x9ACC);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let mut native = NativeMatmul::new(m, k, n, &y, level, MicroShape::Mr8Nr4, max_batch, 1);
+        // GEMM shape: rows = n = 24 (one super-band at m3 = 32),
+        // reduction = k = 20 (ceil(20/9) = 3 kc slices), columns = m·B
+        let kslices = 3u64;
+        assert_eq!(native.rows.len(), kslices as usize);
+        let startup_packs: u64 = native.rows.iter().map(|r| r.pack_count()).sum();
+        for b in [3usize, 8, 1, 8] {
+            let xs: Vec<Vec<f32>> = (0..b)
+                .map(|_| (0..m * k).map(|_| rnd()).collect())
+                .collect();
+            let views: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+            let (outs, col_packs) = native.run_batch(&views);
+            // resident panels: packed zero times per batch
+            let now: u64 = native.rows.iter().map(|r| r.pack_count()).sum();
+            assert_eq!(now, startup_packs, "batch B={b} repacked resident y panels");
+            // each x column band packed exactly once: one pack per
+            // (kc slice, nc band over the used prefix)
+            let n_used = (m * b) as u64;
+            let nc_bands: u64 = (0..n_used)
+                .step_by(24)
+                .map(|j3| (n_used - j3).min(24).div_ceil(12))
+                .sum();
+            assert_eq!(col_packs, kslices * nc_bands, "B={b}");
+            for (x, got) in xs.iter().zip(&outs) {
+                let want = rowmajor_matmul(m, k, n, x, &y);
+                let maxd = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(maxd < 1e-3, "B={b}: batch result off by {maxd}");
+            }
+        }
+    }
+
+    #[test]
+    fn many_clients_load_test_reports_percentiles_and_split() {
+        // the synthetic many-client load test: concurrent client threads
+        // hammer one service through cloned handles; every result checks
+        // against the oracle and the metrics report carries exact
+        // percentiles plus the queue-wait vs compute attribution
+        let (m, k, n) = (32usize, 24, 40);
+        let clients = 4usize;
+        let per_client = 16usize;
+        let mut rnd = xorshift_f32(0x10AD);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(1),
+                max_batch: 8,
+                queue_cap: 512,
+                backend: Backend::Native,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let client = svc.client();
+                let y = &y;
+                scope.spawn(move || {
+                    let mut rnd = xorshift_f32(0xC11E47 + c as u64);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+                        let rx = client.submit(x.clone()).unwrap();
+                        let got = rx.recv().unwrap().unwrap();
+                        let want = rowmajor_matmul(m, k, n, &x, y);
+                        let maxd = got
+                            .iter()
+                            .zip(&want)
+                            .map(|(a, b)| (a - b).abs())
+                            .fold(0f32, f32::max);
+                        assert!(maxd < 1e-3, "client {c}: result off by {maxd}");
+                    }
+                });
+            }
+        });
+        let (metrics, wall) = svc.stop();
+        let jobs = (clients * per_client) as u64;
+        assert_eq!(metrics.jobs, jobs);
+        assert_eq!(metrics.errors, 0);
+        assert!(metrics.compute > Duration::ZERO);
+        assert!(metrics.percentile_us(0.99) >= metrics.percentile_us(0.50));
+        // the histogram accounts for every job, none above the cap
+        let accounted: u64 = (0..=8).map(|s| s as u64 * metrics.batches_of_size(s)).sum();
+        assert_eq!(accounted, jobs);
+        let report = metrics.report(wall);
+        for needle in ["p50=", "p99=", "queue-wait=", "compute=", "mean-batch="] {
+            assert!(report.contains(needle), "report missing {needle}: {report}");
+        }
+        println!("load test: {report}");
     }
 }

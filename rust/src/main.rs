@@ -18,7 +18,7 @@ use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
 use latticetile::codegen::{autotune, run_trace_only, DType, Scalar};
 use latticetile::conflict::MissModel;
-use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
+use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig, SubmitError};
 use latticetile::domain::ops;
 use latticetile::experiments::{self, harness::Table};
 use latticetile::runtime::Registry;
@@ -57,13 +57,18 @@ USAGE:
                       [--dtype f32|f64]
   latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy> [--full]
   latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
-                      [--backend pjrt|native]
+                      [--backend pjrt|native] [--max-batch B] [--queue-cap Q]
+                      [--threads T] [--clients C] [--window-ms W]
 
 --dtype selects the element type the model and the packed engine run at
 (f32 halves the element size, so plans get twice the elements per line
 and twice the register-tile width; compiler-analog strategies are
 f64-only). --backend native serves f32 through the in-process packed
-macro-kernel, no AOT artifacts needed.
+macro-kernel, no AOT artifacts needed; it coalesces up to --max-batch
+jobs per dispatch into one widened GEMM over the prepacked weights.
+--queue-cap bounds in-flight jobs (over-capacity submits are rejected),
+--clients runs that many concurrent client threads, and --window-ms is
+the batch window measured from the first job of a batch.
 
 The cache spec defaults to Intel Haswell L1d (32 KiB, 64 B lines, 8-way)."
     );
@@ -184,7 +189,7 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let mut reg = Registry::default();
     reg.set_micro_shape_for(DType::F64, autotune::calibrate_dtype::<f64>(500));
     reg.set_micro_shape_for(DType::F32, autotune::calibrate_dtype::<f32>(500));
-    let mut planner = Planner::new(spec).with_sample_classes(samples);
+    let planner = Planner::new(spec).with_sample_classes(samples);
     let full = planner.plan_kernel(&reg, &ops::matmul(n, n, n, dtype.elem(), 0));
     println!("\nresolved plan: {}", full.describe());
     0
@@ -558,6 +563,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         return 2;
     }
     let (m, k, n) = (dims[0], dims[1], dims[2]);
+    let max_batch = geti(flags, "max-batch", 8).max(1) as usize;
+    let queue_cap = geti(flags, "queue-cap", 256).max(1) as usize;
+    let threads = geti(flags, "threads", 1).max(1) as usize;
+    let clients = geti(flags, "clients", 1).max(1) as usize;
+    let window_ms = geti(flags, "window-ms", 2).max(0) as u64;
     let backend = match flags.get("backend").map(|s| s.as_str()) {
         None | Some("pjrt") => Backend::Pjrt,
         Some("native") => Backend::Native,
@@ -593,7 +603,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             m,
             k,
             n,
-            batch_window: Duration::from_millis(2),
+            batch_window: Duration::from_millis(window_ms),
+            max_batch,
+            queue_cap,
+            threads,
             spec: CacheSpec::HASWELL_L1D,
             backend,
         },
@@ -601,18 +614,46 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     .expect("service start");
     println!("serving with {}", svc.plan().describe());
 
+    // each client submits its share as a burst (so the batcher has
+    // something to coalesce), retrying politely when the bounded queue
+    // pushes back, then drains its responses
+    let per_client = jobs.div_ceil(clients);
+    let total = per_client * clients;
     let t0 = Instant::now();
-    let mut rxs = Vec::new();
-    for _ in 0..jobs {
-        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
-        rxs.push(svc.submit(x).expect("submit"));
-    }
-    for rx in rxs {
-        rx.recv().expect("recv").expect("job ok");
-    }
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let client = svc.client();
+            scope.spawn(move || {
+                let mut seed = 0x243F6A88u64 ^ ((c as u64 + 1) << 32);
+                let mut rnd = move || {
+                    seed ^= seed << 13;
+                    seed ^= seed >> 7;
+                    seed ^= seed << 17;
+                    ((seed % 1000) as f32 / 1000.0) - 0.5
+                };
+                let mut rxs = Vec::new();
+                for _ in 0..per_client {
+                    let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+                    let rx = loop {
+                        match client.submit(x.clone()) {
+                            Ok(rx) => break rx,
+                            Err(SubmitError::QueueFull { .. }) => {
+                                std::thread::sleep(Duration::from_micros(200))
+                            }
+                            Err(e) => panic!("submit failed: {e}"),
+                        }
+                    };
+                    rxs.push(rx);
+                }
+                for rx in rxs {
+                    rx.recv().expect("recv").expect("job ok");
+                }
+            });
+        }
+    });
     let wall = t0.elapsed();
     let (metrics, _) = svc.stop();
-    println!("served {jobs} jobs ({m}x{k}x{n}) in {wall:?}");
+    println!("served {total} jobs ({m}x{k}x{n}) from {clients} client(s) in {wall:?}");
     println!("{}", metrics.report(wall));
     0
 }

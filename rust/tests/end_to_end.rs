@@ -103,6 +103,7 @@ fn coordinator_serves_burst_correctly() {
             batch_window: Duration::from_millis(1),
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
+            ..ServiceConfig::default()
         },
     )
     .unwrap();
@@ -142,7 +143,7 @@ fn planner_resolves_all_shipped_shapes() {
         return;
     }
     let reg = Registry::load(&artifacts_dir()).unwrap();
-    let mut planner = Planner::new(CacheSpec::HASWELL_L1D);
+    let planner = Planner::new(CacheSpec::HASWELL_L1D);
     let shapes: Vec<(usize, usize, usize)> = reg
         .artifacts()
         .iter()
@@ -212,6 +213,7 @@ fn native_serve_backend_end_to_end() {
             batch_window: Duration::from_millis(1),
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Native,
+            ..ServiceConfig::default()
         },
     )
     .unwrap();
