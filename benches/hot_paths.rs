@@ -74,7 +74,7 @@ fn serve_burst_bench(
     let burst = || {
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
         for rx in rxs {
-            rx.recv().unwrap().unwrap();
+            rx.recv().unwrap();
         }
     };
     for _ in 0..2 {

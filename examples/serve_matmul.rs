@@ -69,7 +69,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut results = Vec::with_capacity(jobs);
     for rx in rxs {
-        results.push(rx.recv()??);
+        results.push(rx.recv()?);
     }
     let wall = t0.elapsed();
 

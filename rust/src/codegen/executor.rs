@@ -710,6 +710,9 @@ pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
         row_packs += 1;
         for j0 in (j3..j3 + n3c).step_by(nc) {
             let ncc = (j0 + nc).min(j3 + n3c) - j0;
+            // chaos hook: a scoped fault schedule may panic here to model
+            // a failure mid-pack (no-op unless test/fault-injection)
+            crate::coordinator::faults::raise_if(crate::coordinator::faults::FaultPoint::Pack);
             cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
             col_packs += 1;
             for bi in 0..rows.n_blocks() {
@@ -868,6 +871,9 @@ pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
         let kcc = (k0 + kc).min(plan.k) - k0;
         for j0 in (j3..j3 + n3c).step_by(nc) {
             let ncc = (j0 + nc).min(j3 + n3c) - j0;
+            // chaos hook: a scoped fault schedule may panic here to model
+            // a failure mid-pack (no-op unless test/fault-injection)
+            crate::coordinator::faults::raise_if(crate::coordinator::faults::FaultPoint::Pack);
             cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
             col_packs += 1;
             for bi in b0..b1 {

@@ -1,0 +1,408 @@
+//! Deterministic fault injection for the serving runtime.
+//!
+//! A [`Faults`] handle names a set of **fault points** — places in the
+//! serve path that can be made to misbehave on purpose — and a
+//! deterministic xorshift schedule deciding *which* checks fire. The
+//! chaos suite drives every [`FaultPoint`] through a real [`Service`]
+//! and asserts the containment contract: every submitted job's receiver
+//! resolves (Ok or typed Err), survivors are oracle-correct, and
+//! [`Metrics`] accounts for every job exactly once.
+//!
+//! Design rules:
+//!
+//! * **Deterministic.** Fire decisions come from a seeded xorshift over
+//!   the check stream — never from wall-clock time or OS entropy — so a
+//!   failing chaos run replays exactly.
+//! * **Scoped, not global.** A schedule lives in a [`Faults`] handle
+//!   threaded through [`ServiceConfig`]; concurrent services (and
+//!   concurrent tests) cannot see each other's faults. Deep call sites
+//!   that cannot carry the handle ([`raise_if`] in the executor's pack
+//!   loop) read a thread-local installed by [`with_scope`] for the
+//!   duration of one batch — only the worker thread that installed it is
+//!   affected.
+//! * **Compiled out.** Unless built with `cfg(test)` (unit tests) or
+//!   `--features fault-injection` (the chaos CI job, `--inject-faults`
+//!   in the CLI), [`Faults`] is a fieldless struct and every check is an
+//!   inlined `None`/no-op — release serving pays nothing.
+//!
+//! [`Service`]: super::service::Service
+//! [`ServiceConfig`]: super::service::ServiceConfig
+//! [`Metrics`]: super::metrics::Metrics
+
+use std::fmt;
+
+#[cfg(any(test, feature = "fault-injection"))]
+use std::cell::RefCell;
+#[cfg(any(test, feature = "fault-injection"))]
+use std::sync::{Arc, Mutex};
+
+/// Named places in the serve path where a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// A whole batch execution in the worker (native `run_batch` entry /
+    /// PJRT dispatch). `Panic` unwinds like a kernel bug; `Error` returns
+    /// a typed backend failure. Either way the degradation ladder retries
+    /// the batch's jobs one at a time before erroring them.
+    BatchCompute,
+    /// The per-batch column-band packing inside the executor's
+    /// pre-packed nest — reached through the [`with_scope`] thread-local,
+    /// always manifests as an unwind mid-compute.
+    Pack,
+    /// Plan-time model evaluation. [`Planner::plan_or_fallback`] turns
+    /// it (and any genuine selector panic) into the parameter-free flat
+    /// fallback plan instead of a failed `Service::start`.
+    ///
+    /// [`Planner::plan_or_fallback`]: super::planner::Planner::plan_or_fallback
+    Plan,
+    /// Queue admission: the submit is rejected with an ordinary
+    /// `SubmitError::QueueFull` — a simulated transient overload, which
+    /// is exactly what `submit_with_retry`'s backoff is for.
+    QueueAccept,
+}
+
+impl FaultPoint {
+    /// Every fault point, in a fixed order (chaos sweeps iterate this).
+    pub const ALL: [FaultPoint; 4] = [
+        FaultPoint::BatchCompute,
+        FaultPoint::Pack,
+        FaultPoint::Plan,
+        FaultPoint::QueueAccept,
+    ];
+
+    #[cfg(any(test, feature = "fault-injection"))]
+    fn idx(self) -> usize {
+        match self {
+            FaultPoint::BatchCompute => 0,
+            FaultPoint::Pack => 1,
+            FaultPoint::Plan => 2,
+            FaultPoint::QueueAccept => 3,
+        }
+    }
+}
+
+/// How a fired fault manifests at its call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// A typed error return (backend failure, admission rejection).
+    Error,
+    /// An unwind, as if the code at the fault point had panicked.
+    Panic,
+}
+
+/// A (possibly inert) fault schedule handle. `Clone` shares the
+/// schedule state: the service, its clients, and its worker all advance
+/// one deterministic check stream.
+#[derive(Clone, Default)]
+pub struct Faults {
+    #[cfg(any(test, feature = "fault-injection"))]
+    inner: Option<Arc<Inner>>,
+}
+
+impl Faults {
+    /// An inert handle: no fault ever fires (the production default).
+    pub fn none() -> Faults {
+        Faults::default()
+    }
+}
+
+impl fmt::Debug for Faults {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.active() {
+            f.write_str("Faults(armed)")
+        } else {
+            f.write_str("Faults(none)")
+        }
+    }
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+struct PointCfg {
+    mode: FaultMode,
+    /// Fire when `xorshift % den < num` …
+    num: u64,
+    den: u64,
+    /// … but never more than this many times in total.
+    max_fires: u64,
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+struct Inner {
+    points: [Option<PointCfg>; 4],
+    state: Mutex<State>,
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+struct State {
+    rng: u64,
+    fired: [u64; 4],
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+fn lock_state(m: &Mutex<State>) -> std::sync::MutexGuard<'_, State> {
+    // fault state is monotone counters + an rng word: a poisoned lock
+    // (an injected unwind crossed it) loses nothing
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+impl Faults {
+    /// Start building an armed schedule from a deterministic seed.
+    pub fn seeded(seed: u64) -> FaultsBuilder {
+        FaultsBuilder {
+            seed,
+            points: [None, None, None, None],
+        }
+    }
+
+    /// Should the check at `point` fire, and how? Advances the
+    /// deterministic schedule; inert handles and unarmed points return
+    /// `None` without consuming randomness.
+    pub fn check(&self, point: FaultPoint) -> Option<FaultMode> {
+        let inner = self.inner.as_ref()?;
+        let cfg = inner.points[point.idx()].as_ref()?;
+        let mut st = lock_state(&inner.state);
+        st.rng ^= st.rng << 13;
+        st.rng ^= st.rng >> 7;
+        st.rng ^= st.rng << 17;
+        if st.fired[point.idx()] < cfg.max_fires && st.rng % cfg.den < cfg.num {
+            st.fired[point.idx()] += 1;
+            return Some(cfg.mode);
+        }
+        None
+    }
+
+    /// How many times `point` has fired so far.
+    pub fn fired(&self, point: FaultPoint) -> u64 {
+        self.inner
+            .as_ref()
+            .map(|i| lock_state(&i.state).fired[point.idx()])
+            .unwrap_or(0)
+    }
+
+    /// Whether any fault point is armed.
+    pub fn active(&self) -> bool {
+        self.inner.is_some()
+    }
+}
+
+#[cfg(not(any(test, feature = "fault-injection")))]
+impl Faults {
+    /// Compiled-out check: always `None`, folds away entirely.
+    #[inline(always)]
+    pub fn check(&self, _point: FaultPoint) -> Option<FaultMode> {
+        None
+    }
+
+    /// Compiled-out counter: nothing ever fires.
+    #[inline(always)]
+    pub fn fired(&self, _point: FaultPoint) -> u64 {
+        0
+    }
+
+    /// Compiled-out: never armed.
+    #[inline(always)]
+    pub fn active(&self) -> bool {
+        false
+    }
+}
+
+/// Builder for an armed [`Faults`] schedule (fault-injection builds
+/// only).
+#[cfg(any(test, feature = "fault-injection"))]
+pub struct FaultsBuilder {
+    seed: u64,
+    points: [Option<PointCfg>; 4],
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+impl FaultsBuilder {
+    /// Arm `point` to fire with probability `num/den` per check,
+    /// indefinitely.
+    pub fn fail(mut self, point: FaultPoint, mode: FaultMode, num: u64, den: u64) -> FaultsBuilder {
+        self.points[point.idx()] = Some(PointCfg {
+            mode,
+            num: num.max(1),
+            den: den.max(1),
+            max_fires: u64::MAX,
+        });
+        self
+    }
+
+    /// Arm `point` to fire on every check until it has fired exactly
+    /// `fires` times, then go quiet — the shape for "fail once, then
+    /// heal" scenarios.
+    pub fn fail_n(mut self, point: FaultPoint, mode: FaultMode, fires: u64) -> FaultsBuilder {
+        self.points[point.idx()] = Some(PointCfg {
+            mode,
+            num: 1,
+            den: 1,
+            max_fires: fires,
+        });
+        self
+    }
+
+    pub fn build(self) -> Faults {
+        Faults {
+            inner: Some(Arc::new(Inner {
+                points: self.points,
+                state: Mutex::new(State {
+                    rng: self.seed | 1,
+                    fired: [0; 4],
+                }),
+            })),
+        }
+    }
+}
+
+/// Unwind as an injected fault at `point`. Uses `resume_unwind`, which
+/// skips the global panic hook — injected chaos does not spam test
+/// output with backtraces; the supervisor still catches it like any
+/// panic.
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn inject_panic(point: FaultPoint) -> ! {
+    std::panic::resume_unwind(Box::new(format!("injected fault at {point:?}")))
+}
+
+/// Compiled-out variant: nothing can fire, so this is unreachable by
+/// construction (callers only reach it behind a `Some` from `check`).
+#[cfg(not(any(test, feature = "fault-injection")))]
+pub fn inject_panic(point: FaultPoint) -> ! {
+    unreachable!("fault injection compiled out ({point:?})")
+}
+
+#[cfg(any(test, feature = "fault-injection"))]
+thread_local! {
+    static CURRENT: RefCell<Option<Faults>> = const { RefCell::new(None) };
+}
+
+/// Install `faults` as this thread's scoped schedule for the duration of
+/// `body` — deep call sites that cannot carry a handle ([`raise_if`])
+/// read it. Restores the previous scope on exit, including by unwind.
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn with_scope<R>(faults: &Faults, body: impl FnOnce() -> R) -> R {
+    struct Restore(Option<Faults>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| *c.borrow_mut() = self.0.take());
+        }
+    }
+    let prev = CURRENT.with(|c| c.borrow_mut().replace(faults.clone()));
+    let _restore = Restore(prev);
+    body()
+}
+
+/// Compiled-out scope: just runs `body`.
+#[cfg(not(any(test, feature = "fault-injection")))]
+#[inline(always)]
+pub fn with_scope<R>(_faults: &Faults, body: impl FnOnce() -> R) -> R {
+    body()
+}
+
+/// Check the thread-local scoped schedule at `point` and unwind if it
+/// fires (both [`FaultMode`]s manifest as an unwind here — a deep call
+/// site has no typed error channel). No-op outside a [`with_scope`].
+#[cfg(any(test, feature = "fault-injection"))]
+#[inline]
+pub fn raise_if(point: FaultPoint) {
+    let fire = CURRENT.with(|c| c.borrow().as_ref().and_then(|f| f.check(point)));
+    if fire.is_some() {
+        inject_panic(point);
+    }
+}
+
+/// Compiled-out check: nothing to do.
+#[cfg(not(any(test, feature = "fault-injection")))]
+#[inline(always)]
+pub fn raise_if(_point: FaultPoint) {}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    fn pattern(f: &Faults, point: FaultPoint, checks: usize) -> Vec<bool> {
+        (0..checks).map(|_| f.check(point).is_some()).collect()
+    }
+
+    #[test]
+    fn inert_handle_never_fires() {
+        let f = Faults::none();
+        assert!(!f.active());
+        for p in FaultPoint::ALL {
+            assert_eq!(f.check(p), None);
+            assert_eq!(f.fired(p), 0);
+        }
+    }
+
+    #[test]
+    fn unarmed_points_never_fire() {
+        let f = Faults::seeded(7)
+            .fail(FaultPoint::Pack, FaultMode::Panic, 1, 1)
+            .build();
+        assert!(f.active());
+        assert_eq!(f.check(FaultPoint::Plan), None);
+        assert_eq!(f.check(FaultPoint::Pack), Some(FaultMode::Panic));
+    }
+
+    #[test]
+    fn schedule_is_deterministic_across_instances() {
+        let mk = || {
+            Faults::seeded(0xDE7E12)
+                .fail(FaultPoint::BatchCompute, FaultMode::Error, 1, 3)
+                .build()
+        };
+        let (a, b) = (mk(), mk());
+        let pa = pattern(&a, FaultPoint::BatchCompute, 200);
+        let pb = pattern(&b, FaultPoint::BatchCompute, 200);
+        assert_eq!(pa, pb);
+        let fires = pa.iter().filter(|&&x| x).count();
+        assert!(fires > 0 && fires < 200, "1/3 ratio fired {fires}/200");
+        assert_eq!(a.fired(FaultPoint::BatchCompute), fires as u64);
+    }
+
+    #[test]
+    fn budget_caps_total_fires() {
+        let f = Faults::seeded(3)
+            .fail_n(FaultPoint::QueueAccept, FaultMode::Error, 2)
+            .build();
+        let fired = pattern(&f, FaultPoint::QueueAccept, 50)
+            .iter()
+            .filter(|&&x| x)
+            .count();
+        assert_eq!(fired, 2, "budget of 2 must fire exactly twice");
+        // and the first two checks fire back to back (num == den)
+        let g = Faults::seeded(3)
+            .fail_n(FaultPoint::QueueAccept, FaultMode::Error, 2)
+            .build();
+        assert!(g.check(FaultPoint::QueueAccept).is_some());
+        assert!(g.check(FaultPoint::QueueAccept).is_some());
+        assert!(g.check(FaultPoint::QueueAccept).is_none());
+    }
+
+    #[test]
+    fn clones_share_one_schedule() {
+        let f = Faults::seeded(9)
+            .fail_n(FaultPoint::Plan, FaultMode::Error, 1)
+            .build();
+        let g = f.clone();
+        assert_eq!(g.check(FaultPoint::Plan), Some(FaultMode::Error));
+        // the clone's fire consumed the shared budget
+        assert_eq!(f.check(FaultPoint::Plan), None);
+        assert_eq!(f.fired(FaultPoint::Plan), 1);
+    }
+
+    #[test]
+    fn scoped_raise_unwinds_and_restores() {
+        let f = Faults::seeded(11)
+            .fail_n(FaultPoint::Pack, FaultMode::Panic, 1)
+            .build();
+        let r = std::panic::catch_unwind(|| {
+            with_scope(&f, || raise_if(FaultPoint::Pack));
+        });
+        assert!(r.is_err(), "scoped Pack fault must unwind");
+        assert_eq!(f.fired(FaultPoint::Pack), 1);
+        // outside any scope the same call is a no-op even while armed
+        raise_if(FaultPoint::Pack);
+    }
+}

@@ -44,6 +44,29 @@ pub struct Metrics {
     /// Total worker time spent executing batches.
     pub compute: Duration,
     pub flops: u64,
+    /// Jobs shed before compute because their queue wait exceeded the
+    /// configured deadline. Shed jobs count in `jobs` (they consumed
+    /// queue capacity and a client waited on them) but **not** in
+    /// `errors` — the shed-vs-served split is `served()` vs `timeouts`.
+    pub timeouts: u64,
+    /// Plans served by the parameter-free flat fallback because the
+    /// model-driven planner failed (`Planner::plan_or_fallback`).
+    pub fallback_plans: u64,
+    /// Times the supervisor caught a worker-loop panic and respawned the
+    /// worker over the same resident backend state.
+    pub worker_restarts: u64,
+    /// Retry attempts across the degradation ladder: failed-batch jobs
+    /// re-run one at a time, plus client-side `submit_with_retry`
+    /// re-admissions after `QueueFull`.
+    pub retries: u64,
+    /// Resident prepacked weight row-panel count on the native backend —
+    /// recorded at worker start and after every successful batch, so the
+    /// chaos suite can pin pack discipline across worker respawns.
+    pub resident_packs: u64,
+    /// Set by `Service::stop` when the supervisor thread itself died
+    /// (a panic escaped containment). Stop still returns this snapshot —
+    /// the typed replacement for the old double-panic on join.
+    pub worker_poisoned: bool,
 }
 
 impl Default for Metrics {
@@ -67,6 +90,12 @@ impl Metrics {
             queue_wait: Duration::ZERO,
             compute: Duration::ZERO,
             flops: 0,
+            timeouts: 0,
+            fallback_plans: 0,
+            worker_restarts: 0,
+            retries: 0,
+            resident_packs: 0,
+            worker_poisoned: false,
         }
     }
 
@@ -110,6 +139,22 @@ impl Metrics {
     pub fn record_error(&mut self, latency: Duration, queue_wait: Duration) {
         self.record_job(latency, queue_wait, 0);
         self.errors += 1;
+    }
+
+    /// A job shed before compute because its queue wait blew through the
+    /// deadline. It occupied the queue like any job (so it counts in
+    /// `jobs`, latency, and queue wait) but did no work and is not an
+    /// execution error — it lands in `timeouts`, the shed side of the
+    /// shed-vs-served split.
+    pub fn record_shed(&mut self, latency: Duration, queue_wait: Duration) {
+        self.record_job(latency, queue_wait, 0);
+        self.timeouts += 1;
+    }
+
+    /// The served side of the shed-vs-served split: jobs that completed
+    /// successfully (neither errored nor shed on deadline).
+    pub fn served(&self) -> u64 {
+        self.jobs.saturating_sub(self.errors).saturating_sub(self.timeouts)
     }
 
     /// A dispatched batch of `size` coalesced jobs that took `compute`
@@ -171,7 +216,8 @@ impl Metrics {
         format!(
             "jobs={} batches={} errors={} throughput={:.1} jobs/s {:.2} GFLOP/s \
              mean={:?} p50={}µs p99={}µs max={:?} \
-             queue-wait={:?} compute={:?} mean-batch={:.2}",
+             queue-wait={:?} compute={:?} mean-batch={:.2} \
+             served={} shed={} timeouts={} retries={} restarts={} fallback-plans={}{}",
             self.jobs,
             self.batches,
             self.errors,
@@ -183,7 +229,18 @@ impl Metrics {
             self.max_latency,
             self.queue_wait,
             self.compute,
-            self.mean_batch_size()
+            self.mean_batch_size(),
+            self.served(),
+            self.timeouts,
+            self.timeouts,
+            self.retries,
+            self.worker_restarts,
+            self.fallback_plans,
+            if self.worker_poisoned {
+                " WORKER-POISONED"
+            } else {
+                ""
+            }
         )
     }
 }
@@ -248,6 +305,37 @@ mod tests {
         assert_eq!(m.errors, 1);
         assert_eq!(m.flops, 100);
         assert_eq!(m.percentile_us(1.0), 20);
+    }
+
+    #[test]
+    fn shed_vs_served_split_and_extended_report() {
+        let mut m = Metrics::new();
+        for _ in 0..3 {
+            m.record_job(Duration::from_micros(40), Duration::from_micros(10), 100);
+        }
+        m.record_error(Duration::from_micros(50), Duration::from_micros(20));
+        m.record_shed(Duration::from_micros(90), Duration::from_micros(90));
+        m.retries = 2;
+        m.worker_restarts = 1;
+        m.fallback_plans = 1;
+        assert_eq!(m.jobs, 5);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.timeouts, 1);
+        assert_eq!(m.served(), 3);
+        let r = m.report(Duration::from_secs(1));
+        for needle in [
+            "served=3",
+            "shed=1",
+            "timeouts=1",
+            "retries=2",
+            "restarts=1",
+            "fallback-plans=1",
+        ] {
+            assert!(r.contains(needle), "missing {needle} in {r}");
+        }
+        assert!(!r.contains("WORKER-POISONED"), "{r}");
+        m.worker_poisoned = true;
+        assert!(m.report(Duration::from_secs(1)).contains("WORKER-POISONED"));
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The L3 coordinator (DESIGN.md S12): planner, coalescing job service,
-//! metrics.
+//! metrics, and deterministic fault injection.
 //!
 //! This is the request path of the system: clients submit matmul jobs
 //! through a **bounded queue** — at most [`ServiceConfig::queue_cap`]
@@ -22,16 +22,90 @@
 //! into queue wait vs compute and reports exact reservoir p50/p99 plus a
 //! batch-size histogram. Python never runs here.
 //!
+//! # Failure model
+//!
+//! The serving runtime is built so that **no submitted job's receiver
+//! ever hangs**: every accepted job resolves with `Ok(output)` or a
+//! typed [`JobError`], under any contained failure.
+//!
+//! * **Contained panics.** Each worker-loop iteration runs under
+//!   `catch_unwind`; batch execution is additionally caught per dispatch.
+//!   When a panic escapes a batch, every in-flight job receives
+//!   [`JobError::WorkerPanicked`], `Metrics::worker_restarts` is bumped,
+//!   and the supervisor re-enters the worker loop over the same backend —
+//!   the resident prepacked weight panels are immutable after startup and
+//!   survive the respawn; only the per-batch column pack is rebuilt.
+//!   [`Service::stop`] never re-panics: metrics live behind a shared
+//!   `Arc<Mutex<_>>`, so even a poisoned worker yields a final snapshot
+//!   (flagged `Metrics::worker_poisoned`).
+//! * **Degradation ladder.** A failed multi-job batch is retried one job
+//!   at a time (one poisoned job cannot take down its batchmates); a lone
+//!   job failing twice in a row escalates to a worker respawn. Planner
+//!   failures degrade to a parameter-free flat plan
+//!   ([`Planner::plan_or_fallback`], counted in
+//!   `Metrics::fallback_plans`) instead of failing `Service::start`, and
+//!   [`ServiceClient::submit_with_retry`] heals transient
+//!   [`SubmitError::QueueFull`] rejections with bounded, deterministic,
+//!   jittered backoff.
+//! * **Deadlines and drain.** With [`ServiceConfig::deadline`] set, jobs
+//!   whose queue wait exceeds it are shed before compute with
+//!   [`JobError::DeadlineExceeded`] (the shed side of the metrics
+//!   shed-vs-served split). [`Service::stop`] drains gracefully: new
+//!   submissions are rejected with [`SubmitError::Stopped`], queued work
+//!   is finished, and a hard [`ServiceConfig::drain_timeout`] bounds the
+//!   wait — jobs still queued at the bound resolve with
+//!   [`JobError::Stopped`].
+//! * **Deterministic chaos.** [`faults`] injects failures at named
+//!   points (`FaultPoint::{BatchCompute, Pack, Plan, QueueAccept}`) on a
+//!   seeded xorshift schedule with no wall-clock dependence; the hooks
+//!   compile to no-ops unless `cfg(test)` or `--features
+//!   fault-injection`. Run the chaos suite with
+//!   `cargo test --features fault-injection` (CI runs it in debug and
+//!   release), or demo it end to end with
+//!   `cargo run --features fault-injection -- serve --backend native
+//!   --inject-faults`.
+//!
 //! [`ServiceConfig::queue_cap`]: service::ServiceConfig::queue_cap
+//! [`ServiceConfig::deadline`]: service::ServiceConfig::deadline
+//! [`ServiceConfig::drain_timeout`]: service::ServiceConfig::drain_timeout
 //! [`SubmitError::QueueFull`]: service::SubmitError::QueueFull
+//! [`SubmitError::Stopped`]: service::SubmitError::Stopped
 //! [`Service::submit`]: service::Service::submit
+//! [`Service::stop`]: service::Service::stop
 //! [`ServiceClient`]: service::ServiceClient
+//! [`ServiceClient::submit_with_retry`]: service::ServiceClient::submit_with_retry
+//! [`JobError`]: service::JobError
+//! [`JobError::WorkerPanicked`]: service::JobError::WorkerPanicked
+//! [`JobError::DeadlineExceeded`]: service::JobError::DeadlineExceeded
+//! [`JobError::Stopped`]: service::JobError::Stopped
+//! [`Planner::plan_or_fallback`]: planner::Planner::plan_or_fallback
 //! [`Metrics`]: metrics::Metrics
 
+// The coordinator is the fault-containment boundary: unwraps/expects are
+// exactly the panic sites the supervisor exists to not need. Tests opt
+// back in locally.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+pub mod faults;
 pub mod metrics;
 pub mod planner;
 pub mod service;
 
+pub use faults::{FaultMode, FaultPoint, Faults};
 pub use metrics::Metrics;
 pub use planner::{Plan, Planner};
-pub use service::{Backend, Service, ServiceClient, ServiceConfig, SubmitError};
+pub use service::{
+    Backend, JobError, ResultReceiver, Service, ServiceClient, ServiceConfig, SubmitError,
+};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+/// Coordinator state behind mutexes (metrics counters, plan caches,
+/// fault schedules) stays internally consistent across an unwind — each
+/// holder's critical sections are short and idempotent — so poisoning is
+/// noise here, and propagating it would turn one contained worker panic
+/// into a crash at every later lock site.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

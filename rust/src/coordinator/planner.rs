@@ -25,8 +25,11 @@
 use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 
+use super::faults::{self, FaultMode, FaultPoint, Faults};
+use super::lock_unpoisoned;
 use crate::cache::CacheSpec;
 use crate::codegen::{DType, GemmForm, MicroShape};
 use crate::domain::{ops, Kernel};
@@ -148,11 +151,11 @@ impl Planner {
         compute: impl FnOnce(&Planner) -> Plan,
     ) -> Plan {
         let shard = self.shard(&key);
-        if let Some(p) = shard.lock().unwrap().get(&key) {
+        if let Some(p) = lock_unpoisoned(shard).get(&key) {
             return p.clone();
         }
         let plan = compute(self);
-        shard.lock().unwrap().entry(key).or_insert(plan).clone()
+        lock_unpoisoned(shard).entry(key).or_insert(plan).clone()
     }
 
     /// Plan for an `m×k×n` matmul at `dtype`, resolving against
@@ -289,7 +292,61 @@ impl Planner {
     }
 
     pub fn cached_plans(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| lock_unpoisoned(s).len()).sum()
+    }
+
+    /// [`plan_kernel`](Planner::plan_kernel) with the model-driven path
+    /// contained: a selector panic (or an injected [`FaultPoint::Plan`])
+    /// degrades to the parameter-free flat fallback plan instead of
+    /// taking down `Service::start`. Returns the plan and whether the
+    /// fallback was used (callers count it into
+    /// `Metrics::fallback_plans`). Fallback plans are **not** cached —
+    /// a transient planner failure must not pin a degraded plan for the
+    /// shape's lifetime.
+    pub fn plan_or_fallback(
+        &self,
+        registry: &Registry,
+        kernel: &Kernel,
+        faults: &Faults,
+    ) -> (Plan, bool) {
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            match faults.check(FaultPoint::Plan) {
+                Some(FaultMode::Error) => return None,
+                Some(FaultMode::Panic) => faults::inject_panic(FaultPoint::Plan),
+                None => {}
+            }
+            Some(self.plan_kernel(registry, kernel))
+        }));
+        match attempt {
+            Ok(Some(plan)) => (plan, false),
+            Ok(None) | Err(_) => (self.fallback_plan(registry, kernel), true),
+        }
+    }
+
+    /// Parameter-free degraded plan in the spirit of cache-oblivious
+    /// tiling: fixed 8³ L1 tiles inside fixed 64×64×48 macro blocks and
+    /// no L3 super-band partitioning ([`tiling::LevelPlan::flat`]),
+    /// chosen without consulting the cache model at all. mc=64 is an MR
+    /// multiple and nc=48 divides by every register-tile width
+    /// (4/6/8/12), so the shape is executable at any dtype.
+    fn fallback_plan(&self, registry: &Registry, kernel: &Kernel) -> Plan {
+        let dtype = DType::from_elem(kernel.operand(0).table.elem()).unwrap_or(DType::F64);
+        let (m, n, k) = GemmForm::of(kernel)
+            .map(|gf| (gf.m, gf.n, gf.k))
+            .unwrap_or((kernel.domain_size().max(1) as usize, 1, 1));
+        Plan {
+            kernel: kernel.name().to_string(),
+            dtype,
+            m,
+            k,
+            n,
+            model_tile: (8, 8, 8),
+            level: tiling::LevelPlan::flat((8, 8, 8), 64, 64, 48),
+            micro: registry.micro_shape_for(dtype).unwrap_or(MicroShape::Mr8Nr4),
+            artifact: format!("<packed-engine {} fallback>", kernel.name()),
+            predicted_misses: 0,
+            plan_name: "parameter-free flat fallback".to_string(),
+        }
     }
 }
 
@@ -341,6 +398,8 @@ fn shrink_kernel(kernel: &Kernel) -> Option<Kernel> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::path::PathBuf;
 
@@ -530,6 +589,33 @@ mod tests {
         // a fresh lookup returns the cached plan without re-modelling
         let again = planner.plan(&reg, 32, 24, 40, DType::F32);
         assert_eq!(again.plan_name, planner.plan(&reg, 32, 24, 40, DType::F32).plan_name);
+    }
+
+    #[test]
+    fn plan_or_fallback_degrades_and_does_not_cache() {
+        let reg = Registry::default();
+        let planner = Planner::new(CacheSpec::HASWELL_L1D).with_sample_classes(4);
+        let kern = ops::matmul(48, 32, 40, 4, 0);
+        // both fault modes degrade to the flat plan
+        for mode in [FaultMode::Error, FaultMode::Panic] {
+            let f = Faults::seeded(5).fail_n(FaultPoint::Plan, mode, 1).build();
+            let (p, fell_back) = planner.plan_or_fallback(&reg, &kern, &f);
+            assert!(fell_back, "{mode:?} must trigger the fallback");
+            assert_eq!(p.plan_name, "parameter-free flat fallback");
+            assert_eq!((p.m, p.k, p.n), (48, 32, 40));
+            assert_eq!((p.level.mc, p.level.kc, p.level.nc), (64, 64, 48));
+            assert_eq!((p.level.m3, p.level.n3), (usize::MAX, usize::MAX));
+            assert_eq!(p.dtype, DType::F32);
+            assert_eq!(planner.cached_plans(), 0, "fallbacks must not be cached");
+        }
+        // with the budget spent, the same call heals to a modelled plan
+        let f = Faults::seeded(5)
+            .fail_n(FaultPoint::Plan, FaultMode::Error, 0)
+            .build();
+        let (p, fell_back) = planner.plan_or_fallback(&reg, &kern, &f);
+        assert!(!fell_back);
+        assert_ne!(p.plan_name, "parameter-free flat fallback");
+        assert_eq!(planner.cached_plans(), 1);
     }
 
     #[test]

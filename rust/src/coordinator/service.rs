@@ -1,5 +1,5 @@
 //! The serving coordinator: bounded job queue → coalescing batcher →
-//! backend dispatch.
+//! supervised backend dispatch.
 //!
 //! One [`Service`] hosts one weight matrix `y` (k×n) and serves matmul
 //! jobs `x·y` for m×k left operands, the way an inference router serves
@@ -8,7 +8,9 @@
 //! not yet answered), and an over-capacity [`submit`] is rejected
 //! immediately with [`SubmitError::QueueFull`] instead of buffering
 //! without limit — under overload the caller finds out at the door, not
-//! by timeout. Clone [`Service::client`] handles into as many threads as
+//! by timeout ([`ServiceClient::submit_with_retry`] turns that rejection
+//! into bounded, deterministic, jittered backoff for callers that prefer
+//! to wait). Clone [`Service::client`] handles into as many threads as
 //! you like; they share the same queue and the same capacity.
 //!
 //! Accepted jobs coalesce into batches. The **batch window starts when
@@ -16,7 +18,10 @@
 //! a batch closes at `max_batch` jobs or when the window elapses,
 //! whichever is first. Only shape-compatible jobs coalesce — one service
 //! serves one (m, k, n), and [`submit`] rejects any other `x` length
-//! with [`SubmitError::ShapeMismatch`] before it can reach a batch.
+//! with [`SubmitError::ShapeMismatch`] before it can reach a batch. With
+//! [`ServiceConfig::deadline`] set, jobs whose queue wait exceeds it are
+//! shed at dispatch with [`JobError::DeadlineExceeded`] instead of
+//! burning compute on an answer the caller has given up on.
 //!
 //! Batches dispatch through one of two backends:
 //!
@@ -38,6 +43,16 @@
 //!   scheduler ([`run_parallel_macro_prepacked`]) with the resident row
 //!   panels shared read-only across workers.
 //!
+//! The worker thread runs under a **supervisor** ([`supervise`]): each
+//! loop iteration and each batch execution is wrapped in `catch_unwind`,
+//! so a panic anywhere in the dispatch path resolves every in-flight
+//! receiver with a typed [`JobError::WorkerPanicked`] and respawns the
+//! loop over the same resident backend state — no client ever blocks
+//! forever, and [`Service::stop`] returns a metrics snapshot even when
+//! the worker died (see the failure model in [`crate::coordinator`]).
+//! A failed multi-job batch degrades to one-at-a-time retries before any
+//! job is errored, so one poisoned job cannot take down its batchmates.
+//!
 //! Either way the worker thread runs a one-shot startup autotune per
 //! dtype and records the winners in the registry, so plans report the
 //! register-tile shape the engine actually dispatches. [`Metrics`]
@@ -49,10 +64,11 @@
 //! [`run_macro_prepacked_cols`]: crate::codegen::run_macro_prepacked_cols
 //! [`run_parallel_macro_prepacked`]: crate::codegen::run_parallel_macro_prepacked
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -68,6 +84,8 @@ use crate::domain::{ops, Kernel};
 use crate::runtime::{ArtifactKind, Engine, Registry};
 use crate::tiling::LevelPlan;
 
+use super::faults::{self, FaultMode, FaultPoint, Faults};
+use super::lock_unpoisoned;
 use super::metrics::Metrics;
 use super::planner::{Plan, Planner};
 
@@ -91,7 +109,7 @@ pub enum SubmitError {
     /// `x` does not match the served m×k shape — it could never coalesce
     /// with this service's batches.
     ShapeMismatch { got: usize, want: usize },
-    /// The worker is gone (the service was stopped).
+    /// The service is stopping or stopped; no new work is accepted.
     Stopped,
 }
 
@@ -111,9 +129,47 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Typed per-job failure delivered through a [`ResultReceiver`]. Every
+/// accepted job resolves with `Ok(output)` or exactly one of these —
+/// the containment contract is that no receiver ever hangs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The worker panicked while this job was in flight. The supervisor
+    /// delivered this error, bumped `Metrics::worker_restarts`, and
+    /// respawned the worker over the same resident backend state.
+    WorkerPanicked { detail: String },
+    /// The job's queue wait exceeded [`ServiceConfig::deadline`]; it was
+    /// shed before compute (counted in `Metrics::timeouts`, not
+    /// `errors`).
+    DeadlineExceeded { waited: Duration, deadline: Duration },
+    /// The backend returned an execution error (after the degradation
+    /// ladder's one-at-a-time retry also failed).
+    Backend { detail: String },
+    /// The service stopped before the job completed (drain-timeout
+    /// stragglers, or the worker vanished).
+    Stopped,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JobError::WorkerPanicked { detail } => {
+                write!(f, "worker panicked while serving this job: {detail}")
+            }
+            JobError::DeadlineExceeded { waited, deadline } => {
+                write!(f, "job shed after waiting {waited:?} (deadline {deadline:?})")
+            }
+            JobError::Backend { detail } => write!(f, "backend execution failed: {detail}"),
+            JobError::Stopped => write!(f, "service stopped before the job completed"),
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
 struct Job {
     x: Vec<f32>,
-    resp: Sender<Result<Vec<f32>>>,
+    resp: Sender<Result<Vec<f32>, JobError>>,
     submitted: Instant,
 }
 
@@ -122,15 +178,45 @@ enum Msg {
     Stop,
 }
 
-/// Receiver for one submitted job's m×n row-major result.
-pub type ResultReceiver = Receiver<Result<Vec<f32>>>;
+/// Receiver for one submitted job's m×n row-major result. Resolution is
+/// guaranteed: if the worker vanishes without answering (its sender
+/// dropped), `recv` reports [`JobError::Stopped`] instead of an opaque
+/// channel error — a receiver never observes a hang as its steady state.
+pub struct ResultReceiver {
+    rx: Receiver<Result<Vec<f32>, JobError>>,
+}
+
+impl ResultReceiver {
+    /// Block until the job resolves.
+    pub fn recv(&self) -> Result<Vec<f32>, JobError> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(JobError::Stopped),
+        }
+    }
+
+    /// Block up to `timeout`; `None` means the job has not resolved yet
+    /// (a disconnected worker resolves as [`JobError::Stopped`], not
+    /// `None`).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Result<Vec<f32>, JobError>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => Some(Err(JobError::Stopped)),
+        }
+    }
+}
 
 /// Handle to a running coordinator thread.
 pub struct Service {
     tx: Sender<Msg>,
     depth: Arc<AtomicUsize>,
+    stopped: Arc<AtomicBool>,
     queue_cap: usize,
-    handle: std::thread::JoinHandle<(Metrics, Duration)>,
+    metrics: Arc<Mutex<Metrics>>,
+    handle: std::thread::JoinHandle<Duration>,
+    faults: Faults,
+    retry_seq: Arc<AtomicU64>,
     m: usize,
     k: usize,
     n: usize,
@@ -138,33 +224,51 @@ pub struct Service {
 }
 
 /// A cloneable submission handle onto a running [`Service`] — hand one
-/// to each client thread. Clones share the service's queue and its
-/// admission capacity.
+/// to each client thread. Clones share the service's queue, its
+/// admission capacity, and its metrics.
 #[derive(Clone)]
 pub struct ServiceClient {
     tx: Sender<Msg>,
     depth: Arc<AtomicUsize>,
+    stopped: Arc<AtomicBool>,
+    faults: Faults,
+    metrics: Arc<Mutex<Metrics>>,
+    retry_seq: Arc<AtomicU64>,
     queue_cap: usize,
     m: usize,
     k: usize,
 }
 
+/// Admission control shared by [`Service::submit`] and the client
+/// handles. On rejection the job's `x` buffer is handed back so retry
+/// loops can resubmit without a copy.
 fn admit_and_send(
     tx: &Sender<Msg>,
     depth: &AtomicUsize,
+    stopped: &AtomicBool,
+    faults: &Faults,
     cap: usize,
     want: usize,
     x: Vec<f32>,
-) -> Result<ResultReceiver, SubmitError> {
+) -> Result<ResultReceiver, (SubmitError, Vec<f32>)> {
+    if stopped.load(Ordering::SeqCst) {
+        return Err((SubmitError::Stopped, x));
+    }
     if x.len() != want {
-        return Err(SubmitError::ShapeMismatch { got: x.len(), want });
+        let got = x.len();
+        return Err((SubmitError::ShapeMismatch { got, want }, x));
+    }
+    // injected transient overload: manifests as an ordinary QueueFull —
+    // exactly the rejection submit_with_retry's backoff is for
+    if faults.check(FaultPoint::QueueAccept).is_some() {
+        return Err((SubmitError::QueueFull { cap }, x));
     }
     // in-flight accounting: a slot is held from here until the worker
     // has *answered* the job, so capacity bounds queued and executing
     // work together
     if depth.fetch_add(1, Ordering::SeqCst) >= cap {
         depth.fetch_sub(1, Ordering::SeqCst);
-        return Err(SubmitError::QueueFull { cap });
+        return Err((SubmitError::QueueFull { cap }, x));
     }
     let (rtx, rrx) = channel();
     let job = Job {
@@ -172,18 +276,85 @@ fn admit_and_send(
         resp: rtx,
         submitted: Instant::now(),
     };
-    if tx.send(Msg::Job(job)).is_err() {
+    if let Err(send_err) = tx.send(Msg::Job(job)) {
         depth.fetch_sub(1, Ordering::SeqCst);
-        return Err(SubmitError::Stopped);
+        let x = match send_err.0 {
+            Msg::Job(j) => j.x,
+            Msg::Stop => Vec::new(),
+        };
+        return Err((SubmitError::Stopped, x));
     }
-    Ok(rrx)
+    Ok(ResultReceiver { rx: rrx })
 }
 
 impl ServiceClient {
     /// Submit a job; returns the receiver for the m×n row-major result,
-    /// or a typed rejection if the queue is full / the shape is wrong.
+    /// or a typed rejection if the queue is full / the shape is wrong /
+    /// the service is stopping.
     pub fn submit(&self, x: Vec<f32>) -> Result<ResultReceiver, SubmitError> {
-        admit_and_send(&self.tx, &self.depth, self.queue_cap, self.m * self.k, x)
+        admit_and_send(
+            &self.tx,
+            &self.depth,
+            &self.stopped,
+            &self.faults,
+            self.queue_cap,
+            self.m * self.k,
+            x,
+        )
+        .map_err(|(e, _)| e)
+    }
+
+    /// [`submit`](ServiceClient::submit) with bounded, deterministic,
+    /// jittered exponential backoff on [`SubmitError::QueueFull`]: up to
+    /// `max_attempts` admissions, sleeping `base_backoff` (doubling each
+    /// retry, capped at 100ms) plus an xorshift jitter between them.
+    /// Only transient overload is retried — `ShapeMismatch` and
+    /// `Stopped` return immediately. Each re-admission counts in
+    /// `Metrics::retries`.
+    pub fn submit_with_retry(
+        &self,
+        x: Vec<f32>,
+        max_attempts: usize,
+        base_backoff: Duration,
+    ) -> Result<ResultReceiver, SubmitError> {
+        let max_attempts = max_attempts.max(1);
+        let mut backoff = base_backoff;
+        // per-call deterministic jitter stream: seeded from a process-wide
+        // call counter, never wall-clock — concurrent retriers decorrelate
+        // without losing replayability
+        let mut s = 0x9E37_79B9_7F4A_7C15u64
+            ^ (((self.retry_seq.fetch_add(1, Ordering::Relaxed) + 1) << 1) | 1);
+        let mut x = x;
+        for attempt in 1..=max_attempts {
+            match admit_and_send(
+                &self.tx,
+                &self.depth,
+                &self.stopped,
+                &self.faults,
+                self.queue_cap,
+                self.m * self.k,
+                x,
+            ) {
+                Ok(rx) => return Ok(rx),
+                Err((SubmitError::QueueFull { cap }, recovered)) => {
+                    if attempt == max_attempts {
+                        return Err(SubmitError::QueueFull { cap });
+                    }
+                    x = recovered;
+                    lock_unpoisoned(&self.metrics).retries += 1;
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    let span_us = backoff.as_micros() as u64;
+                    let jitter = if span_us == 0 { 0 } else { s % span_us };
+                    std::thread::sleep(backoff + Duration::from_micros(jitter));
+                    backoff = (backoff * 2).min(Duration::from_millis(100));
+                }
+                Err((e, _)) => return Err(e),
+            }
+        }
+        // the loop always returns on its last attempt
+        Err(SubmitError::QueueFull { cap: self.queue_cap })
     }
 }
 
@@ -206,6 +377,10 @@ impl Service {
         ServiceClient {
             tx: self.tx.clone(),
             depth: self.depth.clone(),
+            stopped: self.stopped.clone(),
+            faults: self.faults.clone(),
+            metrics: self.metrics.clone(),
+            retry_seq: self.retry_seq.clone(),
             queue_cap: self.queue_cap,
             m: self.m,
             k: self.k,
@@ -237,6 +412,17 @@ pub struct ServiceConfig {
     pub spec: CacheSpec,
     /// Execution engine: PJRT artifacts or the native packed kernel.
     pub backend: Backend,
+    /// Per-request queue-wait deadline: jobs still queued past it are
+    /// shed at dispatch with [`JobError::DeadlineExceeded`] instead of
+    /// computed. `None` (the default) never sheds.
+    pub deadline: Option<Duration>,
+    /// Hard bound on [`Service::stop`]'s graceful drain: queued jobs
+    /// still unanswered at the bound resolve with [`JobError::Stopped`].
+    pub drain_timeout: Duration,
+    /// Fault-injection schedule ([`Faults::none`] in production; armed
+    /// handles exist only under `cfg(test)` / `--features
+    /// fault-injection`).
+    pub faults: Faults,
 }
 
 impl Default for ServiceConfig {
@@ -251,6 +437,9 @@ impl Default for ServiceConfig {
             threads: 1,
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
+            deadline: None,
+            drain_timeout: Duration::from_secs(5),
+            faults: Faults::none(),
         }
     }
 }
@@ -281,8 +470,10 @@ fn serving_level(job: &LevelPlan, wide: &LevelPlan) -> LevelPlan {
 impl Service {
     /// Start the coordinator: loads the registry (optional for the
     /// native backend), plans the shape at the serving dtype (f32), warms
-    /// the chosen executables, spawns the worker thread that owns the
-    /// engine.
+    /// the chosen executables **before spawning** (a missing PJRT runtime
+    /// or artifact fails `start()` with a diagnosable error instead of
+    /// aborting the worker thread), then spawns the supervised worker
+    /// that owns the engine.
     pub fn start(artifact_dir: &Path, y: Vec<f32>, cfg: ServiceConfig) -> Result<Service> {
         let mut registry = match cfg.backend {
             Backend::Pjrt => Registry::load(artifact_dir)?,
@@ -303,13 +494,26 @@ impl Service {
         let planner = Planner::new(cfg.spec);
         let (tx, rx) = channel::<Msg>();
         let depth = Arc::new(AtomicUsize::new(0));
+        let stopped = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let faults = cfg.faults.clone();
         let m = cfg.m;
         let k = cfg.k;
         let n = cfg.n;
-        let window = cfg.batch_window;
         let queue_cap = cfg.queue_cap.max(1);
-        let worker_depth = depth.clone();
-        let (plan, handle) = match cfg.backend {
+        let shared = WorkerShared {
+            rx,
+            depth: depth.clone(),
+            metrics: metrics.clone(),
+            flops_per_job: (2 * m * k * n) as u64,
+            m,
+            k,
+            n,
+            window: cfg.batch_window,
+            deadline: cfg.deadline,
+            drain_timeout: cfg.drain_timeout,
+        };
+        let (plan, backend) = match cfg.backend {
             Backend::Pjrt => {
                 // the PJRT artifacts compute in f32 — plan at f32 so the
                 // model sees the true elements-per-line
@@ -330,21 +534,25 @@ impl Service {
                             && a.n == n
                     })
                     .map(|a| (a.name.clone(), a.batch));
-                let handle = std::thread::spawn(move || {
-                    let mut engine = Engine::new(registry).expect("pjrt engine");
-                    engine.prepare(&single).expect("prepare single artifact");
-                    if let Some((name, _)) = &batched {
-                        engine.prepare(name).expect("prepare batched artifact");
-                    }
-                    let backend = WorkerBackend::Pjrt {
-                        engine,
-                        single,
-                        batched,
-                        y,
-                    };
-                    worker_loop(backend, rx, worker_depth, m, k, n, window)
-                });
-                (plan, handle)
+                // warm the executables on the caller's thread: a broken
+                // runtime is a typed start() error, never a worker abort
+                let mut engine = Engine::new(registry)
+                    .context("pjrt engine init failed (is the PJRT runtime available?)")?;
+                engine
+                    .prepare(&single)
+                    .with_context(|| format!("prepare single artifact {single}"))?;
+                if let Some((name, _)) = &batched {
+                    engine
+                        .prepare(name)
+                        .with_context(|| format!("prepare batched artifact {name}"))?;
+                }
+                let backend = WorkerBackend::Pjrt {
+                    engine,
+                    single,
+                    batched,
+                    y,
+                };
+                (plan, backend)
             }
             Backend::Native => {
                 let max_batch = cfg.max_batch.max(1);
@@ -353,10 +561,18 @@ impl Service {
                 // the f32 column-major transpose lowering — twice: once at
                 // the single-job width (the numerics anchor) and once at
                 // the full coalescing width m·max_batch (the geometry the
-                // resident arena is laid out for); see `serving_level`
-                let job_plan = planner.plan_kernel(&registry, &NativeMatmul::kernel_for(m, k, n));
+                // resident arena is laid out for); see `serving_level`.
+                // Planner failures degrade to the parameter-free flat
+                // fallback instead of failing start()
+                let (job_plan, fb_job) = planner.plan_or_fallback(
+                    &registry,
+                    &NativeMatmul::kernel_for(m, k, n),
+                    &faults,
+                );
                 let wide_kernel = NativeMatmul::kernel_for(m * max_batch, k, n);
-                let wide_plan = planner.plan_kernel(&registry, &wide_kernel);
+                let (wide_plan, fb_wide) =
+                    planner.plan_or_fallback(&registry, &wide_kernel, &faults);
+                lock_unpoisoned(&metrics).fallback_plans = fb_job as u64 + fb_wide as u64;
                 let level = serving_level(&job_plan.level, &wide_plan.level);
                 let mut plan = job_plan;
                 plan.level = level;
@@ -368,20 +584,30 @@ impl Service {
                     "{} (serving {m}x{k}x{n} via transpose, coalescing <= {max_batch})",
                     plan.plan_name
                 );
-                let micro = plan.micro;
-                let handle = std::thread::spawn(move || {
-                    let native = NativeMatmul::new(m, k, n, &y, level, micro, max_batch, threads);
-                    let backend = WorkerBackend::Native(Box::new(native));
-                    worker_loop(backend, rx, worker_depth, m, k, n, window)
-                });
-                (plan, handle)
+                let native = NativeMatmul::new(
+                    m,
+                    k,
+                    n,
+                    &y,
+                    level,
+                    plan.micro,
+                    max_batch,
+                    threads,
+                    faults.clone(),
+                )?;
+                (plan, WorkerBackend::Native(Box::new(native)))
             }
         };
+        let handle = std::thread::spawn(move || supervise(backend, shared));
         Ok(Service {
             tx,
             depth,
+            stopped,
             queue_cap,
+            metrics,
             handle,
+            faults,
+            retry_seq: Arc::new(AtomicU64::new(0)),
             m,
             k,
             n,
@@ -391,15 +617,43 @@ impl Service {
 
     /// Submit a job; returns the receiver for the m×n row-major result,
     /// or a typed rejection if the bounded queue is at capacity / the
-    /// shape is wrong.
+    /// shape is wrong / the service is stopping.
     pub fn submit(&self, x: Vec<f32>) -> Result<ResultReceiver, SubmitError> {
-        admit_and_send(&self.tx, &self.depth, self.queue_cap, self.m * self.k, x)
+        admit_and_send(
+            &self.tx,
+            &self.depth,
+            &self.stopped,
+            &self.faults,
+            self.queue_cap,
+            self.m * self.k,
+            x,
+        )
+        .map_err(|(e, _)| e)
     }
 
-    /// Stop and collect metrics (+ total wall time of the worker).
+    /// Stop gracefully and collect metrics (+ total wall time of the
+    /// worker): new submissions are rejected with
+    /// [`SubmitError::Stopped`], queued work is finished (bounded by
+    /// [`ServiceConfig::drain_timeout`]), the worker joins. Never
+    /// re-panics: if the worker thread itself died, the snapshot comes
+    /// back with `Metrics::worker_poisoned` set and a zero wall time.
     pub fn stop(self) -> (Metrics, Duration) {
-        let _ = self.tx.send(Msg::Stop);
-        self.handle.join().expect("worker panicked")
+        self.stopped.store(true, Ordering::SeqCst);
+        let Service {
+            tx,
+            metrics,
+            handle,
+            ..
+        } = self;
+        let _ = tx.send(Msg::Stop);
+        drop(tx);
+        let (wall, poisoned) = match handle.join() {
+            Ok(wall) => (wall, false),
+            Err(_) => (Duration::ZERO, true),
+        };
+        let mut snapshot = lock_unpoisoned(&metrics).clone();
+        snapshot.worker_poisoned = poisoned;
+        (snapshot, wall)
     }
 }
 
@@ -425,6 +679,14 @@ impl Service {
 /// when the widened shape spans several L3 super-bands and `threads > 1`
 /// the batch routes through [`run_parallel_macro_prepacked`] with those
 /// resident panels shared read-only across workers.
+///
+/// Fault containment: the resident row panels are immutable after
+/// startup, so a panic mid-batch cannot corrupt them — [`recover`]
+/// (called by the supervisor and the degradation ladder) only resets the
+/// per-batch column-pack scratch, whose caching keys could otherwise go
+/// stale across an unwind.
+///
+/// [`recover`]: NativeMatmul::recover
 struct NativeMatmul {
     /// The `max_batch`-wide kernel (the parallel path re-checks its
     /// output map is injective before sharing the arena across workers).
@@ -437,6 +699,7 @@ struct NativeMatmul {
     /// once at startup, shared by every batch (`y` never changes).
     rows: Vec<PackedRows<f32>>,
     cols: PackedCols<f32>,
+    faults: Faults,
     m: usize,
     k: usize,
     n: usize,
@@ -462,21 +725,22 @@ impl NativeMatmul {
         micro: MicroShape,
         max_batch: usize,
         threads: usize,
-    ) -> NativeMatmul {
+        faults: Faults,
+    ) -> Result<NativeMatmul> {
         let max_batch = max_batch.max(1);
         let kernel = NativeMatmul::kernel_for(m * max_batch, k, n);
         let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
         // operand 1 is B = yᵀ (n×k column-major) — the same linear bytes
         // as y (k×n row-major)
         bufs.operand_mut(1).copy_from_slice(y);
-        let gf = GemmForm::of(&kernel).expect("matmul is GEMM-form");
+        let gf = GemmForm::of(&kernel).context("native serve kernel must be GEMM-form")?;
         let lo = vec![0i64; kernel.n_free()];
         let plan = gf.plan_box(&kernel_views(&kernel), &lo, kernel.extents());
         // y is resident for the service's lifetime: pack its row panels
         // exactly once, here — they depend only on rows × reduction, so
         // one set serves every batch width
         let rows = pack_row_slices(&bufs.arena, &plan, &level);
-        NativeMatmul {
+        Ok(NativeMatmul {
             kernel,
             plan,
             level,
@@ -484,12 +748,13 @@ impl NativeMatmul {
             bufs,
             rows,
             cols: PackedCols::new(),
+            faults,
             m,
             k,
             n,
             max_batch,
             threads,
-        }
+        })
     }
 
     /// Serve a coalesced batch as one widened GEMM: load the jobs' `x`
@@ -499,9 +764,21 @@ impl NativeMatmul {
     /// job in row-major order. Returns the per-job results and the
     /// number of column-band packs the batch performed (the resident row
     /// panels are packed zero times here — test-pinned).
-    fn run_batch(&mut self, xs: &[&[f32]]) -> (Vec<Vec<f32>>, u64) {
+    fn run_batch(&mut self, xs: &[&[f32]]) -> Result<(Vec<Vec<f32>>, u64), JobError> {
+        match self.faults.check(FaultPoint::BatchCompute) {
+            Some(FaultMode::Error) => {
+                return Err(JobError::Backend {
+                    detail: "injected fault at BatchCompute".to_string(),
+                })
+            }
+            Some(FaultMode::Panic) => faults::inject_panic(FaultPoint::BatchCompute),
+            None => {}
+        }
         let b = xs.len();
-        assert!((1..=self.max_batch).contains(&b), "batch exceeds planned width");
+        assert!(
+            (1..=self.max_batch).contains(&b),
+            "batch exceeds planned width"
+        );
         self.bufs.reset_output();
         let job = self.m * self.k;
         let op2 = self.bufs.operand_mut(2);
@@ -511,33 +788,53 @@ impl NativeMatmul {
         let n_used = self.m * b;
         let (m3, n3) = super_band_extents(&self.level);
         let grid = self.plan.m.div_ceil(m3) * n_used.div_ceil(n3);
-        let col_packs = if self.threads > 1 && grid > 1 {
-            run_parallel_macro_prepacked(
-                &mut self.bufs.arena,
-                &self.kernel,
-                &self.plan,
-                &self.level,
-                self.micro,
-                &self.rows,
-                self.threads,
-                n_used,
-            )
-            .col_band_packs
-        } else {
-            run_macro_prepacked_cols(
-                &mut self.bufs.arena,
-                &self.plan,
-                &self.level,
-                self.micro,
-                &self.rows,
-                &mut self.cols,
-                n_used,
-            )
-        };
+        // scope the fault schedule for the executor's deep Pack hook
+        // (clone first: the closure needs exclusive access to self)
+        let scope_faults = self.faults.clone();
+        let col_packs = faults::with_scope(&scope_faults, || {
+            if self.threads > 1 && grid > 1 {
+                run_parallel_macro_prepacked(
+                    &mut self.bufs.arena,
+                    &self.kernel,
+                    &self.plan,
+                    &self.level,
+                    self.micro,
+                    &self.rows,
+                    self.threads,
+                    n_used,
+                )
+                .col_band_packs
+            } else {
+                run_macro_prepacked_cols(
+                    &mut self.bufs.arena,
+                    &self.plan,
+                    &self.level,
+                    self.micro,
+                    &self.rows,
+                    &mut self.cols,
+                    n_used,
+                )
+            }
+        });
         let out = self.bufs.output();
         let per = self.m * self.n;
-        let outs = (0..b).map(|i| out[i * per..(i + 1) * per].to_vec()).collect();
-        (outs, col_packs)
+        let outs = (0..b)
+            .map(|i| out[i * per..(i + 1) * per].to_vec())
+            .collect();
+        Ok((outs, col_packs))
+    }
+
+    /// Reset per-batch scratch after a contained failure: the column-pack
+    /// buffer may hold a half-written band (its caching key would lie),
+    /// so drop it. The resident row panels are immutable and stay.
+    fn recover(&mut self) {
+        self.cols = PackedCols::new();
+    }
+
+    /// Total pack operations the resident row panels have absorbed —
+    /// constant after startup; the chaos suite pins it across respawns.
+    fn resident_packs(&self) -> u64 {
+        self.rows.iter().map(|r| r.pack_count()).sum()
     }
 }
 
@@ -563,134 +860,449 @@ impl WorkerBackend {
             WorkerBackend::Native(native) => native.max_batch,
         }
     }
+
+    /// Reset per-batch scratch after a contained failure (no-op for
+    /// PJRT, whose per-dispatch state lives on the engine side).
+    fn recover(&mut self) {
+        if let WorkerBackend::Native(native) = self {
+            native.recover();
+        }
+    }
+
+    /// Resident prepacked weight-panel pack count (native only).
+    fn resident_packs(&self) -> Option<u64> {
+        match self {
+            WorkerBackend::Native(native) => Some(native.resident_packs()),
+            WorkerBackend::Pjrt { .. } => None,
+        }
+    }
 }
 
-fn worker_loop(
-    mut backend: WorkerBackend,
+/// Everything the worker loop shares with the service handle: the job
+/// channel, the in-flight counter, and the metrics sink.
+struct WorkerShared {
     rx: Receiver<Msg>,
     depth: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    flops_per_job: u64,
     m: usize,
     k: usize,
     n: usize,
     window: Duration,
-) -> (Metrics, Duration) {
-    let started = Instant::now();
-    let mut metrics = Metrics::new();
-    let flops_per_job = (2 * m * k * n) as u64;
-    let mut pending: Vec<Job> = Vec::new();
-    let mut stopping = false;
+    deadline: Option<Duration>,
+    drain_timeout: Duration,
+}
 
-    while !stopping || !pending.is_empty() {
-        let cap = backend.batch_cap();
-        if pending.is_empty() && !stopping {
-            // idle: block for the batch's first job — the window must
-            // not start (or tick) until it lands
-            match rx.recv() {
-                Ok(Msg::Job(j)) => pending.push(j),
-                Ok(Msg::Stop) | Err(_) => stopping = true,
+/// Worker-loop state that must survive a panic: jobs pulled off the
+/// channel but not yet answered, plus the drain bookkeeping. Lives in
+/// the supervisor's frame so an unwound loop iteration cannot strand a
+/// job — whatever is still here when a panic is caught gets a typed
+/// [`JobError::WorkerPanicked`].
+struct WorkerState {
+    pending: Vec<Job>,
+    stopping: bool,
+    drain_until: Option<Instant>,
+}
+
+/// The supervisor: runs [`worker_loop`] under `catch_unwind`, and on a
+/// caught panic resolves every stranded job with
+/// [`JobError::WorkerPanicked`], bumps `Metrics::worker_restarts`,
+/// resets the backend's per-batch scratch, and re-enters the loop over
+/// the same resident state (the prepacked weight panels survive — pinned
+/// by `Metrics::resident_packs`). Returns the worker's total wall time.
+fn supervise(mut backend: WorkerBackend, sh: WorkerShared) -> Duration {
+    let started = Instant::now();
+    if let Some(packs) = backend.resident_packs() {
+        lock_unpoisoned(&sh.metrics).resident_packs = packs;
+    }
+    let mut st = WorkerState {
+        pending: Vec::new(),
+        stopping: false,
+        drain_until: None,
+    };
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| worker_loop(&mut backend, &sh, &mut st))) {
+            Ok(()) => break,
+            Err(payload) => {
+                let detail = panic_detail(payload);
+                {
+                    let mut mg = lock_unpoisoned(&sh.metrics);
+                    mg.worker_restarts += 1;
+                    for j in &st.pending {
+                        let waited = j.submitted.elapsed();
+                        mg.record_error(waited, waited);
+                    }
+                }
+                for j in st.pending.drain(..) {
+                    let _ = j.resp.send(Err(JobError::WorkerPanicked {
+                        detail: detail.clone(),
+                    }));
+                    sh.depth.fetch_sub(1, Ordering::SeqCst);
+                }
+                backend.recover();
+                // respawn: re-enter the loop over the same resident backend
             }
         }
-        if !pending.is_empty() && !stopping {
+    }
+    if let Some(packs) = backend.resident_packs() {
+        lock_unpoisoned(&sh.metrics).resident_packs = packs;
+    }
+    started.elapsed()
+}
+
+/// Extract a human-readable panic message from a caught unwind payload.
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+fn worker_loop(backend: &mut WorkerBackend, sh: &WorkerShared, st: &mut WorkerState) {
+    loop {
+        let cap = backend.batch_cap().max(1);
+        if st.pending.is_empty() && !st.stopping {
+            // idle: block for the batch's first job — the window must
+            // not start (or tick) until it lands
+            match sh.rx.recv() {
+                Ok(Msg::Job(j)) => st.pending.push(j),
+                Ok(Msg::Stop) | Err(_) => st.stopping = true,
+            }
+        }
+        if !st.pending.is_empty() && !st.stopping {
             // the batch window runs from the first job's arrival
-            let deadline = Instant::now() + window;
-            while pending.len() < cap {
-                let timeout = deadline.saturating_duration_since(Instant::now());
+            let window_end = Instant::now() + sh.window;
+            while st.pending.len() < cap {
+                let timeout = window_end.saturating_duration_since(Instant::now());
                 if timeout.is_zero() {
                     break;
                 }
-                match rx.recv_timeout(timeout) {
-                    Ok(Msg::Job(j)) => pending.push(j),
+                match sh.rx.recv_timeout(timeout) {
+                    Ok(Msg::Job(j)) => st.pending.push(j),
                     Ok(Msg::Stop) => {
-                        stopping = true;
+                        st.stopping = true;
                         break;
                     }
                     Err(RecvTimeoutError::Timeout) => break,
                     Err(RecvTimeoutError::Disconnected) => {
-                        stopping = true;
+                        st.stopping = true;
                         break;
                     }
                 }
             }
         }
-        if pending.is_empty() {
+        if st.stopping && st.pending.is_empty() {
+            // graceful drain: accepted jobs may still be in the channel —
+            // keep serving until the in-flight count hits zero or the
+            // hard drain bound expires
+            if drain_done(sh, st) {
+                return;
+            }
             continue;
         }
-
-        let take = cap.min(pending.len());
-        let batch: Vec<Job> = pending.drain(..take).collect();
+        if st.pending.is_empty() {
+            continue;
+        }
         let dispatch = Instant::now();
-        let waits: Vec<Duration> = batch
-            .iter()
-            .map(|j| dispatch.saturating_duration_since(j.submitted))
-            .collect();
-        match &mut backend {
-            WorkerBackend::Native(native) => {
-                let xs: Vec<&[f32]> = batch.iter().map(|j| j.x.as_slice()).collect();
-                let (outs, _col_packs) = native.run_batch(&xs);
-                metrics.record_batch(batch.len(), dispatch.elapsed());
-                for ((j, out), wait) in batch.into_iter().zip(outs).zip(waits) {
-                    metrics.record_job(j.submitted.elapsed(), wait, flops_per_job);
-                    let _ = j.resp.send(Ok(out));
-                    depth.fetch_sub(1, Ordering::SeqCst);
+        if let Some(dl) = sh.deadline {
+            shed_expired(sh, st, dispatch, dl);
+        }
+        if st.pending.is_empty() {
+            continue;
+        }
+        let take = cap.min(st.pending.len());
+        dispatch_batch(backend, sh, st, take, dispatch);
+    }
+}
+
+/// One drain step while stopping with nothing pending. Returns true when
+/// the worker may exit: every accepted job answered (`depth == 0`), the
+/// hard bound expired (stragglers resolve [`JobError::Stopped`]), or the
+/// channel fully disconnected.
+fn drain_done(sh: &WorkerShared, st: &mut WorkerState) -> bool {
+    let until = *st
+        .drain_until
+        .get_or_insert_with(|| Instant::now() + sh.drain_timeout);
+    if sh.depth.load(Ordering::SeqCst) == 0 {
+        return true;
+    }
+    let left = until.saturating_duration_since(Instant::now());
+    if left.is_zero() {
+        // hard bound: whatever is still queued resolves typed, never hangs
+        while let Ok(msg) = sh.rx.try_recv() {
+            if let Msg::Job(j) = msg {
+                let waited = j.submitted.elapsed();
+                lock_unpoisoned(&sh.metrics).record_error(waited, waited);
+                let _ = j.resp.send(Err(JobError::Stopped));
+                sh.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        return true;
+    }
+    // short receive slices so the depth check re-runs promptly: a client
+    // that raced admission against stop() may still be mid-send
+    match sh.rx.recv_timeout(left.min(Duration::from_millis(2))) {
+        Ok(Msg::Job(j)) => st.pending.push(j),
+        Ok(Msg::Stop) | Err(RecvTimeoutError::Timeout) => {}
+        Err(RecvTimeoutError::Disconnected) => return true,
+    }
+    false
+}
+
+/// Shed every pending job whose queue wait exceeds the deadline:
+/// resolves [`JobError::DeadlineExceeded`], counts in
+/// `Metrics::timeouts` (the shed side of shed-vs-served), frees the
+/// queue slot.
+fn shed_expired(sh: &WorkerShared, st: &mut WorkerState, now: Instant, deadline: Duration) {
+    let mut i = 0;
+    while i < st.pending.len() {
+        let waited = now.saturating_duration_since(st.pending[i].submitted);
+        if waited > deadline {
+            let j = st.pending.remove(i);
+            lock_unpoisoned(&sh.metrics).record_shed(waited, waited);
+            let _ = j.resp.send(Err(JobError::DeadlineExceeded { waited, deadline }));
+            sh.depth.fetch_sub(1, Ordering::SeqCst);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn dispatch_batch(
+    backend: &mut WorkerBackend,
+    sh: &WorkerShared,
+    st: &mut WorkerState,
+    take: usize,
+    dispatch: Instant,
+) {
+    match backend {
+        WorkerBackend::Native(native) => dispatch_native(native, sh, st, take, dispatch),
+        WorkerBackend::Pjrt {
+            engine,
+            single,
+            batched,
+            y,
+        } => dispatch_pjrt(engine, single, batched, y, sh, st, take, dispatch),
+    }
+}
+
+/// Run one native batch with panics contained: an unwind anywhere in the
+/// packed engine (including an injected `Pack` fault) comes back as a
+/// typed [`JobError::WorkerPanicked`] instead of unwinding the worker.
+fn run_native_batch(native: &mut NativeMatmul, xs: &[&[f32]]) -> Result<Vec<Vec<f32>>, JobError> {
+    match catch_unwind(AssertUnwindSafe(|| native.run_batch(xs))) {
+        Ok(Ok((outs, _col_packs))) => Ok(outs),
+        Ok(Err(e)) => Err(e),
+        Err(payload) => Err(JobError::WorkerPanicked {
+            detail: panic_detail(payload),
+        }),
+    }
+}
+
+/// Native dispatch with the degradation ladder: try the coalesced batch;
+/// on failure retry the jobs one at a time (one poisoned job cannot take
+/// down its batchmates); a lone job failing twice back-to-back escalates
+/// to the supervisor for a worker respawn.
+fn dispatch_native(
+    native: &mut NativeMatmul,
+    sh: &WorkerShared,
+    st: &mut WorkerState,
+    take: usize,
+    dispatch: Instant,
+) {
+    let waits: Vec<Duration> = st.pending[..take]
+        .iter()
+        .map(|j| dispatch.saturating_duration_since(j.submitted))
+        .collect();
+    let attempt = {
+        let xs: Vec<&[f32]> = st.pending[..take].iter().map(|j| j.x.as_slice()).collect();
+        run_native_batch(native, &xs)
+    };
+    match attempt {
+        Ok(outs) => {
+            let batch: Vec<Job> = st.pending.drain(..take).collect();
+            let resident = native.resident_packs();
+            {
+                let mut mg = lock_unpoisoned(&sh.metrics);
+                mg.record_batch(take, dispatch.elapsed());
+                mg.resident_packs = resident;
+                for (j, wait) in batch.iter().zip(&waits) {
+                    mg.record_job(j.submitted.elapsed(), *wait, sh.flops_per_job);
                 }
             }
-            WorkerBackend::Pjrt {
-                engine,
-                single,
-                batched,
-                y,
-            } => {
-                if batch.len() > 1 {
-                    let (name, bcap) = batched
-                        .as_ref()
-                        .expect("multi-job batch without a batched artifact");
-                    // pad to the full batch with zeros
-                    let mut xs = vec![0f32; *bcap * m * k];
-                    for (i, j) in batch.iter().enumerate() {
-                        xs[i * m * k..(i + 1) * m * k].copy_from_slice(&j.x);
+            for (j, out) in batch.into_iter().zip(outs) {
+                let _ = j.resp.send(Ok(out));
+                sh.depth.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+        Err(first) if take == 1 => {
+            // a lone job failed — one contained retry, then escalate:
+            // two consecutive failures with no batchmates to blame means
+            // the worker itself is suspect
+            native.recover();
+            lock_unpoisoned(&sh.metrics).retries += 1;
+            let retry = {
+                let xs: Vec<&[f32]> = st.pending[..1].iter().map(|j| j.x.as_slice()).collect();
+                run_native_batch(native, &xs)
+            };
+            let j = st.pending.remove(0);
+            match retry {
+                Ok(mut outs) => {
+                    let resident = native.resident_packs();
+                    {
+                        let mut mg = lock_unpoisoned(&sh.metrics);
+                        mg.record_batch(1, dispatch.elapsed());
+                        mg.resident_packs = resident;
+                        mg.record_job(j.submitted.elapsed(), waits[0], sh.flops_per_job);
                     }
-                    let run = engine.run_matmul(name, &xs, y);
-                    metrics.record_batch(batch.len(), dispatch.elapsed());
-                    match run {
-                        Ok(out) => {
-                            for ((i, j), wait) in batch.into_iter().enumerate().zip(waits) {
-                                let slice = out[i * m * n..(i + 1) * m * n].to_vec();
-                                metrics.record_job(j.submitted.elapsed(), wait, flops_per_job);
-                                let _ = j.resp.send(Ok(slice));
-                                depth.fetch_sub(1, Ordering::SeqCst);
-                            }
-                        }
-                        Err(e) => {
-                            // failed jobs still count: they held queue
-                            // capacity and worker time, and hiding them
-                            // would overstate the service's health
-                            for (j, wait) in batch.into_iter().zip(waits) {
-                                metrics.record_error(j.submitted.elapsed(), wait);
-                                let _ = j.resp.send(Err(anyhow::anyhow!("{e:#}")));
-                                depth.fetch_sub(1, Ordering::SeqCst);
-                            }
-                        }
-                    }
-                } else {
-                    for (j, wait) in batch.into_iter().zip(waits) {
-                        let r = engine.run_matmul(single, &j.x, y);
-                        match &r {
-                            Ok(_) => metrics.record_job(j.submitted.elapsed(), wait, flops_per_job),
-                            Err(_) => metrics.record_error(j.submitted.elapsed(), wait),
-                        }
-                        let _ = j.resp.send(r);
-                        depth.fetch_sub(1, Ordering::SeqCst);
-                    }
-                    metrics.record_batch(take, dispatch.elapsed());
+                    let _ = j.resp.send(Ok(outs.swap_remove(0)));
+                    sh.depth.fetch_sub(1, Ordering::SeqCst);
                 }
+                Err(second) => {
+                    lock_unpoisoned(&sh.metrics).record_error(j.submitted.elapsed(), waits[0]);
+                    let _ = j.resp.send(Err(second));
+                    sh.depth.fetch_sub(1, Ordering::SeqCst);
+                    native.recover();
+                    // escalate to the supervisor: respawn the worker
+                    resume_unwind(Box::new(format!(
+                        "native worker failing repeatedly: {first}"
+                    )));
+                }
+            }
+        }
+        Err(_) => {
+            // the coalesced batch failed — degrade to one job at a time
+            // so one poisoned job cannot take down its batchmates
+            let batch: Vec<Job> = st.pending.drain(..take).collect();
+            native.recover();
+            for (j, wait) in batch.into_iter().zip(waits) {
+                let t1 = Instant::now();
+                lock_unpoisoned(&sh.metrics).retries += 1;
+                let r = run_native_batch(native, &[j.x.as_slice()]);
+                match r {
+                    Ok(mut outs) => {
+                        let resident = native.resident_packs();
+                        {
+                            let mut mg = lock_unpoisoned(&sh.metrics);
+                            mg.record_batch(1, t1.elapsed());
+                            mg.resident_packs = resident;
+                            mg.record_job(j.submitted.elapsed(), wait, sh.flops_per_job);
+                        }
+                        let _ = j.resp.send(Ok(outs.swap_remove(0)));
+                    }
+                    Err(e) => {
+                        native.recover();
+                        lock_unpoisoned(&sh.metrics).record_error(j.submitted.elapsed(), wait);
+                        let _ = j.resp.send(Err(e));
+                    }
+                }
+                sh.depth.fetch_sub(1, Ordering::SeqCst);
             }
         }
     }
-    (metrics, started.elapsed())
+}
+
+/// PJRT dispatch: batched artifact when shipped and the batch is wide,
+/// with a ladder of single-kernel retries if the batched run fails;
+/// single-shape kernel otherwise.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_pjrt(
+    engine: &mut Engine,
+    single: &str,
+    batched: &Option<(String, usize)>,
+    y: &[f32],
+    sh: &WorkerShared,
+    st: &mut WorkerState,
+    take: usize,
+    dispatch: Instant,
+) {
+    let waits: Vec<Duration> = st.pending[..take]
+        .iter()
+        .map(|j| dispatch.saturating_duration_since(j.submitted))
+        .collect();
+    let batch: Vec<Job> = st.pending.drain(..take).collect();
+    if batch.len() > 1 {
+        if let Some((name, bcap)) = batched {
+            // pad to the full batch with zeros
+            let mut xs = vec![0f32; *bcap * sh.m * sh.k];
+            for (i, j) in batch.iter().enumerate() {
+                xs[i * sh.m * sh.k..(i + 1) * sh.m * sh.k].copy_from_slice(&j.x);
+            }
+            let run = engine.run_matmul(name, &xs, y);
+            lock_unpoisoned(&sh.metrics).record_batch(batch.len(), dispatch.elapsed());
+            match run {
+                Ok(out) => {
+                    for ((i, j), wait) in batch.into_iter().enumerate().zip(waits) {
+                        let slice = out[i * sh.m * sh.n..(i + 1) * sh.m * sh.n].to_vec();
+                        lock_unpoisoned(&sh.metrics).record_job(
+                            j.submitted.elapsed(),
+                            wait,
+                            sh.flops_per_job,
+                        );
+                        let _ = j.resp.send(Ok(slice));
+                        sh.depth.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+                Err(batch_err) => {
+                    // degradation ladder: the batched artifact failed —
+                    // retry each job through the single-shape kernel
+                    // before erroring it
+                    let detail = format!("{batch_err:#}");
+                    for (j, wait) in batch.into_iter().zip(waits) {
+                        let t1 = Instant::now();
+                        lock_unpoisoned(&sh.metrics).retries += 1;
+                        let r = engine.run_matmul(single, &j.x, y);
+                        let mut mg = lock_unpoisoned(&sh.metrics);
+                        mg.record_batch(1, t1.elapsed());
+                        match r {
+                            Ok(out) => {
+                                mg.record_job(j.submitted.elapsed(), wait, sh.flops_per_job);
+                                drop(mg);
+                                let _ = j.resp.send(Ok(out));
+                            }
+                            Err(e2) => {
+                                mg.record_error(j.submitted.elapsed(), wait);
+                                drop(mg);
+                                let _ = j.resp.send(Err(JobError::Backend {
+                                    detail: format!(
+                                        "batched: {detail}; single retry: {e2:#}"
+                                    ),
+                                }));
+                            }
+                        }
+                        sh.depth.fetch_sub(1, Ordering::SeqCst);
+                    }
+                }
+            }
+            return;
+        }
+        // batch_cap() is 1 without a batched artifact, so a multi-job
+        // batch can't reach here — but if it ever does, the singles loop
+        // below still answers every job
+    }
+    for (j, wait) in batch.into_iter().zip(waits) {
+        let r = engine.run_matmul(single, &j.x, y);
+        let mut mg = lock_unpoisoned(&sh.metrics);
+        match &r {
+            Ok(_) => mg.record_job(j.submitted.elapsed(), wait, sh.flops_per_job),
+            Err(_) => mg.record_error(j.submitted.elapsed(), wait),
+        }
+        drop(mg);
+        let _ = j.resp.send(r.map_err(|e| JobError::Backend {
+            detail: format!("{e:#}"),
+        }));
+        sh.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+    lock_unpoisoned(&sh.metrics).record_batch(take, dispatch.elapsed());
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::path::PathBuf;
 
@@ -732,6 +1344,13 @@ mod tests {
         }
     }
 
+    fn max_abs_diff(got: &[f32], want: &[f32]) -> f32 {
+        got.iter()
+            .zip(want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max)
+    }
+
     #[test]
     fn service_serves_correct_results() {
         if !artifacts_dir().join("manifest.tsv").exists() {
@@ -760,13 +1379,9 @@ mod tests {
             .collect();
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
         for (x, rx) in xs.iter().zip(rxs) {
-            let got = rx.recv().unwrap().unwrap();
+            let got = rx.recv().unwrap();
             let want = rowmajor_matmul(m, k, n, x, &y);
-            let maxd = got
-                .iter()
-                .zip(&want)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0f32, f32::max);
+            let maxd = max_abs_diff(&got, &want);
             assert!(maxd < 1e-2, "serve result off by {maxd}");
         }
         let (metrics, wall) = svc.stop();
@@ -802,14 +1417,10 @@ mod tests {
             .collect();
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
         for (x, rx) in xs.iter().zip(rxs) {
-            let got = rx.recv().unwrap().unwrap();
+            let got = rx.recv().unwrap();
             let want = rowmajor_matmul(m, k, n, x, &y);
             assert_eq!(got.len(), want.len());
-            let maxd = got
-                .iter()
-                .zip(&want)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0f32, f32::max);
+            let maxd = max_abs_diff(&got, &want);
             assert!(maxd < 1e-3, "native serve result off by {maxd}");
         }
         let (metrics, _) = svc.stop();
@@ -847,15 +1458,11 @@ mod tests {
             )
             .unwrap();
             let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
-            outs.push(rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect());
+            outs.push(rxs.into_iter().map(|rx| rx.recv().unwrap()).collect());
             svc.stop();
         }
         for (job, (a, b)) in outs[0].iter().zip(&outs[1]).enumerate() {
-            let maxd = a
-                .iter()
-                .zip(b)
-                .map(|(x, y)| (x - y).abs())
-                .fold(0f32, f32::max);
+            let maxd = max_abs_diff(a, b);
             assert!(maxd < 1e-2, "job {job}: backends disagree by {maxd}");
         }
     }
@@ -880,13 +1487,9 @@ mod tests {
             .collect();
         let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
         for (x, rx) in xs.iter().zip(rxs) {
-            let got = rx.recv().unwrap().unwrap();
+            let got = rx.recv().unwrap();
             let want = rowmajor_matmul(m, k, n, x, &y);
-            let maxd = got
-                .iter()
-                .zip(&want)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0f32, f32::max);
+            let maxd = max_abs_diff(&got, &want);
             assert!(maxd < 1e-3, "batched native result off by {maxd}");
         }
         let (metrics, _) = svc.stop();
@@ -946,10 +1549,10 @@ mod tests {
         assert!(msg.contains("capacity 2"), "{msg}");
         // both in-flight jobs complete (the window elapses), freeing
         // capacity for a new submission
-        rx1.recv().unwrap().unwrap();
-        rx2.recv().unwrap().unwrap();
+        rx1.recv().unwrap();
+        rx2.recv().unwrap();
         let rx4 = svc.submit(x()).unwrap();
-        rx4.recv().unwrap().unwrap();
+        rx4.recv().unwrap();
         let (metrics, _) = svc.stop();
         assert_eq!(metrics.jobs, 3, "rejected submissions must not count");
         assert_eq!(metrics.errors, 0);
@@ -986,8 +1589,7 @@ mod tests {
                 )
                 .unwrap();
                 let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
-                let outs: Vec<Vec<f32>> =
-                    rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+                let outs: Vec<Vec<f32>> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
                 svc.stop();
                 per_width.push(outs);
             }
@@ -1003,11 +1605,7 @@ mod tests {
             // and correct vs the row-major oracle
             for (x, got) in xs.iter().zip(&per_width[2]) {
                 let want = rowmajor_matmul(m, k, n, x, &y);
-                let maxd = got
-                    .iter()
-                    .zip(&want)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0f32, f32::max);
+                let maxd = max_abs_diff(got, &want);
                 assert!(maxd < 1e-3, "{m}x{k}x{n}: coalesced result off by {maxd}");
             }
         }
@@ -1030,7 +1628,18 @@ mod tests {
         };
         let mut rnd = xorshift_f32(0x9ACC);
         let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
-        let mut native = NativeMatmul::new(m, k, n, &y, level, MicroShape::Mr8Nr4, max_batch, 1);
+        let mut native = NativeMatmul::new(
+            m,
+            k,
+            n,
+            &y,
+            level,
+            MicroShape::Mr8Nr4,
+            max_batch,
+            1,
+            Faults::none(),
+        )
+        .unwrap();
         // GEMM shape: rows = n = 24 (one super-band at m3 = 32),
         // reduction = k = 20 (ceil(20/9) = 3 kc slices), columns = m·B
         let kslices = 3u64;
@@ -1041,7 +1650,7 @@ mod tests {
                 .map(|_| (0..m * k).map(|_| rnd()).collect())
                 .collect();
             let views: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
-            let (outs, col_packs) = native.run_batch(&views);
+            let (outs, col_packs) = native.run_batch(&views).unwrap();
             // resident panels: packed zero times per batch
             let now: u64 = native.rows.iter().map(|r| r.pack_count()).sum();
             assert_eq!(now, startup_packs, "batch B={b} repacked resident y panels");
@@ -1055,11 +1664,7 @@ mod tests {
             assert_eq!(col_packs, kslices * nc_bands, "B={b}");
             for (x, got) in xs.iter().zip(&outs) {
                 let want = rowmajor_matmul(m, k, n, x, &y);
-                let maxd = got
-                    .iter()
-                    .zip(&want)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0f32, f32::max);
+                let maxd = max_abs_diff(got, &want);
                 assert!(maxd < 1e-3, "B={b}: batch result off by {maxd}");
             }
         }
@@ -1070,7 +1675,8 @@ mod tests {
         // the synthetic many-client load test: concurrent client threads
         // hammer one service through cloned handles; every result checks
         // against the oracle and the metrics report carries exact
-        // percentiles plus the queue-wait vs compute attribution
+        // percentiles plus the queue-wait vs compute attribution and the
+        // shed-vs-served robustness counters
         let (m, k, n) = (32usize, 24, 40);
         let clients = 4usize;
         let per_client = 16usize;
@@ -1100,13 +1706,9 @@ mod tests {
                     for _ in 0..per_client {
                         let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
                         let rx = client.submit(x.clone()).unwrap();
-                        let got = rx.recv().unwrap().unwrap();
+                        let got = rx.recv().unwrap();
                         let want = rowmajor_matmul(m, k, n, &x, y);
-                        let maxd = got
-                            .iter()
-                            .zip(&want)
-                            .map(|(a, b)| (a - b).abs())
-                            .fold(0f32, f32::max);
+                        let maxd = max_abs_diff(&got, &want);
                         assert!(maxd < 1e-3, "client {c}: result off by {maxd}");
                     }
                 });
@@ -1116,15 +1718,350 @@ mod tests {
         let jobs = (clients * per_client) as u64;
         assert_eq!(metrics.jobs, jobs);
         assert_eq!(metrics.errors, 0);
+        assert_eq!(metrics.served(), jobs);
+        assert!(!metrics.worker_poisoned);
         assert!(metrics.compute > Duration::ZERO);
         assert!(metrics.percentile_us(0.99) >= metrics.percentile_us(0.50));
         // the histogram accounts for every job, none above the cap
         let accounted: u64 = (0..=8).map(|s| s as u64 * metrics.batches_of_size(s)).sum();
         assert_eq!(accounted, jobs);
         let report = metrics.report(wall);
-        for needle in ["p50=", "p99=", "queue-wait=", "compute=", "mean-batch="] {
+        for needle in [
+            "p50=",
+            "p99=",
+            "queue-wait=",
+            "compute=",
+            "mean-batch=",
+            "served=64",
+            "shed=0",
+            "timeouts=0",
+            "retries=0",
+            "restarts=0",
+            "fallback-plans=0",
+        ] {
             assert!(report.contains(needle), "report missing {needle}: {report}");
         }
         println!("load test: {report}");
+    }
+
+    #[test]
+    fn worker_panic_resolves_all_inflight_receivers() {
+        // the client-hang regression test: a panic mid-batch with several
+        // jobs in flight must resolve EVERY receiver with a typed error
+        // within the drain window — never strand a client on recv()
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0xBAD);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let faults = Faults::seeded(0xFA11)
+            .fail(FaultPoint::BatchCompute, FaultMode::Panic, 1, 1)
+            .build();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y,
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(40),
+                max_batch: 8,
+                backend: Backend::Native,
+                faults,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..5).map(|_| svc.submit(vec![0.5; m * k]).unwrap()).collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(10)) {
+                Some(Err(JobError::WorkerPanicked { detail })) => {
+                    assert!(detail.contains("BatchCompute"), "job {i}: {detail}");
+                }
+                Some(other) => panic!("job {i}: expected WorkerPanicked, got {other:?}"),
+                None => panic!("job {i}: receiver hung — the client-hang bug is back"),
+            }
+        }
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 5);
+        assert_eq!(metrics.errors, 5);
+        assert_eq!(metrics.served(), 0);
+        assert!(!metrics.worker_poisoned, "supervisor must keep the worker joinable");
+    }
+
+    #[test]
+    fn single_job_panic_escalates_and_respawns_worker() {
+        // a lone job panicking twice escalates to the supervisor; the
+        // respawned worker keeps serving over the SAME resident prepacked
+        // weight panels (pinned by resident_packs)
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0x5EED);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let mk_cfg = |faults: Faults| ServiceConfig {
+            m,
+            k,
+            n,
+            batch_window: Duration::from_millis(1),
+            max_batch: 1,
+            backend: Backend::Native,
+            faults,
+            ..ServiceConfig::default()
+        };
+        let faults = Faults::seeded(0x0DD)
+            .fail_n(FaultPoint::BatchCompute, FaultMode::Panic, 2)
+            .build();
+        let svc = Service::start(Path::new("no-artifacts"), y.clone(), mk_cfg(faults)).unwrap();
+        let rx = svc.submit(vec![0.5; m * k]).unwrap();
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Some(Err(JobError::WorkerPanicked { .. })) => {}
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+        // the respawned worker serves correctly (faults exhausted)
+        for _ in 0..3 {
+            let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+            let rx = svc.submit(x.clone()).unwrap();
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            let want = rowmajor_matmul(m, k, n, &x, &y);
+            let maxd = max_abs_diff(&got, &want);
+            assert!(maxd < 1e-3, "post-respawn result off by {maxd}");
+        }
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.worker_restarts, 1);
+        assert_eq!(metrics.jobs, 4);
+        assert_eq!(metrics.errors, 1);
+        assert_eq!(metrics.retries, 1, "one contained retry before escalation");
+        assert!(metrics.resident_packs > 0);
+        // pack discipline across the respawn: identical to a fault-free
+        // service of the same shape — the panels were never repacked
+        let clean = Service::start(Path::new("no-artifacts"), y, mk_cfg(Faults::none())).unwrap();
+        let (clean_metrics, _) = clean.stop();
+        assert_eq!(metrics.resident_packs, clean_metrics.resident_packs);
+    }
+
+    #[test]
+    fn deadline_sheds_stale_jobs_with_typed_error() {
+        // a deadline far shorter than the batch window: every job's queue
+        // wait exceeds it by dispatch time, so all are shed before
+        // compute — typed, counted as timeouts, NOT as errors
+        let (m, k, n) = (16usize, 12, 20);
+        let y: Vec<f32> = vec![0.5; k * n];
+        let deadline = Duration::from_millis(1);
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y,
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(120),
+                max_batch: 16,
+                backend: Backend::Native,
+                deadline: Some(deadline),
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..3).map(|_| svc.submit(vec![0.5; m * k]).unwrap()).collect();
+        for (i, rx) in rxs.iter().enumerate() {
+            match rx.recv_timeout(Duration::from_secs(10)) {
+                Some(Err(JobError::DeadlineExceeded { waited, deadline: dl })) => {
+                    assert!(waited >= deadline, "job {i}: waited {waited:?}");
+                    assert_eq!(dl, deadline);
+                }
+                other => panic!("job {i}: expected DeadlineExceeded, got {other:?}"),
+            }
+        }
+        let (metrics, wall) = svc.stop();
+        assert_eq!(metrics.jobs, 3);
+        assert_eq!(metrics.timeouts, 3);
+        assert_eq!(metrics.errors, 0, "shed jobs are timeouts, not errors");
+        assert_eq!(metrics.served(), 0);
+        assert!(metrics.report(wall).contains("timeouts=3"));
+    }
+
+    #[test]
+    fn stop_drains_queued_jobs_and_rejects_new_submissions() {
+        // graceful shutdown: jobs accepted before stop() are finished
+        // (not dropped), submissions after stop() are rejected typed
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0xD2A1);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(250),
+                max_batch: 4,
+                backend: Backend::Native,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let client = svc.client();
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        // stop immediately: the worker is still inside the 250ms batch
+        // window holding all four jobs — the drain must finish them
+        let (metrics, _) = svc.stop();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("drained job must resolve")
+                .expect("drained job must succeed");
+            let want = rowmajor_matmul(m, k, n, x, &y);
+            let maxd = max_abs_diff(&got, &want);
+            assert!(maxd < 1e-3, "drained result off by {maxd}");
+        }
+        assert_eq!(metrics.jobs, 4);
+        assert_eq!(metrics.errors, 0);
+        assert_eq!(metrics.timeouts, 0);
+        // new work after stop: typed rejection from both entry points
+        assert_eq!(
+            client.submit(vec![0.5; m * k]).err(),
+            Some(SubmitError::Stopped)
+        );
+        assert_eq!(
+            client
+                .submit_with_retry(vec![0.5; m * k], 4, Duration::from_micros(10))
+                .err(),
+            Some(SubmitError::Stopped),
+            "Stopped must not be retried"
+        );
+    }
+
+    #[test]
+    fn submit_with_retry_heals_transient_queue_full() {
+        // three consecutive injected QueueFull rejections: a plain submit
+        // fails typed, submit_with_retry backs off and lands the job
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0x9F);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let faults = Faults::seeded(0x0F11)
+            .fail_n(FaultPoint::QueueAccept, FaultMode::Error, 3)
+            .build();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(1),
+                backend: Backend::Native,
+                faults,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let client = svc.client();
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        // fault 1 of 3: the plain path surfaces the overload typed
+        assert_eq!(
+            client.submit(x.clone()).err(),
+            Some(SubmitError::QueueFull { cap: 256 })
+        );
+        // faults 2..3 then success: the retry path heals it
+        let rx = client
+            .submit_with_retry(x.clone(), 8, Duration::from_micros(50))
+            .expect("retry must outlast 2 remaining injected rejections");
+        let got = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+        let want = rowmajor_matmul(m, k, n, &x, &y);
+        let maxd = max_abs_diff(&got, &want);
+        assert!(maxd < 1e-3, "retried result off by {maxd}");
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 1);
+        assert_eq!(metrics.retries, 2);
+    }
+
+    #[test]
+    fn batch_failure_retries_jobs_one_at_a_time() {
+        // the degradation ladder: one injected batch-level error; every
+        // job in the failed batch is retried singly and still succeeds
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0x1ADD);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let faults = Faults::seeded(0xEBB)
+            .fail_n(FaultPoint::BatchCompute, FaultMode::Error, 1)
+            .build();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(40),
+                max_batch: 8,
+                backend: Backend::Native,
+                faults,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let xs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+        for (x, rx) in xs.iter().zip(rxs) {
+            let got = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("job must resolve")
+                .expect("ladder must serve every job despite the batch fault");
+            let want = rowmajor_matmul(m, k, n, x, &y);
+            let maxd = max_abs_diff(&got, &want);
+            assert!(maxd < 1e-3, "laddered result off by {maxd}");
+        }
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 5);
+        assert_eq!(metrics.errors, 0);
+        assert!(metrics.retries >= 1, "the failed batch must have retried");
+    }
+
+    #[test]
+    fn planner_fault_degrades_to_flat_plan_and_serves() {
+        // both startup plans (single-job and wide) panic inside the
+        // planner: start() must not fail — it degrades to the
+        // parameter-free flat plan and still serves correct results
+        let (m, k, n) = (45usize, 33, 52);
+        let mut rnd = xorshift_f32(0xF1A7);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let faults = Faults::seeded(0xFA11BACC)
+            .fail_n(FaultPoint::Plan, FaultMode::Panic, 2)
+            .build();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(1),
+                backend: Backend::Native,
+                faults,
+                ..ServiceConfig::default()
+            },
+        )
+        .expect("planner faults must degrade, not fail start()");
+        let plan = svc.plan().clone();
+        assert!(plan.plan_name.contains("fallback"), "{}", plan.plan_name);
+        assert_eq!(
+            (plan.level.mc, plan.level.kc, plan.level.nc),
+            (64, 64, 48),
+            "flat fallback geometry"
+        );
+        for _ in 0..3 {
+            let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+            let rx = svc.submit(x.clone()).unwrap();
+            let got = rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
+            let want = rowmajor_matmul(m, k, n, &x, &y);
+            let maxd = max_abs_diff(&got, &want);
+            assert!(maxd < 1e-3, "fallback-plan result off by {maxd}");
+        }
+        let (metrics, wall) = svc.stop();
+        assert_eq!(metrics.fallback_plans, 2);
+        assert!(metrics.report(wall).contains("fallback-plans=2"));
     }
 }

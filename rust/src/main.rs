@@ -18,7 +18,7 @@ use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
 use latticetile::codegen::{autotune, run_trace_only, DType, Scalar};
 use latticetile::conflict::MissModel;
-use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig, SubmitError};
+use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::domain::ops;
 use latticetile::experiments::{self, harness::Table};
 use latticetile::runtime::Registry;
@@ -59,6 +59,7 @@ USAGE:
   latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
                       [--backend pjrt|native] [--max-batch B] [--queue-cap Q]
                       [--threads T] [--clients C] [--window-ms W]
+                      [--deadline-ms D] [--inject-faults]
 
 --dtype selects the element type the model and the packed engine run at
 (f32 halves the element size, so plans get twice the elements per line
@@ -68,7 +69,11 @@ macro-kernel, no AOT artifacts needed; it coalesces up to --max-batch
 jobs per dispatch into one widened GEMM over the prepacked weights.
 --queue-cap bounds in-flight jobs (over-capacity submits are rejected),
 --clients runs that many concurrent client threads, and --window-ms is
-the batch window measured from the first job of a batch.
+the batch window measured from the first job of a batch. --deadline-ms
+sheds jobs whose queue wait exceeds D before compute (0 = no deadline);
+--inject-faults arms a deterministic chaos schedule (worker panics,
+batch errors, transient queue rejections) to demo the fault-tolerant
+runtime — it needs a build with --features fault-injection.
 
 The cache spec defaults to Intel Haswell L1d (32 KiB, 64 B lines, 8-way)."
     );
@@ -547,6 +552,27 @@ fn bench_policy() {
     t.print();
 }
 
+/// The demo chaos schedule behind `serve --inject-faults`: occasional
+/// worker panics (mid-batch and mid-pack) plus transient queue
+/// rejections, on a fixed seed so runs replay exactly.
+#[cfg(feature = "fault-injection")]
+fn chaos_faults() -> Option<latticetile::coordinator::Faults> {
+    use latticetile::coordinator::{FaultMode, FaultPoint, Faults};
+    Some(
+        Faults::seeded(0xC4A0_5EED)
+            .fail(FaultPoint::BatchCompute, FaultMode::Panic, 1, 8)
+            .fail(FaultPoint::Pack, FaultMode::Panic, 1, 16)
+            .fail(FaultPoint::QueueAccept, FaultMode::Error, 1, 8)
+            .build(),
+    )
+}
+
+#[cfg(not(feature = "fault-injection"))]
+fn chaos_faults() -> Option<latticetile::coordinator::Faults> {
+    eprintln!("--inject-faults needs a build with --features fault-injection");
+    None
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let dir = flags
         .get("artifacts")
@@ -568,6 +594,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let threads = geti(flags, "threads", 1).max(1) as usize;
     let clients = geti(flags, "clients", 1).max(1) as usize;
     let window_ms = geti(flags, "window-ms", 2).max(0) as u64;
+    let deadline_ms = geti(flags, "deadline-ms", 0).max(0) as u64;
+    let faults = if flags.contains_key("inject-faults") {
+        match chaos_faults() {
+            Some(f) => f,
+            None => return 2,
+        }
+    } else {
+        latticetile::coordinator::Faults::none()
+    };
     let backend = match flags.get("backend").map(|s| s.as_str()) {
         None | Some("pjrt") => Backend::Pjrt,
         Some("native") => Backend::Native,
@@ -609,6 +644,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             threads,
             spec: CacheSpec::HASWELL_L1D,
             backend,
+            deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            faults,
+            ..ServiceConfig::default()
         },
     )
     .expect("service start");
@@ -620,10 +658,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     let per_client = jobs.div_ceil(clients);
     let total = per_client * clients;
     let t0 = Instant::now();
+    let mut ok_total = 0u64;
+    let mut failed_total = 0u64;
     std::thread::scope(|scope| {
+        let mut handles = Vec::new();
         for c in 0..clients {
             let client = svc.client();
-            scope.spawn(move || {
+            handles.push(scope.spawn(move || {
                 let mut seed = 0x243F6A88u64 ^ ((c as u64 + 1) << 32);
                 let mut rnd = move || {
                     seed ^= seed << 13;
@@ -634,26 +675,46 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
                 let mut rxs = Vec::new();
                 for _ in 0..per_client {
                     let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
-                    let rx = loop {
-                        match client.submit(x.clone()) {
-                            Ok(rx) => break rx,
-                            Err(SubmitError::QueueFull { .. }) => {
-                                std::thread::sleep(Duration::from_micros(200))
-                            }
-                            Err(e) => panic!("submit failed: {e}"),
-                        }
-                    };
-                    rxs.push(rx);
+                    // queue pushback (real or injected) heals through
+                    // bounded jittered backoff
+                    match client.submit_with_retry(x, 16, Duration::from_micros(200)) {
+                        Ok(rx) => rxs.push(rx),
+                        Err(e) => panic!("submit failed: {e}"),
+                    }
                 }
+                let (mut ok, mut failed) = (0u64, 0u64);
                 for rx in rxs {
-                    rx.recv().expect("recv").expect("job ok");
+                    match rx.recv() {
+                        Ok(_) => ok += 1,
+                        // typed failures (shed deadlines, contained
+                        // panics under --inject-faults) are the expected
+                        // degraded outcomes, not client crashes
+                        Err(e) => {
+                            failed += 1;
+                            eprintln!("client {c}: job failed: {e}");
+                        }
+                    }
                 }
-            });
+                (ok, failed)
+            }));
+        }
+        for h in handles {
+            let (ok, failed) = h.join().unwrap_or((0, 0));
+            ok_total += ok;
+            failed_total += failed;
         }
     });
     let wall = t0.elapsed();
     let (metrics, _) = svc.stop();
-    println!("served {total} jobs ({m}x{k}x{n}) from {clients} client(s) in {wall:?}");
+    println!(
+        "served {ok_total}/{total} jobs ({m}x{k}x{n}) from {clients} client(s) in {wall:?}\
+         {}",
+        if failed_total > 0 {
+            format!(" — {failed_total} resolved with typed errors")
+        } else {
+            String::new()
+        }
+    );
     println!("{}", metrics.report(wall));
     0
 }

@@ -1,0 +1,248 @@
+//! Chaos suite for the fault-tolerant serving runtime (run with
+//! `cargo test --features fault-injection`).
+//!
+//! Each test arms a deterministic fault schedule
+//! ([`Faults::seeded`] — seeded xorshift, no wall-clock dependence) and
+//! drives the public serving API under it. The invariants are the
+//! failure model's containment contract:
+//!
+//! * **No receiver ever hangs** — every accepted job resolves with
+//!   `Ok(output)` or a typed [`JobError`] within the drain window.
+//! * **Survivors stay correct** — any `Ok` result matches the row-major
+//!   oracle exactly as in the fault-free tests.
+//! * **Metrics account exactly once** — `jobs` = accepted, `errors` =
+//!   panicked + backend-failed + stopped, `timeouts` = deadline-shed,
+//!   `served()` = the rest.
+//! * **Resident packs survive respawns** — the prepacked weight panels
+//!   are never rebuilt by a worker restart.
+
+#![cfg(feature = "fault-injection")]
+
+use std::path::Path;
+use std::time::Duration;
+
+use latticetile::coordinator::{
+    Backend, FaultMode, FaultPoint, Faults, JobError, Service, ServiceConfig,
+};
+
+fn rowmajor_matmul(m: usize, k: usize, n: usize, x: &[f32], y: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let xv = x[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += xv * y[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+fn xorshift_f32(seed: u64) -> impl FnMut() -> f32 {
+    let mut s = seed | 1;
+    move || {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        ((s % 1000) as f32 / 1000.0) - 0.5
+    }
+}
+
+#[derive(Default)]
+struct Outcomes {
+    ok: usize,
+    panicked: usize,
+    backend: usize,
+    deadline: usize,
+    stopped: usize,
+}
+
+/// Drive `jobs` submissions through a fault-armed native service and
+/// classify every resolution; panics if any receiver hangs past 10s.
+fn drive(
+    m: usize,
+    k: usize,
+    n: usize,
+    y: &[f32],
+    cfg: ServiceConfig,
+    jobs: usize,
+    seed: u64,
+) -> (Outcomes, latticetile::coordinator::Metrics) {
+    let svc = Service::start(Path::new("no-artifacts"), y.to_vec(), cfg)
+        .expect("chaos service must start");
+    let client = svc.client();
+    let mut rnd = xorshift_f32(seed);
+    let mut accepted: Vec<(Vec<f32>, _)> = Vec::new();
+    for _ in 0..jobs {
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        // bounded retry outlasts injected QueueAccept rejections with
+        // overwhelming probability; a final rejection is just "not
+        // accepted", never a hang
+        if let Ok(rx) = client.submit_with_retry(x.clone(), 16, Duration::from_micros(50)) {
+            accepted.push((x, rx));
+        }
+    }
+    let mut out = Outcomes::default();
+    for (i, (x, rx)) in accepted.iter().enumerate() {
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Some(Ok(got)) => {
+                let want = rowmajor_matmul(m, k, n, x, y);
+                let maxd = got
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0f32, f32::max);
+                assert!(maxd < 1e-3, "job {i}: surviving result off by {maxd}");
+                out.ok += 1;
+            }
+            Some(Err(JobError::WorkerPanicked { .. })) => out.panicked += 1,
+            Some(Err(JobError::Backend { .. })) => out.backend += 1,
+            Some(Err(JobError::DeadlineExceeded { .. })) => out.deadline += 1,
+            Some(Err(JobError::Stopped)) => out.stopped += 1,
+            None => panic!("job {i}: receiver hung under chaos — containment broken"),
+        }
+    }
+    let (metrics, _) = svc.stop();
+    assert_eq!(
+        metrics.jobs as usize,
+        accepted.len(),
+        "every accepted job accounts exactly once"
+    );
+    assert_eq!(
+        metrics.errors as usize,
+        out.panicked + out.backend + out.stopped,
+        "errors = panicked + backend + stopped"
+    );
+    assert_eq!(metrics.timeouts as usize, out.deadline, "timeouts = deadline-shed");
+    assert_eq!(metrics.served() as usize, out.ok, "served = ok resolutions");
+    assert!(!metrics.worker_poisoned, "the supervisor must keep the worker joinable");
+    (out, metrics)
+}
+
+fn base_cfg(m: usize, k: usize, n: usize, faults: Faults) -> ServiceConfig {
+    ServiceConfig {
+        m,
+        k,
+        n,
+        batch_window: Duration::from_millis(2),
+        max_batch: 4,
+        backend: Backend::Native,
+        faults,
+        ..ServiceConfig::default()
+    }
+}
+
+#[test]
+fn chaos_sweep_every_fault_point_resolves_and_accounts() {
+    let (m, k, n) = (16usize, 12, 20);
+    let mut rnd = xorshift_f32(0xC4A05);
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    let schedule: [(FaultPoint, FaultMode, u64, u64); 5] = [
+        (FaultPoint::BatchCompute, FaultMode::Panic, 1, 3),
+        (FaultPoint::BatchCompute, FaultMode::Error, 1, 3),
+        (FaultPoint::Pack, FaultMode::Panic, 1, 4),
+        (FaultPoint::QueueAccept, FaultMode::Error, 1, 4),
+        (FaultPoint::Plan, FaultMode::Error, 1, 1),
+    ];
+    for (i, (point, mode, num, den)) in schedule.into_iter().enumerate() {
+        let faults = Faults::seeded(0x5EED0 + i as u64).fail(point, mode, num, den).build();
+        let (out, metrics) = drive(
+            m,
+            k,
+            n,
+            &y,
+            base_cfg(m, k, n, faults),
+            32,
+            0xD01 + i as u64,
+        );
+        println!(
+            "{point:?}/{mode:?} {num}/{den}: ok={} panicked={} backend={} \
+             restarts={} retries={}",
+            out.ok, out.panicked, out.backend, metrics.worker_restarts, metrics.retries
+        );
+        match point {
+            // plan faults hit only the two startup plans: full fallback,
+            // zero serve-time casualties
+            FaultPoint::Plan => {
+                assert_eq!(metrics.fallback_plans, 2);
+                assert_eq!(out.ok as u64, metrics.jobs);
+            }
+            // admission faults reject at the door; accepted jobs all serve
+            FaultPoint::QueueAccept => {
+                assert_eq!(out.ok as u64, metrics.jobs);
+                assert!(metrics.retries > 0, "retry backoff must have engaged");
+            }
+            // compute/pack faults cost jobs but the ladder and the
+            // supervisor keep the service alive and serving
+            _ => assert!(out.ok > 0, "{point:?}: chaos must not kill the service"),
+        }
+    }
+}
+
+#[test]
+fn chaos_respawn_preserves_resident_packed_panels() {
+    let (m, k, n) = (16usize, 12, 20);
+    let mut rnd = xorshift_f32(0x9E5B);
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    // panic often enough that several lone-job double failures (and
+    // therefore escalations to a worker respawn) happen across 32 jobs;
+    // max_batch 1 keeps the check sequence independent of batch timing
+    let faults = Faults::seeded(0xBEE)
+        .fail(FaultPoint::BatchCompute, FaultMode::Panic, 1, 2)
+        .build();
+    let cfg = ServiceConfig {
+        max_batch: 1,
+        ..base_cfg(m, k, n, faults)
+    };
+    let (out, chaotic) = drive(m, k, n, &y, cfg, 32, 0xF00D);
+    assert!(chaotic.worker_restarts >= 1, "the schedule must force a respawn");
+    assert!(out.panicked >= 1);
+    // pack discipline across respawns: identical resident pack count to
+    // a fault-free service of the same shape — the supervisor reuses the
+    // startup-prepacked weight panels, it never rebuilds them
+    let clean_cfg = ServiceConfig {
+        max_batch: 1,
+        ..base_cfg(m, k, n, Faults::none())
+    };
+    let (_, clean) = drive(m, k, n, &y, clean_cfg, 4, 0xF00E);
+    assert_eq!(clean.worker_restarts, 0);
+    assert!(clean.resident_packs > 0);
+    assert_eq!(chaotic.resident_packs, clean.resident_packs);
+}
+
+#[test]
+fn chaos_kitchen_sink_multi_point_with_deadline() {
+    // every fault point armed at once, a tight deadline, and a burst of
+    // jobs: the union of all degraded outcomes still accounts exactly and
+    // leaves no receiver hanging
+    let (m, k, n) = (24usize, 18, 30);
+    let mut rnd = xorshift_f32(0x51C8);
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    let faults = Faults::seeded(0xA11F4)
+        .fail(FaultPoint::BatchCompute, FaultMode::Error, 1, 6)
+        .fail(FaultPoint::Pack, FaultMode::Panic, 1, 8)
+        .fail(FaultPoint::QueueAccept, FaultMode::Error, 1, 6)
+        .fail(FaultPoint::Plan, FaultMode::Error, 1, 2)
+        .build();
+    let cfg = ServiceConfig {
+        deadline: Some(Duration::from_millis(250)),
+        ..base_cfg(m, k, n, faults)
+    };
+    let (out, metrics) = drive(m, k, n, &y, cfg, 48, 0xCAFE);
+    println!(
+        "kitchen sink: ok={} panicked={} backend={} deadline={} stopped={} \
+         restarts={} retries={} fallback-plans={}",
+        out.ok,
+        out.panicked,
+        out.backend,
+        out.deadline,
+        out.stopped,
+        metrics.worker_restarts,
+        metrics.retries,
+        metrics.fallback_plans
+    );
+    assert!(out.ok > 0, "some jobs must survive the combined chaos");
+    let report = metrics.report(Duration::from_secs(1));
+    assert!(report.contains("served="), "{report}");
+    assert!(report.contains("restarts="), "{report}");
+}

@@ -117,7 +117,7 @@ fn coordinator_serves_burst_correctly() {
         .collect();
     let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
     for (idx, rx) in rxs.into_iter().enumerate() {
-        let got = rx.recv().unwrap().unwrap();
+        let got = rx.recv().unwrap();
         // spot-check one output element exactly
         let mut want0 = 0f32;
         for kk in 0..k {
@@ -195,6 +195,10 @@ fn cli_subcommands_smoke() {
     let help = run(&["help"]);
     assert!(help.contains("USAGE"));
     assert!(help.contains("--dtype"), "usage must document --dtype");
+    assert!(
+        help.contains("--deadline-ms") && help.contains("--inject-faults"),
+        "usage must document the robustness flags"
+    );
 }
 
 /// The native f32 serve backend works end to end with no artifacts at
@@ -228,7 +232,7 @@ fn native_serve_backend_end_to_end() {
         .collect();
     let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
     for (idx, rx) in rxs.into_iter().enumerate() {
-        let got = rx.recv().unwrap().unwrap();
+        let got = rx.recv().unwrap();
         // full-row check against an exact f64 accumulation oracle
         for j in 0..n {
             let mut want = 0f64;
