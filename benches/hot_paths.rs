@@ -213,6 +213,33 @@ fn main() {
         "parallel super-band path diverged from the serial engine"
     );
 
+    // the same schedule with the pack-ahead pipeline (and stealing)
+    // switched off: each worker packs its stage, then computes it, in
+    // strict alternation. The tracked ratio between the pipelined row
+    // above and this one is the parallel efficiency the software
+    // pipeline buys at t=4 (check_bench ratchets it as a ratio floor).
+    let mut bufs = KernelBuffers::<f64>::from_kernel(&kernel);
+    let t0 = Instant::now();
+    latticetile::codegen::run_parallel_macro_tuned(
+        &mut bufs,
+        &kernel,
+        &sched,
+        threads,
+        None,
+        latticetile::codegen::MicroShape::Mr8Nr4,
+        latticetile::codegen::ParallelTuning::synchronous(),
+    );
+    let sync_label = if quick {
+        format!("parallel super-band matmul sync n={big} t={threads}")
+    } else {
+        format!("parallel super-band matmul sync t={threads}")
+    };
+    res.rate(&sync_label, (big as u64).pow(3), t0.elapsed());
+    assert!(
+        max_abs_diff(&want, &bufs.output()) < 1e-9,
+        "synchronous parallel path diverged from the serial engine"
+    );
+
     // Table-1 workload diversity: convolution and Kronecker through the
     // same packed micro/macro engine (kernel-agnostic RunPlan path) —
     // tracked from day one so the generalized engine can't regress

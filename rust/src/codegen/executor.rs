@@ -23,7 +23,7 @@ use crate::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 use super::autotune::MicroShape;
 use super::microkernel::{axpy_block, dot_update, AXPY_MAX_COLS};
-use super::pack::{run_macro_block, PackBuffers, PackedCols, PackedRows};
+use super::pack::{run_macro_block, PackBuffers, PackStage, PackedCols, PackedRows, StageKey};
 use super::runplan::{kernel_views, GemmForm, OperandView, RunPlan};
 use super::scalar::Scalar;
 
@@ -721,6 +721,89 @@ pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
         }
     }
     (row_packs, col_packs)
+}
+
+/// Pack one pipeline stage — `key`'s row slice (unless the nest reads
+/// resident rows: `pack_rows = false`) plus every `nc` column band of
+/// `key`'s column range — into `stage`. This is [`run_super_band`]'s
+/// per-`kc`-step packing half, split out so the pipelined scheduler can
+/// run it on the pack-ahead path (filling stage `k0+kc` while the
+/// microkernel streams stage `k0`) against a **read-only** view of the
+/// arena: it touches input-operand bytes only, which no thread writes
+/// during a run. Returns `(row_slice_packs, col_band_packs)` with the
+/// same per-call accounting as [`run_super_band`].
+pub(crate) fn pack_super_band_stage<T: Scalar, const NRW: usize>(
+    arena: &[T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    stage: &mut PackStage<T>,
+    key: StageKey,
+    pack_rows: bool,
+) -> (u64, u64) {
+    let mc = lp.mc.max(1);
+    let nc = lp.nc.max(1);
+    let (mut row_packs, mut col_packs) = (0u64, 0u64);
+    stage.invalidate();
+    if pack_rows {
+        stage
+            .rows
+            .pack_slice_range(arena, plan, mc, key.r0, key.rows, key.k0, key.kcc);
+        row_packs += 1;
+    }
+    let mut slot = 0usize;
+    for j0 in (key.j3..key.j3 + key.n3c).step_by(nc) {
+        let ncc = (j0 + nc).min(key.j3 + key.n3c) - j0;
+        // chaos hook: a scoped fault schedule may panic here to model a
+        // failure mid-pack (no-op unless test/fault-injection)
+        crate::coordinator::faults::raise_if(crate::coordinator::faults::FaultPoint::Pack);
+        if stage.cols.len() == slot {
+            stage.cols.push(PackedCols::new());
+        }
+        stage.cols[slot].pack_band::<NRW>(arena, plan, key.k0, key.kcc, j0, ncc);
+        stage.bands.push((j0, ncc));
+        col_packs += 1;
+        slot += 1;
+    }
+    stage.set_key(key);
+    (row_packs, col_packs)
+}
+
+/// Stream one packed pipeline stage through the microkernel —
+/// [`run_super_band`]'s compute half. `key` names the schedule step the
+/// caller expects; it must equal the stage's packed key (the rotation
+/// replay guard). `resident` switches the row source: `Some(rows)` reads
+/// whole-extent resident slices (`rows[key.si]`, blocks
+/// `[blocks.start, blocks.end)` absolute — the prepacked nest), `None`
+/// reads the stage's own row slice (blocks relative to the packed
+/// range). The band → block order is exactly the synchronous nest's
+/// `j0 → bi` order, so every output element accumulates its `kc` slices
+/// in the same ascending-`k0` sequence as the serial schedule — the
+/// pipeline reorders packing, never accumulation.
+pub(crate) fn compute_super_band_stage<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    stage: &PackStage<T>,
+    key: &StageKey,
+    resident: Option<&[PackedRows<T>]>,
+    blocks: std::ops::Range<usize>,
+) {
+    assert_eq!(
+        stage.key(),
+        Some(key),
+        "pipeline stage panels do not match the schedule step"
+    );
+    let l1 = (lp.l1_tile.0, lp.l1_tile.1);
+    for (slot, &(j0, _ncc)) in stage.bands.iter().enumerate() {
+        let band = &stage.cols[slot];
+        for bi in blocks.clone() {
+            let block = match resident {
+                Some(rows) => rows[key.si].block(bi),
+                None => stage.rows.block(bi),
+            };
+            run_macro_block::<T, NRW>(block, band, plan, j0, l1, arena);
+        }
+    }
 }
 
 /// Pre-pack every `kc` reduction slice of the plan's row operand — for

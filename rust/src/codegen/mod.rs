@@ -58,13 +58,14 @@
 //!   super-band level bounds the packed row slice to `m3×kc` so
 //!   L3-exceeding row extents stop thrashing the last-level cache, and
 //!   it is the parallel unit: [`parallel::run_parallel_macro`] hands
-//!   whole super-bands to workers from an atomic queue, each worker
-//!   packing its **own** row slice and column bands (nothing packed is
-//!   shared), so serial and parallel traces walk one schedule. The serve
-//!   engine's variant ([`parallel::run_parallel_macro_prepacked`]) flips
-//!   exactly one of those rules: workers share the startup-resident
-//!   [`pack::PackedRows`] read-only (weights are packed once per process,
-//!   not once per band) and still own their column bands; with
+//!   whole super-bands to workers from a claim board with sticky
+//!   worker↔band affinity, each worker packing its **own** row slice and
+//!   column bands (nothing packed is shared), so serial and parallel
+//!   traces walk one schedule. The serve engine's variant
+//!   ([`parallel::run_parallel_macro_prepacked`]) flips exactly one of
+//!   those rules: workers share the startup-resident [`pack::PackedRows`]
+//!   read-only (weights are packed once per process, not once per band)
+//!   and still own their column bands; with
 //!   [`executor::run_macro_prepacked_cols`] it also executes a **column
 //!   prefix** of the plan, which is how a partially full coalesced batch
 //!   runs the m·B-wide serve kernel without replanning. The
@@ -80,6 +81,53 @@
 //!   kernel per tile ([`executor::ReplayPlan`]); kernels outside the
 //!   GEMM class fall back to exact per-point evaluation through the
 //!   views.
+//!
+//! ## The double-buffered pack-ahead pipeline
+//!
+//! Inside one claimed super-band the parallel engine default is a
+//! **two-stage software pipeline** ([`parallel::ParallelTuning`]): each
+//! worker owns two [`pack::PackStage`] buffer sets and a companion pack
+//! thread, and whole stage sets circulate between them through a channel
+//! pair — requests carry an inert set to the packer, results bring it
+//! back holding stage `k0`'s panels, stamped with the
+//! [`pack::StageKey`] the worker asked for (the rotation replay guard).
+//! Ownership at every instant is total and exclusive:
+//!
+//! ```text
+//!             worker (compute)                companion (pack)
+//!             ────────────────                ────────────────
+//!   stage A   streaming k0      ◄── done ──   (handed back, packed k0)
+//!   stage B   (sent away)       ── req k0+kc ►  filling k0+kc panels
+//!
+//!   next kc step: A and B swap roles — A refills k0+2kc while B streams
+//! ```
+//!
+//! A buffer set is therefore *either* being streamed by the worker *or*
+//! being filled by the packer, never both — the handoff is move-based, so
+//! there is no shared aliasing to reason about, and the packer needs only
+//! a **read-only** arena view (packing touches input-operand bytes,
+//! which nothing writes during a run). In steady state the `k0+kc`
+//! panels are already waiting when the worker finishes streaming `k0`
+//! ([`parallel::ParallelMacroStats::pack_ahead_hits`] counts exactly
+//! those non-stalling steps), so pack latency leaves the critical path.
+//!
+//! **Why accumulation order is untouched:** the pipeline reorders
+//! *packing* — stage `k0+kc`'s copies may run concurrently with (even
+//! before) stage `k0`'s FMAs — but the worker still *streams* stages
+//! strictly in ascending `k0`, and within a stage walks the identical
+//! `j0 → bi` band/block order as the synchronous nest. Every output
+//! element accumulates its `kc` slices in exactly the serial sequence,
+//! so pipelined results are bitwise identical to the serial macro-kernel
+//! (the differential suite pins this per dtype). The same argument
+//! covers sub-band **work stealing**: when the claim board drains, an
+//! idle worker takes the tail half of a busy worker's remaining
+//! `mc`-row blocks at a `kc` *stage boundary* — the stolen rows have
+//! completed every stage below the boundary and continue ascending from
+//! it on the thief, so each element's reduction order is still the
+//! serial one. Stealing does re-pack the stolen rows' panels on the
+//! thief, which is why pack *totals* are exact schedule invariants only
+//! under [`parallel::ParallelTuning::deterministic`] (pipeline on,
+//! stealing off — the serve default).
 //!
 //! The element size also flows *upward* from here: the tile selectors
 //! ([`crate::tiling::level_plan`], [`LevelPlan::heuristic`]) take it into
@@ -114,10 +162,13 @@ pub use executor::{
     tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
 };
 pub use microkernel::{dot_update, MR, NR, NR_WIDE};
-pub use pack::{run_macro_block, PackBuffers, PackedBlock, PackedCols, PackedRows};
+pub use pack::{
+    run_macro_block, PackBuffers, PackStage, PackedBlock, PackedCols, PackedRows, StageKey,
+};
 pub use parallel::{
-    run_parallel, run_parallel_macro, run_parallel_macro_prepacked, run_parallel_macro_stats,
-    run_parallel_micro, ParallelMacroStats,
+    run_parallel, run_parallel_macro, run_parallel_macro_prepacked,
+    run_parallel_macro_prepacked_tuned, run_parallel_macro_stats, run_parallel_macro_tuned,
+    run_parallel_micro, ParallelMacroStats, ParallelTuning,
 };
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,

@@ -434,6 +434,85 @@ impl<T: Scalar> PackedCols<T> {
     }
 }
 
+/// Identity of the panels a [`PackStage`] currently holds: the reduction
+/// slice `[k0, k0+kcc)`, plan row range `[r0, r0+rows)` and output
+/// column range `[j3, j3+n3c)` they were packed for, plus the resident
+/// slice index `si` (prepacked nests; 0 otherwise). The pipelined
+/// scheduler rotates two stages per worker between the pack-ahead and
+/// compute roles; the compute side asserts the key of the stage it is
+/// about to stream equals the schedule step it expects, so a rotated
+/// buffer set can never replay a stale stage's panels (the macro-level
+/// analogue of [`PackBuffers`]' source-identity cache keys).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StageKey {
+    /// First reduction step of the stage's `kc` slice.
+    pub k0: usize,
+    /// Clipped depth of the slice.
+    pub kcc: usize,
+    /// First plan row of the packed row range.
+    pub r0: usize,
+    /// Row count of the packed row range.
+    pub rows: usize,
+    /// First output column of the stage's column bands.
+    pub j3: usize,
+    /// Column count covered by the stage's bands.
+    pub n3c: usize,
+    /// Resident row-slice index (`k0 / kc`) for prepacked nests.
+    pub si: usize,
+}
+
+/// One software-pipeline stage's packed operands: the row slice and all
+/// `nc` column bands of one `kc` step of one super-band, owned as a unit
+/// so the pack-ahead path can fill stage `k0+kc` while the microkernel
+/// streams stage `k0`. Each pipelined worker owns **two** of these and
+/// rotates them between the roles; buffers are reused across stages and
+/// bands, so steady-state packing performs no allocation. A stage is
+/// inert (no key) until a pack fills it, and invalidated before refill —
+/// see [`StageKey`] for the replay guard.
+#[derive(Clone, Debug, Default)]
+pub struct PackStage<T: Scalar = f64> {
+    /// The stage's row slice (unused when the nest reads resident rows).
+    pub(crate) rows: PackedRows<T>,
+    /// One packed band per `nc` column band of the stage (reused slots;
+    /// only the first `bands.len()` are live).
+    pub(crate) cols: Vec<PackedCols<T>>,
+    /// `(j0, ncc)` of each live column band.
+    pub(crate) bands: Vec<(usize, usize)>,
+    key: Option<StageKey>,
+}
+
+impl<T: Scalar> PackStage<T> {
+    pub fn new() -> PackStage<T> {
+        PackStage::default()
+    }
+
+    /// The key of the currently packed stage, `None` while inert.
+    pub fn key(&self) -> Option<&StageKey> {
+        self.key.as_ref()
+    }
+
+    /// Drop the stage identity (entering a refill).
+    pub(crate) fn invalidate(&mut self) {
+        self.key = None;
+        self.bands.clear();
+    }
+
+    /// Stamp the stage as holding `key`'s panels (leaving a refill).
+    pub(crate) fn set_key(&mut self, key: StageKey) {
+        self.key = Some(key);
+    }
+
+    /// Total packs performed through this stage's buffers over its
+    /// lifetime: (`mc`-row block packs — [`PackedRows::pack_count`]'s
+    /// granularity — and column-band packs).
+    pub fn pack_counts(&self) -> (u64, u64) {
+        (
+            self.rows.pack_count(),
+            self.cols.iter().map(|c| c.pack_count()).sum(),
+        )
+    }
+}
+
 /// Drive the `MR×NRW` micro-engine over all L1 tiles of one macro block,
 /// straight from packed panels: `block` is one [`PackedRows`] block,
 /// `cols` one [`PackedCols`] band of `nc` live columns starting at plan

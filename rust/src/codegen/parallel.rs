@@ -6,17 +6,41 @@
 //! Rect schedules of GEMM-form kernels run the three-level macro-kernel
 //! with parallelism over whole `m3×n3` **L3 super-bands** (mc-aligned
 //! GEMM row ranges × nc-aligned column ranges sized against the L3
-//! slice): workers claim super-bands from an atomic work queue and each
-//! worker packs its **own** row slice ([`PackedRows`]) for its band's
-//! row range per `kc` step, plus its own column bands ([`PackedCols`]) —
-//! both packed operands stay local to the worker (and socket) that
-//! streams them, which is what keeps them from ping-ponging across the
-//! last-level cache on many-core hosts. Super-bands are disjoint output
-//! element sets (the kernel's output map is injective per
-//! (row, column)), so no write races occur; each worker runs its band's
-//! whole reduction, preserving the serial per-element accumulation
-//! order. This is the paper's `omp parallel for` over the outer tile
-//! loop, lifted from L1 tiles to L3-sized output blocks.
+//! slice): workers claim super-bands from a shared claim board —
+//! preferring bands adjacent to their last claim (sticky worker↔band
+//! affinity, the NUMA-friendly ordering) — and each worker packs its
+//! **own** row slice ([`PackedRows`]) for its band's row range per `kc`
+//! step, plus its own column bands ([`PackedCols`]); both packed
+//! operands stay local to the worker (and socket) that streams them,
+//! which is what keeps them from ping-ponging across the last-level
+//! cache on many-core hosts. Super-bands are disjoint output element
+//! sets (the kernel's output map is injective per (row, column)), so no
+//! write races occur; each worker runs its band's whole reduction,
+//! preserving the serial per-element accumulation order. This is the
+//! paper's `omp parallel for` over the outer tile loop, lifted from L1
+//! tiles to L3-sized output blocks.
+//!
+//! Within one claimed band the default schedule is a **two-stage
+//! software pipeline** ([`ParallelTuning::pipeline`]): each worker owns
+//! two [`PackStage`] buffer sets and a companion pack thread; while the
+//! microkernel streams stage `k0`'s panels, the companion fills stage
+//! `k0+kc`'s row slice and column bands into the other set, so
+//! steady-state `kc` steps never stall on packing
+//! ([`ParallelMacroStats::pack_ahead_hits`] counts the steps whose
+//! panels were ready on arrival). The handoff moves whole stage sets
+//! through channels — the buffers are never aliased, and the pipeline
+//! reorders *packing only*: every output element still accumulates its
+//! `kc` slices in ascending-`k0` order, bitwise identical to the serial
+//! nest. When the claim board drains, idle workers **steal `mc`-block
+//! subranges** of a busy worker's band ([`ParallelTuning::steal`]): the
+//! victim publishes the tail half of its remaining row blocks at a `kc`
+//! stage boundary, the thief finishes those rows' remaining stages as an
+//! independent sub-band (stages below the boundary are complete and
+//! published under the offer lock, so per-element ascending-`k0` order
+//! survives the handoff). A steal re-packs the stolen rows' panels on
+//! the thief — the deliberate price for not serializing on a skewed
+//! band's tail — so pack totals are exact schedule invariants only with
+//! stealing off (see [`ParallelTuning::deterministic`]).
 //!
 //! Skewed schedules keep the footpoint partition: tile interiors run
 //! through the same packing + microkernel engine as the serial
@@ -29,15 +53,21 @@
 //! degenerate `m = n = 1` boxes run the dot microkernel, not the panel
 //! engine.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Mutex;
 
 use crate::cache::CacheSpec;
+use crate::coordinator::faults;
 use crate::domain::Kernel;
 use crate::tiling::{LevelPlan, TiledSchedule};
 
 use super::autotune::MicroShape;
-use super::executor::{box_key, run_rect_box, KernelBuffers, ReplayPlan, ReplayScratch};
-use super::pack::{PackBuffers, PackedCols, PackedRows};
+use super::executor::{
+    box_key, compute_super_band_stage, pack_super_band_stage, run_rect_box, run_super_band,
+    run_super_band_prepacked, KernelBuffers, ReplayPlan, ReplayScratch,
+};
+use super::pack::{PackBuffers, PackStage, PackedCols, PackedRows, StageKey};
 use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
 use super::scalar::Scalar;
 
@@ -248,8 +278,78 @@ pub struct ParallelMacroStats {
     /// super-band per `kc` step, independent of the thread count.
     pub row_slice_packs: u64,
     /// Column-band packs summed over workers: one per `nc` band inside a
-    /// claimed super-band per `kc` step.
+    /// claimed super-band per `kc` step (plus the stolen subranges'
+    /// re-packs when stealing fired — see [`ParallelMacroStats::steals`]).
     pub col_band_packs: u64,
+    /// Steady-state pipeline steps whose pack-ahead panels were already
+    /// filled when the compute side finished the previous stage — the
+    /// software pipeline's overlap wins. Always 0 with the pipeline off;
+    /// timing-dependent (an upper bound of `kc` steps minus one per
+    /// band-claim) with it on.
+    pub pack_ahead_hits: u64,
+    /// Sub-band steals executed: an idle worker took the tail half of a
+    /// busy worker's remaining `mc` row blocks at a `kc` stage boundary.
+    /// Deterministically 0 with one worker (nobody to steal from) or
+    /// with [`ParallelTuning::steal`] off; each steal adds one extra
+    /// pack region (the stolen rows' remaining stages re-pack on the
+    /// thief).
+    pub steals: u64,
+}
+
+/// Scheduler policy knobs of the parallel macro-kernel. The default is
+/// the full pipelined scheduler (pack-ahead double buffering **and**
+/// sub-band work stealing); [`ParallelTuning::deterministic`] keeps the
+/// pipeline but disables stealing so pack totals stay exact schedule
+/// invariants (what the serve path and the pack-discipline tests use);
+/// [`ParallelTuning::synchronous`] is the legacy pack-then-compute
+/// worker loop (the bench baseline the pipelined schedule is gated
+/// against). Stealing requires the pipeline (steals hand off at its
+/// stage boundaries), so `steal` is ignored when `pipeline` is off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelTuning {
+    /// Double-buffered pack-ahead: overlap stage `k0+kc` packing with
+    /// stage `k0` compute on a companion pack thread per worker.
+    pub pipeline: bool,
+    /// Steal `mc`-block subranges of busy workers' bands once the claim
+    /// board drains.
+    pub steal: bool,
+}
+
+impl Default for ParallelTuning {
+    fn default() -> ParallelTuning {
+        ParallelTuning {
+            pipeline: true,
+            steal: true,
+        }
+    }
+}
+
+impl ParallelTuning {
+    /// The legacy synchronous worker loop: pack, then compute, per `kc`
+    /// step — no companion threads, no stealing.
+    pub fn synchronous() -> ParallelTuning {
+        ParallelTuning {
+            pipeline: false,
+            steal: false,
+        }
+    }
+
+    /// Pipelined packing with stealing off: pack totals stay exact
+    /// schedule invariants (one row slice per band per `kc` step, one
+    /// column band per (band, `kc` step, `nc` band)) at every thread
+    /// count.
+    pub fn deterministic() -> ParallelTuning {
+        ParallelTuning {
+            pipeline: true,
+            steal: false,
+        }
+    }
+
+    /// Is sub-band stealing effectively on? (It rides the pipeline's
+    /// stage boundaries.)
+    fn steals_enabled(&self) -> bool {
+        self.pipeline && self.steal
+    }
 }
 
 /// The macro-kernel parallel path, scheduled at L3 granularity: the
@@ -294,6 +394,30 @@ pub fn run_parallel_macro_stats<T: Scalar>(
     threads: usize,
     level: Option<LevelPlan>,
     micro: MicroShape,
+) -> ParallelMacroStats {
+    run_parallel_macro_tuned(
+        bufs,
+        kernel,
+        schedule,
+        threads,
+        level,
+        micro,
+        ParallelTuning::default(),
+    )
+}
+
+/// [`run_parallel_macro_stats`] with explicit scheduler policy — see
+/// [`ParallelTuning`] for the modes (full pipelined default, pipelined
+/// deterministic, legacy synchronous).
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_tuned<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    level: Option<LevelPlan>,
+    micro: MicroShape,
+    tuning: ParallelTuning,
 ) -> ParallelMacroStats {
     assert!(threads >= 1);
     let basis = schedule.basis();
@@ -354,76 +478,17 @@ pub fn run_parallel_macro_stats<T: Scalar>(
         lp.m3 = m3;
         lp.n3 = n3;
     }
-    let (m3, n3) = super::executor::super_band_extents(&lp);
-    let n_i3 = plan.m.div_ceil(m3);
-    let n_j3 = plan.n.div_ceil(n3);
-    let n_sb = n_i3 * n_j3;
-    let workers = threads.min(n_sb);
-    let arena_len = bufs.arena.len();
-    let plan = &plan;
-    let lp = &lp;
-    let next = AtomicUsize::new(0);
-    let row_packs = AtomicU64::new(0);
-    let col_packs = AtomicU64::new(0);
-    let arena_ptr = SendPtr(bufs.arena.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = &next;
-            let row_packs = &row_packs;
-            let col_packs = &col_packs;
-            let arena_ptr = &arena_ptr;
-            scope.spawn(move || {
-                // thread-local pack buffers: the claimed band's row slice
-                // and column bands are packed (and re-used) here, never
-                // shared with another worker
-                let mut rows = PackedRows::<T>::new();
-                let mut cols = PackedCols::<T>::new();
-                let (mut rp, mut cp) = (0u64, 0u64);
-                loop {
-                    let b = next.fetch_add(1, Ordering::Relaxed);
-                    if b >= n_sb {
-                        break;
-                    }
-                    let i3 = (b % n_i3) * m3;
-                    let j3 = (b / n_i3) * n3;
-                    let m3c = m3.min(plan.m - i3);
-                    let n3c = n3.min(plan.n - j3);
-                    // SAFETY: super-bands are disjoint output element
-                    // sets (row range × column range through an injective
-                    // output map, checked above) and the inputs are
-                    // read-only during the run, so each arena element is
-                    // written by at most one thread.
-                    let arena: &mut [T] =
-                        unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
-                    let (r, c) = match T::nr(micro) {
-                        4 => super::executor::run_super_band::<T, 4>(
-                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        6 => super::executor::run_super_band::<T, 6>(
-                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        8 => super::executor::run_super_band::<T, 8>(
-                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        12 => super::executor::run_super_band::<T, 12>(
-                            arena, plan, lp, &mut rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        w => unreachable!("unsupported register-tile width {w}"),
-                    };
-                    rp += r;
-                    cp += c;
-                }
-                row_packs.fetch_add(rp, Ordering::Relaxed);
-                col_packs.fetch_add(cp, Ordering::Relaxed);
-            });
-        }
-    });
-    ParallelMacroStats {
-        super_bands: n_sb,
-        workers,
-        row_slice_packs: row_packs.load(Ordering::Relaxed),
-        col_band_packs: col_packs.load(Ordering::Relaxed),
-    }
+    run_macro_workers(
+        SendPtr(bufs.arena.as_mut_ptr()),
+        bufs.arena.len(),
+        &plan,
+        &lp,
+        micro,
+        None,
+        plan.n,
+        threads,
+        tuning,
+    )
 }
 
 /// The pre-packed serve nest ([`run_macro_prepacked_cols`]) under the
@@ -455,6 +520,36 @@ pub fn run_parallel_macro_prepacked<T: Scalar>(
     threads: usize,
     n_used: usize,
 ) -> ParallelMacroStats {
+    // the serve default: pipelined pack-ahead, stealing off — serving
+    // keeps the exact per-band pack discipline (and so deterministic
+    // per-request work) that the coalescing layer's tests pin
+    run_parallel_macro_prepacked_tuned(
+        arena,
+        kernel,
+        plan,
+        lp,
+        micro,
+        rows,
+        threads,
+        n_used,
+        ParallelTuning::deterministic(),
+    )
+}
+
+/// [`run_parallel_macro_prepacked`] with explicit scheduler policy (the
+/// benches race synchronous vs pipelined through this).
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_prepacked_tuned<T: Scalar>(
+    arena: &mut [T],
+    kernel: &Kernel,
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    threads: usize,
+    n_used: usize,
+    tuning: ParallelTuning,
+) -> ParallelMacroStats {
     assert!(threads >= 1);
     assert!(n_used <= plan.n, "column prefix exceeds the plan");
     if plan.m == 0 || n_used == 0 || plan.k == 0 {
@@ -480,72 +575,570 @@ pub fn run_parallel_macro_prepacked<T: Scalar>(
         gf.output_injective(&views, kernel.extents()),
         "prepacked parallel bands need an injective output map"
     );
-    let (m3, n3) = super::executor::super_band_extents(lp);
-    let n_i3 = plan.m.div_ceil(m3);
-    let n_j3 = n_used.div_ceil(n3);
-    let n_sb = n_i3 * n_j3;
-    let workers = threads.min(n_sb);
-    let arena_len = arena.len();
-    let next = AtomicUsize::new(0);
-    let col_packs = AtomicU64::new(0);
-    let arena_ptr = SendPtr(arena.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let next = &next;
-            let col_packs = &col_packs;
-            let arena_ptr = &arena_ptr;
-            scope.spawn(move || {
-                // thread-local column bands; the resident row slices are
-                // shared read-only across all workers
-                let mut cols = PackedCols::<T>::new();
-                let mut cp = 0u64;
-                loop {
-                    let b = next.fetch_add(1, Ordering::Relaxed);
-                    if b >= n_sb {
-                        break;
-                    }
-                    let i3 = (b % n_i3) * m3;
-                    let j3 = (b / n_i3) * n3;
-                    let m3c = m3.min(plan.m - i3);
-                    let n3c = n3.min(n_used - j3);
-                    // SAFETY: super-bands are disjoint output element
-                    // sets (row range × column range through an injective
-                    // output map, checked above) and the inputs are
-                    // read-only during the run, so each arena element is
-                    // written by at most one thread.
-                    let arena: &mut [T] =
-                        unsafe { std::slice::from_raw_parts_mut(arena_ptr.0, arena_len) };
-                    cp += match T::nr(micro) {
-                        4 => super::executor::run_super_band_prepacked::<T, 4>(
-                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        6 => super::executor::run_super_band_prepacked::<T, 6>(
-                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        8 => super::executor::run_super_band_prepacked::<T, 8>(
-                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        12 => super::executor::run_super_band_prepacked::<T, 12>(
-                            arena, plan, lp, rows, &mut cols, (i3, m3c), (j3, n3c),
-                        ),
-                        w => unreachable!("unsupported register-tile width {w}"),
-                    };
-                }
-                col_packs.fetch_add(cp, Ordering::Relaxed);
-            });
-        }
-    });
-    ParallelMacroStats {
-        super_bands: n_sb,
-        workers,
-        row_slice_packs: 0,
-        col_band_packs: col_packs.load(Ordering::Relaxed),
-    }
+    run_macro_workers(
+        SendPtr(arena.as_mut_ptr()),
+        arena.len(),
+        plan,
+        lp,
+        micro,
+        Some(rows),
+        n_used,
+        threads,
+        tuning,
+    )
 }
 
 struct SendPtr<T>(*mut T);
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+
+// ---------------------------------------------------------------------
+// The pipelined super-band engine shared by [`run_parallel_macro_tuned`]
+// (workers pack their own row slices) and
+// [`run_parallel_macro_prepacked_tuned`] (workers read shared resident
+// slices): a claim board of super-bands with sticky affinity, a
+// two-stage pack-ahead pipeline per worker, and sub-band steal offers
+// resolved at `kc` stage boundaries.
+// ---------------------------------------------------------------------
+
+/// One published steal offer: the tail `mc`-block subrange of a busy
+/// worker's band, up for grabs from reduction stage `from_stage` on.
+/// Stages below `from_stage` are complete for these rows at publication
+/// time, and publication/take both run under the offer lock, so the
+/// thief observes every prior stage's writes — per-element ascending-`k0`
+/// accumulation survives the handoff.
+#[derive(Clone, Copy, Debug)]
+struct StealOffer {
+    /// First plan row of the stolen range (always `mc`-aligned: offers
+    /// split at whole-block boundaries of an `mc`-aligned band start).
+    r0: usize,
+    /// Stolen row count.
+    rows: usize,
+    /// The band's column range (unchanged by the split).
+    j3: usize,
+    n3c: usize,
+    /// First reduction stage the thief runs (`k0 = from_stage · kc`).
+    from_stage: usize,
+}
+
+/// Shared state of one parallel macro-kernel run.
+struct Shared<'a, T: Scalar> {
+    plan: &'a RunPlan,
+    lp: &'a LevelPlan,
+    arena: SendPtr<T>,
+    arena_len: usize,
+    /// `Some` = read resident whole-extent row slices (prepacked serve
+    /// path); `None` = each worker packs its own row slices.
+    resident: Option<&'a [PackedRows<T>]>,
+    /// Column extent actually executed (`n_used` prefix or `plan.n`).
+    n_limit: usize,
+    m3: usize,
+    n3: usize,
+    n_i3: usize,
+    n_sb: usize,
+    workers: usize,
+    tuning: ParallelTuning,
+    /// Claim board: one flag per super-band (sticky scan, not a FIFO).
+    claimed: Vec<AtomicBool>,
+    /// Bands not yet claimed — the steal trigger (drained ⇒ 0).
+    unclaimed: AtomicUsize,
+    /// Workers currently executing a band or stolen subrange.
+    active: AtomicUsize,
+    /// One offer slot per worker, guarded by a lock that doubles as the
+    /// steal handoff's happens-before edge.
+    offers: Mutex<Vec<Option<StealOffer>>>,
+    row_packs: AtomicU64,
+    col_packs: AtomicU64,
+    hits: AtomicU64,
+    steals: AtomicU64,
+    /// The spawning thread's fault scope, re-entered by every worker and
+    /// companion packer ([`faults::capture_scope`]) so `Pack` faults
+    /// fire inside the parallel path too.
+    faults: Option<faults::Faults>,
+}
+
+/// A worker's link to its companion pack thread: whole [`PackStage`]
+/// sets circulate through the channel pair (requests carry an empty set
+/// out, results bring it back filled), so exactly one side owns a buffer
+/// at any time — the double-buffered handoff with no shared aliasing.
+struct PipeLink<T: Scalar> {
+    req: Sender<PackReq<T>>,
+    done: Receiver<PackDone<T>>,
+    /// Stage sets currently owned by the worker (2 between bands, 1
+    /// while one request is in flight).
+    free: Vec<PackStage<T>>,
+}
+
+struct PackReq<T: Scalar> {
+    stage: PackStage<T>,
+    key: StageKey,
+    pack_rows: bool,
+}
+
+struct PackDone<T: Scalar> {
+    stage: PackStage<T>,
+    row_packs: u64,
+    col_packs: u64,
+}
+
+/// Per-worker counter accumulator, flushed once at worker exit.
+#[derive(Default)]
+struct Local {
+    rp: u64,
+    cp: u64,
+    hits: u64,
+    steals: u64,
+}
+
+impl Local {
+    fn flush<T: Scalar>(&self, sh: &Shared<'_, T>) {
+        sh.row_packs.fetch_add(self.rp, Ordering::Relaxed);
+        sh.col_packs.fetch_add(self.cp, Ordering::Relaxed);
+        sh.hits.fetch_add(self.hits, Ordering::Relaxed);
+        sh.steals.fetch_add(self.steals, Ordering::Relaxed);
+    }
+}
+
+/// Decrement `active` on drop — unwind-safe, so a worker that panics
+/// mid-band (an injected `Pack` fault) cannot wedge the other workers'
+/// termination check.
+struct ActiveGuard<'a>(&'a AtomicUsize);
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn lock_offers<'a, T: Scalar>(
+    sh: &'a Shared<'_, T>,
+) -> std::sync::MutexGuard<'a, Vec<Option<StealOffer>>> {
+    // offer slots are plain Copy data: a lock poisoned by an injected
+    // unwind loses nothing
+    sh.offers
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Claim the first unclaimed band at or after `cursor` (wrapping) —
+/// sticky affinity: a worker's cursor trails its last claim, so it
+/// prefers the adjacent band (same row range, next column range in the
+/// claim-index order) whose packed rows its caches are warm for.
+fn claim_band<T: Scalar>(sh: &Shared<'_, T>, cursor: &mut usize) -> Option<usize> {
+    if sh.unclaimed.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    for step in 0..sh.n_sb {
+        let b = (*cursor + step) % sh.n_sb;
+        if !sh.claimed[b].swap(true, Ordering::Relaxed) {
+            sh.unclaimed.fetch_sub(1, Ordering::Relaxed);
+            *cursor = (b + 1) % sh.n_sb;
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// Take any published offer off the board (first found wins).
+fn take_offer<T: Scalar>(sh: &Shared<'_, T>) -> Option<StealOffer> {
+    let mut board = lock_offers(sh);
+    board.iter_mut().find_map(|slot| slot.take())
+}
+
+/// The companion pack thread: fills requested stages from a read-only
+/// arena view until the worker hangs up. An injected `Pack` fault
+/// unwinds here; the worker sees the closed channel, stops, and the
+/// panic propagates at scope join (the serve supervisor's
+/// `catch_unwind` still contains it).
+fn pack_worker<T: Scalar, const NRW: usize>(
+    sh: &Shared<'_, T>,
+    req: Receiver<PackReq<T>>,
+    done: Sender<PackDone<T>>,
+) {
+    faults::with_scope_opt(sh.faults.as_ref(), || {
+        while let Ok(mut r) = req.recv() {
+            // SAFETY: packing reads input-operand bytes only, which no
+            // thread writes during the run (compute writes go to the
+            // disjoint output table), so this shared view never races
+            // the workers' output stores.
+            let arena: &[T] = unsafe { std::slice::from_raw_parts(sh.arena.0, sh.arena_len) };
+            let (rp, cp) = pack_super_band_stage::<T, NRW>(
+                arena,
+                sh.plan,
+                sh.lp,
+                &mut r.stage,
+                r.key,
+                r.pack_rows,
+            );
+            if done
+                .send(PackDone {
+                    stage: r.stage,
+                    row_packs: rp,
+                    col_packs: cp,
+                })
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+}
+
+/// Execute one band (or stolen subrange) `[r0, r0+rows_n) ×
+/// [j3, j3+n3c)` from reduction stage `from_stage` on. Returns `false`
+/// when the companion packer is gone (it panicked) — the worker should
+/// stop and let scope join surface the unwind.
+#[allow(clippy::too_many_arguments)]
+fn run_band<T: Scalar, const NRW: usize>(
+    sh: &Shared<'_, T>,
+    wid: usize,
+    link: &mut Option<PipeLink<T>>,
+    sync_rows: &mut PackedRows<T>,
+    sync_cols: &mut PackedCols<T>,
+    (r0, rows_n): (usize, usize),
+    (j3, n3c): (usize, usize),
+    from_stage: usize,
+    allow_offer: bool,
+    c: &mut Local,
+) -> bool {
+    // SAFETY: this executor's output rows × columns are disjoint from
+    // every other executor's (bands are disjoint through an injective
+    // output map, checked by the entry points; stolen subranges split a
+    // band by whole row blocks) and the inputs are read-only during the
+    // run, so each arena element is written by at most one thread.
+    let arena: &mut [T] = unsafe { std::slice::from_raw_parts_mut(sh.arena.0, sh.arena_len) };
+    let Some(link) = link.as_mut() else {
+        // synchronous mode: the legacy interleaved pack-then-compute nest
+        let (rp, cp) = match sh.resident {
+            Some(rows) => (
+                0,
+                run_super_band_prepacked::<T, NRW>(
+                    arena,
+                    sh.plan,
+                    sh.lp,
+                    rows,
+                    sync_cols,
+                    (r0, rows_n),
+                    (j3, n3c),
+                ),
+            ),
+            None => run_super_band::<T, NRW>(
+                arena,
+                sh.plan,
+                sh.lp,
+                sync_rows,
+                sync_cols,
+                (r0, rows_n),
+                (j3, n3c),
+            ),
+        };
+        c.rp += rp;
+        c.cp += cp;
+        return true;
+    };
+    let kc = sh.lp.kc.max(1);
+    let mc = sh.lp.mc.max(1);
+    let n_stages = sh.plan.k.div_ceil(kc);
+    let pack_rows = sh.resident.is_none();
+    let key_for = |s: usize, rows_now: usize| {
+        let k0 = s * kc;
+        StageKey {
+            k0,
+            kcc: (k0 + kc).min(sh.plan.k) - k0,
+            r0,
+            rows: rows_now,
+            j3,
+            n3c,
+            si: s,
+        }
+    };
+    // rows still owned by this executor (steals shrink it from the tail)
+    let mut committed = rows_n;
+    // prime the pipeline: stage `from_stage` must be packed before any
+    // compute — its wait is a startup stall, not a pack-ahead miss
+    let Some(first) = link.free.pop() else {
+        return false;
+    };
+    let mut expect = key_for(from_stage, committed);
+    if link
+        .req
+        .send(PackReq {
+            stage: first,
+            key: expect,
+            pack_rows,
+        })
+        .is_err()
+    {
+        return false;
+    }
+    for s in from_stage..n_stages {
+        let got = match link.done.try_recv() {
+            Ok(r) => {
+                if s > from_stage {
+                    c.hits += 1;
+                }
+                r
+            }
+            Err(TryRecvError::Empty) => match link.done.recv() {
+                Ok(r) => r,
+                Err(_) => return false,
+            },
+            Err(TryRecvError::Disconnected) => return false,
+        };
+        c.rp += got.row_packs;
+        c.cp += got.col_packs;
+        let stage = got.stage;
+        let cur_key = expect;
+        // publish a steal offer for the tail half of the remaining row
+        // blocks — only once the claim board is drained (idle thieves
+        // exist), and always resolved below before the next stage
+        let blocks = committed.div_ceil(mc);
+        let mut keep = committed;
+        if allow_offer
+            && sh.tuning.steals_enabled()
+            && sh.workers > 1
+            && blocks >= 2
+            && sh.unclaimed.load(Ordering::Relaxed) == 0
+        {
+            let keep_rows = blocks.div_ceil(2) * mc;
+            let offer = StealOffer {
+                r0: r0 + keep_rows,
+                rows: committed - keep_rows,
+                j3,
+                n3c,
+                from_stage: s,
+            };
+            lock_offers(sh)[wid] = Some(offer);
+            keep = keep_rows;
+        }
+        // pack-ahead: request stage s+1 before streaming stage s. The
+        // request covers the pre-resolution range — a superset of what
+        // stage s+1 will compute if the offer is taken, which is merely
+        // wasted packing, never wrong data (compute clips to `committed`).
+        if s + 1 < n_stages {
+            let Some(spare) = link.free.pop() else {
+                return false;
+            };
+            expect = key_for(s + 1, committed);
+            if link
+                .req
+                .send(PackReq {
+                    stage: spare,
+                    key: expect,
+                    pack_rows,
+                })
+                .is_err()
+            {
+                return false;
+            }
+        }
+        // stream the blocks this executor certainly owns
+        let (lo, hi) = match sh.resident {
+            Some(_) => (r0 / mc, (r0 + keep).div_ceil(mc)),
+            None => (0, keep.div_ceil(mc)),
+        };
+        compute_super_band_stage::<T, NRW>(
+            arena,
+            sh.plan,
+            sh.lp,
+            &stage,
+            &cur_key,
+            sh.resident,
+            lo..hi,
+        );
+        // resolve the offer: withdrawn → finish the tail from the same
+        // panels (identical block order: 0..keep then keep..blocks);
+        // taken → the thief owns those rows' remaining stages
+        if keep < committed {
+            let withdrawn = lock_offers(sh)[wid].take().is_some();
+            if withdrawn {
+                let (tlo, thi) = match sh.resident {
+                    Some(_) => ((r0 + keep) / mc, (r0 + committed).div_ceil(mc)),
+                    None => (keep / mc, committed.div_ceil(mc)),
+                };
+                compute_super_band_stage::<T, NRW>(
+                    arena,
+                    sh.plan,
+                    sh.lp,
+                    &stage,
+                    &cur_key,
+                    sh.resident,
+                    tlo..thi,
+                );
+            } else {
+                committed = keep;
+            }
+        }
+        link.free.push(stage);
+    }
+    true
+}
+
+/// One worker's life: claim bands (sticky cursor) until the board
+/// drains, then steal sub-band tails until nothing is active, then exit.
+fn band_worker<T: Scalar, const NRW: usize>(
+    sh: &Shared<'_, T>,
+    wid: usize,
+    mut link: Option<PipeLink<T>>,
+) {
+    faults::with_scope_opt(sh.faults.as_ref(), || {
+        let mut sync_rows = PackedRows::<T>::new();
+        let mut sync_cols = PackedCols::<T>::new();
+        // spread starting cursors so workers begin on distant bands
+        let mut cursor = (wid * sh.n_sb) / sh.workers.max(1);
+        let mut c = Local::default();
+        loop {
+            if let Some(b) = claim_band(sh, &mut cursor) {
+                sh.active.fetch_add(1, Ordering::Relaxed);
+                let guard = ActiveGuard(&sh.active);
+                let i3 = (b % sh.n_i3) * sh.m3;
+                let j3 = (b / sh.n_i3) * sh.n3;
+                let m3c = sh.m3.min(sh.plan.m - i3);
+                let n3c = sh.n3.min(sh.n_limit - j3);
+                let ok = run_band::<T, NRW>(
+                    sh,
+                    wid,
+                    &mut link,
+                    &mut sync_rows,
+                    &mut sync_cols,
+                    (i3, m3c),
+                    (j3, n3c),
+                    0,
+                    true,
+                    &mut c,
+                );
+                drop(guard);
+                if !ok {
+                    break;
+                }
+                continue;
+            }
+            if !sh.tuning.steals_enabled() {
+                break;
+            }
+            if let Some(of) = take_offer(sh) {
+                sh.active.fetch_add(1, Ordering::Relaxed);
+                let guard = ActiveGuard(&sh.active);
+                c.steals += 1;
+                // stolen subranges never re-offer: one level of splitting
+                // is enough for tail latency, and it keeps the protocol
+                // livelock-free
+                let ok = run_band::<T, NRW>(
+                    sh,
+                    wid,
+                    &mut link,
+                    &mut sync_rows,
+                    &mut sync_cols,
+                    (of.r0, of.rows),
+                    (of.j3, of.n3c),
+                    of.from_stage,
+                    false,
+                    &mut c,
+                );
+                drop(guard);
+                if !ok {
+                    break;
+                }
+                continue;
+            }
+            // no bands, no offers: done once every owner has finished
+            // (owners resolve their offers before finishing, so an empty
+            // board + idle owners means no work can appear)
+            if sh.unclaimed.load(Ordering::Relaxed) == 0 && sh.active.load(Ordering::Relaxed) == 0
+            {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        c.flush(sh);
+    });
+}
+
+/// Spawn the worker (and, in pipelined mode, companion packer) threads
+/// for one monomorphized register width.
+fn spawn_all<'scope, T: Scalar, const NRW: usize>(
+    sh: &'scope Shared<'scope, T>,
+    scope: &'scope std::thread::Scope<'scope, '_>,
+) {
+    for wid in 0..sh.workers {
+        if sh.tuning.pipeline {
+            let (req_tx, req_rx) = channel::<PackReq<T>>();
+            let (done_tx, done_rx) = channel::<PackDone<T>>();
+            scope.spawn(move || pack_worker::<T, NRW>(sh, req_rx, done_tx));
+            let link = PipeLink {
+                req: req_tx,
+                done: done_rx,
+                free: vec![PackStage::new(), PackStage::new()],
+            };
+            scope.spawn(move || band_worker::<T, NRW>(sh, wid, Some(link)));
+        } else {
+            scope.spawn(move || band_worker::<T, NRW>(sh, wid, None));
+        }
+    }
+}
+
+/// The engine entry: build the shared state, spawn, join, report.
+#[allow(clippy::too_many_arguments)]
+fn run_macro_workers<T: Scalar>(
+    arena: SendPtr<T>,
+    arena_len: usize,
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    resident: Option<&[PackedRows<T>]>,
+    n_limit: usize,
+    threads: usize,
+    tuning: ParallelTuning,
+) -> ParallelMacroStats {
+    let (m3, n3) = super::executor::super_band_extents(lp);
+    let n_i3 = plan.m.div_ceil(m3);
+    let n_j3 = n_limit.div_ceil(n3);
+    let n_sb = n_i3 * n_j3;
+    let workers = threads.min(n_sb);
+    let sh = Shared {
+        plan,
+        lp,
+        arena,
+        arena_len,
+        resident,
+        n_limit,
+        m3,
+        n3,
+        n_i3,
+        n_sb,
+        workers,
+        tuning,
+        claimed: (0..n_sb).map(|_| AtomicBool::new(false)).collect(),
+        unclaimed: AtomicUsize::new(n_sb),
+        active: AtomicUsize::new(0),
+        offers: Mutex::new(vec![None; workers]),
+        row_packs: AtomicU64::new(0),
+        col_packs: AtomicU64::new(0),
+        hits: AtomicU64::new(0),
+        steals: AtomicU64::new(0),
+        faults: faults::capture_scope(),
+    };
+    std::thread::scope(|scope| match T::nr(micro) {
+        4 => spawn_all::<T, 4>(&sh, scope),
+        6 => spawn_all::<T, 6>(&sh, scope),
+        8 => spawn_all::<T, 8>(&sh, scope),
+        12 => spawn_all::<T, 12>(&sh, scope),
+        w => unreachable!("unsupported register-tile width {w}"),
+    });
+    ParallelMacroStats {
+        super_bands: n_sb,
+        workers,
+        row_slice_packs: sh.row_packs.load(Ordering::Relaxed),
+        col_band_packs: sh.col_packs.load(Ordering::Relaxed),
+        pack_ahead_hits: sh.hits.load(Ordering::Relaxed),
+        steals: sh.steals.load(Ordering::Relaxed),
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -723,8 +1316,19 @@ mod tests {
             let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
             bufs.fill_ints(3, 0x51);
             let want = bufs.reference();
-            let stats =
-                run_parallel_macro_stats(&mut bufs, &k, &s, threads, Some(lp), MicroShape::Mr8Nr4);
+            // deterministic tuning: pipelining on, stealing off — steals
+            // re-pack stolen subranges, which is the one scheduler mode
+            // whose pack totals are *not* thread-count invariants
+            let stats = run_parallel_macro_tuned(
+                &mut bufs,
+                &k,
+                &s,
+                threads,
+                Some(lp),
+                MicroShape::Mr8Nr4,
+                ParallelTuning::deterministic(),
+            );
+            assert_eq!(stats.steals, 0, "stealing disabled at threads={threads}");
             assert_eq!(stats.super_bands, n_i3 * n_j3);
             assert_eq!(stats.workers, threads.min(n_i3 * n_j3));
             assert_eq!(
@@ -967,5 +1571,352 @@ mod tests {
         let s = TiledSchedule::new(basis);
         let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
         run_parallel(&mut bufs, &k, &s, 2, 1);
+    }
+
+    #[test]
+    fn single_worker_never_steals() {
+        // steal-counter determinism: one worker has nobody to steal from,
+        // so even with the full default tuning (stealing ON) the counter
+        // is pinned at exactly zero — and the pack totals match the
+        // deterministic schedule's
+        let k = ops::matmul(40, 14, 22, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 7,
+            nc: 5,
+            m3: 16,
+            n3: 10,
+        };
+        let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+        bufs.fill_ints(3, 0x51);
+        let want = bufs.reference();
+        let stats = run_parallel_macro_tuned(
+            &mut bufs,
+            &k,
+            &s,
+            1,
+            Some(lp),
+            MicroShape::Mr8Nr4,
+            ParallelTuning::default(),
+        );
+        assert_eq!(stats.steals, 0, "one worker must never steal");
+        assert_eq!(stats.workers, 1);
+        assert_eq!(stats.row_slice_packs, 9 * 2); // bands × kc slices
+        assert_eq!(stats.col_band_packs, 5 * 3 * 2);
+        assert_eq!(bufs.output(), want);
+    }
+
+    #[test]
+    fn synchronous_tuning_is_the_legacy_loop() {
+        // ParallelTuning::synchronous(): no companion threads → the
+        // pipeline counters are structurally zero, and the result is
+        // bitwise identical to the pipelined schedule (the pipeline
+        // reorders packing, never accumulation)
+        let k = ops::matmul(29, 23, 26, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 5,
+            m3: 24,
+            n3: 10,
+        };
+        let mut sync = KernelBuffers::<f64>::from_kernel(&k);
+        sync.fill_ints(3, 0x77);
+        let mut piped = sync.clone();
+        let want = sync.reference();
+        let st = run_parallel_macro_tuned(
+            &mut sync,
+            &k,
+            &s,
+            4,
+            Some(lp),
+            MicroShape::Mr8Nr4,
+            ParallelTuning::synchronous(),
+        );
+        assert_eq!(st.pack_ahead_hits, 0, "no pipeline, no pack-ahead hits");
+        assert_eq!(st.steals, 0, "no pipeline, no stage boundaries to steal at");
+        let pt = run_parallel_macro_tuned(
+            &mut piped,
+            &k,
+            &s,
+            4,
+            Some(lp),
+            MicroShape::Mr8Nr4,
+            ParallelTuning::default(),
+        );
+        assert_eq!(sync.output(), want);
+        assert_eq!(
+            piped.output(),
+            sync.output(),
+            "pipelined and synchronous schedules must agree bitwise"
+        );
+        // identical claim grid either way
+        assert_eq!((pt.super_bands, pt.workers), (st.super_bands, st.workers));
+    }
+
+    #[test]
+    fn stealing_preserves_bitwise_results_on_skewed_grids() {
+        // a tall skewed shape — few bands, many mc blocks per band — is
+        // the steal-friendly worst case: with more workers than bands the
+        // board drains instantly and idle workers depend on sub-band
+        // steals for any overlap. Whether or not a steal fires on a given
+        // run (it is timing-dependent), the output must stay bitwise the
+        // serial reference.
+        let k = ops::matmul(96, 21, 10, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 7,
+            nc: 5,
+            m3: 48,
+            n3: 10,
+        };
+        let mut oracle = KernelBuffers::<f64>::from_kernel(&k);
+        oracle.fill_ints(3, 0xBEE);
+        let want = oracle.reference();
+        for round in 0..8 {
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+            bufs.fill_ints(3, 0xBEE);
+            let stats = run_parallel_macro_tuned(
+                &mut bufs,
+                &k,
+                &s,
+                4,
+                Some(lp),
+                MicroShape::Mr8Nr4,
+                ParallelTuning::default(),
+            );
+            assert_eq!(
+                bufs.output(),
+                want,
+                "round={round} steals={} hits={}",
+                stats.steals,
+                stats.pack_ahead_hits
+            );
+        }
+    }
+
+    #[test]
+    fn injected_pack_fault_crosses_into_parallel_workers() {
+        // PR 7 left the fault-injection scope thread-local, so spawned
+        // super-band workers never saw it. The engine now captures the
+        // caller's scope and re-enters it in every worker and companion
+        // packer: an armed Pack fault must fire inside the parallel path
+        // (the shared fired counter proves where), unwind the packer,
+        // and propagate at scope join — never hang the run.
+        use crate::coordinator::faults::{FaultMode, FaultPoint, Faults};
+        let k = ops::matmul(40, 14, 22, 8, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 8,
+            kc: 7,
+            nc: 5,
+            m3: 16,
+            n3: 10,
+        };
+        for tuning in [ParallelTuning::default(), ParallelTuning::synchronous()] {
+            let armed = Faults::seeded(0xFA17)
+                .fail(FaultPoint::Pack, FaultMode::Panic, 1, 1)
+                .build();
+            let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                faults::with_scope(&armed, || {
+                    run_parallel_macro_tuned(
+                        &mut bufs,
+                        &k,
+                        &s,
+                        4,
+                        Some(lp),
+                        MicroShape::Mr8Nr4,
+                        tuning,
+                    )
+                })
+            }));
+            assert!(
+                run.is_err(),
+                "{tuning:?}: the injected Pack fault must propagate at scope join"
+            );
+            assert!(
+                armed.fired(FaultPoint::Pack) > 0,
+                "{tuning:?}: the fault must fire inside a spawned worker"
+            );
+        }
+    }
+
+    // ----- loom-style model of the pack-ahead handoff -------------------
+    //
+    // The real handoff moves whole `PackStage` sets through mpsc channels;
+    // its correctness rests on an ordering argument (a stage is computed
+    // only after the packer's send of that exact stage, and a buffer is
+    // owned by exactly one side at a time), not on timing. The vendored
+    // dependency set has no `loom`, so this is a hand-rolled exhaustive
+    // scheduler: the worker and packer are step functions over a shared
+    // model state, and the test enumerates EVERY interleaving of their
+    // steps (DFS over scheduling choices), asserting the pipeline
+    // invariants in each.
+
+    /// One circulating buffer of the model.
+    #[derive(Clone, Copy, PartialEq, Debug)]
+    enum Buf {
+        /// Owned by the worker, contents stale.
+        Free,
+        /// In the request channel, tagged with the stage to pack.
+        Requested(usize),
+        /// In the done channel, holding the packed stage.
+        Packed(usize),
+    }
+
+    /// The whole handoff state: two buffers, the worker's program counter
+    /// over `n_stages` compute steps, and the compute log.
+    #[derive(Clone, PartialEq, Debug)]
+    struct Model {
+        bufs: [Buf; 2],
+        /// Next stage the worker will compute.
+        next_compute: usize,
+        /// Next stage the worker will request (prime + pack-ahead).
+        next_request: usize,
+        /// Stages computed, in order.
+        log: Vec<usize>,
+        n_stages: usize,
+    }
+
+    impl Model {
+        fn new(n_stages: usize) -> Model {
+            Model {
+                bufs: [Buf::Free, Buf::Free],
+                next_compute: 0,
+                next_request: 0,
+                log: Vec::new(),
+                n_stages,
+            }
+        }
+
+        /// Worker step: request the next stage into a free buffer if one
+        /// is pending, else compute from a packed buffer. Returns false
+        /// when no worker step is enabled (waiting on the packer).
+        fn worker_step(&mut self) -> bool {
+            // pack-ahead: issue the outstanding request first — this is
+            // the "send before compute" order of the real loop
+            if self.next_request < self.n_stages {
+                if let Some(i) = self.bufs.iter().position(|b| *b == Buf::Free) {
+                    self.bufs[i] = Buf::Requested(self.next_request);
+                    self.next_request += 1;
+                    return true;
+                }
+            }
+            if self.next_compute < self.n_stages {
+                if let Some(i) = self
+                    .bufs
+                    .iter()
+                    .position(|b| *b == Buf::Packed(self.next_compute))
+                {
+                    self.log.push(self.next_compute);
+                    self.next_compute += 1;
+                    self.bufs[i] = Buf::Free;
+                    return true;
+                }
+            }
+            false
+        }
+
+        /// Packer step: fill the oldest requested buffer.
+        fn packer_step(&mut self) -> bool {
+            let req = self
+                .bufs
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| match b {
+                    Buf::Requested(s) => Some((*s, i)),
+                    _ => None,
+                })
+                .min();
+            match req {
+                Some((s, i)) => {
+                    self.bufs[i] = Buf::Packed(s);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn done(&self) -> bool {
+            self.next_compute == self.n_stages
+        }
+
+        /// The pipeline invariants, checked at every reachable state.
+        fn check(&self) {
+            // single ownership: at most one buffer holds any given stage
+            if let (Buf::Requested(a) | Buf::Packed(a), Buf::Requested(b) | Buf::Packed(b)) =
+                (self.bufs[0], self.bufs[1])
+            {
+                assert_ne!(a, b, "a stage may live in one buffer only");
+            }
+            // compute order: strictly ascending stages, no skips
+            for (i, &s) in self.log.iter().enumerate() {
+                assert_eq!(s, i, "stages must be computed in ascending k0 order");
+            }
+            // pack-ahead depth: never more than 2 stages ahead of compute
+            assert!(self.next_request <= self.next_compute + 2);
+        }
+    }
+
+    #[test]
+    fn pack_ahead_handoff_model_all_interleavings() {
+        // exhaustively schedule worker vs packer from every reachable
+        // state; every maximal execution must terminate with all stages
+        // computed in order (no deadlock, no skip, no reorder)
+        fn explore(
+            m: &Model,
+            seen: &mut std::collections::HashSet<(Vec<u8>, usize, usize)>,
+        ) {
+            let fp = (
+                m.bufs
+                    .iter()
+                    .map(|b| match b {
+                        Buf::Free => 0u8,
+                        Buf::Requested(s) => 1 + 2 * *s as u8,
+                        Buf::Packed(s) => 2 + 2 * *s as u8,
+                    })
+                    .collect::<Vec<u8>>(),
+                m.next_compute,
+                m.next_request,
+            );
+            if !seen.insert(fp) {
+                return;
+            }
+            m.check();
+            let mut progressed = false;
+            let mut w = m.clone();
+            if w.worker_step() {
+                progressed = true;
+                explore(&w, seen);
+            }
+            let mut p = m.clone();
+            if p.packer_step() {
+                progressed = true;
+                explore(&p, seen);
+            }
+            if !progressed {
+                assert!(
+                    m.done(),
+                    "handoff deadlocked with stages left: {m:?}"
+                );
+                assert_eq!(m.log, (0..m.n_stages).collect::<Vec<_>>());
+            }
+        }
+        for n_stages in 0..=6 {
+            let mut seen = std::collections::HashSet::new();
+            explore(&Model::new(n_stages), &mut seen);
+            assert!(
+                !seen.is_empty(),
+                "model must reach at least the initial state"
+            );
+        }
     }
 }

@@ -298,6 +298,34 @@ pub fn with_scope<R>(_faults: &Faults, body: impl FnOnce() -> R) -> R {
     body()
 }
 
+/// Snapshot this thread's scoped schedule so it can be re-installed on
+/// another thread (the parallel super-band workers: the thread-local
+/// stops at `std::thread::scope`, so the spawning thread captures its
+/// scope and each worker re-enters it via [`with_scope_opt`]). `Clone`
+/// shares the schedule state, so fires on any worker consume the one
+/// deterministic budget. `None` outside any scope.
+#[cfg(any(test, feature = "fault-injection"))]
+pub fn capture_scope() -> Option<Faults> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// Compiled-out capture: there is never a scope.
+#[cfg(not(any(test, feature = "fault-injection")))]
+#[inline(always)]
+pub fn capture_scope() -> Option<Faults> {
+    None
+}
+
+/// [`with_scope`] over a captured (possibly absent) schedule: installs
+/// `faults` for the duration of `body` when `Some`, otherwise just runs
+/// `body`. The worker-side counterpart of [`capture_scope`].
+pub fn with_scope_opt<R>(faults: Option<&Faults>, body: impl FnOnce() -> R) -> R {
+    match faults {
+        Some(f) => with_scope(f, body),
+        None => body(),
+    }
+}
+
 /// Check the thread-local scoped schedule at `point` and unwind if it
 /// fires (both [`FaultMode`]s manifest as an unwind here — a deep call
 /// site has no typed error channel). No-op outside a [`with_scope`].
@@ -390,6 +418,32 @@ mod tests {
         // the clone's fire consumed the shared budget
         assert_eq!(f.check(FaultPoint::Plan), None);
         assert_eq!(f.fired(FaultPoint::Plan), 1);
+    }
+
+    #[test]
+    fn captured_scope_crosses_threads_and_shares_budget() {
+        let f = Faults::seeded(13)
+            .fail_n(FaultPoint::Pack, FaultMode::Panic, 1)
+            .build();
+        assert!(capture_scope().is_none(), "no ambient scope outside with_scope");
+        with_scope(&f, || {
+            let captured = capture_scope();
+            assert!(captured.is_some(), "capture inside a scope");
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    // the raw thread-local does not cross the spawn…
+                    raise_if(FaultPoint::Pack);
+                    assert_eq!(f.fired(FaultPoint::Pack), 0);
+                    // …but the captured handle re-enters the scope there
+                    let r = std::panic::catch_unwind(|| {
+                        with_scope_opt(captured.as_ref(), || raise_if(FaultPoint::Pack));
+                    });
+                    assert!(r.is_err(), "captured Pack fault must fire on the worker");
+                });
+            });
+        });
+        // the worker's fire consumed the one shared budget
+        assert_eq!(f.fired(FaultPoint::Pack), 1);
     }
 
     #[test]

@@ -171,6 +171,10 @@ struct Job {
     x: Vec<f32>,
     resp: Sender<Result<Vec<f32>, JobError>>,
     submitted: Instant,
+    /// Per-job queue-wait deadline, overriding the service-wide
+    /// [`ServiceConfig::deadline`] when set (see
+    /// [`ServiceClient::submit_with_deadline`]).
+    deadline: Option<Duration>,
 }
 
 enum Msg {
@@ -242,6 +246,7 @@ pub struct ServiceClient {
 /// Admission control shared by [`Service::submit`] and the client
 /// handles. On rejection the job's `x` buffer is handed back so retry
 /// loops can resubmit without a copy.
+#[allow(clippy::too_many_arguments)]
 fn admit_and_send(
     tx: &Sender<Msg>,
     depth: &AtomicUsize,
@@ -250,6 +255,7 @@ fn admit_and_send(
     cap: usize,
     want: usize,
     x: Vec<f32>,
+    deadline: Option<Duration>,
 ) -> Result<ResultReceiver, (SubmitError, Vec<f32>)> {
     if stopped.load(Ordering::SeqCst) {
         return Err((SubmitError::Stopped, x));
@@ -275,6 +281,7 @@ fn admit_and_send(
         x,
         resp: rtx,
         submitted: Instant::now(),
+        deadline,
     };
     if let Err(send_err) = tx.send(Msg::Job(job)) {
         depth.fetch_sub(1, Ordering::SeqCst);
@@ -300,6 +307,32 @@ impl ServiceClient {
             self.queue_cap,
             self.m * self.k,
             x,
+            None,
+        )
+        .map_err(|(e, _)| e)
+    }
+
+    /// [`submit`](ServiceClient::submit) with a per-job queue-wait
+    /// deadline overriding the service-wide [`ServiceConfig::deadline`]
+    /// for this job only (tighter or looser — the job's own bound wins
+    /// either way). A job still queued past its effective deadline at a
+    /// dispatch boundary resolves [`JobError::DeadlineExceeded`] and
+    /// counts under the existing `Metrics::timeouts`, exactly like a
+    /// service-wide shed.
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<ResultReceiver, SubmitError> {
+        admit_and_send(
+            &self.tx,
+            &self.depth,
+            &self.stopped,
+            &self.faults,
+            self.queue_cap,
+            self.m * self.k,
+            x,
+            Some(deadline),
         )
         .map_err(|(e, _)| e)
     }
@@ -334,6 +367,7 @@ impl ServiceClient {
                 self.queue_cap,
                 self.m * self.k,
                 x,
+                None,
             ) {
                 Ok(rx) => return Ok(rx),
                 Err((SubmitError::QueueFull { cap }, recovered)) => {
@@ -627,6 +661,7 @@ impl Service {
             self.queue_cap,
             self.m * self.k,
             x,
+            None,
         )
         .map_err(|(e, _)| e)
     }
@@ -1007,9 +1042,7 @@ fn worker_loop(backend: &mut WorkerBackend, sh: &WorkerShared, st: &mut WorkerSt
             continue;
         }
         let dispatch = Instant::now();
-        if let Some(dl) = sh.deadline {
-            shed_expired(sh, st, dispatch, dl);
-        }
+        shed_expired(sh, st, dispatch);
         if st.pending.is_empty() {
             continue;
         }
@@ -1052,13 +1085,19 @@ fn drain_done(sh: &WorkerShared, st: &mut WorkerState) -> bool {
     false
 }
 
-/// Shed every pending job whose queue wait exceeds the deadline:
-/// resolves [`JobError::DeadlineExceeded`], counts in
-/// `Metrics::timeouts` (the shed side of shed-vs-served), frees the
-/// queue slot.
-fn shed_expired(sh: &WorkerShared, st: &mut WorkerState, now: Instant, deadline: Duration) {
+/// Shed every pending job whose queue wait exceeds its **effective**
+/// deadline — the job's own submit-time bound when set
+/// ([`ServiceClient::submit_with_deadline`]), else the service-wide
+/// [`ServiceConfig::deadline`]; jobs with neither never expire. Sheds
+/// resolve [`JobError::DeadlineExceeded`], count in `Metrics::timeouts`
+/// (the shed side of shed-vs-served), and free the queue slot.
+fn shed_expired(sh: &WorkerShared, st: &mut WorkerState, now: Instant) {
     let mut i = 0;
     while i < st.pending.len() {
+        let Some(deadline) = st.pending[i].deadline.or(sh.deadline) else {
+            i += 1;
+            continue;
+        };
         let waited = now.saturating_duration_since(st.pending[i].submitted);
         if waited > deadline {
             let j = st.pending.remove(i);
@@ -1875,6 +1914,101 @@ mod tests {
         assert_eq!(metrics.errors, 0, "shed jobs are timeouts, not errors");
         assert_eq!(metrics.served(), 0);
         assert!(metrics.report(wall).contains("timeouts=3"));
+    }
+
+    #[test]
+    fn per_job_deadline_overrides_service_deadline() {
+        // no service-wide deadline: a job submitted through
+        // submit_with_deadline still sheds on its own bound while a plain
+        // submit in the same batch is served — and the shed counts under
+        // the same timeouts metric as a service-wide shed
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0x0D1D);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(120),
+                max_batch: 16,
+                backend: Backend::Native,
+                deadline: None,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let client = svc.client();
+        let tight = Duration::from_millis(1);
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        let doomed = client
+            .submit_with_deadline(vec![0.5; m * k], tight)
+            .unwrap();
+        let served = svc.submit(x.clone()).unwrap();
+        match doomed.recv_timeout(Duration::from_secs(10)) {
+            Some(Err(JobError::DeadlineExceeded { waited, deadline })) => {
+                assert!(waited >= tight, "waited {waited:?}");
+                assert_eq!(deadline, tight, "the job's own bound must be reported");
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let got = served
+            .recv_timeout(Duration::from_secs(10))
+            .expect("undeadlined job must resolve")
+            .expect("undeadlined job must be served");
+        let want = rowmajor_matmul(m, k, n, &x, &y);
+        assert!(max_abs_diff(&got, &want) < 1e-3);
+        let (metrics, _) = svc.stop();
+        assert_eq!(metrics.jobs, 2);
+        assert_eq!(metrics.timeouts, 1, "per-job shed counts as a timeout");
+        assert_eq!(metrics.errors, 0);
+        assert_eq!(metrics.served(), 1);
+    }
+
+    #[test]
+    fn per_job_deadline_can_outlive_service_deadline() {
+        // the override works in the loose direction too: with a 1ms
+        // service-wide deadline and a long batch window, a plain job
+        // sheds but a generous per-job deadline keeps its job alive
+        // through the same dispatch boundary
+        let (m, k, n) = (16usize, 12, 20);
+        let mut rnd = xorshift_f32(0x5EAD);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(120),
+                max_batch: 16,
+                backend: Backend::Native,
+                deadline: Some(Duration::from_millis(1)),
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let client = svc.client();
+        let x: Vec<f32> = (0..m * k).map(|_| rnd()).collect();
+        let patient = client
+            .submit_with_deadline(x.clone(), Duration::from_secs(60))
+            .unwrap();
+        let doomed = svc.submit(vec![0.5; m * k]).unwrap();
+        assert!(matches!(
+            doomed.recv_timeout(Duration::from_secs(10)),
+            Some(Err(JobError::DeadlineExceeded { .. }))
+        ));
+        let got = patient
+            .recv_timeout(Duration::from_secs(10))
+            .expect("patient job must resolve")
+            .expect("patient job must be served");
+        let want = rowmajor_matmul(m, k, n, &x, &y);
+        assert!(max_abs_diff(&got, &want) < 1e-3);
+        let (metrics, _) = svc.stop();
+        assert_eq!((metrics.jobs, metrics.timeouts, metrics.served()), (2, 1, 1));
     }
 
     #[test]

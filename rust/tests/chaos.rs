@@ -211,6 +211,38 @@ fn chaos_respawn_preserves_resident_packed_panels() {
 }
 
 #[test]
+fn chaos_pack_faults_contained_under_parallel_scheduler() {
+    // the pipelined parallel serve path: with threads > 1 a wide batch
+    // routes through the super-band scheduler, whose workers and
+    // companion pack threads re-enter the worker's fault scope — an
+    // armed Pack panic now unwinds *inside* a spawned thread, propagates
+    // at scope join, and must still be contained by the supervisor: no
+    // receiver hangs, survivors are correct, accounting is exact, and
+    // the service keeps serving
+    let (m, k, n) = (16usize, 24, 256);
+    let mut rnd = xorshift_f32(0x7A11E1);
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    let faults = Faults::seeded(0x9ACC5)
+        .fail(FaultPoint::Pack, FaultMode::Panic, 1, 5)
+        .build();
+    let cfg = ServiceConfig {
+        threads: 4,
+        max_batch: 8,
+        ..base_cfg(m, k, n, faults)
+    };
+    let (out, metrics) = drive(m, k, n, &y, cfg, 32, 0x7A11E2);
+    println!(
+        "parallel pack chaos: ok={} panicked={} restarts={}",
+        out.ok, out.panicked, metrics.worker_restarts
+    );
+    assert!(out.ok > 0, "chaos must not kill the parallel service");
+    assert!(
+        out.panicked > 0 || metrics.worker_restarts > 0 || out.backend > 0,
+        "the armed Pack schedule must have cost something"
+    );
+}
+
+#[test]
 fn chaos_kitchen_sink_multi_point_with_deadline() {
     // every fault point armed at once, a tight deadline, and a burst of
     // jobs: the union of all degraded outcomes still accounts exactly and

@@ -20,7 +20,8 @@
 
 use latticetile::codegen::executor::{max_abs_diff, KernelBuffers, TiledExecutor};
 use latticetile::codegen::{
-    run_parallel, run_parallel_macro, run_parallel_macro_stats, GemmForm, MicroShape, Scalar,
+    kernel_views, run_macro, run_parallel, run_parallel_macro, run_parallel_macro_tuned,
+    GemmForm, MicroShape, PackedCols, PackedRows, ParallelTuning, Scalar,
 };
 use latticetile::domain::ops;
 use latticetile::domain::Kernel;
@@ -395,7 +396,18 @@ fn prop_parallel_super_band_matmul_bitwise() {
         let sched = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
         let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
         let want = int_oracle(&mut bufs, 3, seed);
-        let stats = run_parallel_macro_stats(&mut bufs, &kernel, &sched, threads, Some(lp), micro);
+        // deterministic tuning: the pack-ahead pipeline ON, stealing off
+        // — the mode whose pack totals are exact schedule invariants
+        let stats = run_parallel_macro_tuned(
+            &mut bufs,
+            &kernel,
+            &sched,
+            threads,
+            Some(lp),
+            micro,
+            ParallelTuning::deterministic(),
+        );
+        assert_eq!(stats.steals, 0, "case {case}: stealing disabled");
         // m3/n3 are constructed as mc/nc multiples, so the claimed grid
         // is exactly the ceil-division cover of the GEMM extents
         let bands = (m as usize).div_ceil(lp.m3) * (n as usize).div_ceil(lp.n3);
@@ -433,6 +445,79 @@ fn prop_parallel_super_band_matmul_bitwise() {
         let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
         let threads = rng.range_usize(1, 6);
         let seed = 0xB17 ^ case as u64;
+        run_case::<f64>((m, k, n), lp, micro, threads, case, seed);
+        run_case::<f32>((m, k, n), lp, micro, threads, case, seed);
+    });
+}
+
+/// The pipelined scheduler's numerics contract, property-tested over
+/// random super-band grids at both dtypes: the serial macro nest, the
+/// synchronous parallel loop, the deterministic pipeline, and the full
+/// pipeline with sub-band stealing all produce **bitwise identical**
+/// outputs — pipelining and stealing reorder packing and split row
+/// ranges, but every output element's ascending-`k0` accumulation order
+/// is untouched.
+#[test]
+fn prop_pipelined_schedule_bitwise_matches_serial_nest() {
+    fn run_case<T: Scalar>(
+        (m, k, n): (i64, i64, i64),
+        lp: LevelPlan,
+        micro: MicroShape,
+        threads: usize,
+        case: usize,
+        seed: u64,
+    ) {
+        let kernel = ops::matmul(m, k, n, T::ELEM, 0);
+        let sched = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        // the serial three-level nest is the bitwise oracle schedule
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+        let mut ser = KernelBuffers::<T>::from_kernel(&kernel);
+        let exact = int_oracle(&mut ser, 3, seed);
+        run_macro(
+            &mut ser.arena,
+            &plan,
+            &lp,
+            micro,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+        );
+        let want = ser.output();
+        assert_eq!(want, exact, "case {case}: serial nest vs scalar oracle");
+        for tuning in [
+            ParallelTuning::synchronous(),
+            ParallelTuning::deterministic(),
+            ParallelTuning::default(),
+        ] {
+            let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
+            bufs.fill_ints(3, seed);
+            run_parallel_macro_tuned(&mut bufs, &kernel, &sched, threads, Some(lp), micro, tuning);
+            assert_eq!(
+                bufs.output(),
+                want,
+                "case {case}: {tuning:?} t={threads} must be bitwise the serial nest \
+                 ({m}x{k}x{n}, {micro:?}, {}B elem)",
+                T::ELEM
+            );
+        }
+    }
+    prop_check(6, 0x717E, |case, rng| {
+        let m = rng.range_i64(17, 56);
+        let k = rng.range_i64(3, 26);
+        let n = rng.range_i64(9, 44);
+        let mc = rng.range_usize(4, 12);
+        let nc = rng.range_usize(3, 10);
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc,
+            kc: rng.range_usize(2, 9),
+            nc,
+            m3: mc * rng.range_usize(1, 3),
+            n3: nc * rng.range_usize(1, 2),
+        };
+        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let threads = rng.range_usize(1, 6);
+        let seed = 0x5E1A ^ case as u64;
         run_case::<f64>((m, k, n), lp, micro, threads, case, seed);
         run_case::<f32>((m, k, n), lp, micro, threads, case, seed);
     });
