@@ -54,6 +54,7 @@ fn serve_burst_bench(
     (m, k, n): (usize, usize, usize),
     max_batch: usize,
     rounds: u64,
+    precision: latticetile::codegen::Precision,
 ) -> std::time::Duration {
     use latticetile::coordinator::{Backend, Service, ServiceConfig};
     let svc = Service::start(
@@ -67,6 +68,7 @@ fn serve_burst_bench(
             max_batch,
             queue_cap: 1024,
             backend: Backend::Native,
+            precision,
             ..ServiceConfig::default()
         },
     )
@@ -290,6 +292,27 @@ fn main() {
     res.rate(&f32_label, (big as u64).pow(3), t0.elapsed());
     assert!(bufs.output()[0].is_finite());
 
+    // the new 2-D grid geometries at f32, pinned (no autotune) next to
+    // the 8x8 default row above: the wide 8x12 and tall 16x6 register
+    // tiles. The tracked ratio of 16x6 against the default is a
+    // structural gate — a tall arm that falls off the packed path (or a
+    // pack layer that mis-handles 16-row panels) craters it.
+    use latticetile::codegen::MicroShape;
+    for (micro, tag) in [(MicroShape::Mr8Nr6, "8x12"), (MicroShape::Mr16Nr6, "16x6")] {
+        let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])))
+            .with_micro_shape(micro);
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+        let t0 = Instant::now();
+        exec.run(&mut bufs, &kernel);
+        let label = if quick {
+            format!("macro-kernel matmul f32 {tag} n={big}")
+        } else {
+            format!("macro-kernel matmul f32 {tag}")
+        };
+        res.rate(&label, (big as u64).pow(3), t0.elapsed());
+        assert!(bufs.output()[0].is_finite());
+    }
+
     let kernel = ops::convolution(conv_n, 4, 0);
     let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[256])));
     let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
@@ -325,22 +348,31 @@ fn main() {
     let sxs: Vec<Vec<f32>> = (0..burst)
         .map(|_| (0..sm * sk).map(|_| srnd()).collect())
         .collect();
-    let t_single = serve_burst_bench(sy.clone(), &sxs, (sm, sk, sn), 1, rounds);
-    let t_batch = serve_burst_bench(sy, &sxs, (sm, sk, sn), burst, rounds);
+    use latticetile::codegen::Precision;
+    let t_single = serve_burst_bench(sy.clone(), &sxs, (sm, sk, sn), 1, rounds, Precision::F32);
+    let t_batch = serve_burst_bench(sy.clone(), &sxs, (sm, sk, sn), burst, rounds, Precision::F32);
+    // the mixed mode over the same burst: f32 panels, f64 register
+    // accumulation. The tracked ratio against the pure-f32 coalesced row
+    // bounds what the extra precision costs — a collapse means the wide
+    // arms fell off the register-tile path.
+    let t_wide = serve_burst_bench(sy, &sxs, (sm, sk, sn), burst, rounds, Precision::F32ACC64);
     let serve_flops = rounds * burst as u64 * 2 * (sm * sk * sn) as u64;
-    let (one_label, coal_label) = if quick {
+    let (one_label, coal_label, wide_label) = if quick {
         (
             format!("native serve one-at-a-time {sm}x{sk}x{sn}"),
             format!("native serve coalesced batch B=8 {sm}x{sk}x{sn}"),
+            format!("native serve coalesced batch B=8 f32acc64 {sm}x{sk}x{sn}"),
         )
     } else {
         (
             "native serve one-at-a-time".to_string(),
             "native serve coalesced batch B=8".to_string(),
+            "native serve coalesced batch B=8 f32acc64".to_string(),
         )
     };
     res.rate(&one_label, serve_flops, t_single);
     res.rate(&coal_label, serve_flops, t_batch);
+    res.rate(&wide_label, serve_flops, t_wide);
 
     // startup register-tile calibration (one-shot cost report, per dtype)
     let t0 = Instant::now();

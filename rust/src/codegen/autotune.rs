@@ -1,103 +1,174 @@
-//! One-shot startup calibration of the register-tile shape (ROADMAP:
-//! "Autotune MR×NR at startup"), per dtype.
+//! One-shot startup calibration of the register-tile geometry (ROADMAP:
+//! "Autotune MR×NR at startup"), per dtype — a **2-D grid race** over
+//! the (MR-class, NR-class) candidates.
 //!
-//! The packed-panel layouts are width-specific, so the candidate shapes
-//! are separate kernel instantiations (the dtype's narrow vs wide
-//! [`MicroShape`]); the calibrator times both on an L1-resident packed
-//! panel and reports the winner. [`calibrate_dtype`] runs the race at any
-//! [`Scalar`] type's own widths (8×4 vs 8×6 at f64, 8×8 vs 8×12 at f32);
-//! the measured choices are recorded per dtype in the registry
+//! The packed-panel layouts are geometry-specific, so every candidate
+//! [`MicroShape`] is a separate kernel instantiation; the calibrator
+//! times each on an L1-resident packed panel at the dtype's resolved
+//! `(MR, NR)` (8×4 / 8×6 / 16×4 / 16×6 at f64, 8×8 / 8×12 / 16×4 / 16×6
+//! at f32) and reports the winner. Winner selection is split from
+//! measurement ([`pick_winner`]) and is **deterministic given the
+//! measured rates**: the compile-time default (8×4) wins unless a
+//! challenger beats it by more than 5%, and exact ties between
+//! challengers keep the earlier candidate in
+//! [`MicroShape::CANDIDATES`] order — so calibration can only ever
+//! *upgrade*, and repeated races over identical rates agree.
+//!
+//! The measured choices are recorded per dtype in the registry
 //! ([`crate::runtime::Registry::set_micro_shape_for`]) and the packed
 //! engine **dispatches them**: the planner threads the dtype's winner
 //! into [`Plan`](crate::coordinator::Plan), and
 //! [`TiledExecutor::with_micro_shape`](crate::codegen::TiledExecutor::with_micro_shape)
 //! / [`run_parallel_macro`](crate::codegen::run_parallel_macro) select
-//! the const-generic `NRW` panel path. The narrow shape remains the
-//! default when no calibration has run.
+//! the const-generic `(MRH, NRW)` panel path.
+//!
+//! There is deliberately **no silent fallback arm**: candidate dispatch
+//! matches exactly the six `(MR, NR)` pairs the kernel instantiates,
+//! closed over both sealed dtypes (pinned by a scalar-layer test), and
+//! anything else panics loudly instead of quietly reporting 8×4.
 
 use std::time::Instant;
 
-use super::microkernel::{mkernel_full_at, MR};
+use super::microkernel::{mkernel_full_at, MR, MR_TALL};
 use super::scalar::Scalar;
 
 pub use super::scalar::MicroShape;
 
+/// Rate threshold a challenger must clear over the default shape: >5%
+/// faster, so noise-level wins never flap the dispatched geometry.
+const UPGRADE_MARGIN: f64 = 1.05;
+
 /// Time both width classes at f64 and return the winner — the legacy
-/// entry point; see [`calibrate_dtype`] for the per-dtype race.
+/// entry point; see [`calibrate_dtype`] for the per-dtype grid race.
 pub fn calibrate(reps: u64) -> MicroShape {
     calibrate_dtype::<f64>(reps)
 }
 
-/// Time both of `T`'s register-tile widths on a tiny packed panel and
-/// return the shape with the higher FMA rate. Ties (within 5%) keep the
-/// compile-time default, so calibration can only ever *upgrade*. Takes
-/// ~1 ms at the default serving `reps`; the work is deterministic so
-/// repeated calls agree on a quiet machine.
+/// Race every candidate register-tile geometry at `T`'s resolved
+/// dimensions on a tiny packed panel and return the shape with the
+/// highest FMA rate, under the deterministic [`pick_winner`] rule (the
+/// default keeps ties; a challenger needs a >5% win). Takes a few ms at
+/// the default serving `reps`; the work per candidate is identical and
+/// deterministic, so repeated calls agree on a quiet machine.
 pub fn calibrate_dtype<T: Scalar>(reps: u64) -> MicroShape {
-    match (T::NR, T::NR_WIDE) {
-        (4, 6) => calibrate_impl::<T, 4, 6>(reps),
-        (8, 12) => calibrate_impl::<T, 8, 12>(reps),
-        // unreachable for the sealed dtypes; keep the default rather
-        // than panic in a startup path
-        _ => MicroShape::Mr8Nr4,
+    let rates: Vec<(MicroShape, f64)> = MicroShape::CANDIDATES
+        .iter()
+        .map(|&micro| (micro, measure_rate::<T>(micro, reps)))
+        .collect();
+    pick_winner(&rates)
+}
+
+/// The deterministic winner rule of the grid race, split from
+/// measurement so it can be pinned by tests: the first candidate in
+/// `rates` is the incumbent default; a challenger replaces the current
+/// best only with a rate strictly above both `default · 1.05` and the
+/// best so far. Identical `rates` slices always produce the same
+/// winner.
+pub fn pick_winner(rates: &[(MicroShape, f64)]) -> MicroShape {
+    let (default, base) = rates[0];
+    let mut best = (default, base);
+    for &(micro, rate) in &rates[1..] {
+        if rate > base * UPGRADE_MARGIN && rate > best.1 {
+            best = (micro, rate);
+        }
+    }
+    best.0
+}
+
+/// Time one candidate at `T`'s resolved `(MR, NR)`. The match is the
+/// closed set of const kernel arms — six `(MRH, NRW)` pairs; a geometry
+/// outside it is a bug upstream (the grid and the kernel arms drifted),
+/// and panicking beats silently timing the wrong kernel.
+fn measure_rate<T: Scalar>(micro: MicroShape, reps: u64) -> f64 {
+    match (micro.mr(), T::nr(micro)) {
+        (MR, 4) => measure_impl::<T, MR, 4>(reps),
+        (MR, 6) => measure_impl::<T, MR, 6>(reps),
+        (MR, 8) => measure_impl::<T, MR, 8>(reps),
+        (MR, 12) => measure_impl::<T, MR, 12>(reps),
+        (MR_TALL, 4) => measure_impl::<T, MR_TALL, 4>(reps),
+        (MR_TALL, 6) => measure_impl::<T, MR_TALL, 6>(reps),
+        (h, w) => unreachable!("no register-tile kernel arm at {h}x{w}"),
     }
 }
 
-fn calibrate_impl<T: Scalar, const N: usize, const W: usize>(reps: u64) -> MicroShape {
+fn measure_impl<T: Scalar, const MRH: usize, const NRW: usize>(reps: u64) -> f64 {
     let kc = 128usize;
-    let bp = vec![T::from_f64(1.000_000_1); kc * MR];
-    let cpn = vec![T::from_f64(0.999_999_9); kc * N];
-    let cpw = vec![T::from_f64(0.999_999_9); kc * W];
-    let mut an = vec![T::ZERO; (N - 1) * MR + MR];
-    let mut aw = vec![T::ZERO; (W - 1) * MR + MR];
-    let bases_n: [usize; N] = std::array::from_fn(|jc| jc * MR);
-    let bases_w: [usize; W] = std::array::from_fn(|jc| jc * MR);
-    // warm both code paths and the panel lines
-    mkernel_full_at::<T, N>(kc, &bp, &cpn, &mut an, &bases_n);
-    mkernel_full_at::<T, W>(kc, &bp, &cpw, &mut aw, &bases_w);
-    let tn = Instant::now();
+    let bp = vec![T::from_f64(1.000_000_1); kc * MRH];
+    let cp = vec![T::from_f64(0.999_999_9); kc * NRW];
+    let mut a = vec![T::ZERO; (NRW - 1) * MRH + MRH];
+    let bases: [usize; NRW] = std::array::from_fn(|jc| jc * MRH);
+    // warm the code path and the panel lines
+    mkernel_full_at::<T, T, MRH, NRW>(kc, &bp, &cp, &mut a, &bases);
+    let t = Instant::now();
     for _ in 0..reps {
-        mkernel_full_at::<T, N>(kc, &bp, &cpn, &mut an, &bases_n);
+        mkernel_full_at::<T, T, MRH, NRW>(kc, &bp, &cp, &mut a, &bases);
     }
-    let rate_n =
-        (reps * (kc * MR * N) as u64) as f64 / tn.elapsed().as_secs_f64().max(1e-9);
-    let tw = Instant::now();
-    for _ in 0..reps {
-        mkernel_full_at::<T, W>(kc, &bp, &cpw, &mut aw, &bases_w);
-    }
-    let rate_w =
-        (reps * (kc * MR * W) as u64) as f64 / tw.elapsed().as_secs_f64().max(1e-9);
     // keep the optimizer honest about the accumulators
-    assert!(an[0].to_f64().is_finite() && aw[0].to_f64().is_finite());
-    if rate_w > rate_n * 1.05 {
-        MicroShape::Mr8Nr6
-    } else {
-        MicroShape::Mr8Nr4
-    }
+    assert!(a[0].to_f64().is_finite());
+    (reps * (kc * MRH * NRW) as u64) as f64 / t.elapsed().as_secs_f64().max(1e-9)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::codegen::microkernel::{NR, NR_WIDE};
+    use crate::codegen::DType;
 
     #[test]
     fn calibrate_returns_a_candidate_quickly() {
         let shape = calibrate(50);
-        assert!(matches!(shape, MicroShape::Mr8Nr4 | MicroShape::Mr8Nr6));
+        assert!(MicroShape::CANDIDATES.contains(&shape));
         let (mr, nr) = shape.dims();
-        assert_eq!(mr, MR);
+        assert!(mr == MR || mr == MR_TALL);
         assert!(nr == NR || nr == NR_WIDE);
         assert!(!shape.name().is_empty());
     }
 
     #[test]
-    fn calibrate_runs_at_both_dtypes() {
+    fn calibrate_runs_the_full_grid_at_both_dtypes() {
         for shape in [calibrate_dtype::<f32>(50), calibrate_dtype::<f64>(50)] {
-            assert!(matches!(shape, MicroShape::Mr8Nr4 | MicroShape::Mr8Nr6));
+            assert!(MicroShape::CANDIDATES.contains(&shape));
         }
-        // the f32 winner names an f32-wide register tile
+        // an f32 winner resolves to a legal f32 register tile: wide
+        // columns on 8-row classes, f64 widths on 16-row classes
         let s32 = calibrate_dtype::<f32>(20);
-        assert!(s32.nr_for(crate::codegen::DType::F32) >= 8);
+        let nr32 = s32.nr_for(DType::F32);
+        match s32.mr() {
+            MR => assert!(nr32 >= 8),
+            _ => assert!(nr32 == NR || nr32 == NR_WIDE),
+        }
+    }
+
+    #[test]
+    fn winner_rule_is_deterministic_and_keeps_the_default_on_ties() {
+        use MicroShape::*;
+        let base = 100.0;
+        // nothing clears the 5% margin → the default survives
+        let rates = [(Mr8Nr4, base), (Mr8Nr6, 104.9), (Mr16Nr4, base), (Mr16Nr6, 90.0)];
+        assert_eq!(pick_winner(&rates), Mr8Nr4);
+        // one clear challenger wins
+        let rates = [(Mr8Nr4, base), (Mr8Nr6, 106.0), (Mr16Nr4, base), (Mr16Nr6, 90.0)];
+        assert_eq!(pick_winner(&rates), Mr8Nr6);
+        // exact tie between challengers → the earlier candidate keeps it
+        let rates = [(Mr8Nr4, base), (Mr8Nr6, 120.0), (Mr16Nr4, 120.0), (Mr16Nr6, 120.0)];
+        assert_eq!(pick_winner(&rates), Mr8Nr6);
+        // the best rate wins regardless of position
+        let rates = [(Mr8Nr4, base), (Mr8Nr6, 110.0), (Mr16Nr4, 130.0), (Mr16Nr6, 120.0)];
+        assert_eq!(pick_winner(&rates), Mr16Nr4);
+        // same rates → same winner, every time
+        for _ in 0..8 {
+            assert_eq!(pick_winner(&rates), Mr16Nr4);
+        }
+    }
+
+    #[test]
+    fn measure_covers_every_candidate_without_a_fallback() {
+        // every (dtype, candidate) cell of the grid must resolve to a
+        // real kernel arm and time successfully — the old code silently
+        // mapped unknown cells to 8×4; now they would panic here
+        for micro in MicroShape::CANDIDATES {
+            assert!(measure_rate::<f32>(micro, 2) > 0.0, "{micro:?} (f32)");
+            assert!(measure_rate::<f64>(micro, 2) > 0.0, "{micro:?} (f64)");
+        }
     }
 }

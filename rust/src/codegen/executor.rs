@@ -22,10 +22,12 @@ use crate::domain::{Kernel, OpRole};
 use crate::tiling::{LevelPlan, TileBasis, TiledSchedule};
 
 use super::autotune::MicroShape;
-use super::microkernel::{axpy_block, dot_update, AXPY_MAX_COLS};
-use super::pack::{run_macro_block, PackBuffers, PackStage, PackedCols, PackedRows, StageKey};
+use super::microkernel::{axpy_block, dot_update, MR, AXPY_MAX_COLS};
+use super::pack::{
+    run_macro_block_acc, PackBuffers, PackStage, PackedCols, PackedRows, StageKey,
+};
 use super::runplan::{kernel_views, GemmForm, OperandView, RunPlan};
-use super::scalar::Scalar;
+use super::scalar::{Precision, Scalar};
 
 pub use super::runplan::KernelBuffers;
 
@@ -377,10 +379,13 @@ pub struct TiledExecutor {
     /// a capacity heuristic from the Haswell L2 + L3-slice specs and the
     /// element size).
     level: Option<LevelPlan>,
-    /// Register-tile width class for the packed paths (the startup
+    /// Register-tile geometry class for the packed paths (the startup
     /// autotuner's per-dtype winner when the caller wires it through;
-    /// narrow otherwise).
+    /// the 8×narrow default otherwise).
     micro: MicroShape,
+    /// Accumulate register tiles one precision wider than storage (the
+    /// `f32acc64` mode; a no-op at f64 storage).
+    acc64: bool,
 }
 
 impl TiledExecutor {
@@ -389,6 +394,7 @@ impl TiledExecutor {
             schedule,
             level: None,
             micro: MicroShape::Mr8Nr4,
+            acc64: false,
         }
     }
 
@@ -399,11 +405,21 @@ impl TiledExecutor {
         self
     }
 
-    /// Select the register-tile width class (e.g. the dtype's autotuned
+    /// Select the register-tile geometry class (e.g. the dtype's autotuned
     /// winner recorded in
     /// [`Registry::micro_shape_for`](crate::runtime::Registry::micro_shape_for)).
     pub fn with_micro_shape(mut self, micro: MicroShape) -> TiledExecutor {
         self.micro = micro;
+        self
+    }
+
+    /// Select the storage/accumulation precision pair: a wide-accumulator
+    /// precision ([`Precision::wide_acc`]) routes the packed register-tile
+    /// and dot paths through the widened-accumulator kernels. The storage
+    /// dtype itself is the `KernelBuffers` element type — this only sets
+    /// the accumulation side.
+    pub fn with_precision(mut self, precision: Precision) -> TiledExecutor {
+        self.acc64 = precision.wide_acc();
         self
     }
 
@@ -412,9 +428,14 @@ impl TiledExecutor {
         self.level.as_ref()
     }
 
-    /// The selected register-tile width class.
+    /// The selected register-tile geometry class.
     pub fn micro_shape(&self) -> MicroShape {
         self.micro
+    }
+
+    /// Is the wide-accumulation (`f32acc64`) path selected?
+    pub fn wide_acc(&self) -> bool {
+        self.acc64
     }
 
     pub fn schedule(&self) -> &TiledSchedule {
@@ -446,13 +467,14 @@ impl TiledExecutor {
                         Some(&CacheSpec::HASWELL_L3_SLICE),
                     )
                 });
-                run_macro(
+                run_macro_acc(
                     &mut bufs.arena,
                     &plan,
                     &lp,
                     self.micro,
                     &mut PackedRows::<T>::new(),
                     &mut PackedCols::<T>::new(),
+                    self.acc64,
                 );
                 return;
             }
@@ -507,6 +529,7 @@ impl TiledExecutor {
                     .copied()
                     .collect();
                 let micro = self.micro;
+                let acc64 = self.acc64;
                 let mut packs = PackBuffers::<T>::new();
                 // scratch plan reused across tiles: the per-tile loop is
                 // allocation-free in steady state
@@ -514,13 +537,14 @@ impl TiledExecutor {
                 let arena: &mut [T] = &mut bufs.arena;
                 scan_rect_tiles(&order, &sizes, extents, |lo, hi| {
                     gf.plan_box_into(&views, lo, hi, &mut plan);
-                    run_rect_box(
+                    run_rect_box_acc(
                         arena,
                         &plan,
                         micro,
                         &mut packs,
                         box_key(&row_red, lo, hi),
                         box_key(&col_red, lo, hi),
+                        acc64,
                     );
                 });
                 return;
@@ -591,19 +615,36 @@ pub(crate) fn is_dot_plan(plan: &RunPlan) -> bool {
 /// Run a degenerate plan through [`dot_update`] (shared with the
 /// parallel executor's `m = n = 1` short-circuit).
 pub(crate) fn run_dot<T: Scalar>(arena: &mut [T], plan: &RunPlan) {
+    run_dot_acc(arena, plan, false);
+}
+
+/// [`run_dot`] with the wide-accumulation flag (the degenerate forms'
+/// `f32acc64` path).
+pub(crate) fn run_dot_acc<T: Scalar>(arena: &mut [T], plan: &RunPlan, acc64: bool) {
     // a 1-row box always lowers to exactly one run today; assert for real
     // (not debug) so a future multi-run degenerate form fails loudly
     // instead of silently dropping runs past the first
     assert!(is_dot_plan(plan) && plan.runs.len() == 1);
     let out = (plan.runs[0].out + plan.col_out[0]) as usize;
-    dot_update(
-        arena,
-        out,
-        plan.runs[0].row,
-        plan.col_in[0],
-        &plan.red_row,
-        &plan.red_col,
-    );
+    if acc64 {
+        super::microkernel::dot_update_acc::<T, T::Acc>(
+            arena,
+            out,
+            plan.runs[0].row,
+            plan.col_in[0],
+            &plan.red_row,
+            &plan.red_col,
+        );
+    } else {
+        dot_update(
+            arena,
+            out,
+            plan.runs[0].row,
+            plan.col_in[0],
+            &plan.red_row,
+            &plan.red_col,
+        );
+    }
 }
 
 /// Execute the whole kernel as the three-level macro/micro nest (the
@@ -639,18 +680,34 @@ pub fn run_macro<T: Scalar>(
     rows: &mut PackedRows<T>,
     cols: &mut PackedCols<T>,
 ) {
+    run_macro_acc(arena, plan, lp, micro, rows, cols, false);
+}
+
+/// [`run_macro`] with the wide-accumulation flag — the precision-aware
+/// entry point (`acc64` = [`Precision::wide_acc`] of the execution's
+/// precision pair).
+pub fn run_macro_acc<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &mut PackedRows<T>,
+    cols: &mut PackedCols<T>,
+    acc64: bool,
+) {
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
         return;
     }
     if is_dot_plan(plan) {
-        run_dot(arena, plan);
+        run_dot_acc(arena, plan, acc64);
         return;
     }
+    rows.set_mr(micro.mr());
     match T::nr(micro) {
-        4 => run_macro_impl::<T, 4>(arena, plan, lp, rows, cols),
-        6 => run_macro_impl::<T, 6>(arena, plan, lp, rows, cols),
-        8 => run_macro_impl::<T, 8>(arena, plan, lp, rows, cols),
-        12 => run_macro_impl::<T, 12>(arena, plan, lp, rows, cols),
+        4 => run_macro_impl::<T, 4>(arena, plan, lp, rows, cols, acc64),
+        6 => run_macro_impl::<T, 6>(arena, plan, lp, rows, cols, acc64),
+        8 => run_macro_impl::<T, 8>(arena, plan, lp, rows, cols, acc64),
+        12 => run_macro_impl::<T, 12>(arena, plan, lp, rows, cols, acc64),
         w => unreachable!("unsupported register-tile width {w}"),
     }
 }
@@ -672,13 +729,23 @@ fn run_macro_impl<T: Scalar, const NRW: usize>(
     lp: &LevelPlan,
     rows: &mut PackedRows<T>,
     cols: &mut PackedCols<T>,
+    acc64: bool,
 ) {
     let (m3, n3) = super_band_extents(lp);
     for i3 in (0..plan.m).step_by(m3) {
         let m3c = m3.min(plan.m - i3);
         for j3 in (0..plan.n).step_by(n3) {
             let n3c = n3.min(plan.n - j3);
-            run_super_band::<T, NRW>(arena, plan, lp, rows, cols, (i3, m3c), (j3, n3c));
+            run_super_band::<T, NRW>(
+                arena,
+                plan,
+                lp,
+                rows,
+                cols,
+                (i3, m3c),
+                (j3, n3c),
+                acc64,
+            );
         }
     }
 }
@@ -690,6 +757,7 @@ fn run_macro_impl<T: Scalar, const NRW: usize>(
 /// from it — the inner nest shared by the serial executor and by one
 /// parallel worker's claimed super-band. Returns
 /// `(row_slice_packs, col_band_packs)`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -698,6 +766,7 @@ pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
     cols: &mut PackedCols<T>,
     (i3, m3c): (usize, usize),
     (j3, n3c): (usize, usize),
+    acc64: bool,
 ) -> (u64, u64) {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
@@ -716,7 +785,15 @@ pub(crate) fn run_super_band<T: Scalar, const NRW: usize>(
             cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
             col_packs += 1;
             for bi in 0..rows.n_blocks() {
-                run_macro_block::<T, NRW>(rows.block(bi), cols, plan, j0, l1, arena);
+                run_macro_block_acc::<T, NRW>(
+                    rows.block(bi),
+                    cols,
+                    plan,
+                    j0,
+                    l1,
+                    arena,
+                    acc64,
+                );
             }
         }
     }
@@ -739,12 +816,14 @@ pub(crate) fn pack_super_band_stage<T: Scalar, const NRW: usize>(
     stage: &mut PackStage<T>,
     key: StageKey,
     pack_rows: bool,
+    mr: usize,
 ) -> (u64, u64) {
     let mc = lp.mc.max(1);
     let nc = lp.nc.max(1);
     let (mut row_packs, mut col_packs) = (0u64, 0u64);
     stage.invalidate();
     if pack_rows {
+        stage.rows.set_mr(mr);
         stage
             .rows
             .pack_slice_range(arena, plan, mc, key.r0, key.rows, key.k0, key.kcc);
@@ -779,6 +858,7 @@ pub(crate) fn pack_super_band_stage<T: Scalar, const NRW: usize>(
 /// `j0 → bi` order, so every output element accumulates its `kc` slices
 /// in the same ascending-`k0` sequence as the serial schedule — the
 /// pipeline reorders packing, never accumulation.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn compute_super_band_stage<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -787,6 +867,7 @@ pub(crate) fn compute_super_band_stage<T: Scalar, const NRW: usize>(
     key: &StageKey,
     resident: Option<&[PackedRows<T>]>,
     blocks: std::ops::Range<usize>,
+    acc64: bool,
 ) {
     assert_eq!(
         stage.key(),
@@ -801,7 +882,7 @@ pub(crate) fn compute_super_band_stage<T: Scalar, const NRW: usize>(
                 Some(rows) => rows[key.si].block(bi),
                 None => stage.rows.block(bi),
             };
-            run_macro_block::<T, NRW>(block, band, plan, j0, l1, arena);
+            run_macro_block_acc::<T, NRW>(block, band, plan, j0, l1, arena, acc64);
         }
     }
 }
@@ -816,6 +897,18 @@ pub fn pack_row_slices<T: Scalar>(
     plan: &RunPlan,
     lp: &LevelPlan,
 ) -> Vec<PackedRows<T>> {
+    pack_row_slices_mr(arena, plan, lp, MR)
+}
+
+/// [`pack_row_slices`] at an explicit panel height — the dispatched
+/// geometry's `micro.mr()`, so resident slices match the shape the serve
+/// path will stream them with.
+pub fn pack_row_slices_mr<T: Scalar>(
+    arena: &[T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    mr: usize,
+) -> Vec<PackedRows<T>> {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
     (0..plan.k)
@@ -823,6 +916,7 @@ pub fn pack_row_slices<T: Scalar>(
         .map(|k0| {
             let kcc = (k0 + kc).min(plan.k) - k0;
             let mut pr = PackedRows::new();
+            pr.set_mr(mr);
             pr.pack_slice(arena, plan, mc, k0, kcc);
             pr
         })
@@ -855,6 +949,49 @@ pub fn run_macro_prepacked<T: Scalar>(
     let _ = run_macro_prepacked_cols(arena, plan, lp, micro, rows, cols, plan.n);
 }
 
+/// [`run_macro_prepacked_cols`] with the wide-accumulation flag — the
+/// serve path's precision-aware entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn run_macro_prepacked_cols_acc<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    cols: &mut PackedCols<T>,
+    n_used: usize,
+    acc64: bool,
+) -> u64 {
+    assert!(n_used <= plan.n, "column prefix exceeds the plan");
+    if plan.m == 0 || n_used == 0 || plan.k == 0 {
+        return 0;
+    }
+    if is_dot_plan(plan) {
+        run_dot_acc(arena, plan, acc64);
+        return 0;
+    }
+    let kc = lp.kc.max(1);
+    assert_eq!(
+        rows.len(),
+        plan.k.div_ceil(kc),
+        "pre-packed slices do not match the macro shape"
+    );
+    assert!(
+        rows.iter().all(|r| r.mr() == micro.mr()),
+        "pre-packed slices were packed at a different panel height than \
+         the dispatched geometry"
+    );
+    match T::nr(micro) {
+        4 => run_macro_prepacked_impl::<T, 4>(arena, plan, lp, rows, cols, n_used, acc64),
+        6 => run_macro_prepacked_impl::<T, 6>(arena, plan, lp, rows, cols, n_used, acc64),
+        8 => run_macro_prepacked_impl::<T, 8>(arena, plan, lp, rows, cols, n_used, acc64),
+        12 => {
+            run_macro_prepacked_impl::<T, 12>(arena, plan, lp, rows, cols, n_used, acc64)
+        }
+        w => unreachable!("unsupported register-tile width {w}"),
+    }
+}
+
 /// [`run_macro_prepacked`] restricted to the **column prefix**
 /// `[0, n_used)` of the plan — the serve coalescer's partial-batch entry
 /// point. The plan's per-column offset tables (`col_out`/`col_in`) are
@@ -876,29 +1013,10 @@ pub fn run_macro_prepacked_cols<T: Scalar>(
     cols: &mut PackedCols<T>,
     n_used: usize,
 ) -> u64 {
-    assert!(n_used <= plan.n, "column prefix exceeds the plan");
-    if plan.m == 0 || n_used == 0 || plan.k == 0 {
-        return 0;
-    }
-    if is_dot_plan(plan) {
-        run_dot(arena, plan);
-        return 0;
-    }
-    let kc = lp.kc.max(1);
-    assert_eq!(
-        rows.len(),
-        plan.k.div_ceil(kc),
-        "pre-packed slices do not match the macro shape"
-    );
-    match T::nr(micro) {
-        4 => run_macro_prepacked_impl::<T, 4>(arena, plan, lp, rows, cols, n_used),
-        6 => run_macro_prepacked_impl::<T, 6>(arena, plan, lp, rows, cols, n_used),
-        8 => run_macro_prepacked_impl::<T, 8>(arena, plan, lp, rows, cols, n_used),
-        12 => run_macro_prepacked_impl::<T, 12>(arena, plan, lp, rows, cols, n_used),
-        w => unreachable!("unsupported register-tile width {w}"),
-    }
+    run_macro_prepacked_cols_acc(arena, plan, lp, micro, rows, cols, n_used, false)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -906,6 +1024,7 @@ fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
     rows: &[PackedRows<T>],
     cols: &mut PackedCols<T>,
     n_used: usize,
+    acc64: bool,
 ) -> u64 {
     let (m3, n3) = super_band_extents(lp);
     let mut col_packs = 0u64;
@@ -921,6 +1040,7 @@ fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
                 cols,
                 (i3, m3c),
                 (j3, n3c),
+                acc64,
             );
         }
     }
@@ -934,6 +1054,7 @@ fn run_macro_prepacked_impl<T: Scalar, const NRW: usize>(
 /// whole blocks). Only the column bands are packed; returns how many.
 /// Shared by the serial pre-packed nest and by one parallel worker's
 /// claimed super-band, so both walk one schedule.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -942,6 +1063,7 @@ pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
     cols: &mut PackedCols<T>,
     (i3, m3c): (usize, usize),
     (j3, n3c): (usize, usize),
+    acc64: bool,
 ) -> u64 {
     let mc = lp.mc.max(1);
     let kc = lp.kc.max(1);
@@ -960,7 +1082,15 @@ pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
             cols.pack_band::<NRW>(arena, plan, k0, kcc, j0, ncc);
             col_packs += 1;
             for bi in b0..b1 {
-                run_macro_block::<T, NRW>(rows[si].block(bi), cols, plan, j0, l1, arena);
+                run_macro_block_acc::<T, NRW>(
+                    rows[si].block(bi),
+                    cols,
+                    plan,
+                    j0,
+                    l1,
+                    arena,
+                    acc64,
+                );
             }
         }
     }
@@ -980,30 +1110,45 @@ pub fn run_rect_box<T: Scalar>(
     row_key: Vec<i64>,
     col_key: Vec<i64>,
 ) {
+    run_rect_box_acc(arena, plan, micro, packs, row_key, col_key, false);
+}
+
+/// [`run_rect_box`] with the wide-accumulation flag.
+#[allow(clippy::too_many_arguments)]
+pub fn run_rect_box_acc<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    micro: MicroShape,
+    packs: &mut PackBuffers<T>,
+    row_key: Vec<i64>,
+    col_key: Vec<i64>,
+    acc64: bool,
+) {
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
         return;
     }
     if is_dot_plan(plan) {
-        run_dot(arena, plan);
+        run_dot_acc(arena, plan, acc64);
         return;
     }
+    packs.set_mr(micro.mr());
     packs.pack_rows_cached(arena, plan, row_key);
     match T::nr(micro) {
         4 => {
             packs.pack_cols_cached::<4>(arena, plan, col_key);
-            packs.run_box::<4>(arena, plan);
+            packs.run_box_acc::<4>(arena, plan, acc64);
         }
         6 => {
             packs.pack_cols_cached::<6>(arena, plan, col_key);
-            packs.run_box::<6>(arena, plan);
+            packs.run_box_acc::<6>(arena, plan, acc64);
         }
         8 => {
             packs.pack_cols_cached::<8>(arena, plan, col_key);
-            packs.run_box::<8>(arena, plan);
+            packs.run_box_acc::<8>(arena, plan, acc64);
         }
         12 => {
             packs.pack_cols_cached::<12>(arena, plan, col_key);
-            packs.run_box::<12>(arena, plan);
+            packs.run_box_acc::<12>(arena, plan, acc64);
         }
         w => unreachable!("unsupported register-tile width {w}"),
     }
@@ -1334,12 +1479,63 @@ mod tests {
         let sched = TiledSchedule::new(TileBasis::rect(&[8, 12, 6]));
         let mut narrow = KernelBuffers::<f64>::from_kernel(&k);
         TiledExecutor::new(sched.clone()).run(&mut narrow, &k);
-        let mut wide = KernelBuffers::<f64>::from_kernel(&k);
+        for micro in [MicroShape::Mr8Nr6, MicroShape::Mr16Nr4, MicroShape::Mr16Nr6] {
+            let mut other = KernelBuffers::<f64>::from_kernel(&k);
+            TiledExecutor::new(sched.clone())
+                .with_micro_shape(micro)
+                .run(&mut other, &k);
+            assert!(max_abs_diff(&narrow.output(), &other.output()) < 1e-9, "{micro:?}");
+            assert!(max_abs_diff(&narrow.reference(), &other.output()) < 1e-9, "{micro:?}");
+        }
+    }
+
+    #[test]
+    fn wide_acc_executor_is_single_rounding_per_element() {
+        use super::super::scalar::Precision;
+        // f32acc64 through the full tiled executor: equals the f64
+        // product-sum over the same f32 inputs, rounded once per element
+        let k = ops::matmul(22, 37, 18, 4, 0);
+        let sched = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
+        // cancellation-heavy mixed-sign fill
+        for (i, v) in bufs.arena.iter_mut().enumerate() {
+            *v = if i % 2 == 0 {
+                1.0 + ((i % 13) as f32) * 2.0f32.powi(-12)
+            } else {
+                -1.0 + ((i % 7) as f32) * 2.0f32.powi(-11)
+            };
+        }
+        bufs.reset_output();
+        let gf = GemmForm::of(&k).unwrap();
+        let plan = gf.plan_box(&kernel_views(&k), &[0, 0, 0], k.extents());
+        // f64 oracle over the widened f32 inputs
+        let run = plan.runs[0];
+        let mut want = vec![0.0f32; plan.m * plan.n];
+        for r in 0..plan.m {
+            for c in 0..plan.n {
+                let mut acc = 0.0f64;
+                for (&rr, &rc) in plan.red_row.iter().zip(&plan.red_col) {
+                    acc += bufs.arena[(run.row + rr) as usize + r] as f64
+                        * bufs.arena[(plan.col_in[c] + rc) as usize] as f64;
+                }
+                want[c * plan.m + r] = acc as f32;
+            }
+        }
+        // one kc slice spanning the whole reduction: each element then
+        // accumulates in exactly one register-tile call, so the widened
+        // accumulator's single-rounding contract holds end to end
         TiledExecutor::new(sched)
-            .with_micro_shape(MicroShape::Mr8Nr6)
-            .run(&mut wide, &k);
-        assert!(max_abs_diff(&narrow.output(), &wide.output()) < 1e-9);
-        assert!(max_abs_diff(&narrow.reference(), &wide.output()) < 1e-9);
+            .with_level_plan(LevelPlan {
+                l1_tile: (8, 8, 8),
+                mc: 12,
+                kc: 37,
+                nc: 9,
+                m3: 24,
+                n3: 18,
+            })
+            .with_precision(Precision::F32ACC64)
+            .run(&mut bufs, &k);
+        assert_eq!(bufs.output(), want, "acc64 executor not single-rounding");
     }
 
     #[test]
@@ -1361,10 +1557,15 @@ mod tests {
             m3: 24,
             n3: 18,
         };
-        for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+        for micro in [
+            MicroShape::Mr8Nr4,
+            MicroShape::Mr8Nr6,
+            MicroShape::Mr16Nr4,
+            MicroShape::Mr16Nr6,
+        ] {
             let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
             let want = bufs.reference();
-            let rows = pack_row_slices(&bufs.arena, &plan, &lp);
+            let rows = pack_row_slices_mr(&bufs.arena, &plan, &lp, micro.mr());
             let packed: u64 = rows.iter().map(|r| r.pack_count()).sum();
             let mut cols = PackedCols::<f64>::new();
             run_macro_prepacked(&mut bufs.arena, &plan, &lp, micro, &rows, &mut cols);

@@ -7,39 +7,53 @@
 //! [`super::pack`] from a [`RunPlan`](super::runplan::RunPlan)) so the
 //! inner loops carry no bounds logic and no strided loads:
 //!
-//! * [`mkernel_full_at`] — an `MR×NRW` register tile (`NRW` a const
-//!   generic: the dtype's narrow or wide width, resolved by
-//!   [`Scalar::nr`] at the dispatch sites): `MR·NRW` accumulators held
-//!   live across the whole k-loop (one store per output element per tile,
-//!   instead of one per k step), fed by `MR + NRW` packed loads per k
-//!   step. Output columns are addressed by **per-column base offsets**,
-//!   so kernels whose output columns are not uniformly strided (e.g.
-//!   Kronecker) dispatch the same register tile. [`mkernel_edge_at`] is
-//!   the clipped variant for boundary blocks; packed panels are
-//!   zero-padded so it can accumulate the full block and write back only
-//!   the live `mr×nr` corner.
+//! * [`mkernel_full_at`] — an `MRH×NRW` register tile. Both dimensions
+//!   are const generics: `MRH` is the row class ([`MR`] = 8 or
+//!   [`MR_TALL`] = 16, matching the packed panel height) and `NRW` the
+//!   dtype-resolved column count ([`Scalar::nr`]), giving the six
+//!   instantiated arms 8×{4,6,8,12} and 16×{4,6}. `MRH·NRW`
+//!   accumulators are held live across the whole k-loop (one store per
+//!   output element per tile, instead of one per k step), fed by
+//!   `MRH + NRW` packed loads per k step. The accumulator element is a
+//!   third generic, `A:`[`Accum`]`<T>`: `A = T` is the pure path, and
+//!   `A = f64` over `T = f32` is the mixed `f32acc64` path — every FMA
+//!   runs in f64 and each output element rounds exactly once at the
+//!   fold into the f32 arena. Output columns are addressed by
+//!   **per-column base offsets**, so kernels whose output columns are
+//!   not uniformly strided (e.g. Kronecker) dispatch the same register
+//!   tile. [`mkernel_edge_at`] is the clipped variant for boundary
+//!   blocks; packed panels are zero-padded so it can accumulate the full
+//!   block and write back only the live `mr×nr` corner.
 //! * [`mkernel_full`] / [`mkernel_full_8x6`] / [`mkernel_edge`] — the
 //!   f64 uniform-stride wrappers (column stride `cs`), kept for the
 //!   packed single-block callers and the legacy autotune entry point;
-//!   they lower onto the `_at` kernels.
+//!   they lower onto the `_at` kernels at `MR` rows with the identity
+//!   accumulator.
 //! * [`axpy_block`] — the panel-replay kernel for skewed lattice tiles:
 //!   one packed unit-stride run of the row operand updates up to
 //!   [`AXPY_MAX_COLS`] output columns at once, so each packed element is
-//!   loaded once per column block.
+//!   loaded once per column block. (Replay accumulates in the arena
+//!   across calls, so it stays at storage precision — the `f32acc64`
+//!   scope is the packed register-tile paths and the dot kernel.)
 //! * [`dot_update`] — the degenerate `m = n = 1` path (scalar product,
 //!   convolution): a 4-way-unrolled dot over the plan's reduction offset
 //!   tables, straight from the arena. Packing a 1-row, 1-column problem
-//!   into `MR×NRW` zero-padded panels would waste `MR·NRW − 1` of every
-//!   register tile; the dot kernel skips packing entirely.
+//!   into `MRH×NRW` zero-padded panels would waste `MRH·NRW − 1` of
+//!   every register tile; the dot kernel skips packing entirely.
 //!
 //! All `get_unchecked` indexing is encapsulated here, behind length
 //! asserts at entry — callers hand in plain slices.
 
-use super::scalar::Scalar;
+use super::scalar::{Accum, Scalar};
 
-/// Microkernel register-tile rows (unit-stride output dimension), shared
-/// by both dtypes.
+/// Microkernel register-tile rows of the default (narrow) row class,
+/// shared by both dtypes — also the panel height every legacy `MR`-fixed
+/// entry point packs at.
 pub const MR: usize = 8;
+
+/// Register-tile rows of the tall row class (the 16×{4,6} grid points):
+/// twice the panel height, f64 column counts at both dtypes.
+pub const MR_TALL: usize = 16;
 
 /// f64 register-tile columns of the default (narrow) shape. Per-dtype
 /// widths live on [`Scalar::NR`]; f32 doubles this.
@@ -55,55 +69,58 @@ pub const NR_WIDE: usize = 6;
 /// enough for the widest *narrow* replay width (f32's `NR = 8`).
 pub const AXPY_MAX_COLS: usize = 8;
 
-/// Full `MR×NRW` register-tiled block over packed panels, with per-column
-/// output bases:
+/// Full `MRH×NRW` register-tiled block over packed panels, with
+/// per-column output bases:
 ///
-/// `a[bases[c] + r] += Σ_t bp[t·MR + r] · cp[t·NRW + c]`
+/// `a[bases[c] + r] += Σ_t bp[t·MRH + r] · cp[t·NRW + c]`
 ///
-/// for `r < MR`, `c < NRW`, `t < kc`. `bp` is an MR-row panel of the row
-/// operand, `cp` an NRW-column panel of the column operand (layouts per
-/// [`super::pack`]); `a` is the whole output arena. Callers guarantee the
-/// `NRW` column windows `[bases[c], bases[c] + MR)` are disjoint (true
+/// for `r < MRH`, `c < NRW`, `t < kc`, accumulated at `A`'s precision
+/// and folded into `a` with one rounding per element ([`Accum::fold`]).
+/// `bp` is an MRH-row panel of the row operand, `cp` an NRW-column panel
+/// of the column operand (layouts per [`super::pack`], packed at the
+/// same `MRH`); `a` is the whole output arena. Callers guarantee the
+/// `NRW` column windows `[bases[c], bases[c] + MRH)` are disjoint (true
 /// whenever the kernel's output map is injective).
-pub fn mkernel_full_at<T: Scalar, const NRW: usize>(
+pub fn mkernel_full_at<T: Scalar, A: Accum<T>, const MRH: usize, const NRW: usize>(
     kc: usize,
     bp: &[T],
     cp: &[T],
     a: &mut [T],
     bases: &[usize; NRW],
 ) {
-    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!(bp.len() >= kc * MRH, "B panel too short");
     assert!(cp.len() >= kc * NRW, "C panel too short");
     for &b in bases {
-        assert!(b + MR <= a.len(), "output window too small");
+        assert!(b + MRH <= a.len(), "output window too small");
     }
-    let mut acc = [[T::ZERO; MR]; NRW];
+    let mut acc = [[A::ZERO; MRH]; NRW];
     // SAFETY: the asserts above bound every index used below.
     unsafe {
         for t in 0..kc {
-            let b = bp.get_unchecked(t * MR..t * MR + MR);
+            let b = bp.get_unchecked(t * MRH..t * MRH + MRH);
             let c = cp.get_unchecked(t * NRW..t * NRW + NRW);
             for (jc, accj) in acc.iter_mut().enumerate() {
                 let cv = *c.get_unchecked(jc);
                 for (r, av) in accj.iter_mut().enumerate() {
-                    *av += *b.get_unchecked(r) * cv;
+                    av.fma(*b.get_unchecked(r), cv);
                 }
             }
         }
         for (jc, accj) in acc.iter().enumerate() {
             let base = *bases.get_unchecked(jc);
             for (r, &v) in accj.iter().enumerate() {
-                *a.get_unchecked_mut(base + r) += v;
+                let slot = a.get_unchecked_mut(base + r);
+                *slot = v.fold(*slot);
             }
         }
     }
 }
 
-/// Clipped `mr×nr` boundary block (`mr ≤ MR`, `nr ≤ NRW`) over the same
+/// Clipped `mr×nr` boundary block (`mr ≤ MRH`, `nr ≤ NRW`) over the same
 /// packed panels, with per-column output bases (`bases.len() ≥ nr`). The
 /// panels are zero-padded past the live rows/columns, so the accumulation
 /// runs the full register tile and only the write-back is clipped.
-pub fn mkernel_edge_at<T: Scalar, const NRW: usize>(
+pub fn mkernel_edge_at<T: Scalar, A: Accum<T>, const MRH: usize, const NRW: usize>(
     mr: usize,
     nr: usize,
     kc: usize,
@@ -112,28 +129,28 @@ pub fn mkernel_edge_at<T: Scalar, const NRW: usize>(
     a: &mut [T],
     bases: &[usize],
 ) {
-    assert!((1..=MR).contains(&mr) && (1..=NRW).contains(&nr));
-    assert!(bp.len() >= kc * MR, "B panel too short");
+    assert!((1..=MRH).contains(&mr) && (1..=NRW).contains(&nr));
+    assert!(bp.len() >= kc * MRH, "B panel too short");
     assert!(cp.len() >= kc * NRW, "C panel too short");
     assert!(bases.len() >= nr, "missing column bases");
     for &b in &bases[..nr] {
         assert!(b + mr <= a.len(), "output window too small");
     }
-    let mut acc = [[T::ZERO; MR]; NRW];
+    let mut acc = [[A::ZERO; MRH]; NRW];
     for t in 0..kc {
-        let b = &bp[t * MR..t * MR + MR];
+        let b = &bp[t * MRH..t * MRH + MRH];
         let c = &cp[t * NRW..t * NRW + NRW];
         for (jc, accj) in acc.iter_mut().enumerate() {
             let cv = c[jc];
             for (r, av) in accj.iter_mut().enumerate() {
-                *av += b[r] * cv;
+                av.fma(b[r], cv);
             }
         }
     }
     for (jc, accj) in acc.iter().enumerate().take(nr) {
         let base = bases[jc];
         for (r, &v) in accj.iter().enumerate().take(mr) {
-            a[base + r] += v;
+            a[base + r] = v.fold(a[base + r]);
         }
     }
 }
@@ -147,7 +164,7 @@ pub fn mkernel_full(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: usize)
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_full_at::<f64, NR>(kc, bp, cp, a, &bases);
+    mkernel_full_at::<f64, f64, MR, NR>(kc, bp, cp, a, &bases);
 }
 
 /// Uniform-stride wrapper for the f64 `MR×NR_WIDE` (8×6) register tile —
@@ -159,7 +176,7 @@ pub fn mkernel_full_8x6(kc: usize, bp: &[f64], cp: &[f64], a: &mut [f64], cs: us
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_full_at::<f64, NR_WIDE>(kc, bp, cp, a, &bases);
+    mkernel_full_at::<f64, f64, MR, NR_WIDE>(kc, bp, cp, a, &bases);
 }
 
 /// Uniform-stride wrapper: clipped f64 `mr×nr` boundary block (`mr ≤ MR`,
@@ -177,7 +194,7 @@ pub fn mkernel_edge(
     for (jc, b) in bases.iter_mut().enumerate() {
         *b = jc * cs;
     }
-    mkernel_edge_at::<f64, NR>(mr, nr, kc, bp, cp, a, &bases[..nr]);
+    mkernel_edge_at::<f64, f64, MR, NR>(mr, nr, kc, bp, cp, a, &bases[..nr]);
 }
 
 /// Panel-replay kernel: one packed unit-stride run of row-operand values
@@ -246,13 +263,14 @@ pub fn axpy_block<T: Scalar>(a: &mut [T], cs: usize, b: &[T], c: &[T]) {
 ///
 /// `a[out] += Σ_t a[(row + red_row[t])] · a[(col + red_col[t])]`
 ///
-/// straight from the arena, no packing. `row`/`col` are the absolute
-/// row-/column-operand element bases of the box ([`Run::row`] /
-/// [`RunPlan::col_in`]).
+/// straight from the arena, no packing — accumulated at `A`'s precision
+/// with one rounding at the final store (the degenerate forms' `acc64`
+/// path). `row`/`col` are the absolute row-/column-operand element bases
+/// of the box ([`Run::row`] / [`RunPlan::col_in`]).
 ///
 /// [`Run::row`]: super::runplan::Run::row
 /// [`RunPlan::col_in`]: super::runplan::RunPlan::col_in
-pub fn dot_update<T: Scalar>(
+pub fn dot_update_acc<T: Scalar, A: Accum<T>>(
     a: &mut [T],
     out: usize,
     row: i64,
@@ -263,13 +281,28 @@ pub fn dot_update<T: Scalar>(
     let kc = red_row.len();
     assert_eq!(red_col.len(), kc, "reduction tables differ in length");
     assert!(out < a.len(), "output index out of the arena");
-    let mut acc = [T::ZERO; 4];
+    let mut acc = [A::ZERO; 4];
     for (t, (&rr, &rc)) in red_row.iter().zip(red_col).enumerate() {
         let b = a[(row + rr) as usize];
         let c = a[(col + rc) as usize];
-        acc[t & 3] += b * c;
+        acc[t & 3].fma(b, c);
     }
-    a[out] += (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    // pairwise-combine the four lanes at A's precision, then fold once
+    let total = acc[0].add(acc[1]).add(acc[2].add(acc[3]));
+    a[out] = total.fold(a[out]);
+}
+
+/// [`dot_update_acc`] at storage precision (`A = T`) — the legacy entry
+/// point every pure-precision path dispatches.
+pub fn dot_update<T: Scalar>(
+    a: &mut [T],
+    out: usize,
+    row: i64,
+    col: i64,
+    red_row: &[i64],
+    red_col: &[i64],
+) {
+    dot_update_acc::<T, T>(a, out, row, col, red_row, red_col);
 }
 
 #[cfg(test)]
@@ -333,11 +366,86 @@ mod tests {
         for (jc, b) in bases.iter_mut().enumerate() {
             *b = jc * cs;
         }
-        mkernel_full_at::<f32, W>(kc, &bp, &cp, &mut a, &bases);
+        mkernel_full_at::<f32, f32, MR, W>(kc, &bp, &cp, &mut a, &bases);
         for jc in 0..W {
             for r in 0..MR {
                 let want: f32 = (0..kc).map(|t| bp[t * MR + r] * cp[t * W + jc]).sum();
                 assert_eq!(a[jc * cs + r] - orig[jc * cs + r], want, "({r},{jc})");
+            }
+        }
+    }
+
+    /// The tall row class: a 16×6 tile over MR_TALL-row panels, exact
+    /// with integer fills at both dtypes.
+    #[test]
+    fn tall_kernel_matches_naive_both_dtypes() {
+        fn case<T: Scalar>() {
+            const H: usize = MR_TALL;
+            const W: usize = NR_WIDE;
+            let kc = 7usize;
+            let bp: Vec<T> =
+                (0..kc * H).map(|i| T::from_f64((i % 7) as f64 - 3.0)).collect();
+            let cp: Vec<T> =
+                (0..kc * W).map(|i| T::from_f64((i % 5) as f64 - 2.0)).collect();
+            let cs = H + 2;
+            let mut a = vec![T::ONE; (W - 1) * cs + H];
+            let orig = a.clone();
+            let mut bases = [0usize; W];
+            for (jc, b) in bases.iter_mut().enumerate() {
+                *b = jc * cs;
+            }
+            mkernel_full_at::<T, T, H, W>(kc, &bp, &cp, &mut a, &bases);
+            for jc in 0..W {
+                for r in 0..H {
+                    let want: f64 = (0..kc)
+                        .map(|t| bp[t * H + r].to_f64() * cp[t * W + jc].to_f64())
+                        .sum();
+                    let got = (a[jc * cs + r] - orig[jc * cs + r]).to_f64();
+                    assert_eq!(got, want, "({r},{jc}) elem={}", T::ELEM);
+                }
+            }
+        }
+        case::<f64>();
+        case::<f32>();
+    }
+
+    /// The mixed-precision tile: f32 panels, f64 accumulators, one
+    /// rounding per output element — equal to the f64 oracle rounded
+    /// once, and at least as close to it as the pure-f32 tile on a
+    /// cancellation-heavy fill.
+    #[test]
+    fn acc64_tile_matches_f64_oracle_rounded_once() {
+        const W: usize = NR;
+        let kc = 64usize;
+        // mixed-sign near-cancelling fill: the pure f32 running sum
+        // rounds every step, the widened accumulator only at the fold
+        let bp: Vec<f32> = (0..kc * MR)
+            .map(|i| if i % 2 == 0 { 1.0 + 2.0f32.powi(-12) } else { -1.0 })
+            .collect();
+        let cp: Vec<f32> = (0..kc * W)
+            .map(|i| if i % 3 == 0 { 1.0 - 2.0f32.powi(-11) } else { 1.0 })
+            .collect();
+        let mut bases = [0usize; W];
+        let cs = MR;
+        for (jc, b) in bases.iter_mut().enumerate() {
+            *b = jc * cs;
+        }
+        let mut wide = vec![0.5f32; (W - 1) * cs + MR];
+        let orig = wide.clone();
+        mkernel_full_at::<f32, f64, MR, W>(kc, &bp, &cp, &mut wide, &bases);
+        let mut pure = orig.clone();
+        mkernel_full_at::<f32, f32, MR, W>(kc, &bp, &cp, &mut pure, &bases);
+        for jc in 0..W {
+            for r in 0..MR {
+                let exact: f64 = (0..kc)
+                    .map(|t| bp[t * MR + r] as f64 * cp[t * W + jc] as f64)
+                    .sum();
+                let idx = jc * cs + r;
+                let want = (orig[idx] as f64 + exact) as f32;
+                assert_eq!(wide[idx], want, "({r},{jc}): not a single rounding");
+                let werr = (wide[idx] as f64 - (orig[idx] as f64 + exact)).abs();
+                let perr = (pure[idx] as f64 - (orig[idx] as f64 + exact)).abs();
+                assert!(werr <= perr, "({r},{jc}): acc64 worse than pure f32");
             }
         }
     }
@@ -352,7 +460,7 @@ mod tests {
         let bases = [40usize, 0, 96, 16];
         let mut a = fill(128, 12);
         let orig = a.clone();
-        mkernel_full_at::<f64, NR>(kc, &bp, &cp, &mut a, &bases);
+        mkernel_full_at::<f64, f64, MR, NR>(kc, &bp, &cp, &mut a, &bases);
         for (jc, &base) in bases.iter().enumerate() {
             for r in 0..MR {
                 let want: f64 = (0..kc).map(|t| bp[t * MR + r] * cp[t * NR + jc]).sum();
@@ -423,7 +531,7 @@ mod tests {
         let bases = [20usize, 0, 40];
         let mut a = vec![1.0f64; 64];
         let sentinel = a.clone();
-        mkernel_edge_at::<f64, NR_WIDE>(mr, nr, kc, &bp, &cp, &mut a, &bases);
+        mkernel_edge_at::<f64, f64, MR, NR_WIDE>(mr, nr, kc, &bp, &cp, &mut a, &bases);
         for (jc, &base) in bases.iter().enumerate() {
             for r in 0..mr {
                 let want: f64 = (0..kc)
@@ -433,6 +541,39 @@ mod tests {
             }
             for r in mr..MR {
                 assert_eq!(a[base + r], sentinel[base + r]);
+            }
+        }
+    }
+
+    /// The tall edge kernel clips rows past MR (a live row count between
+    /// 8 and 16 is exactly the case the narrow arms cannot express).
+    #[test]
+    fn tall_edge_clips_past_narrow_height() {
+        const H: usize = MR_TALL;
+        let kc = 3;
+        let (mr, nr) = (11usize, 2usize);
+        let mut bp = vec![0f64; kc * H];
+        let mut cp = vec![0f64; kc * NR];
+        for t in 0..kc {
+            for r in 0..mr {
+                bp[t * H + r] = (t + 2 * r) as f64 - 4.0;
+            }
+            for c in 0..nr {
+                cp[t * NR + c] = (t + c) as f64 * 0.5 - 1.0;
+            }
+        }
+        let bases = [0usize, 24];
+        let mut a = vec![2.0f64; 48];
+        let sentinel = a.clone();
+        mkernel_edge_at::<f64, f64, H, NR>(mr, nr, kc, &bp, &cp, &mut a, &bases);
+        for (jc, &base) in bases.iter().enumerate() {
+            for r in 0..mr {
+                let want: f64 =
+                    (0..kc).map(|t| bp[t * H + r] * cp[t * NR + jc]).sum();
+                assert!((a[base + r] - 2.0 - want).abs() < 1e-12, "({r},{jc})");
+            }
+            for r in mr..H {
+                assert_eq!(a[base + r], sentinel[base + r], "row {r} written");
             }
         }
     }

@@ -5,8 +5,11 @@
 //! pipeline emits. The executor pipeline is **kernel-agnostic** and
 //! **element-generic**: every Table-1 kernel (scalar product,
 //! convolution, matmul, Kronecker) lowers through the same four stages,
-//! at either supported precision (`T: Scalar`, f32 or f64 — the
-//! [`scalar`] layer):
+//! at either supported storage precision (`T: Scalar`, f32 or f64 — the
+//! [`scalar`] layer), under any register-tile geometry of the 2-D
+//! `(MR, NR)` grid, and in any of the three serve precision modes
+//! ([`Precision`]: pure f32, pure f64, or `f32acc64` — f32 storage with
+//! f64 register accumulation):
 //!
 //! ```text
 //!   buffers  →  RunPlan  →  pack once  →  micro/macro dispatch
@@ -32,12 +35,17 @@
 //!   maximal unit-stride runs along the rows plus explicit per-column and
 //!   per-reduction-step offset tables. Tiles, macro blocks and whole
 //!   domains are all the same IR, for either dtype.
-//! * **pack once** — [`pack`] copies RunPlan rows into `MR`-row panels
+//! * **pack once** — [`pack`] copies RunPlan rows into `mr`-row panels
 //!   (unit-stride `memcpy` per run segment) and columns into `NRW`-column
 //!   panels (gathers through the offset tables — convolution's reversed
-//!   operand packs into a forward-streaming panel). `NRW` is per-dtype:
-//!   the narrow/wide width classes ([`MicroShape`]) resolve to 4/6
-//!   columns at f64 and 8/12 at f32 ([`Scalar::nr`]). Per macro block
+//!   operand packs into a forward-streaming panel). Both panel axes are
+//!   geometry parameters now: the row-panel height `mr` is the
+//!   dispatched [`MicroShape`]'s MR class (8 or [`MR_TALL`] = 16 rows,
+//!   carried at runtime on [`pack::PackedRows`] /
+//!   [`pack::PackBuffers`]), and `NRW` is per-dtype — the narrow/wide
+//!   width classes resolve to 4/6 columns at f64 and 8/12 at f32
+//!   ([`Scalar::nr`]), with the tall 16-row classes keeping the 4/6
+//!   widths at both dtypes so register pressure stays bounded. Per macro block
 //!   each operand is packed exactly once: [`pack::PackedRows`] holds
 //!   the `mc`-row blocks of the current reduction slice of a row range
 //!   (a super-band's rows; **thread-local** in the parallel path),
@@ -69,9 +77,22 @@
 //!   [`executor::run_macro_prepacked_cols`] it also executes a **column
 //!   prefix** of the plan, which is how a partially full coalesced batch
 //!   runs the m·B-wide serve kernel without replanning. The
-//!   startup autotuner ([`autotune::calibrate_dtype`]) races the dtype's
-//!   narrow vs wide shape and the engine dispatches whichever class the
-//!   [`Registry`](crate::runtime::Registry) recorded *for that dtype*.
+//!   startup autotuner ([`autotune::calibrate_dtype`]) races the full
+//!   **2-D (MR, NR) candidate grid** at the dtype's resolved dimensions
+//!   (8×4 / 8×6 / 16×4 / 16×6 at f64, 8×8 / 8×12 / 16×4 / 16×6 at f32)
+//!   under the deterministic [`autotune::pick_winner`] rule — the
+//!   default keeps ties, a challenger needs a >5% win — and the engine
+//!   dispatches whichever geometry the
+//!   [`Registry`](crate::runtime::Registry) recorded *for that dtype*:
+//!   `pack::dispatch_block` is the single const-dispatch point that
+//!   maps the runtime `(mr, acc64)` pair onto the six instantiated
+//!   `(MRH, NRW)` kernel arms. Mixed precision threads through the same
+//!   point: with `acc64` set (the `f32acc64` serve mode,
+//!   [`Precision::wide_acc`]), the register tiles instantiate with
+//!   `A = f64` ([`scalar::Accum`]) — products of f32 panels are exact in
+//!   f64, each `kc` slice's tile accumulates unrounded and rounds
+//!   **once** on store, so a reduction that fits one `kc` slice is the
+//!   correctly-rounded-sum-of-exact-products of its inputs.
 //!   Degenerate `m = n = 1` forms (scalar product, convolution) skip
 //!   packing entirely and run the dot microkernel
 //!   ([`microkernel::dot_update`]) straight from the arena — on the
@@ -155,22 +176,24 @@ pub mod parallel;
 pub mod runplan;
 pub mod scalar;
 
-pub use autotune::{calibrate, calibrate_dtype, MicroShape};
+pub use autotune::{calibrate, calibrate_dtype, pick_winner, MicroShape};
 pub use executor::{
-    box_key, max_abs_diff, pack_row_slices, run_instrumented, run_macro, run_macro_prepacked,
-    run_macro_prepacked_cols, run_rect_box, run_schedule, run_trace_only, scan_rect_tiles,
-    tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
+    box_key, max_abs_diff, pack_row_slices, pack_row_slices_mr, run_instrumented, run_macro,
+    run_macro_acc, run_macro_prepacked, run_macro_prepacked_cols, run_macro_prepacked_cols_acc,
+    run_rect_box, run_rect_box_acc, run_schedule, run_trace_only, scan_rect_tiles, tiled_executor,
+    ReplayPlan, ReplayScratch, TiledExecutor,
 };
-pub use microkernel::{dot_update, MR, NR, NR_WIDE};
+pub use microkernel::{dot_update, dot_update_acc, MR, MR_TALL, NR, NR_WIDE};
 pub use pack::{
     run_macro_block, PackBuffers, PackStage, PackedBlock, PackedCols, PackedRows, StageKey,
 };
 pub use parallel::{
     run_parallel, run_parallel_macro, run_parallel_macro_prepacked,
-    run_parallel_macro_prepacked_tuned, run_parallel_macro_stats, run_parallel_macro_tuned,
-    run_parallel_micro, ParallelMacroStats, ParallelTuning,
+    run_parallel_macro_prepacked_acc, run_parallel_macro_prepacked_tuned,
+    run_parallel_macro_stats, run_parallel_macro_tuned, run_parallel_macro_tuned_acc,
+    run_parallel_micro, run_parallel_micro_acc, ParallelMacroStats, ParallelTuning,
 };
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,
 };
-pub use scalar::{DType, Scalar};
+pub use scalar::{Accum, DType, Precision, Scalar};

@@ -4,19 +4,29 @@
 //! hardcoded matmul geometry, and packs `T: Scalar` panels (f32 panels
 //! are twice as wide per [`Scalar::NR`]).
 //!
-//! Panel layouts (identical for every kernel and dtype):
+//! Panel layouts (identical for every kernel and dtype, parameterized by
+//! the dispatched register geometry):
 //!
-//! * **row panels** — [`RunPlan::row_panels`] chops the plan's runs into
-//!   panels of up to `MR` consecutive rows; panel `p` stores element
-//!   `(t, r)` (reduction step `t`, row `r`) at `p·kc·MR + t·MR + r`, so
-//!   each k step of the microkernel reads one contiguous `MR`-vector.
+//! * **row panels** — [`RunPlan::row_panels_mr`] chops the plan's runs
+//!   into panels of up to `mr` consecutive rows (`mr` = the geometry's
+//!   row class, [`MR`] = 8 or [`MR_TALL`] = 16); panel `p` stores element
+//!   `(t, r)` (reduction step `t`, row `r`) at `p·kc·mr + t·mr + r`, so
+//!   each k step of the microkernel reads one contiguous `mr`-vector.
 //!   Because panels never straddle run boundaries, every copy is a
 //!   unit-stride `memcpy` from the arena.
 //! * **column panels** — `⌈nc/NRW⌉` panels of `NRW` consecutive columns
-//!   (`NRW` = the dtype's narrow or autotuned wide width); panel `q`
+//!   (`NRW` = the dtype-resolved column count of the geometry); panel `q`
 //!   stores `(t, c)` at `q·kc·NRW + t·NRW + c`, gathered through the
 //!   plan's `col_in` / `red_col` tables (which is how convolution's
 //!   reversed operand packs into a forward-streaming panel).
+//!
+//! [`dispatch_block`] is the engine's one geometry-dispatch point: the
+//! runtime `(mr, acc64)` pair — panel height recorded on the packed
+//! buffers, wide-accumulation flag from the execution's
+//! [`Precision`](super::scalar::Precision) — selects the const
+//! `(MRH, A)` microkernel instantiation, so every executor above it
+//! threads plain runtime values and only this match names the const
+//! arms.
 //!
 //! Rows past a panel's live count / columns past `nc` are zero-filled so
 //! boundary blocks can run the full register tile and clip only the
@@ -44,27 +54,30 @@
 //!   over all L1 tiles of one macro block straight from those panels —
 //!   each operand block is packed exactly once per macro block.
 
-use super::microkernel::{mkernel_edge_at, mkernel_full_at, MR};
+use super::microkernel::{mkernel_edge_at, mkernel_full_at, MR, MR_TALL};
 use super::runplan::{RowPanel, RunPlan};
-use super::scalar::Scalar;
+use super::scalar::{Accum, Scalar};
 
-/// Pack a list of row panels into `buf` (layout `p·kc·MR + t·MR + r`,
+/// Pack a list of row panels into `buf` (layout `p·kc·mr + t·mr + r`,
 /// zero-padded): the one copy loop shared by the per-tile and macro
-/// packers.
+/// packers. `mr` is the panel height the panels were decomposed at
+/// ([`RunPlan::row_panels_mr`]) — every `p.rows ≤ mr`.
 fn pack_row_panels<T: Scalar>(
     buf: &mut Vec<T>,
     arena: &[T],
     panels: &[RowPanel],
     red_row: &[i64],
+    mr: usize,
 ) {
     let kc = red_row.len();
     buf.clear();
-    buf.resize(panels.len() * kc * MR, T::ZERO);
+    buf.resize(panels.len() * kc * mr, T::ZERO);
     for (pi, p) in panels.iter().enumerate() {
-        let base = pi * kc * MR;
+        debug_assert!(p.rows <= mr, "panel taller than its height class");
+        let base = pi * kc * mr;
         for (t, &rr) in red_row.iter().enumerate() {
             let src = (p.row + rr) as usize;
-            let dst = base + t * MR;
+            let dst = base + t * mr;
             buf[dst..dst + p.rows].copy_from_slice(&arena[src..src + p.rows]);
         }
     }
@@ -101,10 +114,47 @@ fn pack_col_panels<T: Scalar, const NRW: usize>(
 /// block against the arena, `tj`/`ti`-grouped so the column micro-panel
 /// of an L1 tile is reused L1-resident across the tile's row panels.
 ///
+/// The engine's single geometry-dispatch point: the runtime `(mr, acc64)`
+/// pair selects the const `(MRH, A)` microkernel instantiation — `mr` is
+/// the panel height the rows were packed at, `acc64` the
+/// wide-accumulation flag of the execution's precision
+/// ([`Precision::wide_acc`](super::scalar::Precision::wide_acc); the
+/// identity accumulator at f64 storage, so `acc64` is a no-op there).
+///
 /// `col_out` is the output-offset table of the band's columns (length ≥
-/// `nc`); `panels[pi]`'s data lives at `rows_buf[pi·kc·MR ..]`.
+/// `nc`); `panels[pi]`'s data lives at `rows_buf[pi·kc·mr ..]`.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_block<T: Scalar, const NRW: usize>(
+    arena: &mut [T],
+    rows_buf: &[T],
+    panels: &[RowPanel],
+    cols_buf: &[T],
+    nc: usize,
+    kc: usize,
+    (ti, tj): (usize, usize),
+    col_out: &[i64],
+    mr: usize,
+    acc64: bool,
+) {
+    match (mr, acc64) {
+        (MR, false) => dispatch_block_impl::<T, T, MR, NRW>(
+            arena, rows_buf, panels, cols_buf, nc, kc, (ti, tj), col_out,
+        ),
+        (MR_TALL, false) => dispatch_block_impl::<T, T, MR_TALL, NRW>(
+            arena, rows_buf, panels, cols_buf, nc, kc, (ti, tj), col_out,
+        ),
+        (MR, true) => dispatch_block_impl::<T, T::Acc, MR, NRW>(
+            arena, rows_buf, panels, cols_buf, nc, kc, (ti, tj), col_out,
+        ),
+        (MR_TALL, true) => dispatch_block_impl::<T, T::Acc, MR_TALL, NRW>(
+            arena, rows_buf, panels, cols_buf, nc, kc, (ti, tj), col_out,
+        ),
+        (other, _) => unreachable!("no register-tile arm at panel height {other}"),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dispatch_block_impl<T: Scalar, A: Accum<T>, const MRH: usize, const NRW: usize>(
     arena: &mut [T],
     rows_buf: &[T],
     panels: &[RowPanel],
@@ -118,10 +168,10 @@ fn dispatch_block<T: Scalar, const NRW: usize>(
         return;
     }
     let cpanels = nc.div_ceil(NRW);
-    debug_assert!(rows_buf.len() >= panels.len() * kc * MR);
+    debug_assert!(rows_buf.len() >= panels.len() * kc * MRH);
     debug_assert!(cols_buf.len() >= cpanels * kc * NRW);
     // L1 tile extents in panel units
-    let pt = ti.div_ceil(MR).max(1);
+    let pt = ti.div_ceil(MRH).max(1);
     let qt = tj.div_ceil(NRW).max(1);
     for q0 in (0..cpanels).step_by(qt) {
         let q_hi = cpanels.min(q0 + qt);
@@ -131,17 +181,17 @@ fn dispatch_block<T: Scalar, const NRW: usize>(
                 let nr = NRW.min(nc - q * NRW);
                 let cpq = &cols_buf[q * kc * NRW..(q + 1) * kc * NRW];
                 for (pi, p) in panels.iter().enumerate().take(p_hi).skip(p0) {
-                    let bp = &rows_buf[pi * kc * MR..(pi + 1) * kc * MR];
+                    let bp = &rows_buf[pi * kc * MRH..(pi + 1) * kc * MRH];
                     let mut bases = [0usize; NRW];
                     for (jc, b) in bases.iter_mut().enumerate().take(nr) {
                         let o = p.out + col_out[q * NRW + jc];
                         debug_assert!(o >= 0);
                         *b = o as usize;
                     }
-                    if p.rows == MR && nr == NRW {
-                        mkernel_full_at::<T, NRW>(kc, bp, cpq, arena, &bases);
+                    if p.rows == MRH && nr == NRW {
+                        mkernel_full_at::<T, A, MRH, NRW>(kc, bp, cpq, arena, &bases);
                     } else {
-                        mkernel_edge_at::<T, NRW>(
+                        mkernel_edge_at::<T, A, MRH, NRW>(
                             p.rows,
                             nr,
                             kc,
@@ -173,7 +223,7 @@ type PackKey = (usize, usize, Vec<i64>);
 /// are unchanged, which holds for the executors: inputs are read-only
 /// during a run. Callers that mutate the source between runs must call
 /// [`PackBuffers::invalidate`] first.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct PackBuffers<T: Scalar = f64> {
     rows_buf: Vec<T>,
     panels: Vec<RowPanel>,
@@ -182,8 +232,26 @@ pub struct PackBuffers<T: Scalar = f64> {
     kc_cols: usize,
     nc: usize,
     nrw: usize,
+    mr: usize,
     row_key: Option<PackKey>,
     col_key: Option<PackKey>,
+}
+
+impl<T: Scalar> Default for PackBuffers<T> {
+    fn default() -> PackBuffers<T> {
+        PackBuffers {
+            rows_buf: Vec::new(),
+            panels: Vec::new(),
+            cols_buf: Vec::new(),
+            kc_rows: 0,
+            kc_cols: 0,
+            nc: 0,
+            nrw: 0,
+            mr: MR,
+            row_key: None,
+            col_key: None,
+        }
+    }
 }
 
 impl<T: Scalar> PackBuffers<T> {
@@ -199,15 +267,28 @@ impl<T: Scalar> PackBuffers<T> {
         self.col_key = None;
     }
 
-    /// Pack all rows × reduction steps of `plan` into MR panels. `key`
-    /// identifies the packed row/reduction sub-box (cache tag); the plan's
-    /// own operand offsets are folded in, so reusing one `PackBuffers`
-    /// across kernels or operand layouts whose box coordinates coincide
-    /// can never replay stale panels (the PR 2 regression, generalized).
+    /// Set the row-panel height for subsequent packs (the dispatched
+    /// geometry's `micro.mr()`; [`MR`] by default). A height change
+    /// invalidates the cached row panels.
+    pub fn set_mr(&mut self, mr: usize) {
+        if self.mr != mr {
+            self.mr = mr;
+            self.row_key = None;
+        }
+    }
+
+    /// Pack all rows × reduction steps of `plan` into mr-row panels.
+    /// `key` identifies the packed row/reduction sub-box (cache tag); the
+    /// plan's own operand offsets are folded in, so reusing one
+    /// `PackBuffers` across kernels or operand layouts whose box
+    /// coordinates coincide can never replay stale panels (the PR 2
+    /// regression, generalized). The panel height is folded in too, so a
+    /// geometry switch can never replay panels of the other height.
     pub fn pack_rows_cached(&mut self, arena: &[T], plan: &RunPlan, mut key: Vec<i64>) {
         key.extend([
             plan.m as i64,
             plan.k as i64,
+            self.mr as i64,
             plan.runs.first().map_or(-1, |r| r.row),
             plan.runs.first().map_or(-1, |r| r.out),
             plan.red_row.first().copied().unwrap_or(-1),
@@ -217,8 +298,8 @@ impl<T: Scalar> PackBuffers<T> {
         if self.row_key.as_ref() == Some(&full) {
             return;
         }
-        self.panels = plan.row_panels(0, plan.m);
-        pack_row_panels(&mut self.rows_buf, arena, &self.panels, &plan.red_row);
+        self.panels = plan.row_panels_mr(0, plan.m, self.mr);
+        pack_row_panels(&mut self.rows_buf, arena, &self.panels, &plan.red_row, self.mr);
         self.kc_rows = plan.k;
         self.row_key = Some(full);
     }
@@ -251,8 +332,14 @@ impl<T: Scalar> PackBuffers<T> {
     }
 
     /// Run the packed box: dispatch every register block of the packed
-    /// panels against the arena.
+    /// panels against the arena, at storage precision.
     pub fn run_box<const NRW: usize>(&self, arena: &mut [T], plan: &RunPlan) {
+        self.run_box_acc::<NRW>(arena, plan, false);
+    }
+
+    /// [`PackBuffers::run_box`] with the wide-accumulation flag (the
+    /// `f32acc64` per-tile path).
+    pub fn run_box_acc<const NRW: usize>(&self, arena: &mut [T], plan: &RunPlan, acc64: bool) {
         assert_eq!(
             self.kc_rows, self.kc_cols,
             "rows and columns packed with different reduction depths"
@@ -265,8 +352,10 @@ impl<T: Scalar> PackBuffers<T> {
             &self.cols_buf,
             self.nc,
             self.kc_rows,
-            (self.panels.len() * MR, self.nc), // per-tile engine: one L1 tile
+            (self.panels.len() * self.mr, self.nc), // per-tile engine: one L1 tile
             &plan.col_out,
+            self.mr,
+            acc64,
         );
     }
 
@@ -291,28 +380,57 @@ impl<T: Scalar> PackBuffers<T> {
 /// (clipped at the range end); its panels never straddle run boundaries,
 /// so blocks of kernels with segmented rows (Kronecker) simply carry
 /// more, shorter panels.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct PackedRows<T: Scalar = f64> {
     buf: Vec<T>,
     panels: Vec<RowPanel>,
     /// Per block: (first panel index, panel count).
     blocks: Vec<(usize, usize)>,
     kc: usize,
+    mr: usize,
     packs: u64,
 }
 
+impl<T: Scalar> Default for PackedRows<T> {
+    fn default() -> PackedRows<T> {
+        PackedRows {
+            buf: Vec::new(),
+            panels: Vec::new(),
+            blocks: Vec::new(),
+            kc: 0,
+            mr: MR,
+            packs: 0,
+        }
+    }
+}
+
 /// Read-only view of one packed row block: `panels[i]`'s data lives at
-/// `data[i·kc·MR .. (i+1)·kc·MR]`.
+/// `data[i·kc·mr .. (i+1)·kc·mr]`, `mr` being the panel height the block
+/// was packed at.
 #[derive(Clone, Copy, Debug)]
 pub struct PackedBlock<'a, T: Scalar = f64> {
     pub panels: &'a [RowPanel],
     pub data: &'a [T],
     pub kc: usize,
+    pub mr: usize,
 }
 
 impl<T: Scalar> PackedRows<T> {
     pub fn new() -> PackedRows<T> {
         PackedRows::default()
+    }
+
+    /// Set the row-panel height for subsequent packs (the dispatched
+    /// geometry's `micro.mr()`; [`MR`] by default). Takes effect at the
+    /// next `pack_slice*` call — blocks already packed keep the height
+    /// they were packed at until then.
+    pub fn set_mr(&mut self, mr: usize) {
+        self.mr = mr;
+    }
+
+    /// The panel height of the packed blocks.
+    pub fn mr(&self) -> usize {
+        self.mr
     }
 
     /// Pack every `mc`-row block of the plan's rows at reduction slice
@@ -348,12 +466,12 @@ impl<T: Scalar> PackedRows<T> {
         while r < r1 {
             let mcc = mc.min(r1 - r);
             let start = self.panels.len();
-            self.panels.extend(plan.row_panels(r, mcc));
+            self.panels.extend(plan.row_panels_mr(r, mcc, self.mr));
             self.blocks.push((start, self.panels.len() - start));
             self.packs += 1;
             r += mcc;
         }
-        pack_row_panels(&mut self.buf, arena, &self.panels, red_row);
+        pack_row_panels(&mut self.buf, arena, &self.panels, red_row, self.mr);
     }
 
     /// Number of row blocks in the packed slice.
@@ -366,8 +484,10 @@ impl<T: Scalar> PackedRows<T> {
         let (start, count) = self.blocks[bi];
         PackedBlock {
             panels: &self.panels[start..start + count],
-            data: &self.buf[start * self.kc * MR..(start + count) * self.kc * MR],
+            data: &self.buf
+                [start * self.kc * self.mr..(start + count) * self.kc * self.mr],
             kc: self.kc,
+            mr: self.mr,
         }
     }
 
@@ -513,11 +633,11 @@ impl<T: Scalar> PackStage<T> {
     }
 }
 
-/// Drive the `MR×NRW` micro-engine over all L1 tiles of one macro block,
+/// Drive the `mr×NRW` micro-engine over all L1 tiles of one macro block,
 /// straight from packed panels: `block` is one [`PackedRows`] block,
 /// `cols` one [`PackedCols`] band of `nc` live columns starting at plan
 /// column `j0`, both `kc` deep. `(ti, tj)` is the L1 tile footprint in
-/// GEMM row/column units — rounded up to `MR`/`NRW` panel multiples so L1
+/// GEMM row/column units — rounded up to `mr`/`NRW` panel multiples so L1
 /// tiles partition the register-block grid.
 ///
 /// The loop nest is `column-tile → row-tile → q → p`: the column
@@ -533,6 +653,22 @@ pub fn run_macro_block<T: Scalar, const NRW: usize>(
     (ti, tj): (usize, usize),
     arena: &mut [T],
 ) {
+    run_macro_block_acc::<T, NRW>(block, cols, plan, j0, (ti, tj), arena, false);
+}
+
+/// [`run_macro_block`] with the wide-accumulation flag: `acc64` selects
+/// the widened-accumulator kernel arms (the `f32acc64` macro path; a
+/// no-op at f64 storage, whose accumulator is already f64).
+#[allow(clippy::too_many_arguments)]
+pub fn run_macro_block_acc<T: Scalar, const NRW: usize>(
+    block: PackedBlock<'_, T>,
+    cols: &PackedCols<T>,
+    plan: &RunPlan,
+    j0: usize,
+    (ti, tj): (usize, usize),
+    arena: &mut [T],
+    acc64: bool,
+) {
     let (kc, nc) = cols.shape();
     assert_eq!(block.kc, kc, "row and column panels differ in depth");
     dispatch_block::<T, NRW>(
@@ -544,6 +680,8 @@ pub fn run_macro_block<T: Scalar, const NRW: usize>(
         kc,
         (ti, tj),
         &plan.col_out[j0..j0 + nc],
+        block.mr,
+        acc64,
     );
 }
 
@@ -804,6 +942,7 @@ mod tests {
                 panels: &panels,
                 data: &data,
                 kc: plan.k,
+                mr: MR,
             };
             run_macro_block::<f64, NR>(block, &pc, &plan, 0, (ti, tj), &mut bufs.arena);
             let got = bufs.output();
@@ -811,6 +950,105 @@ mod tests {
                 assert!(
                     (a - b).abs() < 1e-12,
                     "({m},{k},{n}) tile ({ti},{tj}) flat {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tall_packed_box_matches_scalar_oracle() {
+        use crate::codegen::microkernel::{MR_TALL, NR, NR_WIDE};
+        // the 16-row panel height through the per-tile engine, at both
+        // tall widths, m spanning none/one/partial second tall panel
+        for (m, k, n) in [(7i64, 5i64, 9i64), (16, 6, 11), (21, 9, 13)] {
+            let (_, mut bufs, plan) = matmul_plan(m, k, n);
+            let want = bufs.reference();
+            let mut packs = PackBuffers::<f64>::new();
+            packs.set_mr(MR_TALL);
+            packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+            packs.pack_cols_cached::<NR>(&bufs.arena, &plan, vec![0]);
+            packs.run_box::<NR>(&mut bufs.arena, &plan);
+            let got = bufs.output();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12, "16x4 ({m},{k},{n}) flat {i}");
+            }
+            let (_, mut bufs, plan) = matmul_plan(m, k, n);
+            let want = bufs.reference();
+            let mut packs = PackBuffers::<f64>::new();
+            packs.set_mr(MR_TALL);
+            packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+            packs.pack_cols_cached::<NR_WIDE>(&bufs.arena, &plan, vec![0]);
+            packs.run_box::<NR_WIDE>(&mut bufs.arena, &plan);
+            let got = bufs.output();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-12, "16x6 ({m},{k},{n}) flat {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_mr_invalidates_cached_row_panels() {
+        use crate::codegen::microkernel::MR_TALL;
+        let (_, bufs, plan) = matmul_plan(20, 4, 4);
+        let mut packs = PackBuffers::<f64>::new();
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        assert_eq!(packs.row_panel_data().0.len(), 20usize.div_ceil(MR));
+        // same arena, same key — only the height changed
+        packs.set_mr(MR_TALL);
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        assert_eq!(
+            packs.row_panel_data().0.len(),
+            20usize.div_ceil(MR_TALL),
+            "stale 8-row panels replayed after a height switch"
+        );
+    }
+
+    #[test]
+    fn acc64_box_is_single_rounding_per_element() {
+        // f32 storage, f64 accumulation through the full packed engine:
+        // every output must equal the f64 reference rounded once
+        const W: usize = 8;
+        let kernel = ops::matmul_padded(13, 30, 9, 15, 14, 31, 4, 0);
+        let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+        // mixed-sign, non-representable-sum fill
+        for (i, v) in bufs.arena.iter_mut().enumerate() {
+            *v = if i % 2 == 0 {
+                1.0 + 2.0f32.powi(-12)
+            } else {
+                -1.0 + (i % 17) as f32 * 2.0f32.powi(-10)
+            };
+        }
+        let gf = GemmForm::of(&kernel).unwrap();
+        let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+        // f64 oracle over the same f32 inputs
+        let mut oracle = vec![0.0f64; plan.m * plan.n];
+        for (ri, run) in plan.runs.iter().enumerate() {
+            assert_eq!(ri, 0, "matmul plan has one run");
+            for r in 0..run.len {
+                for (c, (&co, &ci)) in plan.col_out.iter().zip(&plan.col_in).enumerate() {
+                    let mut acc = 0.0f64;
+                    for (&rr, &rc) in plan.red_row.iter().zip(&plan.red_col) {
+                        let b = bufs.arena[(run.row + rr) as usize + r] as f64;
+                        let cv = bufs.arena[(ci + rc) as usize] as f64;
+                        acc += b * cv;
+                    }
+                    let out = (run.out + co) as usize + r;
+                    oracle[r * plan.n + c] =
+                        bufs.arena[out] as f64 + acc;
+                }
+            }
+        }
+        let mut packs = PackBuffers::<f32>::new();
+        packs.pack_rows_cached(&bufs.arena, &plan, vec![0]);
+        packs.pack_cols_cached::<W>(&bufs.arena, &plan, vec![0]);
+        packs.run_box_acc::<W>(&mut bufs.arena, &plan, true);
+        for r in 0..plan.m {
+            for c in 0..plan.n {
+                let out = (plan.runs[0].out + plan.col_out[c]) as usize + r;
+                assert_eq!(
+                    bufs.arena[out],
+                    oracle[r * plan.n + c] as f32,
+                    "({r},{c}): acc64 box not a single rounding"
                 );
             }
         }

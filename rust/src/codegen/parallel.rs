@@ -62,14 +62,13 @@ use crate::coordinator::faults;
 use crate::domain::Kernel;
 use crate::tiling::{LevelPlan, TiledSchedule};
 
-use super::autotune::MicroShape;
 use super::executor::{
-    box_key, compute_super_band_stage, pack_super_band_stage, run_rect_box, run_super_band,
+    box_key, compute_super_band_stage, pack_super_band_stage, run_rect_box_acc, run_super_band,
     run_super_band_prepacked, KernelBuffers, ReplayPlan, ReplayScratch,
 };
 use super::pack::{PackBuffers, PackStage, PackedCols, PackedRows, StageKey};
 use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
-use super::scalar::Scalar;
+use super::scalar::{MicroShape, Scalar};
 
 /// Execute the tiled kernel with `threads` worker threads, dispatching
 /// the dtype's default (narrow) register tile. See [`run_parallel_micro`].
@@ -109,6 +108,23 @@ pub fn run_parallel_micro<T: Scalar>(
     partition_var: usize,
     micro: MicroShape,
 ) {
+    run_parallel_micro_acc(bufs, kernel, schedule, threads, partition_var, micro, false);
+}
+
+/// [`run_parallel_micro`] with the wide-accumulation flag (`acc64` =
+/// [`Precision::wide_acc`](super::scalar::Precision::wide_acc) of the
+/// execution's precision pair): every register tile and dot reduction
+/// accumulates in `T::Acc` and rounds once per `kc` slice on writeback.
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_micro_acc<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    partition_var: usize,
+    micro: MicroShape,
+    acc64: bool,
+) {
     assert!(threads >= 1);
     let basis = schedule.basis();
     let d = basis.dim();
@@ -143,7 +159,16 @@ pub fn run_parallel_micro<T: Scalar>(
             if gf.col_axes.contains(&partition_var)
                 && gf.output_injective(&views, extents_ref)
             {
-                run_parallel_macro(bufs, kernel, schedule, threads, None, micro);
+                run_parallel_macro_tuned_acc(
+                    bufs,
+                    kernel,
+                    schedule,
+                    threads,
+                    None,
+                    micro,
+                    ParallelTuning::default(),
+                    acc64,
+                );
                 return;
             }
         }
@@ -247,13 +272,14 @@ pub fn run_parallel_micro<T: Scalar>(
                                 continue;
                             }
                             gf.plan_box_into(views, &lo, &hi, &mut plan);
-                            run_rect_box(
+                            run_rect_box_acc(
                                 arena,
                                 &plan,
                                 micro,
                                 &mut packs,
                                 box_key(row_red_axes, &lo, &hi),
                                 box_key(col_red_axes, &lo, &hi),
+                                acc64,
                             );
                         } else {
                             rp.unwrap().run_tile(arena, extents, foot, &mut scratch);
@@ -419,6 +445,24 @@ pub fn run_parallel_macro_tuned<T: Scalar>(
     micro: MicroShape,
     tuning: ParallelTuning,
 ) -> ParallelMacroStats {
+    run_parallel_macro_tuned_acc(bufs, kernel, schedule, threads, level, micro, tuning, false)
+}
+
+/// [`run_parallel_macro_tuned`] with the wide-accumulation flag — the
+/// precision-aware entry (`acc64` widens every worker's register tiles
+/// to `T::Acc`, rounding once per `kc` slice; the schedule is unchanged,
+/// so the deterministic-tuning pack invariants still hold).
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_tuned_acc<T: Scalar>(
+    bufs: &mut KernelBuffers<T>,
+    kernel: &Kernel,
+    schedule: &TiledSchedule,
+    threads: usize,
+    level: Option<LevelPlan>,
+    micro: MicroShape,
+    tuning: ParallelTuning,
+    acc64: bool,
+) -> ParallelMacroStats {
     assert!(threads >= 1);
     let basis = schedule.basis();
     assert!(basis.is_rect(), "macro-kernel path needs a rect L1 basis");
@@ -439,7 +483,7 @@ pub fn run_parallel_macro_tuned<T: Scalar>(
     if super::executor::is_dot_plan(&plan) {
         // degenerate dot: short-circuit into the dot microkernel exactly
         // like the serial path — no pack buffers, no threads
-        super::executor::run_dot(&mut bufs.arena, &plan);
+        super::executor::run_dot_acc(&mut bufs.arena, &plan, acc64);
         return ParallelMacroStats {
             super_bands: 1,
             workers: 1,
@@ -488,6 +532,7 @@ pub fn run_parallel_macro_tuned<T: Scalar>(
         plan.n,
         threads,
         tuning,
+        acc64,
     )
 }
 
@@ -523,7 +568,7 @@ pub fn run_parallel_macro_prepacked<T: Scalar>(
     // the serve default: pipelined pack-ahead, stealing off — serving
     // keeps the exact per-band pack discipline (and so deterministic
     // per-request work) that the coalescing layer's tests pin
-    run_parallel_macro_prepacked_tuned(
+    run_parallel_macro_prepacked_tuned_acc(
         arena,
         kernel,
         plan,
@@ -533,6 +578,38 @@ pub fn run_parallel_macro_prepacked<T: Scalar>(
         threads,
         n_used,
         ParallelTuning::deterministic(),
+        false,
+    )
+}
+
+/// [`run_parallel_macro_prepacked`] with the wide-accumulation flag —
+/// the `f32acc64` serve route: resident f32 panels stream through
+/// f64-accumulating register tiles, rounding once per `kc` slice. Same
+/// deterministic tuning (pipelined, stealing off) as the plain serve
+/// path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_prepacked_acc<T: Scalar>(
+    arena: &mut [T],
+    kernel: &Kernel,
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    threads: usize,
+    n_used: usize,
+    acc64: bool,
+) -> ParallelMacroStats {
+    run_parallel_macro_prepacked_tuned_acc(
+        arena,
+        kernel,
+        plan,
+        lp,
+        micro,
+        rows,
+        threads,
+        n_used,
+        ParallelTuning::deterministic(),
+        acc64,
     )
 }
 
@@ -550,13 +627,39 @@ pub fn run_parallel_macro_prepacked_tuned<T: Scalar>(
     n_used: usize,
     tuning: ParallelTuning,
 ) -> ParallelMacroStats {
+    run_parallel_macro_prepacked_tuned_acc(
+        arena, kernel, plan, lp, micro, rows, threads, n_used, tuning, false,
+    )
+}
+
+/// [`run_parallel_macro_prepacked_tuned`] with the wide-accumulation
+/// flag. Panics if the resident slices were packed at a panel height
+/// other than `micro.mr()` — the pre-packed layout must match the
+/// dispatched register geometry.
+#[allow(clippy::too_many_arguments)]
+pub fn run_parallel_macro_prepacked_tuned_acc<T: Scalar>(
+    arena: &mut [T],
+    kernel: &Kernel,
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    rows: &[PackedRows<T>],
+    threads: usize,
+    n_used: usize,
+    tuning: ParallelTuning,
+    acc64: bool,
+) -> ParallelMacroStats {
     assert!(threads >= 1);
+    assert!(
+        rows.iter().all(|r| r.mr() == micro.mr()),
+        "pre-packed slices were packed at a different panel height than the dispatched geometry"
+    );
     assert!(n_used <= plan.n, "column prefix exceeds the plan");
     if plan.m == 0 || n_used == 0 || plan.k == 0 {
         return ParallelMacroStats::default();
     }
     if super::executor::is_dot_plan(plan) {
-        super::executor::run_dot(arena, plan);
+        super::executor::run_dot_acc(arena, plan, acc64);
         return ParallelMacroStats {
             super_bands: 1,
             workers: 1,
@@ -585,6 +688,7 @@ pub fn run_parallel_macro_prepacked_tuned<T: Scalar>(
         n_used,
         threads,
         tuning,
+        acc64,
     )
 }
 
@@ -644,6 +748,13 @@ struct Shared<'a, T: Scalar> {
     n_sb: usize,
     workers: usize,
     tuning: ParallelTuning,
+    /// Register-tile panel height of the dispatched geometry
+    /// (`micro.mr()`): worker-packed row slices adopt it, and the
+    /// const-dispatch inside the block runner selects the matching
+    /// kernel arm.
+    mr: usize,
+    /// Wide-accumulation flag: register tiles accumulate in `T::Acc`.
+    acc64: bool,
     /// Claim board: one flag per super-band (sticky scan, not a FIFO).
     claimed: Vec<AtomicBool>,
     /// Bands not yet claimed — the steal trigger (drained ⇒ 0).
@@ -774,6 +885,7 @@ fn pack_worker<T: Scalar, const NRW: usize>(
                 &mut r.stage,
                 r.key,
                 r.pack_rows,
+                sh.mr,
             );
             if done
                 .send(PackDone {
@@ -825,6 +937,7 @@ fn run_band<T: Scalar, const NRW: usize>(
                     sync_cols,
                     (r0, rows_n),
                     (j3, n3c),
+                    sh.acc64,
                 ),
             ),
             None => run_super_band::<T, NRW>(
@@ -835,6 +948,7 @@ fn run_band<T: Scalar, const NRW: usize>(
                 sync_cols,
                 (r0, rows_n),
                 (j3, n3c),
+                sh.acc64,
             ),
         };
         c.rp += rp;
@@ -950,6 +1064,7 @@ fn run_band<T: Scalar, const NRW: usize>(
             &cur_key,
             sh.resident,
             lo..hi,
+            sh.acc64,
         );
         // resolve the offer: withdrawn → finish the tail from the same
         // panels (identical block order: 0..keep then keep..blocks);
@@ -969,6 +1084,7 @@ fn run_band<T: Scalar, const NRW: usize>(
                     &cur_key,
                     sh.resident,
                     tlo..thi,
+                    sh.acc64,
                 );
             } else {
                 committed = keep;
@@ -988,6 +1104,7 @@ fn band_worker<T: Scalar, const NRW: usize>(
 ) {
     faults::with_scope_opt(sh.faults.as_ref(), || {
         let mut sync_rows = PackedRows::<T>::new();
+        sync_rows.set_mr(sh.mr);
         let mut sync_cols = PackedCols::<T>::new();
         // spread starting cursors so workers begin on distant bands
         let mut cursor = (wid * sh.n_sb) / sh.workers.max(1);
@@ -1094,6 +1211,7 @@ fn run_macro_workers<T: Scalar>(
     n_limit: usize,
     threads: usize,
     tuning: ParallelTuning,
+    acc64: bool,
 ) -> ParallelMacroStats {
     let (m3, n3) = super::executor::super_band_extents(lp);
     let n_i3 = plan.m.div_ceil(m3);
@@ -1113,6 +1231,8 @@ fn run_macro_workers<T: Scalar>(
         n_sb,
         workers,
         tuning,
+        mr: micro.mr(),
+        acc64,
         claimed: (0..n_sb).map(|_| AtomicBool::new(false)).collect(),
         unclaimed: AtomicUsize::new(n_sb),
         active: AtomicUsize::new(0),
@@ -1231,7 +1351,7 @@ mod tests {
             n3: 10,
         };
         for threads in [1, 3, 8] {
-            for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+            for micro in MicroShape::CANDIDATES {
                 let mut bufs = KernelBuffers::<f64>::from_kernel(&k);
                 let want = bufs.reference();
                 run_parallel_macro(&mut bufs, &k, &s, threads, Some(lp), micro);
@@ -1258,7 +1378,7 @@ mod tests {
             n3: 18,
         };
         for threads in [1, 3] {
-            for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+            for micro in MicroShape::CANDIDATES {
                 let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
                 bufs.fill_ints(3, 0x32F);
                 let want = bufs.reference();
@@ -1267,6 +1387,60 @@ mod tests {
                     bufs.output(),
                     want,
                     "threads={threads} micro={micro:?} (f32)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_acc64_is_bitwise_the_serial_wide_schedule() {
+        // the f32acc64 parallel path: every worker widens its register
+        // tiles to f64 and rounds once per kc slice — band schedules are
+        // identical to the serial wide nest, so outputs match bitwise at
+        // every thread count and geometry
+        use crate::codegen::executor::run_macro_acc;
+        let k = ops::matmul(29, 23, 26, 4, 0);
+        let s = TiledSchedule::new(TileBasis::rect(&[8, 8, 8]));
+        let lp = LevelPlan {
+            l1_tile: (8, 8, 8),
+            mc: 12,
+            kc: 7,
+            nc: 9,
+            m3: 12,
+            n3: 18,
+        };
+        for micro in [MicroShape::Mr8Nr4, MicroShape::Mr16Nr6] {
+            let mut serial = KernelBuffers::<f32>::from_kernel(&k);
+            serial.fill_ints(3, 0xACC);
+            let gf = GemmForm::of(&k).unwrap();
+            let plan = gf.plan_box(&kernel_views(&k), &[0, 0, 0], k.extents());
+            run_macro_acc(
+                &mut serial.arena,
+                &plan,
+                &lp,
+                micro,
+                &mut PackedRows::new(),
+                &mut PackedCols::new(),
+                true,
+            );
+            let want = serial.output();
+            for threads in [1usize, 3] {
+                let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
+                bufs.fill_ints(3, 0xACC);
+                run_parallel_macro_tuned_acc(
+                    &mut bufs,
+                    &k,
+                    &s,
+                    threads,
+                    Some(lp),
+                    micro,
+                    ParallelTuning::deterministic(),
+                    true,
+                );
+                assert_eq!(
+                    bufs.output(),
+                    want,
+                    "threads={threads} micro={micro:?}: parallel acc64 must be bitwise serial acc64"
                 );
             }
         }

@@ -606,10 +606,13 @@ pub struct RunPlan {
     pub k: usize,
 }
 
-/// One `MR`-granular packing panel of a row range: up to
-/// [`MR`](super::microkernel::MR) live rows starting at absolute output
+/// One `mr`-granular packing panel of a row range: up to `mr` live rows
+/// (the geometry's register-tile row class — [`MR`] or
+/// [`MR_TALL`](super::microkernel::MR_TALL)) starting at absolute output
 /// element `out` / row-operand element `row`. Panels never straddle run
 /// boundaries, so both offsets are unit-stride across the panel's rows.
+///
+/// [`MR`]: super::microkernel::MR
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct RowPanel {
     pub out: i64,
@@ -618,11 +621,18 @@ pub struct RowPanel {
 }
 
 impl RunPlan {
-    /// Decompose global row positions `[r0, r0 + rows)` into MR-granular
-    /// packing panels (shared by the packers and the address-level
-    /// tracer, so their layouts can never diverge).
+    /// [`RunPlan::row_panels_mr`] at the default row class
+    /// ([`MR`](super::microkernel::MR)).
     pub fn row_panels(&self, r0: usize, rows: usize) -> Vec<RowPanel> {
-        use super::microkernel::MR;
+        self.row_panels_mr(r0, rows, super::microkernel::MR)
+    }
+
+    /// Decompose global row positions `[r0, r0 + rows)` into mr-granular
+    /// packing panels (shared by the packers and the address-level
+    /// tracer, so their layouts can never diverge). `mr` is the packed
+    /// panel height of the dispatched register geometry.
+    pub fn row_panels_mr(&self, r0: usize, rows: usize, mr: usize) -> Vec<RowPanel> {
+        assert!(mr > 0, "panel height must be positive");
         let mut panels = Vec::new();
         let r1 = r0 + rows;
         let mut pos = 0usize;
@@ -634,13 +644,13 @@ impl RunPlan {
                 let seg_len = hi - lo;
                 let mut p = 0usize;
                 while p < seg_len {
-                    let live = MR.min(seg_len - p);
+                    let live = mr.min(seg_len - p);
                     panels.push(RowPanel {
                         out: run.out + base + p as i64,
                         row: run.row + base + p as i64,
                         rows: live,
                     });
-                    p += MR;
+                    p += mr;
                 }
             }
             pos += run.len;

@@ -1,5 +1,6 @@
 //! The element-type layer of the packed engine: the sealed [`Scalar`]
-//! trait (f32/f64) and the per-dtype register-tile geometry.
+//! trait (f32/f64), the per-dtype register-tile geometry, and the
+//! storage/accumulation precision split.
 //!
 //! The paper's associativity-lattice model is parameterized by cache
 //! geometry in *elements per line*, so the element size must flow through
@@ -11,14 +12,24 @@
 //! [`Scalar::NR_WIDE`] — f32 doubles f64's widths), and the ULP-scaled
 //! differential-test tolerance ([`Scalar::ulp_tol`]).
 //!
-//! [`MicroShape`] names a register-tile *width class* (narrow/wide), not
-//! an absolute column count: the startup autotuner
-//! ([`super::autotune::calibrate_dtype`]) picks one winner per dtype and
-//! the engine resolves the class to the dtype's actual width at dispatch
-//! ([`Scalar::nr`]). The trait is sealed: the packed panel layouts and
-//! the dispatch matches below enumerate exactly these two types.
+//! [`MicroShape`] names a point on the 2-D register-tile geometry grid —
+//! an (MR-class, NR-class) pair, not an absolute shape: the startup
+//! autotuner ([`super::autotune::calibrate_dtype`]) races the whole grid
+//! per dtype and the engine resolves the winner to the dtype's actual
+//! `(MR, NR)` at dispatch ([`MicroShape::dims_for`]). The 8-row classes
+//! keep the per-dtype width doubling (8×4/8×6 f64 → 8×8/8×12 f32); the
+//! 16-row classes trade width for height and keep the f64 column counts
+//! at both dtypes (16×4/16×6), which is where an FMA-rich f32 target
+//! earns its throughput without blowing the panel working set.
+//!
+//! [`Precision`] is the kubecl-style storage/accumulation *pair*: packs
+//! and stores at `store`, accumulates each register tile at `acc`. The
+//! mixed `f32acc64` mode keeps f32 panel bandwidth but runs every FMA in
+//! f64 and rounds once per store — [`Accum`] is the accumulator-element
+//! abstraction the microkernel is generic over, with the identity
+//! blanket impl (acc == store) and the widening `f64`-for-`f32` impl.
 
-use super::microkernel::{MR, NR, NR_WIDE};
+use super::microkernel::{MR, MR_TALL, NR, NR_WIDE};
 
 /// Runtime tag of a supported element type — what the registry keys its
 /// per-dtype autotune winners by and the CLI parses from `--dtype`.
@@ -72,38 +83,133 @@ impl DType {
     }
 }
 
-/// A register-tile width class. The column count is per-dtype
-/// ([`MicroShape::nr_for`]): f32 panels are twice as wide as f64 panels
-/// for the same class, because twice as many elements fit one vector
-/// register / cacheline.
+/// The storage/accumulation precision pair of one execution (after
+/// kubecl's `MatmulPrecision`: precision is a *pair* of element types,
+/// not a scalar). `store` is the dtype of the arena, the packed panels
+/// and the outputs; `acc` the dtype each register tile accumulates at
+/// before the single rounding store. The two supported pure modes have
+/// `acc == store`; the mixed mode is f32 storage with f64 accumulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Precision {
+    pub store: DType,
+    pub acc: DType,
+}
+
+impl Precision {
+    /// Pure f32: f32 panels, f32 accumulators.
+    pub const F32: Precision = Precision {
+        store: DType::F32,
+        acc: DType::F32,
+    };
+    /// Pure f64.
+    pub const F64: Precision = Precision {
+        store: DType::F64,
+        acc: DType::F64,
+    };
+    /// Mixed serve mode: f32 panels (full f32 pack bandwidth), f64
+    /// register-tile accumulation, one rounding per store.
+    pub const F32ACC64: Precision = Precision {
+        store: DType::F32,
+        acc: DType::F64,
+    };
+
+    /// The pure (acc == store) precision of a dtype.
+    pub fn of(dtype: DType) -> Precision {
+        Precision {
+            store: dtype,
+            acc: dtype,
+        }
+    }
+
+    /// Parse a CLI spelling: `f32`, `f64`, or `f32acc64`.
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f64" => Some(Precision::F64),
+            "f32acc64" => Some(Precision::F32ACC64),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match (self.store, self.acc) {
+            (DType::F32, DType::F32) => "f32",
+            (DType::F64, DType::F64) => "f64",
+            (DType::F32, DType::F64) => "f32acc64",
+            // no mode narrows the accumulator below storage
+            (DType::F64, DType::F32) => "f64acc32(unsupported)",
+        }
+    }
+
+    /// True when the accumulator is wider than storage (the `f32acc64`
+    /// register-tile path).
+    pub fn wide_acc(self) -> bool {
+        self.acc != self.store
+    }
+}
+
+/// A point on the 2-D register-tile geometry grid: an (MR-class,
+/// NR-class) pair. The resolved `(MR, NR)` is per-dtype
+/// ([`MicroShape::dims_for`]): the 8-row classes double their column
+/// count at f32 (twice as many elements fit one vector register /
+/// cacheline), the 16-row classes spend those lanes on rows instead and
+/// keep the f64 column counts at both dtypes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MicroShape {
     /// The compile-time default: 8×4 at f64, 8×8 at f32.
     Mr8Nr4,
     /// The wide-vector candidate: 8×6 at f64, 8×12 at f32.
     Mr8Nr6,
+    /// The tall candidate: 16×4 at both dtypes.
+    Mr16Nr4,
+    /// The tall wide candidate: 16×6 at both dtypes (the f32 16×6 tile).
+    Mr16Nr6,
 }
 
 impl MicroShape {
+    /// Every point of the per-dtype autotune grid, in the deterministic
+    /// race order ([`super::autotune::calibrate_dtype`]). The same four
+    /// classes are raced at each dtype; resolution differs
+    /// ([`MicroShape::dims_for`]).
+    pub const CANDIDATES: [MicroShape; 4] = [
+        MicroShape::Mr8Nr4,
+        MicroShape::Mr8Nr6,
+        MicroShape::Mr16Nr4,
+        MicroShape::Mr16Nr6,
+    ];
+
+    /// Register-tile rows of this shape — dtype-independent (rows are
+    /// the packed panel height, not a vector-lane count).
+    pub fn mr(self) -> usize {
+        match self {
+            MicroShape::Mr8Nr4 | MicroShape::Mr8Nr6 => MR,
+            MicroShape::Mr16Nr4 | MicroShape::Mr16Nr6 => MR_TALL,
+        }
+    }
+
     /// `(MR, NR)` of the shape at f64 (the legacy accessor; use
     /// [`MicroShape::dims_for`] for dtype-aware reporting).
     pub fn dims(self) -> (usize, usize) {
         self.dims_for(DType::F64)
     }
 
-    /// Register-tile columns of this width class at `dtype`.
+    /// Register-tile columns of this shape at `dtype`.
     pub fn nr_for(self, dtype: DType) -> usize {
         match (self, dtype) {
             (MicroShape::Mr8Nr4, DType::F64) => NR,
             (MicroShape::Mr8Nr6, DType::F64) => NR_WIDE,
             (MicroShape::Mr8Nr4, DType::F32) => 2 * NR,
             (MicroShape::Mr8Nr6, DType::F32) => 2 * NR_WIDE,
+            // tall shapes spend the lanes on rows: f64 column counts at
+            // both dtypes
+            (MicroShape::Mr16Nr4, _) => NR,
+            (MicroShape::Mr16Nr6, _) => NR_WIDE,
         }
     }
 
-    /// `(MR, NR)` of this width class at `dtype`.
+    /// `(MR, NR)` of this shape at `dtype`.
     pub fn dims_for(self, dtype: DType) -> (usize, usize) {
-        (MR, self.nr_for(dtype))
+        (self.mr(), self.nr_for(dtype))
     }
 
     /// Human-readable `MRxNR` at f64 (legacy; see
@@ -112,6 +218,8 @@ impl MicroShape {
         match self {
             MicroShape::Mr8Nr4 => "8x4",
             MicroShape::Mr8Nr6 => "8x6",
+            MicroShape::Mr16Nr4 => "16x4",
+            MicroShape::Mr16Nr6 => "16x6",
         }
     }
 
@@ -120,7 +228,7 @@ impl MicroShape {
     ///
     /// [`Plan::describe`]: crate::coordinator::Plan::describe
     pub fn label_for(self, dtype: DType) -> String {
-        format!("{}x{}", MR, self.nr_for(dtype))
+        format!("{}x{}", self.mr(), self.nr_for(dtype))
     }
 }
 
@@ -132,8 +240,8 @@ mod sealed {
 
 /// A packed-engine element type. Sealed to f32/f64: the microkernels,
 /// packers, executors and buffers are generic over `T: Scalar`, and every
-/// width-dispatch site enumerates exactly the widths these two types
-/// declare.
+/// geometry-dispatch site enumerates exactly the `(MR, NR)` pairs these
+/// two types resolve the grid to.
 pub trait Scalar:
     sealed::Sealed
     + Copy
@@ -163,17 +271,18 @@ pub trait Scalar:
     const NR_WIDE: usize;
     /// Machine epsilon, as f64.
     const EPS: f64;
+    /// The widened accumulator element for this storage type (the
+    /// `acc64` register-tile path): f64 for f32 storage, f64 (identity)
+    /// for f64 storage.
+    type Acc: Accum<Self>;
 
     fn from_f64(v: f64) -> Self;
     fn to_f64(self) -> f64;
 
-    /// The register-tile column count this type dispatches for a width
-    /// class.
+    /// The register-tile column count this type dispatches for a
+    /// geometry class.
     fn nr(micro: MicroShape) -> usize {
-        match micro {
-            MicroShape::Mr8Nr4 => Self::NR,
-            MicroShape::Mr8Nr6 => Self::NR_WIDE,
-        }
+        micro.nr_for(Self::DTYPE)
     }
 
     /// ULP-scaled differential-test tolerance for a depth-`depth`
@@ -187,6 +296,67 @@ pub trait Scalar:
     }
 }
 
+/// A register-tile accumulator element over storage type `T`: the
+/// microkernels accumulate `[[A; MR]; NR]` tiles at `A`'s precision and
+/// fold into the `T` output with a single rounding per element
+/// ([`Accum::fold`]). The identity blanket impl (`A == T`) is the pure
+/// path; `f64` over `f32` is the mixed `f32acc64` path — each product is
+/// formed exactly in f64 (a product of two f32 values is exactly
+/// representable in f64), summed in f64, and rounded once at the store.
+pub trait Accum<T: Scalar>: Copy + Send + Sync + 'static {
+    const ZERO: Self;
+    /// One FMA step at the accumulator's precision: `self += b·c`.
+    fn fma(&mut self, b: T, c: T);
+    /// Sum two accumulator lanes at the accumulator's precision (the
+    /// unrolled dot kernel's lane combine).
+    fn add(self, other: Self) -> Self;
+    /// Fold the accumulated sum into a stored element: `prev + self` at
+    /// the accumulator's precision, rounded once to `T`.
+    fn fold(self, prev: T) -> T;
+}
+
+/// Pure path: accumulate at storage precision.
+impl<T: Scalar> Accum<T> for T {
+    const ZERO: T = T::ZERO;
+
+    #[inline(always)]
+    fn fma(&mut self, b: T, c: T) {
+        *self += b * c;
+    }
+
+    #[inline(always)]
+    fn add(self, other: T) -> T {
+        self + other
+    }
+
+    #[inline(always)]
+    fn fold(self, prev: T) -> T {
+        prev + self
+    }
+}
+
+/// Mixed path: f64 accumulation over f32 panels. Each f32·f32 product is
+/// exact in f64; the previous stored value is widened before the add, so
+/// the entire update rounds exactly once (at the final `as f32`).
+impl Accum<f32> for f64 {
+    const ZERO: f64 = 0.0;
+
+    #[inline(always)]
+    fn fma(&mut self, b: f32, c: f32) {
+        *self += (b as f64) * (c as f64);
+    }
+
+    #[inline(always)]
+    fn add(self, other: f64) -> f64 {
+        self + other
+    }
+
+    #[inline(always)]
+    fn fold(self, prev: f32) -> f32 {
+        ((prev as f64) + self) as f32
+    }
+}
+
 impl Scalar for f64 {
     const ZERO: f64 = 0.0;
     const ONE: f64 = 1.0;
@@ -195,6 +365,9 @@ impl Scalar for f64 {
     const NR: usize = super::microkernel::NR;
     const NR_WIDE: usize = super::microkernel::NR_WIDE;
     const EPS: f64 = f64::EPSILON;
+    // f64 has no wider accumulator: the acc64 path degenerates to the
+    // identity (pure f64)
+    type Acc = f64;
 
     fn from_f64(v: f64) -> f64 {
         v
@@ -213,6 +386,7 @@ impl Scalar for f32 {
     const NR: usize = 2 * super::microkernel::NR;
     const NR_WIDE: usize = 2 * super::microkernel::NR_WIDE;
     const EPS: f64 = f32::EPSILON as f64;
+    type Acc = f64;
 
     fn from_f64(v: f64) -> f32 {
         v as f32
@@ -239,6 +413,38 @@ mod tests {
     }
 
     #[test]
+    fn tall_shapes_keep_f64_widths_at_both_dtypes() {
+        for dtype in [DType::F32, DType::F64] {
+            assert_eq!(MicroShape::Mr16Nr4.dims_for(dtype), (16, 4));
+            assert_eq!(MicroShape::Mr16Nr6.dims_for(dtype), (16, 6));
+        }
+        assert_eq!(MicroShape::Mr16Nr6.label_for(DType::F32), "16x6");
+        assert_eq!(MicroShape::Mr16Nr4.name(), "16x4");
+        assert_eq!(MicroShape::Mr16Nr4.mr(), 16);
+        assert_eq!(MicroShape::Mr8Nr6.mr(), 8);
+    }
+
+    /// The grid resolves to exactly the six `(MR, NR)` pairs the const
+    /// dispatch sites instantiate — a new variant or dtype that resolves
+    /// elsewhere must extend the kernel arms, and this pins it.
+    #[test]
+    fn grid_resolution_is_closed_over_the_kernel_arms() {
+        const ARMS: [(usize, usize); 6] =
+            [(8, 4), (8, 6), (8, 8), (8, 12), (16, 4), (16, 6)];
+        for shape in MicroShape::CANDIDATES {
+            for dtype in [DType::F32, DType::F64] {
+                let dims = shape.dims_for(dtype);
+                assert!(
+                    ARMS.contains(&dims),
+                    "{shape:?} at {} resolves to {dims:?}, outside the \
+                     instantiated kernel arms",
+                    dtype.name()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn dtype_roundtrips() {
         for d in [DType::F32, DType::F64] {
             assert_eq!(DType::from_elem(d.elem()), Some(d));
@@ -247,6 +453,46 @@ mod tests {
         assert_eq!(DType::from_elem(2), None);
         assert_eq!(DType::parse("f16"), None);
         assert_ne!(DType::F32.index(), DType::F64.index());
+    }
+
+    #[test]
+    fn precision_parses_and_names_all_three_modes() {
+        for (s, p) in [
+            ("f32", Precision::F32),
+            ("f64", Precision::F64),
+            ("f32acc64", Precision::F32ACC64),
+        ] {
+            assert_eq!(Precision::parse(s), Some(p));
+            assert_eq!(p.name(), s);
+        }
+        assert_eq!(Precision::parse("f64acc32"), None);
+        assert!(Precision::F32ACC64.wide_acc());
+        assert!(!Precision::F32.wide_acc());
+        assert!(!Precision::F64.wide_acc());
+        assert_eq!(Precision::of(DType::F32), Precision::F32);
+        assert_eq!(Precision::of(DType::F64), Precision::F64);
+    }
+
+    /// The widening accumulator's contract: products exact, one rounding
+    /// at the fold.
+    #[test]
+    fn f64_accumulator_over_f32_rounds_once() {
+        // 1 + 2^-12 is exact in f32; its square is not — the pure-f32
+        // accumulator rounds each product, the f64 accumulator keeps it
+        let b = 1.0f32 + 2.0f32.powi(-12);
+        let mut wide = <f64 as Accum<f32>>::ZERO;
+        wide.fma(b, b);
+        assert_eq!(wide, (b as f64) * (b as f64));
+        let mut pure = <f32 as Accum<f32>>::ZERO;
+        pure.fma(b, b);
+        assert_eq!(pure, b * b);
+        // fold: one rounding of (prev_f64 + acc)
+        let prev = 3.5f32;
+        assert_eq!(wide.fold(prev), ((prev as f64) + wide) as f32);
+        // identity impl at f64
+        let mut id = <f64 as Accum<f64>>::ZERO;
+        id.fma(2.0, 3.0);
+        assert_eq!(id.fold(1.0), 7.0);
     }
 
     #[test]

@@ -97,7 +97,7 @@ pub use faults::{FaultMode, FaultPoint, Faults};
 pub use metrics::Metrics;
 pub use planner::{Plan, Planner};
 pub use service::{
-    Backend, JobError, ResultReceiver, Service, ServiceClient, ServiceConfig, SubmitError,
+    Backend, Health, JobError, ResultReceiver, Service, ServiceClient, ServiceConfig, SubmitError,
 };
 
 /// Lock a mutex, recovering the guard if a previous holder panicked.

@@ -31,7 +31,7 @@ use std::sync::{Arc, Mutex};
 use super::faults::{self, FaultMode, FaultPoint, Faults};
 use super::lock_unpoisoned;
 use crate::cache::CacheSpec;
-use crate::codegen::{DType, GemmForm, MicroShape};
+use crate::codegen::{DType, GemmForm, MicroShape, Precision};
 use crate::domain::{ops, Kernel};
 use crate::runtime::Registry;
 use crate::tiling;
@@ -41,8 +41,14 @@ use crate::tiling;
 pub struct Plan {
     /// Kernel name (`matmul`, `convolution`, `kronecker`, …).
     pub kernel: String,
-    /// Element type the plan was modelled (and will execute) at.
+    /// Element type the plan was modelled (and will execute) at — the
+    /// **storage** dtype of [`Plan::precision`].
     pub dtype: DType,
+    /// Storage/accumulation precision pair of the execution. Pure modes
+    /// have `acc == store == dtype`; the `f32acc64` serve mode keeps f32
+    /// storage (so the cache model, packing and plan shapes are the f32
+    /// ones) but accumulates register tiles in f64.
+    pub precision: Precision,
     /// GEMM-normal dimensions of the planned shape (rows, reduction,
     /// columns — for matmul exactly `m`, `k`, `n`).
     pub m: usize,
@@ -58,9 +64,10 @@ pub struct Plan {
     /// L2 + L3-slice specs, at the plan's element size and the kernel's
     /// own GEMM form).
     pub level: tiling::LevelPlan,
-    /// Register-tile width class the engine dispatches (the dtype's
-    /// startup-autotune winner when the registry recorded one; narrow
-    /// otherwise). Resolves to 8×4/8×6 at f64, 8×8/8×12 at f32.
+    /// Register-tile geometry class the engine dispatches (the dtype's
+    /// startup 2-D (MR, NR) grid-race winner when the registry recorded
+    /// one; 8×4 otherwise). Resolves to 8×4/8×6/16×4/16×6 at f64 and
+    /// 8×8/8×12/16×4/16×6 at f32 ([`MicroShape::dims_for`]).
     pub micro: MicroShape,
     /// Name of the AOT artifact chosen to realize it (matmul shapes), or
     /// the in-process packed engine for other kernels.
@@ -72,16 +79,17 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// One-line report of the plan including the dtype, the multi-level
-    /// block shape (macro blocks + L3 super-band) and the per-dtype
-    /// register-tile width.
+    /// One-line report of the plan including the precision mode, the
+    /// multi-level block shape (macro blocks + L3 super-band) and the
+    /// per-dtype register-tile geometry. Pure modes print the dtype
+    /// (`/f64`); the mixed mode prints `/f32acc64`.
     pub fn describe(&self) -> String {
         format!(
             "{} [{}/{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, super m3={} n3={}, \
              micro {}, artifact {}",
             self.plan_name,
             self.kernel,
-            self.dtype.name(),
+            self.precision.name(),
             self.m,
             self.k,
             self.n,
@@ -164,10 +172,28 @@ impl Planner {
     /// conflict lattice depends on the leading dimension *and* the
     /// element size, both of which are preserved.
     pub fn plan(&self, registry: &Registry, m: usize, k: usize, n: usize, dtype: DType) -> Plan {
+        self.plan_with_precision(registry, m, k, n, Precision::of(dtype))
+    }
+
+    /// [`Planner::plan`] at an explicit storage/accumulation precision
+    /// pair: the plan is modelled at the **storage** dtype (the arena,
+    /// packed panels and cache footprints are storage-sized), and the
+    /// precision rides the plan into the execution layer, which widens
+    /// register-tile accumulation when `precision.wide_acc()`. Mixed and
+    /// pure plans of the same shape occupy distinct cache slots.
+    pub fn plan_with_precision(
+        &self,
+        registry: &Registry,
+        m: usize,
+        k: usize,
+        n: usize,
+        precision: Precision,
+    ) -> Plan {
+        let dtype = precision.store;
         // distinct cache namespace from `plan_kernel` — the two entry
         // points resolve different artifacts for the same matmul extents
         let key = (
-            format!("matmul#aot#{}", dtype.name()),
+            format!("matmul#aot#{}", precision.name()),
             vec![m as i64, n as i64, k as i64],
         );
         self.cached_or_plan(key, |this| {
@@ -183,6 +209,7 @@ impl Planner {
                 0,
             );
             let mut plan = this.plan_shape(registry, &kernel, (m, n, k), dtype);
+            plan.precision = precision;
             // resolve the AOT artifact against the *true* shape
             plan.artifact = registry
                 .closest_variant(m, k, n, plan.model_tile)
@@ -279,6 +306,7 @@ impl Planner {
         Plan {
             kernel: kernel.name().to_string(),
             dtype,
+            precision: Precision::of(dtype),
             m,
             k,
             n,
@@ -337,6 +365,7 @@ impl Planner {
         Plan {
             kernel: kernel.name().to_string(),
             dtype,
+            precision: Precision::of(dtype),
             m,
             k,
             n,
@@ -519,7 +548,7 @@ mod tests {
 
     #[test]
     fn plan_reports_recorded_micro_shape() {
-        let mut reg = Registry::default();
+        let reg = Registry::default();
         reg.set_micro_shape(MicroShape::Mr8Nr6);
         let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan(&reg, 64, 64, 64, DType::F64);
@@ -533,7 +562,7 @@ mod tests {
         // plan must select a strictly larger macro footprint than the f64
         // plan (element size reaches the selector), carry dtype F32, and
         // report the *f32* autotune winner (8×12, not 8×6)
-        let mut reg = Registry::default();
+        let reg = Registry::default();
         reg.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr4);
         reg.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
         let planner = Planner::new(CacheSpec::HASWELL_L1D);
@@ -616,6 +645,39 @@ mod tests {
         assert!(!fell_back);
         assert_ne!(p.plan_name, "parameter-free flat fallback");
         assert_eq!(planner.cached_plans(), 1);
+    }
+
+    #[test]
+    fn plan_with_precision_carries_the_mixed_mode() {
+        // the f32acc64 plan models at f32 storage (same shapes as the
+        // pure f32 plan), reports the mixed mode, and occupies its own
+        // cache slot
+        let reg = Registry::default();
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let pure = planner.plan(&reg, 64, 64, 64, DType::F32);
+        let mixed = planner.plan_with_precision(&reg, 64, 64, 64, Precision::F32ACC64);
+        assert_eq!(mixed.dtype, DType::F32);
+        assert_eq!(mixed.precision, Precision::F32ACC64);
+        assert!(mixed.precision.wide_acc());
+        assert_eq!(pure.precision, Precision::F32);
+        assert!(!pure.precision.wide_acc());
+        // identical storage dtype → identical modelled shapes
+        assert_eq!(mixed.level, pure.level);
+        assert_eq!(mixed.model_tile, pure.model_tile);
+        assert!(mixed.describe().contains("/f32acc64"), "{}", mixed.describe());
+        assert!(!pure.describe().contains("acc64"), "{}", pure.describe());
+        assert_eq!(planner.cached_plans(), 2, "precisions must not share a slot");
+    }
+
+    #[test]
+    fn plan_reports_tall_grid_winners() {
+        // a recorded 16-row grid winner must be dispatched and described
+        let reg = Registry::default();
+        reg.set_micro_shape_for(DType::F64, MicroShape::Mr16Nr6);
+        let planner = Planner::new(CacheSpec::HASWELL_L1D);
+        let p = planner.plan(&reg, 64, 64, 64, DType::F64);
+        assert_eq!(p.micro, MicroShape::Mr16Nr6);
+        assert!(p.describe().contains("micro 16x6"), "{}", p.describe());
     }
 
     #[test]

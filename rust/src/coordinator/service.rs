@@ -41,7 +41,10 @@
 //!   ([`run_macro_prepacked_cols`]); batches whose widened shape spans
 //!   several L3 super-bands can route through the parallel super-band
 //!   scheduler ([`run_parallel_macro_prepacked`]) with the resident row
-//!   panels shared read-only across workers.
+//!   panels shared read-only across workers. The native path serves two
+//!   precision modes ([`ServiceConfig::precision`]): pure `f32`, and
+//!   `f32acc64` — f32 storage and panels, f64 register accumulation
+//!   with one rounding per `kc` slice.
 //!
 //! The worker thread runs under a **supervisor** ([`supervise`]): each
 //! loop iteration and each batch execution is wrapped in `catch_unwind`,
@@ -74,11 +77,13 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::CacheSpec;
-use crate::codegen::executor::{pack_row_slices, run_macro_prepacked_cols, super_band_extents};
-use crate::codegen::parallel::run_parallel_macro_prepacked;
+use crate::codegen::executor::{
+    pack_row_slices_mr, run_macro_prepacked_cols_acc, super_band_extents,
+};
+use crate::codegen::parallel::run_parallel_macro_prepacked_acc;
 use crate::codegen::{
     autotune, kernel_views, DType, GemmForm, KernelBuffers, MicroShape, PackedCols, PackedRows,
-    RunPlan,
+    Precision, RunPlan,
 };
 use crate::domain::{ops, Kernel};
 use crate::runtime::{ArtifactKind, Engine, Registry};
@@ -406,6 +411,24 @@ impl Service {
         &self.plan
     }
 
+    /// Point-in-time health/readiness probe — cheap enough for a tight
+    /// poll loop (two atomic loads, one uncontended lock). Load-balancer
+    /// semantics: [`Health::ready`] means new submissions have a live
+    /// worker and at least one free queue slot *right now*; a probe
+    /// taken during a supervisor respawn window still reports the
+    /// worker alive (the thread is running its recovery path), with
+    /// `worker_restarts` counting how many respawns the supervisor has
+    /// performed since start.
+    pub fn health(&self) -> Health {
+        Health {
+            worker_alive: !self.handle.is_finished(),
+            stopping: self.stopped.load(Ordering::SeqCst),
+            queue_depth: self.depth.load(Ordering::SeqCst),
+            queue_cap: self.queue_cap,
+            worker_restarts: lock_unpoisoned(&self.metrics).worker_restarts,
+        }
+    }
+
     /// A cloneable submission handle for client threads.
     pub fn client(&self) -> ServiceClient {
         ServiceClient {
@@ -419,6 +442,50 @@ impl Service {
             m: self.m,
             k: self.k,
         }
+    }
+}
+
+/// One [`Service::health`] probe: worker liveness, queue pressure and
+/// the supervisor's restart count. Render with `to_string()` for a
+/// one-line status (the `serve` CLI prints it alongside the metrics
+/// report).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Health {
+    /// The supervised worker thread is running (a respawn after a
+    /// contained panic keeps it alive; `false` means the thread itself
+    /// exited — stopping, or something the supervisor could not catch).
+    pub worker_alive: bool,
+    /// [`Service::stop`] has begun; new submissions are rejected.
+    pub stopping: bool,
+    /// Jobs currently in flight (accepted, not yet answered).
+    pub queue_depth: usize,
+    /// The admission bound ([`ServiceConfig::queue_cap`]).
+    pub queue_cap: usize,
+    /// Worker respawns the supervisor has performed since start
+    /// (`Metrics::worker_restarts`, sampled live).
+    pub worker_restarts: u64,
+}
+
+impl Health {
+    /// Readiness: a submission made right now would find a live worker
+    /// and a free queue slot. Restarts do not affect readiness — a
+    /// respawned worker serves over the same resident state.
+    pub fn ready(&self) -> bool {
+        self.worker_alive && !self.stopping && self.queue_depth < self.queue_cap
+    }
+}
+
+impl std::fmt::Display for Health {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker={} queue={}/{} restarts={} ready={}",
+            if self.worker_alive { "alive" } else { "dead" },
+            self.queue_depth,
+            self.queue_cap,
+            self.worker_restarts,
+            self.ready()
+        )
     }
 }
 
@@ -446,6 +513,12 @@ pub struct ServiceConfig {
     pub spec: CacheSpec,
     /// Execution engine: PJRT artifacts or the native packed kernel.
     pub backend: Backend,
+    /// Serving precision. Storage must be f32 (job buffers are `f32`);
+    /// [`Precision::F32ACC64`] keeps the f32 panels and plan geometry
+    /// but accumulates every register tile in f64, rounding once per
+    /// `kc` slice — native backend only (the PJRT artifacts compute
+    /// pure f32).
+    pub precision: Precision,
     /// Per-request queue-wait deadline: jobs still queued past it are
     /// shed at dispatch with [`JobError::DeadlineExceeded`] instead of
     /// computed. `None` (the default) never sheds.
@@ -471,6 +544,7 @@ impl Default for ServiceConfig {
             threads: 1,
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
+            precision: Precision::F32,
             deadline: None,
             drain_timeout: Duration::from_secs(5),
             faults: Faults::none(),
@@ -509,7 +583,16 @@ impl Service {
     /// aborting the worker thread), then spawns the supervised worker
     /// that owns the engine.
     pub fn start(artifact_dir: &Path, y: Vec<f32>, cfg: ServiceConfig) -> Result<Service> {
-        let mut registry = match cfg.backend {
+        anyhow::ensure!(
+            cfg.precision.store == DType::F32,
+            "serving stores f32 job buffers; --dtype {} cannot be served",
+            cfg.precision.name()
+        );
+        anyhow::ensure!(
+            cfg.backend == Backend::Native || !cfg.precision.wide_acc(),
+            "f32acc64 needs the native backend (PJRT artifacts compute pure f32)"
+        );
+        let registry = match cfg.backend {
             Backend::Pjrt => Registry::load(artifact_dir)?,
             // the native engine needs no artifacts; keep whatever loads
             // so mixed deployments can still resolve PJRT names
@@ -610,6 +693,10 @@ impl Service {
                 let level = serving_level(&job_plan.level, &wide_plan.level);
                 let mut plan = job_plan;
                 plan.level = level;
+                // the serve precision rides on the plan: same f32 storage,
+                // shapes and geometry either way, but describe() and the
+                // dispatch below see the accumulate mode
+                plan.precision = cfg.precision;
                 // the executed kernel is the transpose lowering (GEMM rows
                 // = serve columns); surface the serve shape and the
                 // coalescing width so plan lines are readable next to the
@@ -625,6 +712,7 @@ impl Service {
                     &y,
                     level,
                     plan.micro,
+                    plan.precision.wide_acc(),
                     max_batch,
                     threads,
                     faults.clone(),
@@ -729,6 +817,9 @@ struct NativeMatmul {
     plan: RunPlan,
     level: LevelPlan,
     micro: MicroShape,
+    /// Wide-accumulation serve mode (`f32acc64`): register tiles
+    /// accumulate in f64 over the same f32 panels.
+    acc64: bool,
     bufs: KernelBuffers<f32>,
     /// `y`'s row panels, one [`PackedRows`] per reduction slice — packed
     /// once at startup, shared by every batch (`y` never changes).
@@ -758,6 +849,7 @@ impl NativeMatmul {
         y: &[f32],
         level: LevelPlan,
         micro: MicroShape,
+        acc64: bool,
         max_batch: usize,
         threads: usize,
         faults: Faults,
@@ -772,14 +864,17 @@ impl NativeMatmul {
         let lo = vec![0i64; kernel.n_free()];
         let plan = gf.plan_box(&kernel_views(&kernel), &lo, kernel.extents());
         // y is resident for the service's lifetime: pack its row panels
-        // exactly once, here — they depend only on rows × reduction, so
-        // one set serves every batch width
-        let rows = pack_row_slices(&bufs.arena, &plan, &level);
+        // exactly once, here, at the dispatched geometry's panel height —
+        // they depend only on rows × reduction × mr, so one set serves
+        // every batch width (a 16-row autotune winner needs 16-row
+        // panels: the prepacked entry points reject a height mismatch)
+        let rows = pack_row_slices_mr(&bufs.arena, &plan, &level, micro.mr());
         Ok(NativeMatmul {
             kernel,
             plan,
             level,
             micro,
+            acc64,
             bufs,
             rows,
             cols: PackedCols::new(),
@@ -828,7 +923,7 @@ impl NativeMatmul {
         let scope_faults = self.faults.clone();
         let col_packs = faults::with_scope(&scope_faults, || {
             if self.threads > 1 && grid > 1 {
-                run_parallel_macro_prepacked(
+                run_parallel_macro_prepacked_acc(
                     &mut self.bufs.arena,
                     &self.kernel,
                     &self.plan,
@@ -837,10 +932,11 @@ impl NativeMatmul {
                     &self.rows,
                     self.threads,
                     n_used,
+                    self.acc64,
                 )
                 .col_band_packs
             } else {
-                run_macro_prepacked_cols(
+                run_macro_prepacked_cols_acc(
                     &mut self.bufs.arena,
                     &self.plan,
                     &self.level,
@@ -848,6 +944,7 @@ impl NativeMatmul {
                     &self.rows,
                     &mut self.cols,
                     n_used,
+                    self.acc64,
                 )
             }
         });
@@ -1467,6 +1564,161 @@ mod tests {
     }
 
     #[test]
+    fn wide_accumulation_serves_and_tightens_the_error() {
+        // --dtype f32acc64 end to end: same f32 job buffers, same plan
+        // geometry, f64 register accumulation. The serve results must be
+        // correct, the plan must report the mixed mode, and against an
+        // all-f64 oracle the wide path must be at least as accurate as
+        // the pure-f32 service on the same jobs
+        let (m, k, n) = (45usize, 33, 52);
+        let mut rnd = xorshift_f32(0xACC5);
+        let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..m * k).map(|_| rnd()).collect())
+            .collect();
+        // f64 oracle over the f32 inputs
+        let oracle = |x: &[f32]| -> Vec<f64> {
+            let mut out = vec![0f64; m * n];
+            for i in 0..m {
+                for kk in 0..k {
+                    let xv = x[i * k + kk] as f64;
+                    for j in 0..n {
+                        out[i * n + j] += xv * y[kk * n + j] as f64;
+                    }
+                }
+            }
+            out
+        };
+        let serve = |precision: Precision| -> Vec<Vec<f32>> {
+            let svc = Service::start(
+                Path::new("no-artifacts"),
+                y.clone(),
+                ServiceConfig {
+                    precision,
+                    ..native_config(m, k, n, Duration::from_millis(1))
+                },
+            )
+            .unwrap();
+            let plan = svc.plan().clone();
+            assert_eq!(plan.precision, precision, "{}", plan.describe());
+            assert!(
+                plan.describe().contains(precision.name()),
+                "{}",
+                plan.describe()
+            );
+            let rxs: Vec<_> = xs.iter().map(|x| svc.submit(x.clone()).unwrap()).collect();
+            let outs = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+            svc.stop();
+            outs
+        };
+        let pure = serve(Precision::F32);
+        let wide = serve(Precision::F32ACC64);
+        let max_err = |outs: &[Vec<f32>]| -> f64 {
+            outs.iter()
+                .zip(&xs)
+                .flat_map(|(got, x)| {
+                    let want = oracle(x);
+                    got.iter()
+                        .zip(want)
+                        .map(|(g, w)| (*g as f64 - w).abs())
+                        .collect::<Vec<f64>>()
+                })
+                .fold(0f64, f64::max)
+        };
+        let (perr, werr) = (max_err(&pure), max_err(&wide));
+        assert!(perr < 1e-3, "pure f32 serve off by {perr}");
+        assert!(werr < 1e-3, "f32acc64 serve off by {werr}");
+        assert!(
+            werr <= perr,
+            "wide accumulation must not lose accuracy: f32acc64 err {werr} vs f32 err {perr}"
+        );
+        // rejected combinations fail start() typed, not at dispatch
+        assert!(Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                precision: Precision::F64,
+                ..native_config(m, k, n, Duration::from_millis(1))
+            },
+        )
+        .is_err());
+        assert!(Service::start(
+            Path::new("no-artifacts"),
+            y.clone(),
+            ServiceConfig {
+                precision: Precision::F32ACC64,
+                backend: Backend::Pjrt,
+                ..native_config(m, k, n, Duration::from_millis(1))
+            },
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn health_probe_tracks_worker_queue_and_restarts() {
+        // the readiness satellite: a fresh service is ready; queued jobs
+        // show up as depth; a contained worker panic shows up as a
+        // restart with the respawned worker still alive and ready
+        let (m, k, n) = (16usize, 12, 20);
+        let y: Vec<f32> = vec![0.5; k * n];
+        let faults = Faults::seeded(0x41EA)
+            .fail_n(FaultPoint::BatchCompute, FaultMode::Panic, 1)
+            .build();
+        let svc = Service::start(
+            Path::new("no-artifacts"),
+            y,
+            ServiceConfig {
+                m,
+                k,
+                n,
+                batch_window: Duration::from_millis(60),
+                max_batch: 8,
+                backend: Backend::Native,
+                faults,
+                ..ServiceConfig::default()
+            },
+        )
+        .unwrap();
+        let h0 = svc.health();
+        assert!(h0.worker_alive && !h0.stopping && h0.ready(), "{h0}");
+        assert_eq!(
+            (h0.queue_depth, h0.queue_cap, h0.worker_restarts),
+            (0, 256, 0)
+        );
+        let rxs: Vec<_> = (0..3).map(|_| svc.submit(vec![0.5; m * k]).unwrap()).collect();
+        let h1 = svc.health();
+        assert!(
+            (1..=3).contains(&h1.queue_depth),
+            "in-flight jobs must show as depth: {h1}"
+        );
+        for rx in &rxs {
+            assert!(matches!(
+                rx.recv_timeout(Duration::from_secs(10)),
+                Some(Err(JobError::WorkerPanicked { .. }))
+            ));
+        }
+        // the last depth decrement races the receiver resolution — poll
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while svc.health().queue_depth != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let h2 = svc.health();
+        assert!(h2.worker_alive, "respawned worker must probe alive: {h2}");
+        assert!(h2.ready(), "{h2}");
+        assert_eq!(h2.worker_restarts, 1, "{h2}");
+        assert_eq!(h2.queue_depth, 0, "{h2}");
+        let line = h2.to_string();
+        assert!(
+            line.contains("worker=alive")
+                && line.contains("queue=0/256")
+                && line.contains("restarts=1")
+                && line.contains("ready=true"),
+            "{line}"
+        );
+        svc.stop();
+    }
+
+    #[test]
     fn native_backend_matches_pjrt_differentially() {
         // when artifacts are shipped, the two backends must agree on the
         // existing batching workload — the native engine is the PJRT
@@ -1674,6 +1926,7 @@ mod tests {
             &y,
             level,
             MicroShape::Mr8Nr4,
+            false,
             max_batch,
             1,
             Faults::none(),

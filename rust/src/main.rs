@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use latticetile::baseline::CompilerAnalog;
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
-use latticetile::codegen::{autotune, run_trace_only, DType, Scalar};
+use latticetile::codegen::{autotune, run_trace_only, DType, Precision, Scalar};
 use latticetile::conflict::MissModel;
 use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::domain::ops;
@@ -52,21 +52,25 @@ fn print_usage() {
 
 USAGE:
   latticetile analyze [--n N | --m M --k K --nn N] [--lda L]
-  latticetile plan    [--n N] [--samples S] [--dtype f32|f64]
+  latticetile plan    [--n N] [--samples S] [--dtype f32|f64|f32acc64]
   latticetile run     [--n N] [--strategy lattice|rect|O0|O2|O3|graphite|icc|pgi]
-                      [--dtype f32|f64]
+                      [--dtype f32|f64|f32acc64]
   latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy> [--full]
   latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
-                      [--backend pjrt|native] [--max-batch B] [--queue-cap Q]
+                      [--backend pjrt|native] [--dtype f32|f32acc64]
+                      [--max-batch B] [--queue-cap Q]
                       [--threads T] [--clients C] [--window-ms W]
                       [--deadline-ms D] [--inject-faults]
 
---dtype selects the element type the model and the packed engine run at
+--dtype selects the precision the model and the packed engine run at
 (f32 halves the element size, so plans get twice the elements per line
 and twice the register-tile width; compiler-analog strategies are
-f64-only). --backend native serves f32 through the in-process packed
-macro-kernel, no AOT artifacts needed; it coalesces up to --max-batch
-jobs per dispatch into one widened GEMM over the prepacked weights.
+f64-only). f32acc64 is the mixed mode: f32 storage, panels and plan
+geometry with f64 register accumulation, rounding once per kc slice —
+native execution paths only. --backend native serves f32 through the
+in-process packed macro-kernel, no AOT artifacts needed; it coalesces
+up to --max-batch jobs per dispatch into one widened GEMM over the
+prepacked weights.
 --queue-cap bounds in-flight jobs (over-capacity submits are rejected),
 --clients runs that many concurrent client threads, and --window-ms is
 the batch window measured from the first job of a batch. --deadline-ms
@@ -146,15 +150,15 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> i32 {
     0
 }
 
-fn parse_dtype(flags: &HashMap<String, String>) -> Option<DType> {
+fn parse_precision(flags: &HashMap<String, String>) -> Option<Precision> {
     match flags.get("dtype") {
-        None => Some(DType::F64),
+        None => Some(Precision::F64),
         Some(s) => {
-            let d = DType::parse(s);
-            if d.is_none() {
-                eprintln!("--dtype must be f32 or f64 (got {s:?})");
+            let p = Precision::parse(s);
+            if p.is_none() {
+                eprintln!("--dtype must be f32, f64 or f32acc64 (got {s:?})");
             }
-            d
+            p
         }
     }
 }
@@ -162,9 +166,10 @@ fn parse_dtype(flags: &HashMap<String, String>) -> Option<DType> {
 fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let n = geti(flags, "n", 128);
     let samples = geti(flags, "samples", 8) as usize;
-    let Some(dtype) = parse_dtype(flags) else {
+    let Some(precision) = parse_precision(flags) else {
         return 2;
     };
+    let dtype = precision.store;
     let spec = CacheSpec::HASWELL_L1D;
     let cap = 64i64.min(n);
     let kernel = ops::matmul_padded(cap, cap, cap, n, n, n, dtype.elem(), 0);
@@ -190,26 +195,36 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     }
     tab.print();
     // the full resolved plan (two-level macro shape + the per-dtype
-    // autotuned register-tile width) through the coordinator's planner
-    let mut reg = Registry::default();
+    // autotuned 2-D register-tile geometry) through the coordinator's
+    // planner — a mixed precision plans at its storage dtype and rides
+    // the accumulate mode on the plan
+    let reg = Registry::default();
     reg.set_micro_shape_for(DType::F64, autotune::calibrate_dtype::<f64>(500));
     reg.set_micro_shape_for(DType::F32, autotune::calibrate_dtype::<f32>(500));
     let planner = Planner::new(spec).with_sample_classes(samples);
-    let full = planner.plan_kernel(&reg, &ops::matmul(n, n, n, dtype.elem(), 0));
+    let full = if precision.wide_acc() {
+        planner.plan_with_precision(&reg, n as usize, n as usize, n as usize, precision)
+    } else {
+        planner.plan_kernel(&reg, &ops::matmul(n, n, n, dtype.elem(), 0))
+    };
     println!("\nresolved plan: {}", full.describe());
     0
 }
 
-/// Execute `kernel` under `plan` at `T` with the dtype's freshly
-/// calibrated register-tile width; returns the wall time.
+/// Execute `kernel` under `plan` at storage type `T` with the dtype's
+/// freshly calibrated register-tile geometry, accumulating wide when
+/// `precision` asks for it; returns the wall time.
 fn timed_packed_run<T: Scalar>(
     kernel: &latticetile::domain::Kernel,
     plan: TiledSchedule,
+    precision: Precision,
 ) -> Duration {
-    // one-shot startup calibration picks the register-tile width the
-    // packed engine dispatches for this dtype (8×4/8×6 at f64,
-    // 8×8/8×12 at f32)
-    let exec = TiledExecutor::new(plan).with_micro_shape(autotune::calibrate_dtype::<T>(500));
+    // one-shot startup calibration races the 2-D (MR, NR) grid and picks
+    // the geometry the packed engine dispatches for this dtype
+    // (8×4/8×6/16×4/16×6 at f64, 8×8/8×12/16×4/16×6 at f32)
+    let exec = TiledExecutor::new(plan)
+        .with_micro_shape(autotune::calibrate_dtype::<T>(500))
+        .with_precision(precision);
     let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, kernel);
@@ -222,7 +237,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         .get("strategy")
         .map(|s| s.as_str())
         .unwrap_or("lattice");
-    let Some(dtype) = parse_dtype(flags) else {
+    let Some(precision) = parse_precision(flags) else {
         return 2;
     };
     let spec = CacheSpec::HASWELL_L1D;
@@ -238,13 +253,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
         _ => None,
     };
     // compiler analogs model f64 compiler output only: force the
-    // effective dtype so the summary line reports what actually ran
-    let dtype = if analog.is_some() && dtype != DType::F64 {
+    // effective precision so the summary line reports what actually ran
+    let precision = if analog.is_some() && precision != Precision::F64 {
         eprintln!("compiler-analog strategies are f64-only; running f64");
-        DType::F64
+        Precision::F64
     } else {
-        dtype
+        precision
     };
+    let dtype = precision.store;
 
     let (misses, wall) = match analog {
         Some(a) => {
@@ -284,15 +300,15 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, &plan, &mut sim);
             let wall = match dtype {
-                DType::F64 => timed_packed_run::<f64>(&kernel, plan),
-                DType::F32 => timed_packed_run::<f32>(&kernel, plan),
+                DType::F64 => timed_packed_run::<f64>(&kernel, plan, precision),
+                DType::F32 => timed_packed_run::<f32>(&kernel, plan, precision),
             };
             (sim.stats().misses(), wall)
         }
     };
     println!(
         "n={n} strategy={strategy} dtype={}: simulated L1 misses={misses} wall={:?} ({:.2} GFLOP/s)",
-        dtype.name(),
+        precision.name(),
         wall,
         flops / wall.as_secs_f64() / 1e9
     );
@@ -611,6 +627,20 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
+    // serving stores f32 job buffers either way; f32acc64 widens the
+    // native backend's register accumulation to f64
+    let precision = match flags.get("dtype").map(|s| s.as_str()) {
+        None | Some("f32") => Precision::F32,
+        Some("f32acc64") if backend == Backend::Native => Precision::F32ACC64,
+        Some("f32acc64") => {
+            eprintln!("--dtype f32acc64 needs --backend native");
+            return 2;
+        }
+        Some(other) => {
+            eprintln!("serve --dtype must be f32 or f32acc64 (got {other:?})");
+            return 2;
+        }
+    };
 
     match (backend, Registry::load(std::path::Path::new(&dir))) {
         (_, Ok(r)) => println!("loaded {} artifacts from {dir}", r.artifacts().len()),
@@ -644,6 +674,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             threads,
             spec: CacheSpec::HASWELL_L1D,
             backend,
+            precision,
             deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
             faults,
             ..ServiceConfig::default()
@@ -651,6 +682,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
     )
     .expect("service start");
     println!("serving with {}", svc.plan().describe());
+    println!("health: {}", svc.health());
 
     // each client submits its share as a burst (so the batcher has
     // something to coalesce), retrying politely when the bounded queue
@@ -705,6 +737,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
         }
     });
     let wall = t0.elapsed();
+    println!("health: {}", svc.health());
     let (metrics, _) = svc.stop();
     println!(
         "served {ok_total}/{total} jobs ({m}x{k}x{n}) from {clients} client(s) in {wall:?}\

@@ -7,6 +7,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use anyhow::{bail, Context, Result};
 
@@ -47,16 +48,64 @@ pub struct ArtifactMeta {
     pub batch: usize,
 }
 
+/// The per-dtype autotune winner slots, sharded the way the planner
+/// shards its plan cache: one lock **per dtype slot** (indexed by
+/// [`DType::index`](crate::codegen::DType::index)), so concurrent serve
+/// clients recording or reading different dtypes' winners never contend
+/// on a shared lock, and same-dtype reads hold their shard's lock only
+/// for a `Copy` load. Interior mutability keeps the recording path
+/// `&self` — a shared registry behind the serve supervisor can accept
+/// late calibration results without an exclusive borrow.
+#[derive(Debug, Default)]
+struct MicroShapeSlots {
+    slots: [Mutex<Option<crate::codegen::MicroShape>>; 2],
+}
+
+impl MicroShapeSlots {
+    fn get(&self, dtype: crate::codegen::DType) -> Option<crate::codegen::MicroShape> {
+        // the slot is plain Copy data: a lock poisoned by an unwinding
+        // writer loses nothing
+        *self.slots[dtype.index()]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn set(&self, dtype: crate::codegen::DType, shape: crate::codegen::MicroShape) {
+        *self.slots[dtype.index()]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner) = Some(shape);
+    }
+}
+
 /// Parsed manifest of all shipped artifacts.
-#[derive(Clone, Debug, Default)]
+#[derive(Debug, Default)]
 pub struct Registry {
     dir: PathBuf,
     artifacts: Vec<ArtifactMeta>,
-    /// Startup-calibrated register-tile width class, **per dtype**
-    /// ([`crate::codegen::autotune::calibrate_dtype`]), indexed by
-    /// [`DType::index`](crate::codegen::DType::index); `None` until a
-    /// host has run the one-shot calibration for that dtype.
-    micro_shape: [Option<crate::codegen::MicroShape>; 2],
+    /// Startup-calibrated register-tile geometry class, **per dtype**
+    /// ([`crate::codegen::autotune::calibrate_dtype`]); `None` until a
+    /// host has run the one-shot grid race for that dtype. Sharded —
+    /// see [`MicroShapeSlots`].
+    micro_shape: Arc<MicroShapeSlots>,
+}
+
+impl Clone for Registry {
+    fn clone(&self) -> Registry {
+        // snapshot the winner slots instead of sharing the Arc: a clone
+        // is an independent registry (the pre-sharding value semantics),
+        // not another handle onto the same calibration state
+        let micro_shape = Arc::new(MicroShapeSlots::default());
+        for dtype in [crate::codegen::DType::F32, crate::codegen::DType::F64] {
+            if let Some(shape) = self.micro_shape.get(dtype) {
+                micro_shape.set(dtype, shape);
+            }
+        }
+        Registry {
+            dir: self.dir.clone(),
+            artifacts: self.artifacts.clone(),
+            micro_shape,
+        }
+    }
 }
 
 impl Registry {
@@ -95,7 +144,7 @@ impl Registry {
         Ok(Registry {
             dir: dir.to_path_buf(),
             artifacts,
-            micro_shape: [None; 2],
+            micro_shape: Arc::new(MicroShapeSlots::default()),
         })
     }
 
@@ -103,36 +152,39 @@ impl Registry {
         &self.dir
     }
 
-    /// Record the startup-calibrated register-tile width class for f64
+    /// Record the startup-calibrated register-tile geometry for f64
     /// (legacy entry point; see [`Registry::set_micro_shape_for`]).
-    pub fn set_micro_shape(&mut self, shape: crate::codegen::MicroShape) {
+    pub fn set_micro_shape(&self, shape: crate::codegen::MicroShape) {
         self.set_micro_shape_for(crate::codegen::DType::F64, shape);
     }
 
-    /// The calibrated f64 register-tile width class, if calibration has
+    /// The calibrated f64 register-tile geometry, if calibration has
     /// run (legacy entry point; see [`Registry::micro_shape_for`]).
     pub fn micro_shape(&self) -> Option<crate::codegen::MicroShape> {
         self.micro_shape_for(crate::codegen::DType::F64)
     }
 
-    /// Record the startup-calibrated register-tile width class for one
-    /// dtype — each precision races its own candidate widths
-    /// ([`crate::codegen::autotune::calibrate_dtype`]).
+    /// Record the startup-calibrated register-tile geometry for one
+    /// dtype — each dtype races its own (MR, NR) candidate grid
+    /// ([`crate::codegen::autotune::calibrate_dtype`]). Takes `&self`:
+    /// the slot is behind its dtype's shard lock, so concurrent serve
+    /// clients can record or read winners without an exclusive borrow
+    /// (and without serializing across dtypes).
     pub fn set_micro_shape_for(
-        &mut self,
+        &self,
         dtype: crate::codegen::DType,
         shape: crate::codegen::MicroShape,
     ) {
-        self.micro_shape[dtype.index()] = Some(shape);
+        self.micro_shape.set(dtype, shape);
     }
 
-    /// The calibrated register-tile width class of `dtype`, if that
+    /// The calibrated register-tile geometry of `dtype`, if that
     /// dtype's calibration has run.
     pub fn micro_shape_for(
         &self,
         dtype: crate::codegen::DType,
     ) -> Option<crate::codegen::MicroShape> {
-        self.micro_shape[dtype.index()]
+        self.micro_shape.get(dtype)
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {
@@ -253,7 +305,7 @@ mod tests {
     #[test]
     fn micro_shapes_are_recorded_per_dtype() {
         use crate::codegen::{DType, MicroShape};
-        let mut r = Registry::default();
+        let r = Registry::default();
         assert_eq!(r.micro_shape_for(DType::F32), None);
         assert_eq!(r.micro_shape_for(DType::F64), None);
         r.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
@@ -263,6 +315,34 @@ mod tests {
         r.set_micro_shape(MicroShape::Mr8Nr4);
         assert_eq!(r.micro_shape(), Some(MicroShape::Mr8Nr4));
         assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
+        // a clone snapshots the winners — it is not another handle onto
+        // the same slots
+        let snap = r.clone();
+        r.set_micro_shape_for(DType::F32, MicroShape::Mr16Nr6);
+        assert_eq!(snap.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
+        assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr16Nr6));
+    }
+
+    #[test]
+    fn micro_shape_slots_are_shared_nothing_across_dtypes() {
+        // the sharding contract: writers on different dtypes (and racing
+        // writers on the same dtype) go through &self concurrently; the
+        // last write per dtype wins and reads never see a torn value
+        use crate::codegen::{DType, MicroShape};
+        let r = Registry::default();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..100 {
+                        r.set_micro_shape_for(DType::F32, MicroShape::Mr16Nr6);
+                        r.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr6);
+                        let got = r.micro_shape_for(DType::F32);
+                        assert!(got.is_some());
+                    }
+                });
+            }
+        });
+        assert!(MicroShape::CANDIDATES.contains(&r.micro_shape_for(DType::F64).unwrap()));
     }
 
     #[test]

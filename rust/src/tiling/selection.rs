@@ -319,11 +319,20 @@ pub fn scaled_lattice_tile(l: &Lattice, kappa: i128, dims: &[i64]) -> TileBasis 
 }
 
 /// Snap a rectangular tile's microkernel-facing inner dimensions to
-/// microkernel multiples: dim 0 (the unit-stride rows fed to the `MR`-wide
-/// register tile) to a multiple of `MR`, dim 1 (the output columns) to a
-/// multiple of `NR`. Tiles that are multiples keep the register blocks
-/// full, so the boundary (clipped) kernel only ever runs on the domain
-/// boundary, not inside every tile.
+/// microkernel multiples: dim 0 (the unit-stride rows fed to the register
+/// tile) to a multiple of `MR`, dim 1 (the output columns) to a multiple
+/// of `NR`. Tiles that are multiples keep the register blocks full, so
+/// the boundary (clipped) kernel only ever runs on the domain boundary,
+/// not inside every tile.
+///
+/// The snap quanta are the *base* geometry classes on purpose: every
+/// candidate of the 2-D autotune grid has `mr ∈ {8, 16}` and
+/// `nr ∈ {4, 6, 8, 12}`, so an `MR`-multiple row extent is also covered
+/// by whole-or-edge 16-row panels (a 16-row winner runs one full panel
+/// per pair of 8-row quanta plus at most one edge panel), and `NR = 4`
+/// divides the f32 wide widths (8, 12) exactly. Snapping to the largest
+/// candidate instead would shrink legal tile space for the common 8-row
+/// shapes without making tall dispatch any fuller.
 pub fn snap_to_microkernel(tile: &[i64], extents: &[i64]) -> Vec<i64> {
     let mut t = tile.to_vec();
     if !t.is_empty() {

@@ -1,9 +1,9 @@
 //! Differential tests for the *generalized* packed engine: all four
 //! Table-1 kernels (scalar product, convolution, matmul, Kronecker)
 //! executed through the packed micro/macro pipeline — at **both element
-//! types** (f32 and f64) and both register-tile width classes — and
-//! compared against the kernel-semantic scalar oracle
-//! ([`KernelBuffers::reference`]).
+//! types** (f32 and f64) and **every register-tile geometry** of the
+//! 2-D (MR, NR) candidate grid — and compared against the
+//! kernel-semantic scalar oracle ([`KernelBuffers::reference`]).
 //!
 //! Two comparison regimes:
 //!
@@ -20,8 +20,9 @@
 
 use latticetile::codegen::executor::{max_abs_diff, KernelBuffers, TiledExecutor};
 use latticetile::codegen::{
-    kernel_views, run_macro, run_parallel, run_parallel_macro, run_parallel_macro_tuned,
-    GemmForm, MicroShape, PackedCols, PackedRows, ParallelTuning, Scalar,
+    calibrate_dtype, kernel_views, pick_winner, run_macro, run_macro_acc, run_parallel,
+    run_parallel_macro, run_parallel_macro_tuned, DType, GemmForm, MicroShape, PackedCols,
+    PackedRows, ParallelTuning, Scalar,
 };
 use latticetile::domain::ops;
 use latticetile::domain::Kernel;
@@ -36,12 +37,14 @@ fn int_oracle<T: Scalar>(bufs: &mut KernelBuffers<T>, range: u64, seed: u64) -> 
 }
 
 /// Run `make(T::ELEM)` under `basis` through the packed engine at one
-/// dtype (both macro and per-tile L1 paths, both register-tile widths)
-/// and require bitwise equality with the scalar oracle.
+/// dtype (both macro and per-tile L1 paths, every (MR, NR) candidate
+/// geometry) and require bitwise equality with the scalar oracle — a
+/// wrong const-generic arm would misread the geometry-specific panel
+/// layout, so this pins the dispatch itself, not just the arithmetic.
 fn check_bitwise_t<T: Scalar>(make: &dyn Fn(usize) -> Kernel, basis: &TileBasis, label: &str) {
     let kernel = make(T::ELEM);
     let sched = TiledSchedule::new(basis.clone());
-    for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+    for micro in MicroShape::CANDIDATES {
         let exec = TiledExecutor::new(sched.clone()).with_micro_shape(micro);
         let mut bufs = KernelBuffers::<T>::from_kernel(&kernel);
         let want = int_oracle(&mut bufs, 3, 0xD1FF ^ label.len() as u64);
@@ -76,7 +79,7 @@ fn check_real_t<T: Scalar>(make: &dyn Fn(usize) -> Kernel, basis: &TileBasis, la
     let kernel = make(T::ELEM);
     let depth = GemmForm::of(&kernel).map(|gf| gf.k).unwrap_or(1);
     let sched = TiledSchedule::new(basis.clone());
-    for micro in [MicroShape::Mr8Nr4, MicroShape::Mr8Nr6] {
+    for micro in MicroShape::CANDIDATES {
         let exec = TiledExecutor::new(sched.clone()).with_micro_shape(micro);
         let mut bufs = KernelBuffers::<T>::from_kernel(&kernel); // random fill
         let want = bufs.reference();
@@ -369,7 +372,7 @@ fn prop_parallel_macro_kronecker() {
             m3: mc * rng.range_usize(1, 3),
             n3: nc * rng.range_usize(1, 3),
         };
-        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let micro = *rng.pick(&MicroShape::CANDIDATES);
         let threads = rng.range_usize(1, 4);
         let seed = 0x31 ^ case as u64;
         run_case::<f64>(dims, lp, micro, threads, case, seed);
@@ -442,7 +445,7 @@ fn prop_parallel_super_band_matmul_bitwise() {
             m3: mc * rng.range_usize(1, 2),
             n3: nc * rng.range_usize(1, 2),
         };
-        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let micro = *rng.pick(&MicroShape::CANDIDATES);
         let threads = rng.range_usize(1, 6);
         let seed = 0xB17 ^ case as u64;
         run_case::<f64>((m, k, n), lp, micro, threads, case, seed);
@@ -515,7 +518,7 @@ fn prop_pipelined_schedule_bitwise_matches_serial_nest() {
             m3: mc * rng.range_usize(1, 3),
             n3: nc * rng.range_usize(1, 2),
         };
-        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let micro = *rng.pick(&MicroShape::CANDIDATES);
         let threads = rng.range_usize(1, 6);
         let seed = 0x5E1A ^ case as u64;
         run_case::<f64>((m, k, n), lp, micro, threads, case, seed);
@@ -548,6 +551,160 @@ fn prop_matmul_bitwise_through_generalized_engine() {
     });
 }
 
+/// The `f32acc64` mixed mode on an ill-conditioned fill: f32 storage,
+/// f64 register accumulation, one rounding per `kc` slice. With
+/// `kc ≥ k` the whole reduction is a single slice, so the wide result
+/// is the correctly rounded f32 of an exact-product f64 sum — its error
+/// against an f64 oracle (computed from the *same* f32 operand values)
+/// must be at most 1 ulp of the result, and never worse than the pure
+/// f32 run's error, at every (MR, NR) candidate geometry.
+#[test]
+fn wide_accumulation_is_at_least_as_accurate_as_pure_f32() {
+    let (m, k, n) = (24i64, 48i64, 20i64);
+    let kernel = ops::matmul(m, k, n, 4, 0);
+    let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+    // Ill-conditioned mixed-sign fill: magnitudes spread over 1e-2..1e2,
+    // so pure-f32 partial sums lose the small addends' low bits and the
+    // accumulation-order rounding error is actually visible.
+    let mut state = 0xACCu64;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let mag = 10f64.powi(((state >> 8) % 5) as i32 - 2);
+        let sign = if state & 1 == 0 { 1.0 } else { -1.0 };
+        sign * mag * (1.0 + ((state >> 16) & 0xFFFF) as f64 / 65536.0)
+    };
+    for i in 1..=2 {
+        for v in bufs.operand_mut(i) {
+            *v = rnd() as f32;
+        }
+    }
+    bufs.reset_output();
+
+    // f64 oracle over the *rounded f32* operand values — this isolates
+    // accumulation error from input-quantization error.
+    let kernel64 = ops::matmul(m, k, n, 8, 0);
+    let mut oracle = KernelBuffers::<f64>::from_kernel(&kernel64);
+    for i in 1..=2 {
+        let src: Vec<f32> = bufs.operand_mut(i).to_vec();
+        let dst = oracle.operand_mut(i);
+        assert_eq!(src.len(), dst.len(), "operand {i} spans must mirror");
+        for (d, s) in dst.iter_mut().zip(&src) {
+            *d = *s as f64;
+        }
+    }
+    oracle.reset_output();
+    let want = oracle.reference();
+
+    let gf = GemmForm::of(&kernel).unwrap();
+    let plan = gf.plan_box(&kernel_views(&kernel), &[0, 0, 0], kernel.extents());
+    // kc = k: the single-slice regime where the one-rounding-per-slice
+    // contract makes the wide result correctly rounded end to end
+    let lp = LevelPlan {
+        l1_tile: (8, 8, 8),
+        mc: 16,
+        kc: k as usize,
+        nc: 8,
+        m3: 16,
+        n3: 8,
+    };
+    let max_err = |out: &[f32]| -> f64 {
+        out.iter()
+            .zip(&want)
+            .map(|(&g, &w)| (g as f64 - w).abs())
+            .fold(0.0, f64::max)
+    };
+    for micro in MicroShape::CANDIDATES {
+        let mut pure = bufs.clone();
+        run_macro_acc(
+            &mut pure.arena,
+            &plan,
+            &lp,
+            micro,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+            false,
+        );
+        let mut wide = bufs.clone();
+        run_macro_acc(
+            &mut wide.arena,
+            &plan,
+            &lp,
+            micro,
+            &mut PackedRows::new(),
+            &mut PackedCols::new(),
+            true,
+        );
+        let (perr, werr) = (max_err(&pure.output()), max_err(&wide.output()));
+        assert!(
+            werr <= perr,
+            "{micro:?}: wide accumulation worse than pure f32 ({werr:e} > {perr:e})"
+        );
+        // per-element: correctly rounded ⇒ within 1 ulp of the oracle
+        // (ε-relative, plus absolute slack for near-cancelled results)
+        for (&g, &w) in wide.output().iter().zip(&want) {
+            let tol = f32::EPSILON as f64 * w.abs() + 1e-4;
+            assert!(
+                (g as f64 - w).abs() <= tol,
+                "{micro:?}: wide result {g} vs oracle {w} off by more than 1 ulp"
+            );
+        }
+    }
+}
+
+/// The autotune grid race is deterministic and its recorded winner is
+/// what the planner actually dispatches per dtype: `pick_winner` obeys
+/// the tie-keeps-default / >5%-challenger rule on fixed rate tables, a
+/// registry override surfaces in both `Plan.micro` and `describe()`,
+/// and a live `calibrate_dtype` race lands inside the candidate grid.
+#[test]
+fn autotuned_winner_is_dispatched_per_dtype() {
+    use latticetile::cache::CacheSpec;
+    use latticetile::coordinator::Planner;
+    use latticetile::runtime::Registry;
+
+    // ties keep the incumbent default — repeatedly, same input same winner
+    let flat: Vec<(MicroShape, f64)> =
+        MicroShape::CANDIDATES.iter().map(|&s| (s, 1.0)).collect();
+    for _ in 0..5 {
+        assert_eq!(pick_winner(&flat), MicroShape::Mr8Nr4, "tie must keep the default");
+    }
+    // a challenger inside the 5% margin is noise, not a winner
+    let mut close = flat.clone();
+    close[3].1 = 1.04;
+    assert_eq!(pick_winner(&close), MicroShape::Mr8Nr4);
+    // a >5% challenger wins; the best of several challengers wins
+    let mut tall = flat.clone();
+    tall[2].1 = 1.08;
+    tall[3].1 = 1.21;
+    assert_eq!(pick_winner(&tall), MicroShape::Mr16Nr6);
+
+    // recorded winners dispatch per dtype through the planner
+    let reg = Registry::default();
+    reg.set_micro_shape_for(DType::F32, MicroShape::Mr16Nr6);
+    reg.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr6);
+    let planner = Planner::new(CacheSpec::HASWELL_L1D);
+    let p32 = planner.plan(&reg, 64, 64, 64, DType::F32);
+    assert_eq!(p32.micro, MicroShape::Mr16Nr6);
+    assert!(
+        p32.describe().contains("16x6"),
+        "f32 plan must report its tall winner: {}",
+        p32.describe()
+    );
+    let p64 = planner.plan(&reg, 64, 64, 64, DType::F64);
+    assert_eq!(p64.micro, MicroShape::Mr8Nr6);
+    assert!(
+        p64.describe().contains("8x6"),
+        "f64 plan must report its winner: {}",
+        p64.describe()
+    );
+
+    // a live race always lands inside the grid, at either dtype
+    assert!(MicroShape::CANDIDATES.contains(&calibrate_dtype::<f32>(30)));
+    assert!(MicroShape::CANDIDATES.contains(&calibrate_dtype::<f64>(30)));
+}
+
 /// The parallel matmul path at f32, both micro width classes, threads
 /// > 1 — the serving dtype through the threaded band engine.
 #[test]
@@ -564,7 +721,7 @@ fn prop_parallel_matmul_f32() {
             rng.range_i64(2, 12).min(k),
         ];
         let sched = TiledSchedule::new(TileBasis::rect(&tile));
-        let micro = *rng.pick(&[MicroShape::Mr8Nr4, MicroShape::Mr8Nr6]);
+        let micro = *rng.pick(&MicroShape::CANDIDATES);
         let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
         let want = int_oracle(&mut bufs, 3, 0x55 ^ case as u64);
         latticetile::codegen::run_parallel_micro(&mut bufs, &kernel, &sched, threads, 1, micro);
