@@ -374,6 +374,50 @@ fn main() {
     res.rate(&coal_label, serve_flops, t_batch);
     res.rate(&wide_label, serve_flops, t_wide);
 
+    // strategy dispatch on the serve GEMM: the auto-raced winner's macro
+    // blocking vs the parameter-free flat fallback, on the coalesced
+    // batch shape at f32. The tracked ratio (auto / flat) is the
+    // strategy race's payoff gate — auto dispatch must never serve
+    // slower than the degraded plan (check_bench holds the floor).
+    {
+        use latticetile::tiling::{strategy_impl, LevelPlan};
+        let (gm, gk, gn) = (sm * burst, sk, sn);
+        let kernel = ops::matmul(gm as i64, gk as i64, gn as i64, 4, 0);
+        let micro = MicroShape::Mr8Nr4;
+        let winner = autotune::calibrate_strategies::<f32>(&kernel, micro, 8, 2);
+        println!("strategy race winner on the serve shape: {}", winner.name());
+        let gf = latticetile::codegen::GemmForm::of(&kernel).expect("matmul is GEMM-form");
+        let auto_lp = strategy_impl(winner).propose(
+            &kernel,
+            (gf.m, gf.n, gf.k),
+            (8, 8, 8),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            8,
+        );
+        let flat_lp = LevelPlan::flat((8, 8, 8), 64, 64, 48);
+        let plan_reps = if quick { 10u32 } else { 5 };
+        let gemm_flops = plan_reps as u64 * 2 * (gm * gk * gn) as u64;
+        for (lp, kind) in [(auto_lp, "auto"), (flat_lp, "flat")] {
+            let exec = TiledExecutor::new(TiledSchedule::new(TileBasis::rect(&[64, 64, 64])))
+                .with_micro_shape(micro)
+                .with_level_plan(lp);
+            let mut bufs = KernelBuffers::<f32>::from_kernel(&kernel);
+            exec.run(&mut bufs, &kernel); // warm the panels
+            let t0 = Instant::now();
+            for _ in 0..plan_reps {
+                bufs.reset_output();
+                exec.run(&mut bufs, &kernel);
+            }
+            res.rate(
+                &format!("serve plan {kind} strategy {gm}x{gk}x{gn}"),
+                gemm_flops,
+                t0.elapsed(),
+            );
+            assert!(bufs.output()[0].is_finite());
+        }
+    }
+
     // startup register-tile calibration (one-shot cost report, per dtype)
     let t0 = Instant::now();
     let shape = autotune::calibrate(2_000);

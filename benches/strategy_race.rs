@@ -1,0 +1,72 @@
+//! Strategy race bench — lattice model vs cache-oblivious vs
+//! latency-curve tiling, per Table-1 kernel and dtype, with the
+//! parameter-free flat fallback as the degradation baseline. Besides the
+//! console table, results are written machine-readably to
+//! `BENCH_strategy_race.json` (label → GFLOP/s), mirroring
+//! `BENCH_hot_paths.json`, and gated by `python/check_bench.py` in CI
+//! through the committed ratio floors (auto ≥ flat, lattice vs rivals).
+
+use latticetile::experiments::strategy_race;
+use latticetile::tiling::StrategyKind;
+
+fn main() {
+    // BENCH_QUICK=1 (CI smoke): reduced sizes so the binary can't bit-rot
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    println!("=== tiling-strategy race: model-driven lattice vs rivals ===");
+    println!(
+        "{:<16} {:>5} {:>12} {:>12} {:>12} {:>12} {:>12} {:>10} {:>12}",
+        "kernel",
+        "dtype",
+        "lattice",
+        "oblivious",
+        "latency",
+        "flat",
+        "auto",
+        "winner",
+        "model miss"
+    );
+    let cells = strategy_race::run(quick);
+    for c in &cells {
+        println!(
+            "{:<16} {:>5} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>12.2} {:>10} {:>12}",
+            c.kernel,
+            c.dtype.name(),
+            c.rate_of(StrategyKind::Lattice),
+            c.rate_of(StrategyKind::Oblivious),
+            c.rate_of(StrategyKind::Latency),
+            c.flat,
+            c.auto,
+            c.winner.name(),
+            c.predicted_misses
+                .map(|m| m.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+        );
+    }
+    let (wins, total, misses) = strategy_race::win_summary(&cells);
+    println!(
+        "\nmodel-vs-empirical: lattice won {wins}/{total} cells ({misses} model misses)"
+    );
+    // the invariant the committed ratio floors also gate: auto dispatch
+    // (the recorded race winner) must never serve slower than the
+    // parameter-free flat fallback — machine-independent because both
+    // sides are measured in the same run
+    // (0.75 here is a loose in-run tripwire; the committed baseline's
+    // ratio floor is the tighter CI gate)
+    for c in &cells {
+        assert!(
+            c.auto >= c.flat * 0.75,
+            "{} {}: auto winner ({:.2} GFLOP/s) fell below the flat fallback ({:.2} GFLOP/s)",
+            c.kernel,
+            c.dtype.name(),
+            c.auto,
+            c.flat
+        );
+    }
+    // anchor at the workspace root (cargo runs benches with cwd set to
+    // the package root, rust/)
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_strategy_race.json");
+    match std::fs::write(path, strategy_race::to_json(&cells)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncannot write {path}: {e}"),
+    }
+}

@@ -26,11 +26,31 @@
 //! matches exactly the six `(MR, NR)` pairs the kernel instantiates,
 //! closed over both sealed dtypes (pinned by a scalar-layer test), and
 //! anything else panics loudly instead of quietly reporting 8×4.
+//!
+//! Alongside the register-geometry grid the calibrator also races the
+//! registered **tiling strategies** ([`race_strategy_rates`]): every
+//! [`TilingStrategy`]'s proposed [`LevelPlan`] for a kernel is timed on
+//! the real packed macro-kernel, the same [`pick_winner`] rule picks the
+//! winner (the lattice selector is the incumbent — rivals need a >5%
+//! win), and callers record it per (kernel, dtype, shape-class) in the
+//! registry ([`crate::runtime::Registry::set_strategy_for`]). A strategy
+//! that panics mid-race scores 0 and can never win, so the race degrades
+//! to the lattice default instead of propagating the panic.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::Instant;
 
+use crate::cache::CacheSpec;
+use crate::domain::Kernel;
+use crate::tiling::strategy::{raced_strategies, StrategyKind, TilingStrategy};
+use crate::tiling::LevelPlan;
+
+use super::executor::run_macro_with;
 use super::microkernel::{mkernel_full_at, MR, MR_TALL};
+use super::pack::{PackedCols, PackedRows};
+use super::runplan::{kernel_views, GemmForm, KernelBuffers};
 use super::scalar::Scalar;
+use super::ExecOpts;
 
 pub use super::scalar::MicroShape;
 
@@ -58,21 +78,126 @@ pub fn calibrate_dtype<T: Scalar>(reps: u64) -> MicroShape {
     pick_winner(&rates)
 }
 
-/// The deterministic winner rule of the grid race, split from
-/// measurement so it can be pinned by tests: the first candidate in
-/// `rates` is the incumbent default; a challenger replaces the current
-/// best only with a rate strictly above both `default · 1.05` and the
-/// best so far. Identical `rates` slices always produce the same
-/// winner.
-pub fn pick_winner(rates: &[(MicroShape, f64)]) -> MicroShape {
+/// The deterministic winner rule of every calibration race (register
+/// geometries *and* tiling strategies), split from measurement so it
+/// can be pinned by tests: the first candidate in `rates` is the
+/// incumbent default; a challenger replaces the current best only with
+/// a rate strictly above both `default · 1.05` and the best so far.
+/// Identical `rates` slices always produce the same winner.
+pub fn pick_winner<C: Copy>(rates: &[(C, f64)]) -> C {
     let (default, base) = rates[0];
     let mut best = (default, base);
-    for &(micro, rate) in &rates[1..] {
+    for &(cand, rate) in &rates[1..] {
         if rate > base * UPGRADE_MARGIN && rate > best.1 {
-            best = (micro, rate);
+            best = (cand, rate);
         }
     }
     best.0
+}
+
+/// The fixed L1 tile the strategy race plans under: the strategies being
+/// compared differ at the macro (`mc/kc/nc/m3/n3`) level, so every
+/// proposal is measured over the same register-adjacent tile.
+const RACE_L1: (usize, usize, usize) = (8, 8, 8);
+
+/// Race an explicit strategy list over one kernel: each strategy
+/// proposes its [`LevelPlan`] (against the Haswell L2/L3 model specs —
+/// strategies are free to ignore them) and the proposal is timed on the
+/// real packed macro-kernel over deterministic integer data. Returns
+/// `(kind, effective FLOP rate)` per strategy in input order, so the
+/// caller feeds it straight to [`pick_winner`] — put the incumbent
+/// first. A strategy that **panics** while proposing scores `0.0`
+/// (a zero rate can never clear the upgrade margin), so a broken rival
+/// degrades the race to the incumbent instead of unwinding through it.
+pub fn race_strategies_over<T: Scalar>(
+    strategies: &[&dyn TilingStrategy],
+    kernel: &Kernel,
+    micro: MicroShape,
+    sample_classes: usize,
+    reps: usize,
+) -> Vec<(StrategyKind, f64)> {
+    let extents = match GemmForm::of(kernel) {
+        Some(gf) => (gf.m, gf.n, gf.k),
+        // outside the GEMM class there is nothing to block — every
+        // strategy scores 0 and the incumbent keeps the slot
+        None => return strategies.iter().map(|s| (s.kind(), 0.0)).collect(),
+    };
+    strategies
+        .iter()
+        .map(|s| {
+            let proposal = catch_unwind(AssertUnwindSafe(|| {
+                s.propose(
+                    kernel,
+                    extents,
+                    RACE_L1,
+                    &CacheSpec::HASWELL_L2,
+                    Some(&CacheSpec::HASWELL_L3_SLICE),
+                    sample_classes,
+                )
+            }));
+            let rate = match proposal {
+                Ok(lp) => measure_plan_rate::<T>(kernel, &lp, micro, reps),
+                Err(_) => 0.0,
+            };
+            (s.kind(), rate)
+        })
+        .collect()
+}
+
+/// Race every registered strategy ([`raced_strategies`] — lattice first,
+/// as the incumbent of the winner rule) over one kernel at dtype `T`.
+pub fn race_strategy_rates<T: Scalar>(
+    kernel: &Kernel,
+    micro: MicroShape,
+    sample_classes: usize,
+    reps: usize,
+) -> Vec<(StrategyKind, f64)> {
+    race_strategies_over::<T>(&raced_strategies(), kernel, micro, sample_classes, reps)
+}
+
+/// One-shot strategy calibration for a kernel at dtype `T`: race all
+/// registered strategies and return the [`pick_winner`] winner. The
+/// caller records it under the kernel's shape class
+/// ([`crate::runtime::Registry::set_strategy_for`]).
+pub fn calibrate_strategies<T: Scalar>(
+    kernel: &Kernel,
+    micro: MicroShape,
+    sample_classes: usize,
+    reps: usize,
+) -> StrategyKind {
+    pick_winner(&race_strategy_rates::<T>(kernel, micro, sample_classes, reps))
+}
+
+/// Time one proposed macro blocking on the packed engine: fresh buffers
+/// with deterministic integer fills, one warm pass, then `reps` timed
+/// passes of [`run_macro_with`]. The rate is effective FLOPs/s of the
+/// kernel's GEMM form — comparable *within* one race (same kernel, same
+/// data), which is all [`pick_winner`] needs.
+pub fn measure_plan_rate<T: Scalar>(
+    kernel: &Kernel,
+    lp: &LevelPlan,
+    micro: MicroShape,
+    reps: usize,
+) -> f64 {
+    let views = kernel_views(kernel);
+    let gf = match GemmForm::of(kernel) {
+        Some(gf) => gf,
+        None => return 0.0,
+    };
+    let lo = vec![0i64; kernel.extents().len()];
+    let plan = gf.plan_box(&views, &lo, kernel.extents());
+    let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
+    bufs.fill_ints(3, 0x57A7);
+    let mut rows = PackedRows::<T>::new();
+    let mut cols = PackedCols::<T>::new();
+    let opts = ExecOpts::new(micro);
+    run_macro_with(&mut bufs.arena, &plan, lp, &mut rows, &mut cols, opts); // warm
+    let flops = 2.0 * gf.m as f64 * gf.n as f64 * gf.k.max(1) as f64;
+    let t = Instant::now();
+    for _ in 0..reps.max(1) {
+        run_macro_with(&mut bufs.arena, &plan, lp, &mut rows, &mut cols, opts);
+    }
+    flops * reps.max(1) as f64 / t.elapsed().as_secs_f64().max(1e-9)
 }
 
 /// Time one candidate at `T`'s resolved `(MR, NR)`. The match is the
@@ -158,6 +283,80 @@ mod tests {
         // same rates → same winner, every time
         for _ in 0..8 {
             assert_eq!(pick_winner(&rates), Mr16Nr4);
+        }
+    }
+
+    #[test]
+    fn strategy_race_keeps_the_lattice_incumbent_on_ties() {
+        use StrategyKind::*;
+        // the generic winner rule applies unchanged to strategy rates:
+        // nothing clears the 5% margin → the lattice incumbent survives
+        let rates = [(Lattice, 100.0), (Oblivious, 104.9), (Latency, 100.0)];
+        assert_eq!(pick_winner(&rates), Lattice);
+        let rates = [(Lattice, 100.0), (Oblivious, 106.0), (Latency, 106.0)];
+        // exact tie between challengers → the earlier strategy keeps it
+        assert_eq!(pick_winner(&rates), Oblivious);
+        for _ in 0..8 {
+            assert_eq!(pick_winner(&rates), Oblivious);
+        }
+    }
+
+    #[test]
+    fn strategy_race_measures_every_strategy_with_lattice_first() {
+        let k = crate::domain::ops::matmul(48, 32, 40, 4, 0);
+        let rates = race_strategy_rates::<f32>(&k, MicroShape::Mr8Nr4, 8, 1);
+        let kinds: Vec<StrategyKind> = rates.iter().map(|r| r.0).collect();
+        assert_eq!(kinds, StrategyKind::RACED.to_vec());
+        for (kind, rate) in &rates {
+            assert!(*rate > 0.0, "{kind:?} did not measure");
+        }
+        let winner = calibrate_strategies::<f32>(&k, MicroShape::Mr8Nr4, 8, 1);
+        assert!(StrategyKind::RACED.contains(&winner));
+    }
+
+    #[test]
+    fn panicking_strategy_scores_zero_and_the_incumbent_wins() {
+        struct Panicky;
+        impl crate::tiling::TilingStrategy for Panicky {
+            fn kind(&self) -> StrategyKind {
+                StrategyKind::Oblivious
+            }
+            fn propose(
+                &self,
+                _kernel: &Kernel,
+                _extents: (usize, usize, usize),
+                _l1_tile: (usize, usize, usize),
+                _l2: &CacheSpec,
+                _l3: Option<&CacheSpec>,
+                _sample_classes: usize,
+            ) -> LevelPlan {
+                panic!("injected strategy fault");
+            }
+        }
+        let k = crate::domain::ops::matmul(32, 16, 24, 8, 0);
+        let lattice = crate::tiling::Lattice;
+        let rates = race_strategies_over::<f64>(
+            &[&lattice, &Panicky],
+            &k,
+            MicroShape::Mr8Nr4,
+            8,
+            1,
+        );
+        assert_eq!(rates.len(), 2);
+        assert!(rates[0].1 > 0.0);
+        assert_eq!(rates[1], (StrategyKind::Oblivious, 0.0));
+        assert_eq!(pick_winner(&rates), StrategyKind::Lattice);
+    }
+
+    #[test]
+    fn non_gemm_kernels_race_to_the_incumbent_without_measuring() {
+        // a kernel outside the GEMM class has nothing to block: every
+        // strategy scores 0 and the lattice default keeps the slot
+        let k = crate::domain::ops::matmul_padded(8, 8, 8, 11, 11, 11, 8, 0);
+        if GemmForm::of(&k).is_none() {
+            let rates = race_strategy_rates::<f64>(&k, MicroShape::Mr8Nr4, 8, 1);
+            assert!(rates.iter().all(|r| r.1 == 0.0));
+            assert_eq!(pick_winner(&rates), StrategyKind::Lattice);
         }
     }
 

@@ -28,6 +28,7 @@ use super::pack::{
 };
 use super::runplan::{kernel_views, GemmForm, OperandView, RunPlan};
 use super::scalar::{Precision, Scalar};
+use super::ExecOpts;
 
 pub use super::runplan::KernelBuffers;
 
@@ -467,14 +468,13 @@ impl TiledExecutor {
                         Some(&CacheSpec::HASWELL_L3_SLICE),
                     )
                 });
-                run_macro_acc(
+                run_macro_with(
                     &mut bufs.arena,
                     &plan,
                     &lp,
-                    self.micro,
                     &mut PackedRows::<T>::new(),
                     &mut PackedCols::<T>::new(),
-                    self.acc64,
+                    ExecOpts::new(self.micro).with_acc64(self.acc64),
                 );
                 return;
             }
@@ -528,8 +528,7 @@ impl TiledExecutor {
                     .chain(gf.red_axes.iter())
                     .copied()
                     .collect();
-                let micro = self.micro;
-                let acc64 = self.acc64;
+                let opts = ExecOpts::new(self.micro).with_acc64(self.acc64);
                 let mut packs = PackBuffers::<T>::new();
                 // scratch plan reused across tiles: the per-tile loop is
                 // allocation-free in steady state
@@ -537,14 +536,13 @@ impl TiledExecutor {
                 let arena: &mut [T] = &mut bufs.arena;
                 scan_rect_tiles(&order, &sizes, extents, |lo, hi| {
                     gf.plan_box_into(&views, lo, hi, &mut plan);
-                    run_rect_box_acc(
+                    run_rect_box_with(
                         arena,
                         &plan,
-                        micro,
                         &mut packs,
                         box_key(&row_red, lo, hi),
                         box_key(&col_red, lo, hi),
-                        acc64,
+                        opts,
                     );
                 });
                 return;
@@ -680,12 +678,13 @@ pub fn run_macro<T: Scalar>(
     rows: &mut PackedRows<T>,
     cols: &mut PackedCols<T>,
 ) {
-    run_macro_acc(arena, plan, lp, micro, rows, cols, false);
+    run_macro_with(arena, plan, lp, rows, cols, ExecOpts::new(micro));
 }
 
 /// [`run_macro`] with the wide-accumulation flag — the precision-aware
-/// entry point (`acc64` = [`Precision::wide_acc`] of the execution's
+/// wrapper (`acc64` = [`Precision::wide_acc`] of the execution's
 /// precision pair).
+#[allow(clippy::too_many_arguments)]
 pub fn run_macro_acc<T: Scalar>(
     arena: &mut [T],
     plan: &RunPlan,
@@ -695,6 +694,28 @@ pub fn run_macro_acc<T: Scalar>(
     cols: &mut PackedCols<T>,
     acc64: bool,
 ) {
+    run_macro_with(
+        arena,
+        plan,
+        lp,
+        rows,
+        cols,
+        ExecOpts::new(micro).with_acc64(acc64),
+    );
+}
+
+/// The serial macro-kernel's canonical entry point: [`run_macro`]'s nest
+/// under one [`ExecOpts`] params struct (geometry + precision; the
+/// parallel tuning field is ignored here).
+pub fn run_macro_with<T: Scalar>(
+    arena: &mut [T],
+    plan: &RunPlan,
+    lp: &LevelPlan,
+    rows: &mut PackedRows<T>,
+    cols: &mut PackedCols<T>,
+    opts: ExecOpts,
+) {
+    let (micro, acc64) = (opts.micro, opts.acc64);
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
         return;
     }
@@ -949,19 +970,20 @@ pub fn run_macro_prepacked<T: Scalar>(
     let _ = run_macro_prepacked_cols(arena, plan, lp, micro, rows, cols, plan.n);
 }
 
-/// [`run_macro_prepacked_cols`] with the wide-accumulation flag — the
-/// serve path's precision-aware entry point.
-#[allow(clippy::too_many_arguments)]
-pub fn run_macro_prepacked_cols_acc<T: Scalar>(
+/// The pre-packed nest's canonical entry point:
+/// [`run_macro_prepacked_cols`] under one [`ExecOpts`] params struct
+/// (geometry + precision; the parallel tuning field is ignored here) —
+/// the serve path's precision-aware column-prefix dispatch.
+pub fn run_macro_prepacked_with<T: Scalar>(
     arena: &mut [T],
     plan: &RunPlan,
     lp: &LevelPlan,
-    micro: MicroShape,
     rows: &[PackedRows<T>],
     cols: &mut PackedCols<T>,
     n_used: usize,
-    acc64: bool,
+    opts: ExecOpts,
 ) -> u64 {
+    let (micro, acc64) = (opts.micro, opts.acc64);
     assert!(n_used <= plan.n, "column prefix exceeds the plan");
     if plan.m == 0 || n_used == 0 || plan.k == 0 {
         return 0;
@@ -1013,7 +1035,7 @@ pub fn run_macro_prepacked_cols<T: Scalar>(
     cols: &mut PackedCols<T>,
     n_used: usize,
 ) -> u64 {
-    run_macro_prepacked_cols_acc(arena, plan, lp, micro, rows, cols, n_used, false)
+    run_macro_prepacked_with(arena, plan, lp, rows, cols, n_used, ExecOpts::new(micro))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1102,28 +1124,15 @@ pub(crate) fn run_super_band_prepacked<T: Scalar, const NRW: usize>(
 /// Packed blocks are reused across consecutive calls via the caller's
 /// box keys (see [`box_key`]). Degenerate `m = n = 1` boxes run the dot
 /// microkernel without packing.
-pub fn run_rect_box<T: Scalar>(
+pub fn run_rect_box_with<T: Scalar>(
     arena: &mut [T],
     plan: &RunPlan,
-    micro: MicroShape,
     packs: &mut PackBuffers<T>,
     row_key: Vec<i64>,
     col_key: Vec<i64>,
+    opts: ExecOpts,
 ) {
-    run_rect_box_acc(arena, plan, micro, packs, row_key, col_key, false);
-}
-
-/// [`run_rect_box`] with the wide-accumulation flag.
-#[allow(clippy::too_many_arguments)]
-pub fn run_rect_box_acc<T: Scalar>(
-    arena: &mut [T],
-    plan: &RunPlan,
-    micro: MicroShape,
-    packs: &mut PackBuffers<T>,
-    row_key: Vec<i64>,
-    col_key: Vec<i64>,
-    acc64: bool,
-) {
+    let (micro, acc64) = (opts.micro, opts.acc64);
     if plan.m == 0 || plan.n == 0 || plan.k == 0 {
         return;
     }

@@ -176,12 +176,74 @@ pub mod parallel;
 pub mod runplan;
 pub mod scalar;
 
-pub use autotune::{calibrate, calibrate_dtype, pick_winner, MicroShape};
+/// The execution options of one packed-engine dispatch, collapsed into a
+/// single params struct: the register-tile geometry to dispatch, the
+/// wide-accumulation flag of the precision mode, and the parallel
+/// pipeline tuning (ignored by the serial entry points). Replaces the
+/// old `_acc`/`_tuned` suffix ladder — every `*_with` entry point takes
+/// one `ExecOpts`, and the thin suffix-free wrappers (`run_macro`,
+/// `run_parallel_macro`, …) forward defaults into it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// Register-tile geometry class to dispatch (the dtype's autotuned
+    /// winner on serve paths; the compile-time 8×4 default otherwise).
+    pub micro: autotune::MicroShape,
+    /// Accumulate register tiles in f64 (`Precision::wide_acc` of the
+    /// execution's precision mode). Meaningless at f64 storage.
+    pub acc64: bool,
+    /// Pipeline/steal tuning for the parallel macro entry points; the
+    /// serial nests ignore it.
+    pub tuning: parallel::ParallelTuning,
+}
+
+impl Default for ExecOpts {
+    fn default() -> ExecOpts {
+        ExecOpts::new(autotune::MicroShape::Mr8Nr4)
+    }
+}
+
+impl ExecOpts {
+    /// Options at one explicit geometry, pure storage-precision
+    /// accumulation, default parallel tuning.
+    pub fn new(micro: autotune::MicroShape) -> ExecOpts {
+        ExecOpts {
+            micro,
+            acc64: false,
+            tuning: parallel::ParallelTuning::default(),
+        }
+    }
+
+    pub fn with_acc64(mut self, acc64: bool) -> ExecOpts {
+        self.acc64 = acc64;
+        self
+    }
+
+    pub fn with_tuning(mut self, tuning: parallel::ParallelTuning) -> ExecOpts {
+        self.tuning = tuning;
+        self
+    }
+
+    /// The serve path's options: explicit geometry and precision with
+    /// the deterministic pipeline (pack-ahead on, stealing off), so
+    /// pack totals stay exact schedule invariants.
+    pub fn serving(micro: autotune::MicroShape, acc64: bool) -> ExecOpts {
+        ExecOpts {
+            micro,
+            acc64,
+            tuning: parallel::ParallelTuning::deterministic(),
+        }
+    }
+}
+
+pub use autotune::{
+    calibrate, calibrate_dtype, calibrate_strategies, measure_plan_rate, pick_winner,
+    race_strategies_over, race_strategy_rates, MicroShape,
+};
 pub use executor::{
     box_key, max_abs_diff, pack_row_slices, pack_row_slices_mr, run_instrumented, run_macro,
-    run_macro_acc, run_macro_prepacked, run_macro_prepacked_cols, run_macro_prepacked_cols_acc,
-    run_rect_box, run_rect_box_acc, run_schedule, run_trace_only, scan_rect_tiles, tiled_executor,
-    ReplayPlan, ReplayScratch, TiledExecutor,
+    run_macro_acc, run_macro_prepacked, run_macro_prepacked_cols, run_macro_prepacked_with,
+    run_macro_with, run_rect_box_with, run_schedule, run_trace_only, scan_rect_tiles,
+    tiled_executor, ReplayPlan, ReplayScratch, TiledExecutor,
 };
 pub use microkernel::{dot_update, dot_update_acc, MR, MR_TALL, NR, NR_WIDE};
 pub use pack::{
@@ -189,9 +251,9 @@ pub use pack::{
 };
 pub use parallel::{
     run_parallel, run_parallel_macro, run_parallel_macro_prepacked,
-    run_parallel_macro_prepacked_acc, run_parallel_macro_prepacked_tuned,
-    run_parallel_macro_stats, run_parallel_macro_tuned, run_parallel_macro_tuned_acc,
-    run_parallel_micro, run_parallel_micro_acc, ParallelMacroStats, ParallelTuning,
+    run_parallel_macro_prepacked_with, run_parallel_macro_stats, run_parallel_macro_tuned,
+    run_parallel_macro_with, run_parallel_micro, run_parallel_micro_with, ParallelMacroStats,
+    ParallelTuning,
 };
 pub use runplan::{
     kernel_views, view_injective, GemmForm, KernelBuffers, OperandView, Run, RowPanel, RunPlan,

@@ -63,12 +63,13 @@ use crate::domain::Kernel;
 use crate::tiling::{LevelPlan, TiledSchedule};
 
 use super::executor::{
-    box_key, compute_super_band_stage, pack_super_band_stage, run_rect_box_acc, run_super_band,
+    box_key, compute_super_band_stage, pack_super_band_stage, run_rect_box_with, run_super_band,
     run_super_band_prepacked, KernelBuffers, ReplayPlan, ReplayScratch,
 };
 use super::pack::{PackBuffers, PackStage, PackedCols, PackedRows, StageKey};
 use super::runplan::{kernel_views, view_injective, GemmForm, RunPlan};
 use super::scalar::{MicroShape, Scalar};
+use super::ExecOpts;
 
 /// Execute the tiled kernel with `threads` worker threads, dispatching
 /// the dtype's default (narrow) register tile. See [`run_parallel_micro`].
@@ -108,22 +109,29 @@ pub fn run_parallel_micro<T: Scalar>(
     partition_var: usize,
     micro: MicroShape,
 ) {
-    run_parallel_micro_acc(bufs, kernel, schedule, threads, partition_var, micro, false);
+    run_parallel_micro_with(
+        bufs,
+        kernel,
+        schedule,
+        threads,
+        partition_var,
+        ExecOpts::new(micro),
+    );
 }
 
-/// [`run_parallel_micro`] with the wide-accumulation flag (`acc64` =
+/// [`run_parallel_micro`]'s canonical entry point under one [`ExecOpts`]
+/// params struct: geometry, precision (`acc64` =
 /// [`Precision::wide_acc`](super::scalar::Precision::wide_acc) of the
-/// execution's precision pair): every register tile and dot reduction
-/// accumulates in `T::Acc` and rounds once per `kc` slice on writeback.
-#[allow(clippy::too_many_arguments)]
-pub fn run_parallel_micro_acc<T: Scalar>(
+/// execution's precision pair — every register tile and dot reduction
+/// accumulates in `T::Acc` and rounds once per `kc` slice on writeback),
+/// and pipeline tuning for the macro-kernel route.
+pub fn run_parallel_micro_with<T: Scalar>(
     bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
     partition_var: usize,
-    micro: MicroShape,
-    acc64: bool,
+    opts: ExecOpts,
 ) {
     assert!(threads >= 1);
     let basis = schedule.basis();
@@ -159,16 +167,7 @@ pub fn run_parallel_micro_acc<T: Scalar>(
             if gf.col_axes.contains(&partition_var)
                 && gf.output_injective(&views, extents_ref)
             {
-                run_parallel_macro_tuned_acc(
-                    bufs,
-                    kernel,
-                    schedule,
-                    threads,
-                    None,
-                    micro,
-                    ParallelTuning::default(),
-                    acc64,
-                );
+                run_parallel_macro_with(bufs, kernel, schedule, threads, None, opts);
                 return;
             }
         }
@@ -237,7 +236,7 @@ pub fn run_parallel_micro_acc<T: Scalar>(
                 let d = extents.len();
                 // thread-local pack buffers + replay/plan scratch; packed
                 // boxes are reused across consecutive tiles via their box
-                // keys (run_rect_box), so nothing is re-packed when only
+                // keys (run_rect_box_with), so nothing is re-packed when only
                 // the column coordinate advances, and the scratch RunPlan
                 // keeps the per-tile loop allocation-free in steady state
                 let mut packs = PackBuffers::<T>::new();
@@ -272,14 +271,13 @@ pub fn run_parallel_micro_acc<T: Scalar>(
                                 continue;
                             }
                             gf.plan_box_into(views, &lo, &hi, &mut plan);
-                            run_rect_box_acc(
+                            run_rect_box_with(
                                 arena,
                                 &plan,
-                                micro,
                                 &mut packs,
                                 box_key(row_red_axes, &lo, &hi),
                                 box_key(col_red_axes, &lo, &hi),
-                                acc64,
+                                opts,
                             );
                         } else {
                             rp.unwrap().run_tile(arena, extents, foot, &mut scratch);
@@ -445,24 +443,31 @@ pub fn run_parallel_macro_tuned<T: Scalar>(
     micro: MicroShape,
     tuning: ParallelTuning,
 ) -> ParallelMacroStats {
-    run_parallel_macro_tuned_acc(bufs, kernel, schedule, threads, level, micro, tuning, false)
+    run_parallel_macro_with(
+        bufs,
+        kernel,
+        schedule,
+        threads,
+        level,
+        ExecOpts::new(micro).with_tuning(tuning),
+    )
 }
 
-/// [`run_parallel_macro_tuned`] with the wide-accumulation flag — the
-/// precision-aware entry (`acc64` widens every worker's register tiles
-/// to `T::Acc`, rounding once per `kc` slice; the schedule is unchanged,
-/// so the deterministic-tuning pack invariants still hold).
-#[allow(clippy::too_many_arguments)]
-pub fn run_parallel_macro_tuned_acc<T: Scalar>(
+/// The parallel macro-kernel's canonical entry point:
+/// [`run_parallel_macro_tuned`] under one [`ExecOpts`] params struct —
+/// geometry, precision (`acc64` widens every worker's register tiles to
+/// `T::Acc`, rounding once per `kc` slice; the schedule is unchanged, so
+/// the deterministic-tuning pack invariants still hold), and scheduler
+/// policy.
+pub fn run_parallel_macro_with<T: Scalar>(
     bufs: &mut KernelBuffers<T>,
     kernel: &Kernel,
     schedule: &TiledSchedule,
     threads: usize,
     level: Option<LevelPlan>,
-    micro: MicroShape,
-    tuning: ParallelTuning,
-    acc64: bool,
+    opts: ExecOpts,
 ) -> ParallelMacroStats {
+    let (micro, tuning, acc64) = (opts.micro, opts.tuning, opts.acc64);
     assert!(threads >= 1);
     let basis = schedule.basis();
     assert!(basis.is_rect(), "macro-kernel path needs a rect L1 basis");
@@ -568,87 +573,39 @@ pub fn run_parallel_macro_prepacked<T: Scalar>(
     // the serve default: pipelined pack-ahead, stealing off — serving
     // keeps the exact per-band pack discipline (and so deterministic
     // per-request work) that the coalescing layer's tests pin
-    run_parallel_macro_prepacked_tuned_acc(
+    run_parallel_macro_prepacked_with(
         arena,
         kernel,
         plan,
         lp,
-        micro,
         rows,
         threads,
         n_used,
-        ParallelTuning::deterministic(),
-        false,
+        ExecOpts::serving(micro, false),
     )
 }
 
-/// [`run_parallel_macro_prepacked`] with the wide-accumulation flag —
-/// the `f32acc64` serve route: resident f32 panels stream through
-/// f64-accumulating register tiles, rounding once per `kc` slice. Same
-/// deterministic tuning (pipelined, stealing off) as the plain serve
-/// path.
+/// The pre-packed parallel nest's canonical entry point:
+/// [`run_parallel_macro_prepacked`] under one [`ExecOpts`] params struct
+/// — geometry, precision (the `f32acc64` serve route streams resident
+/// f32 panels through f64-accumulating register tiles, rounding once per
+/// `kc` slice), and scheduler policy (the benches race synchronous vs
+/// pipelined through this; the serve path passes
+/// [`ExecOpts::serving`]'s deterministic tuning). Panics if the resident
+/// slices were packed at a panel height other than `opts.micro.mr()` —
+/// the pre-packed layout must match the dispatched register geometry.
 #[allow(clippy::too_many_arguments)]
-pub fn run_parallel_macro_prepacked_acc<T: Scalar>(
+pub fn run_parallel_macro_prepacked_with<T: Scalar>(
     arena: &mut [T],
     kernel: &Kernel,
     plan: &RunPlan,
     lp: &LevelPlan,
-    micro: MicroShape,
     rows: &[PackedRows<T>],
     threads: usize,
     n_used: usize,
-    acc64: bool,
+    opts: ExecOpts,
 ) -> ParallelMacroStats {
-    run_parallel_macro_prepacked_tuned_acc(
-        arena,
-        kernel,
-        plan,
-        lp,
-        micro,
-        rows,
-        threads,
-        n_used,
-        ParallelTuning::deterministic(),
-        acc64,
-    )
-}
-
-/// [`run_parallel_macro_prepacked`] with explicit scheduler policy (the
-/// benches race synchronous vs pipelined through this).
-#[allow(clippy::too_many_arguments)]
-pub fn run_parallel_macro_prepacked_tuned<T: Scalar>(
-    arena: &mut [T],
-    kernel: &Kernel,
-    plan: &RunPlan,
-    lp: &LevelPlan,
-    micro: MicroShape,
-    rows: &[PackedRows<T>],
-    threads: usize,
-    n_used: usize,
-    tuning: ParallelTuning,
-) -> ParallelMacroStats {
-    run_parallel_macro_prepacked_tuned_acc(
-        arena, kernel, plan, lp, micro, rows, threads, n_used, tuning, false,
-    )
-}
-
-/// [`run_parallel_macro_prepacked_tuned`] with the wide-accumulation
-/// flag. Panics if the resident slices were packed at a panel height
-/// other than `micro.mr()` — the pre-packed layout must match the
-/// dispatched register geometry.
-#[allow(clippy::too_many_arguments)]
-pub fn run_parallel_macro_prepacked_tuned_acc<T: Scalar>(
-    arena: &mut [T],
-    kernel: &Kernel,
-    plan: &RunPlan,
-    lp: &LevelPlan,
-    micro: MicroShape,
-    rows: &[PackedRows<T>],
-    threads: usize,
-    n_used: usize,
-    tuning: ParallelTuning,
-    acc64: bool,
-) -> ParallelMacroStats {
+    let (micro, tuning, acc64) = (opts.micro, opts.tuning, opts.acc64);
     assert!(threads >= 1);
     assert!(
         rows.iter().all(|r| r.mr() == micro.mr()),
@@ -705,7 +662,7 @@ impl<T> Copy for SendPtr<T> {}
 // ---------------------------------------------------------------------
 // The pipelined super-band engine shared by [`run_parallel_macro_tuned`]
 // (workers pack their own row slices) and
-// [`run_parallel_macro_prepacked_tuned`] (workers read shared resident
+// [`run_parallel_macro_prepacked_with`] (workers read shared resident
 // slices): a claim board of super-bands with sticky affinity, a
 // two-stage pack-ahead pipeline per worker, and sub-band steal offers
 // resolved at `kc` stage boundaries.
@@ -1427,15 +1384,13 @@ mod tests {
             for threads in [1usize, 3] {
                 let mut bufs = KernelBuffers::<f32>::from_kernel(&k);
                 bufs.fill_ints(3, 0xACC);
-                run_parallel_macro_tuned_acc(
+                run_parallel_macro_with(
                     &mut bufs,
                     &k,
                     &s,
                     threads,
                     Some(lp),
-                    micro,
-                    ParallelTuning::deterministic(),
-                    true,
+                    ExecOpts::serving(micro, true),
                 );
                 assert_eq!(
                     bufs.output(),

@@ -52,6 +52,12 @@ pub struct Metrics {
     /// Plans served by the parameter-free flat fallback because the
     /// model-driven planner failed (`Planner::plan_or_fallback`).
     pub fallback_plans: u64,
+    /// Name of the tiling strategy that produced the **served** plan
+    /// (`Plan::strategy`: `lattice`/`oblivious`/`latency`, or
+    /// `flat-fallback` when the planner degraded) — so the strategy-race
+    /// win-rate report and the fault-path accounting agree on which
+    /// selector actually served. Empty until a plan is resolved.
+    pub plan_strategy: String,
     /// Times the supervisor caught a worker-loop panic and respawned the
     /// worker over the same resident backend state.
     pub worker_restarts: u64,
@@ -92,6 +98,7 @@ impl Metrics {
             flops: 0,
             timeouts: 0,
             fallback_plans: 0,
+            plan_strategy: String::new(),
             worker_restarts: 0,
             retries: 0,
             resident_packs: 0,
@@ -217,7 +224,8 @@ impl Metrics {
             "jobs={} batches={} errors={} throughput={:.1} jobs/s {:.2} GFLOP/s \
              mean={:?} p50={}µs p99={}µs max={:?} \
              queue-wait={:?} compute={:?} mean-batch={:.2} \
-             served={} shed={} timeouts={} retries={} restarts={} fallback-plans={}{}",
+             served={} shed={} timeouts={} retries={} restarts={} fallback-plans={} \
+             plan-strategy={}{}",
             self.jobs,
             self.batches,
             self.errors,
@@ -236,6 +244,11 @@ impl Metrics {
             self.retries,
             self.worker_restarts,
             self.fallback_plans,
+            if self.plan_strategy.is_empty() {
+                "-"
+            } else {
+                &self.plan_strategy
+            },
             if self.worker_poisoned {
                 " WORKER-POISONED"
             } else {
@@ -322,6 +335,9 @@ mod tests {
         assert_eq!(m.errors, 1);
         assert_eq!(m.timeouts, 1);
         assert_eq!(m.served(), 3);
+        // no plan resolved yet → the report shows a placeholder
+        assert!(m.report(Duration::from_secs(1)).contains("plan-strategy=-"));
+        m.plan_strategy = "flat-fallback".to_string();
         let r = m.report(Duration::from_secs(1));
         for needle in [
             "served=3",
@@ -330,6 +346,7 @@ mod tests {
             "retries=2",
             "restarts=1",
             "fallback-plans=1",
+            "plan-strategy=flat-fallback",
         ] {
             assert!(r.contains(needle), "missing {needle} in {r}");
         }

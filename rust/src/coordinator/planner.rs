@@ -60,10 +60,15 @@ pub struct Plan {
     /// Three-level macro/micro blocking: the L1 tile above driven inside
     /// L2-sized `mc×kc×nc` macro blocks, themselves partitioned into
     /// `m3×n3` L3 super-bands (the parallel scheduler's work unit),
-    /// selected per level ([`tiling::level_plan`] against the Haswell
-    /// L2 + L3-slice specs, at the plan's element size and the kernel's
-    /// own GEMM form).
+    /// proposed by the dispatched tiling strategy (the lattice selector
+    /// [`tiling::level_plan`] by default, or whichever rival the startup
+    /// strategy race recorded for this (kernel, dtype, shape-class) —
+    /// see [`Plan::strategy`]).
     pub level: tiling::LevelPlan,
+    /// Name of the tiling strategy that produced [`Plan::level`]
+    /// (`lattice`/`oblivious`/`latency`, or `flat-fallback` for the
+    /// parameter-free degraded plan).
+    pub strategy: &'static str,
     /// Register-tile geometry class the engine dispatches (the dtype's
     /// startup 2-D (MR, NR) grid-race winner when the registry recorded
     /// one; 8×4 otherwise). Resolves to 8×4/8×6/16×4/16×6 at f64 and
@@ -80,13 +85,14 @@ pub struct Plan {
 
 impl Plan {
     /// One-line report of the plan including the precision mode, the
-    /// multi-level block shape (macro blocks + L3 super-band) and the
-    /// per-dtype register-tile geometry. Pure modes print the dtype
-    /// (`/f64`); the mixed mode prints `/f32acc64`.
+    /// multi-level block shape (macro blocks + L3 super-band), the
+    /// dispatched tiling strategy and the per-dtype register-tile
+    /// geometry. Pure modes print the dtype (`/f64`); the mixed mode
+    /// prints `/f32acc64`.
     pub fn describe(&self) -> String {
         format!(
             "{} [{}/{}] ({}x{}x{}): tile {:?}, macro mc={} kc={} nc={}, super m3={} n3={}, \
-             micro {}, artifact {}",
+             strategy {}, micro {}, artifact {}",
             self.plan_name,
             self.kernel,
             self.precision.name(),
@@ -99,6 +105,7 @@ impl Plan {
             self.level.nc,
             self.level.m3,
             self.level.n3,
+            self.strategy,
             self.micro.label_for(self.dtype),
             self.artifact
         )
@@ -118,6 +125,7 @@ pub struct Planner {
     spec: CacheSpec,
     shards: Arc<Vec<Shard>>,
     sample_classes: usize,
+    strategy: tiling::StrategyChoice,
 }
 
 impl Planner {
@@ -126,6 +134,7 @@ impl Planner {
             spec,
             shards: Arc::new((0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect()),
             sample_classes: 8,
+            strategy: tiling::StrategyChoice::Auto,
         }
     }
 
@@ -134,8 +143,32 @@ impl Planner {
         self
     }
 
+    /// Pin or restore the tiling-strategy choice: `Auto` (the default)
+    /// dispatches the registry-recorded race winner per (kernel, dtype,
+    /// shape-class), falling back to the lattice selector when no race
+    /// has run; `Fixed(kind)` forces one strategy (the CLI `--strategy`
+    /// override). Fixed-choice plans cache under their own namespace, so
+    /// an override never poisons the auto cache shared with clones.
+    pub fn with_strategy(mut self, strategy: tiling::StrategyChoice) -> Planner {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn strategy(&self) -> tiling::StrategyChoice {
+        self.strategy
+    }
+
     pub fn spec(&self) -> &CacheSpec {
         &self.spec
+    }
+
+    /// Cache namespace of this planner's strategy choice: auto shares
+    /// the base namespace, a fixed override gets its own slots.
+    fn strategy_ns(&self, base: String) -> String {
+        match self.strategy {
+            tiling::StrategyChoice::Auto => base,
+            tiling::StrategyChoice::Fixed(kind) => format!("{base}#strat={}", kind.name()),
+        }
     }
 
     /// Shard for a cache key: the kernel/dtype namespace string plus the
@@ -193,7 +226,7 @@ impl Planner {
         // distinct cache namespace from `plan_kernel` — the two entry
         // points resolve different artifacts for the same matmul extents
         let key = (
-            format!("matmul#aot#{}", precision.name()),
+            self.strategy_ns(format!("matmul#aot#{}", precision.name())),
             vec![m as i64, n as i64, k as i64],
         );
         self.cached_or_plan(key, |this| {
@@ -231,7 +264,7 @@ impl Planner {
             .unwrap_or_else(|| panic!("no supported dtype for {elem}-byte elements"));
         let mut key_dims = kernel.extents().to_vec();
         key_dims.push(elem as i64); // f32/f64 instances are distinct plans
-        let key = (kernel.name().to_string(), key_dims);
+        let key = (self.strategy_ns(kernel.name().to_string()), key_dims);
         self.cached_or_plan(key, |this| {
             let dims = GemmForm::of(kernel)
                 .map(|gf| (gf.m, gf.n, gf.k))
@@ -291,11 +324,21 @@ impl Planner {
             }
             None => ((64, 64, 64), (64, 64, 64), "fallback rect 64".to_string(), 0),
         };
-        // per-level selection: run the selector against the L2 spec to
-        // seed the macro block, nc from the L3 slice — against the *true*
-        // (m, n, k), not the shrunk model instance; the element size
-        // flows from the kernel's own tables
-        let level = tiling::level_plan(
+        // per-level selection is **strategy-dispatched**: resolve the
+        // tiling strategy for this (kernel, dtype, shape-class) — the
+        // registry-recorded race winner under `Auto` (lattice until a
+        // race has run), or the pinned override — and let it propose the
+        // macro blocking against the *true* (m, n, k), not the shrunk
+        // model instance; the element size flows from the kernel's own
+        // tables
+        let class = tiling::ShapeClass::of((m, n, k));
+        let strat = match self.strategy {
+            tiling::StrategyChoice::Fixed(kind) => kind,
+            tiling::StrategyChoice::Auto => registry
+                .strategy_for(dtype, kernel.name(), class)
+                .unwrap_or(tiling::StrategyKind::Lattice),
+        };
+        let level = tiling::strategy_impl(strat).propose(
             kernel,
             (m, n, k),
             l1_tile,
@@ -312,6 +355,7 @@ impl Planner {
             n,
             model_tile: tile,
             level,
+            strategy: strat.name(),
             micro: registry.micro_shape_for(dtype).unwrap_or(MicroShape::Mr8Nr4),
             artifact: String::new(),
             predicted_misses: predicted,
@@ -371,6 +415,9 @@ impl Planner {
             n,
             model_tile: (8, 8, 8),
             level: tiling::LevelPlan::flat((8, 8, 8), 64, 64, 48),
+            // named so metrics and the strategy-race accounting can tell
+            // a degraded serve apart from any raced strategy's plan
+            strategy: "flat-fallback",
             micro: registry.micro_shape_for(dtype).unwrap_or(MicroShape::Mr8Nr4),
             artifact: format!("<packed-engine {} fallback>", kernel.name()),
             predicted_misses: 0,
@@ -549,11 +596,60 @@ mod tests {
     #[test]
     fn plan_reports_recorded_micro_shape() {
         let reg = Registry::default();
-        reg.set_micro_shape(MicroShape::Mr8Nr6);
+        reg.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr6);
         let planner = Planner::new(CacheSpec::HASWELL_L1D);
         let p = planner.plan(&reg, 64, 64, 64, DType::F64);
         assert_eq!(p.micro, MicroShape::Mr8Nr6);
         assert!(p.describe().contains("micro 8x6"));
+    }
+
+    #[test]
+    fn plans_name_their_strategy_and_fixed_overrides_get_their_own_slots() {
+        use crate::tiling::{StrategyChoice, StrategyKind};
+        let reg = Registry::default();
+        let planner = Planner::new(CacheSpec::HASWELL_L1D).with_sample_classes(4);
+        let kern = ops::matmul(96, 64, 80, 8, 0);
+        // no race recorded → auto resolves the lattice default
+        let auto = planner.plan_kernel(&reg, &kern);
+        assert_eq!(auto.strategy, "lattice");
+        assert!(auto.describe().contains("strategy lattice"), "{}", auto.describe());
+        // a fixed override shares the shards but not the cache slots
+        let forced = planner
+            .clone()
+            .with_strategy(StrategyChoice::Fixed(StrategyKind::Oblivious));
+        assert_eq!(forced.strategy(), StrategyChoice::Fixed(StrategyKind::Oblivious));
+        let p = forced.plan_kernel(&reg, &kern);
+        assert_eq!(p.strategy, "oblivious");
+        assert!(p.describe().contains("strategy oblivious"), "{}", p.describe());
+        assert_eq!(
+            planner.cached_plans(),
+            2,
+            "the override must not collide with the auto slot"
+        );
+        // auto still serves its own (lattice) plan afterwards
+        assert_eq!(planner.plan_kernel(&reg, &kern).strategy, "lattice");
+    }
+
+    #[test]
+    fn auto_dispatches_the_recorded_race_winner_per_shape_class() {
+        use crate::tiling::{ShapeClass, StrategyKind};
+        let reg = Registry::default();
+        let kern = ops::matmul(96, 64, 80, 4, 0);
+        reg.set_strategy_for(
+            DType::F32,
+            "matmul",
+            ShapeClass::of_kernel(&kern),
+            StrategyKind::Latency,
+        );
+        let planner = Planner::new(CacheSpec::HASWELL_L1D).with_sample_classes(4);
+        let p = planner.plan_kernel(&reg, &kern);
+        assert_eq!(p.strategy, "latency");
+        assert!(p.describe().contains("strategy latency"), "{}", p.describe());
+        // other shape classes and dtypes still default to the lattice
+        let other = planner.plan_kernel(&reg, &ops::matmul(512, 64, 80, 4, 0));
+        assert_eq!(other.strategy, "lattice");
+        let f64_plan = planner.plan_kernel(&reg, &ops::matmul(96, 64, 80, 8, 0));
+        assert_eq!(f64_plan.strategy, "lattice");
     }
 
     #[test]

@@ -77,17 +77,15 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::CacheSpec;
-use crate::codegen::executor::{
-    pack_row_slices_mr, run_macro_prepacked_cols_acc, super_band_extents,
-};
-use crate::codegen::parallel::run_parallel_macro_prepacked_acc;
+use crate::codegen::executor::{pack_row_slices_mr, run_macro_prepacked_with, super_band_extents};
+use crate::codegen::parallel::run_parallel_macro_prepacked_with;
 use crate::codegen::{
-    autotune, kernel_views, DType, GemmForm, KernelBuffers, MicroShape, PackedCols, PackedRows,
-    Precision, RunPlan,
+    autotune, kernel_views, DType, ExecOpts, GemmForm, KernelBuffers, MicroShape, PackedCols,
+    PackedRows, Precision, RunPlan,
 };
 use crate::domain::{ops, Kernel};
 use crate::runtime::{ArtifactKind, Engine, Registry};
-use crate::tiling::LevelPlan;
+use crate::tiling::{LevelPlan, ShapeClass, StrategyChoice};
 
 use super::faults::{self, FaultMode, FaultPoint, Faults};
 use super::lock_unpoisoned;
@@ -519,6 +517,11 @@ pub struct ServiceConfig {
     /// `kc` slice — native backend only (the PJRT artifacts compute
     /// pure f32).
     pub precision: Precision,
+    /// Tiling-strategy policy for the serve plans: `Auto` (the default)
+    /// races the registered strategies once at startup and dispatches
+    /// each shape class's recorded winner; `Fixed` pins one strategy
+    /// (the CLI's `--strategy {lattice,oblivious,latency}` override).
+    pub strategy: StrategyChoice,
     /// Per-request queue-wait deadline: jobs still queued past it are
     /// shed at dispatch with [`JobError::DeadlineExceeded`] instead of
     /// computed. `None` (the default) never sheds.
@@ -545,6 +548,7 @@ impl Default for ServiceConfig {
             spec: CacheSpec::HASWELL_L1D,
             backend: Backend::Pjrt,
             precision: Precision::F32,
+            strategy: StrategyChoice::Auto,
             deadline: None,
             drain_timeout: Duration::from_secs(5),
             faults: Faults::none(),
@@ -564,6 +568,33 @@ impl Default for ServiceConfig {
 /// axis. Pinning the whole row/reduction side to the width-independent
 /// single-job plan keeps every element's accumulation order fixed while
 /// the column side still scales its bands to the widened batch extent.
+/// Cap per raced GEMM axis: the startup strategy race measures a capped
+/// model of the served shape (same kernel name, same op family) so the
+/// race costs milliseconds even for wide coalescing extents, while the
+/// winner is recorded under the **true** shape's class key.
+const STRATEGY_RACE_CAP: usize = 128;
+
+/// Race the registered tiling strategies once for the served GEMM shape
+/// `m×k×n` (in serve coordinates — the raced kernel is the same
+/// transpose lowering the native engine executes) and record the winner
+/// in the registry under the true shape's (kernel, dtype, class) key.
+/// Already-recorded classes are kept — restarts and multi-service setups
+/// race each class at most once per registry.
+fn race_serving_strategy(registry: &Registry, m: usize, k: usize, n: usize, micro: MicroShape) {
+    let kernel = NativeMatmul::kernel_for(m, k, n);
+    let class = ShapeClass::of_kernel(&kernel);
+    if registry.strategy_for(DType::F32, kernel.name(), class).is_some() {
+        return;
+    }
+    let capped = NativeMatmul::kernel_for(
+        m.min(STRATEGY_RACE_CAP),
+        k.min(STRATEGY_RACE_CAP),
+        n.min(STRATEGY_RACE_CAP),
+    );
+    let winner = autotune::calibrate_strategies::<f32>(&capped, micro, 8, 2);
+    registry.set_strategy_for(DType::F32, kernel.name(), class, winner);
+}
+
 fn serving_level(job: &LevelPlan, wide: &LevelPlan) -> LevelPlan {
     LevelPlan {
         l1_tile: job.l1_tile,
@@ -608,7 +639,7 @@ impl Service {
             "y must be k×n = {}",
             cfg.k * cfg.n
         );
-        let planner = Planner::new(cfg.spec);
+        let planner = Planner::new(cfg.spec).with_strategy(cfg.strategy);
         let (tx, rx) = channel::<Msg>();
         let depth = Arc::new(AtomicUsize::new(0));
         let stopped = Arc::new(AtomicBool::new(false));
@@ -681,6 +712,18 @@ impl Service {
                 // resident arena is laid out for); see `serving_level`.
                 // Planner failures degrade to the parameter-free flat
                 // fallback instead of failing start()
+                // one-shot startup strategy race (auto policy only): race
+                // the registered tiling strategies on a capped model of
+                // each served GEMM shape and record the winner under the
+                // true shape's class, so the planner's auto dispatch
+                // below resolves it; fixed overrides skip the race
+                if cfg.strategy == StrategyChoice::Auto {
+                    let race_micro = registry
+                        .micro_shape_for(DType::F32)
+                        .unwrap_or(MicroShape::Mr8Nr4);
+                    race_serving_strategy(&registry, m, k, n, race_micro);
+                    race_serving_strategy(&registry, m * max_batch, k, n, race_micro);
+                }
                 let (job_plan, fb_job) = planner.plan_or_fallback(
                     &registry,
                     &NativeMatmul::kernel_for(m, k, n),
@@ -720,6 +763,10 @@ impl Service {
                 (plan, WorkerBackend::Native(Box::new(native)))
             }
         };
+        // which tiling strategy produced the served plan — the strategy
+        // race's win-rate report and the fault-path accounting read the
+        // same name (the flat fallback reports itself here too)
+        lock_unpoisoned(&metrics).plan_strategy = plan.strategy.to_string();
         let handle = std::thread::spawn(move || supervise(backend, shared));
         Ok(Service {
             tx,
@@ -921,30 +968,29 @@ impl NativeMatmul {
         // scope the fault schedule for the executor's deep Pack hook
         // (clone first: the closure needs exclusive access to self)
         let scope_faults = self.faults.clone();
+        let opts = ExecOpts::serving(self.micro, self.acc64);
         let col_packs = faults::with_scope(&scope_faults, || {
             if self.threads > 1 && grid > 1 {
-                run_parallel_macro_prepacked_acc(
+                run_parallel_macro_prepacked_with(
                     &mut self.bufs.arena,
                     &self.kernel,
                     &self.plan,
                     &self.level,
-                    self.micro,
                     &self.rows,
                     self.threads,
                     n_used,
-                    self.acc64,
+                    opts,
                 )
                 .col_band_packs
             } else {
-                run_macro_prepacked_cols_acc(
+                run_macro_prepacked_with(
                     &mut self.bufs.arena,
                     &self.plan,
                     &self.level,
-                    self.micro,
                     &self.rows,
                     &mut self.cols,
                     n_used,
-                    self.acc64,
+                    opts,
                 )
             }
         });

@@ -10,3 +10,4 @@ pub mod harness;
 pub mod model_cost;
 pub mod multilevel;
 pub mod policy;
+pub mod strategy_race;

@@ -1,0 +1,255 @@
+//! Strategy race — model-driven lattice tiling vs its rivals, measured.
+//!
+//! The pluggable [`TilingStrategy`](crate::tiling::TilingStrategy) layer
+//! claims the associativity-lattice model earns its analysis cost; this
+//! experiment checks that claim empirically. Every registered strategy
+//! (lattice, cache-oblivious, latency-curve) proposes a macro-block
+//! [`LevelPlan`] for each Table-1 kernel at both dtypes, each plan is
+//! raced through the packed engine, and the table reports per-strategy
+//! throughput, the auto-selected winner (the [`pick_winner`] rule the
+//! serve path's startup race applies — ties keep the lattice incumbent),
+//! the parameter-free flat fallback as the degradation baseline, and the
+//! model's predicted L1 misses for the lattice plan. The summary rows
+//! give the model-vs-empirical win rate: how often the lattice model's
+//! plan is also the measured fastest, and how many cells it missed.
+//!
+//! A `hot_paths` row races the native serve path's transpose-lowered
+//! GEMM at f32, tying this report to the serving benchmarks. The JSON
+//! (`BENCH_strategy_race.json`) feeds `python/check_bench.py`; the
+//! committed baseline holds machine-independent **ratio floors** — auto
+//! must never fall below the flat fallback, and the lattice plan must
+//! not regress against a rival it previously beat.
+
+use crate::cache::CacheSpec;
+use crate::codegen::{measure_plan_rate, pick_winner, race_strategy_rates, DType, MicroShape};
+use crate::domain::{ops, Kernel};
+use crate::tiling::{self, LevelPlan, StrategyKind};
+
+/// One raced (kernel, dtype) cell.
+pub struct RaceCell {
+    /// Kernel label (`matmul`, `kronecker`, `convolution`,
+    /// `scalar_product`, or the serve-path tie-in `hot_paths`).
+    pub kernel: String,
+    pub dtype: DType,
+    /// Measured GFLOP/s per strategy, lattice first (the race order).
+    pub rates: Vec<(StrategyKind, f64)>,
+    /// The parameter-free flat fallback plan's GFLOP/s — the degraded
+    /// serve baseline every strategy must beat to be worth racing.
+    pub flat: f64,
+    /// The auto-dispatched winner under [`pick_winner`]'s
+    /// tie-keeps-default rule (lattice is the incumbent).
+    pub winner: StrategyKind,
+    /// The winner's measured rate — what `auto` dispatch serves.
+    pub auto: f64,
+    /// The lattice model's predicted L1 misses for its top-ranked plan
+    /// (the §4.0.4 selector's cost estimate), when the model ranks one.
+    pub predicted_misses: Option<u64>,
+}
+
+impl RaceCell {
+    /// Rate of one strategy in this cell (0.0 if it did not race).
+    pub fn rate_of(&self, kind: StrategyKind) -> f64 {
+        self.rates
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, r)| *r)
+            .unwrap_or(0.0)
+    }
+
+    /// Did the lattice model's plan also win the empirical race?
+    pub fn model_hit(&self) -> bool {
+        self.winner == StrategyKind::Lattice
+    }
+}
+
+/// The four Table-1 kernels at `elem` bytes, quick or full sizes.
+fn table1_kernels(elem: usize, quick: bool) -> Vec<(&'static str, Kernel)> {
+    let (mm, mk, mn) = if quick { (48, 32, 40) } else { (96, 64, 80) };
+    let (kb, kc) = if quick { (6, 8) } else { (10, 12) };
+    let nvec = if quick { 4_096 } else { 65_536 };
+    vec![
+        ("matmul", ops::matmul(mm, mk, mn, elem, 0)),
+        ("kronecker", ops::kronecker(kb, kb, kc, kc, elem, 0)),
+        ("convolution", ops::convolution(nvec, elem, 0)),
+        ("scalar_product", ops::scalar_product(nvec, elem, 0)),
+    ]
+}
+
+/// The native serve path's transpose-lowered GEMM (serve columns are
+/// GEMM rows) — the `hot_paths` tie-in shape, f32 like the serve path.
+fn hot_paths_kernel(quick: bool) -> Kernel {
+    let n = if quick { 64 } else { 128 };
+    ops::matmul(n, n, n, DType::F32.elem(), 0)
+}
+
+fn race_cell<T: crate::codegen::Scalar>(
+    label: &str,
+    kernel: &Kernel,
+    micro: MicroShape,
+    reps: usize,
+) -> RaceCell {
+    let rates = race_strategy_rates::<T>(kernel, micro, 8, reps);
+    let winner = pick_winner(&rates);
+    let flat_lp = LevelPlan::flat((8, 8, 8), 64, 64, 48);
+    let flat = measure_plan_rate::<T>(kernel, &flat_lp, micro, reps);
+    let auto = rates
+        .iter()
+        .find(|(k, _)| *k == winner)
+        .map(|(_, r)| *r)
+        .unwrap_or(0.0);
+    let predicted_misses = tiling::select(kernel, &CacheSpec::HASWELL_L1D, 8)
+        .first()
+        .and_then(|p| p.predicted.as_ref().map(|c| c.misses));
+    RaceCell {
+        kernel: label.to_string(),
+        dtype: T::DTYPE,
+        rates,
+        flat,
+        winner,
+        auto,
+        predicted_misses,
+    }
+}
+
+/// Race every registered strategy over the Table-1 kernels at both
+/// dtypes plus the `hot_paths` serve shape at f32. `quick` shrinks the
+/// raced sizes for CI smoke runs.
+pub fn run(quick: bool) -> Vec<RaceCell> {
+    let reps = if quick { 2 } else { 5 };
+    let micro = MicroShape::Mr8Nr4;
+    let mut cells = Vec::new();
+    for (label, kernel) in table1_kernels(DType::F64.elem(), quick) {
+        cells.push(race_cell::<f64>(label, &kernel, micro, reps));
+    }
+    for (label, kernel) in table1_kernels(DType::F32.elem(), quick) {
+        cells.push(race_cell::<f32>(label, &kernel, micro, reps));
+    }
+    cells.push(race_cell::<f32>(
+        "hot_paths",
+        &hot_paths_kernel(quick),
+        micro,
+        reps,
+    ));
+    cells
+}
+
+/// Model-vs-empirical summary: `(lattice wins, cells, model misses)` —
+/// a "miss" is a cell where a rival strategy measured faster than the
+/// lattice model's plan by more than [`pick_winner`]'s upgrade margin.
+pub fn win_summary(cells: &[RaceCell]) -> (usize, usize, usize) {
+    let wins = cells.iter().filter(|c| c.model_hit()).count();
+    (wins, cells.len(), cells.len() - wins)
+}
+
+/// Render the race as the committed-JSON body (label → GFLOP/s rows the
+/// baseline ratio floors reference). Keys:
+/// `strategy race <kernel> <dtype> <strategy> GFLOP/s`, plus `flat` and
+/// `auto` pseudo-strategies and a `model_misses` count row.
+pub fn to_json(cells: &[RaceCell]) -> String {
+    let mut body = Vec::new();
+    for c in cells {
+        let pre = format!("strategy race {} {}", c.kernel, c.dtype.name());
+        for (kind, rate) in &c.rates {
+            body.push(format!("  \"{pre} {} GFLOP/s\": {rate:.3}", kind.name()));
+        }
+        body.push(format!("  \"{pre} flat GFLOP/s\": {:.3}", c.flat));
+        body.push(format!("  \"{pre} auto GFLOP/s\": {:.3}", c.auto));
+    }
+    let (wins, total, misses) = win_summary(cells);
+    body.push(format!("  \"strategy race lattice wins\": {wins}"));
+    body.push(format!("  \"strategy race cells\": {total}"));
+    body.push(format!("  \"strategy race model_misses\": {misses}"));
+    format!("{{\n{}\n}}\n", body.join(",\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_race_covers_every_table1_kernel_at_both_dtypes() {
+        let cells = run(true);
+        // 4 kernels × 2 dtypes + the hot_paths serve row
+        assert_eq!(cells.len(), 9);
+        for name in ["matmul", "kronecker", "convolution", "scalar_product"] {
+            for dt in [DType::F64, DType::F32] {
+                assert!(
+                    cells.iter().any(|c| c.kernel == name && c.dtype == dt),
+                    "missing cell {name}/{}",
+                    dt.name()
+                );
+            }
+        }
+        assert!(cells.iter().any(|c| c.kernel == "hot_paths"));
+        for c in &cells {
+            assert_eq!(
+                c.rates.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+                StrategyKind::RACED.to_vec(),
+                "{}: every registered strategy must race, lattice first",
+                c.kernel
+            );
+            assert!(
+                c.rates.iter().all(|&(_, r)| r > 0.0),
+                "{}: GEMM-form cells must measure non-zero rates",
+                c.kernel
+            );
+            assert!(c.flat > 0.0 && c.auto > 0.0, "{}", c.kernel);
+            assert!(
+                c.auto >= c.rate_of(c.winner) * 0.999,
+                "{}: auto serves the winner's measured rate",
+                c.kernel
+            );
+        }
+    }
+
+    #[test]
+    fn json_rows_carry_the_ratio_floor_operands() {
+        let cells = vec![RaceCell {
+            kernel: "matmul".to_string(),
+            dtype: DType::F32,
+            rates: vec![
+                (StrategyKind::Lattice, 10.0),
+                (StrategyKind::Oblivious, 8.0),
+                (StrategyKind::Latency, 9.0),
+            ],
+            flat: 7.0,
+            winner: StrategyKind::Lattice,
+            auto: 10.0,
+            predicted_misses: Some(123),
+        }];
+        let json = to_json(&cells);
+        // exactly the operand labels the committed baseline's ratio
+        // floors (auto ≥ flat, lattice vs rivals) divide
+        for needle in [
+            "\"strategy race matmul f32 lattice GFLOP/s\": 10.000",
+            "\"strategy race matmul f32 oblivious GFLOP/s\": 8.000",
+            "\"strategy race matmul f32 latency GFLOP/s\": 9.000",
+            "\"strategy race matmul f32 flat GFLOP/s\": 7.000",
+            "\"strategy race matmul f32 auto GFLOP/s\": 10.000",
+            "\"strategy race lattice wins\": 1",
+            "\"strategy race model_misses\": 0",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert!(json.ends_with("}\n") && json.starts_with("{\n"));
+    }
+
+    #[test]
+    fn win_summary_counts_model_hits_and_misses() {
+        let mk = |winner| RaceCell {
+            kernel: "matmul".to_string(),
+            dtype: DType::F64,
+            rates: Vec::new(),
+            flat: 1.0,
+            winner,
+            auto: 1.0,
+            predicted_misses: None,
+        };
+        let cells = vec![
+            mk(StrategyKind::Lattice),
+            mk(StrategyKind::Oblivious),
+            mk(StrategyKind::Lattice),
+        ];
+        assert_eq!(win_summary(&cells), (2, 3, 1));
+    }
+}

@@ -16,7 +16,7 @@ use std::time::{Duration, Instant};
 use latticetile::baseline::CompilerAnalog;
 use latticetile::cache::{CacheSim, CacheSpec, Policy};
 use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
-use latticetile::codegen::{autotune, run_trace_only, DType, Precision, Scalar};
+use latticetile::codegen::{autotune, run_trace_only, DType, GemmForm, MicroShape, Precision, Scalar};
 use latticetile::conflict::MissModel;
 use latticetile::coordinator::{Backend, Planner, Service, ServiceConfig};
 use latticetile::domain::ops;
@@ -53,11 +53,15 @@ fn print_usage() {
 USAGE:
   latticetile analyze [--n N | --m M --k K --nn N] [--lda L]
   latticetile plan    [--n N] [--samples S] [--dtype f32|f64|f32acc64]
-  latticetile run     [--n N] [--strategy lattice|rect|O0|O2|O3|graphite|icc|pgi]
+                      [--strategy lattice|oblivious|latency|auto]
+  latticetile run     [--n N] [--strategy lattice|oblivious|latency|auto|
+                                           rect|O0|O2|O3|graphite|icc|pgi]
                       [--dtype f32|f64|f32acc64]
-  latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy> [--full]
+  latticetile bench   <fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy|
+                       multilevel|strategy-race> [--full]
   latticetile serve   [--artifacts DIR] [--jobs J] [--shape MxKxN]
                       [--backend pjrt|native] [--dtype f32|f32acc64]
+                      [--strategy lattice|oblivious|latency|auto]
                       [--max-batch B] [--queue-cap Q]
                       [--threads T] [--clients C] [--window-ms W]
                       [--deadline-ms D] [--inject-faults]
@@ -71,6 +75,12 @@ native execution paths only. --backend native serves f32 through the
 in-process packed macro-kernel, no AOT artifacts needed; it coalesces
 up to --max-batch jobs per dispatch into one widened GEMM over the
 prepacked weights.
+--strategy selects the tiling strategy for the macro-block shape:
+lattice (the associativity-lattice model), oblivious (cache-oblivious
+recursive halving, no cache parameters), latency (blocks from measured
+latency-curve knee points), or auto (race all three once and dispatch
+the recorded winner — the default). run also accepts the compiler
+analogs and the rect ablation in the same flag.
 --queue-cap bounds in-flight jobs (over-capacity submits are rejected),
 --clients runs that many concurrent client threads, and --window-ms is
 the batch window measured from the first job of a batch. --deadline-ms
@@ -163,10 +173,36 @@ fn parse_precision(flags: &HashMap<String, String>) -> Option<Precision> {
     }
 }
 
+fn parse_strategy_choice(flags: &HashMap<String, String>) -> Option<tiling::StrategyChoice> {
+    match flags.get("strategy").map(|s| s.as_str()) {
+        None => Some(tiling::StrategyChoice::Auto),
+        Some(s) => {
+            let c = tiling::StrategyChoice::parse(s);
+            if c.is_none() {
+                eprintln!("--strategy must be lattice, oblivious, latency or auto (got {s:?})");
+            }
+            c
+        }
+    }
+}
+
+/// Race the three tiling strategies at `dtype` on a size-capped model
+/// instance and return the winner (the lattice incumbent keeps ties).
+fn race_strategies_at(dtype: DType, cap: i64, micro: MicroShape) -> tiling::StrategyKind {
+    let race = ops::matmul(cap, cap, cap, dtype.elem(), 0);
+    match dtype {
+        DType::F64 => autotune::calibrate_strategies::<f64>(&race, micro, 8, 2),
+        DType::F32 => autotune::calibrate_strategies::<f32>(&race, micro, 8, 2),
+    }
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let n = geti(flags, "n", 128);
     let samples = geti(flags, "samples", 8) as usize;
     let Some(precision) = parse_precision(flags) else {
+        return 2;
+    };
+    let Some(strategy) = parse_strategy_choice(flags) else {
         return 2;
     };
     let dtype = precision.store;
@@ -201,7 +237,19 @@ fn cmd_plan(flags: &HashMap<String, String>) -> i32 {
     let reg = Registry::default();
     reg.set_micro_shape_for(DType::F64, autotune::calibrate_dtype::<f64>(500));
     reg.set_micro_shape_for(DType::F32, autotune::calibrate_dtype::<f32>(500));
-    let planner = Planner::new(spec).with_sample_classes(samples);
+    if strategy == tiling::StrategyChoice::Auto {
+        // race the strategies once on the capped instance and record the
+        // winner under the true shape's class — the planner's auto
+        // dispatch below resolves exactly this slot
+        let micro = reg.micro_shape_for(dtype).unwrap_or(MicroShape::Mr8Nr4);
+        let winner = race_strategies_at(dtype, cap, micro);
+        let class = tiling::ShapeClass::of((n as usize, n as usize, n as usize));
+        reg.set_strategy_for(dtype, "matmul", class, winner);
+        println!("\nstrategy race winner for this shape class: {}", winner.name());
+    }
+    let planner = Planner::new(spec)
+        .with_sample_classes(samples)
+        .with_strategy(strategy);
     let full = if precision.wide_acc() {
         planner.plan_with_precision(&reg, n as usize, n as usize, n as usize, precision)
     } else {
@@ -218,13 +266,17 @@ fn timed_packed_run<T: Scalar>(
     kernel: &latticetile::domain::Kernel,
     plan: TiledSchedule,
     precision: Precision,
+    level: Option<tiling::LevelPlan>,
 ) -> Duration {
     // one-shot startup calibration races the 2-D (MR, NR) grid and picks
     // the geometry the packed engine dispatches for this dtype
     // (8×4/8×6/16×4/16×6 at f64, 8×8/8×12/16×4/16×6 at f32)
-    let exec = TiledExecutor::new(plan)
+    let mut exec = TiledExecutor::new(plan)
         .with_micro_shape(autotune::calibrate_dtype::<T>(500))
         .with_precision(precision);
+    if let Some(lp) = level {
+        exec = exec.with_level_plan(lp);
+    }
     let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
     let t0 = Instant::now();
     exec.run(&mut bufs, kernel);
@@ -297,11 +349,58 @@ fn cmd_run(flags: &HashMap<String, String>) -> i32 {
                         })
                 }
             };
+            // tiling-strategy overrides ride on the lattice L1 schedule
+            // and swap only the macro-block LevelPlan — blocking changes,
+            // never arithmetic, so results stay bitwise-identical
+            let level = match strategy {
+                "oblivious" | "latency" | "auto" => {
+                    let kind = match tiling::StrategyKind::parse(strategy) {
+                        Some(kind) => kind,
+                        None => {
+                            let micro = match dtype {
+                                DType::F64 => autotune::calibrate_dtype::<f64>(500),
+                                DType::F32 => autotune::calibrate_dtype::<f32>(500),
+                            };
+                            let winner = race_strategies_at(dtype, 64i64.min(n), micro);
+                            println!("auto strategy resolved to {}", winner.name());
+                            winner
+                        }
+                    };
+                    let gf = GemmForm::of(&kernel).expect("matmul is GEMM-form");
+                    // per-axis tile extents from the basis row sums (as
+                    // the planner does) — works for lattice bases too,
+                    // where `GemmForm::l1_tile` would demand a rectangle
+                    let b = plan.basis();
+                    let ext = |i: usize| -> usize {
+                        (0..b.dim())
+                            .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
+                            .sum::<usize>()
+                            .max(1)
+                    };
+                    let group = |axes: &[usize]| -> usize {
+                        axes.iter().map(|&t| ext(t)).product::<usize>().max(1)
+                    };
+                    let l1 = (
+                        group(&gf.row_axes),
+                        group(&gf.col_axes),
+                        group(&gf.red_axes),
+                    );
+                    Some(tiling::strategy_impl(kind).propose(
+                        &kernel,
+                        (gf.m, gf.n, gf.k),
+                        l1,
+                        &CacheSpec::HASWELL_L2,
+                        Some(&CacheSpec::HASWELL_L3_SLICE),
+                        8,
+                    ))
+                }
+                _ => None,
+            };
             let mut sim = CacheSim::new(spec, Policy::Lru).without_classification();
             run_trace_only(&kernel, &plan, &mut sim);
             let wall = match dtype {
-                DType::F64 => timed_packed_run::<f64>(&kernel, plan, precision),
-                DType::F32 => timed_packed_run::<f32>(&kernel, plan, precision),
+                DType::F64 => timed_packed_run::<f64>(&kernel, plan, precision, level),
+                DType::F32 => timed_packed_run::<f32>(&kernel, plan, precision, level),
             };
             (sim.stats().misses(), wall)
         }
@@ -328,9 +427,10 @@ fn cmd_bench(args: &[String]) -> i32 {
         "model-cost" => bench_model_cost(),
         "policy" => bench_policy(),
         "multilevel" => bench_multilevel(),
+        "strategy-race" => bench_strategy_race(full),
         other => {
             eprintln!(
-                "unknown bench {other:?} (fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy|multilevel)"
+                "unknown bench {other:?} (fig3|fig4|fig4-rect|fig5|fig6|model-cost|policy|multilevel|strategy-race)"
             );
             return 2;
         }
@@ -552,6 +652,40 @@ fn bench_multilevel() {
     t.print();
 }
 
+fn bench_strategy_race(full: bool) {
+    println!("tiling-strategy race — model-driven lattice vs rivals:\n");
+    let cells = experiments::strategy_race::run(!full);
+    let mut t = Table::new(&[
+        "kernel",
+        "dtype",
+        "lattice",
+        "oblivious",
+        "latency",
+        "flat",
+        "auto",
+        "winner",
+        "model miss",
+    ]);
+    for c in &cells {
+        t.row(vec![
+            c.kernel.clone(),
+            c.dtype.name().to_string(),
+            format!("{:.2}", c.rate_of(tiling::StrategyKind::Lattice)),
+            format!("{:.2}", c.rate_of(tiling::StrategyKind::Oblivious)),
+            format!("{:.2}", c.rate_of(tiling::StrategyKind::Latency)),
+            format!("{:.2}", c.flat),
+            format!("{:.2}", c.auto),
+            c.winner.name().to_string(),
+            c.predicted_misses
+                .map(|m| m.to_string())
+                .unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t.print();
+    let (wins, total, misses) = experiments::strategy_race::win_summary(&cells);
+    println!("\nmodel-vs-empirical: lattice won {wins}/{total} cells ({misses} model misses)");
+}
+
 fn bench_policy() {
     println!("§1.1.4 — LRU vs tree-PLRU miss counts:\n");
     let rows = experiments::policy::run(&[96, 128]);
@@ -627,6 +761,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             return 2;
         }
     };
+    let Some(strategy) = parse_strategy_choice(flags) else {
+        return 2;
+    };
     // serving stores f32 job buffers either way; f32acc64 widens the
     // native backend's register accumulation to f64
     let precision = match flags.get("dtype").map(|s| s.as_str()) {
@@ -677,6 +814,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> i32 {
             precision,
             deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
             faults,
+            strategy,
             ..ServiceConfig::default()
         },
     )

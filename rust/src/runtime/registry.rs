@@ -77,6 +77,54 @@ impl MicroShapeSlots {
     }
 }
 
+/// The per-dtype **tiling-strategy** winner maps, sharded exactly like
+/// [`MicroShapeSlots`] (one lock per dtype), keyed by
+/// `(kernel name, shape class)` — the granularity the strategy race
+/// measures at ([`crate::codegen::autotune::race_strategy_rates`]). Both
+/// kinds of autotune result (register geometries and strategy winners)
+/// thus live behind one `*_for` lookup shape on the registry.
+#[derive(Debug, Default)]
+struct StrategySlots {
+    slots: [Mutex<HashMap<(String, crate::tiling::ShapeClass), crate::tiling::StrategyKind>>; 2],
+}
+
+impl StrategySlots {
+    fn get(
+        &self,
+        dtype: crate::codegen::DType,
+        kernel: &str,
+        class: crate::tiling::ShapeClass,
+    ) -> Option<crate::tiling::StrategyKind> {
+        self.slots[dtype.index()]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&(kernel.to_string(), class))
+            .copied()
+    }
+
+    fn set(
+        &self,
+        dtype: crate::codegen::DType,
+        kernel: &str,
+        class: crate::tiling::ShapeClass,
+        kind: crate::tiling::StrategyKind,
+    ) {
+        self.slots[dtype.index()]
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert((kernel.to_string(), class), kind);
+    }
+
+    fn snapshot(&self) -> StrategySlots {
+        let fresh = StrategySlots::default();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let src = slot.lock().unwrap_or_else(PoisonError::into_inner);
+            *fresh.slots[i].lock().unwrap_or_else(PoisonError::into_inner) = src.clone();
+        }
+        fresh
+    }
+}
+
 /// Parsed manifest of all shipped artifacts.
 #[derive(Debug, Default)]
 pub struct Registry {
@@ -87,6 +135,11 @@ pub struct Registry {
     /// host has run the one-shot grid race for that dtype. Sharded —
     /// see [`MicroShapeSlots`].
     micro_shape: Arc<MicroShapeSlots>,
+    /// Startup-raced tiling-strategy winners, per (dtype, kernel,
+    /// shape-class) ([`crate::codegen::autotune::calibrate_strategies`]);
+    /// empty until a host has raced the strategies. Sharded — see
+    /// [`StrategySlots`].
+    strategies: Arc<StrategySlots>,
 }
 
 impl Clone for Registry {
@@ -104,6 +157,7 @@ impl Clone for Registry {
             dir: self.dir.clone(),
             artifacts: self.artifacts.clone(),
             micro_shape,
+            strategies: Arc::new(self.strategies.snapshot()),
         }
     }
 }
@@ -145,23 +199,12 @@ impl Registry {
             dir: dir.to_path_buf(),
             artifacts,
             micro_shape: Arc::new(MicroShapeSlots::default()),
+            strategies: Arc::new(StrategySlots::default()),
         })
     }
 
     pub fn dir(&self) -> &Path {
         &self.dir
-    }
-
-    /// Record the startup-calibrated register-tile geometry for f64
-    /// (legacy entry point; see [`Registry::set_micro_shape_for`]).
-    pub fn set_micro_shape(&self, shape: crate::codegen::MicroShape) {
-        self.set_micro_shape_for(crate::codegen::DType::F64, shape);
-    }
-
-    /// The calibrated f64 register-tile geometry, if calibration has
-    /// run (legacy entry point; see [`Registry::micro_shape_for`]).
-    pub fn micro_shape(&self) -> Option<crate::codegen::MicroShape> {
-        self.micro_shape_for(crate::codegen::DType::F64)
     }
 
     /// Record the startup-calibrated register-tile geometry for one
@@ -185,6 +228,34 @@ impl Registry {
         dtype: crate::codegen::DType,
     ) -> Option<crate::codegen::MicroShape> {
         self.micro_shape.get(dtype)
+    }
+
+    /// Record the startup-raced tiling-strategy winner for one
+    /// (dtype, kernel, shape-class) cell
+    /// ([`crate::codegen::autotune::calibrate_strategies`]). `&self`
+    /// like [`Registry::set_micro_shape_for`]: the map is behind its
+    /// dtype's shard lock, so late race results land without an
+    /// exclusive borrow.
+    pub fn set_strategy_for(
+        &self,
+        dtype: crate::codegen::DType,
+        kernel: &str,
+        class: crate::tiling::ShapeClass,
+        kind: crate::tiling::StrategyKind,
+    ) {
+        self.strategies.set(dtype, kernel, class, kind);
+    }
+
+    /// The raced strategy winner of a (dtype, kernel, shape-class)
+    /// cell, if that cell's race has run. The planner's `auto` choice
+    /// falls back to the lattice selector when this is `None`.
+    pub fn strategy_for(
+        &self,
+        dtype: crate::codegen::DType,
+        kernel: &str,
+        class: crate::tiling::ShapeClass,
+    ) -> Option<crate::tiling::StrategyKind> {
+        self.strategies.get(dtype, kernel, class)
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {
@@ -311,9 +382,8 @@ mod tests {
         r.set_micro_shape_for(DType::F32, MicroShape::Mr8Nr6);
         assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
         assert_eq!(r.micro_shape_for(DType::F64), None, "dtypes must not alias");
-        // legacy accessors address the f64 slot
-        r.set_micro_shape(MicroShape::Mr8Nr4);
-        assert_eq!(r.micro_shape(), Some(MicroShape::Mr8Nr4));
+        r.set_micro_shape_for(DType::F64, MicroShape::Mr8Nr4);
+        assert_eq!(r.micro_shape_for(DType::F64), Some(MicroShape::Mr8Nr4));
         assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
         // a clone snapshots the winners — it is not another handle onto
         // the same slots
@@ -321,6 +391,41 @@ mod tests {
         r.set_micro_shape_for(DType::F32, MicroShape::Mr16Nr6);
         assert_eq!(snap.micro_shape_for(DType::F32), Some(MicroShape::Mr8Nr6));
         assert_eq!(r.micro_shape_for(DType::F32), Some(MicroShape::Mr16Nr6));
+    }
+
+    #[test]
+    fn strategy_winners_are_recorded_per_dtype_kernel_and_class() {
+        use crate::codegen::DType;
+        use crate::tiling::{ShapeClass, StrategyKind};
+        let r = Registry::default();
+        let big = ShapeClass::of((512, 512, 512));
+        let small = ShapeClass::of((64, 64, 64));
+        assert_eq!(r.strategy_for(DType::F32, "matmul", big), None);
+        r.set_strategy_for(DType::F32, "matmul", big, StrategyKind::Oblivious);
+        assert_eq!(
+            r.strategy_for(DType::F32, "matmul", big),
+            Some(StrategyKind::Oblivious)
+        );
+        // dtype, kernel and shape class all namespace the slot
+        assert_eq!(r.strategy_for(DType::F64, "matmul", big), None);
+        assert_eq!(r.strategy_for(DType::F32, "convolution", big), None);
+        assert_eq!(r.strategy_for(DType::F32, "matmul", small), None);
+        r.set_strategy_for(DType::F64, "matmul", big, StrategyKind::Latency);
+        assert_eq!(
+            r.strategy_for(DType::F64, "matmul", big),
+            Some(StrategyKind::Latency)
+        );
+        // clones snapshot strategy winners exactly like micro shapes
+        let snap = r.clone();
+        r.set_strategy_for(DType::F32, "matmul", big, StrategyKind::Lattice);
+        assert_eq!(
+            snap.strategy_for(DType::F32, "matmul", big),
+            Some(StrategyKind::Oblivious)
+        );
+        assert_eq!(
+            r.strategy_for(DType::F32, "matmul", big),
+            Some(StrategyKind::Lattice)
+        );
     }
 
     #[test]

@@ -1,17 +1,38 @@
-//! Tiling mechanics and tile selection — §3 (DESIGN.md S7, S8).
+//! Tiling mechanics and tile *selection strategies* — §3 (DESIGN.md S7, S8).
 //!
 //! [`tile`] implements the half-open parallelepiped machinery of §3.2
 //! (`P_D(H)`, `T_D(H)`, `r(x)`); [`schedule`] turns a tile basis into a
-//! traversal order; [`selection`] chooses tiles — the paper's `K−1`
-//! lattice-point rule and the model-driven search of §4.0.4.
+//! traversal order; [`selection`] holds the paper's selectors — the
+//! `K−1` lattice-point rule, the model-driven search of §4.0.4, and the
+//! multi-level [`LevelPlan`] machinery.
+//!
+//! [`strategy`] is the layer above: tile selection is a pluggable
+//! [`TilingStrategy`] trait, and the paper's lattice selector
+//! ([`strategy::Lattice`], wrapping [`level_plan`]) is the *first
+//! implementation rather than the hardwired only path*. Two rivals ship
+//! alongside it — [`strategy::CacheOblivious`] (recursive halving, no
+//! cache parameters) and [`strategy::LatencyCurve`] (measured latency
+//! knees) — and the autotune race
+//! ([`crate::codegen::autotune::race_strategy_rates`]) measures all of
+//! them on the packed engine, records per-(kernel, dtype, shape-class)
+//! winners in the runtime registry, and the planner dispatches the
+//! recorded winner (`--strategy {lattice,oblivious,latency,auto}`
+//! overrides it). Strategies differ only in *blocking*, never in
+//! accumulation order, so their plans are bitwise-interchangeable on
+//! exact data.
 
 pub mod schedule;
 pub mod selection;
+pub mod strategy;
 pub mod tile;
 
 pub use schedule::TiledSchedule;
 pub use selection::{
     embed_operand_tile, k_minus_one_plan, level_plan, model_driven_search, plan_with_kappa,
     rect_candidates, scaled_lattice_tile, select, snap_to_microkernel, LevelPlan, TilingPlan,
+};
+pub use strategy::{
+    raced_strategies, strategy_impl, CacheOblivious, Lattice, LatencyCurve, ShapeClass,
+    StrategyChoice, StrategyKind, TilingStrategy,
 };
 pub use tile::TileBasis;

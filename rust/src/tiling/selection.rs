@@ -143,12 +143,12 @@ fn super_band_heuristic(
 }
 
 /// Largest multiple of `q` that is ≤ `v` (0 when `v < q`).
-fn round_down_mult(v: usize, q: usize) -> usize {
+pub(crate) fn round_down_mult(v: usize, q: usize) -> usize {
     (v / q) * q
 }
 
 /// Smallest multiple of `q` that is ≥ `v` (at least one quantum).
-fn round_up_mult(v: usize, q: usize) -> usize {
+pub(crate) fn round_up_mult(v: usize, q: usize) -> usize {
     v.div_ceil(q).max(1) * q
 }
 

@@ -1,0 +1,536 @@
+//! Pluggable tiling strategies — the selection layer behind
+//! [`crate::coordinator::Planner`].
+//!
+//! The paper's claim is that the associativity-lattice model *predicts*
+//! good tilings rather than discovering them empirically. This module
+//! makes that claim continuously testable: the lattice selector is one
+//! [`TilingStrategy`] among several, and the startup race
+//! ([`crate::codegen::autotune::race_strategy_rates`]) measures every
+//! registered strategy's proposed [`LevelPlan`] on the real packed
+//! engine, records the per-(kernel, dtype, shape-class) winner in the
+//! [`Registry`](crate::runtime::Registry), and the planner dispatches it.
+//!
+//! Three strategies ship:
+//!
+//! * [`Lattice`] — the paper's model-driven path ([`super::level_plan`]):
+//!   seed `mc×kc` from the lattice-model tile search against the L2
+//!   spec, grow to capacity, size `nc`/`m3×n3` against the L3 slice.
+//! * [`CacheOblivious`] — PCOT-style recursive halving of the dominant
+//!   GEMM axis down to a microkernel-multiple base case. Consults **no
+//!   cache parameters at all**: the blocking depends only on the shape
+//!   and the register-tile quanta.
+//! * [`LatencyCurve`] — picks `mc/kc/nc` from measured per-working-set
+//!   latency knee points (a pointer-chase over doubling working sets,
+//!   calibrated once per process): the knees stand in for the L2/L3
+//!   capacities, so the blocking follows the *measured* memory
+//!   hierarchy instead of a named spec.
+//!
+//! Every strategy returns a [`LevelPlan`], and a `LevelPlan` only
+//! changes *blocking* — each output element still accumulates its `kc`
+//! slices in ascending-`k0` order — so rival strategies' plans execute
+//! bitwise-identically on exact (integer-valued) data; the differential
+//! suite pins this.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::cache::CacheSpec;
+use crate::codegen::microkernel::{MR, NR};
+use crate::codegen::runplan::GemmForm;
+use crate::domain::Kernel;
+
+use super::selection::{level_plan, round_up_mult, LevelPlan};
+
+/// Identity of one registered tiling strategy — what the registry
+/// records winners as and `Plan.describe()` reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// The associativity-lattice model-driven selector (the paper).
+    Lattice,
+    /// PCOT-style recursive halving; no cache parameters consulted.
+    Oblivious,
+    /// Measured latency-knee capacities driving the capacity heuristic.
+    Latency,
+}
+
+impl StrategyKind {
+    /// Every raced strategy, in deterministic race order. The lattice
+    /// selector is first — it is the incumbent under
+    /// [`pick_winner`](crate::codegen::autotune::pick_winner)'s
+    /// tie-keeps-default rule, so a rival must beat it by the upgrade
+    /// margin to dethrone it.
+    pub const RACED: [StrategyKind; 3] = [
+        StrategyKind::Lattice,
+        StrategyKind::Oblivious,
+        StrategyKind::Latency,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyKind::Lattice => "lattice",
+            StrategyKind::Oblivious => "oblivious",
+            StrategyKind::Latency => "latency",
+        }
+    }
+
+    /// Parse a CLI spelling (`lattice`/`oblivious`/`latency`).
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s {
+            "lattice" => Some(StrategyKind::Lattice),
+            "oblivious" => Some(StrategyKind::Oblivious),
+            "latency" => Some(StrategyKind::Latency),
+            _ => None,
+        }
+    }
+}
+
+/// The planner-facing strategy selection: `auto` dispatches the
+/// registry-recorded race winner (lattice when no race has run), a
+/// fixed kind overrides it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum StrategyChoice {
+    /// Dispatch the recorded per-(kernel, dtype, shape-class) winner.
+    #[default]
+    Auto,
+    /// Force one strategy regardless of the recorded winner.
+    Fixed(StrategyKind),
+}
+
+impl StrategyChoice {
+    /// Parse a CLI spelling (`lattice`/`oblivious`/`latency`/`auto`).
+    pub fn parse(s: &str) -> Option<StrategyChoice> {
+        if s == "auto" {
+            return Some(StrategyChoice::Auto);
+        }
+        StrategyKind::parse(s).map(StrategyChoice::Fixed)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            StrategyChoice::Auto => "auto",
+            StrategyChoice::Fixed(k) => k.name(),
+        }
+    }
+}
+
+/// The shape-class bucket strategy winners are recorded under: per-axis
+/// log₂ buckets of the GEMM-form `(m, n, k)` extents — the same
+/// bit-width classing the planner's shard hash uses, so one race result
+/// covers every shape that blocks alike.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShapeClass {
+    pub m: u8,
+    pub n: u8,
+    pub k: u8,
+}
+
+fn bucket(d: usize) -> u8 {
+    (usize::BITS - d.max(1).leading_zeros()) as u8
+}
+
+impl ShapeClass {
+    /// Class of a GEMM-form `(m, n, k)` extent triple.
+    pub fn of((m, n, k): (usize, usize, usize)) -> ShapeClass {
+        ShapeClass {
+            m: bucket(m),
+            n: bucket(n),
+            k: bucket(k),
+        }
+    }
+
+    /// Class of a kernel: its GEMM-form extents, or `(points, 1, 1)`
+    /// for kernels outside the GEMM class.
+    pub fn of_kernel(kernel: &Kernel) -> ShapeClass {
+        match GemmForm::of(kernel) {
+            Some(gf) => ShapeClass::of((gf.m, gf.n, gf.k)),
+            None => {
+                let points = kernel
+                    .extents()
+                    .iter()
+                    .map(|&e| e.max(1) as usize)
+                    .product::<usize>();
+                ShapeClass::of((points, 1, 1))
+            }
+        }
+    }
+}
+
+/// A tiling-selection strategy: propose the three-level blocking
+/// ([`LevelPlan`]) for one kernel instance. Implementations must be
+/// pure functions of their inputs plus their own calibration state —
+/// the race measures each proposal on the packed engine, and the
+/// planner re-invokes the winner at plan time.
+pub trait TilingStrategy: Sync {
+    /// The registry identity of this strategy.
+    fn kind(&self) -> StrategyKind;
+
+    /// Human-readable name (the registry / `Plan.describe()` spelling).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Propose the macro blocking for `kernel` with GEMM-form `extents`
+    /// `(m, n, k)` and the already-selected L1 tile. `l2`/`l3` are the
+    /// modelled cache specs — strategies are free to ignore them
+    /// ([`CacheOblivious`] consults nothing, [`LatencyCurve`] its own
+    /// measured knees). `sample_classes` bounds any model sampling the
+    /// strategy performs.
+    fn propose(
+        &self,
+        kernel: &Kernel,
+        extents: (usize, usize, usize),
+        l1_tile: (usize, usize, usize),
+        l2: &CacheSpec,
+        l3: Option<&CacheSpec>,
+        sample_classes: usize,
+    ) -> LevelPlan;
+}
+
+/// The paper's model-driven selector as a strategy: exactly
+/// [`super::level_plan`] (lattice-model tile search seeding `mc×kc`,
+/// capacity growth, L3-sized `nc`/super-bands).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lattice;
+
+impl TilingStrategy for Lattice {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Lattice
+    }
+
+    fn propose(
+        &self,
+        kernel: &Kernel,
+        extents: (usize, usize, usize),
+        l1_tile: (usize, usize, usize),
+        l2: &CacheSpec,
+        l3: Option<&CacheSpec>,
+        sample_classes: usize,
+    ) -> LevelPlan {
+        level_plan(kernel, extents, l1_tile, l2, l3, sample_classes)
+    }
+}
+
+/// PCOT-style cache-oblivious blocking: starting from the whole
+/// (quantum-rounded) GEMM box, recursively halve the dominant axis —
+/// the one farthest above its base case, measured in base-case units —
+/// until every axis is at or below a fixed microkernel-multiple base
+/// case. No cache parameters are consulted anywhere: the resulting
+/// `mc×kc×nc` depends only on the shape and the register-tile quanta,
+/// which is exactly the cache-oblivious bet (recursive halving fits
+/// *every* level of any hierarchy eventually). The super-band level is
+/// a single covering band — an L3-sized band would be a cache
+/// parameter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheOblivious;
+
+/// Base-case sizes in quanta: the recursion stops once an axis is at or
+/// below `16` row/column quanta (128 rows at `MR = 8`) or 256 reduction
+/// steps — a footprint small enough for any L1/L2 on the planet, per
+/// the cache-oblivious argument.
+const OBLIVIOUS_BASE_QUANTA: usize = 16;
+const OBLIVIOUS_BASE_K: usize = 256;
+
+impl TilingStrategy for CacheOblivious {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Oblivious
+    }
+
+    fn propose(
+        &self,
+        _kernel: &Kernel,
+        extents: (usize, usize, usize),
+        l1_tile: (usize, usize, usize),
+        _l2: &CacheSpec,
+        _l3: Option<&CacheSpec>,
+        _sample_classes: usize,
+    ) -> LevelPlan {
+        let (m, n, k) = extents;
+        // form-aware quanta as in the capacity heuristic: degenerate
+        // GEMM dimensions block at their true extent
+        let mq = if m >= MR { MR } else { 1 };
+        let nq = if n >= NR { NR } else { 1 };
+        let base_m = OBLIVIOUS_BASE_QUANTA * mq;
+        let base_n = OBLIVIOUS_BASE_QUANTA * nq;
+        let base_k = OBLIVIOUS_BASE_K;
+        let mut mc = round_up_mult(m, mq);
+        let mut nc = round_up_mult(n, nq);
+        let mut kc = k.max(1);
+        // halve the dominant axis (largest in base-case units) until all
+        // axes hit their base case; each halving strictly shrinks the
+        // axis, so the loop terminates
+        loop {
+            let rm = if mc > base_m { mc.div_ceil(base_m) } else { 0 };
+            let rn = if nc > base_n { nc.div_ceil(base_n) } else { 0 };
+            let rk = if kc > base_k { kc.div_ceil(base_k) } else { 0 };
+            let dominant = rm.max(rn).max(rk);
+            if dominant == 0 {
+                break;
+            }
+            if rm == dominant {
+                mc = round_up_mult(mc / 2, mq);
+            } else if rk == dominant {
+                kc = (kc / 2).max(1);
+            } else {
+                nc = round_up_mult(nc / 2, nq);
+            }
+        }
+        LevelPlan {
+            l1_tile,
+            mc,
+            kc,
+            nc,
+            // a single covering super-band: sizing bands against an L3
+            // slice would be a cache parameter
+            m3: round_up_mult(m, mc.max(1)),
+            n3: round_up_mult(n, nc.max(1)),
+        }
+    }
+}
+
+/// Latency-based blocking: a one-shot pointer-chase over doubling
+/// working sets finds the latency *knees* — the largest working set
+/// before each access-latency jump — and the second and third knees
+/// stand in for the L2 and L3 capacities in the capacity heuristic
+/// ([`LevelPlan::heuristic`]). Calibration runs once per process
+/// ([`LatencyCurve::calibrated`]); a machine whose curve shows fewer
+/// than three knees falls back to the Haswell constants per missing
+/// level.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyCurve {
+    /// Measured L2-equivalent knee capacity in bytes.
+    pub l2_bytes: usize,
+    /// Measured L3-equivalent knee capacity in bytes.
+    pub l3_bytes: usize,
+}
+
+impl LatencyCurve {
+    /// A curve with explicit knee capacities (tests, replaying a saved
+    /// calibration).
+    pub fn with_capacities(l2_bytes: usize, l3_bytes: usize) -> LatencyCurve {
+        let l2_bytes = l2_bytes.clamp(64 * 1024, 8 * 1024 * 1024);
+        let l3_bytes = l3_bytes.clamp(2 * l2_bytes, 64 * 1024 * 1024);
+        LatencyCurve { l2_bytes, l3_bytes }
+    }
+
+    /// The process-wide calibrated curve: measured once on first use
+    /// (tens of milliseconds), shared afterwards.
+    pub fn calibrated() -> &'static LatencyCurve {
+        static CURVE: OnceLock<LatencyCurve> = OnceLock::new();
+        CURVE.get_or_init(|| {
+            let knees = measure_latency_knees();
+            let l2 = knees
+                .get(1)
+                .copied()
+                .unwrap_or(CacheSpec::HASWELL_L2.capacity);
+            let l3 = knees
+                .get(2)
+                .copied()
+                .unwrap_or(CacheSpec::HASWELL_L3_SLICE.capacity);
+            LatencyCurve::with_capacities(l2, l3)
+        })
+    }
+}
+
+impl TilingStrategy for LatencyCurve {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Latency
+    }
+
+    fn propose(
+        &self,
+        kernel: &Kernel,
+        extents: (usize, usize, usize),
+        l1_tile: (usize, usize, usize),
+        _l2: &CacheSpec,
+        _l3: Option<&CacheSpec>,
+        _sample_classes: usize,
+    ) -> LevelPlan {
+        let elem = kernel.operand(0).table.elem().max(1);
+        // synthetic specs carrying the measured knee capacities; line
+        // size and ways only matter to the lattice model, which this
+        // strategy does not consult
+        let l2 = CacheSpec::new(self.l2_bytes, 64, 8, 2);
+        let l3 = CacheSpec::new(self.l3_bytes, 64, 16, 3);
+        LevelPlan::heuristic(l1_tile, extents, elem, &l2, Some(&l3))
+    }
+}
+
+/// Measure the latency curve: for each doubling working-set size, chase
+/// a full-cycle random permutation (every load depends on the last, so
+/// the measured time is pure latency) and record the per-access cost;
+/// return the knee capacities — each size *before* a ≥1.5× latency
+/// jump. Deterministic permutation, bounded accesses: the whole sweep
+/// is tens of milliseconds.
+fn measure_latency_knees() -> Vec<usize> {
+    let sizes: Vec<usize> = (0..11).map(|i| (16 * 1024) << i).collect(); // 16 KiB … 16 MiB
+    let mut knees = Vec::new();
+    let mut prev: Option<(usize, f64)> = None;
+    for &bytes in &sizes {
+        let lat = chase_latency(bytes);
+        if let Some((pbytes, plat)) = prev {
+            if lat > plat * 1.5 {
+                knees.push(pbytes);
+            }
+        }
+        prev = Some((bytes, lat));
+    }
+    knees
+}
+
+/// Nanoseconds per dependent load over a `bytes`-sized working set.
+fn chase_latency(bytes: usize) -> f64 {
+    let len = (bytes / std::mem::size_of::<usize>()).max(2);
+    // Sattolo's algorithm: a single cycle through all slots, so the
+    // chase touches the whole working set before repeating
+    let mut next: Vec<usize> = (0..len).collect();
+    let mut s = 0x9E37_79B9_7F4A_7C15u64 ^ bytes as u64;
+    let mut rnd = move |bound: usize| {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        (s % bound as u64) as usize
+    };
+    for i in (1..len).rev() {
+        next.swap(i, rnd(i));
+    }
+    let accesses = 1usize << 15;
+    // warm the set once
+    let mut p = 0usize;
+    for _ in 0..len.min(accesses) {
+        p = next[p];
+    }
+    let t = Instant::now();
+    for _ in 0..accesses {
+        p = next[p];
+    }
+    let ns = t.elapsed().as_nanos() as f64;
+    assert!(p < len); // keep the chase observable
+    ns / accesses as f64
+}
+
+/// Resolve a strategy identity to its (process-wide, calibrated where
+/// needed) implementation.
+pub fn strategy_impl(kind: StrategyKind) -> &'static dyn TilingStrategy {
+    match kind {
+        StrategyKind::Lattice => &Lattice,
+        StrategyKind::Oblivious => &CacheOblivious,
+        StrategyKind::Latency => LatencyCurve::calibrated(),
+    }
+}
+
+/// Every raced strategy implementation, in [`StrategyKind::RACED`]
+/// order (lattice first: the incumbent of the winner rule).
+pub fn raced_strategies() -> [&'static dyn TilingStrategy; 3] {
+    [&Lattice, &CacheOblivious, LatencyCurve::calibrated()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::domain::ops;
+
+    #[test]
+    fn kinds_parse_and_name_round_trip() {
+        for kind in StrategyKind::RACED {
+            assert_eq!(StrategyKind::parse(kind.name()), Some(kind));
+            assert_eq!(
+                StrategyChoice::parse(kind.name()),
+                Some(StrategyChoice::Fixed(kind))
+            );
+            assert_eq!(strategy_impl(kind).kind(), kind);
+            assert_eq!(strategy_impl(kind).name(), kind.name());
+        }
+        assert_eq!(StrategyChoice::parse("auto"), Some(StrategyChoice::Auto));
+        assert_eq!(StrategyChoice::Auto.name(), "auto");
+        assert_eq!(StrategyKind::parse("rect"), None);
+        assert_eq!(StrategyChoice::default(), StrategyChoice::Auto);
+    }
+
+    #[test]
+    fn shape_classes_bucket_by_bit_width() {
+        assert_eq!(ShapeClass::of((128, 128, 128)), ShapeClass::of((255, 129, 255)));
+        assert_ne!(ShapeClass::of((128, 128, 128)), ShapeClass::of((256, 128, 128)));
+        assert_eq!(ShapeClass::of((0, 1, 1)), ShapeClass::of((1, 1, 1)));
+        // kernel classing reads the GEMM form: matmul(m, k, n) → (m, n, k)
+        let a = ShapeClass::of_kernel(&ops::matmul(64, 32, 16, 8, 0));
+        assert_eq!(a, ShapeClass::of((64, 16, 32)));
+        // degenerate forms class by their dot shape
+        let c = ShapeClass::of_kernel(&ops::convolution(100, 8, 0));
+        assert_eq!(c.m, bucket(1));
+    }
+
+    #[test]
+    fn oblivious_halves_to_the_base_case_without_cache_specs() {
+        let k = ops::matmul(1024, 2048, 512, 8, 0);
+        let lp = CacheOblivious.propose(
+            &k,
+            (1024, 512, 2048),
+            (8, 8, 8),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            0,
+        );
+        assert!(lp.mc <= OBLIVIOUS_BASE_QUANTA * MR && lp.mc % MR == 0 && lp.mc > 0);
+        assert!(lp.nc <= OBLIVIOUS_BASE_QUANTA * NR && lp.nc % NR == 0 && lp.nc > 0);
+        assert!(lp.kc <= OBLIVIOUS_BASE_K && lp.kc > 0);
+        // single covering super-band — no L3 parameter consulted
+        assert!(lp.m3 >= 1024 && lp.m3 % lp.mc == 0);
+        assert!(lp.n3 >= 512 && lp.n3 % lp.nc == 0);
+        // identical inputs, identical plan: the strategy is pure
+        let again = CacheOblivious.propose(
+            &k,
+            (1024, 512, 2048),
+            (8, 8, 8),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            0,
+        );
+        assert_eq!(lp, again);
+    }
+
+    #[test]
+    fn oblivious_blocks_degenerate_forms_at_their_extent() {
+        let k = ops::convolution(5000, 8, 0);
+        let lp = CacheOblivious.propose(
+            &k,
+            (1, 1, 5000),
+            (8, 1, 1),
+            &CacheSpec::HASWELL_L2,
+            None,
+            0,
+        );
+        assert_eq!((lp.mc, lp.nc), (1, 1));
+        assert!(lp.kc <= OBLIVIOUS_BASE_K);
+    }
+
+    #[test]
+    fn latency_curve_clamps_and_plans_like_the_heuristic() {
+        // degenerate measurements clamp into a sane band, and the plan
+        // is exactly the capacity heuristic at the knee capacities
+        let c = LatencyCurve::with_capacities(1, 1);
+        assert_eq!(c.l2_bytes, 64 * 1024);
+        assert_eq!(c.l3_bytes, 2 * c.l2_bytes);
+        let k = ops::matmul(256, 256, 256, 8, 0);
+        let lp = c.propose(
+            &k,
+            (256, 256, 256),
+            (8, 8, 8),
+            &CacheSpec::HASWELL_L2,
+            Some(&CacheSpec::HASWELL_L3_SLICE),
+            0,
+        );
+        let want = LevelPlan::heuristic(
+            (8, 8, 8),
+            (256, 256, 256),
+            8,
+            &CacheSpec::new(c.l2_bytes, 64, 8, 2),
+            Some(&CacheSpec::new(c.l3_bytes, 64, 16, 3)),
+        );
+        assert_eq!(lp, want);
+        // the process-wide calibration resolves and is stable
+        let a = LatencyCurve::calibrated();
+        let b = LatencyCurve::calibrated();
+        assert_eq!((a.l2_bytes, a.l3_bytes), (b.l2_bytes, b.l3_bytes));
+        assert!(a.l2_bytes >= 64 * 1024 && a.l3_bytes >= 2 * a.l2_bytes);
+    }
+}

@@ -243,6 +243,35 @@ fn chaos_pack_faults_contained_under_parallel_scheduler() {
 }
 
 #[test]
+fn chaos_plan_faults_degrade_to_the_flat_fallback_strategy() {
+    // both startup plans erroring must not leave the strategy race's
+    // recorded winner in charge: the served plan is the parameter-free
+    // flat fallback and the metrics name it, so an operator can tell a
+    // degraded planner from a raced winner at a glance
+    let (m, k, n) = (16usize, 12, 20);
+    let mut rnd = xorshift_f32(0x57A7);
+    let y: Vec<f32> = (0..k * n).map(|_| rnd()).collect();
+    let faults = Faults::seeded(0x57A8)
+        .fail(FaultPoint::Plan, FaultMode::Error, 1, 1)
+        .build();
+    let (out, metrics) = drive(m, k, n, &y, base_cfg(m, k, n, faults), 16, 0x57A9);
+    assert_eq!(metrics.fallback_plans, 2);
+    assert_eq!(metrics.plan_strategy, "flat-fallback");
+    assert_eq!(out.ok as u64, metrics.jobs, "the degraded plan still serves");
+    assert!(
+        metrics.report(Duration::from_secs(1)).contains("plan-strategy=flat-fallback"),
+        "the report must surface the degraded strategy"
+    );
+    // a fault-free start records a real raced strategy instead
+    let (_, clean) = drive(m, k, n, &y, base_cfg(m, k, n, Faults::none()), 4, 0x57AA);
+    assert!(
+        ["lattice", "oblivious", "latency"].contains(&clean.plan_strategy.as_str()),
+        "fault-free serving must name the raced winner, got {:?}",
+        clean.plan_strategy
+    );
+}
+
+#[test]
 fn chaos_kitchen_sink_multi_point_with_deadline() {
     // every fault point armed at once, a tight deadline, and a burst of
     // jobs: the union of all degraded outcomes still accounts exactly and

@@ -1,0 +1,235 @@
+//! Integration tests for the pluggable tiling-strategy layer.
+//!
+//! Three contracts the strategy race must keep:
+//!
+//! * **determinism** — [`pick_winner`]'s tie-keeps-default rule makes
+//!   the recorded winner stable: the lattice incumbent keeps the slot
+//!   unless a rival clears the upgrade margin, and re-racing the same
+//!   rates re-picks the same winner.
+//! * **differential** — strategies differ **only in blocking**: every
+//!   strategy's proposed [`LevelPlan`] (and the parameter-free flat
+//!   fallback) must produce bitwise-identical output on integer-valued
+//!   data for all four Table-1 kernels at both dtypes. A single-ULP
+//!   divergence means a strategy changed arithmetic, not tiling.
+//! * **degradation** — a rival strategy that panics mid-race scores
+//!   zero and the lattice incumbent keeps the race; the panic never
+//!   unwinds through the caller.
+
+use latticetile::cache::CacheSpec;
+use latticetile::codegen::executor::{KernelBuffers, TiledExecutor};
+use latticetile::codegen::{pick_winner, race_strategies_over, DType, GemmForm, MicroShape, Scalar};
+use latticetile::coordinator::Planner;
+use latticetile::domain::{ops, Kernel};
+use latticetile::runtime::Registry;
+use latticetile::tiling::{
+    strategy_impl, LevelPlan, ShapeClass, StrategyChoice, StrategyKind, TileBasis, TiledSchedule,
+    TilingStrategy,
+};
+
+/// L1 tile extents of a schedule in GEMM (rows, cols, red) loop space —
+/// the basis row sums grouped per GEMM axis, as the planner derives them.
+fn l1_of(gf: &GemmForm, sched: &TiledSchedule) -> (usize, usize, usize) {
+    let b = sched.basis();
+    let ext = |i: usize| -> usize {
+        (0..b.dim())
+            .map(|j| b.basis()[(i, j)].unsigned_abs() as usize)
+            .sum::<usize>()
+            .max(1)
+    };
+    let group = |axes: &[usize]| -> usize {
+        axes.iter().map(|&t| ext(t)).product::<usize>().max(1)
+    };
+    (
+        group(&gf.row_axes),
+        group(&gf.col_axes),
+        group(&gf.red_axes),
+    )
+}
+
+/// Run `kernel` under every strategy's proposed macro blocking (plus the
+/// flat fallback) at dtype `T` and demand bitwise equality with the
+/// integer-filled scalar oracle.
+fn check_strategies_bitwise<T: Scalar>(kernel: &Kernel, basis: TileBasis, label: &str) {
+    let gf = GemmForm::of(kernel).expect("Table-1 kernels are GEMM-form");
+    let sched = TiledSchedule::new(basis);
+    let l1 = l1_of(&gf, &sched);
+    let mut plans: Vec<(&'static str, LevelPlan)> = StrategyKind::RACED
+        .iter()
+        .map(|&kind| {
+            (
+                kind.name(),
+                strategy_impl(kind).propose(
+                    kernel,
+                    (gf.m, gf.n, gf.k),
+                    l1,
+                    &CacheSpec::HASWELL_L2,
+                    Some(&CacheSpec::HASWELL_L3_SLICE),
+                    8,
+                ),
+            )
+        })
+        .collect();
+    plans.push(("flat", LevelPlan::flat((8, 8, 8), 64, 64, 48)));
+    let mut bufs = KernelBuffers::<T>::from_kernel(kernel);
+    bufs.fill_ints(3, 0xBEEF ^ label.len() as u64);
+    let want = bufs.reference();
+    for (name, lp) in plans {
+        let exec = TiledExecutor::new(sched.clone())
+            .with_micro_shape(MicroShape::Mr8Nr4)
+            .with_level_plan(lp);
+        bufs.reset_output();
+        exec.run(&mut bufs, kernel);
+        assert_eq!(
+            bufs.output(),
+            want,
+            "{label} ({}B elem): strategy {name} diverged bitwise — \
+             a strategy may change blocking, never arithmetic",
+            T::ELEM
+        );
+    }
+}
+
+fn check_strategies_bitwise_both(make: impl Fn(usize) -> Kernel, basis: TileBasis, label: &str) {
+    check_strategies_bitwise::<f64>(&make(8), basis.clone(), label);
+    check_strategies_bitwise::<f32>(&make(4), basis, label);
+}
+
+#[test]
+fn all_strategies_are_bitwise_identical_on_matmul() {
+    check_strategies_bitwise_both(
+        |elem| ops::matmul(48, 32, 40, elem, 0),
+        TileBasis::rect(&[16, 16, 16]),
+        "matmul 48x32x40",
+    );
+}
+
+#[test]
+fn all_strategies_are_bitwise_identical_on_kronecker() {
+    check_strategies_bitwise_both(
+        |elem| ops::kronecker(5, 3, 7, 4, elem, 0),
+        TileBasis::rect(&[2, 2, 4, 3]),
+        "kron 5x3x7x4",
+    );
+}
+
+#[test]
+fn all_strategies_are_bitwise_identical_on_convolution() {
+    check_strategies_bitwise_both(
+        |elem| ops::convolution(100, elem, 0),
+        TileBasis::rect(&[16]),
+        "conv n=100",
+    );
+}
+
+#[test]
+fn all_strategies_are_bitwise_identical_on_scalar_product() {
+    check_strategies_bitwise_both(
+        |elem| ops::scalar_product(100, elem, 0),
+        TileBasis::rect(&[16]),
+        "dot n=100",
+    );
+}
+
+#[test]
+fn pick_winner_is_deterministic_and_ties_keep_the_incumbent() {
+    use StrategyKind::*;
+    // exact tie: the incumbent (first entry) keeps the slot
+    let tied = [(Lattice, 10.0), (Oblivious, 10.0), (Latency, 10.0)];
+    assert_eq!(pick_winner(&tied), Lattice);
+    // within the 5% upgrade margin: still the incumbent — a rival must
+    // *clearly* win to displace the recorded default
+    let close = [(Lattice, 10.0), (Oblivious, 10.4), (Latency, 10.2)];
+    assert_eq!(pick_winner(&close), Lattice);
+    // a rival past the margin takes the slot, and re-running the same
+    // rates re-picks the same winner (pure function of its input)
+    let upset = [(Lattice, 10.0), (Oblivious, 11.0), (Latency, 10.1)];
+    assert_eq!(pick_winner(&upset), Oblivious);
+    assert_eq!(pick_winner(&upset), pick_winner(&upset));
+}
+
+#[test]
+fn repeated_races_report_strategies_in_stable_incumbent_first_order() {
+    let kernel = ops::matmul(32, 24, 28, 8, 0);
+    for _ in 0..2 {
+        let rates = latticetile::codegen::race_strategy_rates::<f64>(
+            &kernel,
+            MicroShape::Mr8Nr4,
+            4,
+            1,
+        );
+        assert_eq!(
+            rates.iter().map(|&(k, _)| k).collect::<Vec<_>>(),
+            StrategyKind::RACED.to_vec(),
+            "race order (lattice-incumbent first) must be stable across runs"
+        );
+        assert!(rates.iter().all(|&(_, r)| r > 0.0));
+    }
+}
+
+/// A rival that panics while proposing — the race must absorb it.
+struct Panicker;
+
+impl TilingStrategy for Panicker {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::Latency
+    }
+
+    fn propose(
+        &self,
+        _kernel: &Kernel,
+        _extents: (usize, usize, usize),
+        _l1_tile: (usize, usize, usize),
+        _l2: &CacheSpec,
+        _l3: Option<&CacheSpec>,
+        _sample_classes: usize,
+    ) -> LevelPlan {
+        panic!("injected strategy failure");
+    }
+}
+
+#[test]
+fn panicking_rival_scores_zero_and_the_lattice_incumbent_wins() {
+    let kernel = ops::matmul(32, 24, 28, 8, 0);
+    let strategies: [&dyn TilingStrategy; 2] = [&latticetile::tiling::Lattice, &Panicker];
+    let rates = race_strategies_over::<f64>(&strategies, &kernel, MicroShape::Mr8Nr4, 4, 1);
+    assert_eq!(rates.len(), 2);
+    assert!(rates[0].1 > 0.0, "the incumbent must still measure");
+    assert_eq!(
+        rates[1],
+        (StrategyKind::Latency, 0.0),
+        "a panicking strategy scores zero instead of unwinding the race"
+    );
+    assert_eq!(pick_winner(&rates), StrategyKind::Lattice);
+}
+
+#[test]
+fn planner_dispatches_and_names_the_recorded_or_overridden_strategy() {
+    let spec = CacheSpec::HASWELL_L1D;
+    let kernel = ops::matmul(64, 64, 64, 8, 0);
+
+    // a fixed override bypasses the registry entirely
+    let plan = Planner::new(spec)
+        .with_strategy(StrategyChoice::Fixed(StrategyKind::Oblivious))
+        .plan_kernel(&Registry::default(), &kernel);
+    assert_eq!(plan.strategy, "oblivious");
+    assert!(
+        plan.describe().contains("strategy oblivious"),
+        "describe() must name the dispatched strategy: {}",
+        plan.describe()
+    );
+
+    // auto dispatch resolves the registry-recorded race winner…
+    let reg = Registry::default();
+    reg.set_strategy_for(
+        DType::F64,
+        "matmul",
+        ShapeClass::of((64, 64, 64)),
+        StrategyKind::Latency,
+    );
+    let plan = Planner::new(spec).plan_kernel(&reg, &kernel);
+    assert_eq!(plan.strategy, "latency");
+
+    // …and falls back to the lattice incumbent when no race has run
+    let plan = Planner::new(spec).plan_kernel(&Registry::default(), &kernel);
+    assert_eq!(plan.strategy, "lattice");
+}
